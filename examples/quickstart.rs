@@ -1,0 +1,99 @@
+//! Quickstart: train ICQ on a synthetic dataset, build an index, search,
+//! and compare against exact + full-ADC baselines.
+//!
+//!     cargo run --release --example quickstart
+
+use icq::core::{Matrix, Rng};
+use icq::data::synthetic::{self, SyntheticSpec};
+use icq::data::Dataset;
+use icq::eval;
+use icq::quantizer::sq::lda_projection;
+use icq::index::search_icq::IcqSearchOpts;
+use icq::index::{search_adc, search_exact, search_icq, EncodedIndex, OpCounter};
+use icq::quantizer::icq::{Icq, IcqOpts};
+use icq::quantizer::Quantizer;
+
+fn main() -> anyhow::Result<()> {
+    // 1. data: Table-1-style synthetic set (64 dims, 16 informative)
+    let data = synthetic::generate(&SyntheticSpec {
+        n_samples: 5000,
+        ..SyntheticSpec::table1(2)
+    });
+    let (db_raw, queries_raw) = data.split(100, 0);
+    println!(
+        "dataset: n={} d={} classes={}",
+        db_raw.len(),
+        db_raw.dim(),
+        db_raw.n_classes()
+    );
+
+    // 2. supervised linear embedding (the paper's SQ-style map): this is
+    // what concentrates variance into a few dims — ICQ's premise
+    let proj = lda_projection(&db_raw, 16, 1e-3);
+    let db = Dataset::new(db_raw.x.matmul(&proj), db_raw.y.clone());
+    let queries =
+        Dataset::new(queries_raw.x.matmul(&proj), queries_raw.y.clone());
+
+    // 3. train ICQ: variance prior -> psi split -> interleaved codebooks
+    let icq = Icq::train(
+        &db.x,
+        IcqOpts { k: 8, m: 64, fast_k: 0, kmeans_iters: 12, prior_steps: 300, seed: 0 },
+    );
+    println!(
+        "ICQ: |psi|={} of {} dims, fast_k={}, sigma={:.3}, qerr={:.4}",
+        icq.xi.iter().filter(|&&v| v > 0.5).count(),
+        db.dim(),
+        icq.fast_k,
+        icq.sigma,
+        icq.quantization_error(&db.x)
+    );
+
+    // 3. index + two-step search
+    let index = EncodedIndex::build_icq(&icq, &db.x, db.y.clone());
+    println!("index: {} vectors, {} bits/code", index.len(), index.code_bits());
+
+    let ops_icq = OpCounter::new();
+    let ops_adc = OpCounter::new();
+    let ops_exact = OpCounter::new();
+    let results_icq = search_icq::search_batch(
+        &index,
+        &queries.x,
+        IcqSearchOpts { k: 10, margin_scale: 1.0 },
+        &ops_icq,
+    );
+    let results_adc = search_adc::search_batch(&index, &queries.x, 10, &ops_adc);
+    let gt = eval::GroundTruth::compute(&db.x, &queries.x, 10);
+
+    // 4. metrics
+    let map_icq =
+        eval::mean_average_precision(&results_icq, &queries.y, &index.labels);
+    let map_adc =
+        eval::mean_average_precision(&results_adc, &queries.y, &index.labels);
+    let rec_icq = eval::recall_at(&results_icq, &gt.ids, 10);
+    let rec_adc = eval::recall_at(&results_adc, &gt.ids, 10);
+    println!("\n            MAP     R@10   avg-ops/vector");
+    println!(
+        "ICQ (2-step) {map_icq:.4}  {rec_icq:.4}  {:.2}  (refine rate {:.3})",
+        ops_icq.avg_ops_per_candidate(),
+        ops_icq.refine_rate()
+    );
+    println!(
+        "full ADC     {map_adc:.4}  {rec_adc:.4}  {:.2}",
+        ops_adc.avg_ops_per_candidate()
+    );
+
+    // 5. sanity: one exact query for eyeballing
+    let mut rng = Rng::new(1);
+    let qi = rng.below(queries.len());
+    let exact = search_exact::search(&db.x, queries.x.row(qi), 5, &ops_exact);
+    let approx = search_icq::search(
+        &index,
+        queries.x.row(qi),
+        IcqSearchOpts { k: 5, margin_scale: 1.0 },
+        &ops_icq,
+    );
+    println!("\nquery #{qi}: exact ids {:?}", exact.iter().map(|h| h.id).collect::<Vec<_>>());
+    println!("query #{qi}: icq   ids {:?}", approx.iter().map(|h| h.id).collect::<Vec<_>>());
+    let _ = Matrix::zeros(1, 1);
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Database-size sweep: how the two-step search advantage scales with N.
+//!
+//! The crude prune gets MORE effective as the database grows (a fixed-size
+//! top-R list means a shrinking acceptance radius), so ICQ's avg-ops curve
+//! flattens toward |K| while full ADC stays at K — the asymptotic claim
+//! behind the paper's section 3.4.
+//!
+//!     cargo run --release --example scale_sweep
+
+use icq::core::{Matrix, Rng};
+use icq::index::search_icq::IcqSearchOpts;
+use icq::index::{search_adc, search_icq, EncodedIndex, OpCounter};
+use icq::quantizer::icq::{Icq, IcqOpts};
+
+fn main() {
+    let (d, k, m) = (32, 8, 64);
+    println!("      N   ICQ avg-ops  ADC avg-ops  refine-rate  ICQ/ADC time");
+    for n in [1_000usize, 4_000, 16_000, 64_000] {
+        let mut rng = Rng::new(9);
+        let x = Matrix::from_fn(n, d, |_, j| {
+            rng.normal_f32() * if j % 4 == 0 { 4.0 } else { 0.4 }
+        });
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k, m, fast_k: 2, kmeans_iters: 6, prior_steps: 150, seed: 0 },
+        );
+        let index = EncodedIndex::build_icq(&icq, &x, vec![0; n]);
+        let queries = Matrix::from_fn(32, d, |_, j| {
+            rng.normal_f32() * if j % 4 == 0 { 4.0 } else { 0.4 }
+        });
+        let ops_icq = OpCounter::new();
+        let ops_adc = OpCounter::new();
+        let t0 = std::time::Instant::now();
+        search_icq::search_batch(
+            &index,
+            &queries,
+            IcqSearchOpts { k: 10, margin_scale: 1.0 },
+            &ops_icq,
+        );
+        let t_icq = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        search_adc::search_batch(&index, &queries, 10, &ops_adc);
+        let t_adc = t0.elapsed();
+        println!(
+            "{:>8}  {:>10.3}  {:>10.3}  {:>10.3}  {:>10.2}x",
+            n,
+            ops_icq.avg_ops_per_candidate(),
+            ops_adc.avg_ops_per_candidate(),
+            ops_icq.refine_rate(),
+            t_adc.as_secs_f64() / t_icq.as_secs_f64().max(1e-12),
+        );
+    }
+}

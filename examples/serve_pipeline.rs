@@ -1,0 +1,163 @@
+//! End-to-end serving driver (the repo's E2E validation example; see
+//! EXPERIMENTS.md section E2E): loads the python-trained AOT bundle, builds
+//! the index from it, stands up the full coordinator (batcher + router +
+//! workers + backpressure), drives a closed-loop workload through the
+//! PJRT-executed fused embed+LUT graph, and reports throughput/latency +
+//! retrieval MAP. Python is NOT running — only its build-time artifacts.
+//!
+//!     make artifacts && cargo run --release --example serve_pipeline
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use icq::config::ServeConfig;
+use icq::coordinator::server::closed_loop_load;
+use icq::coordinator::{BatchSearcher, Coordinator};
+use icq::core::{Hit, Matrix};
+use icq::data::loader::TrainedBundle;
+use icq::eval;
+use icq::index::lut::Lut;
+use icq::index::search_icq::{self, IcqSearchOpts};
+use icq::index::{EncodedIndex, OpCounter};
+use icq::runtime::XlaService;
+
+/// Searcher whose LUTs are computed by the AOT `pipeline_linear` graph
+/// (fused learned-embedding + ADC-LUT, lowered from JAX+Pallas): raw
+/// feature vectors in, two-step scan out. PJRT calls go through
+/// `XlaService` (a dedicated executor thread) so the searcher is
+/// Send+Sync for the worker pool.
+struct XlaPipelineSearcher {
+    rt: XlaService,
+    index: Arc<EncodedIndex>,
+    w: Vec<f32>,
+    b: Vec<f32>,
+    d_in: usize,
+    ops: Arc<OpCounter>,
+}
+
+impl XlaPipelineSearcher {
+    /// Max queries per PJRT execute (the exported static batch).
+    fn export_batch(&self) -> usize {
+        self.rt.meta().map(|(b, _, _)| b).unwrap_or(16)
+    }
+}
+
+impl BatchSearcher for XlaPipelineSearcher {
+    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
+        let (k, m, d) = (self.index.k(), self.index.m(), self.index.dim());
+        let chunk = self.export_batch();
+        let mut out = Vec::with_capacity(queries.rows());
+        let mut start = 0;
+        while start < queries.rows() {
+            let len = chunk.min(queries.rows() - start);
+            let idx: Vec<usize> = (start..start + len).collect();
+            let sub = queries.select_rows(&idx);
+            // PJRT execute: padded to the exported batch internally
+            let luts = self
+                .rt
+                .pipeline_linear(
+                    &self.w,
+                    &self.b,
+                    self.d_in,
+                    self.index.codebooks().as_slice(),
+                    k,
+                    m,
+                    d,
+                    &sub,
+                )
+                .expect("pjrt pipeline execution");
+            out.extend(luts.into_iter().map(|flat| {
+                let lut = Lut::from_flat(k, m, flat);
+                search_icq::search_with_lut(
+                    &self.index,
+                    &lut,
+                    IcqSearchOpts { k: top_k, margin_scale: 1.0 },
+                    &self.ops,
+                )
+            }));
+            start += len;
+        }
+        out
+    }
+
+    fn dim(&self) -> usize {
+        self.d_in
+    }
+}
+
+fn main() -> Result<()> {
+    let artifacts = std::env::var("ICQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = XlaService::start(&artifacts)
+        .context("run `make artifacts` first (python build step)")?;
+    let (batch, _scan_n, platform) = rt.meta()?;
+    println!("[e2e] PJRT platform: {platform} | export batch {batch}");
+
+    // python-trained bundle: linear embedding + ICQ quantizers + codes
+    let manifest = icq::runtime::Manifest::load(&artifacts)?;
+    let bundle = TrainedBundle::load(
+        std::path::Path::new(&artifacts)
+            .join(&manifest.params["trained_linear_synth"].file),
+    )?;
+    println!(
+        "[e2e] bundle: n={} d={} K={} m={} fast_k={} sigma={:.3} |psi|={}",
+        bundle.n,
+        bundle.d,
+        bundle.k,
+        bundle.m,
+        bundle.fast_k,
+        bundle.sigma,
+        bundle.xi.iter().filter(|&&v| v > 0.5).count()
+    );
+    let index = Arc::new(EncodedIndex::from_bundle(&bundle)?);
+    let (_, w) = bundle.pack.f32("embed.w")?;
+    let (_, b) = bundle.pack.f32("embed.b")?;
+    let d_in = bundle.test_x.cols();
+    let ops = Arc::new(OpCounter::new());
+
+    let searcher = Arc::new(XlaPipelineSearcher {
+        rt,
+        index: index.clone(),
+        w: w.to_vec(),
+        b: b.to_vec(),
+        d_in,
+        ops: ops.clone(),
+    });
+
+    // quality check before load: run the held-out queries through the
+    // full stack and compute MAP against the bundled database labels
+    let nq = bundle.test_x.rows().min(96);
+    let queries = Matrix::from_fn(nq, d_in, |i, j| bundle.test_x.get(i, j));
+    let results = searcher.search_batch(&queries, 50);
+    let map = eval::mean_average_precision(
+        &results,
+        &bundle.test_labels[..nq],
+        &index.labels,
+    );
+    println!(
+        "[e2e] retrieval MAP over {} held-out queries: {:.4} \
+         (avg ops/vec {:.2}, refine rate {:.3})",
+        nq,
+        map,
+        ops.avg_ops_per_candidate(),
+        ops.refine_rate()
+    );
+    anyhow::ensure!(map > 0.15, "pipeline MAP implausibly low");
+
+    // serve under closed-loop load through the coordinator
+    let coord = Arc::new(Coordinator::start(
+        searcher,
+        ServeConfig { max_batch: 16, max_wait_us: 300, workers: 2, max_inflight: 1024 },
+    ));
+    let test_x = bundle.test_x.clone();
+    let tput = closed_loop_load(
+        &coord,
+        move |i| test_x.row(i % test_x.rows()).to_vec(),
+        4,
+        100,
+        10,
+    );
+    println!("[e2e] serve: {tput:.0} qps | {}", coord.metrics.summary());
+    println!("[e2e] OK — full stack (AOT artifacts -> PJRT -> coordinator) verified");
+    Ok(())
+}

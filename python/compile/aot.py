@@ -1,0 +1,254 @@
+"""AOT exporter: lower the L2 query-path graphs to HLO TEXT + train params.
+
+This is the single python entrypoint of `make artifacts`. It:
+
+  1. lowers the query-path graphs (fused embed+LUT, LUT-only, crude/full
+     scans) to HLO **text** — NOT serialized HloModuleProto: jax >= 0.5
+     emits 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+     rejects; the text parser reassigns ids (see /opt/xla-example/README);
+  2. runs the build-time ICQ training (train.py) on a small synthetic
+     corpus and a MNIST-like corpus, exporting icqfmt parameter packs;
+  3. writes artifacts/manifest.json describing every artifact (file,
+     entry shapes, dtypes) for the rust runtime's ArtifactManager.
+
+Python never runs after this — the rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as datamod
+from . import model
+from .icqfmt import write_icqf
+from .train import train_icq
+
+# Canonical export geometry. The rust batcher pads query batches to B;
+# the rust index pads code blocks to SCAN_N. fast_k variants cover the
+# paper's |K| operating points; the K-th variant is the full/refine pass.
+BATCH = 16
+SCAN_N = 4096
+SCAN_BLOCK = 256
+GEOM = dict(d_in=64, d=64, k=8, m=256)
+MLP_GEOM = dict(d_in=784, d_hidden=256, d=64, k=8, m=256)
+FAST_KS = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def export_graphs(outdir):
+    """Lower every query-path graph; returns manifest entries."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    g = GEOM
+    mg = MLP_GEOM
+    entries = {}
+
+    def emit(name, fn, specs, inputs, outputs):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": fname,
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    s = jax.ShapeDtypeStruct
+    # 1) LUT-only (pre-embedded queries)
+    emit(
+        "lut_only",
+        model.lut_only,
+        (
+            s((g["k"], g["m"], g["d"]), f32),
+            s((BATCH, g["d"]), f32),
+        ),
+        {
+            "codebooks": _spec((g["k"], g["m"], g["d"])),
+            "q": _spec((BATCH, g["d"])),
+        },
+        {"lut": _spec((BATCH, g["k"], g["m"]))},
+    )
+    # 2) fused linear embed + LUT
+    emit(
+        "pipeline_linear",
+        model.query_pipeline_linear,
+        (
+            s((g["d_in"], g["d"]), f32),
+            s((g["d"],), f32),
+            s((g["k"], g["m"], g["d"]), f32),
+            s((BATCH, g["d_in"]), f32),
+        ),
+        {
+            "w": _spec((g["d_in"], g["d"])),
+            "b": _spec((g["d"],)),
+            "codebooks": _spec((g["k"], g["m"], g["d"])),
+            "x": _spec((BATCH, g["d_in"])),
+        },
+        {"lut": _spec((BATCH, g["k"], g["m"]))},
+    )
+    # 3) fused MLP embed + LUT
+    emit(
+        "pipeline_mlp",
+        model.query_pipeline_mlp,
+        (
+            s((mg["d_in"], mg["d_hidden"]), f32),
+            s((mg["d_hidden"],), f32),
+            s((mg["d_hidden"], mg["d_hidden"]), f32),
+            s((mg["d_hidden"],), f32),
+            s((mg["d_hidden"], mg["d"]), f32),
+            s((mg["d"],), f32),
+            s((mg["k"], mg["m"], mg["d"]), f32),
+            s((BATCH, mg["d_in"]), f32),
+        ),
+        {
+            "w1": _spec((mg["d_in"], mg["d_hidden"])),
+            "b1": _spec((mg["d_hidden"],)),
+            "w2": _spec((mg["d_hidden"], mg["d_hidden"])),
+            "b2": _spec((mg["d_hidden"],)),
+            "w3": _spec((mg["d_hidden"], mg["d"])),
+            "b3": _spec((mg["d"],)),
+            "codebooks": _spec((mg["k"], mg["m"], mg["d"])),
+            "x": _spec((BATCH, mg["d_in"])),
+        },
+        {"lut": _spec((BATCH, mg["k"], mg["m"]))},
+    )
+    # 4) scan graphs, one per fast_k (the last is the full/refine pass)
+    for fk in FAST_KS:
+        emit(
+            f"scan_f{fk}",
+            model.make_scan_graph(fk, block_n=SCAN_BLOCK),
+            (
+                s((BATCH, g["k"], g["m"]), f32),
+                s((SCAN_N, g["k"]), i32),
+            ),
+            {
+                "lut": _spec((BATCH, g["k"], g["m"])),
+                "codes": _spec((SCAN_N, g["k"]), "i32"),
+            },
+            {"crude": _spec((BATCH, SCAN_N))},
+        )
+    return entries
+
+
+def export_trained(outdir, fast=False):
+    """Build-time training runs; returns manifest entries."""
+    entries = {}
+    n, epochs, warm = (2000, 2, 1) if fast else (8000, 6, 2)
+
+    print("  training ICQ (linear embed, synthetic)...")
+    x, y = datamod.make_classification(
+        n + 1000, GEOM["d_in"], 32, n_classes=10, seed=0
+    )
+    xtr, ytr, xte, yte = datamod.train_test_split(x, y, 1000)
+    pack = train_icq(
+        xtr,
+        ytr,
+        d_embed=GEOM["d"],
+        n_codebooks=GEOM["k"],
+        m=GEOM["m"],
+        embed_kind="linear",
+        epochs=epochs,
+        warmup_epochs=warm,
+        seed=0,
+    )
+    pack["test_x"] = xte
+    pack["test_labels"] = yte
+    fname = "trained_linear_synth.icqf"
+    write_icqf(os.path.join(outdir, fname), pack)
+    entries["trained_linear_synth"] = {
+        "file": fname,
+        "kind": "params",
+        "embed": "linear",
+        "pipeline": "pipeline_linear",
+    }
+    print(f"  wrote {fname}")
+
+    print("  training ICQ (mlp embed, mnist-like)...")
+    x, y = datamod.make_realworld_like("mnist", n + 1000, seed=0)
+    xtr, ytr, xte, yte = datamod.train_test_split(x, y, 1000)
+    pack = train_icq(
+        xtr,
+        ytr,
+        d_embed=MLP_GEOM["d"],
+        n_codebooks=MLP_GEOM["k"],
+        m=MLP_GEOM["m"],
+        embed_kind="mlp",
+        d_hidden=MLP_GEOM["d_hidden"],
+        epochs=max(2, epochs // 2),
+        warmup_epochs=warm,
+        seed=1,
+    )
+    pack["test_x"] = xte
+    pack["test_labels"] = yte
+    fname = "trained_mlp_mnist.icqf"
+    write_icqf(os.path.join(outdir, fname), pack)
+    entries["trained_mlp_mnist"] = {
+        "file": fname,
+        "kind": "params",
+        "embed": "mlp",
+        "pipeline": "pipeline_mlp",
+    }
+    print(f"  wrote {fname}")
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--fast", action="store_true", help="small training runs (CI)"
+    )
+    ap.add_argument(
+        "--graphs-only",
+        action="store_true",
+        help="skip build-time training",
+    )
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    print("[aot] lowering query-path graphs to HLO text")
+    graphs = export_graphs(outdir)
+    manifest = {
+        "version": 1,
+        "batch": BATCH,
+        "scan_n": SCAN_N,
+        "scan_block": SCAN_BLOCK,
+        "geometry": GEOM,
+        "mlp_geometry": MLP_GEOM,
+        "fast_ks": list(FAST_KS),
+        "graphs": graphs,
+        "params": {},
+    }
+    if not args.graphs_only:
+        print("[aot] build-time training")
+        manifest["params"] = export_trained(outdir, fast=args.fast)
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {outdir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""icqfmt — the flat little-endian tensor container shared with rust.
+
+Layout (all little-endian):
+
+    magic   : 4 bytes  b"ICQF"
+    version : u32      (currently 1)
+    count   : u32      number of tensors
+    tensor* :
+        name_len : u32
+        name     : utf-8 bytes
+        dtype    : u8   (0 = f32, 1 = i32, 2 = u16, 3 = u8)
+        ndim     : u32
+        dims     : ndim x u64
+        data     : raw row-major little-endian
+
+The rust reader/writer lives in `rust/src/data/format.rs`; round-trip
+parity is covered by python/tests/test_aot.py (python write -> byte-level
+re-read) and rust `data::format` unit tests (rust write -> rust read), plus
+the e2e integration test which reads a python-written file from rust.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"ICQF"
+VERSION = 1
+_DTYPES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int32): 1,
+    np.dtype(np.uint16): 2,
+    np.dtype(np.uint8): 3,
+}
+_DTYPES_INV = {v: k for k, v in _DTYPES.items()}
+
+
+def write_icqf(path, tensors):
+    """tensors: dict name -> np.ndarray (f32/i32/u16/u8)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BI", _DTYPES[arr.dtype], arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<Q", dim))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_icqf(path):
+    """Returns dict name -> np.ndarray."""
+    out = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError("bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"unsupported version {version}")
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            dt, ndim = struct.unpack("<BI", f.read(5))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim))
+            dtype = _DTYPES_INV[dt]
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype)
+            out[name] = data.reshape(dims).copy()
+    return out

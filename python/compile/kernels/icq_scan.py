@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: ICQ crude-pass distance scan (eq. 2 accumulation).
+
+Given per-query LUTs T[b, k, j] and the database code matrix codes[n, k],
+the crude pass computes, for the `fast_k` codebooks dedicated to the
+high-variance subspace psi,
+
+    crude[b, n] = sum_{k < fast_k} T[b, k, codes[n, k]]
+
+On CPU/FPGA (the paper's target) this is a per-element LUT gather. Gathers
+are hostile to the TPU vector unit, so we restructure (DESIGN.md
+section Hardware-Adaptation): flatten T[:, :fast_k, :] to [B, fast_k*m] and
+build, per code block of size bn, a one-hot indicator
+
+    P[n, k*m + codes[n, k]] = 1        (shape [bn, fast_k*m])
+
+Then  crude_block = T_flat @ P^T  — a dense [B, fk*m] x [fk*m, bn] MXU
+contraction. We trade fk*m/fk = m extra MACs per output for full MXU
+regularity; at m=256 the MXU's ~256x FLOP advantage over scalar gathers
+makes this the standard FAISS-GPU-style restructuring. VMEM per grid step:
+T_flat (B=64, fk=4, m=256 -> 256 KiB) + onehot block (bn=256 x 1024 x 4 B =
+1 MiB) + codes block (tiny) — double-buffered well under VMEM.
+
+The same kernel with fast_k = K computes full ADC distances (eq. 1), so the
+refine pass reuses it over the shortlist.
+
+interpret=True: validated against ref.icq_scan_ref by pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _icq_scan_kernel(lut_ref, codes_ref, out_ref, *, fast_k, m):
+    """One grid step = one block of database codes.
+
+    lut_ref:   [B, fast_k, m]  LUT slab (VMEM-resident across steps)
+    codes_ref: [bn, fast_k]    int32 code block
+    out_ref:   [B, bn]         crude distances for this block
+    """
+    lut = lut_ref[...]
+    codes = codes_ref[...]
+    b = lut.shape[0]
+    bn = codes.shape[0]
+    # flatten LUT: [B, fast_k * m]
+    lut_flat = lut.reshape(b, fast_k * m)
+    # one-hot indicator [bn, fast_k, m] via iota comparison (vectorized,
+    # no gather): onehot[n, k, j] = (codes[n, k] == j)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, fast_k, m), 2)
+    onehot = (codes[:, :, None] == iota).astype(lut.dtype)
+    p = onehot.reshape(bn, fast_k * m)
+    # crude = lut_flat @ p^T : [B, bn] MXU contraction
+    out_ref[...] = jax.lax.dot_general(
+        lut_flat,
+        p,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fast_k", "block_n", "interpret")
+)
+def icq_scan(lut, codes, fast_k, block_n=256, interpret=True):
+    """Crude-pass distances over the whole database.
+
+    Args:
+      lut:    [B, K, m] float32 LUTs from adc_lut.
+      codes:  [N, K] int32 code matrix; N must be a multiple of block_n
+              (the index pads with a sentinel row otherwise).
+      fast_k: static — number of leading codebooks in the fast group.
+    Returns:
+      crude: [B, N] float32.
+    """
+    b, k, m = lut.shape
+    n, k2 = codes.shape
+    assert k2 == k and 1 <= fast_k <= k
+    assert n % block_n == 0, f"N={n} must be a multiple of block_n={block_n}"
+    lut_fast = lut[:, :fast_k, :]
+    kernel = functools.partial(_icq_scan_kernel, fast_k=fast_k, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((b, fast_k, m), lambda i: (0, 0, 0)),  # resident
+            pl.BlockSpec((block_n, fast_k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), lut.dtype),
+        interpret=interpret,
+    )(lut_fast, codes.astype(jnp.int32))
+
+
+def full_adc(lut, codes, block_n=256, interpret=True):
+    """Full K-term ADC distances (eq. 1) — icq_scan with fast_k = K."""
+    return icq_scan(
+        lut, codes, lut.shape[1], block_n=block_n, interpret=interpret
+    )

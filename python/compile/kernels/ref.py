@@ -1,0 +1,102 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These define the semantics the L1 kernels (adc_lut.py, icq_scan.py) must
+match bit-for-bit (up to float tolerance). They are used by pytest /
+hypothesis at build time and are NEVER shipped to the rust runtime.
+
+Notation follows the paper: a dataset element x is quantized to a sum of
+K codewords, one from each codebook C_k (m codewords each, dimension d).
+The asymmetric distance from query q to the reconstruction of x is
+
+    ||q - x_bar||^2  ~  sum_k ||q_k - c_{k, code_k(x)}||^2      (eq. 1)
+
+when the codebooks are (group-)orthogonal, which both PQ and ICQ satisfy
+(PQ by consecutive-dim construction, ICQ by the interleaving constraint
+eq. 6). The crude ICQ comparison (eq. 2) uses only the subset of groups
+`fast_k` supported on the high-variance subspace psi.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adc_lut_ref(q, codebooks):
+    """Asymmetric-distance lookup tables for a batch of queries.
+
+    Args:
+      q:         [B, d]      query batch.
+      codebooks: [K, m, d]   K codebooks of m codewords. Codewords live in
+                 the full d-dim space (ICQ codewords are zero outside their
+                 group's support; PQ codewords are zero outside consecutive
+                 dims) so a single einsum covers every method.
+
+    Returns:
+      lut: [B, K, m] with lut[b, k, j] = ||q[b] - codebooks[k, j]||^2
+           restricted to codebook k's support. Because codewords are zero
+           off-support, we can expand:
+               ||q o s_k||^2 - 2 q.c_{k,j} + ||c_{k,j}||^2
+           where s_k is the support mask of codebook k. The ||q o s_k||^2
+           term is constant per (b, k) and cancels in comparisons, but we
+           include it so lut sums equal true squared distances (the paper's
+           sigma-margin calibration in eq. 11 needs absolute values).
+    """
+    # support mask per codebook: dims where any codeword is non-zero
+    support = (jnp.abs(codebooks) > 0).any(axis=1)  # [K, d]
+    q_sq = jnp.einsum("bd,kd->bk", q * q, support.astype(q.dtype))  # [B, K]
+    cross = jnp.einsum("bd,kmd->bkm", q, codebooks)  # [B, K, m]
+    c_sq = jnp.sum(codebooks * codebooks, axis=-1)  # [K, m]
+    return q_sq[:, :, None] - 2.0 * cross + c_sq[None, :, :]
+
+
+def adc_lut_nosupport_ref(q, codebooks):
+    """LUT variant without support masking: -2 q.c + ||c||^2 (the ||q||^2
+    shift dropped). Used when callers only need argmin ordering per group
+    (constant per-group shifts cancel). Kept as a second oracle because the
+    rust ADC baseline uses this cheaper form."""
+    cross = jnp.einsum("bd,kmd->bkm", q, codebooks)
+    c_sq = jnp.sum(codebooks * codebooks, axis=-1)
+    return -2.0 * cross + c_sq[None, :, :]
+
+
+def icq_scan_ref(lut, codes, fast_k):
+    """Crude-pass distance accumulation (eq. 2 left-hand side).
+
+    Args:
+      lut:    [B, K, m]  per-query LUTs from adc_lut_ref.
+      codes:  [N, K]     int32 code matrix of the database.
+      fast_k: int        number of leading codebooks in the fast group K.
+                         (The exporter permutes codebooks so the fast group
+                         comes first.)
+
+    Returns:
+      crude: [B, N] crude distances  sum_{k < fast_k} lut[b, k, codes[n, k]]
+    """
+    sub = lut[:, :fast_k, :]  # [B, fk, m]
+    idx = codes[:, :fast_k]  # [N, fk]
+    # gather: out[b, n] = sum_k sub[b, k, idx[n, k]]
+    gathered = jnp.take_along_axis(
+        sub[:, None, :, :],  # [B, 1, fk, m]
+        idx[None, :, :, None].astype(jnp.int32),  # [1, N, fk, 1]
+        axis=3,
+    )[..., 0]  # [B, N, fk]
+    return gathered.sum(axis=-1)
+
+
+def full_adc_ref(lut, codes):
+    """Full K-term ADC distances (eq. 1): [B, N]."""
+    return icq_scan_ref(lut, codes, codes.shape[1])
+
+
+def refine_ref(lut, codes, crude, threshold, fast_k):
+    """Two-step search reference (section 3.4), batch-restructured.
+
+    Candidates whose crude distance beats `threshold` (the current top-R
+    radius plus the sigma margin of eq. 11) get the remaining K - fast_k
+    LUT terms added; pruned candidates report +inf.
+
+    Returns (dist, refined_mask): dist [B, N], mask [B, N] bool.
+    """
+    full = full_adc_ref(lut, codes)
+    mask = crude < threshold[:, None]
+    return jnp.where(mask, full, jnp.inf), mask

@@ -1,0 +1,170 @@
+"""L2: the paper's loss functions (section 3.1 / 3.3) in JAX.
+
+The augmented objective (end of section 3.1):
+
+    min_{W, C, Theta}  L^E(D, W) + L^C(X, C)
+                       + gamma1 * L^P(Lambda, Theta)
+                       + gamma2 * L^ICQ(C, xi)
+
+  L^E    — embedding accuracy loss (classification or triplet),
+  L^C    — quantization error,
+  L^P    — negative log-likelihood of the bi-modal variance prior (eq. 4)
+           plus the minor-mode robustness term (eq. 10),
+  L^ICQ  — the interleaving (group-orthogonality) penalty (eq. 6).
+
+All functions are pure and jit-able; train.py wires them into the joint
+optimization, aot.py never exports them (training is build-time only).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.stats import norm
+
+# Fixed hyper-parameters (section 3.3): alpha2 controls skewness of the
+# minor mode ("setting the value of alpha2 = -10, for example"); pi1 > pi2
+# encourages only a few high-value variances.
+ALPHA2 = -10.0
+PI1 = 0.95
+PI2 = 0.05
+
+
+def skew_normal_pdf(x, mu, sigma, alpha):
+    """Skew-normal density SN(x; mu, sigma, alpha) =
+    (2/sigma) * phi((x-mu)/sigma) * Phi(alpha*(x-mu)/sigma)."""
+    z = (x - mu) / sigma
+    return 2.0 / sigma * norm.pdf(z) * norm.cdf(alpha * z)
+
+
+def variance_prior_pdf(lam, theta, pi1=PI1, pi2=PI2, alpha2=ALPHA2):
+    """Per-dimension mixture density of eq. (4)'s integrand:
+    pi1 * N(lam; 0, sigma1) + pi2 * SN(lam; mu2, sigma2, alpha2).
+
+    theta = (sigma1, mu2, sigma2) — the trainable parameters Theta. We
+    parameterize the scales through softplus in train.py so they stay
+    positive; here they are already positive values.
+    """
+    sigma1, mu2, sigma2 = theta
+    major = pi1 * norm.pdf(lam / sigma1) / sigma1
+    minor = pi2 * skew_normal_pdf(lam, mu2, sigma2, alpha2)
+    return major, minor
+
+
+def prior_nll(lam, theta, pi1=PI1, pi2=PI2, alpha2=ALPHA2, eps=1e-12):
+    """L^P (eq. 4 augmented per eq. 10):
+
+        -log P(Lambda; Theta)  -  log sum_i pi2 SN(lam_i)
+
+    The second term keeps the minor mode populated ("guarantees that the
+    second mode is not emptied out to delete useful information", 3.3).
+    """
+    major, minor = variance_prior_pdf(lam, theta, pi1, pi2, alpha2)
+    nll = -jnp.sum(jnp.log(major + minor + eps))
+    robust = -jnp.log(jnp.sum(minor) + eps)
+    return nll + robust
+
+
+def psi_mask(lam, theta, pi1=PI1, pi2=PI2, alpha2=ALPHA2):
+    """xi per eqs. (5)/(7): xi_i = 1 iff the minor (high-variance) mode is
+    more likely for lambda_i than the major mode. Numerically robust tail
+    rule: lambdas far above mu2 underflow both densities, but they are by
+    construction in the high-variance regime — classify them into psi.
+    Returns float mask [d]."""
+    major, minor = variance_prior_pdf(lam, theta, pi1, pi2, alpha2)
+    mu2 = theta[1]
+    return jnp.logical_or(minor > major, lam > mu2).astype(
+        jnp.asarray(lam).dtype
+    )
+
+
+def icq_penalty(codebooks, xi):
+    """L^ICQ (eq. 6): sum over all codewords of
+    ||c o xi|| * ||c o (1 - xi)||. Zero iff every codeword is supported
+    entirely inside psi or entirely outside it (interleaved orthogonality).
+
+    codebooks: [K, m, d]; xi: [d]."""
+    on = jnp.sqrt(jnp.sum((codebooks * xi) ** 2, axis=-1) + 1e-12)
+    off = jnp.sqrt(jnp.sum((codebooks * (1.0 - xi)) ** 2, axis=-1) + 1e-12)
+    return jnp.sum(on * off)
+
+
+def quantization_loss(x, codebooks, codes):
+    """L^C: mean squared reconstruction error  mean_i ||x_i - sum_k
+    c_{k, codes[i,k]}||^2.
+
+    x: [B, d]; codebooks: [K, m, d]; codes: [B, K] int32."""
+    k = codebooks.shape[0]
+    recon = jnp.zeros_like(x)
+    for kk in range(k):  # K is small (<=16); unrolled gather-sum
+        recon = recon + codebooks[kk][codes[:, kk]]
+    return jnp.mean(jnp.sum((x - recon) ** 2, axis=-1))
+
+
+def classification_loss(logits, labels):
+    """L^E (classification form): softmax cross-entropy."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logz, labels[:, None], axis=1))
+
+
+def triplet_loss(anchor, pos, neg, margin=1.0):
+    """L^E (triplet form, PQN-style): max(0, ||a-p||^2 - ||a-n||^2 + m)."""
+    dp = jnp.sum((anchor - pos) ** 2, axis=-1)
+    dn = jnp.sum((anchor - neg) ** 2, axis=-1)
+    return jnp.mean(jnp.maximum(0.0, dp - dn + margin))
+
+
+def icq_objective(
+    x,
+    labels,
+    logits,
+    codebooks,
+    codes,
+    lam,
+    theta,
+    gamma1=0.1,
+    gamma2=1.0,
+):
+    """The full augmented objective (section 3.1). Returns (total, parts)."""
+    le = classification_loss(logits, labels)
+    lc = quantization_loss(x, codebooks, codes)
+    xi = psi_mask(lam, theta)
+    lp = prior_nll(lam, theta)
+    licq = icq_penalty(codebooks, xi)
+    total = le + lc + gamma1 * lp + gamma2 * licq
+    return total, {"LE": le, "LC": lc, "LP": lp, "LICQ": licq}
+
+
+# ------------------------------------------------------------------
+# Online variance (eq. 9) — Welford/Chan batched update. The paper uses
+# this to estimate dataset variance Lambda during batch training without
+# recomputing all X.
+# ------------------------------------------------------------------
+
+
+def online_variance_init(d):
+    """State = (b, M, Lambda): batch counter, running mean, running var."""
+    return (
+        jnp.zeros(()),
+        jnp.zeros((d,)),
+        jnp.zeros((d,)),
+    )
+
+
+def online_variance_update(state, batch):
+    """One step of eq. (9). batch: [B, d] of embeddings X for this batch.
+
+    Lambda_b = Lambda_{b-1} + (1/b)(Lambda_batch - Lambda_{b-1})
+               + (1/b)(1 - 1/b)(M_batch - M_{b-1})^2
+    M_b      = M_{b-1} + (1/b)(M_batch - M_{b-1})
+    """
+    b_prev, m_prev, v_prev = state
+    b = b_prev + 1.0
+    m_batch = jnp.mean(batch, axis=0)
+    v_batch = jnp.var(batch, axis=0)
+    inv_b = 1.0 / b
+    v_new = v_prev + inv_b * (v_batch - v_prev) + inv_b * (1.0 - inv_b) * (
+        m_batch - m_prev
+    ) ** 2
+    m_new = m_prev + inv_b * (m_batch - m_prev)
+    return (b, m_new, v_new)

@@ -1,0 +1,115 @@
+"""L2: embedding models + the exported query-path compute graphs.
+
+Two embedding families, matching the paper's comparisons:
+
+  * linear   — SQ-style supervised linear map  x -> x W + b  ([17]);
+  * mlp      — stand-in for the paper's CNN embeddings (LeNet / AlexNet in
+               Fig. 5): a 2-hidden-layer MLP trained with triplet or
+               classification loss. (CNN -> MLP substitution documented in
+               DESIGN.md; the role — a learned non-linear embedding feeding
+               quantization — is preserved.)
+
+`query_pipeline_*` are the graphs aot.py lowers to HLO text for the rust
+runtime: embed a raw query batch and build its ADC LUTs in ONE fused XLA
+module, so the request path performs a single PJRT execute per batch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.adc_lut import adc_lut
+from .kernels.icq_scan import icq_scan
+
+
+# ------------------------------------------------------------------
+# Parameter initialization
+# ------------------------------------------------------------------
+
+
+def init_linear(key, d_in, d_out):
+    kw, _ = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(d_in)
+    return {
+        "w": jax.random.normal(kw, (d_in, d_out)) * scale,
+        "b": jnp.zeros((d_out,)),
+    }
+
+
+def init_mlp(key, d_in, d_hidden, d_out):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "l1": init_linear(k1, d_in, d_hidden),
+        "l2": init_linear(k2, d_hidden, d_hidden),
+        "l3": init_linear(k3, d_hidden, d_out),
+    }
+
+
+def init_classifier(key, d, n_classes):
+    return init_linear(key, d, n_classes)
+
+
+# ------------------------------------------------------------------
+# Forward passes
+# ------------------------------------------------------------------
+
+
+def linear_embed(params, x):
+    """SQ-style linear embedding: [B, d_in] -> [B, d]."""
+    return x @ params["w"] + params["b"]
+
+
+def mlp_embed(params, x):
+    """MLP embedding (CNN substitute): [B, d_in] -> [B, d]."""
+    h = jax.nn.relu(linear_embed(params["l1"], x))
+    h = jax.nn.relu(linear_embed(params["l2"], h))
+    return linear_embed(params["l3"], h)
+
+
+def classify(params, z):
+    return linear_embed(params, z)
+
+
+EMBED_FNS = {"linear": linear_embed, "mlp": mlp_embed}
+
+
+# ------------------------------------------------------------------
+# Exported query-path graphs (lowered to HLO by aot.py)
+# ------------------------------------------------------------------
+
+
+def query_pipeline_linear(w, b, codebooks, x):
+    """Fused embed + LUT build for the linear embedding.
+
+    Inputs (all runtime-fed, nothing baked in):
+      w [d_in, d], b [d], codebooks [K, m, d], x [B, d_in]
+    Returns a 1-tuple (lut [B, K, m],) — return_tuple=True interchange.
+    """
+    q = x @ w + b
+    return (adc_lut(q, codebooks),)
+
+
+def query_pipeline_mlp(w1, b1, w2, b2, w3, b3, codebooks, x):
+    """Fused MLP embed + LUT build."""
+    h = jax.nn.relu(x @ w1 + b1)
+    h = jax.nn.relu(h @ w2 + b2)
+    q = h @ w3 + b3
+    return (adc_lut(q, codebooks),)
+
+
+def lut_only(codebooks, q):
+    """LUT build for pre-embedded queries (rust feeds raw vectors when no
+    learned embedding is configured)."""
+    return (adc_lut(q, codebooks),)
+
+
+def make_scan_graph(fast_k, block_n=256):
+    """Crude/full scan graph factory: fast_k is static in the HLO, so
+    aot.py exports one module per configured fast_k (and one with
+    fast_k = K for the refine/full pass)."""
+
+    def scan(lut, codes):
+        return (icq_scan(lut, codes, fast_k, block_n=block_n),)
+
+    return scan

@@ -1,0 +1,156 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes per the build contract: any mismatch here
+is a build-stopper since the rust runtime executes exactly these kernels
+(lowered into the exported HLO).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.adc_lut import adc_lut
+from compile.kernels.icq_scan import full_adc, icq_scan
+from compile.kernels import ref
+
+
+def make_interleaved_codebooks(rng, k, m, d, dense=False):
+    """Codebooks with disjoint interleaved supports (ICQ layout), or dense
+    (CQ layout) when dense=True."""
+    cb = np.zeros((k, m, d), np.float32)
+    if dense:
+        return rng.normal(size=(k, m, d)).astype(np.float32)
+    perm = rng.permutation(d)
+    bounds = np.linspace(0, d, k + 1).astype(int)
+    for kk in range(k):
+        dims = perm[bounds[kk] : bounds[kk + 1]]
+        cb[kk][:, dims] = rng.normal(size=(m, len(dims)))
+    return cb
+
+
+# ------------------------- adc_lut -------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.sampled_from([1, 4, 16]),
+    k=st.sampled_from([2, 4, 8]),
+    m=st.sampled_from([8, 32]),
+    d=st.sampled_from([16, 64]),
+    dense=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_adc_lut_matches_ref(b, k, m, d, dense, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    cb = jnp.asarray(make_interleaved_codebooks(rng, k, m, d, dense))
+    out = adc_lut(q, cb)
+    expect = ref.adc_lut_ref(q, cb)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_adc_lut_is_true_distance_on_support():
+    """lut[b,k,j] must equal the exact squared distance restricted to the
+    codebook's support — the invariant the sigma-margin calibration
+    (eq. 11) relies on."""
+    rng = np.random.default_rng(0)
+    k, m, d = 4, 8, 32
+    cb = make_interleaved_codebooks(rng, k, m, d)
+    q = rng.normal(size=(2, d)).astype(np.float32)
+    lut = np.asarray(adc_lut(jnp.asarray(q), jnp.asarray(cb)))
+    support = (np.abs(cb) > 0).any(axis=1)  # [K, d]
+    for b in range(2):
+        for kk in range(k):
+            for j in range(m):
+                diff = (q[b] - cb[kk, j]) * support[kk]
+                np.testing.assert_allclose(
+                    lut[b, kk, j], (diff**2).sum(), rtol=1e-3, atol=1e-3
+                )
+
+
+def test_adc_lut_sum_equals_full_distance_for_disjoint_supports():
+    """With disjoint supports covering all dims, sum_k lut[b,k,code_k]
+    equals the exact ||q - x_bar||^2 (eq. 1 as equality)."""
+    rng = np.random.default_rng(3)
+    k, m, d = 4, 16, 32
+    cb = make_interleaved_codebooks(rng, k, m, d)
+    q = rng.normal(size=(3, d)).astype(np.float32)
+    codes = rng.integers(0, m, size=(5, k))
+    recon = cb[np.arange(k)[None, :], codes, :].sum(axis=1)  # [5, d]
+    lut = np.asarray(adc_lut(jnp.asarray(q), jnp.asarray(cb)))
+    for b in range(3):
+        for n in range(5):
+            adc = sum(lut[b, kk, codes[n, kk]] for kk in range(k))
+            exact = ((q[b] - recon[n]) ** 2).sum()
+            np.testing.assert_allclose(adc, exact, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------- icq_scan -------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.sampled_from([1, 4, 16]),
+    k=st.sampled_from([2, 4, 8]),
+    m=st.sampled_from([8, 32]),
+    nblocks=st.integers(1, 4),
+    block=st.sampled_from([64, 128]),
+    seed=st.integers(0, 2**16),
+    data=st.data(),
+)
+def test_icq_scan_matches_ref(b, k, m, nblocks, block, seed, data):
+    fast_k = data.draw(st.integers(1, k))
+    rng = np.random.default_rng(seed)
+    n = nblocks * block
+    lut = jnp.asarray(rng.normal(size=(b, k, m)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, m, size=(n, k)).astype(np.int32))
+    out = icq_scan(lut, codes, fast_k, block_n=block)
+    expect = ref.icq_scan_ref(lut, codes, fast_k)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_full_adc_equals_scan_with_all_codebooks():
+    rng = np.random.default_rng(7)
+    lut = jnp.asarray(rng.normal(size=(2, 4, 8)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, 8, size=(128, 4)).astype(np.int32))
+    np.testing.assert_allclose(
+        full_adc(lut, codes, block_n=64),
+        icq_scan(lut, codes, 4, block_n=64),
+    )
+
+
+def test_icq_scan_rejects_ragged_n():
+    lut = jnp.zeros((1, 2, 4))
+    codes = jnp.zeros((100, 2), jnp.int32)
+    with pytest.raises(AssertionError):
+        icq_scan(lut, codes, 1, block_n=64)
+
+
+def test_crude_is_lower_bound_of_full():
+    """With nonnegative LUT entries (true distances), the crude sum is a
+    lower bound of the full ADC distance — the monotonicity the two-step
+    search prune depends on."""
+    rng = np.random.default_rng(11)
+    b, k, m, n = 4, 8, 16, 256
+    lut = jnp.asarray(
+        np.abs(rng.normal(size=(b, k, m))).astype(np.float32)
+    )
+    codes = jnp.asarray(rng.integers(0, m, size=(n, k)).astype(np.int32))
+    full = np.asarray(icq_scan(lut, codes, k, block_n=128))
+    for fk in (1, 2, 4):
+        crude = np.asarray(icq_scan(lut, codes, fk, block_n=128))
+        assert (crude <= full + 1e-5).all()
+
+
+def test_refine_ref_masks_pruned():
+    rng = np.random.default_rng(13)
+    b, k, m, n = 2, 4, 8, 64
+    lut = jnp.asarray(np.abs(rng.normal(size=(b, k, m))).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, m, size=(n, k)).astype(np.int32))
+    crude = ref.icq_scan_ref(lut, codes, 2)
+    thresh = jnp.median(crude, axis=1)
+    dist, mask = ref.refine_ref(lut, codes, crude, thresh, 2)
+    assert bool(jnp.isinf(dist[~mask]).all())
+    assert bool(jnp.isfinite(dist[mask]).all())

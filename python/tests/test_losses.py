@@ -1,0 +1,148 @@
+"""L2 loss-function unit tests (paper eqs. 4-11)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import losses
+
+
+def test_skew_normal_integrates_to_one():
+    """SN is a density: trapezoid integral ~ 1."""
+    x = jnp.linspace(-30.0, 30.0, 20001)
+    pdf = losses.skew_normal_pdf(x, mu=1.0, sigma=2.0, alpha=-10.0)
+    integral = float(jnp.trapezoid(pdf, x))
+    assert abs(integral - 1.0) < 1e-3
+
+
+def test_skew_normal_negative_alpha_skews_left():
+    """alpha < 0 puts mass BELOW mu — the paper uses the asymmetry to
+    attract lambda_i towards higher values from below the mode."""
+    x = jnp.linspace(-20.0, 20.0, 40001)
+    pdf = losses.skew_normal_pdf(x, mu=0.0, sigma=2.0, alpha=-10.0)
+    mean = float(jnp.trapezoid(pdf * x, x))
+    assert mean < -0.5
+
+
+def test_prior_modes_split():
+    """Small variances must be likelier under the major mode, large ones
+    under the minor mode (the eq. 5 classification)."""
+    theta = (0.5, 5.0, 1.0)  # sigma1, mu2, sigma2
+    lam = jnp.array([0.01, 0.1, 4.5, 5.0])
+    major, minor = losses.variance_prior_pdf(lam, theta)
+    assert float(major[0]) > float(minor[0])
+    assert float(major[1]) > float(minor[1])
+    assert float(minor[2]) > float(major[2])
+    assert float(minor[3]) > float(major[3])
+
+
+def test_psi_mask_selects_high_variance():
+    theta = (0.5, 5.0, 1.0)
+    lam = jnp.array([0.01, 0.2, 5.0, 4.0, 0.05])
+    xi = np.asarray(losses.psi_mask(lam, theta))
+    np.testing.assert_array_equal(xi, [0, 0, 1, 1, 0])
+
+
+def test_prior_nll_robustness_term_penalizes_empty_minor_mode():
+    """Eq. 10: emptying the minor mode must cost more than keeping it
+    populated (section 3.3 robustness)."""
+    theta = (0.5, 5.0, 1.0)
+    lam_with_high = jnp.array([0.1, 0.1, 0.1, 5.0])
+    lam_all_small = jnp.array([0.1, 0.1, 0.1, 0.1])
+    nll_hi = float(losses.prior_nll(lam_with_high, theta))
+    nll_lo = float(losses.prior_nll(lam_all_small, theta))
+    assert nll_hi < nll_lo
+
+
+def test_prior_nll_differentiable():
+    theta_raw = jnp.array([0.5, 5.0, 1.0])
+
+    def f(t):
+        return losses.prior_nll(jnp.array([0.1, 2.0, 5.0]), (t[0], t[1], t[2]))
+
+    g = jax.grad(f)(theta_raw)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_icq_penalty_zero_iff_group_orthogonal():
+    d = 8
+    xi = jnp.array([1.0, 1.0, 0, 0, 0, 0, 0, 0])
+    cb = np.zeros((2, 3, d), np.float32)
+    cb[0, :, :2] = 1.0  # fully inside psi
+    cb[1, :, 2:] = 1.0  # fully outside psi
+    assert float(losses.icq_penalty(jnp.asarray(cb), xi)) < 1e-4
+    cb[0, 0, 3] = 2.0  # violate: codeword straddles the split
+    assert float(losses.icq_penalty(jnp.asarray(cb), xi)) > 0.1
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_icq_penalty_nonnegative(seed):
+    rng = np.random.default_rng(seed)
+    cb = jnp.asarray(rng.normal(size=(3, 4, 10)).astype(np.float32))
+    xi = jnp.asarray((rng.random(10) > 0.5).astype(np.float32))
+    assert float(losses.icq_penalty(cb, xi)) >= 0.0
+
+
+def test_quantization_loss_zero_for_exact_codes():
+    rng = np.random.default_rng(0)
+    cb = rng.normal(size=(2, 4, 6)).astype(np.float32)
+    codes = np.array([[0, 1], [3, 2]], np.int32)
+    x = cb[0][codes[:, 0]] + cb[1][codes[:, 1]]
+    loss = losses.quantization_loss(
+        jnp.asarray(x), jnp.asarray(cb), jnp.asarray(codes)
+    )
+    assert float(loss) < 1e-10
+
+
+def test_classification_loss_matches_manual():
+    logits = jnp.array([[2.0, 0.0], [0.0, 3.0]])
+    labels = jnp.array([0, 1])
+    expect = -np.mean(
+        [
+            np.log(np.exp(2) / (np.exp(2) + 1)),
+            np.log(np.exp(3) / (np.exp(3) + 1)),
+        ]
+    )
+    np.testing.assert_allclose(
+        float(losses.classification_loss(logits, labels)), expect, rtol=1e-5
+    )
+
+
+def test_triplet_loss_zero_when_separated():
+    a = jnp.zeros((2, 4))
+    p = a + 0.01
+    n = a + 10.0
+    assert float(losses.triplet_loss(a, p, n, margin=1.0)) == 0.0
+
+
+# ------------------------- online variance (eq. 9) -------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    nb=st.integers(2, 8),
+    bsz=st.integers(4, 32),
+    d=st.integers(1, 8),
+)
+def test_online_variance_matches_global(seed, nb, bsz, d):
+    """Eq. 9 run over equal-size batches must converge to the population
+    variance of the concatenated data (the paper's claim: 'we improve our
+    estimate of the dataset variance')."""
+    rng = np.random.default_rng(seed)
+    batches = [
+        rng.normal(loc=rng.normal(), size=(bsz, d)).astype(np.float32)
+        for _ in range(nb)
+    ]
+    state = losses.online_variance_init(d)
+    for b in batches:
+        state = losses.online_variance_update(state, jnp.asarray(b))
+    allx = np.concatenate(batches, axis=0)
+    np.testing.assert_allclose(
+        np.asarray(state[1]), allx.mean(0), rtol=1e-3, atol=1e-3
+    )
+    np.testing.assert_allclose(
+        np.asarray(state[2]), allx.var(0), rtol=5e-2, atol=5e-2
+    )

@@ -1,0 +1,60 @@
+"""L2 model/graph shape + semantics tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_linear_embed_shapes():
+    p = model.init_linear(jax.random.PRNGKey(0), 12, 6)
+    x = jnp.ones((5, 12))
+    assert model.linear_embed(p, x).shape == (5, 6)
+
+
+def test_mlp_embed_shapes():
+    p = model.init_mlp(jax.random.PRNGKey(0), 12, 16, 6)
+    x = jnp.ones((5, 12))
+    assert model.mlp_embed(p, x).shape == (5, 6)
+
+
+def test_query_pipeline_linear_equals_embed_then_lut():
+    rng = np.random.default_rng(0)
+    d_in, d, k, m, b = 10, 8, 2, 4, 3
+    w = jnp.asarray(rng.normal(size=(d_in, d)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    cb = jnp.asarray(rng.normal(size=(k, m, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, d_in)).astype(np.float32))
+    (lut,) = model.query_pipeline_linear(w, bias, cb, x)
+    expect = ref.adc_lut_ref(x @ w + bias, cb)
+    np.testing.assert_allclose(lut, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_query_pipeline_mlp_equals_embed_then_lut():
+    rng = np.random.default_rng(1)
+    d_in, dh, d, k, m, b = 12, 7, 6, 2, 4, 3
+    mk = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32))
+    w1, b1 = mk(d_in, dh), mk(dh)
+    w2, b2 = mk(dh, dh), mk(dh)
+    w3, b3 = mk(dh, d), mk(d)
+    cb = mk(k, m, d)
+    x = mk(b, d_in)
+    (lut,) = model.query_pipeline_mlp(w1, b1, w2, b2, w3, b3, cb, x)
+    h = jax.nn.relu(x @ w1 + b1)
+    h = jax.nn.relu(h @ w2 + b2)
+    expect = ref.adc_lut_ref(h @ w3 + b3, cb)
+    np.testing.assert_allclose(lut, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_scan_graph_factory_matches_ref():
+    rng = np.random.default_rng(2)
+    b, k, m, n = 2, 4, 8, 128
+    lut = jnp.asarray(rng.normal(size=(b, k, m)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, m, size=(n, k)).astype(np.int32))
+    for fk in (1, 2, 4):
+        (out,) = model.make_scan_graph(fk, block_n=64)(lut, codes)
+        np.testing.assert_allclose(
+            out, ref.icq_scan_ref(lut, codes, fk), rtol=1e-4, atol=1e-4
+        )

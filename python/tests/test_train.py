@@ -1,0 +1,123 @@
+"""Build-time training loop tests: small but real runs of train_icq and
+its pieces (greedy encoding, k-means init, theta parameterization)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import data as datamod
+from compile import losses
+from compile.train import (
+    adam_init,
+    adam_step,
+    encode_greedy,
+    kmeans_np,
+    theta_init,
+    theta_pos,
+    train_icq,
+)
+
+
+def test_encode_greedy_exact_for_codebook_points():
+    """Points that ARE sums of codewords encode to zero residual."""
+    rng = np.random.default_rng(0)
+    # orthogonal supports -> greedy is exact
+    cb = np.zeros((2, 4, 6), np.float32)
+    cb[0, :, :3] = rng.normal(size=(4, 3))
+    cb[1, :, 3:] = rng.normal(size=(4, 3))
+    codes_true = np.array([[1, 2], [3, 0], [0, 3]], np.int32)
+    x = cb[0][codes_true[:, 0]] + cb[1][codes_true[:, 1]]
+    codes = np.asarray(encode_greedy(jnp.asarray(x), jnp.asarray(cb)))
+    recon = cb[0][codes[:, 0]] + cb[1][codes[:, 1]]
+    np.testing.assert_allclose(recon, x, atol=1e-5)
+
+
+def test_encode_greedy_reduces_residual():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(32, 8)).astype(np.float32)
+    cb = rng.normal(size=(4, 16, 8)).astype(np.float32) * 0.5
+    codes = np.asarray(encode_greedy(jnp.asarray(x), jnp.asarray(cb)))
+    recon = sum(cb[k][codes[:, k]] for k in range(4))
+    base = (x**2).sum()
+    assert ((x - recon) ** 2).sum() < base
+
+
+def test_kmeans_reduces_distortion():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(200, 4)).astype(np.float32)
+    c = kmeans_np(x, 8, iters=10, seed=0)
+    d2 = ((x[:, None, :] - c[None]) ** 2).sum(-1).min(1).mean()
+    c1 = kmeans_np(x, 8, iters=0, seed=0)
+    d2_init = ((x[:, None, :] - c1[None]) ** 2).sum(-1).min(1).mean()
+    assert d2 <= d2_init + 1e-6
+
+
+def test_theta_roundtrip_positive():
+    lam = np.abs(np.random.default_rng(3).normal(size=32)) + 0.01
+    raw = theta_init(lam)
+    s1, mu2, s2 = theta_pos(raw)
+    assert float(s1) > 0 and float(s2) > 0
+    assert abs(float(s1) - float(np.median(lam))) < 0.05 * max(
+        1.0, float(np.median(lam))
+    ) + 1e-2
+
+
+def test_adam_decreases_quadratic():
+    params = {"x": jnp.array([5.0])}
+    opt = adam_init(params)
+    import jax
+
+    for _ in range(200):
+        g = jax.grad(lambda p: (p["x"] ** 2).sum())(params)
+        params, opt = adam_step(params, g, opt, lr=0.1)
+    assert abs(float(params["x"][0])) < 0.5
+
+
+def test_train_icq_end_to_end_small():
+    """A tiny but complete joint run: must produce a consistent pack with
+    group-orthogonal codebooks, a non-trivial psi, and eq.8/eq.11 outputs.
+    """
+    x, y = datamod.make_classification(600, 16, 8, n_classes=4, seed=0)
+    pack = train_icq(
+        x,
+        y,
+        d_embed=16,
+        n_codebooks=4,
+        m=8,
+        embed_kind="linear",
+        epochs=2,
+        warmup_epochs=1,
+        batch=64,
+        seed=0,
+        log=lambda *_: None,
+    )
+    cb = pack["codebooks"]
+    xi = pack["xi"]
+    fast_k = int(pack["fast_k"][0])
+    assert cb.shape == (4, 8, 16)
+    assert 1 <= fast_k < 4
+    assert 0 < xi.sum() < 16
+    # hard group-orthogonality after the final projection
+    for k in range(4):
+        mask = xi if k < fast_k else 1.0 - xi
+        off = cb[k] * (1.0 - mask)
+        assert np.abs(off).max() < 1e-6, f"codebook {k} leaks off-support"
+    # sigma == eq. 11
+    np.testing.assert_allclose(
+        pack["sigma"][0], pack["lambda"][xi < 0.5].sum(), rtol=1e-5
+    )
+    # codes within range, shapes consistent
+    assert pack["codes"].shape == (600, 4)
+    assert pack["codes"].min() >= 0 and pack["codes"].max() < 8
+    assert pack["embeddings"].shape == (600, 16)
+
+
+def test_online_variance_integration_with_training_data():
+    x, _ = datamod.make_classification(512, 8, 4, n_classes=2, seed=1)
+    state = losses.online_variance_init(8)
+    for i in range(0, 512, 64):
+        state = losses.online_variance_update(
+            state, jnp.asarray(x[i : i + 64])
+        )
+    np.testing.assert_allclose(
+        np.asarray(state[2]), x.var(0), rtol=0.1, atol=0.1
+    )

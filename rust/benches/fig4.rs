@@ -1,0 +1,13 @@
+//! Regenerates Fig. 4 of the paper (see DESIGN.md experiment index).
+//! Scale: pass --fast (or set ICQ_BENCH_FAST=1) for a CI-sized run.
+use icq::bench::figures::{run_figure, Scale};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast")
+        || std::env::var("ICQ_BENCH_FAST").is_ok();
+    let scale = if fast { Scale::fast() } else { Scale::full() };
+    let t0 = std::time::Instant::now();
+    let fig = run_figure("fig4", scale).expect("figure generation");
+    fig.print_and_save().expect("save");
+    println!("[fig4 done in {:.1?}]", t0.elapsed());
+}

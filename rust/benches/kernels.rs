@@ -1,0 +1,147 @@
+//! Kernel micro-benchmarks (EXPERIMENTS.md section Perf, L1/L3 rows):
+//! native LUT build, crude scan, full ADC scan, refine pass, and — when
+//! artifacts are built — the PJRT-executed Pallas LUT/scan graphs.
+
+use icq::bench::timing::{bench, black_box};
+use icq::core::{Matrix, Rng};
+use icq::index::lut::{Lut, LutContext};
+use icq::index::{search_adc, search_icq, EncodedIndex, OpCounter};
+use icq::quantizer::icq::{Icq, IcqOpts};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast")
+        || std::env::var("ICQ_BENCH_FAST").is_ok();
+    let n = if fast { 10_000 } else { 100_000 };
+    let (d, k, m) = (64, 8, 256);
+    let mut rng = Rng::new(3);
+    eprintln!("[kernels bench] building ICQ index n={n} d={d} K={k} m={m}...");
+    // Class-clustered heteroscedastic data ("most dataset elements are far
+    // more distant from a random query than its nearest neighbors", sec. 1):
+    // 32 cluster centers on the hot dims, small within-cluster spread.
+    let n_clusters = 32;
+    let centers = Matrix::from_fn(n_clusters, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 4.0 } else { 0.4 }
+    });
+    let x = Matrix::from_fn(n, d, |i, j| {
+        centers.get(i % n_clusters, j)
+            + rng.normal_f32() * if j % 4 == 0 { 0.8 } else { 0.2 }
+    });
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k, m, fast_k: 2, kmeans_iters: 6, prior_steps: 150, seed: 0 },
+    );
+    let index = EncodedIndex::build_icq(&icq, &x, vec![0; n]);
+    // in-distribution query: a perturbed database vector
+    let q: Vec<f32> = (0..d)
+        .map(|j| x.get(7, j) + rng.normal_f32() * 0.1)
+        .collect();
+    let ctx = LutContext::new(index.codebooks());
+
+    // L3 native kernels
+    let mlut = bench("lut/native build (K*m*d MACs)", || {
+        black_box(Lut::build(&ctx, index.codebooks(), &q));
+    });
+    println!("{}", mlut.report());
+    println!(
+        "  -> {:.1} M MAC/s",
+        (k * m * d) as f64 / mlut.median.as_secs_f64() / 1e6
+    );
+
+    let lut = Lut::build(&ctx, index.codebooks(), &q);
+    let ops = OpCounter::new();
+    let mscan = bench("scan/crude (fast_k adds/vec)", || {
+        let codes = index.codes();
+        let mut acc = 0.0f32;
+        for i in 0..index.len() {
+            acc += lut.partial_sum(codes.row(i), 0, index.fast_k);
+        }
+        black_box(acc);
+    });
+    println!("{}", mscan.report());
+    println!(
+        "  -> {:.1} M adds/s",
+        (n * index.fast_k) as f64 / mscan.median.as_secs_f64() / 1e6
+    );
+
+    let mfull = bench("scan/full-adc (K adds/vec)", || {
+        black_box(search_adc::search_with_lut(&index, &lut, 10, &ops));
+    });
+    println!("{}", mfull.report());
+
+    let mtwo = bench("scan/two-step margin=1 (eq. 11)", || {
+        black_box(search_icq::search_with_lut(
+            &index,
+            &lut,
+            search_icq::IcqSearchOpts { k: 10, margin_scale: 1.0 },
+            &ops,
+        ));
+    });
+    println!("{}", mtwo.report());
+
+    let mtwo0 = bench("scan/two-step margin=0 (lossless)", || {
+        black_box(search_icq::search_with_lut(
+            &index,
+            &lut,
+            search_icq::IcqSearchOpts { k: 10, margin_scale: 0.0 },
+            &ops,
+        ));
+    });
+    println!("{}", mtwo0.report());
+
+    let mscanfirst = bench("scan/two-step-batched (scanfirst)", || {
+        black_box(search_icq::search_scanfirst(
+            &index,
+            &lut,
+            search_icq::IcqSearchOpts { k: 10, margin_scale: 1.0 },
+            &ops,
+        ));
+    });
+    println!("{}", mscanfirst.report());
+    println!(
+        "two-step speedup over full ADC: margin1 {:.2}x, margin0 {:.2}x, \
+         batched {:.2}x (theoretical K/fast_k = {:.1}x)",
+        mfull.median.as_secs_f64() / mtwo.median.as_secs_f64(),
+        mfull.median.as_secs_f64() / mtwo0.median.as_secs_f64(),
+        mfull.median.as_secs_f64() / mscanfirst.median.as_secs_f64(),
+        k as f64 / index.fast_k as f64,
+    );
+
+    // PJRT-executed Pallas graphs (if artifacts are present)
+    match icq::runtime::XlaRuntime::new("artifacts") {
+        Ok(rt) => {
+            let b = rt.batch();
+            let geom = &rt.artifacts.manifest.graphs["lut_only"];
+            let cb_shape = geom.inputs["codebooks"].shape.clone();
+            let (gk, gm, gd) = (cb_shape[0], cb_shape[1], cb_shape[2]);
+            if gd == d && gk == k && gm == m {
+                let queries = Matrix::from_fn(b, d, |i, j| x.get(i, j));
+                // warm the executable cache before timing
+                rt.lut_batch(index.codebooks().as_slice(), k, m, d, &queries)
+                    .expect("pjrt lut");
+                let mp = bench("lut/pjrt pallas adc_lut (batch)", || {
+                    black_box(
+                        rt.lut_batch(
+                            index.codebooks().as_slice(),
+                            k,
+                            m,
+                            d,
+                            &queries,
+                        )
+                        .unwrap(),
+                    );
+                });
+                println!("{}", mp.report());
+                println!(
+                    "  -> {:.1} M MAC/s (batch {b}); NOTE: interpret-mode \
+                     Pallas on CPU — structure check, not a TPU perf proxy",
+                    (b * k * m * d) as f64 / mp.median.as_secs_f64() / 1e6
+                );
+            } else {
+                eprintln!("[kernels bench] artifact geometry differs; skipping pjrt timing");
+            }
+        }
+        Err(e) => {
+            eprintln!("[kernels bench] artifacts unavailable ({e}); native only");
+        }
+    }
+}

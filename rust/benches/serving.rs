@@ -1,0 +1,165 @@
+//! Serving-path benchmark (EXPERIMENTS.md section Perf): end-to-end
+//! coordinator throughput/latency under closed-loop load, ICQ two-step vs
+//! full-ADC searchers, plus batching-policy sensitivity.
+
+use std::sync::Arc;
+
+use icq::bench::timing::bench;
+use icq::config::{SearchConfig, ServeConfig};
+use icq::coordinator::server::closed_loop_load;
+use icq::coordinator::{BatchSearcher, Coordinator, NativeSearcher};
+use icq::core::{Hit, Matrix, Rng};
+use icq::index::{search_adc, EncodedIndex, OpCounter};
+use icq::quantizer::icq::{Icq, IcqOpts};
+
+/// Full-ADC searcher (the baseline serving path).
+struct AdcSearcher {
+    index: Arc<EncodedIndex>,
+    ops: Arc<OpCounter>,
+}
+
+impl BatchSearcher for AdcSearcher {
+    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
+        let mut out = Vec::with_capacity(queries.rows());
+        for qi in 0..queries.rows() {
+            out.push(search_adc::search(
+                &self.index,
+                queries.row(qi),
+                top_k,
+                &self.ops,
+            ));
+        }
+        out
+    }
+
+    fn dim(&self) -> usize {
+        self.index.dim()
+    }
+}
+
+/// Clustered heteroscedastic corpus (see kernels bench note): returns the
+/// index plus cluster centers so load generators can draw in-distribution
+/// queries.
+fn build_index(
+    n: usize,
+    d: usize,
+    k: usize,
+    m: usize,
+) -> (Arc<EncodedIndex>, Arc<Matrix>) {
+    let mut rng = Rng::new(42);
+    let n_clusters = 32;
+    let centers = Matrix::from_fn(n_clusters, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 4.0 } else { 0.4 }
+    });
+    let x = Matrix::from_fn(n, d, |i, j| {
+        centers.get(i % n_clusters, j)
+            + rng.normal_f32() * if j % 4 == 0 { 0.8 } else { 0.2 }
+    });
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k, m, fast_k: 0, kmeans_iters: 8, prior_steps: 200, seed: 0 },
+    );
+    (
+        Arc::new(EncodedIndex::build_icq(&icq, &x, vec![0; n])),
+        Arc::new(centers),
+    )
+}
+
+/// In-distribution query: cluster center + small noise.
+fn make_query(centers: &Matrix, i: usize) -> Vec<f32> {
+    let mut r = Rng::new(i as u64 ^ 0x9e37_79b9);
+    let c = r.below(centers.rows());
+    (0..centers.cols())
+        .map(|j| centers.get(c, j) + r.normal_f32() * 0.2)
+        .collect()
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast")
+        || std::env::var("ICQ_BENCH_FAST").is_ok();
+    let (n, qn) = if fast { (5_000, 200) } else { (50_000, 2_000) };
+    let (d, k, m) = (32, 8, 256);
+    eprintln!("[serving bench] building index n={n} d={d} K={k} m={m}...");
+    let (index, centers) = build_index(n, d, k, m);
+
+    // --- raw searcher latency (no coordinator) ---
+    let ops = OpCounter::new();
+    let q = make_query(&centers, 7);
+    let m1 = bench("search/icq-two-step (1 query)", || {
+        icq::bench::timing::black_box(icq::index::search_icq::search(
+            &index,
+            &q,
+            icq::index::search_icq::IcqSearchOpts { k: 10, margin_scale: 1.0 },
+            &ops,
+        ));
+    });
+    println!("{}", m1.report());
+    let m2 = bench("search/full-adc (1 query)", || {
+        icq::bench::timing::black_box(search_adc::search(&index, &q, 10, &ops));
+    });
+    println!("{}", m2.report());
+    println!(
+        "speedup icq/adc = {:.2}x  (refine_rate={:.3})",
+        m2.median.as_secs_f64() / m1.median.as_secs_f64(),
+        ops.refine_rate(),
+    );
+
+    // --- coordinator end-to-end, both searchers ---
+    for (label, searcher) in [
+        (
+            "icq",
+            Arc::new(NativeSearcher::new(index.clone(), SearchConfig::default()))
+                as Arc<dyn BatchSearcher>,
+        ),
+        (
+            "adc",
+            Arc::new(AdcSearcher {
+                index: index.clone(),
+                ops: Arc::new(OpCounter::new()),
+            }) as Arc<dyn BatchSearcher>,
+        ),
+    ] {
+        let coord = Arc::new(Coordinator::start(
+            searcher,
+            ServeConfig {
+                max_batch: 16,
+                max_wait_us: 200,
+                workers: 4,
+                max_inflight: 4096,
+            },
+        ));
+        let cs = centers.clone();
+        let tput =
+            closed_loop_load(&coord, move |i| make_query(&cs, i), 8, qn / 8, 10);
+        println!("serve/{label}: {tput:.0} qps | {}", coord.metrics.summary());
+    }
+
+    // --- batching policy sweep ---
+    for max_batch in [1usize, 4, 16, 64] {
+        let searcher =
+            Arc::new(NativeSearcher::new(index.clone(), SearchConfig::default()));
+        let coord = Arc::new(Coordinator::start(
+            searcher,
+            ServeConfig {
+                max_batch,
+                max_wait_us: 200,
+                workers: 4,
+                max_inflight: 4096,
+            },
+        ));
+        let cs = centers.clone();
+        let tput = closed_loop_load(
+            &coord,
+            move |i| make_query(&cs, i + 999),
+            8,
+            qn / 8,
+            10,
+        );
+        println!(
+            "serve/batch={max_batch}: {tput:.0} qps p50={}us p99={}us mean_batch={:.1}",
+            coord.metrics.latency_percentile_us(0.5),
+            coord.metrics.latency_percentile_us(0.99),
+            coord.metrics.mean_batch_size(),
+        );
+    }
+}

@@ -1,0 +1,91 @@
+//! Minimal ASCII scatter/line chart for terminal-readable figures.
+
+/// One labeled series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render series into a fixed-size ASCII grid with axes and a legend.
+pub fn plot(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) -> String {
+    const W: usize = 64;
+    const H: usize = 18;
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let pts: Vec<(f64, f64)> =
+        series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; W]; H];
+    for (si, s) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in &s.points {
+            let col = (((x - xmin) / (xmax - xmin)) * (W - 1) as f64).round() as usize;
+            let row = (((y - ymin) / (ymax - ymin)) * (H - 1) as f64).round() as usize;
+            grid[H - 1 - row.min(H - 1)][col.min(W - 1)] = mark;
+        }
+    }
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("{ylabel} (top={ymax:.3}, bottom={ymin:.3})\n"));
+    for row in &grid {
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(W));
+    out.push('\n');
+    out.push_str(&format!(
+        "{xlabel}: {xmin:.3} .. {xmax:.3}\nlegend: "
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", marks[si % marks.len()], s.label));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_and_legend() {
+        let s = vec![
+            Series { label: "ICQ".into(), points: vec![(1.0, 0.5), (2.0, 0.9)] },
+            Series { label: "SQ".into(), points: vec![(1.0, 0.4), (2.0, 0.7)] },
+        ];
+        let out = plot("Fig", "ops", "MAP", &s);
+        assert!(out.contains('*'));
+        assert!(out.contains('o'));
+        assert!(out.contains("*=ICQ"));
+        assert!(out.contains("o=SQ"));
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        assert!(plot("t", "x", "y", &[]).contains("no data"));
+    }
+
+    #[test]
+    fn degenerate_ranges_safe() {
+        let s = vec![Series { label: "a".into(), points: vec![(1.0, 1.0)] }];
+        let out = plot("t", "x", "y", &s);
+        assert!(out.contains('*'));
+    }
+}

@@ -1,0 +1,71 @@
+//! Tiny CSV writer for bench results.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+/// A CSV table (header + rows of stringified cells).
+#[derive(Clone, Debug, Default)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        CsvTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_string_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write under target/bench-results/<name>.csv (dir created).
+    pub fn save(&self, name: &str) -> Result<PathBuf> {
+        let dir = Path::new("target/bench-results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.to_string_csv().as_bytes())?;
+        Ok(path)
+    }
+}
+
+/// Format helper.
+pub fn f(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_csv() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.push(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_string_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = CsvTable::new(&["a"]);
+        t.push(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Figure/table regeneration harness.
+//!
+//! Each paper artifact (Table 1, Figs. 1-6) has a generator in
+//! [`figures`]; `cargo bench --bench figN` and `icq bench-figure figN`
+//! both call into it. Results are printed as the paper's rows/series
+//! (CSV) plus an ASCII chart, and written to `target/bench-results/`.
+
+pub mod ascii_plot;
+pub mod csv;
+pub mod figures;
+pub mod timing;
+pub mod workload;
+
+pub use figures::{run_figure, FigureResult};
+pub use workload::{run_method, MethodRun, RunSpec};

@@ -1,0 +1,108 @@
+//! Micro-benchmark timing harness (the vendored registry has no
+//! criterion; see DESIGN.md section Substitutions).
+//!
+//! Warmup + timed iterations with median/p95 reporting and a black_box
+//! to defeat dead-code elimination. Used by `cargo bench` targets.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-exported black_box.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<5} mean={:>10.3?} median={:>10.3?} p95={:>10.3?} min={:>10.3?}",
+            self.name, self.iters, self.mean, self.median, self.p95, self.min
+        )
+    }
+
+    /// items/second at the median, given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: usize) -> f64 {
+        items_per_iter as f64 / self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` for ~`target` total (after warmup), at least `min_iters`.
+pub fn bench(name: &str, mut f: impl FnMut()) -> Measurement {
+    bench_config(name, Duration::from_millis(700), 5, &mut f)
+}
+
+/// Configurable variant.
+pub fn bench_config(
+    name: &str,
+    target: Duration,
+    min_iters: usize,
+    f: &mut dyn FnMut(),
+) -> Measurement {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let single = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = ((target.as_secs_f64() / single.as_secs_f64()) as usize)
+        .clamp(min_iters, 100_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean,
+        median: samples[samples.len() / 2],
+        p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        min: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = bench_config(
+            "noop-ish",
+            Duration::from_millis(5),
+            3,
+            &mut || {
+                black_box((0..100).sum::<usize>());
+            },
+        );
+        assert!(m.iters >= 3);
+        assert!(m.median <= m.p95);
+        assert!(m.min <= m.median);
+        assert!(m.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Measurement {
+            name: "t".into(),
+            iters: 1,
+            mean: Duration::from_millis(10),
+            median: Duration::from_millis(10),
+            p95: Duration::from_millis(10),
+            min: Duration::from_millis(10),
+        };
+        assert!((m.throughput(100) - 10_000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,10 @@
+//! Engine configuration.
+//!
+//! A single [`EngineConfig`] drives index building, search, and serving.
+//! Configs load from simple `key = value` files (no extra dependencies on
+//! the request path) and from CLI overrides; every field has a sane
+//! default matching the paper's canonical operating point.
+
+pub mod schema;
+
+pub use schema::{EngineConfig, MethodKind, SearchConfig, ServeConfig};

@@ -1,0 +1,235 @@
+//! Configuration schema + the `key = value` loader.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Which quantization method to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    Icq,
+    Pq,
+    Opq,
+    Cq,
+    Sq,
+    Exact,
+}
+
+impl MethodKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "icq" => MethodKind::Icq,
+            "pq" => MethodKind::Pq,
+            "opq" => MethodKind::Opq,
+            "cq" => MethodKind::Cq,
+            "sq" => MethodKind::Sq,
+            "exact" => MethodKind::Exact,
+            other => anyhow::bail!("unknown method '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodKind::Icq => "ICQ",
+            MethodKind::Pq => "PQ",
+            MethodKind::Opq => "OPQ",
+            MethodKind::Cq => "CQ",
+            MethodKind::Sq => "SQ",
+            MethodKind::Exact => "Exact",
+        }
+    }
+}
+
+/// Search-time knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchConfig {
+    /// neighbors returned per query.
+    pub top_k: usize,
+    /// sigma margin scale (1.0 = paper eq. 11).
+    pub margin_scale: f32,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig { top_k: 10, margin_scale: 1.0 }
+    }
+}
+
+/// Serving-layer knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// max queries folded into one batch.
+    pub max_batch: usize,
+    /// max microseconds a query waits for batch-mates.
+    pub max_wait_us: u64,
+    /// worker tasks executing batches.
+    pub workers: usize,
+    /// admission-control bound on in-flight queries.
+    pub max_inflight: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 16,
+            max_wait_us: 200,
+            workers: 2,
+            max_inflight: 1024,
+        }
+    }
+}
+
+/// Top-level engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// dataset name (synthetic1-3 | mnist | cifar10).
+    pub dataset: String,
+    /// database size (0 = dataset default).
+    pub n_database: usize,
+    /// query count.
+    pub n_queries: usize,
+    pub method: MethodKind,
+    /// number of codebooks K.
+    pub k: usize,
+    /// codewords per book m.
+    pub m: usize,
+    /// ICQ fast-group size |K| (0 = auto).
+    pub fast_k: usize,
+    /// supervised embedding output dim (SQ/ICQ pipelines).
+    pub d_embed: usize,
+    pub seed: u64,
+    pub search: SearchConfig,
+    pub serve: ServeConfig,
+    /// artifacts directory for the PJRT runtime.
+    pub artifacts_dir: String,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            dataset: "synthetic1".into(),
+            n_database: 0,
+            n_queries: 200,
+            method: MethodKind::Icq,
+            k: 8,
+            m: 256,
+            fast_k: 0,
+            d_embed: 16,
+            seed: 0,
+            search: SearchConfig::default(),
+            serve: ServeConfig::default(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Parse a `key = value` config file ('#' comments, blank lines ok).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_str_pairs(&text)
+    }
+
+    pub fn from_str_pairs(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let mut cfg = EngineConfig::default();
+        for (k, v) in &map {
+            cfg.apply(k, v)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one override (also used by the CLI's `--set k=v`).
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
+        let parse_usize =
+            |v: &str| v.parse::<usize>().with_context(|| format!("{key}={v}"));
+        match key {
+            "dataset" => self.dataset = value.to_string(),
+            "n_database" => self.n_database = parse_usize(value)?,
+            "n_queries" => self.n_queries = parse_usize(value)?,
+            "method" => self.method = MethodKind::parse(value)?,
+            "k" => self.k = parse_usize(value)?,
+            "m" => self.m = parse_usize(value)?,
+            "fast_k" => self.fast_k = parse_usize(value)?,
+            "d_embed" => self.d_embed = parse_usize(value)?,
+            "seed" => self.seed = value.parse()?,
+            "search.top_k" => self.search.top_k = parse_usize(value)?,
+            "search.margin_scale" => self.search.margin_scale = value.parse()?,
+            "serve.max_batch" => self.serve.max_batch = parse_usize(value)?,
+            "serve.max_wait_us" => self.serve.max_wait_us = value.parse()?,
+            "serve.workers" => self.serve.workers = parse_usize(value)?,
+            "serve.max_inflight" => self.serve.max_inflight = parse_usize(value)?,
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            other => anyhow::bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Code length in bits at this geometry.
+    pub fn code_bits(&self) -> usize {
+        self.k * (usize::BITS - (self.m - 1).leading_zeros()) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_papers_operating_point() {
+        let c = EngineConfig::default();
+        assert_eq!(c.k, 8);
+        assert_eq!(c.m, 256);
+        assert_eq!(c.code_bits(), 64);
+        assert_eq!(c.search.margin_scale, 1.0);
+    }
+
+    #[test]
+    fn parses_pairs_with_comments() {
+        let c = EngineConfig::from_str_pairs(
+            "# comment\n dataset = mnist \n k=4 # inline\n method = pq\n\
+             search.top_k = 50\nserve.max_batch=32\n",
+        )
+        .unwrap();
+        assert_eq!(c.dataset, "mnist");
+        assert_eq!(c.k, 4);
+        assert_eq!(c.method, MethodKind::Pq);
+        assert_eq!(c.search.top_k, 50);
+        assert_eq!(c.serve.max_batch, 32);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(EngineConfig::from_str_pairs("nope = 1").is_err());
+        assert!(EngineConfig::from_str_pairs("k = many").is_err());
+        assert!(EngineConfig::from_str_pairs("method = lsh").is_err());
+        assert!(EngineConfig::from_str_pairs("k 4").is_err());
+    }
+
+    #[test]
+    fn method_names_roundtrip() {
+        for (s, m) in [
+            ("icq", MethodKind::Icq),
+            ("pq", MethodKind::Pq),
+            ("opq", MethodKind::Opq),
+            ("cq", MethodKind::Cq),
+            ("sq", MethodKind::Sq),
+            ("exact", MethodKind::Exact),
+        ] {
+            assert_eq!(MethodKind::parse(s).unwrap(), m);
+            assert_eq!(MethodKind::parse(&m.name().to_lowercase()).unwrap(), m);
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Admission control: a counting semaphore bounding in-flight queries.
+//! When the bound is hit, new queries are rejected immediately
+//! (load-shedding) rather than queued unboundedly — tail latency stays
+//! bounded under overload. std-only (Mutex + Condvar).
+
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner {
+    available: Mutex<usize>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+/// Admission controller (cheaply cloneable).
+#[derive(Clone)]
+pub struct Admission {
+    inner: Arc<Inner>,
+}
+
+/// RAII permit for one in-flight query.
+pub struct Permit {
+    inner: Arc<Inner>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut avail = self.inner.available.lock().unwrap();
+        *avail += 1;
+        self.inner.cv.notify_one();
+    }
+}
+
+impl Admission {
+    pub fn new(capacity: usize) -> Self {
+        Admission {
+            inner: Arc::new(Inner {
+                available: Mutex::new(capacity),
+                cv: Condvar::new(),
+                capacity,
+            }),
+        }
+    }
+
+    /// Try to admit one query; `None` = shed.
+    pub fn try_admit(&self) -> Option<Permit> {
+        let mut avail = self.inner.available.lock().unwrap();
+        if *avail == 0 {
+            return None;
+        }
+        *avail -= 1;
+        Some(Permit { inner: self.inner.clone() })
+    }
+
+    /// Block until admitted (cooperative callers, e.g. benches).
+    pub fn admit(&self) -> Permit {
+        let mut avail = self.inner.available.lock().unwrap();
+        while *avail == 0 {
+            avail = self.inner.cv.wait(avail).unwrap();
+        }
+        *avail -= 1;
+        Permit { inner: self.inner.clone() }
+    }
+
+    pub fn available(&self) -> usize {
+        *self.inner.available.lock().unwrap()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sheds_when_full() {
+        let adm = Admission::new(2);
+        let p1 = adm.try_admit().unwrap();
+        let _p2 = adm.try_admit().unwrap();
+        assert!(adm.try_admit().is_none());
+        drop(p1);
+        assert!(adm.try_admit().is_some());
+    }
+
+    #[test]
+    fn admit_waits_for_release() {
+        let adm = Admission::new(1);
+        let p = adm.admit();
+        let adm2 = adm.clone();
+        let waiter = std::thread::spawn(move || {
+            let _p = adm2.admit();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!waiter.is_finished());
+        drop(p);
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn capacity_restored() {
+        let adm = Admission::new(3);
+        {
+            let _a = adm.admit();
+            let _b = adm.admit();
+            assert_eq!(adm.available(), 1);
+        }
+        assert_eq!(adm.available(), 3);
+    }
+}

@@ -1,0 +1,119 @@
+//! Dynamic batcher: folds queries arriving on a channel into batches of
+//! up to `max_batch`, waiting at most `max_wait` for batch-mates — the
+//! standard latency/throughput knob of serving systems (vLLM-style),
+//! implemented over bounded std::sync::mpsc queues.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::time::{Duration, Instant};
+
+use super::server::PendingQuery;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+/// Drain `rx`, emitting batches to `tx`. The first query of a batch
+/// starts the max_wait clock; the batch closes when full or timed out.
+/// Returns when the input channel closes (flushing the tail batch).
+pub fn run_batcher(
+    rx: Receiver<PendingQuery>,
+    tx: SyncSender<Vec<PendingQuery>>,
+    policy: BatchPolicy,
+) {
+    loop {
+        // block for the batch head
+        let Ok(first) = rx.recv() else {
+            return; // input closed
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + policy.max_wait;
+        while batch.len() < policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(q) => batch.push(q),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    let _ = tx.send(batch);
+                    return;
+                }
+            }
+        }
+        if tx.send(batch).is_err() {
+            return; // downstream closed
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn q(top_k: usize) -> PendingQuery {
+        let (respond, _rx) = mpsc::sync_channel(1);
+        PendingQuery {
+            vector: vec![0.0; 4],
+            top_k,
+            enqueued: Instant::now(),
+            respond,
+        }
+    }
+
+    #[test]
+    fn fills_batches_up_to_max() {
+        let (in_tx, in_rx) = mpsc::sync_channel(64);
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        let policy =
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        let h = std::thread::spawn(move || run_batcher(in_rx, out_tx, policy));
+        for _ in 0..10 {
+            in_tx.send(q(5)).unwrap();
+        }
+        let b1 = out_rx.recv().unwrap();
+        let b2 = out_rx.recv().unwrap();
+        assert_eq!(b1.len(), 4);
+        assert_eq!(b2.len(), 4);
+        drop(in_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_timeout() {
+        let (in_tx, in_rx) = mpsc::sync_channel(64);
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        let policy = BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(10),
+        };
+        let h = std::thread::spawn(move || run_batcher(in_rx, out_tx, policy));
+        in_tx.send(q(5)).unwrap();
+        in_tx.send(q(5)).unwrap();
+        let start = Instant::now();
+        let b = out_rx.recv().unwrap();
+        assert_eq!(b.len(), 2);
+        assert!(start.elapsed() < Duration::from_millis(500));
+        drop(in_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn flushes_on_input_close() {
+        let (in_tx, in_rx) = mpsc::sync_channel(4);
+        let (out_tx, out_rx) = mpsc::sync_channel(4);
+        let policy =
+            BatchPolicy { max_batch: 10, max_wait: Duration::from_secs(60) };
+        let h = std::thread::spawn(move || run_batcher(in_rx, out_tx, policy));
+        in_tx.send(q(1)).unwrap();
+        drop(in_tx);
+        let b = out_rx.recv().unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(out_rx.recv().is_err());
+        h.join().unwrap();
+    }
+}

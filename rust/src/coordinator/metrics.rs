@@ -1,0 +1,107 @@
+//! Serving metrics: counters + log2-bucketed latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 32; // log2 us buckets: [1us .. ~35min]
+
+/// Lock-free metrics shared across the coordinator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub queries_in: AtomicU64,
+    pub queries_done: AtomicU64,
+    pub queries_rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_size_sum: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency_us(&self, us: u64) {
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size_sum.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_size_sum.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Approximate latency percentile from the histogram (upper bound of
+    /// the containing bucket).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self
+            .latency_us
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.latency_us.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "queries={} done={} rejected={} batches={} mean_batch={:.2} \
+             p50={}us p99={}us",
+            self.queries_in.load(Ordering::Relaxed),
+            self.queries_done.load(Ordering::Relaxed),
+            self.queries_rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.latency_percentile_us(0.5),
+            self.latency_percentile_us(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_stats() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.mean_batch_size(), 6.0);
+    }
+
+    #[test]
+    fn latency_percentiles_monotone() {
+        let m = Metrics::new();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            m.record_latency_us(us);
+        }
+        let p50 = m.latency_percentile_us(0.5);
+        let p99 = m.latency_percentile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 64, "p50 {p50}");
+        assert!(p99 >= 65536, "p99 {p99}");
+    }
+
+    #[test]
+    fn empty_percentile_zero() {
+        assert_eq!(Metrics::new().latency_percentile_us(0.9), 0);
+    }
+}

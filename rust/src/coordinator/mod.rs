@@ -1,0 +1,29 @@
+//! L3 serving coordinator: query router, dynamic batcher, worker pool,
+//! admission control, metrics.
+//!
+//! Request flow:
+//!
+//! ```text
+//! client -> [backpressure permit] -> ingress queue -> batcher
+//!   (max_batch / max_wait) -> router (least-loaded) -> worker pool ->
+//!   BatchSearcher (native scan or PJRT LUT + two-step scan) -> responses
+//! ```
+//!
+//! The runtime is thread-based (the sandbox's vendored registry has no
+//! tokio; DESIGN.md section Substitutions): bounded std::sync::mpsc
+//! queues, one OS thread per worker, a dedicated batcher thread, and a
+//! thread-per-connection TCP front-end. The searcher is pluggable:
+//! [`NativeSearcher`] runs the pure-rust two-step scan; the
+//! XLA-runtime-backed searcher builds LUTs through the AOT graphs
+//! (python-free at runtime; see `examples/serve_pipeline.rs`).
+
+pub mod backpressure;
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use metrics::Metrics;
+pub use server::{Coordinator, QueryRequest, QueryResponse};
+pub use worker::{BatchSearcher, NativeSearcher};

@@ -1,0 +1,128 @@
+//! Batch router: distributes closed batches across the worker pool.
+//!
+//! Policy: least-loaded (largest free queue capacity) with round-robin
+//! tie-break — keeps per-worker queues short so p99 does not collapse
+//! onto the slowest worker under burst load.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+
+use super::server::PendingQuery;
+
+/// Routes batches to worker queues.
+pub struct Router {
+    workers: Vec<SyncSender<Vec<PendingQuery>>>,
+    loads: Vec<std::sync::Arc<AtomicUsize>>,
+    rr: AtomicUsize,
+}
+
+impl Router {
+    /// `workers` paired with per-worker load gauges (incremented here,
+    /// decremented by the worker when a batch completes).
+    pub fn new(
+        workers: Vec<SyncSender<Vec<PendingQuery>>>,
+        loads: Vec<std::sync::Arc<AtomicUsize>>,
+    ) -> Self {
+        assert!(!workers.is_empty(), "router needs at least one worker");
+        assert_eq!(workers.len(), loads.len());
+        Router { workers, loads, rr: AtomicUsize::new(0) }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Pick the least-loaded worker, round-robin on ties; falls back to a
+    /// blocking send on the chosen queue. Returns false when all workers
+    /// are gone.
+    pub fn dispatch(&self, batch: Vec<PendingQuery>) -> bool {
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        let n = self.workers.len();
+        let mut best = start % n;
+        let mut best_load = self.loads[best].load(Ordering::Relaxed);
+        for off in 1..n {
+            let i = (start + off) % n;
+            let load = self.loads[i].load(Ordering::Relaxed);
+            if load < best_load {
+                best = i;
+                best_load = load;
+            }
+        }
+        self.loads[best].fetch_add(batch.len(), Ordering::Relaxed);
+        match self.workers[best].try_send(batch) {
+            Ok(()) => true,
+            Err(TrySendError::Full(batch)) => {
+                // chosen queue full: blocking send (backpressure upstream)
+                self.workers[best].send(batch).is_ok()
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        }
+    }
+}
+
+/// Run the routing loop: drain closed batches and dispatch them.
+pub fn run_router(rx: Receiver<Vec<PendingQuery>>, router: Router) {
+    while let Ok(batch) = rx.recv() {
+        if !router.dispatch(batch) {
+            return; // all workers gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn q() -> PendingQuery {
+        let (respond, _rx) = mpsc::sync_channel(1);
+        PendingQuery {
+            vector: vec![0.0],
+            top_k: 1,
+            enqueued: Instant::now(),
+            respond,
+        }
+    }
+
+    #[test]
+    fn spreads_across_workers() {
+        let (t1, r1) = mpsc::sync_channel(16);
+        let (t2, r2) = mpsc::sync_channel(16);
+        let loads =
+            vec![Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(0))];
+        let router = Router::new(vec![t1, t2], loads);
+        for _ in 0..8 {
+            assert!(router.dispatch(vec![q()]));
+        }
+        let mut c1 = 0;
+        let mut c2 = 0;
+        while let Ok(b) = r1.try_recv() {
+            c1 += b.len();
+        }
+        while let Ok(b) = r2.try_recv() {
+            c2 += b.len();
+        }
+        assert_eq!(c1 + c2, 8);
+        assert!(c1 > 0 && c2 > 0, "one worker starved: {c1}/{c2}");
+    }
+
+    #[test]
+    fn prefers_less_loaded_worker() {
+        let (t1, _r1) = mpsc::sync_channel(16);
+        let (t2, r2) = mpsc::sync_channel(16);
+        let l1 = Arc::new(AtomicUsize::new(10)); // worker 1 busy
+        let l2 = Arc::new(AtomicUsize::new(0));
+        let router = Router::new(vec![t1, t2], vec![l1, l2.clone()]);
+        for _ in 0..4 {
+            router.dispatch(vec![q()]);
+        }
+        let mut c2 = 0;
+        while let Ok(b) = r2.try_recv() {
+            c2 += b.len();
+        }
+        assert_eq!(c2, 4, "loaded worker should have been avoided");
+        assert_eq!(l2.load(Ordering::Relaxed), 4);
+    }
+}

@@ -1,0 +1,326 @@
+//! The coordinator facade: wires batcher -> router -> workers and exposes
+//! a blocking `query` API plus a line-delimited JSON TCP front-end.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::atomic::AtomicUsize;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::backpressure::Admission;
+use super::batcher::{run_batcher, BatchPolicy};
+use super::metrics::Metrics;
+use super::router::{run_router, Router};
+use super::worker::{run_worker, BatchSearcher};
+use crate::config::ServeConfig;
+use crate::core::json::Json;
+use crate::core::Hit;
+
+/// A query in flight inside the coordinator.
+pub struct PendingQuery {
+    pub vector: Vec<f32>,
+    pub top_k: usize,
+    pub enqueued: Instant,
+    /// one-shot response channel (bounded(1) std mpsc).
+    pub respond: SyncSender<QueryResponse>,
+}
+
+/// Client-side request.
+#[derive(Clone, Debug)]
+pub struct QueryRequest {
+    pub vector: Vec<f32>,
+    pub top_k: usize,
+}
+
+/// Search response.
+#[derive(Clone, Debug)]
+pub struct QueryResponse {
+    pub hits: Vec<Hit>,
+    pub latency: Duration,
+    pub worker: usize,
+}
+
+/// The running coordinator (threads spawned on construction; they exit
+/// when the Coordinator is dropped and the channels disconnect).
+pub struct Coordinator {
+    ingress: SyncSender<PendingQuery>,
+    admission: Admission,
+    pub metrics: Arc<Metrics>,
+    dim: usize,
+}
+
+impl Coordinator {
+    /// Spawn batcher + router + `cfg.workers` worker threads.
+    pub fn start(searcher: Arc<dyn BatchSearcher>, cfg: ServeConfig) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let dim = searcher.dim();
+
+        let (ingress_tx, ingress_rx) =
+            mpsc::sync_channel::<PendingQuery>(cfg.max_inflight.max(1));
+        let (batch_tx, batch_rx) = mpsc::sync_channel(64);
+        let policy = BatchPolicy {
+            max_batch: cfg.max_batch.max(1),
+            max_wait: Duration::from_micros(cfg.max_wait_us),
+        };
+        std::thread::Builder::new()
+            .name("icq-batcher".into())
+            .spawn(move || run_batcher(ingress_rx, batch_tx, policy))
+            .expect("spawn batcher");
+
+        let mut worker_txs = Vec::new();
+        let mut loads = Vec::new();
+        for id in 0..cfg.workers.max(1) {
+            let (tx, rx) = mpsc::sync_channel(8);
+            let load = Arc::new(AtomicUsize::new(0));
+            worker_txs.push(tx);
+            loads.push(load.clone());
+            let (s, m) = (searcher.clone(), metrics.clone());
+            std::thread::Builder::new()
+                .name(format!("icq-worker-{id}"))
+                .spawn(move || run_worker(id, rx, s, m, load))
+                .expect("spawn worker");
+        }
+        let router = Router::new(worker_txs, loads);
+        std::thread::Builder::new()
+            .name("icq-router".into())
+            .spawn(move || run_router(batch_rx, router))
+            .expect("spawn router");
+
+        Coordinator {
+            ingress: ingress_tx,
+            admission: Admission::new(cfg.max_inflight.max(1)),
+            metrics,
+            dim,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Submit a query; blocks until a worker answers. Errors on shed
+    /// (admission full) or malformed input.
+    pub fn query(&self, req: QueryRequest) -> Result<QueryResponse> {
+        anyhow::ensure!(
+            req.vector.len() == self.dim,
+            "query dim {} != index dim {}",
+            req.vector.len(),
+            self.dim
+        );
+        anyhow::ensure!(req.top_k >= 1, "top_k must be >= 1");
+        let Some(_permit) = self.admission.try_admit() else {
+            self.metrics
+                .queries_rejected
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            anyhow::bail!("overloaded: admission limit reached");
+        };
+        self.metrics
+            .queries_in
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (tx, rx) = mpsc::sync_channel(1);
+        let pending = PendingQuery {
+            vector: req.vector,
+            top_k: req.top_k,
+            enqueued: Instant::now(),
+            respond: tx,
+        };
+        self.ingress
+            .send(pending)
+            .map_err(|_| anyhow::anyhow!("coordinator shut down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped query"))
+    }
+
+    /// Serve a line-delimited JSON protocol on `addr`
+    /// (thread-per-connection):
+    ///   request : {"vector": [f32...], "top_k": 10}
+    ///   response: {"ids": [...], "dists": [...], "latency_us": ...}
+    pub fn serve_tcp(self: Arc<Self>, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        eprintln!("[icq] serving on {addr}");
+        for stream in listener.incoming() {
+            let Ok(sock) = stream else { continue };
+            let me = self.clone();
+            std::thread::spawn(move || {
+                let mut writer = match sock.try_clone() {
+                    Ok(w) => w,
+                    Err(_) => return,
+                };
+                let reader = BufReader::new(sock);
+                for line in reader.lines() {
+                    let Ok(line) = line else { break };
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    let reply = match me.handle_json(&line) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            let mut obj = std::collections::BTreeMap::new();
+                            obj.insert(
+                                "error".to_string(),
+                                Json::Str(e.to_string()),
+                            );
+                            Json::Obj(obj).to_string_json()
+                        }
+                    };
+                    if writer.write_all(reply.as_bytes()).is_err()
+                        || writer.write_all(b"\n").is_err()
+                    {
+                        break;
+                    }
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Handle one JSON request line (exposed for tests/benches).
+    pub fn handle_json(&self, line: &str) -> Result<String> {
+        let req = Json::parse(line)?;
+        let vector: Vec<f32> = req
+            .get("vector")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing 'vector' array"))?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+            .collect();
+        anyhow::ensure!(
+            vector.iter().all(|v| v.is_finite()),
+            "non-numeric vector entry"
+        );
+        let top_k = req.get("top_k").and_then(|v| v.as_usize()).unwrap_or(10);
+        let resp = self.query(QueryRequest { vector, top_k })?;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert(
+            "ids".to_string(),
+            Json::Arr(resp.hits.iter().map(|h| Json::Num(h.id as f64)).collect()),
+        );
+        obj.insert(
+            "dists".to_string(),
+            Json::Arr(
+                resp.hits.iter().map(|h| Json::Num(h.dist as f64)).collect(),
+            ),
+        );
+        obj.insert(
+            "latency_us".to_string(),
+            Json::Num(resp.latency.as_micros() as f64),
+        );
+        Ok(Json::Obj(obj).to_string_json())
+    }
+}
+
+/// Drive a closed-loop load test against a coordinator from `threads`
+/// client threads for `queries_per_thread` queries each. Returns achieved
+/// throughput (queries/sec). Used by the serving bench and examples.
+pub fn closed_loop_load(
+    coord: &Arc<Coordinator>,
+    make_query: impl Fn(usize) -> Vec<f32> + Send + Sync,
+    threads: usize,
+    queries_per_thread: usize,
+    top_k: usize,
+) -> f64 {
+    let start = Instant::now();
+    let ok = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let coord = coord.clone();
+            let make_query = &make_query;
+            let ok = &ok;
+            scope.spawn(move || {
+                for i in 0..queries_per_thread {
+                    let vector = make_query(t * queries_per_thread + i);
+                    if coord.query(QueryRequest { vector, top_k }).is_ok() {
+                        ok.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let done = ok.load(std::sync::atomic::Ordering::Relaxed);
+    done as f64 / start.elapsed().as_secs_f64()
+}
+
+/// The receiver side of the one-shot pattern used by PendingQuery.
+pub type ResponseReceiver = Receiver<QueryResponse>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SearchConfig;
+    use crate::coordinator::worker::NativeSearcher;
+    use crate::core::{Matrix, Rng};
+    use crate::index::EncodedIndex;
+    use crate::quantizer::icq::{Icq, IcqOpts};
+
+    fn coordinator(workers: usize, max_inflight: usize) -> Coordinator {
+        let mut rng = Rng::new(1);
+        let x = Matrix::from_fn(300, 8, |_, j| {
+            rng.normal_f32() * if j % 2 == 0 { 3.0 } else { 0.3 }
+        });
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 4, m: 8, fast_k: 1, kmeans_iters: 5, prior_steps: 50, seed: 0 },
+        );
+        let idx = EncodedIndex::build_icq(&icq, &x, vec![0; 300]);
+        let searcher =
+            Arc::new(NativeSearcher::new(Arc::new(idx), SearchConfig::default()));
+        Coordinator::start(
+            searcher,
+            ServeConfig { max_batch: 4, max_wait_us: 200, workers, max_inflight },
+        )
+    }
+
+    #[test]
+    fn answers_queries() {
+        let c = coordinator(2, 64);
+        let resp =
+            c.query(QueryRequest { vector: vec![0.1; 8], top_k: 5 }).unwrap();
+        assert_eq!(resp.hits.len(), 5);
+        for w in resp.hits.windows(2) {
+            assert!(w[0].dist <= w[1].dist);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_dim() {
+        let c = coordinator(1, 8);
+        assert!(c
+            .query(QueryRequest { vector: vec![0.0; 3], top_k: 5 })
+            .is_err());
+    }
+
+    #[test]
+    fn concurrent_load_all_answered() {
+        let c = Arc::new(coordinator(3, 512));
+        let tput =
+            closed_loop_load(&c, |i| vec![(i % 7) as f32 * 0.3; 8], 8, 8, 3);
+        assert!(tput > 0.0);
+        assert_eq!(
+            c.metrics
+                .queries_done
+                .load(std::sync::atomic::Ordering::Relaxed),
+            64
+        );
+        assert!(c.metrics.mean_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn json_protocol_roundtrip() {
+        let c = coordinator(1, 8);
+        let reply = c
+            .handle_json(r#"{"vector":[0,0,0,0,0,0,0,0],"top_k":2}"#)
+            .unwrap();
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ids").unwrap().as_arr().unwrap().len(), 2);
+        assert!(v.get("latency_us").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn malformed_json_is_error_not_panic() {
+        let c = coordinator(1, 8);
+        assert!(c.handle_json("{nope").is_err());
+        assert!(c.handle_json(r#"{"vector": "not an array"}"#).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Worker pool: OS threads executing batches against a pluggable searcher.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use super::metrics::Metrics;
+use super::server::{PendingQuery, QueryResponse};
+use crate::config::SearchConfig;
+use crate::core::{Hit, Matrix};
+use crate::index::search_icq::{self, IcqSearchOpts};
+use crate::index::{EncodedIndex, OpCounter};
+
+/// A batch search backend. Implementations must be cheap to share
+/// (`Arc`) and safe to call from multiple worker threads.
+pub trait BatchSearcher: Send + Sync + 'static {
+    /// Search all rows of `queries`; returns one ranked hit list each.
+    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>>;
+
+    /// Dimensionality the searcher expects.
+    fn dim(&self) -> usize;
+}
+
+/// Pure-rust two-step ICQ searcher over an [`EncodedIndex`].
+pub struct NativeSearcher {
+    pub index: Arc<EncodedIndex>,
+    pub opts: IcqSearchOpts,
+    pub ops: Arc<OpCounter>,
+}
+
+impl NativeSearcher {
+    pub fn new(index: Arc<EncodedIndex>, cfg: SearchConfig) -> Self {
+        NativeSearcher {
+            index,
+            opts: IcqSearchOpts { k: cfg.top_k, margin_scale: cfg.margin_scale },
+            ops: Arc::new(OpCounter::new()),
+        }
+    }
+}
+
+impl BatchSearcher for NativeSearcher {
+    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
+        let opts = IcqSearchOpts { k: top_k, ..self.opts };
+        // workers are already parallel across batches; keep the per-batch
+        // scan serial to avoid nested-thread oversubscription
+        let mut out = Vec::with_capacity(queries.rows());
+        for qi in 0..queries.rows() {
+            out.push(search_icq::search(
+                &self.index,
+                queries.row(qi),
+                opts,
+                &self.ops,
+            ));
+        }
+        out
+    }
+
+    fn dim(&self) -> usize {
+        self.index.dim()
+    }
+}
+
+/// One worker loop: drain batches from the queue, search, resolve the
+/// per-query response channels, decrement the router's load gauge.
+pub fn run_worker(
+    id: usize,
+    rx: Receiver<Vec<PendingQuery>>,
+    searcher: Arc<dyn BatchSearcher>,
+    metrics: Arc<Metrics>,
+    load: Arc<AtomicUsize>,
+) {
+    while let Ok(batch) = rx.recv() {
+        if batch.is_empty() {
+            continue;
+        }
+        let d = searcher.dim();
+        let mut data = Vec::with_capacity(batch.len() * d);
+        for q in &batch {
+            data.extend_from_slice(&q.vector);
+        }
+        let queries = Matrix::from_vec(batch.len(), d, data);
+        let top_k = batch.iter().map(|q| q.top_k).max().unwrap_or(10);
+        let results = searcher.search_batch(&queries, top_k);
+        metrics.record_batch(batch.len());
+        load.fetch_sub(batch.len(), Ordering::Relaxed);
+        for (q, mut hits) in batch.into_iter().zip(results) {
+            hits.truncate(q.top_k);
+            let latency = q.enqueued.elapsed();
+            metrics.record_latency_us(latency.as_micros() as u64);
+            metrics.queries_done.fetch_add(1, Ordering::Relaxed);
+            let _ = q.respond.send(QueryResponse { hits, latency, worker: id });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+    use crate::quantizer::icq::{Icq, IcqOpts};
+
+    fn native() -> NativeSearcher {
+        let mut rng = Rng::new(3);
+        let x = Matrix::from_fn(200, 8, |_, j| {
+            rng.normal_f32() * if j % 2 == 0 { 3.0 } else { 0.3 }
+        });
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 4, m: 8, fast_k: 1, kmeans_iters: 5, prior_steps: 50, seed: 0 },
+        );
+        let idx = EncodedIndex::build_icq(&icq, &x, vec![0; 200]);
+        NativeSearcher::new(Arc::new(idx), SearchConfig::default())
+    }
+
+    #[test]
+    fn native_searcher_returns_ranked_hits() {
+        let s = native();
+        let q = Matrix::from_fn(3, 8, |_, _| 0.1);
+        let res = s.search_batch(&q, 5);
+        assert_eq!(res.len(), 3);
+        for hits in res {
+            assert_eq!(hits.len(), 5);
+            for w in hits.windows(2) {
+                assert!(w[0].dist <= w[1].dist);
+            }
+        }
+    }
+
+    #[test]
+    fn worker_resolves_queries_and_decrements_load() {
+        use std::sync::mpsc;
+        let searcher = Arc::new(native());
+        let metrics = Arc::new(Metrics::new());
+        let load = Arc::new(AtomicUsize::new(2));
+        let (tx, rx) = mpsc::sync_channel(4);
+        let h = {
+            let (s, m, l) = (searcher.clone(), metrics.clone(), load.clone());
+            std::thread::spawn(move || run_worker(0, rx, s, m, l))
+        };
+        let (rtx1, rrx1) = mpsc::sync_channel(1);
+        let (rtx2, rrx2) = mpsc::sync_channel(1);
+        let batch = vec![
+            PendingQuery {
+                vector: vec![0.1; 8],
+                top_k: 3,
+                enqueued: std::time::Instant::now(),
+                respond: rtx1,
+            },
+            PendingQuery {
+                vector: vec![-0.2; 8],
+                top_k: 2,
+                enqueued: std::time::Instant::now(),
+                respond: rtx2,
+            },
+        ];
+        tx.send(batch).unwrap();
+        let r1 = rrx1.recv().unwrap();
+        let r2 = rrx2.recv().unwrap();
+        assert_eq!(r1.hits.len(), 3);
+        assert_eq!(r2.hits.len(), 2);
+        assert_eq!(load.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.mean_batch_size(), 2.0);
+        drop(tx);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,262 @@
+//! Small dense linear algebra: cyclic-Jacobi symmetric eigensolver and the
+//! orthogonal-Procrustes solve built on it.
+//!
+//! Used at *training* time only (OPQ rotations, LDA-style supervised
+//! projections for the rust-native SQ baseline); d <= a few hundred, so a
+//! dependency-free O(d^3) Jacobi sweep is plenty.
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition of a symmetric matrix `a` (d x d, row-major).
+/// Returns (eigenvalues desc, eigenvectors as COLUMNS of the returned
+/// matrix, i.e. `vecs.get(i, j)` is component i of eigenvector j).
+pub fn sym_eig(a: &Matrix) -> (Vec<f32>, Matrix) {
+    let d = a.rows();
+    assert_eq!(d, a.cols(), "sym_eig requires square input");
+    let mut m: Vec<f64> = a.as_slice().iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; d * d];
+    for i in 0..d {
+        v[i * d + i] = 1.0;
+    }
+
+    let idx = |i: usize, j: usize| i * d + j;
+    for _sweep in 0..64 {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                off += m[idx(i, j)] * m[idx(i, j)];
+            }
+        }
+        if off < 1e-18 {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for k in 0..d {
+                    let akp = m[idx(k, p)];
+                    let akq = m[idx(k, q)];
+                    m[idx(k, p)] = c * akp - s * akq;
+                    m[idx(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..d {
+                    let apk = m[idx(p, k)];
+                    let aqk = m[idx(q, k)];
+                    m[idx(p, k)] = c * apk - s * aqk;
+                    m[idx(q, k)] = s * apk + c * aqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..d {
+                    let vkp = v[idx(k, p)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p)] = c * vkp - s * vkq;
+                    v[idx(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut pairs: Vec<(f64, usize)> =
+        (0..d).map(|i| (m[idx(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
+    let vals: Vec<f32> = pairs.iter().map(|&(val, _)| val as f32).collect();
+    let mut vecs = Matrix::zeros(d, d);
+    for (col, &(_, src)) in pairs.iter().enumerate() {
+        for i in 0..d {
+            vecs.set(i, col, v[idx(i, src)] as f32);
+        }
+    }
+    (vals, vecs)
+}
+
+/// Covariance matrix of the rows of `x` (population, d x d).
+pub fn covariance(x: &Matrix) -> Matrix {
+    let (n, d) = (x.rows(), x.cols());
+    let mean = x.col_mean();
+    let mut cov = vec![0.0f64; d * d];
+    for r in 0..n {
+        let row = x.row(r);
+        for i in 0..d {
+            let di = (row[i] - mean[i]) as f64;
+            for j in i..d {
+                cov[i * d + j] += di * (row[j] - mean[j]) as f64;
+            }
+        }
+    }
+    let nf = n.max(1) as f64;
+    let mut out = Matrix::zeros(d, d);
+    for i in 0..d {
+        for j in i..d {
+            let v = (cov[i * d + j] / nf) as f32;
+            out.set(i, j, v);
+            out.set(j, i, v);
+        }
+    }
+    out
+}
+
+/// Orthogonal Procrustes: the rotation R (d x d) maximizing trace(R^T M),
+/// i.e. R = U V^T for M = U S V^T. Solved via the symmetric eigen-
+/// decompositions of M^T M and M M^T (adequate for OPQ's well-conditioned
+/// correlation matrices; degenerate directions get a sign fix-up).
+pub fn procrustes(m: &Matrix) -> Matrix {
+    let d = m.rows();
+    assert_eq!(d, m.cols());
+    // M^T M = V S^2 V^T ; M M^T = U S^2 U^T
+    let mtm = m.transpose().matmul(m);
+    let mmt = m.matmul(&m.transpose());
+    let (_, vmat) = sym_eig(&mtm);
+    let (_, umat) = sym_eig(&mmt);
+    // Align signs: require u_i^T M v_i >= 0 for each pair.
+    let mut u = umat;
+    for col in 0..d {
+        // compute u_col^T M v_col
+        let mut s = 0.0f64;
+        for i in 0..d {
+            let mut mv = 0.0f64;
+            for j in 0..d {
+                mv += m.get(i, j) as f64 * vmat.get(j, col) as f64;
+            }
+            s += u.get(i, col) as f64 * mv;
+        }
+        if s < 0.0 {
+            for i in 0..d {
+                let val = -u.get(i, col);
+                u.set(i, col, val);
+            }
+        }
+    }
+    // R = U V^T
+    u.matmul(&vmat.transpose())
+}
+
+/// Is `r` orthogonal within tolerance? (test / invariant helper)
+pub fn is_orthogonal(r: &Matrix, tol: f32) -> bool {
+    let d = r.rows();
+    let g = r.transpose().matmul(r);
+    for i in 0..d {
+        for j in 0..d {
+            let want = if i == j { 1.0 } else { 0.0 };
+            if (g.get(i, j) - want).abs() > tol {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+
+    #[test]
+    fn eig_of_diagonal() {
+        let a = Matrix::from_vec(3, 3, vec![3., 0., 0., 0., 1., 0., 0., 0., 2.]);
+        let (vals, vecs) = sym_eig(&a);
+        assert!((vals[0] - 3.0).abs() < 1e-5);
+        assert!((vals[1] - 2.0).abs() < 1e-5);
+        assert!((vals[2] - 1.0).abs() < 1e-5);
+        assert!(is_orthogonal(&vecs, 1e-4));
+    }
+
+    #[test]
+    fn eig_reconstructs() {
+        let mut rng = Rng::new(10);
+        let d = 8;
+        let mut b = Matrix::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                b.set(i, j, rng.normal_f32());
+            }
+        }
+        let a = b.transpose().matmul(&b); // SPD
+        let (vals, vecs) = sym_eig(&a);
+        // A v_j = lambda_j v_j
+        for j in 0..d {
+            for i in 0..d {
+                let mut av = 0.0;
+                for k in 0..d {
+                    av += a.get(i, k) * vecs.get(k, j);
+                }
+                assert!(
+                    (av - vals[j] * vecs.get(i, j)).abs() < 1e-2,
+                    "eigvec residual too large"
+                );
+            }
+        }
+        // eigenvalues of SPD are non-negative and sorted desc
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4);
+        }
+        assert!(vals[d - 1] > -1e-3);
+    }
+
+    #[test]
+    fn covariance_known() {
+        let x = Matrix::from_vec(4, 2, vec![1., 0., -1., 0., 2., 1., -2., -1.]);
+        let c = covariance(&x);
+        assert!((c.get(0, 0) - 2.5).abs() < 1e-5);
+        assert!((c.get(1, 1) - 0.5).abs() < 1e-5);
+        assert!((c.get(0, 1) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn procrustes_recovers_rotation() {
+        // M = R0 * D with distinct positive singular values: the maximizer
+        // of trace(R^T M) over orthogonal R is exactly R0. (For repeated
+        // singular values the maximizer is non-unique and the eig-based
+        // solver may return a different member of the optimal set — OPQ's
+        // correlation matrices are generically non-degenerate.)
+        let mut rng = Rng::new(11);
+        let d = 6;
+        let mut b = Matrix::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                b.set(i, j, rng.normal_f32());
+            }
+        }
+        // orthogonalize b via eig of b^T b: R0 = b (b^T b)^{-1/2}
+        let btb = b.transpose().matmul(&b);
+        let (vals, vecs) = sym_eig(&btb);
+        let mut inv_sqrt = Matrix::zeros(d, d);
+        for i in 0..d {
+            inv_sqrt.set(i, i, 1.0 / vals[i].max(1e-9).sqrt());
+        }
+        let r0 = b
+            .matmul(&vecs)
+            .matmul(&inv_sqrt)
+            .matmul(&vecs.transpose());
+        assert!(is_orthogonal(&r0, 1e-3));
+        // distinct-singular-value stretch
+        let mut stretch = Matrix::zeros(d, d);
+        for i in 0..d {
+            stretch.set(i, i, 1.0 + i as f32);
+        }
+        let m = r0.matmul(&stretch);
+        let r = procrustes(&m);
+        assert!(is_orthogonal(&r, 1e-3));
+        for i in 0..d {
+            for j in 0..d {
+                assert!(
+                    (r.get(i, j) - r0.get(i, j)).abs() < 5e-2,
+                    "procrustes did not recover rotation at ({i},{j}): \
+                     {} vs {}",
+                    r.get(i, j),
+                    r0.get(i, j)
+                );
+            }
+        }
+    }
+}

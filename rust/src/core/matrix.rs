@@ -1,0 +1,217 @@
+//! Row-major dense f32 matrix — the vector-dataset container.
+//!
+//! Deliberately minimal: rows are the unit of access everywhere in the
+//! search engine (a row = one embedding/codeword), so the API is
+//! row-oriented and zero-copy (`row`, `rows_chunk`).
+
+/// Dense row-major `n x d` f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    n: usize,
+    d: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled `n x d`.
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Matrix { n, d, data: vec![0.0; n * d] }
+    }
+
+    /// Take ownership of row-major data.
+    pub fn from_vec(n: usize, d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * d, "matrix data length mismatch");
+        Matrix { n, d, data }
+    }
+
+    /// Build from per-row closure.
+    pub fn from_fn(n: usize, d: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.data[i * d + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Rows `[start, start+len)` as one contiguous slice.
+    pub fn rows_chunk(&self, start: usize, len: usize) -> &[f32] {
+        &self.data[start * self.d..(start + len) * self.d]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.d + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.d + j] = v;
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Select rows by index (copying).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.d);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Per-column mean.
+    pub fn col_mean(&self) -> Vec<f32> {
+        let mut mean = vec![0.0f64; self.d];
+        for i in 0..self.n {
+            for (m, &v) in mean.iter_mut().zip(self.row(i)) {
+                *m += v as f64;
+            }
+        }
+        mean.iter().map(|&m| (m / self.n.max(1) as f64) as f32).collect()
+    }
+
+    /// Per-column (population) variance.
+    pub fn col_var(&self) -> Vec<f32> {
+        let mean = self.col_mean();
+        let mut var = vec![0.0f64; self.d];
+        for i in 0..self.n {
+            for ((v, &x), &m) in var.iter_mut().zip(self.row(i)).zip(&mean) {
+                let dlt = x as f64 - m as f64;
+                *v += dlt * dlt;
+            }
+        }
+        var.iter().map(|&v| (v / self.n.max(1) as f64) as f32).collect()
+    }
+
+    /// `self (n x d) * other (d x p)` -> `n x p` (naive blocked loop; the
+    /// heavy matmuls in the request path run inside XLA, this is for
+    /// training-time use).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.d, other.n, "matmul inner dims");
+        let (n, d, p) = (self.n, self.d, other.d);
+        let mut out = Matrix::zeros(n, p);
+        for i in 0..n {
+            let xi = self.row(i);
+            let oi = out.row_mut(i);
+            for (kk, &xv) in xi.iter().enumerate().take(d) {
+                if xv == 0.0 {
+                    continue;
+                }
+                let brow = other.row(kk);
+                for (o, &b) in oi.iter_mut().zip(brow) {
+                    *o += xv * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose (copying).
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.d, self.n);
+        for i in 0..self.n {
+            for j in 0..self.d {
+                out.data[j * self.n + i] = self.data[i * self.d + j];
+            }
+        }
+        out
+    }
+
+    /// Append the rows of `other` (must have equal `cols`).
+    pub fn vstack(&mut self, other: &Matrix) {
+        assert_eq!(self.d, other.d);
+        self.data.extend_from_slice(&other.data);
+        self.n += other.n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.get(0, 2), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_length_panics() {
+        Matrix::from_vec(2, 3, vec![1.0; 5]);
+    }
+
+    #[test]
+    fn col_stats() {
+        let m = Matrix::from_vec(4, 2, vec![1., 0., 3., 0., 5., 0., 7., 0.]);
+        assert_eq!(m.col_mean(), vec![4.0, 0.0]);
+        assert_eq!(m.col_var(), vec![5.0, 0.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let eye = Matrix::from_vec(2, 2, vec![1., 0., 0., 1.]);
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transpose_involutive() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn select_and_stack() {
+        let a = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let s = a.select_rows(&[2, 0]);
+        assert_eq!(s.as_slice(), &[5., 6., 1., 2.]);
+        let mut b = s.clone();
+        b.vstack(&s);
+        assert_eq!(b.rows(), 4);
+        assert_eq!(b.row(3), &[1., 2.]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Core numeric substrates: matrices, distances, top-k selection,
+//! deterministic RNG, and small dense linear algebra.
+//!
+//! Everything downstream (quantizers, indexes, the coordinator) builds on
+//! these; they are dependency-free and heavily unit-tested.
+
+pub mod distance;
+pub mod json;
+pub mod linalg;
+pub mod matrix;
+pub mod parallel;
+pub mod rng;
+pub mod topk;
+
+pub use distance::{dot, l2_sq};
+pub use matrix::Matrix;
+pub use rng::Rng;
+pub use topk::{Hit, TopK};

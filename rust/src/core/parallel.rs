@@ -1,0 +1,75 @@
+//! Thread-pool-free data parallelism (the vendored registry has no rayon;
+//! see DESIGN.md section Substitutions).
+//!
+//! `par_map_indexed` fans an index range across scoped OS threads and
+//! collects results in order. Chunking is static (contiguous ranges), which
+//! matches our uniform per-item costs (scan blocks, queries). Thread count
+//! defaults to available parallelism, capped to the work size.
+
+/// Map `f` over `0..n` in parallel, preserving order.
+pub fn par_map_indexed<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = num_threads().min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, slot) in results.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = t * chunk;
+                for (off, s) in slot.iter_mut().enumerate() {
+                    *s = Some(f(base + off));
+                }
+            });
+        }
+    });
+    results.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+/// Parallelism degree (env `ICQ_THREADS` overrides; default = cores).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("ICQ_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = par_map_indexed(1000, |i| i * 2);
+        assert_eq!(out, (0..1000).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_ok() {
+        let out: Vec<usize> = par_map_indexed(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_item_ok() {
+        assert_eq!(par_map_indexed(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn actually_uses_closure_state() {
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let out = par_map_indexed(64, |i| data[i] * data[i]);
+        assert_eq!(out[8], 64.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Bounded top-k (nearest) selection — the neighbor list of section 3.4.
+//!
+//! A size-capped binary max-heap keyed on distance: the root is the
+//! *furthest* kept neighbor, which is exactly the element the paper's
+//! two-step search compares against (crude test vs "the furthest element
+//! in the list"). `threshold()` exposes that radius in O(1).
+
+/// One search hit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    pub id: u32,
+    pub dist: f32,
+}
+
+/// Bounded max-heap of the k nearest candidates seen so far.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    heap: Vec<Hit>, // max-heap on dist
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "top-k requires k >= 1");
+        TopK { k, heap: Vec::with_capacity(k) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.heap.len() == self.k
+    }
+
+    /// Current pruning radius: the furthest kept distance, or +inf while
+    /// the list is not yet full (everything is accepted).
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.is_full() {
+            self.heap[0].dist
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    /// Offer a candidate; returns true if it entered the list.
+    #[inline]
+    pub fn push(&mut self, id: u32, dist: f32) -> bool {
+        if self.heap.len() < self.k {
+            self.heap.push(Hit { id, dist });
+            self.sift_up(self.heap.len() - 1);
+            true
+        } else if dist < self.heap[0].dist {
+            self.heap[0] = Hit { id, dist };
+            self.sift_down(0);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].dist > self.heap[parent].dist {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < n && self.heap[l].dist > self.heap[largest].dist {
+                largest = l;
+            }
+            if r < n && self.heap[r].dist > self.heap[largest].dist {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+
+    /// Drain into ascending-distance order.
+    pub fn into_sorted(mut self) -> Vec<Hit> {
+        self.heap.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id)));
+        self.heap
+    }
+
+    /// Sorted copy without consuming.
+    pub fn sorted(&self) -> Vec<Hit> {
+        self.clone().into_sorted()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut t = TopK::new(3);
+        for (i, d) in [5.0, 1.0, 4.0, 2.0, 3.0, 0.5].iter().enumerate() {
+            t.push(i as u32, *d);
+        }
+        let hits = t.into_sorted();
+        assert_eq!(
+            hits.iter().map(|h| h.dist).collect::<Vec<_>>(),
+            vec![0.5, 1.0, 2.0]
+        );
+        assert_eq!(hits.iter().map(|h| h.id).collect::<Vec<_>>(), vec![5, 1, 3]);
+    }
+
+    #[test]
+    fn threshold_tracks_furthest() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), f32::INFINITY);
+        t.push(0, 3.0);
+        assert_eq!(t.threshold(), f32::INFINITY); // not full yet
+        t.push(1, 1.0);
+        assert_eq!(t.threshold(), 3.0);
+        t.push(2, 2.0);
+        assert_eq!(t.threshold(), 2.0);
+    }
+
+    #[test]
+    fn rejects_when_not_better() {
+        let mut t = TopK::new(1);
+        assert!(t.push(0, 1.0));
+        assert!(!t.push(1, 2.0));
+        assert!(t.push(2, 0.5));
+        assert_eq!(t.into_sorted()[0].id, 2);
+    }
+
+    #[test]
+    fn matches_full_sort_reference() {
+        use crate::core::rng::Rng;
+        let mut rng = Rng::new(9);
+        for k in [1usize, 5, 32] {
+            let dists: Vec<f32> =
+                (0..500).map(|_| rng.uniform_f32() * 100.0).collect();
+            let mut t = TopK::new(k);
+            for (i, &d) in dists.iter().enumerate() {
+                t.push(i as u32, d);
+            }
+            let mut expect: Vec<f32> = dists.clone();
+            expect.sort_by(f32::total_cmp);
+            expect.truncate(k);
+            let got: Vec<f32> = t.into_sorted().iter().map(|h| h.dist).collect();
+            assert_eq!(got, expect);
+        }
+    }
+}

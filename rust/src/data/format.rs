@@ -1,0 +1,291 @@
+//! icqfmt — the flat little-endian tensor container shared with python.
+//!
+//! Mirror of `python/compile/icqfmt.py` (see its docstring for the byte
+//! layout). The rust side reads the parameter packs train.py exports
+//! (codebooks, codes, xi, lambda, sigma, embedding weights) and also
+//! writes its own index snapshots with the same container.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Result};
+
+const MAGIC: &[u8; 4] = b"ICQF";
+const VERSION: u32 = 1;
+
+/// A single named tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    U16 { dims: Vec<usize>, data: Vec<u16> },
+    U8 { dims: Vec<usize>, data: Vec<u8> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. }
+            | Tensor::I32 { dims, .. }
+            | Tensor::U16 { dims, .. }
+            | Tensor::U8 { dims, .. } => dims,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    fn dtype_tag(&self) -> u8 {
+        match self {
+            Tensor::F32 { .. } => 0,
+            Tensor::I32 { .. } => 1,
+            Tensor::U16 { .. } => 2,
+            Tensor::U8 { .. } => 3,
+        }
+    }
+}
+
+/// An ordered name -> tensor container.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TensorPack {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl TensorPack {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert_f32(&mut self, name: &str, dims: Vec<usize>, data: Vec<f32>) {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        self.tensors.insert(name.into(), Tensor::F32 { dims, data });
+    }
+
+    pub fn insert_i32(&mut self, name: &str, dims: Vec<usize>, data: Vec<i32>) {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        self.tensors.insert(name.into(), Tensor::I32 { dims, data });
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing tensor '{name}'"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        let t = self.get(name)?;
+        Ok((t.dims(), t.as_f32()?))
+    }
+
+    pub fn i32(&self, name: &str) -> Result<(&[usize], &[i32])> {
+        let t = self.get(name)?;
+        Ok((t.dims(), t.as_i32()?))
+    }
+
+    /// Scalar convenience (first element of a 1-element tensor).
+    pub fn scalar_f32(&self, name: &str) -> Result<f32> {
+        let (_, d) = self.f32(name)?;
+        ensure!(!d.is_empty(), "empty tensor '{name}'");
+        Ok(d[0])
+    }
+
+    pub fn scalar_i32(&self, name: &str) -> Result<i32> {
+        let (_, d) = self.i32(name)?;
+        ensure!(!d.is_empty(), "empty tensor '{name}'");
+        Ok(d[0])
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&[t.dtype_tag()])?;
+            w.write_all(&(t.dims().len() as u32).to_le_bytes())?;
+            for &d in t.dims() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for v in data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for v in data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Tensor::U16 { data, .. } => {
+                    for v in data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Tensor::U8 { data, .. } => w.write_all(data)?,
+            }
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        ensure!(&magic == MAGIC, "bad icqfmt magic {magic:?}");
+        let version = read_u32(r)?;
+        ensure!(version == VERSION, "unsupported icqfmt version {version}");
+        let count = read_u32(r)?;
+        let mut pack = TensorPack::new();
+        for _ in 0..count {
+            let nlen = read_u32(r)? as usize;
+            ensure!(nlen <= 4096, "tensor name too long ({nlen})");
+            let mut nb = vec![0u8; nlen];
+            r.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let mut tag = [0u8; 1];
+            r.read_exact(&mut tag)?;
+            let ndim = read_u32(r)? as usize;
+            ensure!(ndim <= 8, "too many dims ({ndim})");
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                dims.push(u64::from_le_bytes(b) as usize);
+            }
+            let n: usize = dims.iter().product();
+            let tensor = match tag[0] {
+                0 => {
+                    let mut raw = vec![0u8; n * 4];
+                    r.read_exact(&mut raw)?;
+                    let data = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    Tensor::F32 { dims, data }
+                }
+                1 => {
+                    let mut raw = vec![0u8; n * 4];
+                    r.read_exact(&mut raw)?;
+                    let data = raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    Tensor::I32 { dims, data }
+                }
+                2 => {
+                    let mut raw = vec![0u8; n * 2];
+                    r.read_exact(&mut raw)?;
+                    let data = raw
+                        .chunks_exact(2)
+                        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                        .collect();
+                    Tensor::U16 { dims, data }
+                }
+                3 => {
+                    let mut data = vec![0u8; n];
+                    r.read_exact(&mut data)?;
+                    Tensor::U8 { dims, data }
+                }
+                t => bail!("unknown dtype tag {t}"),
+            };
+            pack.tensors.insert(name, tensor);
+        }
+        Ok(pack)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Self::read_from(&mut f)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let mut p = TensorPack::new();
+        p.insert_f32("a", vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        p.insert_i32("codes", vec![4], vec![-1, 0, 7, 300]);
+        p.tensors.insert(
+            "u16s".into(),
+            Tensor::U16 { dims: vec![2], data: vec![9, 65535] },
+        );
+        p.tensors.insert(
+            "bytes".into(),
+            Tensor::U8 { dims: vec![3], data: vec![0, 128, 255] },
+        );
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        let q = TensorPack::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00".to_vec();
+        assert!(TensorPack::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let p = TensorPack::new();
+        assert!(p.get("nothing").is_err());
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let mut p = TensorPack::new();
+        p.insert_f32("sigma", vec![1], vec![2.5]);
+        p.insert_i32("fast_k", vec![1], vec![3]);
+        assert_eq!(p.scalar_f32("sigma").unwrap(), 2.5);
+        assert_eq!(p.scalar_i32("fast_k").unwrap(), 3);
+        assert!(p.scalar_f32("fast_k").is_err()); // wrong dtype
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("icqfmt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.icqf");
+        let mut p = TensorPack::new();
+        p.insert_f32("x", vec![3], vec![1.5, -2.0, 0.0]);
+        p.save(&path).unwrap();
+        let q = TensorPack::load(&path).unwrap();
+        assert_eq!(p, q);
+    }
+}

@@ -1,0 +1,194 @@
+//! Dataset catalog + trained-bundle loader.
+//!
+//! `load_named` resolves the experiment workload names used across the CLI
+//! and the figure benches; `TrainedBundle` materializes a python-trained
+//! icqfmt parameter pack (codebooks, codes, xi, sigma, embedding weights)
+//! into the rust-side model structures.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::format::TensorPack;
+use super::realworld::{self, RealWorldKind};
+use super::synthetic::{self, SyntheticSpec};
+use super::Dataset;
+use crate::core::Matrix;
+
+/// Resolve a workload name:
+///   "synthetic1" | "synthetic2" | "synthetic3"  — Table 1 datasets
+///   "mnist" | "cifar10"                          — real-world look-alikes
+/// `n_samples = 0` keeps the canonical size (Table 1: 11k; real: 6k).
+pub fn load_named(name: &str, n_samples: usize, seed: u64) -> Result<Dataset> {
+    let name = name.to_ascii_lowercase();
+    if let Some(rest) = name.strip_prefix("synthetic") {
+        let idx: usize = rest.parse().context("synthetic index")?;
+        anyhow::ensure!(
+            (1..=3).contains(&idx),
+            "Table 1 defines synthetic1..synthetic3, got synthetic{idx}"
+        );
+        let mut spec = SyntheticSpec::table1(idx);
+        if n_samples > 0 {
+            spec.n_samples = n_samples;
+        }
+        spec.seed = spec.seed.wrapping_add(seed);
+        return Ok(synthetic::generate(&spec));
+    }
+    if let Some(kind) = RealWorldKind::parse(&name) {
+        let n = if n_samples > 0 { n_samples } else { 6000 };
+        return Ok(realworld::generate(kind, n, seed));
+    }
+    anyhow::bail!("unknown dataset '{name}' (synthetic1-3 | mnist | cifar10)")
+}
+
+/// A python-trained ICQ parameter pack, materialized.
+#[derive(Clone, Debug)]
+pub struct TrainedBundle {
+    /// [K, m, d] codebooks, fast group first, flattened row-major.
+    pub codebooks: Vec<f32>,
+    pub k: usize,
+    pub m: usize,
+    pub d: usize,
+    /// number of leading codebooks in the fast group (the paper's |K|).
+    pub fast_k: usize,
+    /// high-variance subspace indicator xi in {0,1}^d (eq. 7).
+    pub xi: Vec<f32>,
+    /// per-dimension variance estimates Lambda.
+    pub lambda: Vec<f32>,
+    /// crude-comparison margin sigma (eq. 11).
+    pub sigma: f32,
+    /// database codes [n, K].
+    pub codes: Vec<i32>,
+    pub n: usize,
+    /// database labels + embeddings (for evaluation).
+    pub labels: Vec<i32>,
+    pub embeddings: Matrix,
+    /// held-out queries (raw features) + labels.
+    pub test_x: Matrix,
+    pub test_labels: Vec<i32>,
+    /// raw tensor pack (for embedding weights etc.).
+    pub pack: TensorPack,
+}
+
+impl TrainedBundle {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let pack = TensorPack::load(&path)
+            .with_context(|| format!("loading {:?}", path.as_ref()))?;
+        let (cb_dims, cb) = pack.f32("codebooks")?;
+        ensure!(cb_dims.len() == 3, "codebooks must be [K, m, d]");
+        let (k, m, d) = (cb_dims[0], cb_dims[1], cb_dims[2]);
+        let (code_dims, codes) = pack.i32("codes")?;
+        ensure!(code_dims.len() == 2 && code_dims[1] == k, "codes [n, K]");
+        let n = code_dims[0];
+        let (_, xi) = pack.f32("xi")?;
+        let (_, lambda) = pack.f32("lambda")?;
+        ensure!(xi.len() == d && lambda.len() == d);
+        let fast_k = pack.scalar_i32("fast_k")? as usize;
+        ensure!(fast_k >= 1 && fast_k <= k, "fast_k out of range");
+        let sigma = pack.scalar_f32("sigma")?;
+        let (_, labels) = pack.i32("labels")?;
+        let (emb_dims, emb) = pack.f32("embeddings")?;
+        ensure!(emb_dims == [n, d], "embeddings [n, d]");
+        let (tx_dims, tx) = pack.f32("test_x")?;
+        let (_, tl) = pack.i32("test_labels")?;
+        Ok(TrainedBundle {
+            codebooks: cb.to_vec(),
+            k,
+            m,
+            d,
+            fast_k,
+            xi: xi.to_vec(),
+            lambda: lambda.to_vec(),
+            sigma,
+            codes: codes.to_vec(),
+            n,
+            labels: labels.to_vec(),
+            embeddings: Matrix::from_vec(n, d, emb.to_vec()),
+            test_x: Matrix::from_vec(tx_dims[0], tx_dims[1], tx.to_vec()),
+            test_labels: tl.to_vec(),
+            pack,
+        })
+    }
+
+    /// Validate the structural invariants the search path assumes.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.codes.iter().all(|&c| c >= 0 && (c as usize) < self.m),
+            "codes out of range");
+        // group orthogonality: fast codebooks live on xi, slow on 1 - xi
+        for kk in 0..self.k {
+            for j in 0..self.m {
+                let cw = &self.codebooks
+                    [(kk * self.m + j) * self.d..(kk * self.m + j + 1) * self.d];
+                for (dim, &v) in cw.iter().enumerate() {
+                    let on_psi = self.xi[dim] > 0.5;
+                    let in_fast = kk < self.fast_k;
+                    if v.abs() > 1e-4 {
+                        ensure!(
+                            on_psi == in_fast,
+                            "codebook {kk} codeword {j} leaks across the \
+                             psi split at dim {dim}"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_named_synthetic() {
+        let d = load_named("synthetic2", 500, 0).unwrap();
+        assert_eq!(d.dim(), 64);
+        assert_eq!(d.len(), 500);
+    }
+
+    #[test]
+    fn load_named_realworld() {
+        let d = load_named("mnist", 100, 0).unwrap();
+        assert_eq!(d.dim(), 784);
+    }
+
+    #[test]
+    fn load_named_unknown_errors() {
+        assert!(load_named("imagenet", 10, 0).is_err());
+        assert!(load_named("synthetic9", 10, 0).is_err());
+    }
+
+    #[test]
+    fn trained_bundle_roundtrip() {
+        // synthesize a minimal valid pack and load it back
+        let (k, m, d, n) = (2usize, 4usize, 6usize, 8usize);
+        let xi = vec![1., 1., 1., 0., 0., 0.];
+        let mut cb = vec![0.0f32; k * m * d];
+        for j in 0..m {
+            for dim in 0..3 {
+                cb[j * d + dim] = 1.0 + j as f32; // fast cb on psi
+                cb[(m + j) * d + 3 + dim] = 2.0; // slow cb off psi
+            }
+        }
+        let mut pack = TensorPack::new();
+        pack.insert_f32("codebooks", vec![k, m, d], cb);
+        pack.insert_i32("codes", vec![n, k], vec![1; n * k]);
+        pack.insert_f32("xi", vec![d], xi);
+        pack.insert_f32("lambda", vec![d], vec![0.5; d]);
+        pack.insert_i32("fast_k", vec![1], vec![1]);
+        pack.insert_f32("sigma", vec![1], vec![1.5]);
+        pack.insert_i32("labels", vec![n], vec![0; n]);
+        pack.insert_f32("embeddings", vec![n, d], vec![0.1; n * d]);
+        pack.insert_f32("test_x", vec![2, d], vec![0.2; 2 * d]);
+        pack.insert_i32("test_labels", vec![2], vec![0, 1]);
+        let dir = std::env::temp_dir().join("icq_bundle_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.icqf");
+        pack.save(&path).unwrap();
+        let b = TrainedBundle::load(&path).unwrap();
+        assert_eq!((b.k, b.m, b.d, b.n, b.fast_k), (2, 4, 6, 8, 1));
+        assert_eq!(b.sigma, 1.5);
+        b.validate().unwrap();
+    }
+}

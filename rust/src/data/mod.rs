@@ -1,0 +1,126 @@
+//! Dataset substrate: in-memory labeled vector datasets, the icqfmt
+//! tensor container shared with python, and the synthetic / real-world-like
+//! generators the experiments run on.
+
+pub mod format;
+pub mod loader;
+pub mod realworld;
+pub mod synthetic;
+
+use crate::core::Matrix;
+
+/// A labeled vector dataset (embeddings or raw features).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// n x d vectors.
+    pub x: Matrix,
+    /// class label per vector (retrieval relevance = same class, the
+    /// paper's MAP protocol).
+    pub y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn new(x: Matrix, y: Vec<i32>) -> Self {
+        assert_eq!(x.rows(), y.len(), "labels must match rows");
+        Dataset { x, y }
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        (self.y.iter().copied().max().unwrap_or(-1) + 1) as usize
+    }
+
+    /// Deterministic train/test split (shuffle with `seed`, first
+    /// `n_test` rows become the test set).
+    pub fn split(&self, n_test: usize, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = crate::core::Rng::new(seed ^ 0x5eed_0517);
+        let perm = rng.permutation(self.len());
+        let (test_idx, train_idx) = perm.split_at(n_test.min(self.len()));
+        (self.subset(train_idx), self.subset(test_idx))
+    }
+
+    /// Copy the rows at `idx`.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    /// Split classes into (seen, unseen) per the unseen-classes protocol
+    /// of [16] / Fig. 6: `n_unseen` random classes are held out entirely.
+    pub fn split_classes(&self, n_unseen: usize, seed: u64) -> (Dataset, Dataset) {
+        let ncls = self.n_classes();
+        let mut rng = crate::core::Rng::new(seed ^ 0xc1a55);
+        let perm = rng.permutation(ncls);
+        let unseen: std::collections::HashSet<i32> =
+            perm[..n_unseen.min(ncls)].iter().map(|&c| c as i32).collect();
+        let (mut seen_idx, mut unseen_idx) = (Vec::new(), Vec::new());
+        for (i, &label) in self.y.iter().enumerate() {
+            if unseen.contains(&label) {
+                unseen_idx.push(i);
+            } else {
+                seen_idx.push(i);
+            }
+        }
+        (self.subset(&seen_idx), self.subset(&unseen_idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Matrix::from_fn(10, 3, |i, j| (i * 3 + j) as f32);
+        let y = (0..10).map(|i| (i % 5) as i32).collect();
+        Dataset::new(x, y)
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = toy();
+        let (train, test) = d.split(3, 0);
+        assert_eq!(train.len(), 7);
+        assert_eq!(test.len(), 3);
+        assert_eq!(train.dim(), 3);
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = toy();
+        let (a, _) = d.split(3, 7);
+        let (b, _) = d.split(3, 7);
+        assert_eq!(a.x.as_slice(), b.x.as_slice());
+    }
+
+    #[test]
+    fn class_split_holds_out_whole_classes() {
+        let d = toy();
+        let (seen, unseen) = d.split_classes(2, 1);
+        assert_eq!(seen.len() + unseen.len(), d.len());
+        let seen_cls: std::collections::HashSet<i32> =
+            seen.y.iter().copied().collect();
+        let unseen_cls: std::collections::HashSet<i32> =
+            unseen.y.iter().copied().collect();
+        assert!(seen_cls.is_disjoint(&unseen_cls));
+        assert_eq!(unseen_cls.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_labels_panic() {
+        Dataset::new(Matrix::zeros(3, 2), vec![0; 4]);
+    }
+}

@@ -1,0 +1,55 @@
+//! Effective code length (paper eq. 12).
+//!
+//! For ICQ at code length l, the effective code length is the code length
+//! an ADC baseline (SQ) would need to match ICQ's search speed:
+//!
+//! ```text
+//! l_hat = l * flops_ICQ@l / flops_SQ@l
+//! ```
+//!
+//! where flops are the measured Average Ops of each method at l. This is
+//! the x-axis of Fig. 4.
+
+use crate::index::opcount::OpSnapshot;
+
+/// eq. 12 from measured op counters.
+pub fn effective_code_length(
+    code_bits: usize,
+    icq_ops: &OpSnapshot,
+    baseline_ops: &OpSnapshot,
+) -> f64 {
+    let icq = icq_ops.avg_ops_per_candidate();
+    let base = baseline_ops.avg_ops_per_candidate();
+    if base <= 0.0 {
+        return code_bits as f64;
+    }
+    code_bits as f64 * icq / base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(table_adds: u64, candidates: u64) -> OpSnapshot {
+        OpSnapshot { table_adds, candidates, ..Default::default() }
+    }
+
+    #[test]
+    fn halved_ops_halve_effective_length() {
+        // ICQ does 4 adds/cand, baseline does 8 -> l_hat = l / 2
+        let l = effective_code_length(64, &snap(400, 100), &snap(800, 100));
+        assert!((l - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equal_ops_keep_length() {
+        let l = effective_code_length(64, &snap(800, 100), &snap(800, 100));
+        assert!((l - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_baseline_degrades_gracefully() {
+        let l = effective_code_length(32, &snap(100, 10), &snap(0, 0));
+        assert_eq!(l, 32.0);
+    }
+}

@@ -1,0 +1,47 @@
+//! Exact nearest-neighbor ground truth (brute force, rayon-parallel).
+
+use crate::core::parallel::par_map_indexed;
+use crate::core::{distance, Matrix, TopK};
+
+/// Precomputed exact top-R ids per query.
+#[derive(Clone, Debug)]
+pub struct GroundTruth {
+    pub ids: Vec<Vec<u32>>,
+    pub r: usize,
+}
+
+impl GroundTruth {
+    /// Exact top-`r` of every query row against the database rows.
+    pub fn compute(db: &Matrix, queries: &Matrix, r: usize) -> GroundTruth {
+        assert_eq!(db.cols(), queries.cols());
+        let ids: Vec<Vec<u32>> = par_map_indexed(queries.rows(), |qi| {
+            let mut top = TopK::new(r);
+            for i in 0..db.rows() {
+                top.push(i as u32, distance::l2_sq(db.row(i), queries.row(qi)));
+            }
+            top.into_sorted().iter().map(|h| h.id).collect()
+        });
+        GroundTruth { ids, r }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_is_sorted_by_distance() {
+        let db = Matrix::from_vec(4, 1, vec![0.0, 1.0, 2.0, 3.0]);
+        let q = Matrix::from_vec(1, 1, vec![1.2]);
+        let gt = GroundTruth::compute(&db, &q, 3);
+        assert_eq!(gt.ids[0], vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn r_larger_than_db_is_clamped_by_topk() {
+        let db = Matrix::from_vec(2, 1, vec![0.0, 5.0]);
+        let q = Matrix::from_vec(1, 1, vec![0.1]);
+        let gt = GroundTruth::compute(&db, &q, 10);
+        assert_eq!(gt.ids[0].len(), 2);
+    }
+}

@@ -1,0 +1,147 @@
+//! Retrieval metrics under the paper's label-relevance protocol: a
+//! retrieved element is relevant iff it shares the query's class (the
+//! standard supervised-quantization MAP of [17]/[19]).
+
+use crate::core::Hit;
+
+/// Average precision of one ranked result list against a relevance
+/// predicate. `total_relevant` is the number of relevant items in the
+/// database (for the normalization); if 0, AP is defined as 0.
+pub fn average_precision(
+    ranked: &[Hit],
+    is_relevant: impl Fn(u32) -> bool,
+    total_relevant: usize,
+) -> f64 {
+    if total_relevant == 0 {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    let mut sum = 0.0f64;
+    for (rank, h) in ranked.iter().enumerate() {
+        if is_relevant(h.id) {
+            hits += 1;
+            sum += hits as f64 / (rank + 1) as f64;
+        }
+    }
+    sum / total_relevant.min(ranked.len().max(1)) as f64
+}
+
+/// Mean average precision over queries: `results[i]` is the ranked list
+/// for query i, relevance = label match against `db_labels`.
+pub fn mean_average_precision(
+    results: &[Vec<Hit>],
+    query_labels: &[i32],
+    db_labels: &[i32],
+) -> f64 {
+    assert_eq!(results.len(), query_labels.len());
+    let mut label_counts = std::collections::HashMap::new();
+    for &l in db_labels {
+        *label_counts.entry(l).or_insert(0usize) += 1;
+    }
+    let mut total = 0.0;
+    for (ranked, &ql) in results.iter().zip(query_labels) {
+        let relevant = label_counts.get(&ql).copied().unwrap_or(0);
+        total += average_precision(
+            ranked,
+            |id| db_labels[id as usize] == ql,
+            relevant,
+        );
+    }
+    total / results.len().max(1) as f64
+}
+
+/// Precision@R (label relevance).
+pub fn precision_at(
+    results: &[Vec<Hit>],
+    query_labels: &[i32],
+    db_labels: &[i32],
+    r: usize,
+) -> f64 {
+    let mut total = 0.0;
+    for (ranked, &ql) in results.iter().zip(query_labels) {
+        let top = &ranked[..r.min(ranked.len())];
+        let rel = top.iter().filter(|h| db_labels[h.id as usize] == ql).count();
+        total += rel as f64 / r.max(1) as f64;
+    }
+    total / results.len().max(1) as f64
+}
+
+/// Recall@R against exact nearest-neighbor ground truth id sets.
+pub fn recall_at(results: &[Vec<Hit>], truth: &[Vec<u32>], r: usize) -> f64 {
+    assert_eq!(results.len(), truth.len());
+    let mut total = 0.0;
+    for (ranked, t) in results.iter().zip(truth) {
+        let tset: std::collections::HashSet<u32> =
+            t.iter().take(r).copied().collect();
+        let got = ranked
+            .iter()
+            .take(r)
+            .filter(|h| tset.contains(&h.id))
+            .count();
+        total += got as f64 / tset.len().max(1) as f64;
+    }
+    total / results.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits(ids: &[u32]) -> Vec<Hit> {
+        ids.iter()
+            .enumerate()
+            .map(|(i, &id)| Hit { id, dist: i as f32 })
+            .collect()
+    }
+
+    #[test]
+    fn perfect_ranking_gives_map_one() {
+        let db = vec![0, 0, 1, 1];
+        let results = vec![hits(&[0, 1])];
+        let map = mean_average_precision(&results, &[0], &db);
+        assert!((map - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ap_known_value() {
+        // relevant at ranks 1 and 3 of 3, 2 relevant total:
+        // AP = (1/1 + 2/3) / 2 = 5/6
+        let ranked = hits(&[7, 8, 9]);
+        let rel = |id: u32| id == 7 || id == 9;
+        let ap = average_precision(&ranked, rel, 2);
+        assert!((ap - 5.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn map_zero_when_nothing_relevant() {
+        let db = vec![1, 1, 1];
+        let results = vec![hits(&[0, 1, 2])];
+        assert_eq!(mean_average_precision(&results, &[0], &db), 0.0);
+    }
+
+    #[test]
+    fn precision_at_counts_matches() {
+        let db = vec![0, 1, 0, 1];
+        let results = vec![hits(&[0, 1, 2, 3])];
+        assert_eq!(precision_at(&results, &[0], &db, 2), 0.5);
+        assert_eq!(precision_at(&results, &[0], &db, 4), 0.5);
+    }
+
+    #[test]
+    fn recall_against_truth() {
+        let results = vec![hits(&[3, 1, 2])];
+        let truth = vec![vec![1u32, 2, 9]];
+        // top-3 retrieved {3,1,2} vs truth {1,2,9}: 2/3
+        assert!((recall_at(&results, &truth, 3) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn worse_ranking_lowers_map() {
+        let db = vec![0, 0, 1, 1, 1, 1];
+        let good = vec![hits(&[0, 1, 2, 3])];
+        let bad = vec![hits(&[2, 3, 0, 1])];
+        let mg = mean_average_precision(&good, &[0], &db);
+        let mb = mean_average_precision(&bad, &[0], &db);
+        assert!(mg > mb);
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation: MAP / precision / recall under the paper's protocols.
+
+pub mod effective;
+pub mod groundtruth;
+pub mod map;
+pub mod unseen;
+
+pub use effective::effective_code_length;
+pub use groundtruth::GroundTruth;
+pub use map::{mean_average_precision, precision_at, recall_at};

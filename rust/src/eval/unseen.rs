@@ -1,0 +1,70 @@
+//! Unseen-classes evaluation protocol (Sablayrolles et al. [16], Fig. 6).
+//!
+//! Train on 75% of the classes; evaluate retrieval ONLY over the held-out
+//! classes: their vectors form the database and queries, so the method
+//! cannot rely on memorized class structure.
+
+use crate::data::Dataset;
+
+/// The materialized protocol: training data (seen classes) + an eval
+/// database and query set drawn from unseen classes only.
+#[derive(Clone, Debug)]
+pub struct UnseenSplit {
+    pub train: Dataset,
+    pub eval_db: Dataset,
+    pub eval_queries: Dataset,
+}
+
+/// Hold out `n_unseen` random classes (the paper holds out 3 of 10);
+/// within the unseen pool, `n_queries` vectors become queries and the
+/// rest the evaluation database.
+pub fn make_split(
+    data: &Dataset,
+    n_unseen: usize,
+    n_queries: usize,
+    seed: u64,
+) -> UnseenSplit {
+    let (train, unseen) = data.split_classes(n_unseen, seed);
+    let (eval_db, eval_queries) = unseen.split(n_queries.min(unseen.len() / 2), seed);
+    UnseenSplit { train, eval_db, eval_queries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Matrix;
+
+    fn toy(n: usize, ncls: usize) -> Dataset {
+        let x = Matrix::from_fn(n, 2, |i, j| (i + j) as f32);
+        let y = (0..n).map(|i| (i % ncls) as i32).collect();
+        Dataset::new(x, y)
+    }
+
+    #[test]
+    fn protocol_separates_classes() {
+        let data = toy(100, 10);
+        let s = make_split(&data, 3, 10, 0);
+        let train_cls: std::collections::HashSet<i32> =
+            s.train.y.iter().copied().collect();
+        let eval_cls: std::collections::HashSet<i32> = s
+            .eval_db
+            .y
+            .iter()
+            .chain(s.eval_queries.y.iter())
+            .copied()
+            .collect();
+        assert_eq!(train_cls.len(), 7);
+        assert_eq!(eval_cls.len(), 3);
+        assert!(train_cls.is_disjoint(&eval_cls));
+        assert_eq!(s.eval_queries.len(), 10);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let data = toy(60, 6);
+        let a = make_split(&data, 2, 5, 3);
+        let b = make_split(&data, 2, 5, 3);
+        assert_eq!(a.train.y, b.train.y);
+        assert_eq!(a.eval_db.y, b.eval_db.y);
+    }
+}

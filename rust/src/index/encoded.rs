@@ -1,0 +1,214 @@
+//! The encoded index: codes + codebooks + ICQ search parameters.
+//!
+//! Built either from a rust-trained quantizer ([`EncodedIndex::build`])
+//! or from a python-trained AOT bundle ([`EncodedIndex::from_bundle`]).
+//! The same structure serves baseline ADC search (fast_k = K, sigma = 0)
+//! and ICQ two-step search.
+
+use anyhow::Result;
+
+use super::lut::LutContext;
+use crate::core::Matrix;
+use crate::data::format::TensorPack;
+use crate::data::loader::TrainedBundle;
+use crate::quantizer::icq::Icq;
+use crate::quantizer::{Codebooks, Codes, Quantizer};
+
+/// An immutable, searchable encoded database.
+#[derive(Clone, Debug)]
+pub struct EncodedIndex {
+    codebooks: Codebooks,
+    codes: Codes,
+    lut_ctx: LutContext,
+    /// leading fast-group size (|K|); == k for non-ICQ methods.
+    pub fast_k: usize,
+    /// crude margin sigma (eq. 11); 0 for non-ICQ methods.
+    pub sigma: f32,
+    /// labels of the encoded vectors (for MAP evaluation).
+    pub labels: Vec<i32>,
+}
+
+impl EncodedIndex {
+    /// Encode `x` with any trained quantizer. For ICQ models the fast
+    /// group / sigma come from the trainer; other methods get fast_k = K
+    /// (their search is the conventional full ADC).
+    pub fn build<Q: Quantizer>(q: &Q, x: &Matrix, labels: Vec<i32>) -> Self {
+        assert_eq!(x.rows(), labels.len());
+        let codes = q.encode(x);
+        let codebooks = q.codebooks().clone();
+        let lut_ctx = LutContext::new(&codebooks);
+        EncodedIndex {
+            fast_k: codebooks.k(),
+            sigma: 0.0,
+            codebooks,
+            codes,
+            lut_ctx,
+            labels,
+        }
+    }
+
+    /// Build from an ICQ model, wiring the two-step search parameters.
+    pub fn build_icq(icq: &Icq, x: &Matrix, labels: Vec<i32>) -> Self {
+        let mut idx = Self::build(icq, x, labels);
+        idx.fast_k = icq.fast_k;
+        idx.sigma = icq.sigma;
+        idx
+    }
+
+    /// Materialize from a python-trained bundle (codes already computed
+    /// at build time by the L2 trainer).
+    pub fn from_bundle(b: &TrainedBundle) -> Result<Self> {
+        b.validate()?;
+        let codebooks =
+            Codebooks::from_vec(b.k, b.m, b.d, b.codebooks.clone());
+        let data: Vec<u16> = b.codes.iter().map(|&c| c as u16).collect();
+        let codes = Codes::from_vec(b.n, b.k, data);
+        let lut_ctx = LutContext::new(&codebooks);
+        Ok(EncodedIndex {
+            fast_k: b.fast_k,
+            sigma: b.sigma,
+            codebooks,
+            codes,
+            lut_ctx,
+            labels: b.labels.clone(),
+        })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.codes.n()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.codebooks.k()
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.codebooks.m()
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.codebooks.d()
+    }
+
+    pub fn codebooks(&self) -> &Codebooks {
+        &self.codebooks
+    }
+
+    pub fn codes(&self) -> &Codes {
+        &self.codes
+    }
+
+    pub fn lut_ctx(&self) -> &LutContext {
+        &self.lut_ctx
+    }
+
+    /// Code length in bits (the paper's x-axis).
+    pub fn code_bits(&self) -> usize {
+        self.codes.code_bits(self.m())
+    }
+
+    /// Serialize to an icqfmt pack (index snapshots).
+    pub fn to_pack(&self) -> TensorPack {
+        let mut pack = TensorPack::new();
+        self.codebooks.to_pack(&mut pack, "");
+        let codes_i32: Vec<i32> =
+            self.codes.as_slice().iter().map(|&c| c as i32).collect();
+        pack.insert_i32(
+            "codes",
+            vec![self.codes.n(), self.codes.k()],
+            codes_i32,
+        );
+        pack.insert_i32("fast_k", vec![1], vec![self.fast_k as i32]);
+        pack.insert_f32("sigma", vec![1], vec![self.sigma]);
+        pack.insert_i32("labels", vec![self.labels.len()], self.labels.clone());
+        pack
+    }
+
+    /// Load an index snapshot produced by [`EncodedIndex::to_pack`].
+    pub fn from_pack(pack: &TensorPack) -> Result<Self> {
+        let codebooks = Codebooks::from_pack(pack, "")?;
+        let (dims, codes_i32) = pack.i32("codes")?;
+        anyhow::ensure!(dims.len() == 2);
+        let codes = Codes::from_vec(
+            dims[0],
+            dims[1],
+            codes_i32.iter().map(|&c| c as u16).collect(),
+        );
+        let fast_k = pack.scalar_i32("fast_k")? as usize;
+        let sigma = pack.scalar_f32("sigma")?;
+        let (_, labels) = pack.i32("labels")?;
+        let lut_ctx = LutContext::new(&codebooks);
+        Ok(EncodedIndex {
+            fast_k,
+            sigma,
+            codebooks,
+            codes,
+            lut_ctx,
+            labels: labels.to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+    use crate::quantizer::icq::IcqOpts;
+    use crate::quantizer::pq::{Pq, PqOpts};
+
+    fn hetero(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, j| {
+            let scale = if j % 3 == 0 { 4.0 } else { 0.3 };
+            rng.normal_f32() * scale
+        })
+    }
+
+    #[test]
+    fn build_from_pq_has_trivial_icq_params() {
+        let x = hetero(100, 6, 1);
+        let pq = Pq::train(&x, PqOpts { k: 3, m: 4, iters: 5, seed: 0 });
+        let idx = EncodedIndex::build(&pq, &x, vec![0; 100]);
+        assert_eq!(idx.fast_k, 3);
+        assert_eq!(idx.sigma, 0.0);
+        assert_eq!(idx.len(), 100);
+        assert_eq!(idx.code_bits(), 6); // 3 books x 2 bits
+    }
+
+    #[test]
+    fn build_from_icq_wires_parameters() {
+        let x = hetero(200, 9, 2);
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 3, m: 8, fast_k: 1, kmeans_iters: 5, prior_steps: 100, seed: 0 },
+        );
+        let idx = EncodedIndex::build_icq(&icq, &x, vec![1; 200]);
+        assert_eq!(idx.fast_k, 1);
+        assert!(idx.sigma > 0.0);
+    }
+
+    #[test]
+    fn pack_roundtrip_preserves_search_state() {
+        let x = hetero(60, 6, 3);
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 2, m: 4, fast_k: 1, kmeans_iters: 4, prior_steps: 50, seed: 0 },
+        );
+        let idx = EncodedIndex::build_icq(&icq, &x, (0..60).map(|i| i as i32 % 4).collect());
+        let pack = idx.to_pack();
+        let back = EncodedIndex::from_pack(&pack).unwrap();
+        assert_eq!(back.fast_k, idx.fast_k);
+        assert_eq!(back.sigma, idx.sigma);
+        assert_eq!(back.codes(), idx.codes());
+        assert_eq!(back.labels, idx.labels);
+    }
+}

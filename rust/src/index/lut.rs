@@ -1,0 +1,201 @@
+//! ADC lookup tables — the rust-native mirror of the L1 Pallas kernel.
+//!
+//! `Lut::build` computes T[k, j] = ||q o s_k - c_{k,j}||^2 with the same
+//! expansion the kernel uses (||q o s_k||^2 - 2 q.c + ||c||^2), using
+//! precomputed ||c||^2 and support masks from [`LutContext`]. Numeric
+//! parity with the Pallas kernel is covered by the runtime integration
+//! test (HLO-executed LUT vs this implementation).
+
+use crate::core::distance;
+use crate::quantizer::Codebooks;
+
+/// Precomputed, query-independent LUT state (built once per index).
+///
+/// Performance note (EXPERIMENTS.md section Perf): codewords are sparse —
+/// a codebook's support is |psi| or d/K-ish dims — so the cross terms are
+/// computed against a COMPACT [m, |support|] copy of each book with the
+/// query gathered onto the same dims. This cuts LUT-build MACs from
+/// K*m*d to m*d total (each dim belongs to exactly one book for
+/// group-orthogonal quantizers), a K-fold flop reduction.
+#[derive(Clone, Debug)]
+pub struct LutContext {
+    k: usize,
+    m: usize,
+    d: usize,
+    /// ||c_{k,j}||^2, [K, m].
+    c_sq: Vec<f32>,
+    /// support dims per book.
+    dims: Vec<Vec<u32>>,
+    /// compact codebooks, [m, |support_k|] row-major per book.
+    compact: Vec<Vec<f32>>,
+}
+
+impl LutContext {
+    pub fn new(codebooks: &Codebooks) -> Self {
+        let (k, m, d) = (codebooks.k(), codebooks.m(), codebooks.d());
+        let mut c_sq = vec![0.0f32; k * m];
+        for kk in 0..k {
+            for j in 0..m {
+                c_sq[kk * m + j] = distance::norm_sq(codebooks.codeword(kk, j));
+            }
+        }
+        let mut dims = Vec::with_capacity(k);
+        let mut compact = Vec::with_capacity(k);
+        for kk in 0..k {
+            let sup = codebooks.support_dims(kk);
+            let mut book = vec![0.0f32; m * sup.len()];
+            for j in 0..m {
+                let cw = codebooks.codeword(kk, j);
+                for (si, &dim) in sup.iter().enumerate() {
+                    book[j * sup.len() + si] = cw[dim as usize];
+                }
+            }
+            dims.push(sup);
+            compact.push(book);
+        }
+        LutContext { k, m, d, c_sq, dims, compact }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+}
+
+/// Per-query lookup table, [K, m] row-major.
+#[derive(Clone, Debug)]
+pub struct Lut {
+    k: usize,
+    m: usize,
+    data: Vec<f32>,
+}
+
+impl Lut {
+    /// Build for one query. Cost: m * d MACs total for group-orthogonal
+    /// codebooks (each dim in exactly one book) — the compact layout in
+    /// [`LutContext`] skips every off-support zero.
+    pub fn build(ctx: &LutContext, _codebooks: &Codebooks, q: &[f32]) -> Lut {
+        assert_eq!(q.len(), ctx.d);
+        let (k, m) = (ctx.k, ctx.m);
+        let mut data = vec![0.0f32; k * m];
+        let mut q_sub = Vec::with_capacity(ctx.d);
+        for kk in 0..k {
+            let dims = &ctx.dims[kk];
+            let s_len = dims.len();
+            // gather the query onto this book's support
+            q_sub.clear();
+            let mut qsq = 0.0f32;
+            for &dim in dims {
+                let v = q[dim as usize];
+                q_sub.push(v);
+                qsq += v * v;
+            }
+            let book = &ctx.compact[kk];
+            let out = &mut data[kk * m..(kk + 1) * m];
+            for (j, o) in out.iter_mut().enumerate() {
+                let cross =
+                    distance::dot(&q_sub, &book[j * s_len..(j + 1) * s_len]);
+                *o = qsq - 2.0 * cross + ctx.c_sq[kk * m + j];
+            }
+        }
+        Lut { k, m, data }
+    }
+
+    /// Build from a runtime-produced flat [K, m] table (the PJRT path).
+    pub fn from_flat(k: usize, m: usize, data: Vec<f32>) -> Lut {
+        assert_eq!(data.len(), k * m);
+        Lut { k, m, data }
+    }
+
+    #[inline]
+    pub fn get(&self, k: usize, j: usize) -> f32 {
+        self.data[k * self.m + j]
+    }
+
+    #[inline]
+    pub fn row(&self, k: usize) -> &[f32] {
+        &self.data[k * self.m..(k + 1) * self.m]
+    }
+
+    /// Sum of entries for a code row over books [k0, k1).
+    #[inline]
+    pub fn partial_sum(&self, codes: &[u16], k0: usize, k1: usize) -> f32 {
+        let mut s = 0.0;
+        for kk in k0..k1 {
+            s += self.data[kk * self.m + codes[kk] as usize];
+        }
+        s
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Matrix, Rng};
+    use crate::quantizer::{pq::Pq, pq::PqOpts, Quantizer};
+
+    #[test]
+    fn lut_entries_are_support_restricted_distances() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::from_fn(100, 6, |_, _| rng.normal_f32());
+        let pq = Pq::train(&x, PqOpts { k: 3, m: 4, iters: 5, seed: 0 });
+        let cb = pq.codebooks();
+        let ctx = LutContext::new(cb);
+        let q: Vec<f32> = (0..6).map(|_| rng.normal_f32()).collect();
+        let lut = Lut::build(&ctx, cb, &q);
+        for kk in 0..3 {
+            let sup = cb.support(kk);
+            for j in 0..4 {
+                let expect =
+                    distance::l2_sq_masked(&q, cb.codeword(kk, j), &sup);
+                assert!(
+                    (lut.get(kk, j) - expect).abs() < 1e-3,
+                    "lut({kk},{j}) {} expect {expect}",
+                    lut.get(kk, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partial_sum_matches_manual() {
+        let lut = Lut::from_flat(2, 3, vec![1., 2., 3., 10., 20., 30.]);
+        let codes = [2u16, 1u16];
+        assert_eq!(lut.partial_sum(&codes, 0, 2), 3.0 + 20.0);
+        assert_eq!(lut.partial_sum(&codes, 0, 1), 3.0);
+        assert_eq!(lut.partial_sum(&codes, 1, 2), 20.0);
+    }
+
+    #[test]
+    fn full_sum_equals_exact_distance_for_disjoint_supports() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::from_fn(80, 8, |_, _| rng.normal_f32());
+        let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 8, seed: 0 });
+        let cb = pq.codebooks();
+        let codes = pq.encode(&x);
+        let ctx = LutContext::new(cb);
+        let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+        let lut = Lut::build(&ctx, cb, &q);
+        for i in 0..10 {
+            let recon = cb.reconstruct(codes.row(i));
+            let exact = distance::l2_sq(&q, &recon);
+            let adc = lut.partial_sum(codes.row(i), 0, 4);
+            assert!((adc - exact).abs() < 1e-3, "adc {adc} exact {exact}");
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Encoded indexes + search executors.
+//!
+//! One index type serves every quantization method (codebooks are in the
+//! common full-d layout); three executors implement the paper's search
+//! variants with *exact* operation accounting (the paper's "Average Ops"
+//! metric, Figs. 1-3):
+//!
+//! * [`search_exact`] — brute force over raw vectors (ground truth);
+//! * [`search_adc`]   — conventional K-term ADC scan (eq. 1), the
+//!                      baseline all prior methods use;
+//! * [`search_icq`]   — the paper's two-step search (section 3.4):
+//!                      |K|-term crude comparison with margin sigma
+//!                      (eq. 2), full refinement only when it passes.
+
+pub mod encoded;
+pub mod lut;
+pub mod opcount;
+pub mod search_adc;
+pub mod search_exact;
+pub mod search_icq;
+
+pub use encoded::EncodedIndex;
+pub use lut::Lut;
+pub use opcount::OpCounter;

@@ -1,0 +1,156 @@
+//! Operation accounting — the paper's "Average Ops" metric.
+//!
+//! Figures 1-3 plot precision against the average number of table-add
+//! operations per database element. For baseline ADC that is exactly K
+//! adds/vector; for ICQ it is |K| adds for every vector plus (K - |K|)
+//! more for the vectors whose crude test passes (plus the LUT build,
+//! identical across methods at equal K*m and therefore excluded, as in
+//! the paper). We count these exactly in the executors rather than
+//! modeling them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cumulative operation counters for one search run.
+#[derive(Debug, Default)]
+pub struct OpCounter {
+    /// LUT-entry additions during scans (the paper's op unit).
+    pub table_adds: AtomicU64,
+    /// raw f32 multiply-adds (exact search / LUT builds).
+    pub flops: AtomicU64,
+    /// candidates whose crude test passed and were refined.
+    pub refined: AtomicU64,
+    /// candidates examined in total.
+    pub candidates: AtomicU64,
+    /// queries processed.
+    pub queries: AtomicU64,
+}
+
+impl OpCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add_table_adds(&self, n: u64) {
+        self.table_adds.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_flops(&self, n: u64) {
+        self.flops.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_refined(&self, n: u64) {
+        self.refined.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_candidates(&self, n: u64) {
+        self.candidates.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_queries(&self, n: u64) {
+        self.queries.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Average table-adds per (query, database element) — the y/x axis
+    /// unit of Figs. 1-3.
+    pub fn avg_ops_per_candidate(&self) -> f64 {
+        let c = self.candidates.load(Ordering::Relaxed);
+        if c == 0 {
+            return 0.0;
+        }
+        self.table_adds.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Fraction of candidates that needed refinement.
+    pub fn refine_rate(&self) -> f64 {
+        let c = self.candidates.load(Ordering::Relaxed);
+        if c == 0 {
+            return 0.0;
+        }
+        self.refined.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn snapshot(&self) -> OpSnapshot {
+        OpSnapshot {
+            table_adds: self.table_adds.load(Ordering::Relaxed),
+            flops: self.flops.load(Ordering::Relaxed),
+            refined: self.refined.load(Ordering::Relaxed),
+            candidates: self.candidates.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.table_adds.store(0, Ordering::Relaxed);
+        self.flops.store(0, Ordering::Relaxed);
+        self.refined.store(0, Ordering::Relaxed);
+        self.candidates.store(0, Ordering::Relaxed);
+        self.queries.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A plain-value copy of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpSnapshot {
+    pub table_adds: u64,
+    pub flops: u64,
+    pub refined: u64,
+    pub candidates: u64,
+    pub queries: u64,
+}
+
+impl OpSnapshot {
+    pub fn avg_ops_per_candidate(&self) -> f64 {
+        if self.candidates == 0 {
+            0.0
+        } else {
+            self.table_adds as f64 / self.candidates as f64
+        }
+    }
+
+    pub fn refine_rate(&self) -> f64 {
+        if self.candidates == 0 {
+            0.0
+        } else {
+            self.refined as f64 / self.candidates as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_averages() {
+        let c = OpCounter::new();
+        c.add_candidates(10);
+        c.add_table_adds(25);
+        c.add_refined(3);
+        assert_eq!(c.avg_ops_per_candidate(), 2.5);
+        assert_eq!(c.refine_rate(), 0.3);
+    }
+
+    #[test]
+    fn snapshot_and_reset() {
+        let c = OpCounter::new();
+        c.add_queries(2);
+        c.add_flops(100);
+        let s = c.snapshot();
+        assert_eq!(s.queries, 2);
+        assert_eq!(s.flops, 100);
+        c.reset();
+        assert_eq!(c.snapshot(), OpSnapshot::default());
+    }
+
+    #[test]
+    fn zero_candidates_safe() {
+        let c = OpCounter::new();
+        assert_eq!(c.avg_ops_per_candidate(), 0.0);
+        assert_eq!(c.refine_rate(), 0.0);
+    }
+}

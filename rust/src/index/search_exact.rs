@@ -1,0 +1,70 @@
+//! Exact brute-force search — the ground-truth oracle.
+
+use crate::core::parallel::par_map_indexed;
+
+use super::opcount::OpCounter;
+use crate::core::{distance, Hit, Matrix, TopK};
+
+pub use crate::core::topk::Hit as ExactHit;
+
+/// Exact k-NN of `q` over the rows of `x`.
+pub fn search(x: &Matrix, q: &[f32], k: usize, ops: &OpCounter) -> Vec<Hit> {
+    let mut top = TopK::new(k);
+    for i in 0..x.rows() {
+        let d = distance::l2_sq(x.row(i), q);
+        top.push(i as u32, d);
+    }
+    ops.add_queries(1);
+    ops.add_candidates(x.rows() as u64);
+    ops.add_flops((x.rows() * x.cols()) as u64);
+    top.into_sorted()
+}
+
+/// Exact k-NN for a batch of queries (rayon-parallel over queries).
+pub fn search_batch(
+    x: &Matrix,
+    queries: &Matrix,
+    k: usize,
+    ops: &OpCounter,
+) -> Vec<Vec<Hit>> {
+    let res: Vec<Vec<Hit>> = par_map_indexed(queries.rows(), |qi| {
+        let mut top = TopK::new(k);
+        for i in 0..x.rows() {
+            top.push(i as u32, distance::l2_sq(x.row(i), queries.row(qi)));
+        }
+        top.into_sorted()
+    });
+    ops.add_queries(queries.rows() as u64);
+    ops.add_candidates((queries.rows() * x.rows()) as u64);
+    ops.add_flops((queries.rows() * x.rows() * x.cols()) as u64);
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_self_as_nearest() {
+        let x = Matrix::from_vec(3, 2, vec![0., 0., 5., 5., 9., 9.]);
+        let ops = OpCounter::new();
+        let hits = search(&x, &[5.1, 5.0], 2, &ops);
+        assert_eq!(hits[0].id, 1);
+        assert_eq!(hits[1].id, 2);
+        assert_eq!(ops.snapshot().queries, 1);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        use crate::core::Rng;
+        let mut rng = Rng::new(1);
+        let x = Matrix::from_fn(50, 4, |_, _| rng.normal_f32());
+        let q = Matrix::from_fn(5, 4, |_, _| rng.normal_f32());
+        let ops = OpCounter::new();
+        let batch = search_batch(&x, &q, 3, &ops);
+        for i in 0..5 {
+            let single = search(&x, q.row(i), 3, &ops);
+            assert_eq!(batch[i], single);
+        }
+    }
+}

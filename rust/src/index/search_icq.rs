@@ -1,0 +1,294 @@
+//! The paper's two-step ICQ search (section 3.4).
+//!
+//! Maintain a top-R list. For each candidate:
+//!   1. **crude test** (eq. 2): sum the |K| fast-group LUT entries; if
+//!      crude < threshold + sigma  (threshold = the list's current
+//!      furthest distance, sigma = the eq. 11 margin), the candidate is
+//!      *potentially* closer than the current furthest;
+//!   2. **refine** (eq. 1): only then add the remaining K - |K| entries
+//!      and offer the exact ADC distance to the list.
+//!
+//! Every vector costs |K| table-adds; only the survivors of the crude
+//! prune cost the full K — the op counters record this exactly, which is
+//! what Figs. 1-3's "Average Ops" plots consume.
+//!
+//! `search_batch_scanfirst` is the batch-restructured variant (DESIGN.md
+//! section Hardware-Adaptation): a dense crude pass over all codes (the L1
+//! Pallas `icq_scan` kernel's semantics), then threshold selection, then
+//! dense refinement of the shortlist — same op accounting, vectorizable.
+
+use crate::core::parallel::par_map_indexed;
+
+use super::encoded::EncodedIndex;
+use super::lut::Lut;
+use super::opcount::OpCounter;
+use crate::core::{Hit, Matrix, TopK};
+
+/// Tuning for the two-step search.
+#[derive(Clone, Copy, Debug)]
+pub struct IcqSearchOpts {
+    /// neighbors to return.
+    pub k: usize,
+    /// margin scale on sigma (1.0 = the paper's eq. 11 setting; larger
+    /// = safer/slower, smaller = faster/riskier).
+    pub margin_scale: f32,
+}
+
+impl Default for IcqSearchOpts {
+    fn default() -> Self {
+        IcqSearchOpts { k: 10, margin_scale: 1.0 }
+    }
+}
+
+/// Serial two-step search — the paper's algorithm verbatim.
+pub fn search(
+    index: &EncodedIndex,
+    q: &[f32],
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    let lut = Lut::build(index.lut_ctx(), index.codebooks(), q);
+    ops.add_flops((index.k() * index.m() * index.dim()) as u64);
+    search_with_lut(index, &lut, opts, ops)
+}
+
+/// Two-step search given a prebuilt LUT (PJRT runtime path).
+pub fn search_with_lut(
+    index: &EncodedIndex,
+    lut: &Lut,
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    let kb = index.k();
+    let fk = index.fast_k;
+    let margin = index.sigma * opts.margin_scale;
+    let codes = index.codes();
+    let mut top = TopK::new(opts.k);
+    let mut refined = 0u64;
+    // hot loop (section Perf): iterate code rows via chunks_exact (no
+    // per-row index math), cache the pruning bound locally and refresh it
+    // only when the heap actually changes.
+    let mut bound = f32::INFINITY; // top.threshold() + margin
+    for (i, row) in codes.as_slice().chunks_exact(kb).enumerate() {
+        // crude pass: |K| adds (eq. 2)
+        let crude = lut.partial_sum(row, 0, fk);
+        if crude < bound {
+            let full = crude + lut.partial_sum(row, fk, kb);
+            refined += 1;
+            if top.push(i as u32, full) {
+                let t = top.threshold();
+                bound = if t.is_finite() { t + margin } else { t };
+            }
+        }
+    }
+    ops.add_queries(1);
+    ops.add_candidates(index.len() as u64);
+    ops.add_table_adds(
+        index.len() as u64 * fk as u64 + refined * (kb - fk) as u64,
+    );
+    ops.add_refined(refined);
+    top.into_sorted()
+}
+
+/// Batch two-step search, parallel over queries (serial algorithm each).
+pub fn search_batch(
+    index: &EncodedIndex,
+    queries: &Matrix,
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+) -> Vec<Vec<Hit>> {
+    par_map_indexed(queries.rows(), |qi| {
+        search(index, queries.row(qi), opts, ops)
+    })
+}
+
+/// Batch-restructured two-step search: dense crude scan -> shortlist ->
+/// dense refine. Matches the L1 Pallas kernel's execution shape; returns
+/// identical results to `search` (the threshold here is derived from the
+/// best crude-k candidates, a conservative superset of the serial prune).
+pub fn search_scanfirst(
+    index: &EncodedIndex,
+    lut: &Lut,
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    let kb = index.k();
+    let fk = index.fast_k;
+    let margin = index.sigma * opts.margin_scale;
+    let n = index.len();
+    let codes = index.codes();
+
+    // dense crude pass (the icq_scan kernel)
+    let mut crude = vec![0.0f32; n];
+    for (i, c) in crude.iter_mut().enumerate() {
+        *c = lut.partial_sum(codes.row(i), 0, fk);
+    }
+    ops.add_table_adds((n * fk) as u64);
+
+    // seed the threshold by refining the crude top-k first: their FULL
+    // distances give a valid pruning radius (crude is a lower bound of
+    // full when LUT entries are true squared distances, so any final
+    // top-k member has crude < that radius).
+    let mut seed = TopK::new(opts.k);
+    for (i, &c) in crude.iter().enumerate() {
+        seed.push(i as u32, c);
+    }
+    let mut top = TopK::new(opts.k);
+    let mut refined = 0u64;
+    for hit in seed.into_sorted() {
+        let row = codes.row(hit.id as usize);
+        let full = crude[hit.id as usize] + lut.partial_sum(row, fk, kb);
+        refined += 1;
+        top.push(hit.id, full);
+        crude[hit.id as usize] = f32::INFINITY; // don't refine twice
+    }
+
+    // dense refine over everything still potentially inside the radius
+    let thresh = top.threshold() + margin;
+    for (i, &c) in crude.iter().enumerate() {
+        if c < thresh {
+            let full = c + lut.partial_sum(codes.row(i), fk, kb);
+            refined += 1;
+            top.push(i as u32, full);
+        }
+    }
+    ops.add_table_adds(refined * (kb - fk) as u64);
+    ops.add_refined(refined);
+    ops.add_candidates(n as u64);
+    ops.add_queries(1);
+    top.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+    use crate::index::{search_adc, search_exact};
+    use crate::quantizer::icq::{Icq, IcqOpts};
+
+    /// heteroscedastic data where ICQ's premise holds
+    fn setup(n: usize, seed: u64) -> (Matrix, EncodedIndex) {
+        let mut rng = Rng::new(seed);
+        let d = 16;
+        let x = Matrix::from_fn(n, d, |_, j| {
+            let scale = if j % 4 == 0 { 4.0 } else { 0.4 };
+            rng.normal_f32() * scale
+        });
+        let icq = Icq::train(
+            &x,
+            IcqOpts {
+                k: 8,
+                m: 16,
+                fast_k: 2,
+                kmeans_iters: 10,
+                prior_steps: 200,
+                seed,
+            },
+        );
+        let idx = EncodedIndex::build_icq(&icq, &x, vec![0; n]);
+        (x, idx)
+    }
+
+    #[test]
+    fn two_step_matches_full_adc_topk() {
+        // With the paper's sigma margin, the two-step result should agree
+        // with the full ADC scan on (almost) all queries; we require exact
+        // agreement of the returned distance multiset on this workload.
+        let (_, idx) = setup(400, 1);
+        let mut rng = Rng::new(42);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+            let ops = OpCounter::new();
+            let adc = search_adc::search(&idx, &q, 10, &ops);
+            let icq = search(&idx, &q, IcqSearchOpts { k: 10, margin_scale: 1.0 }, &ops);
+            let da: Vec<f32> = adc.iter().map(|h| h.dist).collect();
+            let di: Vec<f32> = icq.iter().map(|h| h.dist).collect();
+            assert_eq!(da.len(), di.len());
+            for (a, b) in da.iter().zip(&di) {
+                assert!((a - b).abs() < 1e-3, "adc {a} icq {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn uses_fewer_ops_than_adc() {
+        let (_, idx) = setup(2000, 2);
+        let mut rng = Rng::new(7);
+        let ops_adc = OpCounter::new();
+        let ops_icq = OpCounter::new();
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+            search_adc::search(&idx, &q, 10, &ops_adc);
+            search(&idx, &q, IcqSearchOpts::default(), &ops_icq);
+        }
+        let adc_ops = ops_adc.avg_ops_per_candidate();
+        let icq_ops = ops_icq.avg_ops_per_candidate();
+        assert_eq!(adc_ops, 8.0);
+        assert!(
+            icq_ops < 0.8 * adc_ops,
+            "icq {icq_ops} not meaningfully below adc {adc_ops} \
+             (refine rate {})",
+            ops_icq.refine_rate()
+        );
+    }
+
+    #[test]
+    fn margin_zero_can_only_speed_up() {
+        let (_, idx) = setup(800, 3);
+        let mut rng = Rng::new(8);
+        let q: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let ops_safe = OpCounter::new();
+        let ops_fast = OpCounter::new();
+        search(&idx, &q, IcqSearchOpts { k: 10, margin_scale: 1.0 }, &ops_safe);
+        search(&idx, &q, IcqSearchOpts { k: 10, margin_scale: 0.0 }, &ops_fast);
+        assert!(
+            ops_fast.snapshot().table_adds <= ops_safe.snapshot().table_adds
+        );
+    }
+
+    #[test]
+    fn scanfirst_agrees_with_serial() {
+        let (_, idx) = setup(600, 4);
+        let mut rng = Rng::new(9);
+        for _ in 0..5 {
+            let q: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+            let lut = Lut::build(idx.lut_ctx(), idx.codebooks(), &q);
+            let ops = OpCounter::new();
+            let serial =
+                search_with_lut(&idx, &lut, IcqSearchOpts::default(), &ops);
+            let scan = search_scanfirst(&idx, &lut, IcqSearchOpts::default(), &ops);
+            let ds: Vec<f32> = serial.iter().map(|h| h.dist).collect();
+            let dc: Vec<f32> = scan.iter().map(|h| h.dist).collect();
+            for (a, b) in ds.iter().zip(&dc) {
+                assert!((a - b).abs() < 1e-3, "serial {a} scanfirst {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn recall_vs_exact_not_degraded_by_two_step() {
+        // two-step with the paper margin should match full-ADC recall
+        let (x, idx) = setup(1000, 5);
+        let mut rng = Rng::new(10);
+        let (mut rec_adc, mut rec_icq) = (0usize, 0usize);
+        let trials = 15;
+        let r = 10;
+        let ops = OpCounter::new();
+        for _ in 0..trials {
+            let q: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+            let exact: std::collections::HashSet<u32> =
+                search_exact::search(&x, &q, r, &ops)
+                    .iter()
+                    .map(|h| h.id)
+                    .collect();
+            let adc = search_adc::search(&idx, &q, r, &ops);
+            let icq = search(&idx, &q, IcqSearchOpts { k: r, margin_scale: 1.0 }, &ops);
+            rec_adc += adc.iter().filter(|h| exact.contains(&h.id)).count();
+            rec_icq += icq.iter().filter(|h| exact.contains(&h.id)).count();
+        }
+        assert!(
+            rec_icq as f64 >= rec_adc as f64 * 0.95,
+            "two-step recall {rec_icq} fell below ADC recall {rec_adc}"
+        );
+    }
+}

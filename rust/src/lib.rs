@@ -1,0 +1,33 @@
+//! # icq — Interleaved Composite Quantization similarity-search engine
+//!
+//! A production-shaped reproduction of *Interleaved Composite Quantization
+//! for High-Dimensional Similarity Search* (Khoram, Wright, Li; 2019):
+//!
+//! * [`core`]        — vectors, distances, top-k, RNG, small linear algebra;
+//! * [`data`]        — datasets (Table 1 synthetics, MNIST/CIFAR-like),
+//!                     the icqfmt tensor container shared with python;
+//! * [`quantizer`]   — ICQ + every baseline (PQ, OPQ, CQ, SQ);
+//! * [`index`]       — encoded indexes and the exact / ADC / two-step-ICQ
+//!                     search executors with exact op accounting;
+//! * [`eval`]        — MAP / precision / recall, ground truth, the
+//!                     unseen-classes protocol, effective code length;
+//! * [`coordinator`] — the serving layer: router, dynamic batcher,
+//!                     worker pool, metrics, backpressure;
+//! * [`runtime`]     — PJRT/XLA artifact loading + execution (the AOT
+//!                     bridge to the JAX/Pallas compute graphs);
+//! * [`bench`]       — the figure/table regeneration harness;
+//! * [`config`]      — engine configuration.
+//!
+//! Python (JAX + Pallas) exists only at build time: `make artifacts`
+//! lowers the query-path graphs to HLO text and trains the joint model;
+//! the rust binary is self-contained afterwards.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod eval;
+pub mod index;
+pub mod quantizer;
+pub mod runtime;

@@ -1,0 +1,289 @@
+//! `icq` — the ICQ similarity-search engine CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   gen-synthetic            print Table 1 + materialize the datasets
+//!   train                    train ICQ, write an index snapshot
+//!   eval                     run one configuration end-to-end, print metrics
+//!   serve                    start the TCP serving coordinator
+//!   bench-figure <id>        regenerate a paper table/figure (or `all`)
+//!   runtime-check            verify the PJRT artifacts against native math
+//!
+//! Global flags: --config <file>, --set key=value (repeatable; see
+//! config::schema for keys). CLI parsing is in-tree (no clap in the
+//! vendored registry).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use icq::bench::figures::{run_figure, Scale};
+use icq::bench::workload::{run_method, EmbedKind, RunSpec};
+use icq::config::{EngineConfig, MethodKind};
+use icq::coordinator::{Coordinator, NativeSearcher};
+use icq::core::Matrix;
+use icq::data::loader;
+use icq::index::EncodedIndex;
+use icq::quantizer::icq::{Icq, IcqOpts};
+use icq::quantizer::Quantizer;
+
+const USAGE: &str = "\
+usage: icq [--config FILE] [--set KEY=VALUE]... <command>
+
+commands:
+  gen-synthetic            print Table 1 + dataset summaries
+  train [--out PATH]       train ICQ, write an index snapshot (icqfmt)
+  eval                     run one configuration, print metrics
+  serve [--addr HOST:PORT] start the TCP serving coordinator
+  bench-figure <ID> [--fast]  regenerate table1|fig1..fig6|all
+  runtime-check            verify PJRT artifacts vs native math
+";
+
+struct Args {
+    config: Option<String>,
+    sets: Vec<(String, String)>,
+    command: Vec<String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut args = std::env::args().skip(1);
+    let mut out = Args { config: None, sets: Vec::new(), command: Vec::new() };
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--config" => {
+                out.config =
+                    Some(args.next().ok_or_else(|| anyhow::anyhow!("--config needs a value"))?);
+            }
+            "--set" => {
+                let kv = args.next().ok_or_else(|| anyhow::anyhow!("--set needs KEY=VALUE"))?;
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("--set expects KEY=VALUE, got '{kv}'"))?;
+                out.sets.push((k.trim().to_string(), v.trim().to_string()));
+            }
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                std::process::exit(0);
+            }
+            other => {
+                out.command.push(other.to_string());
+            }
+        }
+    }
+    anyhow::ensure!(!out.command.is_empty(), "missing command\n{USAGE}");
+    Ok(out)
+}
+
+fn load_config(args: &Args) -> Result<EngineConfig> {
+    let mut cfg = match &args.config {
+        Some(path) => EngineConfig::from_file(path)?,
+        None => EngineConfig::default(),
+    };
+    for (k, v) in &args.sets {
+        cfg.apply(k, v)?;
+    }
+    Ok(cfg)
+}
+
+/// Extract `--flag value` from a subcommand tail.
+fn flag_value(tail: &[String], flag: &str) -> Option<String> {
+    tail.iter()
+        .position(|a| a == flag)
+        .and_then(|i| tail.get(i + 1))
+        .cloned()
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    let cfg = load_config(&args)?;
+    let tail = &args.command[1..];
+    match args.command[0].as_str() {
+        "gen-synthetic" => gen_synthetic(),
+        "train" => {
+            let out = flag_value(tail, "--out").unwrap_or_else(|| "index.icqf".into());
+            train(&cfg, &out)
+        }
+        "eval" => eval(&cfg),
+        "serve" => {
+            let addr =
+                flag_value(tail, "--addr").unwrap_or_else(|| "127.0.0.1:7878".into());
+            serve(&cfg, &addr)
+        }
+        "bench-figure" => {
+            let id = tail
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("bench-figure needs an id\n{USAGE}"))?;
+            let fast = tail.iter().any(|a| a == "--fast");
+            bench_figure(id, fast)
+        }
+        "runtime-check" => runtime_check(&cfg),
+        other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn gen_synthetic() -> Result<()> {
+    let fig = run_figure("table1", Scale::fast())?;
+    fig.print_and_save()?;
+    for i in 1..=3 {
+        let d = loader::load_named(&format!("synthetic{i}"), 0, 0)?;
+        println!(
+            "synthetic{i}: n={} d={} classes={}",
+            d.len(),
+            d.dim(),
+            d.n_classes()
+        );
+    }
+    Ok(())
+}
+
+fn train(cfg: &EngineConfig, out: &str) -> Result<()> {
+    anyhow::ensure!(
+        cfg.method == MethodKind::Icq,
+        "train currently snapshots ICQ indexes; use eval for baselines"
+    );
+    let data = loader::load_named(&cfg.dataset, cfg.n_database, cfg.seed)?;
+    println!(
+        "[train] dataset={} n={} d={} -> ICQ K={} m={}",
+        cfg.dataset,
+        data.len(),
+        data.dim(),
+        cfg.k,
+        cfg.m
+    );
+    let icq = Icq::train(
+        &data.x,
+        IcqOpts {
+            k: cfg.k,
+            m: cfg.m,
+            fast_k: cfg.fast_k,
+            kmeans_iters: 15,
+            prior_steps: 400,
+            seed: cfg.seed,
+        },
+    );
+    println!(
+        "[train] |psi|={} fast_k={} sigma={:.4} qerr={:.4}",
+        icq.xi.iter().filter(|&&v| v > 0.5).count(),
+        icq.fast_k,
+        icq.sigma,
+        icq.quantization_error(&data.x),
+    );
+    let index = EncodedIndex::build_icq(&icq, &data.x, data.y.clone());
+    index.to_pack().save(out)?;
+    println!("[train] wrote {out}");
+    Ok(())
+}
+
+fn eval(cfg: &EngineConfig) -> Result<()> {
+    let spec = RunSpec {
+        dataset: cfg.dataset.clone(),
+        n_database: if cfg.n_database == 0 { 4000 } else { cfg.n_database },
+        n_queries: cfg.n_queries,
+        method: cfg.method,
+        embed: EmbedKind::Linear,
+        d_embed: cfg.d_embed,
+        k: cfg.k,
+        m: cfg.m,
+        fast_k: cfg.fast_k,
+        top_k: cfg.search.top_k.max(10),
+        seed: cfg.seed,
+        fast_mode: false,
+    };
+    let r = run_method(&spec)?;
+    println!(
+        "method={} dataset={} K={} bits={} MAP={:.4} P@10={:.4} R@10={:.4} \
+         avg_ops={:.3} refine_rate={:.3}",
+        r.method,
+        r.dataset,
+        r.k,
+        r.code_bits,
+        r.map,
+        r.precision_at,
+        r.recall_at,
+        r.avg_ops,
+        r.refine_rate
+    );
+    Ok(())
+}
+
+fn serve(cfg: &EngineConfig, addr: &str) -> Result<()> {
+    let data = loader::load_named(
+        &cfg.dataset,
+        if cfg.n_database == 0 { 4000 } else { cfg.n_database },
+        cfg.seed,
+    )?;
+    println!("[serve] building ICQ index over {} vectors...", data.len());
+    let icq = Icq::train(
+        &data.x,
+        IcqOpts {
+            k: cfg.k,
+            m: cfg.m,
+            fast_k: cfg.fast_k,
+            kmeans_iters: 10,
+            prior_steps: 300,
+            seed: cfg.seed,
+        },
+    );
+    let index = Arc::new(EncodedIndex::build_icq(&icq, &data.x, data.y.clone()));
+    let searcher = Arc::new(NativeSearcher::new(index, cfg.search));
+    let coord = Arc::new(Coordinator::start(searcher, cfg.serve));
+    coord.serve_tcp(addr)
+}
+
+fn bench_figure(id: &str, fast: bool) -> Result<()> {
+    let scale = if fast { Scale::fast() } else { Scale::full() };
+    let ids: Vec<&str> = if id == "all" {
+        vec![
+            "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
+            "ablation-sigma", "ablation-fastk", "ablation-prior",
+        ]
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        run_figure(id, scale)?.print_and_save()?;
+    }
+    Ok(())
+}
+
+fn runtime_check(cfg: &EngineConfig) -> Result<()> {
+    use icq::index::lut::{Lut, LutContext};
+    use icq::runtime::XlaRuntime;
+
+    let rt = XlaRuntime::new(&cfg.artifacts_dir)?;
+    println!(
+        "[runtime] platform={} batch={} scan_n={}",
+        rt.artifacts.platform(),
+        rt.batch(),
+        rt.scan_n()
+    );
+    // build a small ICQ index at the exported geometry and compare the
+    // PJRT LUT with the native one
+    let geom = &rt.artifacts.manifest.graphs["lut_only"];
+    let cb_shape = &geom.inputs["codebooks"].shape;
+    let (k, m, d) = (cb_shape[0], cb_shape[1], cb_shape[2]);
+    let data = loader::load_named("synthetic1", 2000, cfg.seed)?;
+    anyhow::ensure!(data.dim() == d, "artifact geometry mismatch");
+    let icq = Icq::train(
+        &data.x,
+        IcqOpts { k, m, fast_k: 0, kmeans_iters: 5, prior_steps: 100, seed: 0 },
+    );
+    let cb = icq.codebooks();
+    let nq = rt.batch().min(4);
+    let queries = Matrix::from_fn(nq, d, |i, j| data.x.get(i, j));
+    let luts = rt.lut_batch(cb.as_slice(), k, m, d, &queries)?;
+    let ctx = LutContext::new(cb);
+    let mut max_err = 0.0f32;
+    for (qi, lut_flat) in luts.iter().enumerate() {
+        let native = Lut::build(&ctx, cb, queries.row(qi));
+        for kk in 0..k {
+            for j in 0..m {
+                let err = (lut_flat[kk * m + j] - native.get(kk, j)).abs();
+                max_err = max_err.max(err);
+            }
+        }
+    }
+    println!("[runtime] LUT parity max_err={max_err:.2e} over {nq} queries");
+    anyhow::ensure!(max_err < 1e-2, "PJRT LUT diverges from native math");
+    println!("[runtime] OK");
+    Ok(())
+}

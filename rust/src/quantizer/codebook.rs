@@ -1,0 +1,272 @@
+//! Codebooks + codes: the common representation all quantizers emit.
+//!
+//! Codebooks are stored in a full-dimension layout — every codeword is a
+//! d-vector, zero outside its support. PQ fills consecutive slices, ICQ
+//! interleaved ones, CQ is dense; one layout serves every search path and
+//! matches the [K, m, d] tensors the python/Pallas side exports.
+
+use crate::core::{distance, Matrix};
+use crate::data::format::TensorPack;
+
+/// K codebooks of m codewords in R^d.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codebooks {
+    k: usize,
+    m: usize,
+    d: usize,
+    /// [K, m, d] row-major.
+    data: Vec<f32>,
+}
+
+impl Codebooks {
+    pub fn zeros(k: usize, m: usize, d: usize) -> Self {
+        Codebooks { k, m, d, data: vec![0.0; k * m * d] }
+    }
+
+    pub fn from_vec(k: usize, m: usize, d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), k * m * d);
+        Codebooks { k, m, d, data }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn codeword(&self, k: usize, j: usize) -> &[f32] {
+        let off = (k * self.m + j) * self.d;
+        &self.data[off..off + self.d]
+    }
+
+    #[inline]
+    pub fn codeword_mut(&mut self, k: usize, j: usize) -> &mut [f32] {
+        let off = (k * self.m + j) * self.d;
+        &mut self.data[off..off + self.d]
+    }
+
+    /// Contiguous [m, d] block of codebook k.
+    #[inline]
+    pub fn book(&self, k: usize) -> &[f32] {
+        &self.data[k * self.m * self.d..(k + 1) * self.m * self.d]
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Support mask of codebook k: dims where any codeword is non-zero.
+    pub fn support(&self, k: usize) -> Vec<f32> {
+        let mut s = vec![0.0f32; self.d];
+        for j in 0..self.m {
+            for (dim, &v) in self.codeword(k, j).iter().enumerate() {
+                if v.abs() > 0.0 {
+                    s[dim] = 1.0;
+                }
+            }
+        }
+        s
+    }
+
+    /// Sparse support (dim indices) of codebook k.
+    pub fn support_dims(&self, k: usize) -> Vec<u32> {
+        self.support(k)
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v > 0.5)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+
+    /// Reconstruct one vector from its code row.
+    pub fn reconstruct(&self, code_row: &[u16]) -> Vec<f32> {
+        debug_assert_eq!(code_row.len(), self.k);
+        let mut out = vec![0.0f32; self.d];
+        for (k, &c) in code_row.iter().enumerate() {
+            for (o, &v) in out.iter_mut().zip(self.codeword(k, c as usize)) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Mean squared reconstruction error over a dataset.
+    pub fn reconstruction_error(&self, x: &Matrix, codes: &Codes) -> f32 {
+        assert_eq!(x.rows(), codes.n());
+        let mut total = 0.0f64;
+        for i in 0..x.rows() {
+            let recon = self.reconstruct(codes.row(i));
+            total += distance::l2_sq(x.row(i), &recon) as f64;
+        }
+        (total / x.rows().max(1) as f64) as f32
+    }
+
+    /// Greedy residual encoding (the shared encoder: exact when supports
+    /// are disjoint, a strong heuristic for dense CQ codebooks where the
+    /// per-step argmin is conditioned on previously chosen codewords).
+    pub fn encode_greedy(&self, x: &Matrix) -> Codes {
+        let n = x.rows();
+        let mut codes = Codes::zeros(n, self.k);
+        let mut residual = vec![0.0f32; self.d];
+        for i in 0..n {
+            residual.copy_from_slice(x.row(i));
+            for k in 0..self.k {
+                let (j, _) = distance::nearest_row(&residual, self.book(k), self.d);
+                codes.set(i, k, j as u16);
+                for (r, &c) in residual.iter_mut().zip(self.codeword(k, j)) {
+                    *r -= c;
+                }
+            }
+        }
+        codes
+    }
+
+    /// Serialize into a TensorPack under `prefix`.
+    pub fn to_pack(&self, pack: &mut TensorPack, prefix: &str) {
+        pack.insert_f32(
+            &format!("{prefix}codebooks"),
+            vec![self.k, self.m, self.d],
+            self.data.clone(),
+        );
+    }
+
+    /// Deserialize from a TensorPack.
+    pub fn from_pack(pack: &TensorPack, prefix: &str) -> anyhow::Result<Self> {
+        let (dims, data) = pack.f32(&format!("{prefix}codebooks"))?;
+        anyhow::ensure!(dims.len() == 3, "codebooks must be [K, m, d]");
+        Ok(Codebooks::from_vec(dims[0], dims[1], dims[2], data.to_vec()))
+    }
+}
+
+/// Encoded dataset: n rows of K u16 codes (m <= 65536).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codes {
+    n: usize,
+    k: usize,
+    data: Vec<u16>,
+}
+
+impl Codes {
+    pub fn zeros(n: usize, k: usize) -> Self {
+        Codes { n, k, data: vec![0; n * k] }
+    }
+
+    pub fn from_vec(n: usize, k: usize, data: Vec<u16>) -> Self {
+        assert_eq!(data.len(), n * k);
+        Codes { n, k, data }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u16] {
+        &self.data[i * self.k..(i + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, k: usize) -> u16 {
+        self.data[i * self.k + k]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, k: usize, v: u16) {
+        self.data[i * self.k + k] = v;
+    }
+
+    pub fn as_slice(&self) -> &[u16] {
+        &self.data
+    }
+
+    /// Code length in bits for a codebook size m: K * ceil(log2 m) — the
+    /// x-axis of the paper's code-length comparisons.
+    pub fn code_bits(&self, m: usize) -> usize {
+        self.k * (usize::BITS - (m - 1).leading_zeros()) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_group_books() -> Codebooks {
+        // K=2, m=2, d=4; book 0 on dims {0,1}, book 1 on dims {2,3}
+        let mut cb = Codebooks::zeros(2, 2, 4);
+        cb.codeword_mut(0, 0).copy_from_slice(&[1., 0., 0., 0.]);
+        cb.codeword_mut(0, 1).copy_from_slice(&[0., 2., 0., 0.]);
+        cb.codeword_mut(1, 0).copy_from_slice(&[0., 0., 3., 0.]);
+        cb.codeword_mut(1, 1).copy_from_slice(&[0., 0., 0., 4.]);
+        cb
+    }
+
+    #[test]
+    fn supports_detected() {
+        let cb = two_group_books();
+        assert_eq!(cb.support(0), vec![1., 1., 0., 0.]);
+        assert_eq!(cb.support_dims(1), vec![2, 3]);
+    }
+
+    #[test]
+    fn reconstruct_sums_codewords() {
+        let cb = two_group_books();
+        assert_eq!(cb.reconstruct(&[1, 0]), vec![0., 2., 3., 0.]);
+    }
+
+    #[test]
+    fn greedy_encoding_exact_for_codebook_sums() {
+        let cb = two_group_books();
+        // x = c_{0,1} + c_{1,1}
+        let x = Matrix::from_vec(1, 4, vec![0., 2., 0., 4.]);
+        let codes = cb.encode_greedy(&x);
+        assert_eq!(codes.row(0), &[1, 1]);
+        assert_eq!(cb.reconstruction_error(&x, &codes), 0.0);
+    }
+
+    #[test]
+    fn greedy_reduces_error_vs_zero_codes() {
+        let mut rng = crate::core::Rng::new(20);
+        let x = Matrix::from_fn(32, 4, |_, _| rng.normal_f32());
+        let mut data = vec![0.0f32; 2 * 8 * 4];
+        rng.fill_normal(&mut data);
+        let cb = Codebooks::from_vec(2, 8, 4, data);
+        let codes = cb.encode_greedy(&x);
+        let zero = Codes::zeros(32, 2);
+        assert!(
+            cb.reconstruction_error(&x, &codes)
+                <= cb.reconstruction_error(&x, &zero) + 1e-5
+        );
+    }
+
+    #[test]
+    fn code_bits() {
+        let c = Codes::zeros(1, 8);
+        assert_eq!(c.code_bits(256), 64); // 8 books x 8 bits
+        assert_eq!(c.code_bits(16), 32);
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let cb = two_group_books();
+        let mut pack = TensorPack::new();
+        cb.to_pack(&mut pack, "t.");
+        let back = Codebooks::from_pack(&pack, "t.").unwrap();
+        assert_eq!(cb, back);
+    }
+}

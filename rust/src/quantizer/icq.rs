@@ -1,0 +1,452 @@
+//! Interleaved Composite Quantization — the paper's method (section 3).
+//!
+//! The rust-native trainer implements the *classical* (non-gradient)
+//! instantiation of the paper's pipeline; the gradient-joint variant
+//! (embedding + quantizers + prior trained together) lives in the python
+//! L2 layer and feeds the runtime through AOT bundles. Steps:
+//!
+//!  1. **Variance model.** Per-dimension variances Lambda of the input
+//!     embeddings; fit the bi-modal prior of eq. (4) — a zero-centered
+//!     normal (major mode) + negative-skew skew-normal (minor mode) —
+//!     by coordinate gradient descent on the NLL with the eq. (10)
+//!     robustness term, alpha2/pi1/pi2 fixed per section 3.3.
+//!  2. **Subspace split.** xi from eq. (5)/(7): dims whose variance is
+//!     likelier under the minor mode form the high-variance subspace psi.
+//!  3. **Interleaved grouped codebooks.** `fast_k` codebooks are trained
+//!     on the psi-projection (residual k-means restricted to psi's dims —
+//!     supports interleaved, not consecutive), the remaining K - fast_k
+//!     on the complement. This satisfies eq. (6) exactly (hard
+//!     orthogonality), the limit the soft penalty L^ICQ pushes toward.
+//!  4. **Search parameters.** The fast set per eq. (8) is the first
+//!     `fast_k` books by construction; the crude margin sigma per
+//!     eq. (11) is the residual variance mass  sum_{i in psi-bar} lambda_i.
+
+use super::codebook::{Codebooks, Codes};
+use super::kmeans::{self, KMeansOpts};
+use super::Quantizer;
+use crate::core::{Matrix, Rng};
+
+/// Fixed mixture weights / skewness (section 3.3).
+pub const PI1: f32 = 0.95;
+pub const PI2: f32 = 0.05;
+pub const ALPHA2: f32 = -10.0;
+
+/// Trainable prior parameters Theta = (sigma1, mu2, sigma2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Theta {
+    pub sigma1: f32,
+    pub mu2: f32,
+    pub sigma2: f32,
+}
+
+/// Trained ICQ model.
+#[derive(Clone, Debug)]
+pub struct Icq {
+    codebooks: Codebooks,
+    /// number of leading (fast) codebooks — the paper's |K|.
+    pub fast_k: usize,
+    /// psi indicator (eq. 7).
+    pub xi: Vec<f32>,
+    /// per-dimension variances Lambda.
+    pub lambda: Vec<f32>,
+    /// fitted prior parameters.
+    pub theta: Theta,
+    /// crude-comparison margin (eq. 11).
+    pub sigma: f32,
+}
+
+/// Training options.
+#[derive(Clone, Copy, Debug)]
+pub struct IcqOpts {
+    pub k: usize,
+    pub m: usize,
+    /// fast-group size |K|; 0 = auto (max(1, K/4), "a few" per the paper).
+    pub fast_k: usize,
+    pub kmeans_iters: usize,
+    /// gradient steps for the prior fit.
+    pub prior_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for IcqOpts {
+    fn default() -> Self {
+        IcqOpts {
+            k: 8,
+            m: 256,
+            fast_k: 0,
+            kmeans_iters: 20,
+            prior_steps: 400,
+            seed: 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Prior density + NLL fitting (eqs. 4, 10)
+// ---------------------------------------------------------------------
+
+fn norm_pdf(x: f32, sigma: f32) -> f32 {
+    let s = sigma.max(1e-6);
+    let z = x / s;
+    (-(0.5) * z * z).exp() / (s * (2.0 * std::f32::consts::PI).sqrt())
+}
+
+fn norm_cdf(x: f32) -> f32 {
+    // Abramowitz-Stegun erf approximation (sufficient for the prior)
+    0.5 * (1.0 + erf_approx(x / std::f32::consts::SQRT_2))
+}
+
+fn erf_approx(x: f32) -> f32 {
+    let sign = x.signum();
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Skew-normal density SN(x; mu, sigma, alpha).
+pub fn skew_normal_pdf(x: f32, mu: f32, sigma: f32, alpha: f32) -> f32 {
+    let s = sigma.max(1e-6);
+    let z = (x - mu) / s;
+    2.0 / s
+        * norm_pdf(z, 1.0)
+        * norm_cdf(alpha * z)
+}
+
+/// (major, minor) mixture component densities at `lam`.
+pub fn prior_components(lam: f32, theta: Theta) -> (f32, f32) {
+    (
+        PI1 * norm_pdf(lam, theta.sigma1),
+        PI2 * skew_normal_pdf(lam, theta.mu2, theta.sigma2, ALPHA2),
+    )
+}
+
+/// L^P — NLL of eq. (4) plus the eq. (10) robustness term.
+pub fn prior_nll(lambda: &[f32], theta: Theta) -> f32 {
+    let mut nll = 0.0f64;
+    let mut minor_mass = 0.0f64;
+    for &l in lambda {
+        let (major, minor) = prior_components(l, theta);
+        nll -= ((major + minor).max(1e-30) as f64).ln();
+        minor_mass += minor as f64;
+    }
+    (nll - minor_mass.max(1e-30).ln()) as f32
+}
+
+/// Fit Theta by finite-difference gradient descent on `prior_nll`
+/// (3 params, a few hundred steps — robust and dependency-free; the
+/// python layer uses autodiff for the same objective).
+pub fn fit_prior(lambda: &[f32], steps: usize, seed: u64) -> Theta {
+    let mut sorted: Vec<f32> = lambda.to_vec();
+    sorted.sort_by(f32::total_cmp);
+    let median = sorted[sorted.len() / 2];
+    let q90 = sorted[(sorted.len() * 9 / 10).min(sorted.len() - 1)];
+    let spread = {
+        let mean: f32 = lambda.iter().sum::<f32>() / lambda.len() as f32;
+        (lambda.iter().map(|&l| (l - mean).powi(2)).sum::<f32>()
+            / lambda.len() as f32)
+            .sqrt()
+    };
+    let mut theta = Theta {
+        sigma1: median.max(1e-3),
+        mu2: q90.max(median + 1e-3),
+        sigma2: spread.max(1e-3),
+    };
+    let mut rng = Rng::new(seed ^ 0x7719);
+    let mut lr = 0.05f32;
+    let mut best = (prior_nll(lambda, theta), theta);
+    for step in 0..steps {
+        let eps = 1e-3f32;
+        let f0 = prior_nll(lambda, theta);
+        let g_s1 = (prior_nll(
+            lambda,
+            Theta { sigma1: theta.sigma1 + eps, ..theta },
+        ) - f0)
+            / eps;
+        let g_mu2 =
+            (prior_nll(lambda, Theta { mu2: theta.mu2 + eps, ..theta }) - f0)
+                / eps;
+        let g_s2 = (prior_nll(
+            lambda,
+            Theta { sigma2: theta.sigma2 + eps, ..theta },
+        ) - f0)
+            / eps;
+        // normalized gradient step with parameter-scale clamps
+        let norm = (g_s1 * g_s1 + g_mu2 * g_mu2 + g_s2 * g_s2).sqrt().max(1e-9);
+        theta.sigma1 = (theta.sigma1 - lr * g_s1 / norm).max(1e-4);
+        theta.mu2 -= lr * g_mu2 / norm;
+        theta.sigma2 = (theta.sigma2 - lr * g_s2 / norm).max(1e-4);
+        let nll = prior_nll(lambda, theta);
+        if nll < best.0 {
+            best = (nll, theta);
+        } else {
+            // small random restart kick to escape flat regions
+            if step % 50 == 49 {
+                theta = best.1;
+                lr *= 0.7;
+            }
+            theta.mu2 += (rng.uniform_f32() - 0.5) * 1e-3;
+        }
+    }
+    best.1
+}
+
+/// xi per eqs. (5)/(7), with a numerically robust tail rule: when lambda
+/// sits far above the minor mode's location both densities underflow to
+/// ~0 and the comparison is meaningless — but such a dim is by
+/// construction in the HIGH-variance regime the skew-normal mode models,
+/// so any lambda above mu2 is classified into psi.
+pub fn psi_mask(lambda: &[f32], theta: Theta) -> Vec<f32> {
+    lambda
+        .iter()
+        .map(|&l| {
+            let (major, minor) = prior_components(l, theta);
+            f32::from(minor > major || l > theta.mu2)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Trainer
+// ---------------------------------------------------------------------
+
+impl Icq {
+    /// Train on embeddings `x` (already in the search space).
+    pub fn train(x: &Matrix, opts: IcqOpts) -> Icq {
+        let d = x.cols();
+        assert!(opts.k >= 2, "ICQ needs K >= 2 (one fast + one slow group)");
+        let lambda = x.col_var();
+        let theta = fit_prior(&lambda, opts.prior_steps, opts.seed);
+        let mut xi = psi_mask(&lambda, theta);
+
+        // degenerate-fit fallback: if the split is empty or total, take the
+        // top-quartile variance dims (keeps the invariant |psi| in (0, d));
+        // mirrors the robustness discussion of section 3.3.
+        let on: usize = xi.iter().map(|&v| v as usize).sum();
+        if on == 0 || on == d {
+            let mut idx: Vec<usize> = (0..d).collect();
+            idx.sort_by(|&a, &b| lambda[b].total_cmp(&lambda[a]));
+            xi = vec![0.0; d];
+            for &i in idx.iter().take((d / 4).max(1)) {
+                xi[i] = 1.0;
+            }
+        }
+
+        let fast_k = if opts.fast_k == 0 {
+            (opts.k / 4).max(1)
+        } else {
+            opts.fast_k.min(opts.k - 1)
+        };
+
+        let psi_dims: Vec<u32> = xi
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v > 0.5)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let bar_dims: Vec<u32> = xi
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v <= 0.5)
+            .map(|(i, _)| i as u32)
+            .collect();
+
+        // residual k-means per group, restricted to the group's dims
+        let mut codebooks = Codebooks::zeros(opts.k, opts.m, d);
+        let mut residual = x.clone();
+        for kk in 0..opts.k {
+            let dims = if kk < fast_k { &psi_dims } else { &bar_dims };
+            let km = kmeans::train(
+                &residual,
+                KMeansOpts {
+                    m: opts.m,
+                    iters: opts.kmeans_iters,
+                    seed: opts.seed + 101 * kk as u64,
+                },
+                Some(dims),
+            );
+            let m_eff = km.centroids.rows();
+            for j in 0..opts.m {
+                codebooks
+                    .codeword_mut(kk, j)
+                    .copy_from_slice(km.centroids.row(j.min(m_eff - 1)));
+            }
+            for i in 0..x.rows() {
+                let c = (km.assignment[i] as usize).min(m_eff - 1);
+                for &dim in dims.iter() {
+                    let v = residual.get(i, dim as usize)
+                        - km.centroids.get(c, dim as usize);
+                    residual.set(i, dim as usize, v);
+                }
+            }
+        }
+
+        // eq. 11: sigma ~ residual variance mass outside psi
+        let sigma: f32 = bar_dims.iter().map(|&i| lambda[i as usize]).sum();
+
+        Icq { codebooks, fast_k, xi, lambda, theta, sigma }
+    }
+
+    /// Crude-distance margin (eq. 11), scaled by the tunable factor the
+    /// search executor exposes (1.0 = the paper's setting).
+    pub fn margin(&self) -> f32 {
+        self.sigma
+    }
+}
+
+impl Quantizer for Icq {
+    fn codebooks(&self) -> &Codebooks {
+        &self.codebooks
+    }
+
+    /// Group supports are disjoint, so greedy per-book nearest is exact
+    /// within each group (and across groups by orthogonality).
+    fn encode(&self, x: &Matrix) -> Codes {
+        self.codebooks.encode_greedy(x)
+    }
+
+    fn name(&self) -> &'static str {
+        "ICQ"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Heteroscedastic data: a few very-high-variance dims.
+    fn hetero(n: usize, d: usize, hot: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, j| {
+            let scale = if j < hot { 5.0 } else { 0.3 };
+            rng.normal_f32() * scale
+        })
+    }
+
+    #[test]
+    fn skew_normal_is_left_skewed_for_negative_alpha() {
+        // mass below mu should dominate for alpha = -10
+        let below: f32 = (0..100)
+            .map(|i| skew_normal_pdf(-3.0 + i as f32 * 0.03, 0.0, 1.0, -10.0))
+            .sum();
+        let above: f32 = (0..100)
+            .map(|i| skew_normal_pdf(i as f32 * 0.03, 0.0, 1.0, -10.0))
+            .sum();
+        assert!(below > 5.0 * above, "below {below} above {above}");
+    }
+
+    #[test]
+    fn prior_fit_separates_modes() {
+        // lambda: bulk near 0.1, a few near 5.0
+        let mut lambda = vec![0.1f32; 28];
+        lambda.extend_from_slice(&[4.5, 5.0, 5.5, 4.8]);
+        let theta = fit_prior(&lambda, 300, 0);
+        let xi = psi_mask(&lambda, theta);
+        let hot: f32 = xi[28..].iter().sum();
+        let cold: f32 = xi[..28].iter().sum();
+        assert!(hot >= 3.0, "hot dims not captured: {xi:?} theta {theta:?}");
+        assert!(cold <= 4.0, "too many cold dims in psi");
+    }
+
+    #[test]
+    fn training_splits_supports_interleaved() {
+        // shuffle hot dims into odd positions: supports must interleave
+        let n = 400;
+        let d = 16;
+        let mut rng = Rng::new(7);
+        let x = Matrix::from_fn(n, d, |_, j| {
+            let scale = if j % 4 == 1 { 5.0 } else { 0.3 };
+            rng.normal_f32() * scale
+        });
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 4, m: 8, fast_k: 1, kmeans_iters: 8, prior_steps: 200, seed: 0 },
+        );
+        // fast book supports subset of psi; psi contains the hot dims
+        let psi: Vec<usize> = icq
+            .xi
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v > 0.5)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!psi.is_empty() && psi.len() < d);
+        for &dim in &icq.codebooks().support_dims(0) {
+            assert!(icq.xi[dim as usize] > 0.5, "fast book leaked off psi");
+        }
+        for kk in 1..4 {
+            for &dim in &icq.codebooks().support_dims(kk) {
+                assert!(icq.xi[dim as usize] <= 0.5, "slow book leaked onto psi");
+            }
+        }
+        // interleaving: psi is NOT a consecutive range (hot dims are 1,5,9,13)
+        let consecutive = psi.windows(2).all(|w| w[1] == w[0] + 1);
+        assert!(!consecutive, "psi unexpectedly consecutive: {psi:?}");
+    }
+
+    #[test]
+    fn sigma_equals_offpsi_variance_mass() {
+        let x = hetero(300, 12, 3, 3);
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 2, m: 8, fast_k: 1, kmeans_iters: 5, prior_steps: 200, seed: 0 },
+        );
+        let expect: f32 = icq
+            .lambda
+            .iter()
+            .zip(&icq.xi)
+            .filter(|(_, &m)| m <= 0.5)
+            .map(|(&l, _)| l)
+            .sum();
+        assert!((icq.sigma - expect).abs() < 1e-4);
+    }
+
+    #[test]
+    fn fast_group_captures_most_variance() {
+        let x = hetero(400, 16, 4, 4);
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 4, m: 16, fast_k: 1, kmeans_iters: 8, prior_steps: 300, seed: 0 },
+        );
+        let psi_var: f32 = icq
+            .lambda
+            .iter()
+            .zip(&icq.xi)
+            .filter(|(_, &m)| m > 0.5)
+            .map(|(&l, _)| l)
+            .sum();
+        let total: f32 = icq.lambda.iter().sum();
+        assert!(
+            psi_var > 0.6 * total,
+            "psi variance share {} too small",
+            psi_var / total
+        );
+    }
+
+    #[test]
+    fn quantization_error_decreases_vs_zero() {
+        let x = hetero(200, 8, 2, 5);
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 2, m: 16, fast_k: 1, kmeans_iters: 10, prior_steps: 100, seed: 0 },
+        );
+        let codes = icq.encode(&x);
+        let err = icq.codebooks().reconstruction_error(&x, &codes);
+        let zero = Codes::zeros(200, 2);
+        let base = icq.codebooks().reconstruction_error(&x, &zero);
+        assert!(err < 0.8 * base, "err {err} base {base}");
+    }
+
+    #[test]
+    fn auto_fast_k() {
+        let x = hetero(150, 8, 2, 6);
+        let icq = Icq::train(&x, IcqOpts { k: 8, m: 4, fast_k: 0, kmeans_iters: 3, prior_steps: 50, seed: 0 });
+        assert_eq!(icq.fast_k, 2); // 8 / 4
+    }
+}

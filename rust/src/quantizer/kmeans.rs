@@ -1,0 +1,209 @@
+//! Lloyd's k-means with k-means++ seeding — the shared clustering
+//! substrate every quantizer trainer builds on. Assignment steps are
+//! rayon-parallel over points.
+
+use crate::core::parallel::par_map_indexed;
+use crate::core::{distance, Matrix, Rng};
+
+/// Training options.
+#[derive(Clone, Copy, Debug)]
+pub struct KMeansOpts {
+    pub m: usize,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for KMeansOpts {
+    fn default() -> Self {
+        KMeansOpts { m: 256, iters: 20, seed: 0 }
+    }
+}
+
+/// Result: centroids [m x d] + final assignment + distortion.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub centroids: Matrix,
+    pub assignment: Vec<u32>,
+    pub distortion: f32,
+}
+
+/// Train on the rows of `x` (optionally restricted to a sparse dim
+/// support: distances and updates only touch those dims; other centroid
+/// dims stay exactly zero — the property ICQ's grouped codebooks need).
+pub fn train(x: &Matrix, opts: KMeansOpts, support: Option<&[u32]>) -> KMeans {
+    let n = x.rows();
+    let d = x.cols();
+    let m = opts.m.min(n.max(1));
+    let mut rng = Rng::new(opts.seed ^ 0x6b6d);
+    let all_dims: Vec<u32>;
+    let dims: &[u32] = match support {
+        Some(s) => s,
+        None => {
+            all_dims = (0..d as u32).collect();
+            &all_dims
+        }
+    };
+
+    // ---- k-means++ seeding ----
+    let mut centroids = Matrix::zeros(m, d);
+    let first = rng.below(n);
+    for &dim in dims {
+        centroids.set(0, dim as usize, x.get(first, dim as usize));
+    }
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| distance::l2_sq_support(x.row(i), centroids.row(0), dims) as f64)
+        .collect();
+    for c in 1..m {
+        let pick = rng.weighted(&d2);
+        for &dim in dims {
+            centroids.set(c, dim as usize, x.get(pick, dim as usize));
+        }
+        for i in 0..n {
+            let nd =
+                distance::l2_sq_support(x.row(i), centroids.row(c), dims) as f64;
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+
+    // ---- Lloyd iterations ----
+    let mut assignment = vec![0u32; n];
+    let mut distortion = f32::INFINITY;
+    for _ in 0..opts.iters {
+        // assign (parallel)
+        let pairs: Vec<(u32, f32)> = par_map_indexed(n, |i| {
+            let mut best = (0u32, f32::INFINITY);
+            for c in 0..m {
+                let dist =
+                    distance::l2_sq_support(x.row(i), centroids.row(c), dims);
+                if dist < best.1 {
+                    best = (c as u32, dist);
+                }
+            }
+            best
+        });
+        let new_distortion: f32 =
+            pairs.iter().map(|p| p.1).sum::<f32>() / n.max(1) as f32;
+        for (i, p) in pairs.iter().enumerate() {
+            assignment[i] = p.0;
+        }
+        // update
+        let mut sums = vec![0.0f64; m * d];
+        let mut counts = vec![0usize; m];
+        for i in 0..n {
+            let c = assignment[i] as usize;
+            counts[c] += 1;
+            let row = x.row(i);
+            for &dim in dims {
+                sums[c * d + dim as usize] += row[dim as usize] as f64;
+            }
+        }
+        for c in 0..m {
+            if counts[c] == 0 {
+                // re-seed empty cluster at the worst-fit point
+                let worst = pairs
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                for &dim in dims {
+                    centroids.set(c, dim as usize, x.get(worst, dim as usize));
+                }
+                continue;
+            }
+            for &dim in dims {
+                centroids.set(
+                    c,
+                    dim as usize,
+                    (sums[c * d + dim as usize] / counts[c] as f64) as f32,
+                );
+            }
+        }
+        if (distortion - new_distortion).abs() < 1e-7 * distortion.max(1.0) {
+            distortion = new_distortion;
+            break;
+        }
+        distortion = new_distortion;
+    }
+    KMeans { centroids, assignment, distortion }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(n_per: usize, centers: &[[f32; 2]], seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let n = n_per * centers.len();
+        let mut x = Matrix::zeros(n, 2);
+        for (ci, c) in centers.iter().enumerate() {
+            for i in 0..n_per {
+                let r = x.row_mut(ci * n_per + i);
+                r[0] = c[0] + rng.normal_f32() * 0.1;
+                r[1] = c[1] + rng.normal_f32() * 0.1;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let centers = [[0., 0.], [10., 0.], [0., 10.], [10., 10.]];
+        let x = blobs(50, &centers, 1);
+        let km = train(&x, KMeansOpts { m: 4, iters: 25, seed: 0 }, None);
+        assert!(km.distortion < 0.1, "distortion {}", km.distortion);
+        // each true center must have a centroid nearby
+        for c in &centers {
+            let (_, dist) = distance::nearest_row(c, km.centroids.as_slice(), 2);
+            assert!(dist < 0.5);
+        }
+    }
+
+    #[test]
+    fn distortion_nonincreasing_with_more_centroids() {
+        let x = blobs(40, &[[0., 0.], [5., 5.], [9., 1.]], 2);
+        let d2 = train(&x, KMeansOpts { m: 2, iters: 20, seed: 3 }, None).distortion;
+        let d8 = train(&x, KMeansOpts { m: 8, iters: 20, seed: 3 }, None).distortion;
+        assert!(d8 <= d2 + 1e-5);
+    }
+
+    #[test]
+    fn support_restriction_keeps_other_dims_zero() {
+        let mut rng = Rng::new(4);
+        let x = Matrix::from_fn(100, 6, |_, _| rng.normal_f32());
+        let km = train(
+            &x,
+            KMeansOpts { m: 4, iters: 10, seed: 0 },
+            Some(&[1, 3]),
+        );
+        for c in 0..4 {
+            let row = km.centroids.row(c);
+            for (dim, &v) in row.iter().enumerate() {
+                if dim != 1 && dim != 3 {
+                    assert_eq!(v, 0.0, "dim {dim} of centroid {c} not zero");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn handles_m_greater_than_n() {
+        let x = Matrix::from_vec(3, 2, vec![0., 0., 1., 1., 2., 2.]);
+        let km = train(&x, KMeansOpts { m: 8, iters: 5, seed: 0 }, None);
+        assert_eq!(km.centroids.rows(), 3); // clamped
+        assert!(km.distortion < 1e-6);
+    }
+
+    #[test]
+    fn assignment_matches_nearest_centroid() {
+        let x = blobs(30, &[[0., 0.], [8., 8.]], 5);
+        let km = train(&x, KMeansOpts { m: 2, iters: 15, seed: 1 }, None);
+        for i in 0..x.rows() {
+            let (j, _) =
+                distance::nearest_row(x.row(i), km.centroids.as_slice(), 2);
+            assert_eq!(j as u32, km.assignment[i]);
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Quantizer zoo: the paper's ICQ plus every baseline it compares against.
+//!
+//! * [`kmeans`] — Lloyd + k-means++ (the shared substrate);
+//! * [`pq`]     — Product Quantization [7] (consecutive-dim subspaces);
+//! * [`opq`]    — Optimized PQ [3] (learned rotation + PQ);
+//! * [`cq`]     — Composite Quantization [21] (dense additive codebooks);
+//! * [`sq`]     — Supervised Quantization [17] (supervised linear map + CQ);
+//! * [`icq`]    — the paper: variance-prior subspace split + interleaved
+//!               grouped codebooks + crude/refine search parameters.
+//!
+//! All produce [`codebook::Codebooks`] in a common full-dimension layout
+//! (codewords are zero off their support), so one index/search
+//! implementation serves every method.
+
+pub mod codebook;
+pub mod cq;
+pub mod icq;
+pub mod kmeans;
+pub mod opq;
+pub mod pq;
+pub mod sq;
+
+pub use codebook::{Codebooks, Codes};
+
+use crate::core::Matrix;
+
+/// Common interface over all trained quantizers.
+pub trait Quantizer {
+    /// The learned codebooks (fast group first for ICQ).
+    fn codebooks(&self) -> &Codebooks;
+
+    /// Encode a batch of vectors into codes.
+    fn encode(&self, x: &Matrix) -> Codes;
+
+    /// Human-readable method name (figure labels).
+    fn name(&self) -> &'static str;
+
+    /// Mean squared reconstruction error over `x`.
+    fn quantization_error(&self, x: &Matrix) -> f32 {
+        let codes = self.encode(x);
+        self.codebooks().reconstruction_error(x, &codes)
+    }
+}

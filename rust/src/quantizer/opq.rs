@@ -1,0 +1,190 @@
+//! Optimized Product Quantization (Ge et al. [3]).
+//!
+//! Learns an orthogonal rotation R that aligns the data with PQ's
+//! consecutive subspaces, alternating:
+//!   1. PQ training/encoding in the rotated space  x' = x R
+//!   2. Procrustes update  R = U V^T  for  X^T X_hat = U S V^T
+//!      (X_hat = reconstructions), the closed form of
+//!      min_R ||X R - X_hat||_F s.t. R orthogonal.
+//!
+//! Also used as the "DQN-geometry" proxy in Fig. 4 (DESIGN.md
+//! section Substitutions): a learned rotation + PQ is the quantization
+//! geometry DQN's deep variant induces.
+
+use super::codebook::{Codebooks, Codes};
+use super::pq::{Pq, PqOpts};
+use super::Quantizer;
+use crate::core::linalg;
+use crate::core::Matrix;
+
+/// Trained OPQ model: rotation + inner PQ (in rotated coordinates).
+#[derive(Clone, Debug)]
+pub struct Opq {
+    /// d x d orthogonal rotation applied to inputs before quantization.
+    pub rotation: Matrix,
+    pq: Pq,
+}
+
+/// Training options.
+#[derive(Clone, Copy, Debug)]
+pub struct OpqOpts {
+    pub pq: PqOpts,
+    /// alternations between PQ refit and rotation update.
+    pub outer_iters: usize,
+}
+
+impl Default for OpqOpts {
+    fn default() -> Self {
+        OpqOpts { pq: PqOpts::default(), outer_iters: 5 }
+    }
+}
+
+impl Opq {
+    pub fn train(x: &Matrix, opts: OpqOpts) -> Opq {
+        let d = x.cols();
+        // R starts at identity
+        let mut rotation = Matrix::from_fn(d, d, |i, j| f32::from(i == j));
+        let mut pq;
+        for _ in 0..opts.outer_iters {
+            let xr = x.matmul(&rotation);
+            pq = Pq::train(&xr, opts.pq);
+            let codes = pq.encode(&xr);
+            // X_hat in rotated space
+            let mut xhat = Matrix::zeros(x.rows(), d);
+            for i in 0..x.rows() {
+                let recon = pq.codebooks().reconstruct(codes.row(i));
+                xhat.row_mut(i).copy_from_slice(&recon);
+            }
+            // R <- procrustes(X^T X_hat)
+            let m = x.transpose().matmul(&xhat);
+            rotation = linalg::procrustes(&m);
+        }
+        // final refit in the converged rotation
+        let xr = x.matmul(&rotation);
+        pq = Pq::train(&xr, opts.pq);
+        Opq { rotation, pq }
+    }
+
+    /// Rotate a batch into quantization coordinates.
+    pub fn rotate(&self, x: &Matrix) -> Matrix {
+        x.matmul(&self.rotation)
+    }
+
+    pub fn reconstruction_error_unrotated(&self, x: &Matrix) -> f32 {
+        // rotation is orthogonal: error is invariant, but compute it
+        // explicitly in original coordinates as a cross-check.
+        let xr = self.rotate(x);
+        let codes = self.pq.encode(&xr);
+        let rt = self.rotation.transpose();
+        let mut total = 0.0f64;
+        for i in 0..x.rows() {
+            let recon_r = self.pq.codebooks().reconstruct(codes.row(i));
+            let recon_m = Matrix::from_vec(1, x.cols(), recon_r).matmul(&rt);
+            total += crate::core::l2_sq(x.row(i), recon_m.row(0)) as f64;
+        }
+        (total / x.rows().max(1) as f64) as f32
+    }
+}
+
+impl Quantizer for Opq {
+    fn codebooks(&self) -> &Codebooks {
+        self.pq.codebooks()
+    }
+
+    /// NOTE: callers must feed ROTATED vectors to the shared index; the
+    /// index builder does this via [`Opq::rotate`]. Encoding here rotates
+    /// internally for convenience.
+    fn encode(&self, x: &Matrix) -> Codes {
+        self.pq.encode(&self.rotate(x))
+    }
+
+    fn name(&self) -> &'static str {
+        "OPQ"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+
+    /// Data with correlated pairs of dims that PQ's axis-aligned split
+    /// handles badly but a rotation fixes.
+    fn correlated(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, _| 0.0).clone_with(|m| {
+            for i in 0..n {
+                for j in (0..d).step_by(2) {
+                    let z = rng.normal_f32() * 3.0;
+                    let e = rng.normal_f32() * 0.1;
+                    m.set(i, j, z + e);
+                    if j + 1 < d {
+                        m.set(i, j + 1, -z + e);
+                    }
+                }
+            }
+        })
+    }
+
+    trait CloneWith {
+        fn clone_with(self, f: impl FnOnce(&mut Matrix)) -> Matrix;
+    }
+    impl CloneWith for Matrix {
+        fn clone_with(mut self, f: impl FnOnce(&mut Matrix)) -> Matrix {
+            f(&mut self);
+            self
+        }
+    }
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        let x = correlated(200, 4, 1);
+        let opq = Opq::train(
+            &x,
+            OpqOpts {
+                pq: PqOpts { k: 2, m: 8, iters: 8, seed: 0 },
+                outer_iters: 3,
+            },
+        );
+        assert!(linalg::is_orthogonal(&opq.rotation, 1e-2));
+    }
+
+    #[test]
+    fn opq_not_worse_than_pq_on_correlated_data() {
+        let x = correlated(400, 8, 2);
+        let pq_opts = PqOpts { k: 4, m: 16, iters: 10, seed: 0 };
+        let pq = Pq::train(&x, pq_opts);
+        let opq = Opq::train(&x, OpqOpts { pq: pq_opts, outer_iters: 4 });
+        let pq_err = pq.quantization_error(&x);
+        // OPQ error measured in rotated space (orthogonal-invariant)
+        let xr = opq.rotate(&x);
+        let opq_err = opq
+            .codebooks()
+            .reconstruction_error(&xr, &opq.pq.encode(&xr));
+        assert!(
+            opq_err <= pq_err * 1.05,
+            "opq {opq_err} should not be worse than pq {pq_err}"
+        );
+    }
+
+    #[test]
+    fn unrotated_error_matches_rotated() {
+        let x = correlated(150, 4, 3);
+        let opq = Opq::train(
+            &x,
+            OpqOpts {
+                pq: PqOpts { k: 2, m: 8, iters: 8, seed: 1 },
+                outer_iters: 2,
+            },
+        );
+        let xr = opq.rotate(&x);
+        let err_rot = opq
+            .codebooks()
+            .reconstruction_error(&xr, &opq.pq.encode(&xr));
+        let err_orig = opq.reconstruction_error_unrotated(&x);
+        assert!(
+            (err_rot - err_orig).abs() < 0.05 * err_rot.max(1e-3),
+            "rot {err_rot} orig {err_orig}"
+        );
+    }
+}

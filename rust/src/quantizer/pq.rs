@@ -1,0 +1,180 @@
+//! Product Quantization (Jegou et al. [7]) — the classical baseline.
+//!
+//! R^d is split into K *consecutive* subspaces of d/K dims; each codebook
+//! quantizes one subspace with k-means on the dataset's projection.
+//! Codewords are stored in the common full-d layout (zero off-support),
+//! so PQ runs through the same index/search machinery as ICQ.
+
+use super::codebook::{Codebooks, Codes};
+use super::kmeans::{self, KMeansOpts};
+use super::Quantizer;
+use crate::core::{distance, Matrix};
+
+/// Trained PQ model.
+#[derive(Clone, Debug)]
+pub struct Pq {
+    codebooks: Codebooks,
+    /// per-codebook dim ranges (start, len)
+    spans: Vec<(usize, usize)>,
+}
+
+/// Training options.
+#[derive(Clone, Copy, Debug)]
+pub struct PqOpts {
+    pub k: usize,
+    pub m: usize,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for PqOpts {
+    fn default() -> Self {
+        PqOpts { k: 8, m: 256, iters: 20, seed: 0 }
+    }
+}
+
+impl Pq {
+    /// Train on the rows of `x`.
+    pub fn train(x: &Matrix, opts: PqOpts) -> Pq {
+        let d = x.cols();
+        let k = opts.k;
+        assert!(k >= 1 && k <= d, "need 1 <= K <= d");
+        let mut codebooks = Codebooks::zeros(k, opts.m, d);
+        let mut spans = Vec::with_capacity(k);
+        // split d into K consecutive spans, remainder spread left-first
+        let base = d / k;
+        let extra = d % k;
+        let mut start = 0;
+        for kk in 0..k {
+            let len = base + usize::from(kk < extra);
+            spans.push((start, len));
+            let dims: Vec<u32> = (start..start + len).map(|i| i as u32).collect();
+            let km = kmeans::train(
+                x,
+                KMeansOpts { m: opts.m, iters: opts.iters, seed: opts.seed + kk as u64 },
+                Some(&dims),
+            );
+            let m_eff = km.centroids.rows();
+            for j in 0..opts.m {
+                let src = km.centroids.row(j.min(m_eff - 1));
+                codebooks.codeword_mut(kk, j).copy_from_slice(src);
+            }
+            start += len;
+        }
+        Pq { codebooks, spans }
+    }
+
+    pub fn spans(&self) -> &[(usize, usize)] {
+        &self.spans
+    }
+}
+
+impl Quantizer for Pq {
+    fn codebooks(&self) -> &Codebooks {
+        &self.codebooks
+    }
+
+    /// PQ encoding is exact per-subspace nearest (independent argmins).
+    fn encode(&self, x: &Matrix) -> Codes {
+        let n = x.rows();
+        let k = self.codebooks.k();
+        let d = self.codebooks.d();
+        let mut codes = Codes::zeros(n, k);
+        for i in 0..n {
+            let row = x.row(i);
+            for (kk, &(start, len)) in self.spans.iter().enumerate() {
+                let dims: Vec<u32> =
+                    (start..start + len).map(|v| v as u32).collect();
+                let mut best = (0usize, f32::INFINITY);
+                for j in 0..self.codebooks.m() {
+                    let dist = distance::l2_sq_support(
+                        row,
+                        self.codebooks.codeword(kk, j),
+                        &dims,
+                    );
+                    if dist < best.1 {
+                        best = (j, dist);
+                    }
+                }
+                codes.set(i, kk, best.0 as u16);
+                let _ = d;
+            }
+        }
+        codes
+    }
+
+    fn name(&self) -> &'static str {
+        "PQ"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+
+    fn random_x(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn codebooks_have_consecutive_supports() {
+        let x = random_x(300, 8, 1);
+        let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 10, seed: 0 });
+        assert_eq!(pq.spans(), &[(0, 2), (2, 2), (4, 2), (6, 2)]);
+        for kk in 0..4 {
+            let dims = pq.codebooks().support_dims(kk);
+            for &dim in &dims {
+                assert!(dim >= (kk * 2) as u32 && dim < (kk * 2 + 2) as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_split_covers_all_dims() {
+        let x = random_x(100, 7, 2);
+        let pq = Pq::train(&x, PqOpts { k: 3, m: 4, iters: 5, seed: 0 });
+        assert_eq!(pq.spans(), &[(0, 3), (3, 2), (5, 2)]);
+    }
+
+    #[test]
+    fn encoding_reduces_error_with_larger_m() {
+        let x = random_x(400, 8, 3);
+        let small = Pq::train(&x, PqOpts { k: 2, m: 4, iters: 15, seed: 0 });
+        let large = Pq::train(&x, PqOpts { k: 2, m: 64, iters: 15, seed: 0 });
+        assert!(large.quantization_error(&x) < small.quantization_error(&x));
+    }
+
+    #[test]
+    fn more_codebooks_reduce_error() {
+        let x = random_x(400, 8, 4);
+        let k2 = Pq::train(&x, PqOpts { k: 2, m: 16, iters: 15, seed: 0 });
+        let k8 = Pq::train(&x, PqOpts { k: 8, m: 16, iters: 15, seed: 0 });
+        assert!(k8.quantization_error(&x) < k2.quantization_error(&x));
+    }
+
+    #[test]
+    fn adc_identity_holds() {
+        // For PQ (disjoint supports), sum of per-book support distances to
+        // the chosen codewords == exact distance to the reconstruction.
+        let x = random_x(50, 6, 5);
+        let pq = Pq::train(&x, PqOpts { k: 3, m: 8, iters: 10, seed: 0 });
+        let codes = pq.encode(&x);
+        let q = random_x(1, 6, 99);
+        for i in 0..5 {
+            let recon = pq.codebooks().reconstruct(codes.row(i));
+            let exact = distance::l2_sq(q.row(0), &recon);
+            let mut adc = 0.0;
+            for kk in 0..3 {
+                let sup = pq.codebooks().support(kk);
+                adc += distance::l2_sq_masked(
+                    q.row(0),
+                    pq.codebooks().codeword(kk, codes.get(i, kk) as usize),
+                    &sup,
+                );
+            }
+            assert!((adc - exact).abs() < 1e-3, "adc {adc} exact {exact}");
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Artifact manifest parsing + executable cache.
+//!
+//! manifest.json is parsed with the in-tree JSON parser
+//! (`crate::core::json`) — the vendored registry has no serde_json.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::core::json::Json;
+
+/// Tensor spec in the manifest.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One exported HLO graph.
+#[derive(Clone, Debug)]
+pub struct GraphEntry {
+    pub file: String,
+    pub inputs: HashMap<String, TensorSpec>,
+    pub outputs: HashMap<String, TensorSpec>,
+}
+
+/// One exported parameter pack.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub file: String,
+    pub embed: String,
+    pub pipeline: String,
+}
+
+/// artifacts/manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: u32,
+    pub batch: usize,
+    pub scan_n: usize,
+    pub scan_block: usize,
+    pub fast_ks: Vec<usize>,
+    pub graphs: HashMap<String, GraphEntry>,
+    pub params: HashMap<String, ParamEntry>,
+}
+
+fn parse_specs(v: Option<&Json>) -> Result<HashMap<String, TensorSpec>> {
+    let mut out = HashMap::new();
+    let Some(obj) = v.and_then(|v| v.as_obj()) else {
+        return Ok(out);
+    };
+    for (name, spec) in obj {
+        let shape = spec
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("spec '{name}' missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = spec
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("f32")
+            .to_string();
+        out.insert(name.clone(), TensorSpec { shape, dtype });
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest")?;
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing version"))?
+            as u32;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let usize_field = |name: &str| -> Result<usize> {
+            j.get(name)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("manifest missing {name}"))
+        };
+        let fast_ks = j
+            .get("fast_ks")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+            .unwrap_or_default();
+        let mut graphs = HashMap::new();
+        if let Some(obj) = j.get("graphs").and_then(|g| g.as_obj()) {
+            for (name, entry) in obj {
+                let file = entry
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("graph '{name}' missing file"))?
+                    .to_string();
+                graphs.insert(
+                    name.clone(),
+                    GraphEntry {
+                        file,
+                        inputs: parse_specs(entry.get("inputs"))?,
+                        outputs: parse_specs(entry.get("outputs"))?,
+                    },
+                );
+            }
+        }
+        let mut params = HashMap::new();
+        if let Some(obj) = j.get("params").and_then(|p| p.as_obj()) {
+            for (name, entry) in obj {
+                params.insert(
+                    name.clone(),
+                    ParamEntry {
+                        file: entry
+                            .get("file")
+                            .and_then(|f| f.as_str())
+                            .unwrap_or_default()
+                            .to_string(),
+                        embed: entry
+                            .get("embed")
+                            .and_then(|f| f.as_str())
+                            .unwrap_or_default()
+                            .to_string(),
+                        pipeline: entry
+                            .get("pipeline")
+                            .and_then(|f| f.as_str())
+                            .unwrap_or_default()
+                            .to_string(),
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            version,
+            batch: usize_field("batch")?,
+            scan_n: usize_field("scan_n")?,
+            scan_block: usize_field("scan_block")?,
+            fast_ks,
+            graphs,
+            params,
+        })
+    }
+}
+
+/// Loads + caches compiled executables from an artifacts directory.
+pub struct ArtifactManager {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactManager {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactManager {
+            dir: dir.as_ref().to_path_buf(),
+            manifest,
+            client,
+            cache: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for a named graph.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .graphs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("graph '{name}' not in manifest"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Path of a parameter pack by manifest name.
+    pub fn param_path(&self, name: &str) -> Result<PathBuf> {
+        let entry = self
+            .manifest
+            .params
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("params '{name}' not in manifest"))?;
+        Ok(self.dir.join(&entry.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(
+            r#"{"version":1,"batch":16,"scan_n":4096,"scan_block":256,
+                "fast_ks":[1,2],"graphs":{"g":{"file":"g.hlo.txt",
+                "inputs":{"q":{"shape":[16,64],"dtype":"f32"}},
+                "outputs":{"lut":{"shape":[16,8,256]}}}},"params":{}}"#,
+        )
+        .unwrap();
+        assert_eq!(m.batch, 16);
+        assert_eq!(m.fast_ks, vec![1, 2]);
+        assert_eq!(m.graphs["g"].inputs["q"].shape, vec![16, 64]);
+        assert_eq!(m.graphs["g"].outputs["lut"].dtype, "f32");
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version":9}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn manifest_parses_when_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.graphs.contains_key("lut_only"));
+        assert!(m.graphs.contains_key("scan_f2"));
+        let lut = &m.graphs["lut_only"];
+        assert_eq!(lut.inputs["q"].shape.len(), 2);
+        assert_eq!(lut.outputs["lut"].shape.len(), 3);
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load("/nonexistent/place").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

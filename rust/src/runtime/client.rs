@@ -1,0 +1,124 @@
+//! The high-level runtime facade used by the coordinator's hot path.
+//!
+//! Wraps the compiled AOT graphs with typed entry points:
+//!  * [`XlaRuntime::lut_batch`]     — `lut_only`: [B, d] queries -> LUTs;
+//!  * [`XlaRuntime::pipeline_linear`] — fused linear embed + LUT;
+//!  * [`XlaRuntime::scan`]          — `scan_f{fk}`: crude distances over a
+//!    code block (the L1 Pallas kernel, executing through PJRT).
+//!
+//! Batches are padded to the exported static shapes (the manifest's
+//! `batch` / `scan_n`); padding rows are stripped from results.
+
+use anyhow::Result;
+
+use super::artifact::ArtifactManager;
+use super::literal::{f32_literal, i32_literal, to_f32_vec};
+use crate::core::Matrix;
+
+/// Typed facade over the AOT executables.
+pub struct XlaRuntime {
+    pub artifacts: ArtifactManager,
+}
+
+impl XlaRuntime {
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        Ok(XlaRuntime { artifacts: ArtifactManager::new(artifacts_dir)? })
+    }
+
+    /// Exported query-batch size (pad target).
+    pub fn batch(&self) -> usize {
+        self.artifacts.manifest.batch
+    }
+
+    /// Exported scan-block length.
+    pub fn scan_n(&self) -> usize {
+        self.artifacts.manifest.scan_n
+    }
+
+    /// Run `lut_only`: queries [B', d] (B' <= batch) + codebooks [K, m, d]
+    /// -> LUTs [B', K, m] (padding stripped).
+    pub fn lut_batch(
+        &self,
+        codebooks: &[f32],
+        k: usize,
+        m: usize,
+        d: usize,
+        queries: &Matrix,
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = self.batch();
+        anyhow::ensure!(queries.rows() <= b, "batch too large");
+        anyhow::ensure!(queries.cols() == d, "query dim mismatch");
+        let exe = self.artifacts.executable("lut_only")?;
+        // pad queries to [b, d]
+        let mut qdata = vec![0.0f32; b * d];
+        qdata[..queries.rows() * d].copy_from_slice(queries.as_slice());
+        let cb_lit = f32_literal(codebooks, &[k, m, d])?;
+        let q_lit = f32_literal(&qdata, &[b, d])?;
+        let result = exe.execute::<xla::Literal>(&[cb_lit, q_lit])?[0][0]
+            .to_literal_sync()?;
+        let lut = to_f32_vec(&result.to_tuple1()?)?;
+        anyhow::ensure!(lut.len() == b * k * m, "unexpected LUT size");
+        Ok((0..queries.rows())
+            .map(|i| lut[i * k * m..(i + 1) * k * m].to_vec())
+            .collect())
+    }
+
+    /// Run the fused `pipeline_linear` graph: raw queries [B', d_in] ->
+    /// LUTs [B', K, m] through the learned linear embedding.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pipeline_linear(
+        &self,
+        w: &[f32],
+        bias: &[f32],
+        d_in: usize,
+        codebooks: &[f32],
+        k: usize,
+        m: usize,
+        d: usize,
+        queries: &Matrix,
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = self.batch();
+        anyhow::ensure!(queries.rows() <= b, "batch too large");
+        anyhow::ensure!(queries.cols() == d_in, "query dim mismatch");
+        let exe = self.artifacts.executable("pipeline_linear")?;
+        let mut qdata = vec![0.0f32; b * d_in];
+        qdata[..queries.rows() * d_in].copy_from_slice(queries.as_slice());
+        let args = [
+            f32_literal(w, &[d_in, d])?,
+            f32_literal(bias, &[d])?,
+            f32_literal(codebooks, &[k, m, d])?,
+            f32_literal(&qdata, &[b, d_in])?,
+        ];
+        let result =
+            exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let lut = to_f32_vec(&result.to_tuple1()?)?;
+        anyhow::ensure!(lut.len() == b * k * m, "unexpected LUT size");
+        Ok((0..queries.rows())
+            .map(|i| lut[i * k * m..(i + 1) * k * m].to_vec())
+            .collect())
+    }
+
+    /// Run `scan_f{fast_k}` over one padded code block: LUTs [B, K, m] +
+    /// codes [scan_n, K] -> crude distances [B, scan_n].
+    pub fn scan(
+        &self,
+        fast_k: usize,
+        lut: &[f32],
+        b: usize,
+        k: usize,
+        m: usize,
+        codes: &[i32],
+    ) -> Result<Vec<f32>> {
+        let n = self.scan_n();
+        anyhow::ensure!(codes.len() == n * k, "codes must be [scan_n, K]");
+        anyhow::ensure!(b == self.batch(), "lut batch must equal export batch");
+        let name = format!("scan_f{fast_k}");
+        let exe = self.artifacts.executable(&name)?;
+        let args = [f32_literal(lut, &[b, k, m])?, i32_literal(codes, &[n, k])?];
+        let result =
+            exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let crude = to_f32_vec(&result.to_tuple1()?)?;
+        anyhow::ensure!(crude.len() == b * n, "unexpected scan size");
+        Ok(crude)
+    }
+}

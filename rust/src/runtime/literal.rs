@@ -1,0 +1,43 @@
+//! Literal <-> rust-buffer conversion helpers for the PJRT boundary.
+
+use anyhow::Result;
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape/data mismatch");
+    let flat = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape/data mismatch");
+    let flat = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims_i64)?)
+}
+
+/// Extract a flat f32 vector from a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let lit = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0; 3], &[2, 2]).is_err());
+        assert!(i32_literal(&[1; 5], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime — the AOT bridge to the JAX/Pallas compute graphs.
+//!
+//! `make artifacts` (python, build-time) lowers the query-path graphs to
+//! HLO **text** (see python/compile/aot.py for why text, not serialized
+//! protos) and writes `artifacts/manifest.json`. This module loads those
+//! artifacts through the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → compile → execute) and exposes them
+//! as typed executables to the coordinator's hot path. Python never runs
+//! at request time.
+
+pub mod artifact;
+pub mod client;
+pub mod literal;
+pub mod searcher;
+pub mod service;
+
+pub use artifact::{ArtifactManager, Manifest};
+pub use client::XlaRuntime;
+pub use searcher::{XlaLutSearcher, XlaScanSearcher};
+pub use service::XlaService;

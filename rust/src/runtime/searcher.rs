@@ -1,0 +1,256 @@
+//! PJRT-backed batch searchers: the production request path where the
+//! L1/L2 AOT graphs do the heavy math.
+//!
+//! Two variants, both Send+Sync via [`XlaService`]:
+//!
+//! * [`XlaLutSearcher`] — LUTs built by the `lut_only` graph (the Pallas
+//!   `adc_lut` kernel through PJRT), scan + two-step prune native. This is
+//!   the default serving path: LUT build is the MXU-shaped part, the scan
+//!   is branchy and stays on the host.
+//! * [`XlaScanSearcher`] — additionally runs the crude pass through the
+//!   `scan_f{fast_k}` graph (the Pallas `icq_scan` kernel) over padded
+//!   code blocks, then refines natively. Exercises the full L1 surface;
+//!   used by the runtime integration tests and the kernels bench.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::service::XlaService;
+use crate::coordinator::BatchSearcher;
+use crate::core::{Hit, Matrix, TopK};
+use crate::index::lut::Lut;
+use crate::index::search_icq::{self, IcqSearchOpts};
+use crate::index::{EncodedIndex, OpCounter};
+
+/// LUT-by-PJRT, scan-native searcher.
+pub struct XlaLutSearcher {
+    pub svc: Arc<XlaService>,
+    pub index: Arc<EncodedIndex>,
+    pub opts: IcqSearchOpts,
+    pub ops: Arc<OpCounter>,
+    batch: usize,
+}
+
+impl XlaLutSearcher {
+    pub fn new(
+        svc: Arc<XlaService>,
+        index: Arc<EncodedIndex>,
+        opts: IcqSearchOpts,
+    ) -> Result<Self> {
+        let (batch, _, _) = svc.meta()?;
+        Ok(XlaLutSearcher {
+            svc,
+            index,
+            opts,
+            ops: Arc::new(OpCounter::new()),
+            batch,
+        })
+    }
+
+    fn luts_for(&self, queries: &Matrix) -> Result<Vec<Lut>> {
+        let (k, m, d) = (self.index.k(), self.index.m(), self.index.dim());
+        let mut out = Vec::with_capacity(queries.rows());
+        let mut start = 0;
+        while start < queries.rows() {
+            let len = self.batch.min(queries.rows() - start);
+            let idx: Vec<usize> = (start..start + len).collect();
+            let sub = queries.select_rows(&idx);
+            let flats = self.svc.lut_batch(
+                self.index.codebooks().as_slice(),
+                k,
+                m,
+                d,
+                &sub,
+            )?;
+            out.extend(flats.into_iter().map(|f| Lut::from_flat(k, m, f)));
+            start += len;
+        }
+        Ok(out)
+    }
+}
+
+impl BatchSearcher for XlaLutSearcher {
+    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
+        let luts = self.luts_for(queries).expect("pjrt lut batch");
+        luts.iter()
+            .map(|lut| {
+                search_icq::search_with_lut(
+                    &self.index,
+                    lut,
+                    IcqSearchOpts { k: top_k, ..self.opts },
+                    &self.ops,
+                )
+            })
+            .collect()
+    }
+
+    fn dim(&self) -> usize {
+        self.index.dim()
+    }
+}
+
+/// Full-PJRT crude pass + native refine.
+pub struct XlaScanSearcher {
+    pub svc: Arc<XlaService>,
+    pub index: Arc<EncodedIndex>,
+    pub opts: IcqSearchOpts,
+    pub ops: Arc<OpCounter>,
+    batch: usize,
+    scan_n: usize,
+    /// database codes padded to a multiple of scan_n, i32 row-major,
+    /// padding rows use code 0 with a +inf-distance guard (they are
+    /// excluded by index bounds at refine time).
+    codes_padded: Vec<i32>,
+    n_blocks: usize,
+}
+
+impl XlaScanSearcher {
+    pub fn new(
+        svc: Arc<XlaService>,
+        index: Arc<EncodedIndex>,
+        opts: IcqSearchOpts,
+    ) -> Result<Self> {
+        let (batch, scan_n, _) = svc.meta()?;
+        let k = index.k();
+        let n = index.len();
+        let n_blocks = n.div_ceil(scan_n);
+        let mut codes_padded = vec![0i32; n_blocks * scan_n * k];
+        for i in 0..n {
+            for kk in 0..k {
+                codes_padded[i * k + kk] = index.codes().get(i, kk) as i32;
+            }
+        }
+        Ok(XlaScanSearcher {
+            svc,
+            index,
+            opts,
+            ops: Arc::new(OpCounter::new()),
+            batch,
+            scan_n,
+            codes_padded,
+            n_blocks,
+        })
+    }
+
+    /// Crude distances for `queries` (padded internally), [nq][n].
+    pub fn crude_scan(&self, queries: &Matrix) -> Result<Vec<Vec<f32>>> {
+        let (k, m, d) = (self.index.k(), self.index.m(), self.index.dim());
+        let fast_k = self.index.fast_k;
+        let n = self.index.len();
+        let mut out = vec![vec![0.0f32; n]; queries.rows()];
+        let mut start = 0;
+        while start < queries.rows() {
+            let len = self.batch.min(queries.rows() - start);
+            let idx: Vec<usize> = (start..start + len).collect();
+            let sub = queries.select_rows(&idx);
+            let flats = self.svc.lut_batch(
+                self.index.codebooks().as_slice(),
+                k,
+                m,
+                d,
+                &sub,
+            )?;
+            // re-pad LUTs to the full export batch for the scan graph
+            let mut lut_flat = vec![0.0f32; self.batch * k * m];
+            for (qi, f) in flats.iter().enumerate() {
+                lut_flat[qi * k * m..(qi + 1) * k * m].copy_from_slice(f);
+            }
+            for blk in 0..self.n_blocks {
+                let codes =
+                    &self.codes_padded[blk * self.scan_n * k..(blk + 1) * self.scan_n * k];
+                let crude = self.svc.scan(
+                    fast_k,
+                    &lut_flat,
+                    self.batch,
+                    k,
+                    m,
+                    codes,
+                )?;
+                for qi in 0..len {
+                    let base = blk * self.scan_n;
+                    let take = self.scan_n.min(n - base);
+                    out[start + qi][base..base + take].copy_from_slice(
+                        &crude[qi * self.scan_n..qi * self.scan_n + take],
+                    );
+                }
+            }
+            self.ops.add_table_adds((len * n * fast_k) as u64);
+            self.ops.add_candidates((len * n) as u64);
+            self.ops.add_queries(len as u64);
+            start += len;
+        }
+        Ok(out)
+    }
+}
+
+impl BatchSearcher for XlaScanSearcher {
+    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
+        let (k, m) = (self.index.k(), self.index.m());
+        let fast_k = self.index.fast_k;
+        let margin = self.index.sigma * self.opts.margin_scale;
+        let luts = {
+            // need per-query LUTs again for the refine adds
+            let mut l = Vec::with_capacity(queries.rows());
+            let mut start = 0;
+            while start < queries.rows() {
+                let len = self.batch.min(queries.rows() - start);
+                let idx: Vec<usize> = (start..start + len).collect();
+                let sub = queries.select_rows(&idx);
+                let flats = self
+                    .svc
+                    .lut_batch(
+                        self.index.codebooks().as_slice(),
+                        k,
+                        m,
+                        self.index.dim(),
+                        &sub,
+                    )
+                    .expect("pjrt lut");
+                l.extend(flats.into_iter().map(|f| Lut::from_flat(k, m, f)));
+                start += len;
+            }
+            l
+        };
+        let crude = self.crude_scan(queries).expect("pjrt scan");
+        let codes = self.index.codes();
+        luts.iter()
+            .zip(crude.iter())
+            .map(|(lut, cr)| {
+                // seed threshold from crude top-k fulls, then refine
+                let mut seed = TopK::new(top_k);
+                for (i, &c) in cr.iter().enumerate() {
+                    seed.push(i as u32, c);
+                }
+                let mut top = TopK::new(top_k);
+                let mut refined = 0u64;
+                let mut seen =
+                    std::collections::HashSet::with_capacity(top_k * 2);
+                for h in seed.into_sorted() {
+                    let row = codes.row(h.id as usize);
+                    let full = cr[h.id as usize]
+                        + lut.partial_sum(row, fast_k, k);
+                    refined += 1;
+                    top.push(h.id, full);
+                    seen.insert(h.id);
+                }
+                let thresh = top.threshold() + margin;
+                for (i, &c) in cr.iter().enumerate() {
+                    if c < thresh && !seen.contains(&(i as u32)) {
+                        let full =
+                            c + lut.partial_sum(codes.row(i), fast_k, k);
+                        refined += 1;
+                        top.push(i as u32, full);
+                    }
+                }
+                self.ops.add_table_adds(refined * (k - fast_k) as u64);
+                self.ops.add_refined(refined);
+                top.into_sorted()
+            })
+            .collect()
+    }
+
+    fn dim(&self) -> usize {
+        self.index.dim()
+    }
+}

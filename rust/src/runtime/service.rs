@@ -1,0 +1,212 @@
+//! XlaService: a Send+Sync handle to the PJRT runtime.
+//!
+//! The `xla` crate's client/executable types hold `Rc`s and raw pointers
+//! (not Send/Sync), so the runtime is owned by ONE dedicated executor
+//! thread; the rest of the engine talks to it through bounded channels.
+//! This also serializes PJRT execute calls, which the CPU client requires
+//! for determinism, and mirrors how production servers pin an accelerator
+//! runtime to a driver thread.
+
+use std::sync::mpsc::{self, SyncSender};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::client::XlaRuntime;
+use crate::core::Matrix;
+
+enum Request {
+    LutBatch {
+        codebooks: Vec<f32>,
+        k: usize,
+        m: usize,
+        d: usize,
+        queries: Matrix,
+        reply: SyncSender<Result<Vec<Vec<f32>>>>,
+    },
+    PipelineLinear {
+        w: Vec<f32>,
+        b: Vec<f32>,
+        d_in: usize,
+        codebooks: Vec<f32>,
+        k: usize,
+        m: usize,
+        d: usize,
+        queries: Matrix,
+        reply: SyncSender<Result<Vec<Vec<f32>>>>,
+    },
+    Scan {
+        fast_k: usize,
+        lut: Vec<f32>,
+        b: usize,
+        k: usize,
+        m: usize,
+        codes: Vec<i32>,
+        reply: SyncSender<Result<Vec<f32>>>,
+    },
+    Meta {
+        reply: SyncSender<(usize, usize, String)>,
+    },
+}
+
+/// Send+Sync facade over a dedicated PJRT executor thread.
+pub struct XlaService {
+    tx: Mutex<SyncSender<Request>>,
+}
+
+impl XlaService {
+    /// Spawn the executor thread; fails fast if the artifacts directory
+    /// is unusable.
+    pub fn start(artifacts_dir: &str) -> Result<Self> {
+        // Probe the manifest on the caller thread for an eager error.
+        super::artifact::Manifest::load(artifacts_dir)?;
+        let dir = artifacts_dir.to_string();
+        let (tx, rx) = mpsc::sync_channel::<Request>(64);
+        let (init_tx, init_rx) = mpsc::sync_channel::<Result<()>>(1);
+        std::thread::Builder::new()
+            .name("icq-xla-exec".into())
+            .spawn(move || {
+                let rt = match XlaRuntime::new(&dir) {
+                    Ok(rt) => {
+                        let _ = init_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::LutBatch {
+                            codebooks,
+                            k,
+                            m,
+                            d,
+                            queries,
+                            reply,
+                        } => {
+                            let _ = reply.send(
+                                rt.lut_batch(&codebooks, k, m, d, &queries),
+                            );
+                        }
+                        Request::PipelineLinear {
+                            w,
+                            b,
+                            d_in,
+                            codebooks,
+                            k,
+                            m,
+                            d,
+                            queries,
+                            reply,
+                        } => {
+                            let _ = reply.send(rt.pipeline_linear(
+                                &w, &b, d_in, &codebooks, k, m, d, &queries,
+                            ));
+                        }
+                        Request::Scan { fast_k, lut, b, k, m, codes, reply } => {
+                            let _ = reply
+                                .send(rt.scan(fast_k, &lut, b, k, m, &codes));
+                        }
+                        Request::Meta { reply } => {
+                            let _ = reply.send((
+                                rt.batch(),
+                                rt.scan_n(),
+                                rt.artifacts.platform(),
+                            ));
+                        }
+                    }
+                }
+            })?;
+        init_rx.recv()??;
+        Ok(XlaService { tx: Mutex::new(tx) })
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("xla executor thread gone"))
+    }
+
+    /// (export batch, scan_n, platform name).
+    pub fn meta(&self) -> Result<(usize, usize, String)> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Request::Meta { reply })?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor dropped"))
+    }
+
+    /// See [`XlaRuntime::lut_batch`].
+    pub fn lut_batch(
+        &self,
+        codebooks: &[f32],
+        k: usize,
+        m: usize,
+        d: usize,
+        queries: &Matrix,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Request::LutBatch {
+            codebooks: codebooks.to_vec(),
+            k,
+            m,
+            d,
+            queries: queries.clone(),
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor dropped"))?
+    }
+
+    /// See [`XlaRuntime::pipeline_linear`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn pipeline_linear(
+        &self,
+        w: &[f32],
+        b: &[f32],
+        d_in: usize,
+        codebooks: &[f32],
+        k: usize,
+        m: usize,
+        d: usize,
+        queries: &Matrix,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Request::PipelineLinear {
+            w: w.to_vec(),
+            b: b.to_vec(),
+            d_in,
+            codebooks: codebooks.to_vec(),
+            k,
+            m,
+            d,
+            queries: queries.clone(),
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor dropped"))?
+    }
+
+    /// See [`XlaRuntime::scan`].
+    pub fn scan(
+        &self,
+        fast_k: usize,
+        lut: &[f32],
+        b: usize,
+        k: usize,
+        m: usize,
+        codes: &[i32],
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Request::Scan {
+            fast_k,
+            lut: lut.to_vec(),
+            b,
+            k,
+            m,
+            codes: codes.to_vec(),
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor dropped"))?
+    }
+}

@@ -1,0 +1,134 @@
+//! Coordinator integration: full serving stack over real TCP, plus
+//! overload/shedding behavior.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use icq::config::{SearchConfig, ServeConfig};
+use icq::coordinator::{Coordinator, NativeSearcher, QueryRequest};
+use icq::core::json::Json;
+use icq::core::{Matrix, Rng};
+use icq::index::EncodedIndex;
+use icq::quantizer::icq::{Icq, IcqOpts};
+
+fn make_coordinator(cfg: ServeConfig) -> Arc<Coordinator> {
+    let mut rng = Rng::new(5);
+    let x = Matrix::from_fn(500, 12, |_, j| {
+        rng.normal_f32() * if j % 3 == 0 { 3.0 } else { 0.3 }
+    });
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k: 4, m: 16, fast_k: 1, kmeans_iters: 6, prior_steps: 100, seed: 0 },
+    );
+    let index = Arc::new(EncodedIndex::build_icq(&icq, &x, vec![0; 500]));
+    let searcher =
+        Arc::new(NativeSearcher::new(index, SearchConfig::default()));
+    Arc::new(Coordinator::start(searcher, cfg))
+}
+
+#[test]
+fn tcp_roundtrip_json_protocol() {
+    let coord = make_coordinator(ServeConfig::default());
+    // bind on an ephemeral port by probing
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+    let c2 = coord.clone();
+    let addr_s = addr.to_string();
+    std::thread::spawn(move || {
+        let _ = c2.serve_tcp(&addr_s);
+    });
+    // wait for the listener
+    let mut stream = None;
+    for _ in 0..50 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
+        }
+    }
+    let stream = stream.expect("server did not come up");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // valid query
+    let vec_json: Vec<String> = (0..12).map(|i| format!("{}", i as f32 * 0.1)).collect();
+    writeln!(writer, "{{\"vector\":[{}],\"top_k\":3}}", vec_json.join(",")).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("ids").unwrap().as_arr().unwrap().len(), 3);
+
+    // malformed query -> error object, connection stays usable
+    writeln!(writer, "this is not json").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(&line).unwrap().get("error").is_some());
+
+    // still alive after the error
+    writeln!(writer, "{{\"vector\":[{}]}}", vec_json.join(",")).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(&line).unwrap().get("ids").is_some());
+}
+
+#[test]
+fn sheds_load_when_admission_exhausted() {
+    // max_inflight 1 and a single slow worker: concurrent callers must
+    // observe rejections rather than unbounded queueing.
+    let coord = make_coordinator(ServeConfig {
+        max_batch: 1,
+        max_wait_us: 10,
+        workers: 1,
+        max_inflight: 1,
+    });
+    let mut rejected = 0;
+    let mut ok = 0;
+    std::thread::scope(|s| {
+        let results: Vec<_> = (0..16)
+            .map(|_| {
+                let c = coord.clone();
+                s.spawn(move || {
+                    c.query(QueryRequest { vector: vec![0.1; 12], top_k: 2 })
+                })
+            })
+            .collect();
+        for h in results {
+            match h.join().unwrap() {
+                Ok(_) => ok += 1,
+                Err(_) => rejected += 1,
+            }
+        }
+    });
+    assert!(ok >= 1, "at least some queries must succeed");
+    assert_eq!(ok + rejected, 16);
+    let shed = coord
+        .metrics
+        .queries_rejected
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(shed as usize, rejected);
+}
+
+#[test]
+fn metrics_track_completed_queries() {
+    let coord = make_coordinator(ServeConfig {
+        max_batch: 8,
+        max_wait_us: 100,
+        workers: 2,
+        max_inflight: 256,
+    });
+    for i in 0..20 {
+        let v = vec![(i % 5) as f32 * 0.2; 12];
+        coord.query(QueryRequest { vector: v, top_k: 4 }).unwrap();
+    }
+    let done = coord
+        .metrics
+        .queries_done
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(done, 20);
+    assert!(coord.metrics.latency_percentile_us(0.5) > 0);
+    assert!(coord.metrics.summary().contains("queries=20"));
+}

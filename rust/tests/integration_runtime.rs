@@ -1,0 +1,203 @@
+//! PJRT runtime integration: execute the AOT-exported JAX/Pallas graphs
+//! and verify numeric parity with the native rust math, then run the full
+//! bundle-driven search path. Tests skip (with a notice) when artifacts
+//! have not been built — run `make artifacts` first.
+
+use icq::core::Matrix;
+use icq::data::loader::TrainedBundle;
+use icq::index::lut::{Lut, LutContext};
+use icq::index::search_icq::{self, IcqSearchOpts};
+use icq::index::{search_adc, EncodedIndex, OpCounter};
+use icq::quantizer::Codebooks;
+use icq::runtime::XlaRuntime;
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (make artifacts)");
+        return None;
+    }
+    Some(XlaRuntime::new(&dir).expect("runtime init"))
+}
+
+fn bundle(rt: &XlaRuntime) -> TrainedBundle {
+    TrainedBundle::load(
+        rt.artifacts.param_path("trained_linear_synth").unwrap(),
+    )
+    .expect("bundle load")
+}
+
+#[test]
+fn pjrt_lut_matches_native_lut() {
+    let Some(rt) = runtime() else { return };
+    let b = bundle(&rt);
+    let cb = Codebooks::from_vec(b.k, b.m, b.d, b.codebooks.clone());
+    let ctx = LutContext::new(&cb);
+    let nq = rt.batch().min(4);
+    let queries = Matrix::from_fn(nq, b.d, |i, j| b.embeddings.get(i, j));
+    let luts = rt
+        .lut_batch(cb.as_slice(), b.k, b.m, b.d, &queries)
+        .expect("pjrt lut");
+    for (qi, flat) in luts.iter().enumerate() {
+        let native = Lut::build(&ctx, &cb, queries.row(qi));
+        for kk in 0..b.k {
+            for j in 0..b.m {
+                let got = flat[kk * b.m + j];
+                let want = native.get(kk, j);
+                assert!(
+                    (got - want).abs() < 1e-2 * want.abs().max(1.0),
+                    "lut[{qi}][{kk},{j}]: pjrt {got} native {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_scan_matches_native_crude_sum() {
+    let Some(rt) = runtime() else { return };
+    let b = bundle(&rt);
+    let cb = Codebooks::from_vec(b.k, b.m, b.d, b.codebooks.clone());
+    let ctx = LutContext::new(&cb);
+    let batch = rt.batch();
+    let queries = Matrix::from_fn(batch, b.d, |i, j| b.embeddings.get(i, j));
+    let luts = rt
+        .lut_batch(cb.as_slice(), b.k, b.m, b.d, &queries)
+        .expect("pjrt lut");
+    // pad codes to scan_n
+    let scan_n = rt.scan_n();
+    let n_use = b.n.min(scan_n);
+    let mut codes = vec![0i32; scan_n * b.k];
+    codes[..n_use * b.k].copy_from_slice(&b.codes[..n_use * b.k]);
+    // flatten luts back to [batch, K, m]
+    let mut lut_flat = vec![0.0f32; batch * b.k * b.m];
+    for (qi, flat) in luts.iter().enumerate() {
+        lut_flat[qi * b.k * b.m..(qi + 1) * b.k * b.m].copy_from_slice(flat);
+    }
+    for fast_k in rt.artifacts.manifest.fast_ks.clone() {
+        if fast_k > b.k {
+            continue;
+        }
+        let crude = rt
+            .scan(fast_k, &lut_flat, batch, b.k, b.m, &codes)
+            .expect("pjrt scan");
+        // compare a sample of entries vs native partial sums
+        for qi in (0..batch).step_by(5) {
+            let native_lut =
+                Lut::from_flat(b.k, b.m, luts[qi].clone());
+            for i in (0..n_use).step_by(97) {
+                let row: Vec<u16> = (0..b.k)
+                    .map(|kk| b.codes[i * b.k + kk] as u16)
+                    .collect();
+                let want = native_lut.partial_sum(&row, 0, fast_k);
+                let got = crude[qi * scan_n + i];
+                assert!(
+                    (got - want).abs() < 1e-2 * want.abs().max(1.0),
+                    "scan_f{fast_k}[{qi},{i}]: pjrt {got} native {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bundle_index_two_step_search_is_consistent() {
+    let Some(rt) = runtime() else { return };
+    let b = bundle(&rt);
+    let index = EncodedIndex::from_bundle(&b).expect("index from bundle");
+    assert_eq!(index.len(), b.n);
+    assert!(index.fast_k >= 1 && index.fast_k < index.k());
+    let ops = OpCounter::new();
+    let ops_lean = OpCounter::new();
+    // queries = first few database embeddings (self-retrieval sanity)
+    for qi in 0..5 {
+        let q = b.embeddings.row(qi);
+        let icq_hits = search_icq::search(
+            &index,
+            q,
+            IcqSearchOpts { k: 10, margin_scale: 1.0 },
+            &ops,
+        );
+        let adc_hits = search_adc::search(&index, q, 10, &ops);
+        // two-step == full ADC distances (group-orthogonal codebooks)
+        for (a, b2) in icq_hits.iter().zip(&adc_hits) {
+            assert!(
+                (a.dist - b2.dist).abs() < 1e-2,
+                "two-step {} vs adc {}",
+                a.dist,
+                b2.dist
+            );
+        }
+        // margin 0 is lossless under hard orthogonality (see
+        // prop_two_step_equals_full_adc) and must actually prune
+        let lean_hits = search_icq::search(
+            &index,
+            q,
+            IcqSearchOpts { k: 10, margin_scale: 0.0 },
+            &ops_lean,
+        );
+        for (a, b2) in lean_hits.iter().zip(&adc_hits) {
+            assert!(
+                (a.dist - b2.dist).abs() < 1e-2,
+                "lean two-step {} vs adc {}",
+                a.dist,
+                b2.dist
+            );
+        }
+    }
+    // Cost shape: never MORE than the K adds/vector of full ADC. How much
+    // less depends on how strongly the gradient-joint training concentrated
+    // variance into psi — weak on this easily-separable synthetic workload
+    // (EXPERIMENTS.md section Learned-bundle notes); the classical rust
+    // trainer's pruning power is asserted in integration_pipeline.
+    assert!(
+        ops_lean.avg_ops_per_candidate() <= index.k() as f64 + 1e-9,
+        "margin-0 two-step exceeded K adds/vector (got {:.3})",
+        ops_lean.avg_ops_per_candidate()
+    );
+}
+
+#[test]
+fn pipeline_linear_graph_runs_raw_queries() {
+    let Some(rt) = runtime() else { return };
+    let b = bundle(&rt);
+    let (w_dims, w) = b.pack.f32("embed.w").expect("embed weights");
+    let (_, bias) = b.pack.f32("embed.b").expect("embed bias");
+    let d_in = w_dims[0];
+    let nq = 4;
+    let queries = Matrix::from_fn(nq, d_in, |i, j| b.test_x.get(i, j));
+    let luts = rt
+        .pipeline_linear(
+            w,
+            bias,
+            d_in,
+            &b.codebooks,
+            b.k,
+            b.m,
+            b.d,
+            &queries,
+        )
+        .expect("fused pipeline");
+    assert_eq!(luts.len(), nq);
+    // parity: embed natively then build the native LUT
+    let wm = Matrix::from_vec(d_in, b.d, w.to_vec());
+    let cb = Codebooks::from_vec(b.k, b.m, b.d, b.codebooks.clone());
+    let ctx = LutContext::new(&cb);
+    for qi in 0..nq {
+        let mut z = queries.select_rows(&[qi]).matmul(&wm);
+        for (v, bb) in z.row_mut(0).iter_mut().zip(bias) {
+            *v += bb;
+        }
+        let native = Lut::build(&ctx, &cb, z.row(0));
+        for kk in 0..b.k {
+            for j in (0..b.m).step_by(17) {
+                let got = luts[qi][kk * b.m + j];
+                let want = native.get(kk, j);
+                assert!(
+                    (got - want).abs() < 2e-2 * want.abs().max(1.0),
+                    "pipeline lut[{qi}][{kk},{j}]: {got} vs {want}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Randomized property tests over the coordinator-side invariants
+//! (routing/batching/state per the deliverable spec). The vendored
+//! registry has no proptest, so these are seeded sweeps over the in-tree
+//! RNG — shrinkless but broad, with the failing seed printed on panic.
+
+use icq::core::json::Json;
+use icq::core::{Matrix, Rng, TopK};
+use icq::data::format::TensorPack;
+use icq::index::lut::{Lut, LutContext};
+use icq::index::search_icq::{self, IcqSearchOpts};
+use icq::index::{search_adc, EncodedIndex, OpCounter};
+use icq::quantizer::icq::{Icq, IcqOpts};
+use icq::quantizer::Quantizer;
+
+/// Property: for any heteroscedastic dataset / geometry, the two-step
+/// search returns EXACTLY the full-ADC top-k distances (crude is a lower
+/// bound of full when codebook groups are orthogonal), while never paying
+/// more table-adds.
+#[test]
+fn prop_two_step_equals_full_adc() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed * 7 + 1);
+        let n = 200 + rng.below(400);
+        let d = 8 + rng.below(3) * 4;
+        let k = [2usize, 4, 8][rng.below(3)];
+        let m = [4usize, 8, 16][rng.below(3)];
+        let x = Matrix::from_fn(n, d, |_, j| {
+            rng.normal_f32() * if j % 4 == 0 { 4.0 } else { 0.3 }
+        });
+        let icq = Icq::train(
+            &x,
+            IcqOpts {
+                k,
+                m,
+                fast_k: 1 + rng.below(k - 1),
+                kmeans_iters: 4,
+                prior_steps: 50,
+                seed,
+            },
+        );
+        let index = EncodedIndex::build_icq(&icq, &x, vec![0; n]);
+        let ops_icq = OpCounter::new();
+        let ops_adc = OpCounter::new();
+        for _ in 0..4 {
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let a = search_adc::search(&index, &q, 10, &ops_adc);
+            let b = search_icq::search(
+                &index,
+                &q,
+                IcqSearchOpts { k: 10, margin_scale: 1.0 },
+                &ops_icq,
+            );
+            for (ha, hb) in a.iter().zip(&b) {
+                assert!(
+                    (ha.dist - hb.dist).abs() < 1e-2 * ha.dist.abs().max(1.0),
+                    "seed {seed}: adc {} != two-step {}",
+                    ha.dist,
+                    hb.dist
+                );
+            }
+        }
+        assert!(
+            ops_icq.snapshot().table_adds <= ops_adc.snapshot().table_adds,
+            "seed {seed}: two-step paid more adds than full ADC"
+        );
+    }
+}
+
+/// Property: crude partial sums are monotone non-decreasing in the number
+/// of codebooks summed (LUT entries are true squared distances >= 0).
+#[test]
+fn prop_crude_monotone_in_k() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed + 100);
+        let d = 12;
+        let k = 6;
+        let x = Matrix::from_fn(300, d, |_, j| {
+            rng.normal_f32() * if j % 3 == 0 { 3.0 } else { 0.4 }
+        });
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k, m: 8, fast_k: 2, kmeans_iters: 3, prior_steps: 50, seed },
+        );
+        let index = EncodedIndex::build_icq(&icq, &x, vec![0; 300]);
+        let ctx = LutContext::new(index.codebooks());
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let lut = Lut::build(&ctx, index.codebooks(), &q);
+        for i in (0..index.len()).step_by(29) {
+            let row = index.codes().row(i);
+            let mut prev = 0.0;
+            for kk in 1..=k {
+                let s = lut.partial_sum(row, 0, kk);
+                assert!(
+                    s >= prev - 1e-4,
+                    "seed {seed}: partial sums not monotone at vec {i}"
+                );
+                prev = s;
+            }
+        }
+    }
+}
+
+/// Property: ICQ quantization respects hard group-orthogonality — every
+/// codeword's support lies entirely inside or outside psi.
+#[test]
+fn prop_icq_group_orthogonality() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed + 31);
+        let d = 10 + rng.below(8);
+        let x = Matrix::from_fn(250, d, |_, j| {
+            rng.normal_f32() * if j % 5 == 0 { 5.0 } else { 0.3 }
+        });
+        let k = 3 + rng.below(3);
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k, m: 8, fast_k: 0, kmeans_iters: 3, prior_steps: 80, seed },
+        );
+        let cb = icq.codebooks();
+        for kk in 0..k {
+            for &dim in &cb.support_dims(kk) {
+                let in_psi = icq.xi[dim as usize] > 0.5;
+                let in_fast = kk < icq.fast_k;
+                assert_eq!(
+                    in_psi, in_fast,
+                    "seed {seed}: book {kk} dim {dim} violates eq. 6"
+                );
+            }
+        }
+    }
+}
+
+/// Property: TopK always equals sort-and-truncate, under random pushes.
+#[test]
+fn prop_topk_equals_sorted_prefix() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed + 77);
+        let n = 1 + rng.below(2000);
+        let k = 1 + rng.below(64);
+        let dists: Vec<f32> =
+            (0..n).map(|_| rng.uniform_f32() * 1e4).collect();
+        let mut top = TopK::new(k);
+        for (i, &d) in dists.iter().enumerate() {
+            top.push(i as u32, d);
+        }
+        let mut expect = dists.clone();
+        expect.sort_by(f32::total_cmp);
+        expect.truncate(k);
+        let got: Vec<f32> = top.into_sorted().iter().map(|h| h.dist).collect();
+        assert_eq!(got, expect, "seed {seed}");
+    }
+}
+
+/// Property: icqfmt roundtrips arbitrary tensor packs.
+#[test]
+fn prop_icqfmt_roundtrip() {
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(seed + 1234);
+        let mut pack = TensorPack::new();
+        let n_tensors = 1 + rng.below(6);
+        for t in 0..n_tensors {
+            let ndim = 1 + rng.below(3);
+            let dims: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(6)).collect();
+            let n: usize = dims.iter().product();
+            if rng.below(2) == 0 {
+                let data: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                pack.insert_f32(&format!("t{t}"), dims, data);
+            } else {
+                let data: Vec<i32> =
+                    (0..n).map(|_| rng.below(1000) as i32 - 500).collect();
+                pack.insert_i32(&format!("t{t}"), dims, data);
+            }
+        }
+        let mut buf = Vec::new();
+        pack.write_to(&mut buf).unwrap();
+        let back = TensorPack::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(pack, back, "seed {seed}");
+    }
+}
+
+/// Property: the JSON layer roundtrips machine-generated trees.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 100.0).round()),
+            3 => Json::Str(format!("s{}-\"x\"\n", rng.below(100))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed + 9);
+        let v = gen(&mut rng, 3);
+        let text = v.to_string_json();
+        let back = Json::parse(&text).unwrap_or_else(|e| {
+            panic!("seed {seed}: reparse failed: {e}\n{text}")
+        });
+        assert_eq!(v, back, "seed {seed}: {text}");
+    }
+}
+
+/// Property: encoding never increases reconstruction error vs a coarser
+/// encoder (greedy baseline), for random dense codebooks.
+#[test]
+fn prop_quantizer_encode_quality() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed + 55);
+        let x = Matrix::from_fn(150, 8, |_, _| rng.normal_f32());
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 4, m: 8, fast_k: 1, kmeans_iters: 4, prior_steps: 50, seed },
+        );
+        let err = icq.quantization_error(&x);
+        let total_var: f32 = x.col_var().iter().sum();
+        assert!(
+            err < total_var,
+            "seed {seed}: quantization error {err} >= data energy {total_var}"
+        );
+    }
+}
