@@ -38,18 +38,20 @@ fn main() {
     let ctx = LutContext::new(index.codebooks());
 
     // L3 native kernels
-    let mlut = bench("lut/native build (K*m*d MACs)", || {
+    let mlut = bench("lut/native build (compact, m*d MACs)", || {
         black_box(Lut::build(&ctx, index.codebooks(), &q));
     });
     println!("{}", mlut.report());
     println!(
-        "  -> {:.1} M MAC/s",
-        (k * m * d) as f64 / mlut.median.as_secs_f64() / 1e6
+        "  -> {:.1} M MAC/s (compact-support build: {} MACs, not K*m*d={})",
+        ctx.build_macs() as f64 / mlut.median.as_secs_f64() / 1e6,
+        ctx.build_macs(),
+        k * m * d,
     );
 
     let lut = Lut::build(&ctx, index.codebooks(), &q);
     let ops = OpCounter::new();
-    let mscan = bench("scan/crude (fast_k adds/vec)", || {
+    let mscan = bench("scan/crude row-major (fast_k adds/vec)", || {
         let codes = index.codes();
         let mut acc = 0.0f32;
         for i in 0..index.len() {
@@ -62,6 +64,42 @@ fn main() {
         "  -> {:.1} M adds/s",
         (n * index.fast_k) as f64 / mscan.median.as_secs_f64() / 1e6
     );
+
+    let blocked = index.blocked();
+    let mut crude_buf = vec![0.0f32; n];
+    let mblocked = bench("scan/crude blocked book-major", || {
+        blocked.partial_sums_into(&lut, 0, index.fast_k, &mut crude_buf);
+        black_box(crude_buf[n - 1]);
+    });
+    println!("{}", mblocked.report());
+    println!(
+        "  -> {:.1} M adds/s | blocked vs row-major: {:.2}x",
+        (n * index.fast_k) as f64 / mblocked.median.as_secs_f64() / 1e6,
+        mscan.median.as_secs_f64() / mblocked.median.as_secs_f64(),
+    );
+
+    // parity suite: the blocked sweep must return bit-identical crude sums
+    // and the same top-k as the row-major oracle across query draws
+    {
+        let mut prng = Rng::new(99);
+        for t in 0..8 {
+            let qv: Vec<f32> = (0..d)
+                .map(|j| x.get(prng.below(n), j) + prng.normal_f32() * 0.2)
+                .collect();
+            let plut = Lut::build(&ctx, index.codebooks(), &qv);
+            blocked.partial_sums_into(&plut, 0, index.fast_k, &mut crude_buf);
+            for i in (0..n).step_by(997) {
+                let expect = plut.partial_sum(index.codes().row(i), 0, index.fast_k);
+                assert_eq!(crude_buf[i], expect, "crude parity broke at vec {i}");
+            }
+            let pops = OpCounter::new();
+            let fast = search_adc::search_with_lut(&index, &plut, 10, &pops);
+            let oracle =
+                search_adc::search_with_lut_rowmajor(&index, &plut, 10, &pops);
+            assert_eq!(fast, oracle, "top-k parity broke on query {t}");
+        }
+        println!("parity: blocked == row-major on crude sums + ADC top-k (8 queries)");
+    }
 
     let mfull = bench("scan/full-adc (K adds/vec)", || {
         black_box(search_adc::search_with_lut(&index, &lut, 10, &ops));

@@ -21,7 +21,9 @@ pub trait BatchSearcher: Send + Sync + 'static {
     fn dim(&self) -> usize;
 }
 
-/// Pure-rust two-step ICQ searcher over an [`EncodedIndex`].
+/// Pure-rust two-step ICQ searcher over an [`EncodedIndex`]: per query,
+/// build the LUT, run the blocked crude sweep, then the shared
+/// threshold/refine engine (`search_icq::search_scanfirst_query`).
 pub struct NativeSearcher {
     pub index: Arc<EncodedIndex>,
     pub opts: IcqSearchOpts,
@@ -42,14 +44,17 @@ impl BatchSearcher for NativeSearcher {
     fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
         let opts = IcqSearchOpts { k: top_k, ..self.opts };
         // workers are already parallel across batches; keep the per-batch
-        // scan serial to avoid nested-thread oversubscription
+        // scan serial to avoid nested-thread oversubscription. The crude
+        // scratch buffer is reused across the batch.
         let mut out = Vec::with_capacity(queries.rows());
+        let mut crude = Vec::new();
         for qi in 0..queries.rows() {
-            out.push(search_icq::search(
+            out.push(search_icq::search_scanfirst_query(
                 &self.index,
                 queries.row(qi),
                 opts,
                 &self.ops,
+                &mut crude,
             ));
         }
         out

@@ -1,0 +1,221 @@
+//! Block-interleaved, book-major code storage for the dense scan paths.
+//!
+//! The row-major [`Codes`] layout (`[n][K]` u16) is what encoders emit and
+//! what the refine step wants (one vector's whole code row at a time), but
+//! it is hostile to the dense crude pass: every accumulated vector strides
+//! across K books, so the hardware reloads a different LUT row per add and
+//! cannot vectorize the sweep. Quick ADC (André et al.) and Bolt (Blalock
+//! & Guttag) fix this by transposing codes into fixed-size blocks:
+//!
+//! ```text
+//! row-major  (Codes):        code[i][k]               i = 0..n, k = 0..K
+//! blocked (BlockedCodes):    block b = [K][B] u16     b = 0..ceil(n/B)
+//!                            data[(b*K + k)*B + j] = code[b*B + j][k]
+//! ```
+//!
+//! Within a block the scan is a columnar sweep: load LUT row `k` once,
+//! then add `B` contiguous code lookups into a `B`-wide accumulator —
+//! a loop shape the compiler can unroll and auto-vectorize, with the LUT
+//! row hot in L1 for the whole block. The tail block is padded with code
+//! 0; callers copy only the first `n - b*B` lanes of the last block.
+//!
+//! Accumulation order per vector is books-ascending, identical to
+//! [`Lut::partial_sum`] over a row-major code row, so blocked partial
+//! sums are bitwise equal to the serial path — the row-major scan stays
+//! around as the parity oracle (see `search_adc::search_with_lut_rowmajor`
+//! and the serial `search_icq::search_with_lut`).
+
+use super::lut::Lut;
+use crate::quantizer::Codes;
+
+/// Default vectors per block: 64 lanes keeps a whole block of codes
+/// (K * 128 bytes at K = 8) plus the accumulator inside L1 while giving
+/// the compiler long contiguous inner loops.
+pub const DEFAULT_BLOCK: usize = 64;
+
+/// Codes regrouped into fixed-size blocks of `B` vectors, book-major
+/// (`[K][B]`) within each block. Built once at index construction from
+/// the row-major [`Codes`]; immutable afterwards.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockedCodes {
+    n: usize,
+    k: usize,
+    block: usize,
+    /// `ceil(n / block)` blocks, each `[K][block]` u16; tail lanes are 0.
+    data: Vec<u16>,
+}
+
+impl BlockedCodes {
+    /// Transpose `codes` into blocks of [`DEFAULT_BLOCK`] vectors.
+    pub fn from_codes(codes: &Codes) -> Self {
+        Self::with_block(codes, DEFAULT_BLOCK)
+    }
+
+    /// Transpose `codes` into blocks of `block` vectors.
+    pub fn with_block(codes: &Codes, block: usize) -> Self {
+        assert!(block > 0, "block size must be >= 1");
+        let (n, k) = (codes.n(), codes.k());
+        let nb = n.div_ceil(block);
+        let mut data = vec![0u16; nb * k * block];
+        for i in 0..n {
+            let (b, lane) = (i / block, i % block);
+            for kk in 0..k {
+                data[(b * k + kk) * block + lane] = codes.get(i, kk);
+            }
+        }
+        BlockedCodes { n, k, block, data }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Vectors per block (B).
+    #[inline]
+    pub fn block_size(&self) -> usize {
+        self.block
+    }
+
+    #[inline]
+    pub fn num_blocks(&self) -> usize {
+        self.n.div_ceil(self.block)
+    }
+
+    /// Book-major codes of block `b`: a `[K][B]` slice of length `K * B`.
+    #[inline]
+    pub fn block(&self, b: usize) -> &[u16] {
+        let len = self.k * self.block;
+        &self.data[b * len..(b + 1) * len]
+    }
+
+    /// Number of real (non-padding) lanes in block `b`.
+    #[inline]
+    pub fn block_len(&self, b: usize) -> usize {
+        self.block.min(self.n - b * self.block)
+    }
+
+    /// Accumulate LUT partial sums over books `[k0, k1)` for block `b`
+    /// into `acc[0..B]` (overwritten). Per-book LUT row is loaded once;
+    /// the inner loop adds B contiguous code lookups — the
+    /// auto-vectorizable sweep the module docs describe. Padding lanes
+    /// accumulate code 0 and must be ignored via [`Self::block_len`].
+    pub fn block_partial_sums(
+        &self,
+        lut: &Lut,
+        k0: usize,
+        k1: usize,
+        b: usize,
+        acc: &mut [f32],
+    ) {
+        let bs = self.block;
+        debug_assert_eq!(acc.len(), bs);
+        let blk = self.block(b);
+        acc.fill(0.0);
+        for kk in k0..k1 {
+            let row = lut.row(kk);
+            let codes = &blk[kk * bs..(kk + 1) * bs];
+            for (a, &c) in acc.iter_mut().zip(codes) {
+                *a += row[c as usize];
+            }
+        }
+    }
+
+    /// Dense sweep over the whole database:
+    /// `out[i] = sum_{k in [k0, k1)} lut[k][code[i][k]]`.
+    /// This is the blocked crude pass (`k1 = fast_k`) and the blocked
+    /// full-ADC distance pass (`k0 = 0, k1 = K`).
+    pub fn partial_sums_into(
+        &self,
+        lut: &Lut,
+        k0: usize,
+        k1: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(out.len(), self.n);
+        let bs = self.block;
+        let mut acc = vec![0.0f32; bs];
+        for b in 0..self.num_blocks() {
+            self.block_partial_sums(lut, k0, k1, b, &mut acc);
+            let base = b * bs;
+            let take = self.block_len(b);
+            out[base..base + take].copy_from_slice(&acc[..take]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+
+    fn random_codes(n: usize, k: usize, m: usize, seed: u64) -> Codes {
+        let mut rng = Rng::new(seed);
+        let data: Vec<u16> = (0..n * k).map(|_| rng.below(m) as u16).collect();
+        Codes::from_vec(n, k, data)
+    }
+
+    fn random_lut(k: usize, m: usize, seed: u64) -> Lut {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..k * m).map(|_| rng.uniform_f32()).collect();
+        Lut::from_flat(k, m, data)
+    }
+
+    #[test]
+    fn layout_transposes_rows_into_book_major_blocks() {
+        let codes = random_codes(10, 3, 7, 1);
+        let blocked = BlockedCodes::with_block(&codes, 4);
+        assert_eq!(blocked.num_blocks(), 3);
+        assert_eq!(blocked.block_len(2), 2); // 10 = 4 + 4 + 2
+        for i in 0..10 {
+            let (b, lane) = (i / 4, i % 4);
+            let blk = blocked.block(b);
+            for kk in 0..3 {
+                assert_eq!(blk[kk * 4 + lane], codes.get(i, kk));
+            }
+        }
+        // padding lanes are code 0
+        let tail = blocked.block(2);
+        for kk in 0..3 {
+            assert_eq!(tail[kk * 4 + 2], 0);
+            assert_eq!(tail[kk * 4 + 3], 0);
+        }
+    }
+
+    #[test]
+    fn partial_sums_match_row_major_lut_sums() {
+        let (k, m) = (5, 16);
+        let lut = random_lut(k, m, 2);
+        for n in [0usize, 1, 7, 64, 65, 130] {
+            let codes = random_codes(n, k, m, n as u64 + 3);
+            let blocked = BlockedCodes::with_block(&codes, 64);
+            for (k0, k1) in [(0, k), (0, 2), (2, k), (3, 3)] {
+                let mut out = vec![f32::NAN; n];
+                blocked.partial_sums_into(&lut, k0, k1, &mut out);
+                for i in 0..n {
+                    let expect = lut.partial_sum(codes.row(i), k0, k1);
+                    assert_eq!(
+                        out[i], expect,
+                        "n={n} i={i} books [{k0},{k1}) diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_codes_produce_no_blocks() {
+        let codes = Codes::zeros(0, 4);
+        let blocked = BlockedCodes::from_codes(&codes);
+        assert_eq!(blocked.num_blocks(), 0);
+        assert_eq!(blocked.n(), 0);
+        let lut = random_lut(4, 8, 9);
+        let mut out: Vec<f32> = Vec::new();
+        blocked.partial_sums_into(&lut, 0, 4, &mut out);
+    }
+}

@@ -7,6 +7,7 @@
 
 use anyhow::Result;
 
+use super::blocked::BlockedCodes;
 use super::lut::LutContext;
 use crate::core::Matrix;
 use crate::data::format::TensorPack;
@@ -18,7 +19,12 @@ use crate::quantizer::{Codebooks, Codes, Quantizer};
 #[derive(Clone, Debug)]
 pub struct EncodedIndex {
     codebooks: Codebooks,
+    /// row-major codes: the encoder output, the refine step's layout,
+    /// and the serial parity oracle's scan order.
     codes: Codes,
+    /// book-major blocked transpose of `codes` (see [`super::blocked`]):
+    /// the layout every dense scan sweeps.
+    blocked: BlockedCodes,
     lut_ctx: LutContext,
     /// leading fast-group size (|K|); == k for non-ICQ methods.
     pub fast_k: usize,
@@ -29,6 +35,21 @@ pub struct EncodedIndex {
 }
 
 impl EncodedIndex {
+    /// Assemble the derived search state (LUT context + blocked codes)
+    /// around a codes/codebooks pair. Every constructor funnels here so
+    /// the blocked transpose exists on all paths (train, bundle, pack).
+    fn assemble(
+        codebooks: Codebooks,
+        codes: Codes,
+        fast_k: usize,
+        sigma: f32,
+        labels: Vec<i32>,
+    ) -> Self {
+        let lut_ctx = LutContext::new(&codebooks);
+        let blocked = BlockedCodes::from_codes(&codes);
+        EncodedIndex { codebooks, codes, blocked, lut_ctx, fast_k, sigma, labels }
+    }
+
     /// Encode `x` with any trained quantizer. For ICQ models the fast
     /// group / sigma come from the trainer; other methods get fast_k = K
     /// (their search is the conventional full ADC).
@@ -36,15 +57,8 @@ impl EncodedIndex {
         assert_eq!(x.rows(), labels.len());
         let codes = q.encode(x);
         let codebooks = q.codebooks().clone();
-        let lut_ctx = LutContext::new(&codebooks);
-        EncodedIndex {
-            fast_k: codebooks.k(),
-            sigma: 0.0,
-            codebooks,
-            codes,
-            lut_ctx,
-            labels,
-        }
+        let fast_k = codebooks.k();
+        Self::assemble(codebooks, codes, fast_k, 0.0, labels)
     }
 
     /// Build from an ICQ model, wiring the two-step search parameters.
@@ -63,15 +77,13 @@ impl EncodedIndex {
             Codebooks::from_vec(b.k, b.m, b.d, b.codebooks.clone());
         let data: Vec<u16> = b.codes.iter().map(|&c| c as u16).collect();
         let codes = Codes::from_vec(b.n, b.k, data);
-        let lut_ctx = LutContext::new(&codebooks);
-        Ok(EncodedIndex {
-            fast_k: b.fast_k,
-            sigma: b.sigma,
+        Ok(Self::assemble(
             codebooks,
             codes,
-            lut_ctx,
-            labels: b.labels.clone(),
-        })
+            b.fast_k,
+            b.sigma,
+            b.labels.clone(),
+        ))
     }
 
     #[inline]
@@ -105,6 +117,11 @@ impl EncodedIndex {
 
     pub fn codes(&self) -> &Codes {
         &self.codes
+    }
+
+    /// Book-major blocked codes (the dense-scan layout).
+    pub fn blocked(&self) -> &BlockedCodes {
+        &self.blocked
     }
 
     pub fn lut_ctx(&self) -> &LutContext {
@@ -146,15 +163,7 @@ impl EncodedIndex {
         let fast_k = pack.scalar_i32("fast_k")? as usize;
         let sigma = pack.scalar_f32("sigma")?;
         let (_, labels) = pack.i32("labels")?;
-        let lut_ctx = LutContext::new(&codebooks);
-        Ok(EncodedIndex {
-            fast_k,
-            sigma,
-            codebooks,
-            codes,
-            lut_ctx,
-            labels: labels.to_vec(),
-        })
+        Ok(Self::assemble(codebooks, codes, fast_k, sigma, labels.to_vec()))
     }
 }
 
@@ -194,6 +203,25 @@ mod tests {
         let idx = EncodedIndex::build_icq(&icq, &x, vec![1; 200]);
         assert_eq!(idx.fast_k, 1);
         assert!(idx.sigma > 0.0);
+    }
+
+    #[test]
+    fn blocked_transpose_built_on_every_constructor() {
+        let x = hetero(70, 6, 4);
+        let pq = Pq::train(&x, PqOpts { k: 3, m: 4, iters: 4, seed: 0 });
+        let idx = EncodedIndex::build(&pq, &x, vec![0; 70]);
+        assert_eq!(idx.blocked().n(), idx.len());
+        assert_eq!(idx.blocked().k(), idx.k());
+        for i in 0..idx.len() {
+            let b = idx.blocked();
+            let bs = b.block_size();
+            let blk = b.block(i / bs);
+            for kk in 0..idx.k() {
+                assert_eq!(blk[kk * bs + i % bs], idx.codes().get(i, kk));
+            }
+        }
+        let back = EncodedIndex::from_pack(&idx.to_pack()).unwrap();
+        assert_eq!(back.blocked(), idx.blocked());
     }
 
     #[test]

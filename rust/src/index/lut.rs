@@ -65,6 +65,15 @@ impl LutContext {
     pub fn m(&self) -> usize {
         self.m
     }
+
+    /// Exact MAC count of one [`Lut::build`] call with this context:
+    /// `m * sum_k |support_k|`. Equals `m * d` when book supports
+    /// partition the dims (PQ/OPQ/ICQ); up to `K * m * d` for dense
+    /// codebooks (CQ/SQ). The search executors charge this to the flop
+    /// counters.
+    pub fn build_macs(&self) -> usize {
+        self.m * self.dims.iter().map(|d| d.len()).sum::<usize>()
+    }
 }
 
 /// Per-query lookup table, [K, m] row-major.
@@ -170,6 +179,25 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn build_macs_tracks_support_density() {
+        // disjoint supports (PQ-like): m * d
+        let mut rng = Rng::new(3);
+        let x = Matrix::from_fn(60, 8, |_, _| rng.normal_f32());
+        let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 4, seed: 0 });
+        let ctx = LutContext::new(pq.codebooks());
+        assert_eq!(ctx.build_macs(), 8 * 8);
+        // dense codebooks (CQ-like): K * m * d
+        let dense = crate::quantizer::Codebooks::from_vec(
+            2,
+            3,
+            4,
+            vec![1.0; 2 * 3 * 4],
+        );
+        let dense_ctx = LutContext::new(&dense);
+        assert_eq!(dense_ctx.build_macs(), 2 * 3 * 4);
     }
 
     #[test]

@@ -11,14 +11,24 @@
 //! * [`search_icq`]   — the paper's two-step search (section 3.4):
 //!                      |K|-term crude comparison with margin sigma
 //!                      (eq. 2), full refinement only when it passes.
+//!
+//! Dense scans run over [`blocked`] storage — codes transposed into
+//! fixed-size book-major blocks (`[K][B]` per block, Quick-ADC/Bolt
+//! style) built once at index construction — while the refine step and
+//! the serial parity oracle keep the row-major [`crate::quantizer::Codes`].
+//! The shared "seed threshold from crude top-k -> refine shortlist"
+//! engine every dense path consumes lives in [`two_step`].
 
+pub mod blocked;
 pub mod encoded;
 pub mod lut;
 pub mod opcount;
 pub mod search_adc;
 pub mod search_exact;
 pub mod search_icq;
+pub mod two_step;
 
+pub use blocked::BlockedCodes;
 pub use encoded::EncodedIndex;
 pub use lut::Lut;
 pub use opcount::OpCounter;

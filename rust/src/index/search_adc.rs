@@ -1,6 +1,13 @@
 //! Conventional ADC search (eq. 1) — the baseline scan every prior VQ
 //! method uses: per candidate, sum K LUT entries and offer to the top-k
 //! heap. Exactly K table-adds per candidate, which the counters record.
+//!
+//! The dense distance pass sweeps the index's [`BlockedCodes`] (book-major
+//! blocks; see [`super::blocked`]): per block, each LUT row is loaded once
+//! and added across B contiguous codes. Accumulation order per vector is
+//! books-ascending, so results are bitwise identical to the row-major
+//! reference scan kept in [`search_with_lut_rowmajor`] (the parity oracle
+//! the kernels bench and property tests compare against).
 
 use crate::core::parallel::par_map_indexed;
 
@@ -17,13 +24,45 @@ pub fn search(
     ops: &OpCounter,
 ) -> Vec<Hit> {
     let lut = Lut::build(index.lut_ctx(), index.codebooks(), q);
-    ops.add_flops((index.k() * index.m() * index.dim()) as u64);
+    // compact-support LUT build: m * sum|support_k| MACs (see index/lut.rs)
+    ops.add_flops(index.lut_ctx().build_macs() as u64);
     search_with_lut(index, &lut, k, ops)
+}
+
+/// Blockwise full-ADC sweep into a top-k heap (books `[0, K)`).
+fn scan_blocked(index: &EncodedIndex, lut: &Lut, top: &mut TopK) {
+    let kb = index.k();
+    let blocked = index.blocked();
+    let bs = blocked.block_size();
+    let mut acc = vec![0.0f32; bs];
+    for b in 0..blocked.num_blocks() {
+        blocked.block_partial_sums(lut, 0, kb, b, &mut acc);
+        let base = b * bs;
+        for (j, &d) in acc[..blocked.block_len(b)].iter().enumerate() {
+            top.push((base + j) as u32, d);
+        }
+    }
 }
 
 /// ADC scan given a prebuilt LUT (the PJRT runtime path feeds LUTs
 /// computed by the AOT graph).
 pub fn search_with_lut(
+    index: &EncodedIndex,
+    lut: &Lut,
+    k: usize,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    let mut top = TopK::new(k);
+    scan_blocked(index, lut, &mut top);
+    ops.add_queries(1);
+    ops.add_candidates(index.len() as u64);
+    ops.add_table_adds((index.len() * index.k()) as u64);
+    top.into_sorted()
+}
+
+/// Row-major reference scan — the parity oracle for the blocked sweep.
+/// Same op accounting as [`search_with_lut`].
+pub fn search_with_lut_rowmajor(
     index: &EncodedIndex,
     lut: &Lut,
     k: usize,
@@ -42,7 +81,7 @@ pub fn search_with_lut(
     top.into_sorted()
 }
 
-/// Batch ADC (parallel over queries).
+/// Batch ADC (parallel over queries, blocked sweep each).
 pub fn search_batch(
     index: &EncodedIndex,
     queries: &Matrix,
@@ -51,20 +90,14 @@ pub fn search_batch(
 ) -> Vec<Vec<Hit>> {
     let res: Vec<Vec<Hit>> = par_map_indexed(queries.rows(), |qi| {
         let lut = Lut::build(index.lut_ctx(), index.codebooks(), queries.row(qi));
-        let kb = index.k();
-        let codes = index.codes();
         let mut top = TopK::new(k);
-        for i in 0..index.len() {
-            top.push(i as u32, lut.partial_sum(codes.row(i), 0, kb));
-        }
+        scan_blocked(index, &lut, &mut top);
         top.into_sorted()
     });
     ops.add_queries(queries.rows() as u64);
     ops.add_candidates((queries.rows() * index.len()) as u64);
     ops.add_table_adds((queries.rows() * index.len() * index.k()) as u64);
-    ops.add_flops(
-        (queries.rows() * index.k() * index.m() * index.dim()) as u64,
-    );
+    ops.add_flops((queries.rows() * index.lut_ctx().build_macs()) as u64);
     res
 }
 
@@ -92,6 +125,32 @@ mod tests {
         assert_eq!(ops.snapshot().candidates, 300);
         assert_eq!(ops.snapshot().table_adds, 300 * 4);
         assert_eq!(ops.avg_ops_per_candidate(), 4.0);
+    }
+
+    #[test]
+    fn lut_build_charges_compact_support_flops() {
+        let (_, idx) = setup();
+        let ops = OpCounter::new();
+        let q = vec![0.0f32; 8];
+        search(&idx, &q, 5, &ops);
+        // PQ supports partition the dims, so the compact build is
+        // m * d MACs total, NOT K * m * d
+        assert_eq!(ops.snapshot().flops, 32 * 8);
+        assert_eq!(idx.lut_ctx().build_macs(), 32 * 8);
+    }
+
+    #[test]
+    fn blocked_scan_matches_rowmajor_oracle() {
+        let (_, idx) = setup();
+        let mut rng = Rng::new(31);
+        for _ in 0..8 {
+            let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            let lut = Lut::build(idx.lut_ctx(), idx.codebooks(), &q);
+            let ops = OpCounter::new();
+            let blocked = search_with_lut(&idx, &lut, 10, &ops);
+            let rowmajor = search_with_lut_rowmajor(&idx, &lut, 10, &ops);
+            assert_eq!(blocked, rowmajor);
+        }
     }
 
     #[test]

@@ -12,16 +12,21 @@
 //! prune cost the full K — the op counters record this exactly, which is
 //! what Figs. 1-3's "Average Ops" plots consume.
 //!
-//! `search_batch_scanfirst` is the batch-restructured variant (DESIGN.md
+//! [`search_scanfirst`] is the batch-restructured variant (DESIGN.md
 //! section Hardware-Adaptation): a dense crude pass over all codes (the L1
 //! Pallas `icq_scan` kernel's semantics), then threshold selection, then
 //! dense refinement of the shortlist — same op accounting, vectorizable.
+//! The crude pass sweeps the index's book-major [`super::blocked`] storage;
+//! the threshold/refine half is the shared [`super::two_step`] engine.
+//! The serial [`search_with_lut`] keeps the row-major scan as the parity
+//! oracle.
 
 use crate::core::parallel::par_map_indexed;
 
 use super::encoded::EncodedIndex;
 use super::lut::Lut;
 use super::opcount::OpCounter;
+use super::two_step;
 use crate::core::{Hit, Matrix, TopK};
 
 /// Tuning for the two-step search.
@@ -48,7 +53,8 @@ pub fn search(
     ops: &OpCounter,
 ) -> Vec<Hit> {
     let lut = Lut::build(index.lut_ctx(), index.codebooks(), q);
-    ops.add_flops((index.k() * index.m() * index.dim()) as u64);
+    // compact-support LUT build: m * sum|support_k| MACs (see index/lut.rs)
+    ops.add_flops(index.lut_ctx().build_macs() as u64);
     search_with_lut(index, &lut, opts, ops)
 }
 
@@ -106,57 +112,69 @@ pub fn search_batch(
 /// dense refine. Matches the L1 Pallas kernel's execution shape; returns
 /// identical results to `search` (the threshold here is derived from the
 /// best crude-k candidates, a conservative superset of the serial prune).
+///
+/// The crude pass is a blockwise book-major sweep ([`super::blocked`]);
+/// the threshold/refine half is [`two_step::refine_from_crude`].
 pub fn search_scanfirst(
     index: &EncodedIndex,
     lut: &Lut,
     opts: IcqSearchOpts,
     ops: &OpCounter,
 ) -> Vec<Hit> {
+    search_scanfirst_scratch(index, lut, opts, ops, &mut Vec::new())
+}
+
+/// [`search_scanfirst`] with a caller-owned scratch buffer for the crude
+/// distances, for hot loops that run many queries against a large index
+/// (the coordinator's worker path): the n-sized allocation happens once
+/// per batch instead of once per query. `crude` is overwritten.
+pub fn search_scanfirst_scratch(
+    index: &EncodedIndex,
+    lut: &Lut,
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+    crude: &mut Vec<f32>,
+) -> Vec<Hit> {
     let kb = index.k();
     let fk = index.fast_k;
     let margin = index.sigma * opts.margin_scale;
     let n = index.len();
-    let codes = index.codes();
 
-    // dense crude pass (the icq_scan kernel)
-    let mut crude = vec![0.0f32; n];
-    for (i, c) in crude.iter_mut().enumerate() {
-        *c = lut.partial_sum(codes.row(i), 0, fk);
-    }
+    // dense crude pass (the icq_scan kernel's semantics, blocked layout)
+    crude.clear();
+    crude.resize(n, 0.0);
+    index.blocked().partial_sums_into(lut, 0, fk, crude);
     ops.add_table_adds((n * fk) as u64);
-
-    // seed the threshold by refining the crude top-k first: their FULL
-    // distances give a valid pruning radius (crude is a lower bound of
-    // full when LUT entries are true squared distances, so any final
-    // top-k member has crude < that radius).
-    let mut seed = TopK::new(opts.k);
-    for (i, &c) in crude.iter().enumerate() {
-        seed.push(i as u32, c);
-    }
-    let mut top = TopK::new(opts.k);
-    let mut refined = 0u64;
-    for hit in seed.into_sorted() {
-        let row = codes.row(hit.id as usize);
-        let full = crude[hit.id as usize] + lut.partial_sum(row, fk, kb);
-        refined += 1;
-        top.push(hit.id, full);
-        crude[hit.id as usize] = f32::INFINITY; // don't refine twice
-    }
-
-    // dense refine over everything still potentially inside the radius
-    let thresh = top.threshold() + margin;
-    for (i, &c) in crude.iter().enumerate() {
-        if c < thresh {
-            let full = c + lut.partial_sum(codes.row(i), fk, kb);
-            refined += 1;
-            top.push(i as u32, full);
-        }
-    }
-    ops.add_table_adds(refined * (kb - fk) as u64);
-    ops.add_refined(refined);
     ops.add_candidates(n as u64);
     ops.add_queries(1);
-    top.into_sorted()
+
+    two_step::refine_from_crude(
+        index.codes(),
+        lut,
+        crude,
+        fk,
+        kb,
+        margin,
+        opts.k,
+        ops,
+    )
+}
+
+/// Scanfirst two-step for one raw query: builds the LUT (charging the
+/// compact-support MACs, see [`super::lut::LutContext::build_macs`]) and
+/// runs the blocked dense pass. This is the query-level entry point the
+/// coordinator's `NativeSearcher` uses; keeping it here keeps the
+/// LUT-build flop-accounting rule in one module.
+pub fn search_scanfirst_query(
+    index: &EncodedIndex,
+    q: &[f32],
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+    crude: &mut Vec<f32>,
+) -> Vec<Hit> {
+    let lut = Lut::build(index.lut_ctx(), index.codebooks(), q);
+    ops.add_flops(index.lut_ctx().build_macs() as u64);
+    search_scanfirst_scratch(index, &lut, opts, ops, crude)
 }
 
 #[cfg(test)]

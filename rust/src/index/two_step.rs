@@ -1,0 +1,149 @@
+//! The shared second half of every dense two-step search: seed a pruning
+//! threshold from the crude top-k, then refine the shortlist.
+//!
+//! Three layers run the same "dense crude pass -> threshold -> refine"
+//! shape — the native batch-restructured scan
+//! ([`search_icq::search_scanfirst`]), the PJRT scan searcher
+//! (`runtime::searcher::XlaScanSearcher`), and the coordinator's
+//! [`NativeSearcher`] batch path — and each used to re-implement the
+//! threshold/refine logic with its own dedup mechanism. This module is
+//! the single implementation they all consume; only the crude pass
+//! (blocked native sweep vs Pallas `icq_scan` graph) differs per caller.
+//!
+//! Algorithm (paper section 3.4, batch-restructured): the crude sums are
+//! lower bounds of the full ADC distance (LUT entries are true squared
+//! distances for group-orthogonal codebooks), so refining the crude top-k
+//! first yields a valid pruning radius — any final top-k member has a
+//! crude sum below it. Everything still inside `radius + margin` is then
+//! refined densely. Already-refined seeds are masked by setting their
+//! crude entry to `+inf`, which both dedups the second pass and keeps it
+//! branch-light.
+//!
+//! [`search_icq::search_scanfirst`]: super::search_icq::search_scanfirst
+//! [`NativeSearcher`]: crate::coordinator::NativeSearcher
+
+use super::lut::Lut;
+use super::opcount::OpCounter;
+use crate::core::{Hit, TopK};
+use crate::quantizer::Codes;
+
+/// Refine a dense crude pass into the final top-k.
+///
+/// `crude[i]` must hold the |K|-book partial sum for vector `i` (books
+/// `[0, fast_k)`); entries are overwritten with `+inf` as vectors are
+/// refined. `margin` is the paper's sigma (eq. 11) already scaled by the
+/// caller. Counts the refine-side table-adds and refined candidates on
+/// `ops`; the caller accounts for the crude pass itself (its cost differs
+/// per backend).
+#[allow(clippy::too_many_arguments)]
+pub fn refine_from_crude(
+    codes: &Codes,
+    lut: &Lut,
+    crude: &mut [f32],
+    fast_k: usize,
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    debug_assert_eq!(crude.len(), codes.n());
+    // seed the threshold by refining the crude top-k first: their FULL
+    // distances give a valid pruning radius.
+    let mut seed = TopK::new(top_k);
+    for (i, &c) in crude.iter().enumerate() {
+        seed.push(i as u32, c);
+    }
+    let mut top = TopK::new(top_k);
+    let mut refined = 0u64;
+    for hit in seed.into_sorted() {
+        let i = hit.id as usize;
+        let full = crude[i] + lut.partial_sum(codes.row(i), fast_k, k_books);
+        refined += 1;
+        top.push(hit.id, full);
+        crude[i] = f32::INFINITY; // mask: never refined twice
+    }
+
+    // dense refine over everything still potentially inside the radius
+    let thresh = top.threshold() + margin;
+    for (i, &c) in crude.iter().enumerate() {
+        if c < thresh {
+            let full = c + lut.partial_sum(codes.row(i), fast_k, k_books);
+            refined += 1;
+            top.push(i as u32, full);
+        }
+    }
+    ops.add_table_adds(refined * (k_books - fast_k) as u64);
+    ops.add_refined(refined);
+    top.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+
+    /// Hand-rolled 2-book setup where crude (book 0) is a lower bound of
+    /// full (books 0+1): refine must return the exact full-distance top-k.
+    #[test]
+    fn matches_exhaustive_full_ranking() {
+        let (n, k, m) = (200usize, 4usize, 8usize);
+        let mut rng = Rng::new(11);
+        let lut_data: Vec<f32> = (0..k * m).map(|_| rng.uniform_f32()).collect();
+        let lut = Lut::from_flat(k, m, lut_data);
+        let code_data: Vec<u16> =
+            (0..n * k).map(|_| rng.below(m) as u16).collect();
+        let codes = Codes::from_vec(n, k, code_data);
+        for fast_k in [1usize, 2, 4] {
+            let mut crude: Vec<f32> = (0..n)
+                .map(|i| lut.partial_sum(codes.row(i), 0, fast_k))
+                .collect();
+            let ops = OpCounter::new();
+            let hits =
+                refine_from_crude(&codes, &lut, &mut crude, fast_k, k, 0.0, 10, &ops);
+            let mut full: Vec<f32> =
+                (0..n).map(|i| lut.partial_sum(codes.row(i), 0, k)).collect();
+            full.sort_by(f32::total_cmp);
+            assert_eq!(hits.len(), 10);
+            for (h, expect) in hits.iter().zip(&full) {
+                assert!(
+                    (h.dist - expect).abs() < 1e-5,
+                    "fast_k={fast_k}: {} != {expect}",
+                    h.dist
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_crude_returns_no_hits() {
+        let lut = Lut::from_flat(2, 4, vec![0.0; 8]);
+        let codes = Codes::zeros(0, 2);
+        let ops = OpCounter::new();
+        let hits = refine_from_crude(&codes, &lut, &mut [], 1, 2, 0.5, 5, &ops);
+        assert!(hits.is_empty());
+        assert_eq!(ops.snapshot().refined, 0);
+    }
+
+    #[test]
+    fn fast_k_equal_to_k_degenerates_to_crude_ranking() {
+        let (n, k, m) = (50usize, 3usize, 4usize);
+        let mut rng = Rng::new(12);
+        let lut_data: Vec<f32> = (0..k * m).map(|_| rng.uniform_f32()).collect();
+        let lut = Lut::from_flat(k, m, lut_data);
+        let code_data: Vec<u16> =
+            (0..n * k).map(|_| rng.below(m) as u16).collect();
+        let codes = Codes::from_vec(n, k, code_data);
+        let full: Vec<f32> =
+            (0..n).map(|i| lut.partial_sum(codes.row(i), 0, k)).collect();
+        let mut crude = full.clone();
+        let ops = OpCounter::new();
+        let hits = refine_from_crude(&codes, &lut, &mut crude, k, k, 0.0, 5, &ops);
+        let mut expect = full;
+        expect.sort_by(f32::total_cmp);
+        for (h, e) in hits.iter().zip(&expect) {
+            assert_eq!(h.dist, *e);
+        }
+        // refine adds zero table-adds when the fast group is every book
+        assert_eq!(ops.snapshot().table_adds, 0);
+    }
+}

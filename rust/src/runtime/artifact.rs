@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use super::xla_stub as xla;
 use crate::core::json::Json;
 
 /// Tensor spec in the manifest.

@@ -12,6 +12,7 @@
 use anyhow::Result;
 
 use super::artifact::ArtifactManager;
+use super::xla_stub as xla;
 use super::literal::{f32_literal, i32_literal, to_f32_vec};
 use crate::core::Matrix;
 

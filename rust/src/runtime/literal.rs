@@ -2,6 +2,8 @@
 
 use anyhow::Result;
 
+use super::xla_stub as xla;
+
 /// Build an f32 literal of the given shape from a flat slice.
 pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();

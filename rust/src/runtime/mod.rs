@@ -3,16 +3,22 @@
 //! `make artifacts` (python, build-time) lowers the query-path graphs to
 //! HLO **text** (see python/compile/aot.py for why text, not serialized
 //! protos) and writes `artifacts/manifest.json`. This module loads those
-//! artifacts through the `xla` crate (`PjRtClient::cpu()` →
+//! artifacts through the `xla` crate API (`PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → compile → execute) and exposes them
 //! as typed executables to the coordinator's hot path. Python never runs
 //! at request time.
+//!
+//! The real `xla` crate needs a native PJRT library the sandboxed build
+//! cannot link, so the modules here alias the in-tree [`xla_stub`]
+//! (same API; every executable path reports the backend unavailable,
+//! callers fall back to the native scan engine).
 
 pub mod artifact;
 pub mod client;
 pub mod literal;
 pub mod searcher;
 pub mod service;
+pub mod xla_stub;
 
 pub use artifact::{ArtifactManager, Manifest};
 pub use client::XlaRuntime;

@@ -9,8 +9,9 @@
 //!   is branchy and stays on the host.
 //! * [`XlaScanSearcher`] — additionally runs the crude pass through the
 //!   `scan_f{fast_k}` graph (the Pallas `icq_scan` kernel) over padded
-//!   code blocks, then refines natively. Exercises the full L1 surface;
-//!   used by the runtime integration tests and the kernels bench.
+//!   code blocks, then refines natively through the shared
+//!   [`two_step`] engine. Exercises the full L1 surface; used by the
+//!   runtime integration tests and the kernels bench.
 
 use std::sync::Arc;
 
@@ -18,10 +19,35 @@ use anyhow::Result;
 
 use super::service::XlaService;
 use crate::coordinator::BatchSearcher;
-use crate::core::{Hit, Matrix, TopK};
+use crate::core::{Hit, Matrix};
 use crate::index::lut::Lut;
 use crate::index::search_icq::{self, IcqSearchOpts};
+use crate::index::two_step;
 use crate::index::{EncodedIndex, OpCounter};
+
+/// Build per-query LUTs through the `lut_only` graph, chunked to the
+/// export batch. Shared by both searchers (and each batch is executed
+/// exactly once — the scan path reuses these LUTs for its crude pass
+/// instead of re-running the graph).
+fn luts_for(
+    svc: &XlaService,
+    index: &EncodedIndex,
+    batch: usize,
+    queries: &Matrix,
+) -> Result<Vec<Lut>> {
+    let (k, m, d) = (index.k(), index.m(), index.dim());
+    let mut out = Vec::with_capacity(queries.rows());
+    let mut start = 0;
+    while start < queries.rows() {
+        let len = batch.min(queries.rows() - start);
+        let idx: Vec<usize> = (start..start + len).collect();
+        let sub = queries.select_rows(&idx);
+        let flats = svc.lut_batch(index.codebooks().as_slice(), k, m, d, &sub)?;
+        out.extend(flats.into_iter().map(|f| Lut::from_flat(k, m, f)));
+        start += len;
+    }
+    Ok(out)
+}
 
 /// LUT-by-PJRT, scan-native searcher.
 pub struct XlaLutSearcher {
@@ -47,32 +73,12 @@ impl XlaLutSearcher {
             batch,
         })
     }
-
-    fn luts_for(&self, queries: &Matrix) -> Result<Vec<Lut>> {
-        let (k, m, d) = (self.index.k(), self.index.m(), self.index.dim());
-        let mut out = Vec::with_capacity(queries.rows());
-        let mut start = 0;
-        while start < queries.rows() {
-            let len = self.batch.min(queries.rows() - start);
-            let idx: Vec<usize> = (start..start + len).collect();
-            let sub = queries.select_rows(&idx);
-            let flats = self.svc.lut_batch(
-                self.index.codebooks().as_slice(),
-                k,
-                m,
-                d,
-                &sub,
-            )?;
-            out.extend(flats.into_iter().map(|f| Lut::from_flat(k, m, f)));
-            start += len;
-        }
-        Ok(out)
-    }
 }
 
 impl BatchSearcher for XlaLutSearcher {
     fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
-        let luts = self.luts_for(queries).expect("pjrt lut batch");
+        let luts = luts_for(&self.svc, &self.index, self.batch, queries)
+            .expect("pjrt lut batch");
         luts.iter()
             .map(|lut| {
                 search_icq::search_with_lut(
@@ -135,30 +141,31 @@ impl XlaScanSearcher {
 
     /// Crude distances for `queries` (padded internally), [nq][n].
     pub fn crude_scan(&self, queries: &Matrix) -> Result<Vec<Vec<f32>>> {
-        let (k, m, d) = (self.index.k(), self.index.m(), self.index.dim());
+        let luts = luts_for(&self.svc, &self.index, self.batch, queries)?;
+        self.crude_from_luts(&luts)
+    }
+
+    /// Crude distances for prebuilt per-query LUTs, [nq][n]: one
+    /// `scan_f{fast_k}` execution per (export batch, code block); the
+    /// LUTs are re-padded to the full export batch for the scan graph.
+    fn crude_from_luts(&self, luts: &[Lut]) -> Result<Vec<Vec<f32>>> {
+        let (k, m) = (self.index.k(), self.index.m());
         let fast_k = self.index.fast_k;
         let n = self.index.len();
-        let mut out = vec![vec![0.0f32; n]; queries.rows()];
+        let mut out = vec![vec![0.0f32; n]; luts.len()];
         let mut start = 0;
-        while start < queries.rows() {
-            let len = self.batch.min(queries.rows() - start);
-            let idx: Vec<usize> = (start..start + len).collect();
-            let sub = queries.select_rows(&idx);
-            let flats = self.svc.lut_batch(
-                self.index.codebooks().as_slice(),
-                k,
-                m,
-                d,
-                &sub,
-            )?;
-            // re-pad LUTs to the full export batch for the scan graph
+        while start < luts.len() {
+            let len = self.batch.min(luts.len() - start);
             let mut lut_flat = vec![0.0f32; self.batch * k * m];
-            for (qi, f) in flats.iter().enumerate() {
-                lut_flat[qi * k * m..(qi + 1) * k * m].copy_from_slice(f);
+            for (qi, lut) in luts[start..start + len].iter().enumerate() {
+                for kk in 0..k {
+                    let off = qi * k * m + kk * m;
+                    lut_flat[off..off + m].copy_from_slice(lut.row(kk));
+                }
             }
             for blk in 0..self.n_blocks {
-                let codes =
-                    &self.codes_padded[blk * self.scan_n * k..(blk + 1) * self.scan_n * k];
+                let codes = &self.codes_padded
+                    [blk * self.scan_n * k..(blk + 1) * self.scan_n * k];
                 let crude = self.svc.scan(
                     fast_k,
                     &lut_flat,
@@ -186,66 +193,22 @@ impl XlaScanSearcher {
 
 impl BatchSearcher for XlaScanSearcher {
     fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
-        let (k, m) = (self.index.k(), self.index.m());
+        let k = self.index.k();
         let fast_k = self.index.fast_k;
         let margin = self.index.sigma * self.opts.margin_scale;
-        let luts = {
-            // need per-query LUTs again for the refine adds
-            let mut l = Vec::with_capacity(queries.rows());
-            let mut start = 0;
-            while start < queries.rows() {
-                let len = self.batch.min(queries.rows() - start);
-                let idx: Vec<usize> = (start..start + len).collect();
-                let sub = queries.select_rows(&idx);
-                let flats = self
-                    .svc
-                    .lut_batch(
-                        self.index.codebooks().as_slice(),
-                        k,
-                        m,
-                        self.index.dim(),
-                        &sub,
-                    )
-                    .expect("pjrt lut");
-                l.extend(flats.into_iter().map(|f| Lut::from_flat(k, m, f)));
-                start += len;
-            }
-            l
-        };
-        let crude = self.crude_scan(queries).expect("pjrt scan");
+        // one LUT-graph pass serves both the crude scan and the refine
+        let luts = luts_for(&self.svc, &self.index, self.batch, queries)
+            .expect("pjrt lut batch");
+        let crude = self.crude_from_luts(&luts).expect("pjrt scan");
         let codes = self.index.codes();
+        // crude-pass ops are counted inside crude_from_luts; the shared
+        // engine counts the refine side.
         luts.iter()
-            .zip(crude.iter())
-            .map(|(lut, cr)| {
-                // seed threshold from crude top-k fulls, then refine
-                let mut seed = TopK::new(top_k);
-                for (i, &c) in cr.iter().enumerate() {
-                    seed.push(i as u32, c);
-                }
-                let mut top = TopK::new(top_k);
-                let mut refined = 0u64;
-                let mut seen =
-                    std::collections::HashSet::with_capacity(top_k * 2);
-                for h in seed.into_sorted() {
-                    let row = codes.row(h.id as usize);
-                    let full = cr[h.id as usize]
-                        + lut.partial_sum(row, fast_k, k);
-                    refined += 1;
-                    top.push(h.id, full);
-                    seen.insert(h.id);
-                }
-                let thresh = top.threshold() + margin;
-                for (i, &c) in cr.iter().enumerate() {
-                    if c < thresh && !seen.contains(&(i as u32)) {
-                        let full =
-                            c + lut.partial_sum(codes.row(i), fast_k, k);
-                        refined += 1;
-                        top.push(i as u32, full);
-                    }
-                }
-                self.ops.add_table_adds(refined * (k - fast_k) as u64);
-                self.ops.add_refined(refined);
-                top.into_sorted()
+            .zip(crude)
+            .map(|(lut, mut cr)| {
+                two_step::refine_from_crude(
+                    codes, lut, &mut cr, fast_k, k, margin, top_k, &self.ops,
+                )
             })
             .collect()
     }

@@ -1,0 +1,190 @@
+//! Blocked-scan parity suite: the book-major dense sweeps must return
+//! the same distances as the serial row-major two-step across every
+//! quantizer in the zoo (PQ / OPQ / CQ / SQ / ICQ) and the edge shapes
+//! the blocked layout has to handle — n not divisible by the block size,
+//! fast_k == K (non-ICQ indexes), top-k = 1, single-book indexes, and
+//! the empty index.
+
+use icq::core::{Matrix, Rng};
+use icq::data::Dataset;
+use icq::index::lut::Lut;
+use icq::index::search_icq::{self, IcqSearchOpts};
+use icq::index::{search_adc, EncodedIndex, OpCounter};
+use icq::quantizer::cq::{Cq, CqOpts};
+use icq::quantizer::icq::{Icq, IcqOpts};
+use icq::quantizer::opq::{Opq, OpqOpts};
+use icq::quantizer::pq::{Pq, PqOpts};
+use icq::quantizer::sq::{Sq, SqOpts};
+
+fn hetero(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(n, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 3.0 } else { 0.4 }
+    })
+}
+
+/// For each query row: blocked full ADC == row-major oracle, and blocked
+/// scanfirst == serial two-step, distances within 1e-3.
+fn assert_parity(index: &EncodedIndex, queries: &Matrix, top_k: usize) {
+    let ops = OpCounter::new();
+    for qi in 0..queries.rows() {
+        let lut = Lut::build(index.lut_ctx(), index.codebooks(), queries.row(qi));
+
+        let adc_blocked = search_adc::search_with_lut(index, &lut, top_k, &ops);
+        let adc_oracle =
+            search_adc::search_with_lut_rowmajor(index, &lut, top_k, &ops);
+        assert_eq!(adc_blocked.len(), adc_oracle.len());
+        for (a, b) in adc_blocked.iter().zip(&adc_oracle) {
+            assert!(
+                (a.dist - b.dist).abs() < 1e-3,
+                "q{qi}: blocked ADC {} vs row-major {}",
+                a.dist,
+                b.dist
+            );
+        }
+
+        let opts = IcqSearchOpts { k: top_k, margin_scale: 1.0 };
+        let serial = search_icq::search_with_lut(index, &lut, opts, &ops);
+        let scan = search_icq::search_scanfirst(index, &lut, opts, &ops);
+        assert_eq!(serial.len(), scan.len());
+        for (a, b) in serial.iter().zip(&scan) {
+            assert!(
+                (a.dist - b.dist).abs() < 1e-3,
+                "q{qi}: serial two-step {} vs blocked scanfirst {}",
+                a.dist,
+                b.dist
+            );
+        }
+    }
+}
+
+fn queries(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(n, d, |_, _| rng.normal_f32())
+}
+
+#[test]
+fn parity_pq_tail_block() {
+    // 101 vectors: one full block + a 37-lane tail
+    let x = hetero(101, 8, 1);
+    let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 6, seed: 0 });
+    let idx = EncodedIndex::build(&pq, &x, vec![0; 101]);
+    assert_eq!(idx.fast_k, idx.k()); // fast_k == K edge for non-ICQ
+    assert_parity(&idx, &queries(5, 8, 11), 10);
+}
+
+#[test]
+fn parity_pq_single_book_and_top1() {
+    let x = hetero(70, 6, 2);
+    let pq = Pq::train(&x, PqOpts { k: 1, m: 8, iters: 6, seed: 0 });
+    let idx = EncodedIndex::build(&pq, &x, vec![0; 70]);
+    assert_eq!(idx.k(), 1);
+    assert_parity(&idx, &queries(4, 6, 12), 1);
+}
+
+#[test]
+fn parity_opq() {
+    let x = hetero(90, 8, 3);
+    let opq = Opq::train(
+        &x,
+        OpqOpts { pq: PqOpts { k: 4, m: 8, iters: 4, seed: 1 }, outer_iters: 2 },
+    );
+    let idx = EncodedIndex::build(&opq, &x, vec![0; 90]);
+    assert_parity(&idx, &queries(4, 8, 13), 10);
+}
+
+#[test]
+fn parity_cq() {
+    let x = hetero(80, 8, 4);
+    let cq = Cq::train(
+        &x,
+        CqOpts { k: 3, m: 8, iters: 3, icm_sweeps: 1, seed: 2 },
+    );
+    let idx = EncodedIndex::build(&cq, &x, vec![0; 80]);
+    assert_parity(&idx, &queries(4, 8, 14), 10);
+}
+
+#[test]
+fn parity_sq_embedded_queries() {
+    let x = hetero(70, 10, 5);
+    let y: Vec<i32> = (0..70).map(|i| (i % 3) as i32).collect();
+    let data = Dataset::new(x, y.clone());
+    let sq = Sq::train(
+        &data,
+        SqOpts {
+            d_out: 6,
+            cq: CqOpts { k: 2, m: 8, iters: 3, icm_sweeps: 1, seed: 3 },
+            ridge: 1e-3,
+        },
+    );
+    let idx = EncodedIndex::build(&sq, &data.x, y);
+    // the SQ index lives in the embedded space; queries must be embedded
+    let qz = sq.embed(&queries(4, 10, 15));
+    assert_parity(&idx, &qz, 10);
+}
+
+#[test]
+fn parity_icq_multiple_shapes() {
+    for (n, d, k, m, fast_k, seed) in [
+        (130usize, 16usize, 8usize, 16usize, 2usize, 6u64), // tail of 2
+        (64, 12, 4, 8, 1, 7),                               // exactly one block
+        (40, 8, 2, 8, 1, 8),                                // sub-block index
+    ] {
+        let x = hetero(n, d, seed);
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k, m, fast_k, kmeans_iters: 5, prior_steps: 80, seed },
+        );
+        let idx = EncodedIndex::build_icq(&icq, &x, vec![0; n]);
+        assert!(idx.fast_k < idx.k());
+        assert_parity(&idx, &queries(4, d, seed + 20), 10);
+        assert_parity(&idx, &queries(2, d, seed + 40), 1); // top-k = 1
+    }
+}
+
+#[test]
+fn parity_empty_index() {
+    let x = hetero(60, 8, 9);
+    let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 4, seed: 0 });
+    let empty = EncodedIndex::build(&pq, &Matrix::zeros(0, 8), vec![]);
+    assert_eq!(empty.len(), 0);
+    assert_eq!(empty.blocked().num_blocks(), 0);
+    assert_parity(&empty, &queries(3, 8, 16), 5);
+    // explicit: both paths return no hits
+    let lut = Lut::build(empty.lut_ctx(), empty.codebooks(), &[0.0; 8]);
+    let ops = OpCounter::new();
+    assert!(search_adc::search_with_lut(&empty, &lut, 5, &ops).is_empty());
+    assert!(search_icq::search_scanfirst(
+        &empty,
+        &lut,
+        IcqSearchOpts::default(),
+        &ops
+    )
+    .is_empty());
+}
+
+/// The scanfirst path must never pay more refine adds than refining
+/// everything, and its op accounting must match the serial path's crude
+/// cost exactly (n * fast_k crude adds per query).
+#[test]
+fn scanfirst_op_accounting() {
+    let n = 150;
+    let x = hetero(n, 12, 10);
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k: 4, m: 8, fast_k: 1, kmeans_iters: 5, prior_steps: 80, seed: 10 },
+    );
+    let idx = EncodedIndex::build_icq(&icq, &x, vec![0; n]);
+    let q: Vec<f32> = queries(1, 12, 17).row(0).to_vec();
+    let lut = Lut::build(idx.lut_ctx(), idx.codebooks(), &q);
+    let ops = OpCounter::new();
+    search_icq::search_scanfirst(&idx, &lut, IcqSearchOpts::default(), &ops);
+    let s = ops.snapshot();
+    assert_eq!(s.queries, 1);
+    assert_eq!(s.candidates, n as u64);
+    let crude_adds = (n * idx.fast_k) as u64;
+    let max_refine_adds = (n * (idx.k() - idx.fast_k)) as u64;
+    assert!(s.table_adds >= crude_adds);
+    assert!(s.table_adds <= crude_adds + max_refine_adds);
+    assert_eq!(s.refined, (s.table_adds - crude_adds) / (idx.k() - idx.fast_k) as u64);
+}

@@ -17,7 +17,17 @@ fn runtime() -> Option<XlaRuntime> {
         eprintln!("SKIP: artifacts not built (make artifacts)");
         return None;
     }
-    Some(XlaRuntime::new(&dir).expect("runtime init"))
+    // Artifacts may exist while the PJRT backend does not (the xla crate
+    // is stubbed in sandboxed builds): skip for that case only — any
+    // other init failure with artifacts present is a real regression.
+    match XlaRuntime::new(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) if format!("{e:#}").contains("PJRT backend not built") => {
+            eprintln!("SKIP: PJRT backend stubbed out ({e:#})");
+            None
+        }
+        Err(e) => panic!("runtime init failed with artifacts present: {e:#}"),
+    }
 }
 
 fn bundle(rt: &XlaRuntime) -> TrainedBundle {
