@@ -1,12 +1,27 @@
 //! Kernel micro-benchmarks (EXPERIMENTS.md section Perf, L1/L3 rows):
-//! native LUT build, crude scan, full ADC scan, refine pass, and — when
-//! artifacts are built — the PJRT-executed Pallas LUT/scan graphs.
+//! native LUT build, crude scan (row-major f32, blocked u16, blocked u8,
+//! quantized-LUT u8), full ADC scan, refine pass, and — when artifacts
+//! are built — the PJRT-executed Pallas LUT/scan graphs.
+//!
+//! Besides the human-readable report, the crude-pass comparison is
+//! written to `BENCH_kernels.json` (override the path with
+//! `ICQ_BENCH_JSON`) so the perf trajectory of the scan core is machine
+//! trackable across commits.
 
-use icq::bench::timing::{bench, black_box};
+use std::collections::BTreeMap;
+
+use icq::bench::timing::{bench, black_box, Measurement};
+use icq::core::json::Json;
 use icq::core::{Matrix, Rng};
+use icq::index::blocked::BlockedCodes;
 use icq::index::lut::{Lut, LutContext};
+use icq::index::qlut::{self, QLut};
 use icq::index::{search_adc, search_icq, EncodedIndex, OpCounter};
 use icq::quantizer::icq::{Icq, IcqOpts};
+
+fn madds_per_s(m: &Measurement, adds: usize) -> f64 {
+    adds as f64 / m.median.as_secs_f64() / 1e6
+}
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast")
@@ -51,6 +66,7 @@ fn main() {
 
     let lut = Lut::build(&ctx, index.codebooks(), &q);
     let ops = OpCounter::new();
+    let crude_adds = n * index.fast_k;
     let mscan = bench("scan/crude row-major (fast_k adds/vec)", || {
         let codes = index.codes();
         let mut acc = 0.0f32;
@@ -60,26 +76,58 @@ fn main() {
         black_box(acc);
     });
     println!("{}", mscan.report());
-    println!(
-        "  -> {:.1} M adds/s",
-        (n * index.fast_k) as f64 / mscan.median.as_secs_f64() / 1e6
-    );
+    println!("  -> {:.1} M adds/s", madds_per_s(&mscan, crude_adds));
 
-    let blocked = index.blocked();
+    // --- crude-pass width/quantization comparison on the same codes ---
+    // The index auto-selects u8 at m = 256; build both widths explicitly
+    // so the comparison is apples-to-apples.
+    assert_eq!(index.blocked().code_width_bits(), 8);
+    let b_u16 = BlockedCodes::<u16>::from_codes(index.codes());
+    let b_u8 = BlockedCodes::<u8>::from_codes(index.codes());
     let mut crude_buf = vec![0.0f32; n];
-    let mblocked = bench("scan/crude blocked book-major", || {
-        blocked.partial_sums_into(&lut, 0, index.fast_k, &mut crude_buf);
+
+    let m_u16 = bench("scan/crude blocked u16 f32-acc", || {
+        b_u16.partial_sums_into(&lut, 0, index.fast_k, &mut crude_buf);
         black_box(crude_buf[n - 1]);
     });
-    println!("{}", mblocked.report());
+    println!("{}", m_u16.report());
     println!(
-        "  -> {:.1} M adds/s | blocked vs row-major: {:.2}x",
-        (n * index.fast_k) as f64 / mblocked.median.as_secs_f64() / 1e6,
-        mscan.median.as_secs_f64() / mblocked.median.as_secs_f64(),
+        "  -> {:.1} M adds/s | blocked u16 vs row-major: {:.2}x",
+        madds_per_s(&m_u16, crude_adds),
+        mscan.median.as_secs_f64() / m_u16.median.as_secs_f64(),
     );
 
-    // parity suite: the blocked sweep must return bit-identical crude sums
-    // and the same top-k as the row-major oracle across query draws
+    let m_u8 = bench("scan/crude blocked u8 f32-acc", || {
+        b_u8.partial_sums_into(&lut, 0, index.fast_k, &mut crude_buf);
+        black_box(crude_buf[n - 1]);
+    });
+    println!("{}", m_u8.report());
+    println!(
+        "  -> {:.1} M adds/s | u8 vs u16 codes: {:.2}x",
+        madds_per_s(&m_u8, crude_adds),
+        m_u16.median.as_secs_f64() / m_u8.median.as_secs_f64(),
+    );
+
+    let qlut = QLut::from_lut(&lut, 0, index.fast_k);
+    let mut qlut_buf = vec![0.0f32; n];
+    let m_qlut = bench("scan/crude qlut u8-lut u16-acc", || {
+        qlut::crude_sums_into(&b_u8, &qlut, &mut qlut_buf);
+        black_box(qlut_buf[n - 1]);
+    });
+    #[cfg(target_arch = "x86_64")]
+    let avx2 = is_x86_feature_detected!("avx2");
+    #[cfg(not(target_arch = "x86_64"))]
+    let avx2 = false;
+    println!("{}", m_qlut.report());
+    println!(
+        "  -> {:.1} M adds/s | quantized vs f32 u16 sweep: {:.2}x (avx2: {avx2}, m={m} so gather-free kernel)",
+        madds_per_s(&m_qlut, crude_adds),
+        m_u16.median.as_secs_f64() / m_qlut.median.as_secs_f64(),
+    );
+
+    // parity suite: both widths must return bit-identical crude sums and
+    // the same top-k as the row-major oracle; the quantized sweep must
+    // stay a lower bound within its error band, across query draws
     {
         let mut prng = Rng::new(99);
         for t in 0..8 {
@@ -87,10 +135,21 @@ fn main() {
                 .map(|j| x.get(prng.below(n), j) + prng.normal_f32() * 0.2)
                 .collect();
             let plut = Lut::build(&ctx, index.codebooks(), &qv);
-            blocked.partial_sums_into(&plut, 0, index.fast_k, &mut crude_buf);
+            index
+                .blocked()
+                .partial_sums_into(&plut, 0, index.fast_k, &mut crude_buf);
+            let pqlut = QLut::from_lut(&plut, 0, index.fast_k);
+            qlut::crude_sums_into(&b_u8, &pqlut, &mut qlut_buf);
             for i in (0..n).step_by(997) {
-                let expect = plut.partial_sum(index.codes().row(i), 0, index.fast_k);
+                let expect =
+                    plut.partial_sum(index.codes().row(i), 0, index.fast_k);
                 assert_eq!(crude_buf[i], expect, "crude parity broke at vec {i}");
+                assert!(
+                    qlut_buf[i] <= expect + 1e-4
+                        && expect - qlut_buf[i] <= pqlut.max_err() + 1e-4,
+                    "qlut bound broke at vec {i}: {} vs {expect}",
+                    qlut_buf[i]
+                );
             }
             let pops = OpCounter::new();
             let fast = search_adc::search_with_lut(&index, &plut, 10, &pops);
@@ -98,7 +157,10 @@ fn main() {
                 search_adc::search_with_lut_rowmajor(&index, &plut, 10, &pops);
             assert_eq!(fast, oracle, "top-k parity broke on query {t}");
         }
-        println!("parity: blocked == row-major on crude sums + ADC top-k (8 queries)");
+        println!(
+            "parity: u8 == u16 == row-major crude sums + ADC top-k, qlut \
+             lower-bound band held (8 queries)"
+        );
     }
 
     let mfull = bench("scan/full-adc (K adds/vec)", || {
@@ -135,14 +197,70 @@ fn main() {
         ));
     });
     println!("{}", mscanfirst.report());
+
+    let mut qcrude_scratch = Vec::new();
+    let mqscanfirst = bench("scan/two-step-batched (qlut scanfirst)", || {
+        black_box(search_icq::search_scanfirst_qlut(
+            &index,
+            &lut,
+            search_icq::IcqSearchOpts { k: 10, margin_scale: 1.0 },
+            &ops,
+            &mut qcrude_scratch,
+        ));
+    });
+    println!("{}", mqscanfirst.report());
     println!(
         "two-step speedup over full ADC: margin1 {:.2}x, margin0 {:.2}x, \
-         batched {:.2}x (theoretical K/fast_k = {:.1}x)",
+         batched {:.2}x, qlut-batched {:.2}x (theoretical K/fast_k = {:.1}x)",
         mfull.median.as_secs_f64() / mtwo.median.as_secs_f64(),
         mfull.median.as_secs_f64() / mtwo0.median.as_secs_f64(),
         mfull.median.as_secs_f64() / mscanfirst.median.as_secs_f64(),
+        mfull.median.as_secs_f64() / mqscanfirst.median.as_secs_f64(),
         k as f64 / index.fast_k as f64,
     );
+
+    // machine-readable crude-pass trajectory
+    let json_path = std::env::var("ICQ_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("kernels".to_string()));
+    for (key, v) in [
+        ("n", n as f64),
+        ("d", d as f64),
+        ("k", k as f64),
+        ("m", m as f64),
+        ("fast_k", index.fast_k as f64),
+        ("code_width_bits", index.blocked().code_width_bits() as f64),
+        ("crude_rowmajor_madds_per_s", madds_per_s(&mscan, crude_adds)),
+        ("crude_blocked_u16_madds_per_s", madds_per_s(&m_u16, crude_adds)),
+        ("crude_blocked_u8_madds_per_s", madds_per_s(&m_u8, crude_adds)),
+        ("crude_qlut_madds_per_s", madds_per_s(&m_qlut, crude_adds)),
+        (
+            "u8_vs_u16_speedup",
+            m_u16.median.as_secs_f64() / m_u8.median.as_secs_f64(),
+        ),
+        (
+            "qlut_vs_u16_speedup",
+            m_u16.median.as_secs_f64() / m_qlut.median.as_secs_f64(),
+        ),
+        ("full_adc_median_us", mfull.median.as_secs_f64() * 1e6),
+        (
+            "scanfirst_median_us",
+            mscanfirst.median.as_secs_f64() * 1e6,
+        ),
+        (
+            "qlut_scanfirst_median_us",
+            mqscanfirst.median.as_secs_f64() * 1e6,
+        ),
+    ] {
+        obj.insert(key.to_string(), Json::Num(v));
+    }
+    obj.insert("avx2".to_string(), Json::Bool(avx2));
+    let json = Json::Obj(obj).to_string_json();
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("[kernels bench] could not write {json_path}: {e}"),
+    }
 
     // PJRT-executed Pallas graphs (if artifacts are present)
     match icq::runtime::XlaRuntime::new("artifacts") {

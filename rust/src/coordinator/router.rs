@@ -33,29 +33,66 @@ impl Router {
     }
 
     /// Pick the least-loaded worker, round-robin on ties; falls back to a
-    /// blocking send on the chosen queue. Returns false when all workers
-    /// are gone.
+    /// blocking send on the chosen queue. A dead (disconnected) worker is
+    /// skipped and the batch retried on the remaining ones; returns false
+    /// only when every worker is gone.
+    ///
+    /// The load gauge is incremented optimistically before the send (the
+    /// worker decrements it after completing the batch), so every send
+    /// failure must roll it back — otherwise a dead worker's gauge stays
+    /// inflated forever and least-loaded routing permanently avoids a
+    /// queue slot that no longer exists while overrating the rest.
     pub fn dispatch(&self, batch: Vec<PendingQuery>) -> bool {
         let start = self.rr.fetch_add(1, Ordering::Relaxed);
         let n = self.workers.len();
-        let mut best = start % n;
-        let mut best_load = self.loads[best].load(Ordering::Relaxed);
-        for off in 1..n {
-            let i = (start + off) % n;
-            let load = self.loads[i].load(Ordering::Relaxed);
-            if load < best_load {
-                best = i;
-                best_load = load;
+        let queued = batch.len();
+        let mut dead = vec![false; n];
+        let mut batch = batch;
+        loop {
+            // least-loaded among the workers not yet found dead,
+            // round-robin tie-break
+            let mut best = None;
+            let mut best_load = usize::MAX;
+            for off in 0..n {
+                let i = (start + off) % n;
+                if dead[i] {
+                    continue;
+                }
+                let load = self.loads[i].load(Ordering::Relaxed);
+                if load < best_load {
+                    best = Some(i);
+                    best_load = load;
+                }
             }
-        }
-        self.loads[best].fetch_add(batch.len(), Ordering::Relaxed);
-        match self.workers[best].try_send(batch) {
-            Ok(()) => true,
-            Err(TrySendError::Full(batch)) => {
-                // chosen queue full: blocking send (backpressure upstream)
-                self.workers[best].send(batch).is_ok()
+            let Some(best) = best else {
+                return false; // all workers gone
+            };
+            self.loads[best].fetch_add(queued, Ordering::Relaxed);
+            match self.workers[best].try_send(batch) {
+                Ok(()) => return true,
+                Err(TrySendError::Full(b)) => {
+                    // chosen queue full: blocking send (backpressure
+                    // upstream)
+                    match self.workers[best].send(b) {
+                        Ok(()) => return true,
+                        Err(std::sync::mpsc::SendError(b)) => {
+                            // worker died while we were blocked: undo
+                            // the gauge and retry the others
+                            self.loads[best]
+                                .fetch_sub(queued, Ordering::Relaxed);
+                            dead[best] = true;
+                            batch = b;
+                        }
+                    }
+                }
+                Err(TrySendError::Disconnected(b)) => {
+                    // nothing was enqueued: undo the gauge, retry the
+                    // others
+                    self.loads[best].fetch_sub(queued, Ordering::Relaxed);
+                    dead[best] = true;
+                    batch = b;
+                }
             }
-            Err(TrySendError::Disconnected(_)) => false,
         }
     }
 }
@@ -124,5 +161,53 @@ mod tests {
         }
         assert_eq!(c2, 4, "loaded worker should have been avoided");
         assert_eq!(l2.load(Ordering::Relaxed), 4);
+    }
+
+    /// Regression: a failed dispatch must roll the optimistic gauge
+    /// increment back, or a dead worker looks permanently loaded.
+    #[test]
+    fn failed_dispatch_rolls_back_load_gauge() {
+        let (t1, r1) = mpsc::sync_channel(16);
+        let load = Arc::new(AtomicUsize::new(0));
+        let router = Router::new(vec![t1], vec![load.clone()]);
+        drop(r1); // worker gone
+        assert!(!router.dispatch(vec![q(), q(), q()]));
+        assert_eq!(
+            load.load(Ordering::Relaxed),
+            0,
+            "disconnected dispatch leaked into the load gauge"
+        );
+        // repeated dispatches to a dead worker must not accumulate either
+        for _ in 0..5 {
+            assert!(!router.dispatch(vec![q()]));
+        }
+        assert_eq!(load.load(Ordering::Relaxed), 0);
+    }
+
+    /// Regression: one dead worker must not take the routing loop down —
+    /// its clean (rolled-back) gauge makes it the least-loaded pick, so
+    /// dispatch has to skip it and deliver to the live, busier one.
+    #[test]
+    fn dead_worker_is_skipped_not_fatal() {
+        let (t1, r1) = mpsc::sync_channel(16);
+        let (t2, r2) = mpsc::sync_channel(16);
+        let l1 = Arc::new(AtomicUsize::new(0));
+        let l2 = Arc::new(AtomicUsize::new(5)); // live but busier
+        let router = Router::new(vec![t1, t2], vec![l1.clone(), l2.clone()]);
+        drop(r1); // worker 0 dead and looking least-loaded
+        for _ in 0..3 {
+            assert!(router.dispatch(vec![q()]));
+        }
+        let mut c2 = 0;
+        while let Ok(b) = r2.try_recv() {
+            c2 += b.len();
+        }
+        assert_eq!(c2, 3, "batches must reroute to the live worker");
+        assert_eq!(
+            l1.load(Ordering::Relaxed),
+            0,
+            "dead worker's gauge must stay clean"
+        );
+        assert_eq!(l2.load(Ordering::Relaxed), 5 + 3);
     }
 }

@@ -22,8 +22,10 @@ pub trait BatchSearcher: Send + Sync + 'static {
 }
 
 /// Pure-rust two-step ICQ searcher over an [`EncodedIndex`]: per query,
-/// build the LUT, run the blocked crude sweep, then the shared
-/// threshold/refine engine (`search_icq::search_scanfirst_query`).
+/// build the LUT, run the blocked crude sweep — quantized (u8 LUT, u16
+/// accumulators, SIMD on AVX2) when the index stores narrow codes, f32
+/// otherwise — then the shared threshold/refine engine
+/// (`search_icq::search_scanfirst_query_qlut`).
 pub struct NativeSearcher {
     pub index: Arc<EncodedIndex>,
     pub opts: IcqSearchOpts,
@@ -49,7 +51,7 @@ impl BatchSearcher for NativeSearcher {
         let mut out = Vec::with_capacity(queries.rows());
         let mut crude = Vec::new();
         for qi in 0..queries.rows() {
-            out.push(search_icq::search_scanfirst_query(
+            out.push(search_icq::search_scanfirst_query_qlut(
                 &self.index,
                 queries.row(qi),
                 opts,

@@ -111,9 +111,21 @@ impl TrainedBundle {
     }
 
     /// Validate the structural invariants the search path assumes.
+    /// `EncodedIndex::from_bundle` relies on this as its only snapshot
+    /// check, so hand-built bundles go through it too. The shared
+    /// snapshot invariants (code range, fast_k, labels) live in
+    /// `index::encoded::validate_snapshot`; only the bundle-specific
+    /// checks are local.
     pub fn validate(&self) -> Result<()> {
-        ensure!(self.codes.iter().all(|&c| c >= 0 && (c as usize) < self.m),
-            "codes out of range");
+        ensure!(self.codes.len() == self.n * self.k, "codes shape != n*K");
+        crate::index::encoded::validate_snapshot(
+            &self.codes,
+            self.n,
+            self.k,
+            self.m,
+            self.fast_k as i64,
+            self.labels.len(),
+        )?;
         // group orthogonality: fast codebooks live on xi, slow on 1 - xi
         for kk in 0..self.k {
             for j in 0..self.m {

@@ -9,7 +9,7 @@
 //!
 //! ```text
 //! row-major  (Codes):        code[i][k]               i = 0..n, k = 0..K
-//! blocked (BlockedCodes):    block b = [K][B] u16     b = 0..ceil(n/B)
+//! blocked (BlockedCodes):    block b = [K][B] codes   b = 0..ceil(n/B)
 //!                            data[(b*K + k)*B + j] = code[b*B + j][k]
 //! ```
 //!
@@ -19,33 +19,110 @@
 //! row hot in L1 for the whole block. The tail block is padded with code
 //! 0; callers copy only the first `n - b*B` lanes of the last block.
 //!
+//! ## Code width
+//!
+//! Storage is generic over the per-code integer ([`CodeUnit`]): `u8` when
+//! the codebook size allows it, `u16` otherwise. The selection rule lives
+//! in [`BlockedStore::from_codes`] and is applied automatically by
+//! `EncodedIndex::assemble`:
+//!
+//! * `m <= 256` — [`BlockedCodes<u8>`]: every shipped config is in this
+//!   regime (the paper's tables use m in {8..256}), and the narrow codes
+//!   halve the bytes streamed per crude-pass add. The `u8` store is also
+//!   the input layout of the quantized-LUT SIMD sweep in [`super::qlut`].
+//! * `m > 256` — [`BlockedCodes<u16>`]: the wide fallback, up to
+//!   m = 65536.
+//!
 //! Accumulation order per vector is books-ascending, identical to
 //! [`Lut::partial_sum`] over a row-major code row, so blocked partial
-//! sums are bitwise equal to the serial path — the row-major scan stays
-//! around as the parity oracle (see `search_adc::search_with_lut_rowmajor`
-//! and the serial `search_icq::search_with_lut`).
+//! sums are bitwise equal to the serial path — and independent of the
+//! code width, since the width only changes how the same lookup index is
+//! stored. The row-major scan stays around as the parity oracle (see
+//! `search_adc::search_with_lut_rowmajor` and the serial
+//! `search_icq::search_with_lut`).
 
 use super::lut::Lut;
 use crate::quantizer::Codes;
 
 /// Default vectors per block: 64 lanes keeps a whole block of codes
-/// (K * 128 bytes at K = 8) plus the accumulator inside L1 while giving
-/// the compiler long contiguous inner loops.
+/// (K * 64 bytes at K = 8 for u8 codes) plus the accumulator inside L1
+/// while giving the compiler long contiguous inner loops. 64 is also a
+/// multiple of the 32-lane AVX2 stride the quantized sweep uses.
 pub const DEFAULT_BLOCK: usize = 64;
 
+/// A fixed-width unsigned integer a code can be stored in.
+///
+/// Implemented for `u8` (m <= 256) and `u16` (m <= 65536). The trait is
+/// sealed by construction: nothing else in the crate implements it.
+pub trait CodeUnit:
+    Copy + Default + PartialEq + std::fmt::Debug + Send + Sync + 'static
+{
+    /// Largest codebook size this width can index (exclusive code bound).
+    const MAX_M: usize;
+
+    /// Narrow from the encoder's `u16`. Callers must have validated
+    /// `c < MAX_M` (the loaders reject out-of-range codes up front).
+    fn from_wide(c: u16) -> Self;
+
+    /// Widen back to the encoder width.
+    fn widen(self) -> u16;
+
+    /// The LUT row index this code selects.
+    fn index(self) -> usize;
+}
+
+impl CodeUnit for u8 {
+    const MAX_M: usize = 1 << 8;
+
+    #[inline]
+    fn from_wide(c: u16) -> Self {
+        debug_assert!((c as usize) < Self::MAX_M, "code {c} overflows u8");
+        c as u8
+    }
+
+    #[inline]
+    fn widen(self) -> u16 {
+        self as u16
+    }
+
+    #[inline]
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+impl CodeUnit for u16 {
+    const MAX_M: usize = 1 << 16;
+
+    #[inline]
+    fn from_wide(c: u16) -> Self {
+        c
+    }
+
+    #[inline]
+    fn widen(self) -> u16 {
+        self
+    }
+
+    #[inline]
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
 /// Codes regrouped into fixed-size blocks of `B` vectors, book-major
-/// (`[K][B]`) within each block. Built once at index construction from
-/// the row-major [`Codes`]; immutable afterwards.
+/// (`[K][B]`) within each block, stored at width `C`. Built once at index
+/// construction from the row-major [`Codes`]; immutable afterwards.
 #[derive(Clone, Debug, PartialEq)]
-pub struct BlockedCodes {
+pub struct BlockedCodes<C: CodeUnit> {
     n: usize,
     k: usize,
     block: usize,
-    /// `ceil(n / block)` blocks, each `[K][block]` u16; tail lanes are 0.
-    data: Vec<u16>,
+    /// `ceil(n / block)` blocks, each `[K][block]`; tail lanes are 0.
+    data: Vec<C>,
 }
 
-impl BlockedCodes {
+impl<C: CodeUnit> BlockedCodes<C> {
     /// Transpose `codes` into blocks of [`DEFAULT_BLOCK`] vectors.
     pub fn from_codes(codes: &Codes) -> Self {
         Self::with_block(codes, DEFAULT_BLOCK)
@@ -56,11 +133,12 @@ impl BlockedCodes {
         assert!(block > 0, "block size must be >= 1");
         let (n, k) = (codes.n(), codes.k());
         let nb = n.div_ceil(block);
-        let mut data = vec![0u16; nb * k * block];
+        let mut data = vec![C::default(); nb * k * block];
         for i in 0..n {
             let (b, lane) = (i / block, i % block);
             for kk in 0..k {
-                data[(b * k + kk) * block + lane] = codes.get(i, kk);
+                data[(b * k + kk) * block + lane] =
+                    C::from_wide(codes.get(i, kk));
             }
         }
         BlockedCodes { n, k, block, data }
@@ -89,7 +167,7 @@ impl BlockedCodes {
 
     /// Book-major codes of block `b`: a `[K][B]` slice of length `K * B`.
     #[inline]
-    pub fn block(&self, b: usize) -> &[u16] {
+    pub fn block(&self, b: usize) -> &[C] {
         let len = self.k * self.block;
         &self.data[b * len..(b + 1) * len]
     }
@@ -98,6 +176,13 @@ impl BlockedCodes {
     #[inline]
     pub fn block_len(&self, b: usize) -> usize {
         self.block.min(self.n - b * self.block)
+    }
+
+    /// Code of vector `i` in book `kk`, widened to the encoder width.
+    #[inline]
+    pub fn get(&self, i: usize, kk: usize) -> u16 {
+        let (b, lane) = (i / self.block, i % self.block);
+        self.data[(b * self.k + kk) * self.block + lane].widen()
     }
 
     /// Accumulate LUT partial sums over books `[k0, k1)` for block `b`
@@ -121,7 +206,7 @@ impl BlockedCodes {
             let row = lut.row(kk);
             let codes = &blk[kk * bs..(kk + 1) * bs];
             for (a, &c) in acc.iter_mut().zip(codes) {
-                *a += row[c as usize];
+                *a += row[c.index()];
             }
         }
     }
@@ -149,6 +234,109 @@ impl BlockedCodes {
     }
 }
 
+/// Width-erased blocked storage: the concrete [`BlockedCodes`] width an
+/// index carries, chosen once at construction. Dense scans match on the
+/// variant at the top of the sweep so the hot loops stay monomorphic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BlockedStore {
+    U8(BlockedCodes<u8>),
+    U16(BlockedCodes<u16>),
+}
+
+impl BlockedStore {
+    /// The width selection rule: `u8` blocks when every code fits a byte
+    /// (`m <= 256`), `u16` otherwise. `m` is the codebook size the codes
+    /// were produced against; callers must have validated `code < m`.
+    pub fn from_codes(codes: &Codes, m: usize) -> Self {
+        if m <= <u8 as CodeUnit>::MAX_M {
+            BlockedStore::U8(BlockedCodes::from_codes(codes))
+        } else {
+            BlockedStore::U16(BlockedCodes::from_codes(codes))
+        }
+    }
+
+    /// Bits per stored code (8 or 16) — scan bandwidth per table-add.
+    pub fn code_width_bits(&self) -> usize {
+        match self {
+            BlockedStore::U8(_) => 8,
+            BlockedStore::U16(_) => 16,
+        }
+    }
+
+    /// The narrow store, when the index selected it (`m <= 256`). The
+    /// quantized-LUT sweep ([`super::qlut`]) requires byte codes.
+    pub fn as_u8(&self) -> Option<&BlockedCodes<u8>> {
+        match self {
+            BlockedStore::U8(b) => Some(b),
+            BlockedStore::U16(_) => None,
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        match self {
+            BlockedStore::U8(b) => b.n(),
+            BlockedStore::U16(b) => b.n(),
+        }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        match self {
+            BlockedStore::U8(b) => b.k(),
+            BlockedStore::U16(b) => b.k(),
+        }
+    }
+
+    #[inline]
+    pub fn block_size(&self) -> usize {
+        match self {
+            BlockedStore::U8(b) => b.block_size(),
+            BlockedStore::U16(b) => b.block_size(),
+        }
+    }
+
+    #[inline]
+    pub fn num_blocks(&self) -> usize {
+        match self {
+            BlockedStore::U8(b) => b.num_blocks(),
+            BlockedStore::U16(b) => b.num_blocks(),
+        }
+    }
+
+    #[inline]
+    pub fn block_len(&self, b: usize) -> usize {
+        match self {
+            BlockedStore::U8(s) => s.block_len(b),
+            BlockedStore::U16(s) => s.block_len(b),
+        }
+    }
+
+    /// Code of vector `i` in book `kk`, widened to the encoder width.
+    #[inline]
+    pub fn get(&self, i: usize, kk: usize) -> u16 {
+        match self {
+            BlockedStore::U8(b) => b.get(i, kk),
+            BlockedStore::U16(b) => b.get(i, kk),
+        }
+    }
+
+    /// Dense f32 sweep (see [`BlockedCodes::partial_sums_into`]); results
+    /// are bitwise identical across widths.
+    pub fn partial_sums_into(
+        &self,
+        lut: &Lut,
+        k0: usize,
+        k1: usize,
+        out: &mut [f32],
+    ) {
+        match self {
+            BlockedStore::U8(b) => b.partial_sums_into(lut, k0, k1, out),
+            BlockedStore::U16(b) => b.partial_sums_into(lut, k0, k1, out),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,7 +357,7 @@ mod tests {
     #[test]
     fn layout_transposes_rows_into_book_major_blocks() {
         let codes = random_codes(10, 3, 7, 1);
-        let blocked = BlockedCodes::with_block(&codes, 4);
+        let blocked = BlockedCodes::<u16>::with_block(&codes, 4);
         assert_eq!(blocked.num_blocks(), 3);
         assert_eq!(blocked.block_len(2), 2); // 10 = 4 + 4 + 2
         for i in 0..10 {
@@ -177,6 +365,7 @@ mod tests {
             let blk = blocked.block(b);
             for kk in 0..3 {
                 assert_eq!(blk[kk * 4 + lane], codes.get(i, kk));
+                assert_eq!(blocked.get(i, kk), codes.get(i, kk));
             }
         }
         // padding lanes are code 0
@@ -188,21 +377,73 @@ mod tests {
     }
 
     #[test]
-    fn partial_sums_match_row_major_lut_sums() {
+    fn narrow_layout_matches_wide_layout() {
+        let codes = random_codes(77, 4, 256, 2);
+        let narrow = BlockedCodes::<u8>::with_block(&codes, 16);
+        let wide = BlockedCodes::<u16>::with_block(&codes, 16);
+        assert_eq!(narrow.num_blocks(), wide.num_blocks());
+        for i in 0..77 {
+            for kk in 0..4 {
+                assert_eq!(narrow.get(i, kk), wide.get(i, kk));
+                assert_eq!(narrow.get(i, kk), codes.get(i, kk));
+            }
+        }
+    }
+
+    #[test]
+    fn partial_sums_match_row_major_lut_sums_both_widths() {
         let (k, m) = (5, 16);
         let lut = random_lut(k, m, 2);
         for n in [0usize, 1, 7, 64, 65, 130] {
             let codes = random_codes(n, k, m, n as u64 + 3);
-            let blocked = BlockedCodes::with_block(&codes, 64);
+            let narrow = BlockedCodes::<u8>::with_block(&codes, 64);
+            let wide = BlockedCodes::<u16>::with_block(&codes, 64);
             for (k0, k1) in [(0, k), (0, 2), (2, k), (3, 3)] {
-                let mut out = vec![f32::NAN; n];
-                blocked.partial_sums_into(&lut, k0, k1, &mut out);
+                let mut out8 = vec![f32::NAN; n];
+                let mut out16 = vec![f32::NAN; n];
+                narrow.partial_sums_into(&lut, k0, k1, &mut out8);
+                wide.partial_sums_into(&lut, k0, k1, &mut out16);
                 for i in 0..n {
                     let expect = lut.partial_sum(codes.row(i), k0, k1);
                     assert_eq!(
-                        out[i], expect,
-                        "n={n} i={i} books [{k0},{k1}) diverged"
+                        out8[i], expect,
+                        "u8: n={n} i={i} books [{k0},{k1}) diverged"
                     );
+                    assert_eq!(
+                        out16[i], expect,
+                        "u16: n={n} i={i} books [{k0},{k1}) diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn store_selects_width_by_codebook_size() {
+        let codes = random_codes(20, 2, 16, 5);
+        assert_eq!(BlockedStore::from_codes(&codes, 16).code_width_bits(), 8);
+        assert_eq!(BlockedStore::from_codes(&codes, 256).code_width_bits(), 8);
+        assert_eq!(
+            BlockedStore::from_codes(&codes, 257).code_width_bits(),
+            16
+        );
+        assert!(BlockedStore::from_codes(&codes, 256).as_u8().is_some());
+        assert!(BlockedStore::from_codes(&codes, 300).as_u8().is_none());
+    }
+
+    #[test]
+    fn store_sweep_matches_oracle_across_widths() {
+        let (k, m) = (4, 9);
+        let lut = random_lut(k, m, 7);
+        let codes = random_codes(90, k, m, 8);
+        for store_m in [m, 400] {
+            let store = BlockedStore::from_codes(&codes, store_m);
+            let mut out = vec![f32::NAN; 90];
+            store.partial_sums_into(&lut, 0, k, &mut out);
+            for i in 0..90 {
+                assert_eq!(out[i], lut.partial_sum(codes.row(i), 0, k));
+                for kk in 0..k {
+                    assert_eq!(store.get(i, kk), codes.get(i, kk));
                 }
             }
         }
@@ -211,7 +452,7 @@ mod tests {
     #[test]
     fn empty_codes_produce_no_blocks() {
         let codes = Codes::zeros(0, 4);
-        let blocked = BlockedCodes::from_codes(&codes);
+        let blocked = BlockedCodes::<u8>::from_codes(&codes);
         assert_eq!(blocked.num_blocks(), 0);
         assert_eq!(blocked.n(), 0);
         let lut = random_lut(4, 8, 9);

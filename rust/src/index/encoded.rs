@@ -5,15 +5,51 @@
 //! The same structure serves baseline ADC search (fast_k = K, sigma = 0)
 //! and ICQ two-step search.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use super::blocked::BlockedCodes;
+use super::blocked::{BlockedStore, CodeUnit};
 use super::lut::LutContext;
 use crate::core::Matrix;
 use crate::data::format::TensorPack;
 use crate::data::loader::TrainedBundle;
 use crate::quantizer::icq::Icq;
 use crate::quantizer::{Codebooks, Codes, Quantizer};
+
+/// Structural invariants every snapshot-built index must satisfy before
+/// the search state is assembled: codes inside `[0, m)` with `m` within
+/// the u16 code width, `fast_k` in `[1, K]`, labels matching `n`.
+/// Violations mean a corrupt or hand-tampered snapshot; failing here
+/// (with an error) beats wrapping codes into a silently wrong index or
+/// panicking later inside `Lut::partial_sum`. The single implementation
+/// behind both loaders — [`EncodedIndex::from_pack`] directly, and
+/// `TrainedBundle::validate` (hence [`EncodedIndex::from_bundle`]) for
+/// the bundle path.
+pub(crate) fn validate_snapshot(
+    codes: &[i32],
+    n: usize,
+    k: usize,
+    m: usize,
+    fast_k: i64,
+    labels_len: usize,
+) -> Result<()> {
+    ensure!(
+        m <= <u16 as CodeUnit>::MAX_M,
+        "codebook size m={m} exceeds the u16 code width"
+    );
+    if let Some(pos) = codes.iter().position(|&c| c < 0 || c as usize >= m)
+    {
+        anyhow::bail!(
+            "code {} at flat index {pos} is outside [0, {m})",
+            codes[pos]
+        );
+    }
+    ensure!(
+        fast_k >= 1 && fast_k as usize <= k,
+        "fast_k={fast_k} outside [1, K={k}]"
+    );
+    ensure!(labels_len == n, "labels length {labels_len} != n={n}");
+    Ok(())
+}
 
 /// An immutable, searchable encoded database.
 #[derive(Clone, Debug)]
@@ -23,8 +59,9 @@ pub struct EncodedIndex {
     /// and the serial parity oracle's scan order.
     codes: Codes,
     /// book-major blocked transpose of `codes` (see [`super::blocked`]):
-    /// the layout every dense scan sweeps.
-    blocked: BlockedCodes,
+    /// the layout every dense scan sweeps, stored at the narrowest code
+    /// width the codebook size allows (u8 when m <= 256, u16 otherwise).
+    blocked: BlockedStore,
     lut_ctx: LutContext,
     /// leading fast-group size (|K|); == k for non-ICQ methods.
     pub fast_k: usize,
@@ -37,7 +74,9 @@ pub struct EncodedIndex {
 impl EncodedIndex {
     /// Assemble the derived search state (LUT context + blocked codes)
     /// around a codes/codebooks pair. Every constructor funnels here so
-    /// the blocked transpose exists on all paths (train, bundle, pack).
+    /// the blocked transpose exists on all paths (train, bundle, pack),
+    /// and the code width is chosen in exactly one place: u8 blocks when
+    /// `m <= 256` (every shipped config), u16 above.
     fn assemble(
         codebooks: Codebooks,
         codes: Codes,
@@ -46,7 +85,7 @@ impl EncodedIndex {
         labels: Vec<i32>,
     ) -> Self {
         let lut_ctx = LutContext::new(&codebooks);
-        let blocked = BlockedCodes::from_codes(&codes);
+        let blocked = BlockedStore::from_codes(&codes, codebooks.m());
         EncodedIndex { codebooks, codes, blocked, lut_ctx, fast_k, sigma, labels }
     }
 
@@ -72,6 +111,9 @@ impl EncodedIndex {
     /// Materialize from a python-trained bundle (codes already computed
     /// at build time by the L2 trainer).
     pub fn from_bundle(b: &TrainedBundle) -> Result<Self> {
+        // `validate` covers the snapshot invariants (code range, fast_k
+        // in [1, K], label/codes lengths, m within the u16 code width)
+        // plus the bundle-only psi-split check, so no second pass here.
         b.validate()?;
         let codebooks =
             Codebooks::from_vec(b.k, b.m, b.d, b.codebooks.clone());
@@ -119,8 +161,9 @@ impl EncodedIndex {
         &self.codes
     }
 
-    /// Book-major blocked codes (the dense-scan layout).
-    pub fn blocked(&self) -> &BlockedCodes {
+    /// Book-major blocked codes (the dense-scan layout), at the width
+    /// selected by [`BlockedStore::from_codes`].
+    pub fn blocked(&self) -> &BlockedStore {
         &self.blocked
     }
 
@@ -151,19 +194,42 @@ impl EncodedIndex {
     }
 
     /// Load an index snapshot produced by [`EncodedIndex::to_pack`].
+    /// Rejects structurally corrupt snapshots (out-of-range codes,
+    /// `fast_k` outside `[1, K]`, label/codes length mismatch) with an
+    /// error instead of building a silently wrong index.
     pub fn from_pack(pack: &TensorPack) -> Result<Self> {
         let codebooks = Codebooks::from_pack(pack, "")?;
         let (dims, codes_i32) = pack.i32("codes")?;
-        anyhow::ensure!(dims.len() == 2);
+        ensure!(dims.len() == 2, "codes must be [n, K]");
+        ensure!(
+            dims[1] == codebooks.k(),
+            "codes have {} books but the codebooks have {}",
+            dims[1],
+            codebooks.k()
+        );
+        let fast_k = pack.scalar_i32("fast_k")?;
+        let sigma = pack.scalar_f32("sigma")?;
+        let (_, labels) = pack.i32("labels")?;
+        validate_snapshot(
+            codes_i32,
+            dims[0],
+            codebooks.k(),
+            codebooks.m(),
+            fast_k as i64,
+            labels.len(),
+        )?;
         let codes = Codes::from_vec(
             dims[0],
             dims[1],
             codes_i32.iter().map(|&c| c as u16).collect(),
         );
-        let fast_k = pack.scalar_i32("fast_k")? as usize;
-        let sigma = pack.scalar_f32("sigma")?;
-        let (_, labels) = pack.i32("labels")?;
-        Ok(Self::assemble(codebooks, codes, fast_k, sigma, labels.to_vec()))
+        Ok(Self::assemble(
+            codebooks,
+            codes,
+            fast_k as usize,
+            sigma,
+            labels.to_vec(),
+        ))
     }
 }
 
@@ -212,16 +278,103 @@ mod tests {
         let idx = EncodedIndex::build(&pq, &x, vec![0; 70]);
         assert_eq!(idx.blocked().n(), idx.len());
         assert_eq!(idx.blocked().k(), idx.k());
+        // m = 4 <= 256: the narrow store must have been selected
+        assert_eq!(idx.blocked().code_width_bits(), 8);
         for i in 0..idx.len() {
-            let b = idx.blocked();
-            let bs = b.block_size();
-            let blk = b.block(i / bs);
             for kk in 0..idx.k() {
-                assert_eq!(blk[kk * bs + i % bs], idx.codes().get(i, kk));
+                assert_eq!(idx.blocked().get(i, kk), idx.codes().get(i, kk));
             }
         }
         let back = EncodedIndex::from_pack(&idx.to_pack()).unwrap();
         assert_eq!(back.blocked(), idx.blocked());
+    }
+
+    #[test]
+    fn from_pack_rejects_corrupt_snapshots() {
+        let x = hetero(40, 6, 7);
+        let pq = Pq::train(&x, PqOpts { k: 3, m: 4, iters: 4, seed: 0 });
+        let idx =
+            EncodedIndex::build(&pq, &x, (0..40).map(|i| i as i32).collect());
+        let good = idx.to_pack();
+        assert!(EncodedIndex::from_pack(&good).is_ok());
+
+        // negative code: would wrap through `as u16` into a huge index
+        let mut bad = good.clone();
+        let mut codes: Vec<i32> =
+            good.i32("codes").unwrap().1.to_vec();
+        codes[7] = -1;
+        bad.insert_i32("codes", vec![40, 3], codes);
+        assert!(EncodedIndex::from_pack(&bad).is_err());
+
+        // code == m: one past the last codeword
+        let mut bad = good.clone();
+        let mut codes: Vec<i32> = good.i32("codes").unwrap().1.to_vec();
+        codes[0] = 4;
+        bad.insert_i32("codes", vec![40, 3], codes);
+        assert!(EncodedIndex::from_pack(&bad).is_err());
+
+        // fast_k out of [1, K]
+        for bad_fast_k in [0i32, 4] {
+            let mut bad = good.clone();
+            bad.insert_i32("fast_k", vec![1], vec![bad_fast_k]);
+            assert!(
+                EncodedIndex::from_pack(&bad).is_err(),
+                "fast_k={bad_fast_k} accepted"
+            );
+        }
+
+        // labels shorter than n
+        let mut bad = good.clone();
+        bad.insert_i32("labels", vec![39], vec![0; 39]);
+        assert!(EncodedIndex::from_pack(&bad).is_err());
+    }
+
+    #[test]
+    fn from_bundle_rejects_out_of_range_codes() {
+        use crate::data::loader::TrainedBundle;
+        let (k, m, d, n) = (2usize, 4usize, 6usize, 8usize);
+        let xi = vec![1., 1., 1., 0., 0., 0.];
+        let mut cb = vec![0.0f32; k * m * d];
+        for j in 0..m {
+            for dim in 0..3 {
+                cb[j * d + dim] = 1.0 + j as f32; // fast cb on psi
+                cb[(m + j) * d + 3 + dim] = 2.0; // slow cb off psi
+            }
+        }
+        let base = TrainedBundle {
+            codebooks: cb,
+            k,
+            m,
+            d,
+            fast_k: 1,
+            xi,
+            lambda: vec![0.5; d],
+            sigma: 1.0,
+            codes: vec![1; n * k],
+            n,
+            labels: vec![0; n],
+            embeddings: Matrix::zeros(n, d),
+            test_x: Matrix::zeros(2, d),
+            test_labels: vec![0, 1],
+            pack: crate::data::format::TensorPack::new(),
+        };
+        assert!(EncodedIndex::from_bundle(&base).is_ok());
+
+        let mut bad = base.clone();
+        bad.codes[3] = m as i32; // out of range
+        assert!(EncodedIndex::from_bundle(&bad).is_err());
+
+        let mut bad = base.clone();
+        bad.codes[0] = -2;
+        assert!(EncodedIndex::from_bundle(&bad).is_err());
+
+        let mut bad = base.clone();
+        bad.fast_k = k + 1;
+        assert!(EncodedIndex::from_bundle(&bad).is_err());
+
+        let mut bad = base;
+        bad.labels = vec![0; n - 1];
+        assert!(EncodedIndex::from_bundle(&bad).is_err());
     }
 
     #[test]

@@ -14,21 +14,26 @@
 //!
 //! Dense scans run over [`blocked`] storage — codes transposed into
 //! fixed-size book-major blocks (`[K][B]` per block, Quick-ADC/Bolt
-//! style) built once at index construction — while the refine step and
-//! the serial parity oracle keep the row-major [`crate::quantizer::Codes`].
-//! The shared "seed threshold from crude top-k -> refine shortlist"
-//! engine every dense path consumes lives in [`two_step`].
+//! style) built once at index construction, stored narrow (`u8`) when
+//! `m <= 256` — while the refine step and the serial parity oracle keep
+//! the row-major [`crate::quantizer::Codes`]. On narrow indexes the
+//! crude pass can additionally run over a u8-quantized LUT with u16
+//! accumulators ([`qlut`], Bolt-style, SIMD on AVX2). The shared "seed
+//! threshold from crude top-k -> refine shortlist" engine every dense
+//! path consumes lives in [`two_step`].
 
 pub mod blocked;
 pub mod encoded;
 pub mod lut;
 pub mod opcount;
+pub mod qlut;
 pub mod search_adc;
 pub mod search_exact;
 pub mod search_icq;
 pub mod two_step;
 
-pub use blocked::BlockedCodes;
+pub use blocked::{BlockedCodes, BlockedStore, CodeUnit};
 pub use encoded::EncodedIndex;
 pub use lut::Lut;
 pub use opcount::OpCounter;
+pub use qlut::QLut;

@@ -1,0 +1,485 @@
+//! Bolt-style quantized lookup tables and the small-integer crude sweep.
+//!
+//! The f32 blocked sweep ([`super::blocked`]) already makes the crude
+//! pass columnar; the remaining cost is 4 bytes per LUT entry and a f32
+//! accumulator lane per vector. Bolt (Blalock & Guttag) and Quick ADC
+//! (André et al.) shrink both: quantize the LUT entries to u8 against a
+//! shared scale, sweep with integer adds into a u16 accumulator, and
+//! only dequantize once per vector at the end. This module implements
+//! that for the crude pass of the two-step search:
+//!
+//! * [`QLut`] — per-book u8 entries `e[k][j]` with per-book bias
+//!   `b_k = min_j lut[k][j]` and one shared `scale` (the largest
+//!   per-book span / 255). Entries are rounded **down**, then nudged
+//!   further down if f32 round-off broke the bound, so that
+//!   `e * scale + b_k <= lut[k][j]` always holds entry-wise.
+//! * [`crude_sums_into`] — the blocked u16-accumulator sweep over a
+//!   [`BlockedCodes<u8>`] store, dequantized per vector into
+//!   `lb[i] = (sum_k e[k][code]) * scale + sum_k b_k`.
+//!
+//! ## Why the lower bound matters (paper eq. 11)
+//!
+//! The two-step search prunes on `crude < radius + sigma`, where the
+//! crude sum is itself a lower bound of the full ADC distance. Rounding
+//! the quantized entries down keeps `lb[i] <= crude[i] <= full[i]` (up
+//! to f32 ulp noise in the final dequantize multiply-add), so swapping
+//! `lb` in for `crude` can only *widen* the refine set — the eq. 11
+//! pruning radius stays valid and the returned top-k is unchanged; the
+//! refine step recomputes exact f32 distances for every survivor (see
+//! `two_step::refine_from_crude_lb`). The price is bounded extra work:
+//! each entry loses at most `scale`, so
+//! `crude[i] - lb[i] <= books * scale` ([`QLut::max_err`]) and only
+//! vectors inside that band above the threshold are refined needlessly.
+//!
+//! ## Kernels
+//!
+//! Accumulators are u16: [`QLut::fits`] guarantees
+//! `books * 255 <= 65535`, so the block sum cannot overflow. Three
+//! kernels, selected once per sweep:
+//!
+//! * AVX2 + `m <= 16` — `_mm256_shuffle_epi8` table gather: the 16 u8
+//!   entries of a book are broadcast to both 128-bit lanes and 32 codes
+//!   are looked up per instruction (the classic Bolt `vpshufb` trick).
+//! * AVX2 + `m > 16` — the gather-free unrolled lookup loop compiled
+//!   with AVX2 enabled (the shuffle trick needs the whole row in one
+//!   register; wider rows fall back to scalar gathers whose u16
+//!   widening/adds still vectorize).
+//! * portable — the same unrolled lookup loop, no `std::arch`; the only
+//!   path on non-x86_64 targets and pre-AVX2 CPUs.
+
+use super::blocked::BlockedCodes;
+use super::lut::Lut;
+
+/// A u8-quantized view of a contiguous book range `[k0, k1)` of a
+/// [`Lut`], with the shared dequantization affine (`scale`, per-book
+/// biases folded into `bias_sum`).
+#[derive(Clone, Debug)]
+pub struct QLut {
+    k0: usize,
+    books: usize,
+    m: usize,
+    /// shared quantization step (largest per-book span / 255).
+    scale: f32,
+    /// sum of the per-book biases (each book's row minimum).
+    bias_sum: f32,
+    /// [books][m] u8 entries, row-major.
+    data: Vec<u8>,
+}
+
+impl QLut {
+    /// Whether a `books`-entry sum fits the u16 accumulator:
+    /// `books * 255 <= u16::MAX` (true for every book count <= 257).
+    pub fn fits(books: usize) -> bool {
+        books >= 1 && books * (u8::MAX as usize) <= u16::MAX as usize
+    }
+
+    /// Quantize books `[k0, k1)` of `lut`, rounding entries down so the
+    /// dequantized table is entry-wise `<=` the f32 table.
+    pub fn from_lut(lut: &Lut, k0: usize, k1: usize) -> QLut {
+        assert!(k0 < k1 && k1 <= lut.k(), "bad book range [{k0}, {k1})");
+        let books = k1 - k0;
+        assert!(
+            Self::fits(books),
+            "{books} books overflow the u16 accumulator"
+        );
+        let m = lut.m();
+        let mut bias = Vec::with_capacity(books);
+        let mut span = 0.0f32;
+        for kk in k0..k1 {
+            let row = lut.row(kk);
+            let lo = row.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            bias.push(lo);
+            span = span.max(hi - lo);
+        }
+        let scale = if span > 0.0 { span / 255.0 } else { 1.0 };
+        let mut data = vec![0u8; books * m];
+        for (t, kk) in (k0..k1).enumerate() {
+            let row = lut.row(kk);
+            let b = bias[t];
+            for (q, &v) in data[t * m..(t + 1) * m].iter_mut().zip(row) {
+                let mut e = (((v - b) / scale).floor() as i64).clamp(0, 255);
+                // floor() in f32 can land one step high after round-off;
+                // walk down until the dequantized entry is a true lower
+                // bound of the f32 entry.
+                while e > 0 && (e as f32) * scale + b > v {
+                    e -= 1;
+                }
+                *q = e as u8;
+            }
+        }
+        QLut { k0, books, m, scale, bias_sum: bias.iter().sum(), data }
+    }
+
+    /// First book covered.
+    #[inline]
+    pub fn k0(&self) -> usize {
+        self.k0
+    }
+
+    /// Number of books covered.
+    #[inline]
+    pub fn books(&self) -> usize {
+        self.books
+    }
+
+    /// Codebook size.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Shared quantization step.
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Sum of per-book biases (added back at dequantize time).
+    #[inline]
+    pub fn bias_sum(&self) -> f32 {
+        self.bias_sum
+    }
+
+    /// u8 entries of covered book `t` (book `k0 + t` of the source LUT).
+    #[inline]
+    pub fn row(&self, t: usize) -> &[u8] {
+        &self.data[t * self.m..(t + 1) * self.m]
+    }
+
+    /// Upper bound on `crude_f32 - crude_quantized` for any code row:
+    /// each of the `books` entries loses at most one `scale` step to the
+    /// floor (ignoring f32 ulp noise in the dequantize multiply-add).
+    pub fn max_err(&self) -> f32 {
+        self.books as f32 * self.scale
+    }
+
+    /// Rows zero-padded to 16 entries for the `vpshufb` kernel.
+    /// Requires `m <= 16`; pad lanes are never selected (codes < m).
+    fn padded_rows_16(&self) -> Vec<[u8; 16]> {
+        debug_assert!(self.m <= 16);
+        (0..self.books)
+            .map(|t| {
+                let mut tbl = [0u8; 16];
+                tbl[..self.m].copy_from_slice(self.row(t));
+                tbl
+            })
+            .collect()
+    }
+}
+
+/// Portable blocked sweep kernel: accumulate the quantized entries of
+/// every covered book into `acc` (overwritten) for one `[K][B]` block
+/// slice. 4-way unrolled; the u16 adds cannot overflow per
+/// [`QLut::fits`].
+#[inline]
+fn block_qsums_lookup(
+    blk: &[u8],
+    bs: usize,
+    qlut: &QLut,
+    acc: &mut [u16],
+) {
+    debug_assert_eq!(acc.len(), bs);
+    acc.fill(0);
+    let k0 = qlut.k0();
+    for t in 0..qlut.books() {
+        let row = qlut.row(t);
+        let codes = &blk[(k0 + t) * bs..(k0 + t + 1) * bs];
+        let mut acc4 = acc.chunks_exact_mut(4);
+        let mut codes4 = codes.chunks_exact(4);
+        for (a, c) in (&mut acc4).zip(&mut codes4) {
+            a[0] += row[c[0] as usize] as u16;
+            a[1] += row[c[1] as usize] as u16;
+            a[2] += row[c[2] as usize] as u16;
+            a[3] += row[c[3] as usize] as u16;
+        }
+        for (a, &c) in
+            acc4.into_remainder().iter_mut().zip(codes4.remainder())
+        {
+            *a += row[c as usize] as u16;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::QLut;
+    use std::arch::x86_64::*;
+
+    /// `vpshufb` table-gather kernel for `m <= 16`: one book's 16 u8
+    /// entries are broadcast to both 128-bit lanes, then 32 codes are
+    /// looked up per shuffle and widened into two u16 accumulators.
+    ///
+    /// # Safety
+    /// AVX2 must be available, `bs % 32 == 0`, `acc.len() == bs`, `blk`
+    /// must hold `(k0 + books) * bs` codes all `< m <= 16`, and
+    /// `tables.len() == books`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn block_qsums_shuffle(
+        blk: &[u8],
+        bs: usize,
+        k0: usize,
+        tables: &[[u8; 16]],
+        acc: &mut [u16],
+    ) {
+        debug_assert!(bs % 32 == 0 && acc.len() == bs);
+        acc.fill(0);
+        for (t, tbl_bytes) in tables.iter().enumerate() {
+            let tbl = _mm256_broadcastsi128_si256(_mm_loadu_si128(
+                tbl_bytes.as_ptr() as *const __m128i,
+            ));
+            let codes = blk[(k0 + t) * bs..(k0 + t + 1) * bs].as_ptr();
+            let mut j = 0;
+            while j < bs {
+                let v =
+                    _mm256_loadu_si256(codes.add(j) as *const __m256i);
+                // codes < 16, so the high bit is clear and shuffle_epi8
+                // selects entry `code` within each 128-bit lane.
+                let vals = _mm256_shuffle_epi8(tbl, v);
+                let lo =
+                    _mm256_cvtepu8_epi16(_mm256_castsi256_si128(vals));
+                let hi = _mm256_cvtepu8_epi16(
+                    _mm256_extracti128_si256::<1>(vals),
+                );
+                let pa = acc.as_mut_ptr().add(j) as *mut __m256i;
+                _mm256_storeu_si256(
+                    pa,
+                    _mm256_add_epi16(
+                        _mm256_loadu_si256(pa as *const __m256i),
+                        lo,
+                    ),
+                );
+                let pb = acc.as_mut_ptr().add(j + 16) as *mut __m256i;
+                _mm256_storeu_si256(
+                    pb,
+                    _mm256_add_epi16(
+                        _mm256_loadu_si256(pb as *const __m256i),
+                        hi,
+                    ),
+                );
+                j += 32;
+            }
+        }
+    }
+
+    /// The gather-free unrolled lookup loop recompiled with AVX2
+    /// enabled (for `m > 16`, where the shuffle trick does not apply):
+    /// LLVM vectorizes the u8 -> u16 widening adds.
+    ///
+    /// # Safety
+    /// AVX2 must be available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn block_qsums_lookup_avx2(
+        blk: &[u8],
+        bs: usize,
+        qlut: &QLut,
+        acc: &mut [u16],
+    ) {
+        super::block_qsums_lookup(blk, bs, qlut, acc);
+    }
+}
+
+/// Kernel choice for one sweep, resolved once per call.
+enum Kernel {
+    #[cfg(target_arch = "x86_64")]
+    Shuffle(Vec<[u8; 16]>),
+    #[cfg(target_arch = "x86_64")]
+    LookupAvx2,
+    Portable,
+}
+
+fn pick_kernel(qlut: &QLut, bs: usize) -> Kernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            if qlut.m() <= 16 && bs % 32 == 0 {
+                return Kernel::Shuffle(qlut.padded_rows_16());
+            }
+            return Kernel::LookupAvx2;
+        }
+    }
+    let _ = (qlut, bs);
+    Kernel::Portable
+}
+
+/// Dense quantized crude sweep over the whole database:
+/// `out[i] = (sum_{t} e[t][code[i][k0 + t]]) * scale + bias_sum`,
+/// a lower bound of the f32 partial sum over books `[k0, k0 + books)`.
+/// Cost per vector: `books` one-byte table adds into a u16 lane plus one
+/// dequantize multiply-add.
+pub fn crude_sums_into(
+    blocked: &BlockedCodes<u8>,
+    qlut: &QLut,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), blocked.n());
+    assert!(
+        qlut.k0() + qlut.books() <= blocked.k(),
+        "qlut covers books past the index's K"
+    );
+    let bs = blocked.block_size();
+    let (scale, bias) = (qlut.scale(), qlut.bias_sum());
+    let kernel = pick_kernel(qlut, bs);
+    let mut acc = vec![0u16; bs];
+    for b in 0..blocked.num_blocks() {
+        let blk = blocked.block(b);
+        match &kernel {
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Shuffle(tables) => {
+                // SAFETY: AVX2 checked in pick_kernel; bs % 32 == 0 and
+                // m <= 16 checked there too; blk spans all K books.
+                unsafe {
+                    x86::block_qsums_shuffle(
+                        blk,
+                        bs,
+                        qlut.k0(),
+                        tables,
+                        &mut acc,
+                    )
+                };
+            }
+            #[cfg(target_arch = "x86_64")]
+            Kernel::LookupAvx2 => {
+                // SAFETY: AVX2 checked in pick_kernel.
+                unsafe {
+                    x86::block_qsums_lookup_avx2(blk, bs, qlut, &mut acc)
+                };
+            }
+            Kernel::Portable => {
+                block_qsums_lookup(blk, bs, qlut, &mut acc);
+            }
+        }
+        let base = b * bs;
+        let take = blocked.block_len(b);
+        for (o, &a) in out[base..base + take].iter_mut().zip(acc.iter()) {
+            *o = a as f32 * scale + bias;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+    use crate::quantizer::Codes;
+
+    fn random_lut(k: usize, m: usize, seed: u64) -> Lut {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> =
+            (0..k * m).map(|_| rng.uniform_f32() * 5.0).collect();
+        Lut::from_flat(k, m, data)
+    }
+
+    fn random_codes(n: usize, k: usize, m: usize, seed: u64) -> Codes {
+        let mut rng = Rng::new(seed);
+        let data: Vec<u16> =
+            (0..n * k).map(|_| rng.below(m) as u16).collect();
+        Codes::from_vec(n, k, data)
+    }
+
+    #[test]
+    fn fits_matches_u16_accumulator_capacity() {
+        assert!(!QLut::fits(0));
+        assert!(QLut::fits(1));
+        assert!(QLut::fits(257)); // 257 * 255 == 65535 exactly
+        assert!(!QLut::fits(258));
+    }
+
+    #[test]
+    fn entries_dequantize_to_lower_bounds() {
+        for (k, m, seed) in [(4usize, 16usize, 1u64), (8, 256, 2), (3, 7, 3)]
+        {
+            let lut = random_lut(k, m, seed);
+            let q = QLut::from_lut(&lut, 0, k);
+            for t in 0..k {
+                for j in 0..m {
+                    let deq = q.row(t)[j] as f32 * q.scale()
+                        + lut.row(t).iter().copied().fold(f32::INFINITY, f32::min);
+                    let v = lut.get(t, j);
+                    assert!(
+                        deq <= v,
+                        "entry ({t},{j}): dequantized {deq} > f32 {v}"
+                    );
+                    assert!(
+                        v - deq <= q.scale() * (1.0 + 1e-3),
+                        "entry ({t},{j}): error {} above one step {}",
+                        v - deq,
+                        q.scale()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_is_lower_bound_within_max_err() {
+        // covers the shuffle kernel (m = 16, block 64), the wide lookup
+        // (m = 256), and the portable remainder path (block 10)
+        for (n, k, m, block, fast_k) in [
+            (130usize, 8usize, 16usize, 64usize, 3usize),
+            (100, 4, 256, 64, 4),
+            (37, 4, 16, 10, 2),
+            (64, 2, 8, 32, 1),
+        ] {
+            let lut = random_lut(k, m, (n + m) as u64);
+            let codes = random_codes(n, k, m, (n + k) as u64);
+            let blocked = BlockedCodes::<u8>::with_block(&codes, block);
+            let q = QLut::from_lut(&lut, 0, fast_k);
+            let mut lb = vec![f32::NAN; n];
+            crude_sums_into(&blocked, &q, &mut lb);
+            for i in 0..n {
+                let exact = lut.partial_sum(codes.row(i), 0, fast_k);
+                assert!(
+                    lb[i] <= exact + 1e-4,
+                    "n={n} m={m} i={i}: lb {} above exact {exact}",
+                    lb[i]
+                );
+                assert!(
+                    exact - lb[i] <= q.max_err() + 1e-4,
+                    "n={n} m={m} i={i}: error {} above bound {}",
+                    exact - lb[i],
+                    q.max_err()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn constant_rows_quantize_exactly() {
+        let lut = Lut::from_flat(2, 4, vec![2.5; 8]);
+        let q = QLut::from_lut(&lut, 0, 2);
+        let codes = random_codes(10, 2, 4, 4);
+        let blocked = BlockedCodes::<u8>::from_codes(&codes);
+        let mut lb = vec![0.0f32; 10];
+        crude_sums_into(&blocked, &q, &mut lb);
+        for &v in &lb {
+            assert_eq!(v, 5.0); // zero span: entries 0, bias carries all
+        }
+    }
+
+    #[test]
+    fn covers_book_suffix_ranges() {
+        let (k, m, n) = (6, 32, 50);
+        let lut = random_lut(k, m, 9);
+        let codes = random_codes(n, k, m, 10);
+        let blocked = BlockedCodes::<u8>::from_codes(&codes);
+        let q = QLut::from_lut(&lut, 2, 5);
+        assert_eq!((q.k0(), q.books()), (2, 3));
+        let mut lb = vec![0.0f32; n];
+        crude_sums_into(&blocked, &q, &mut lb);
+        for i in 0..n {
+            let exact = lut.partial_sum(codes.row(i), 2, 5);
+            assert!(lb[i] <= exact + 1e-4);
+            assert!(exact - lb[i] <= q.max_err() + 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_index_sweeps_nothing() {
+        let lut = random_lut(2, 8, 11);
+        let blocked = BlockedCodes::<u8>::from_codes(&Codes::zeros(0, 2));
+        let q = QLut::from_lut(&lut, 0, 2);
+        let mut out: Vec<f32> = Vec::new();
+        crude_sums_into(&blocked, &q, &mut out);
+    }
+}

@@ -11,6 +11,7 @@
 
 use crate::core::parallel::par_map_indexed;
 
+use super::blocked::{BlockedCodes, BlockedStore, CodeUnit};
 use super::encoded::EncodedIndex;
 use super::lut::Lut;
 use super::opcount::OpCounter;
@@ -30,9 +31,22 @@ pub fn search(
 }
 
 /// Blockwise full-ADC sweep into a top-k heap (books `[0, K)`).
+/// Dispatches on the stored code width once; the block loop below is
+/// monomorphized per width.
 fn scan_blocked(index: &EncodedIndex, lut: &Lut, top: &mut TopK) {
     let kb = index.k();
-    let blocked = index.blocked();
+    match index.blocked() {
+        BlockedStore::U8(b) => scan_blocked_width(b, lut, kb, top),
+        BlockedStore::U16(b) => scan_blocked_width(b, lut, kb, top),
+    }
+}
+
+fn scan_blocked_width<C: CodeUnit>(
+    blocked: &BlockedCodes<C>,
+    lut: &Lut,
+    kb: usize,
+    top: &mut TopK,
+) {
     let bs = blocked.block_size();
     let mut acc = vec![0.0f32; bs];
     for b in 0..blocked.num_blocks() {

@@ -20,12 +20,22 @@
 //! the threshold/refine half is the shared [`super::two_step`] engine.
 //! The serial [`search_with_lut`] keeps the row-major scan as the parity
 //! oracle.
+//!
+//! [`search_scanfirst_qlut`] is the quantized variant: on a narrow
+//! (u8-code) index it swaps the f32 crude sweep for the Bolt-style
+//! u8-LUT/u16-accumulator kernel ([`super::qlut`]), whose sums are
+//! *lower bounds* of the f32 crude sums; the refine step then rebuilds
+//! exact f32 distances for every survivor, so the returned top-k matches
+//! the f32 paths (see `two_step::refine_from_crude_lb` for the bound
+//! argument). Wide indexes and oversized fast groups fall back to the
+//! f32 sweep transparently.
 
 use crate::core::parallel::par_map_indexed;
 
 use super::encoded::EncodedIndex;
 use super::lut::Lut;
 use super::opcount::OpCounter;
+use super::qlut::{self, QLut};
 use super::two_step;
 use crate::core::{Hit, Matrix, TopK};
 
@@ -66,7 +76,7 @@ pub fn search_with_lut(
     ops: &OpCounter,
 ) -> Vec<Hit> {
     let kb = index.k();
-    let fk = index.fast_k;
+    let fk = index.fast_k.min(kb); // clamp a corrupt fast group
     let margin = index.sigma * opts.margin_scale;
     let codes = index.codes();
     let mut top = TopK::new(opts.k);
@@ -136,7 +146,7 @@ pub fn search_scanfirst_scratch(
     crude: &mut Vec<f32>,
 ) -> Vec<Hit> {
     let kb = index.k();
-    let fk = index.fast_k;
+    let fk = index.fast_k.min(kb); // clamp a corrupt fast group
     let margin = index.sigma * opts.margin_scale;
     let n = index.len();
 
@@ -175,6 +185,69 @@ pub fn search_scanfirst_query(
     let lut = Lut::build(index.lut_ctx(), index.codebooks(), q);
     ops.add_flops(index.lut_ctx().build_macs() as u64);
     search_scanfirst_scratch(index, &lut, opts, ops, crude)
+}
+
+/// Scanfirst two-step with a quantized crude pass (the serving default
+/// on narrow indexes): build a [`QLut`] over the fast group, sweep it
+/// with the u16-accumulator kernel (`qlut::crude_sums_into`, SIMD on
+/// AVX2), then refine the lower bounds back to exact f32 distances via
+/// `two_step::refine_from_crude_lb`. Falls back to the f32 sweep
+/// ([`search_scanfirst_scratch`]) when the index stores wide (u16)
+/// codes or the fast group overflows the u16 accumulator.
+///
+/// Op accounting: the crude pass still costs `n * fast_k` table-adds
+/// (they are one-byte adds now — the flop counters track *counts*, not
+/// widths); each refined candidate pays the full `K` adds because the
+/// quantized crude sum cannot seed the exact distance.
+pub fn search_scanfirst_qlut(
+    index: &EncodedIndex,
+    lut: &Lut,
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+    crude: &mut Vec<f32>,
+) -> Vec<Hit> {
+    let kb = index.k();
+    let fk = index.fast_k.min(kb);
+    let blocked8 = match index.blocked().as_u8() {
+        Some(b) if QLut::fits(fk) => b,
+        _ => return search_scanfirst_scratch(index, lut, opts, ops, crude),
+    };
+    let margin = index.sigma * opts.margin_scale;
+    let n = index.len();
+
+    let qlut = QLut::from_lut(lut, 0, fk);
+    crude.clear();
+    crude.resize(n, 0.0);
+    qlut::crude_sums_into(blocked8, &qlut, crude);
+    ops.add_table_adds((n * fk) as u64);
+    ops.add_candidates(n as u64);
+    ops.add_queries(1);
+
+    two_step::refine_from_crude_lb(
+        index.codes(),
+        lut,
+        crude,
+        kb,
+        margin,
+        opts.k,
+        ops,
+    )
+}
+
+/// [`search_scanfirst_query`] with the quantized crude pass: the entry
+/// point the coordinator's `NativeSearcher` and the PJRT LUT searcher
+/// run per query. LUT-build flops are charged identically to the f32
+/// path (the QLut quantization itself is `K * m` compares, not MACs).
+pub fn search_scanfirst_query_qlut(
+    index: &EncodedIndex,
+    q: &[f32],
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+    crude: &mut Vec<f32>,
+) -> Vec<Hit> {
+    let lut = Lut::build(index.lut_ctx(), index.codebooks(), q);
+    ops.add_flops(index.lut_ctx().build_macs() as u64);
+    search_scanfirst_qlut(index, &lut, opts, ops, crude)
 }
 
 #[cfg(test)]
@@ -279,6 +352,37 @@ mod tests {
             let dc: Vec<f32> = scan.iter().map(|h| h.dist).collect();
             for (a, b) in ds.iter().zip(&dc) {
                 assert!((a - b).abs() < 1e-3, "serial {a} scanfirst {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn qlut_scanfirst_agrees_with_f32_scanfirst() {
+        let (_, idx) = setup(600, 6);
+        assert!(idx.blocked().as_u8().is_some(), "m=16 must select u8");
+        let mut rng = Rng::new(21);
+        let mut crude = Vec::new();
+        for _ in 0..6 {
+            let q: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+            let lut = Lut::build(idx.lut_ctx(), idx.codebooks(), &q);
+            let ops = OpCounter::new();
+            let f32_hits =
+                search_scanfirst(&idx, &lut, IcqSearchOpts::default(), &ops);
+            let q_hits = search_scanfirst_qlut(
+                &idx,
+                &lut,
+                IcqSearchOpts::default(),
+                &ops,
+                &mut crude,
+            );
+            assert_eq!(f32_hits.len(), q_hits.len());
+            for (a, b) in f32_hits.iter().zip(&q_hits) {
+                assert!(
+                    (a.dist - b.dist).abs() < 1e-3,
+                    "f32 {} vs qlut {}",
+                    a.dist,
+                    b.dist
+                );
             }
         }
     }

@@ -35,6 +35,10 @@ use crate::quantizer::Codes;
 /// caller. Counts the refine-side table-adds and refined candidates on
 /// `ops`; the caller accounts for the crude pass itself (its cost differs
 /// per backend).
+///
+/// A `fast_k` larger than `k_books` (possible only through a hand-built
+/// or corrupt snapshot; the loaders reject it) is clamped to `k_books`
+/// rather than underflowing the `k_books - fast_k` refine width.
 #[allow(clippy::too_many_arguments)]
 pub fn refine_from_crude(
     codes: &Codes,
@@ -45,6 +49,31 @@ pub fn refine_from_crude(
     margin: f32,
     top_k: usize,
     ops: &OpCounter,
+) -> Vec<Hit> {
+    let fast_k = fast_k.min(k_books);
+    refine_impl(
+        codes,
+        crude,
+        margin,
+        top_k,
+        k_books - fast_k,
+        ops,
+        |row, c| c + lut.partial_sum(row, fast_k, k_books),
+    )
+}
+
+/// The shared seed/mask/threshold/refine skeleton both crude flavors
+/// run; `full_dist(code_row, crude_entry)` produces the exact distance
+/// of one candidate and `adds_per_refine` is what each call costs in
+/// table-adds.
+fn refine_impl(
+    codes: &Codes,
+    crude: &mut [f32],
+    margin: f32,
+    top_k: usize,
+    adds_per_refine: usize,
+    ops: &OpCounter,
+    mut full_dist: impl FnMut(&[u16], f32) -> f32,
 ) -> Vec<Hit> {
     debug_assert_eq!(crude.len(), codes.n());
     // seed the threshold by refining the crude top-k first: their FULL
@@ -57,7 +86,7 @@ pub fn refine_from_crude(
     let mut refined = 0u64;
     for hit in seed.into_sorted() {
         let i = hit.id as usize;
-        let full = crude[i] + lut.partial_sum(codes.row(i), fast_k, k_books);
+        let full = full_dist(codes.row(i), crude[i]);
         refined += 1;
         top.push(hit.id, full);
         crude[i] = f32::INFINITY; // mask: never refined twice
@@ -67,14 +96,40 @@ pub fn refine_from_crude(
     let thresh = top.threshold() + margin;
     for (i, &c) in crude.iter().enumerate() {
         if c < thresh {
-            let full = c + lut.partial_sum(codes.row(i), fast_k, k_books);
+            let full = full_dist(codes.row(i), c);
             refined += 1;
             top.push(i as u32, full);
         }
     }
-    ops.add_table_adds(refined * (k_books - fast_k) as u64);
+    ops.add_table_adds(refined * adds_per_refine as u64);
     ops.add_refined(refined);
     top.into_sorted()
+}
+
+/// [`refine_from_crude`] for a *lower-bound* crude pass (the quantized
+/// u8 sweep, `qlut::crude_sums_into`).
+///
+/// `crude[i]` holds a lower bound of vector `i`'s full ADC distance, not
+/// its exact fast-group partial sum, so the refine step cannot reuse it:
+/// every refined candidate pays the full `k_books` table-adds to rebuild
+/// the exact f32 distance from the row-major codes. Correctness is the
+/// same argument as the exact path — any final top-k member has
+/// `lb <= crude <= full < radius + margin`, so seeding the radius from
+/// the lowest lower bounds and densely refining everything under
+/// `radius + margin` cannot drop a true neighbor; the quantization only
+/// widens the refine set (by at most the `QLut::max_err` band).
+pub fn refine_from_crude_lb(
+    codes: &Codes,
+    lut: &Lut,
+    crude: &mut [f32],
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    refine_impl(codes, crude, margin, top_k, k_books, ops, |row, _| {
+        lut.partial_sum(row, 0, k_books)
+    })
 }
 
 #[cfg(test)]
@@ -145,5 +200,83 @@ mod tests {
         }
         // refine adds zero table-adds when the fast group is every book
         assert_eq!(ops.snapshot().table_adds, 0);
+    }
+
+    /// Regression: a fast group wider than K (corrupt snapshot shape)
+    /// must clamp instead of underflowing `k_books - fast_k` and
+    /// panicking in the op accounting.
+    #[test]
+    fn oversized_fast_group_clamps_to_k() {
+        let (n, k, m) = (60usize, 3usize, 4usize);
+        let mut rng = Rng::new(13);
+        let lut_data: Vec<f32> =
+            (0..k * m).map(|_| rng.uniform_f32()).collect();
+        let lut = Lut::from_flat(k, m, lut_data);
+        let code_data: Vec<u16> =
+            (0..n * k).map(|_| rng.below(m) as u16).collect();
+        let codes = Codes::from_vec(n, k, code_data);
+        let full: Vec<f32> =
+            (0..n).map(|i| lut.partial_sum(codes.row(i), 0, k)).collect();
+        let mut crude = full.clone();
+        let ops = OpCounter::new();
+        // fast_k = k + 5: must behave exactly like fast_k == k
+        let hits =
+            refine_from_crude(&codes, &lut, &mut crude, k + 5, k, 0.0, 5, &ops);
+        let mut expect = full;
+        expect.sort_by(f32::total_cmp);
+        for (h, e) in hits.iter().zip(&expect) {
+            assert_eq!(h.dist, *e);
+        }
+        assert_eq!(ops.snapshot().table_adds, 0);
+    }
+
+    /// The lower-bound refine must return the exact full-distance top-k
+    /// whenever the crude entries really are lower bounds, even sloppy
+    /// ones.
+    #[test]
+    fn lb_refine_matches_exhaustive_full_ranking() {
+        let (n, k, m) = (180usize, 4usize, 8usize);
+        let mut rng = Rng::new(14);
+        let lut_data: Vec<f32> =
+            (0..k * m).map(|_| rng.uniform_f32()).collect();
+        let lut = Lut::from_flat(k, m, lut_data);
+        let code_data: Vec<u16> =
+            (0..n * k).map(|_| rng.below(m) as u16).collect();
+        let codes = Codes::from_vec(n, k, code_data);
+        let full: Vec<f32> =
+            (0..n).map(|i| lut.partial_sum(codes.row(i), 0, k)).collect();
+        // lower bounds: the 2-book partial sum minus a random shave
+        let mut lb: Vec<f32> = (0..n)
+            .map(|i| {
+                lut.partial_sum(codes.row(i), 0, 2)
+                    - rng.uniform_f32() * 0.1
+            })
+            .collect();
+        let ops = OpCounter::new();
+        let hits =
+            refine_from_crude_lb(&codes, &lut, &mut lb, k, 0.0, 10, &ops);
+        let mut expect = full;
+        expect.sort_by(f32::total_cmp);
+        assert_eq!(hits.len(), 10);
+        for (h, e) in hits.iter().zip(&expect) {
+            assert!(
+                (h.dist - e).abs() < 1e-5,
+                "lb refine {} != exhaustive {e}",
+                h.dist
+            );
+        }
+        // every refined candidate paid all K adds
+        let s = ops.snapshot();
+        assert_eq!(s.table_adds, s.refined * k as u64);
+    }
+
+    #[test]
+    fn lb_refine_empty_crude_returns_no_hits() {
+        let lut = Lut::from_flat(2, 4, vec![0.0; 8]);
+        let codes = Codes::zeros(0, 2);
+        let ops = OpCounter::new();
+        let hits = refine_from_crude_lb(&codes, &lut, &mut [], 2, 0.5, 5, &ops);
+        assert!(hits.is_empty());
+        assert_eq!(ops.snapshot().refined, 0);
     }
 }

@@ -3,11 +3,17 @@
 //! quantizer in the zoo (PQ / OPQ / CQ / SQ / ICQ) and the edge shapes
 //! the blocked layout has to handle — n not divisible by the block size,
 //! fast_k == K (non-ICQ indexes), top-k = 1, single-book indexes, and
-//! the empty index.
+//! the empty index. The narrow (u8) store must match the wide (u16)
+//! store bitwise, and the quantized-LUT crude sweep must stay a lower
+//! bound of the f32 crude sums while returning the same top-k within
+//! 1e-3.
 
 use icq::core::{Matrix, Rng};
+use icq::data::format::TensorPack;
 use icq::data::Dataset;
+use icq::index::blocked::BlockedCodes;
 use icq::index::lut::Lut;
+use icq::index::qlut::{self, QLut};
 use icq::index::search_icq::{self, IcqSearchOpts};
 use icq::index::{search_adc, EncodedIndex, OpCounter};
 use icq::quantizer::cq::{Cq, CqOpts};
@@ -54,6 +60,48 @@ fn assert_parity(index: &EncodedIndex, queries: &Matrix, top_k: usize) {
                 a.dist,
                 b.dist
             );
+        }
+
+        // quantized crude sweep: same top-k within tolerance (falls back
+        // to the f32 sweep transparently on wide indexes)
+        let mut crude = Vec::new();
+        let qscan = search_icq::search_scanfirst_qlut(
+            index, &lut, opts, &ops, &mut crude,
+        );
+        assert_eq!(serial.len(), qscan.len());
+        for (a, b) in serial.iter().zip(&qscan) {
+            assert!(
+                (a.dist - b.dist).abs() < 1e-3,
+                "q{qi}: serial two-step {} vs qlut scanfirst {}",
+                a.dist,
+                b.dist
+            );
+        }
+
+        // the quantized crude sums themselves must be lower bounds of
+        // the f32 crude sums, within the documented error band
+        if let Some(b8) = index.blocked().as_u8() {
+            let fk = index.fast_k.min(index.k());
+            if QLut::fits(fk) && index.len() > 0 {
+                let qlut = QLut::from_lut(&lut, 0, fk);
+                let mut lb = vec![f32::NAN; index.len()];
+                qlut::crude_sums_into(b8, &qlut, &mut lb);
+                for i in 0..index.len() {
+                    let exact =
+                        lut.partial_sum(index.codes().row(i), 0, fk);
+                    assert!(
+                        lb[i] <= exact + 1e-4,
+                        "q{qi} vec {i}: quantized crude {} above f32 {exact}",
+                        lb[i]
+                    );
+                    assert!(
+                        exact - lb[i] <= qlut.max_err() + 1e-4,
+                        "q{qi} vec {i}: error {} above bound {}",
+                        exact - lb[i],
+                        qlut.max_err()
+                    );
+                }
+            }
         }
     }
 }
@@ -161,6 +209,82 @@ fn parity_empty_index() {
         &ops
     )
     .is_empty());
+}
+
+/// Randomized u8-vs-u16 storage parity: the two widths hold the same
+/// codes and produce bitwise-identical f32 partial sums, across tail
+/// blocks and the m == 256 boundary (the largest codebook u8 can index).
+#[test]
+fn u8_and_u16_blocked_sweeps_bitwise_equal() {
+    for (n, k, m, seed) in [
+        (130usize, 8usize, 256usize, 1u64), // m == 256 boundary, tail of 2
+        (65, 4, 16, 2),                     // tail of 1
+        (64, 3, 200, 3),                    // exactly one block
+        (19, 2, 2, 4),                      // sub-block index
+    ] {
+        let mut rng = Rng::new(seed);
+        let code_data: Vec<u16> =
+            (0..n * k).map(|_| rng.below(m) as u16).collect();
+        let codes = icq::quantizer::Codes::from_vec(n, k, code_data);
+        let lut_data: Vec<f32> =
+            (0..k * m).map(|_| rng.uniform_f32() * 3.0).collect();
+        let lut = Lut::from_flat(k, m, lut_data);
+        let narrow = BlockedCodes::<u8>::from_codes(&codes);
+        let wide = BlockedCodes::<u16>::from_codes(&codes);
+        for (k0, k1) in [(0, k), (0, 1), (1, k)] {
+            let mut out8 = vec![f32::NAN; n];
+            let mut out16 = vec![f32::NAN; n];
+            narrow.partial_sums_into(&lut, k0, k1, &mut out8);
+            wide.partial_sums_into(&lut, k0, k1, &mut out16);
+            for i in 0..n {
+                assert_eq!(
+                    out8[i], out16[i],
+                    "n={n} m={m} i={i} books [{k0},{k1}): widths diverged"
+                );
+                assert_eq!(
+                    out8[i],
+                    lut.partial_sum(codes.row(i), k0, k1),
+                    "n={n} m={m} i={i}: blocked diverged from oracle"
+                );
+            }
+        }
+    }
+}
+
+/// Build a real index at the m == 256 boundary straight from a snapshot
+/// pack (dense codebooks): the narrow store must be selected and every
+/// dense path must agree with the serial oracle.
+fn index_from_raw(n: usize, k: usize, m: usize, d: usize, seed: u64) -> EncodedIndex {
+    let mut rng = Rng::new(seed);
+    let cb: Vec<f32> =
+        (0..k * m * d).map(|_| rng.normal_f32()).collect();
+    let codes: Vec<i32> =
+        (0..n * k).map(|_| rng.below(m) as i32).collect();
+    let mut pack = TensorPack::new();
+    pack.insert_f32("codebooks", vec![k, m, d], cb);
+    pack.insert_i32("codes", vec![n, k], codes);
+    pack.insert_i32("fast_k", vec![1], vec![1]);
+    pack.insert_f32("sigma", vec![1], vec![0.5]);
+    pack.insert_i32("labels", vec![n], vec![0; n]);
+    EncodedIndex::from_pack(&pack).expect("valid raw snapshot")
+}
+
+#[test]
+fn parity_m256_boundary_selects_u8() {
+    let idx = index_from_raw(150, 3, 256, 6, 30);
+    assert_eq!(idx.m(), 256);
+    assert_eq!(idx.blocked().code_width_bits(), 8);
+    assert!(idx.blocked().as_u8().is_some());
+    assert_parity(&idx, &queries(4, 6, 31), 10);
+}
+
+#[test]
+fn parity_m_above_256_selects_u16() {
+    let idx = index_from_raw(100, 2, 300, 4, 32);
+    assert_eq!(idx.blocked().code_width_bits(), 16);
+    assert!(idx.blocked().as_u8().is_none());
+    // qlut entry point must fall back to the f32 sweep and still agree
+    assert_parity(&idx, &queries(3, 4, 33), 5);
 }
 
 /// The scanfirst path must never pay more refine adds than refining
