@@ -125,6 +125,47 @@ fn main() {
         m_u16.median.as_secs_f64() / m_qlut.median.as_secs_f64(),
     );
 
+    // LUT-major multi-query sweep: 8 query LUTs per resident code block
+    let batch = 8usize;
+    let qluts: Vec<QLut> = (0..batch)
+        .map(|i| {
+            let qv: Vec<f32> = (0..d)
+                .map(|j| x.get(11 * i + 3, j) + rng.normal_f32() * 0.1)
+                .collect();
+            let l = Lut::build(&ctx, index.codebooks(), &qv);
+            QLut::from_lut(&l, 0, index.fast_k)
+        })
+        .collect();
+    let mut batch_buf = vec![0.0f32; batch * n];
+    let m_qbatch = bench("scan/crude qlut LUT-major x8 batch", || {
+        qlut::crude_sums_batch_into(&b_u8, &qluts, &mut batch_buf);
+        black_box(batch_buf[batch * n - 1]);
+    });
+    let batch_adds = batch * crude_adds;
+    // per-query baseline over the same 8 LUTs
+    let m_qserial = bench("scan/crude qlut per-query x8", || {
+        for q in &qluts {
+            qlut::crude_sums_into(&b_u8, q, &mut qlut_buf);
+        }
+        black_box(qlut_buf[n - 1]);
+    });
+    println!("{}", m_qbatch.report());
+    println!(
+        "  -> {:.1} M adds/s | LUT-major batch vs per-query: {:.2}x",
+        madds_per_s(&m_qbatch, batch_adds),
+        m_qserial.median.as_secs_f64() / m_qbatch.median.as_secs_f64(),
+    );
+    // parity: batched rows must be bitwise equal to per-query sweeps
+    qlut::crude_sums_batch_into(&b_u8, &qluts, &mut batch_buf);
+    for (qi, q) in qluts.iter().enumerate() {
+        qlut::crude_sums_into(&b_u8, q, &mut qlut_buf);
+        assert_eq!(
+            &batch_buf[qi * n..(qi + 1) * n],
+            &qlut_buf[..],
+            "LUT-major batched sweep diverged at q={qi}"
+        );
+    }
+
     // parity suite: both widths must return bit-identical crude sums and
     // the same top-k as the row-major oracle; the quantized sweep must
     // stay a lower bound within its error band, across query draws
@@ -235,6 +276,14 @@ fn main() {
         ("crude_blocked_u16_madds_per_s", madds_per_s(&m_u16, crude_adds)),
         ("crude_blocked_u8_madds_per_s", madds_per_s(&m_u8, crude_adds)),
         ("crude_qlut_madds_per_s", madds_per_s(&m_qlut, crude_adds)),
+        (
+            "crude_qlut_batch8_madds_per_s",
+            madds_per_s(&m_qbatch, batch_adds),
+        ),
+        (
+            "qlut_batch8_vs_per_query_speedup",
+            m_qserial.median.as_secs_f64() / m_qbatch.median.as_secs_f64(),
+        ),
         (
             "u8_vs_u16_speedup",
             m_u16.median.as_secs_f64() / m_u8.median.as_secs_f64(),

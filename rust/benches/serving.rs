@@ -7,8 +7,13 @@ use std::sync::Arc;
 use icq::bench::timing::bench;
 use icq::config::{SearchConfig, ServeConfig};
 use icq::coordinator::server::closed_loop_load;
-use icq::coordinator::{BatchSearcher, Coordinator, NativeSearcher};
+use icq::coordinator::{
+    BatchSearcher, Coordinator, NativeSearcher, ShardedSearcher,
+};
 use icq::core::{Hit, Matrix, Rng};
+use icq::index::lut::Lut;
+use icq::index::qlut::{self, QLut};
+use icq::index::shard::ShardPolicy;
 use icq::index::{search_adc, EncodedIndex, OpCounter};
 use icq::quantizer::icq::{Icq, IcqOpts};
 
@@ -104,6 +109,70 @@ fn main() {
         ops.refine_rate(),
     );
 
+    // --- LUT-major multi-query crude sweep vs per-query sweep ---
+    // The batched engine's core claim: a resident code block is swept
+    // with the whole batch of LUTs, so the u8 code bytes stream from
+    // memory once per batch instead of once per query. Reported as
+    // crude-pass throughput (M table-adds/s) per batch size.
+    {
+        let blocked8 = index.blocked().as_u8().expect("m=256 stores u8");
+        let ctx = index.lut_ctx();
+        let fk = index.fast_k;
+        let mut serial_buf = vec![0.0f32; n];
+        let mut per_query_madds = 0.0f64;
+        for batch in [1usize, 8, 32] {
+            let luts: Vec<Lut> = (0..batch)
+                .map(|i| {
+                    Lut::build(ctx, index.codebooks(), &make_query(&centers, i))
+                })
+                .collect();
+            let qluts: Vec<QLut> =
+                luts.iter().map(|l| QLut::from_lut(l, 0, fk)).collect();
+            let mut batch_buf = vec![0.0f32; batch * n];
+            let adds = batch * n * fk;
+            let m_serial = bench(
+                &format!("crude/per-query sweep x{batch}"),
+                || {
+                    for q in &qluts {
+                        qlut::crude_sums_into(blocked8, q, &mut serial_buf);
+                    }
+                    icq::bench::timing::black_box(serial_buf[n - 1]);
+                },
+            );
+            let m_batch = bench(
+                &format!("crude/LUT-major batched sweep x{batch}"),
+                || {
+                    qlut::crude_sums_batch_into(blocked8, &qluts, &mut batch_buf);
+                    icq::bench::timing::black_box(batch_buf[batch * n - 1]);
+                },
+            );
+            // parity: the batched sweep must be bitwise equal per query
+            qlut::crude_sums_batch_into(blocked8, &qluts, &mut batch_buf);
+            for (qi, q) in qluts.iter().enumerate() {
+                qlut::crude_sums_into(blocked8, q, &mut serial_buf);
+                assert_eq!(
+                    &batch_buf[qi * n..(qi + 1) * n],
+                    &serial_buf[..],
+                    "batched crude sweep diverged at batch={batch} q={qi}"
+                );
+            }
+            let serial_madds =
+                adds as f64 / m_serial.median.as_secs_f64() / 1e6;
+            let batch_madds =
+                adds as f64 / m_batch.median.as_secs_f64() / 1e6;
+            if batch == 1 {
+                per_query_madds = serial_madds;
+            }
+            println!(
+                "crude/batch={batch}: per-query {serial_madds:.0} M adds/s | \
+                 LUT-major {batch_madds:.0} M adds/s | speedup {:.2}x \
+                 (vs per-query-at-1: {:.2}x)",
+                m_serial.median.as_secs_f64() / m_batch.median.as_secs_f64(),
+                batch_madds / per_query_madds.max(1e-9),
+            );
+        }
+    }
+
     // --- coordinator end-to-end, both searchers ---
     for (label, searcher) in [
         (
@@ -132,6 +201,57 @@ fn main() {
         let tput =
             closed_loop_load(&coord, move |i| make_query(&cs, i), 8, qn / 8, 10);
         println!("serve/{label}: {tput:.0} qps | {}", coord.metrics.summary());
+    }
+
+    // --- sharded scatter-gather coordinator ---
+    // One coordinator worker in front of per-shard worker threads: the
+    // shard pool is the parallelism, the gather merges per-shard top-k
+    // with (distance, id) tie-breaking.
+    for shards in [2usize, 4] {
+        let searcher = Arc::new(
+            ShardedSearcher::from_index(
+                &index,
+                ShardPolicy::Count(shards),
+                SearchConfig::default(),
+            )
+            .expect("shard the bench index"),
+        );
+        // spot parity check against the flat searcher before load
+        let flat = NativeSearcher::new(index.clone(), SearchConfig::default());
+        let probe = {
+            let mut m = Matrix::zeros(3, d);
+            for i in 0..3 {
+                let q = make_query(&centers, 1000 + i);
+                m.row_mut(i).copy_from_slice(&q);
+            }
+            m
+        };
+        assert_eq!(
+            searcher.search_batch(&probe, 10),
+            flat.search_batch(&probe, 10),
+            "sharded top-k diverged from flat at {shards} shards"
+        );
+        let coord = Arc::new(Coordinator::start(
+            searcher,
+            ServeConfig {
+                max_batch: 16,
+                max_wait_us: 200,
+                workers: 1,
+                max_inflight: 4096,
+            },
+        ));
+        let cs = centers.clone();
+        let tput = closed_loop_load(
+            &coord,
+            move |i| make_query(&cs, i + 5555),
+            8,
+            qn / 8,
+            10,
+        );
+        println!(
+            "serve/icq-sharded={shards}: {tput:.0} qps | {}",
+            coord.metrics.summary()
+        );
     }
 
     // --- batching policy sweep ---

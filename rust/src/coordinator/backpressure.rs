@@ -31,6 +31,7 @@ impl Drop for Permit {
 }
 
 impl Admission {
+    /// A controller admitting up to `capacity` concurrent queries.
     pub fn new(capacity: usize) -> Self {
         Admission {
             inner: Arc::new(Inner {
@@ -61,10 +62,12 @@ impl Admission {
         Permit { inner: self.inner.clone() }
     }
 
+    /// Permits currently free.
     pub fn available(&self) -> usize {
         *self.inner.available.lock().unwrap()
     }
 
+    /// Total permit capacity.
     pub fn capacity(&self) -> usize {
         self.inner.capacity
     }

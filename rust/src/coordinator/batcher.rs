@@ -11,7 +11,9 @@ use super::server::PendingQuery;
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
+    /// Max queries folded into one batch.
     pub max_batch: usize,
+    /// Max time the batch head waits for batch-mates.
     pub max_wait: Duration,
 }
 

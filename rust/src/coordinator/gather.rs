@@ -1,0 +1,316 @@
+//! Scatter-gather over a sharded index: fan each query batch to
+//! per-shard workers, run the two-step crude+refine locally on every
+//! shard, and merge the per-shard top-k lists into global results.
+//!
+//! ```text
+//!                    scatter                      gather
+//! query batch ──┬──> shard worker 0 (rows [0, s1))  ──┐
+//!               ├──> shard worker 1 (rows [s1, s2)) ──┼─> merge top-k
+//!               └──> shard worker 2 (rows [s2, n))  ──┘   (dist, id)
+//! ```
+//!
+//! Each shard worker is a persistent OS thread owning one
+//! [`EncodedIndex`] shard. The gather builds each query's LUT exactly
+//! once per batch (shards `Arc`-share one set of codebooks, so the
+//! tables are identical everywhere) and scatters the `Arc`'d LUT batch;
+//! inside a worker the batch runs through the LUT-major batched engine
+//! (`search_icq::search_scanfirst_batch_with_luts`), so every resident
+//! code block is swept with the whole batch of query LUTs before the
+//! sweep moves on. Only the per-shard top-k candidate lists cross the
+//! gather boundary — the expensive refine work stays shard-local (the
+//! Composite Quantization serving argument), and with block-granular
+//! shards this is the topology that scales the crude pass past one
+//! core's memory bandwidth.
+//!
+//! ## Why the merge is exact
+//!
+//! Every search executor selects hits through the canonical
+//! `(distance, id)` top-k ([`crate::core::TopK`]), and a shard computes
+//! the *same* f32 distance for a vector as the flat scan does (same
+//! LUT, same books-ascending accumulation). The per-shard top-k lists
+//! are therefore exactly "the k smallest `(distance, global id)` pairs
+//! of each row range", and merging them by the same order and keeping
+//! the k smallest reproduces the flat scan's result bit for bit — see
+//! [`merge_topk`] and the sharded parity suite.
+
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::Arc;
+
+use super::worker::BatchSearcher;
+use crate::config::SearchConfig;
+use crate::core::{Hit, Matrix};
+use crate::index::lut::Lut;
+use crate::index::search_icq::{self, IcqSearchOpts};
+use crate::index::shard::{ShardPolicy, ShardedIndex};
+use crate::index::{EncodedIndex, OpCounter};
+
+/// One scatter to a shard worker: a shared view of the batch's prebuilt
+/// query LUTs plus the reply channel of this gather. LUTs are built
+/// ONCE per batch by the gather (every shard shares the same codebook
+/// values, so the tables are identical across shards) — workers only
+/// sweep and refine.
+struct ShardJob {
+    luts: Arc<Vec<Lut>>,
+    top_k: usize,
+    reply: SyncSender<ShardReply>,
+}
+
+/// One shard's answer: per-query hit lists, ids already global.
+struct ShardReply {
+    hits: Vec<Vec<Hit>>,
+}
+
+/// Merge per-shard top-k lists into the global top-k, ordered by the
+/// canonical `(distance, id)` key — the same order every executor's
+/// [`crate::core::TopK`] selects by, which is what makes sharded
+/// results bitwise identical to the flat scan.
+///
+/// # Examples
+///
+/// ```
+/// use icq::coordinator::gather::merge_topk;
+/// use icq::core::Hit;
+///
+/// let shard0 = vec![Hit { id: 3, dist: 0.5 }, Hit { id: 1, dist: 2.0 }];
+/// let shard1 = vec![Hit { id: 9, dist: 1.0 }, Hit { id: 4, dist: 2.0 }];
+/// let merged = merge_topk(&[shard0, shard1], 3);
+/// assert_eq!(
+///     merged.iter().map(|h| h.id).collect::<Vec<_>>(),
+///     vec![3, 9, 1] // 2.0 tie broken toward the smaller id
+/// );
+/// ```
+pub fn merge_topk(lists: &[Vec<Hit>], top_k: usize) -> Vec<Hit> {
+    let mut all: Vec<Hit> =
+        lists.iter().flat_map(|l| l.iter().copied()).collect();
+    all.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id)));
+    all.truncate(top_k);
+    all
+}
+
+/// A [`BatchSearcher`] that serves a [`ShardedIndex`] scatter-gather:
+/// one persistent worker thread per shard, each running the LUT-major
+/// batched two-step engine over its own rows.
+///
+/// The worker threads exit when the searcher is dropped (their job
+/// channels disconnect). A shard worker that died (panicked) is skipped
+/// at scatter time; the merged result then covers the remaining shards
+/// — degraded, never wedged.
+pub struct ShardedSearcher {
+    jobs: Vec<SyncSender<ShardJob>>,
+    /// Any one shard, kept for its (`Arc`-shared) codebooks/LUT context:
+    /// the gather builds each batch's LUTs once against it instead of
+    /// once per shard.
+    lut_source: Arc<EncodedIndex>,
+    dim: usize,
+    /// Shared op counters, aggregated across every shard worker.
+    /// `table_adds`/`candidates`/`refined` sum to whole-database totals
+    /// (each shard contributes its rows) and LUT-build `flops` are
+    /// charged once per batch; `queries` counts per-shard executions,
+    /// i.e. batch size x shard count.
+    pub ops: Arc<OpCounter>,
+}
+
+impl ShardedSearcher {
+    /// Spawn one worker thread per shard of `index`.
+    pub fn start(index: ShardedIndex, cfg: SearchConfig) -> Self {
+        let opts =
+            IcqSearchOpts { k: cfg.top_k, margin_scale: cfg.margin_scale };
+        let ops = Arc::new(OpCounter::new());
+        let dim = index.dim();
+        let lut_source = index.shard(0).clone();
+        let mut jobs = Vec::with_capacity(index.num_shards());
+        for (sid, (spec, shard)) in
+            index.specs().iter().zip(index.shards()).enumerate()
+        {
+            let (tx, rx) = mpsc::sync_channel::<ShardJob>(4);
+            jobs.push(tx);
+            let (shard, ops) = (shard.clone(), ops.clone());
+            let start = spec.start;
+            std::thread::Builder::new()
+                .name(format!("icq-shard-{sid}"))
+                .spawn(move || run_shard_worker(start, shard, opts, ops, rx))
+                .expect("spawn shard worker");
+        }
+        ShardedSearcher { jobs, lut_source, dim, ops }
+    }
+
+    /// Cut `index` by `policy` and spawn the shard workers — the
+    /// one-call path from a flat index to a sharded serving core.
+    pub fn from_index(
+        index: &EncodedIndex,
+        policy: ShardPolicy,
+        cfg: SearchConfig,
+    ) -> anyhow::Result<Self> {
+        Ok(Self::start(ShardedIndex::build(index, policy)?, cfg))
+    }
+
+    /// Number of shard workers spawned.
+    pub fn num_shards(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+/// One shard worker loop: drain jobs, run the batched two-step engine
+/// on the local shard over the gather's prebuilt LUTs, translate hit
+/// ids to global rows, reply.
+fn run_shard_worker(
+    start: usize,
+    shard: Arc<EncodedIndex>,
+    opts: IcqSearchOpts,
+    ops: Arc<OpCounter>,
+    rx: Receiver<ShardJob>,
+) {
+    let mut crude = Vec::new();
+    while let Ok(job) = rx.recv() {
+        let opts = IcqSearchOpts { k: job.top_k, ..opts };
+        let mut hits = search_icq::search_scanfirst_batch_with_luts(
+            &shard, &job.luts, opts, &ops, &mut crude,
+        );
+        for per_query in &mut hits {
+            for h in per_query {
+                h.id += start as u32;
+            }
+        }
+        // a gather that gave up (dropped receiver) is not an error
+        let _ = job.reply.send(ShardReply { hits });
+    }
+}
+
+impl BatchSearcher for ShardedSearcher {
+    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
+        let nq = queries.rows();
+        if nq == 0 {
+            return Vec::new();
+        }
+        // build each query's LUT exactly once — identical across shards
+        // (Arc-shared codebooks), so workers only sweep and refine
+        let luts: Vec<Lut> = (0..nq)
+            .map(|qi| {
+                Lut::build(
+                    self.lut_source.lut_ctx(),
+                    self.lut_source.codebooks(),
+                    queries.row(qi),
+                )
+            })
+            .collect();
+        self.ops.add_flops(
+            (nq * self.lut_source.lut_ctx().build_macs()) as u64,
+        );
+        let luts = Arc::new(luts);
+        // scatter: every live shard gets the same shared LUT batch
+        let (reply_tx, reply_rx) = mpsc::sync_channel(self.jobs.len());
+        let mut live = 0usize;
+        for tx in &self.jobs {
+            let job = ShardJob {
+                luts: luts.clone(),
+                top_k,
+                reply: reply_tx.clone(),
+            };
+            if tx.send(job).is_ok() {
+                live += 1;
+            }
+        }
+        drop(reply_tx);
+        // gather: collect per-shard lists, then merge per query
+        let mut per_query: Vec<Vec<Vec<Hit>>> = vec![Vec::new(); nq];
+        for _ in 0..live {
+            let Ok(reply) = reply_rx.recv() else { break };
+            for (qi, hits) in reply.hits.into_iter().enumerate() {
+                per_query[qi].push(hits);
+            }
+        }
+        per_query
+            .into_iter()
+            .map(|lists| merge_topk(&lists, top_k))
+            .collect()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+    use crate::quantizer::icq::{Icq, IcqOpts};
+
+    fn index(n: usize, seed: u64) -> EncodedIndex {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(n, 8, |_, j| {
+            rng.normal_f32() * if j % 2 == 0 { 3.0 } else { 0.3 }
+        });
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 4, m: 8, fast_k: 1, kmeans_iters: 5, prior_steps: 50, seed: 0 },
+        );
+        EncodedIndex::build_icq(&icq, &x, (0..n).map(|i| i as i32).collect())
+    }
+
+    #[test]
+    fn merge_orders_by_distance_then_id_and_truncates() {
+        let a = vec![Hit { id: 5, dist: 1.0 }, Hit { id: 0, dist: 3.0 }];
+        let b = vec![Hit { id: 2, dist: 1.0 }, Hit { id: 9, dist: 2.0 }];
+        let m = merge_topk(&[a, b], 3);
+        assert_eq!(
+            m.iter().map(|h| (h.id, h.dist)).collect::<Vec<_>>(),
+            vec![(2, 1.0), (5, 1.0), (9, 2.0)]
+        );
+        assert!(merge_topk(&[], 5).is_empty());
+        assert_eq!(merge_topk(&[vec![Hit { id: 1, dist: 0.0 }]], 5).len(), 1);
+    }
+
+    #[test]
+    fn sharded_searcher_answers_batches_with_global_ids() {
+        let idx = index(300, 7);
+        let searcher = ShardedSearcher::from_index(
+            &idx,
+            ShardPolicy::Count(3),
+            SearchConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(searcher.num_shards(), 3);
+        assert_eq!(searcher.dim(), 8);
+        let queries = Matrix::from_fn(4, 8, |i, _| i as f32 * 0.1);
+        let res = searcher.search_batch(&queries, 6);
+        assert_eq!(res.len(), 4);
+        for hits in &res {
+            assert_eq!(hits.len(), 6);
+            for w in hits.windows(2) {
+                assert!(
+                    w[0].dist < w[1].dist
+                        || (w[0].dist == w[1].dist && w[0].id < w[1].id)
+                );
+            }
+            for h in hits {
+                assert!((h.id as usize) < 300, "id {} not global", h.id);
+            }
+        }
+        // empty batch short-circuits
+        assert!(searcher.search_batch(&Matrix::zeros(0, 8), 3).is_empty());
+    }
+
+    /// Hits must come from every shard's row range when the query is
+    /// equidistant-ish, proving ids are remapped per shard rather than
+    /// all collapsing into [0, shard_len).
+    #[test]
+    fn gathers_hits_across_shard_ranges() {
+        let idx = index(300, 8);
+        let searcher = ShardedSearcher::from_index(
+            &idx,
+            ShardPolicy::Count(3),
+            SearchConfig::default(),
+        )
+        .unwrap();
+        let queries = Matrix::from_fn(1, 8, |_, _| 0.0);
+        let res = searcher.search_batch(&queries, 150);
+        let ids: Vec<u32> = res[0].iter().map(|h| h.id).collect();
+        assert!(ids.iter().any(|&i| i >= 200), "no hits from the last shard");
+        // no duplicate ids after the merge
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len());
+    }
+}

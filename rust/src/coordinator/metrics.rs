@@ -7,29 +7,38 @@ const BUCKETS: usize = 32; // log2 us buckets: [1us .. ~35min]
 /// Lock-free metrics shared across the coordinator.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Queries admitted into the pipeline.
     pub queries_in: AtomicU64,
+    /// Queries answered by a worker.
     pub queries_done: AtomicU64,
+    /// Queries shed by admission control.
     pub queries_rejected: AtomicU64,
+    /// Batches executed.
     pub batches: AtomicU64,
+    /// Sum of executed batch sizes (for the mean).
     pub batch_size_sum: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
 }
 
 impl Metrics {
+    /// Fresh metrics, all zero.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one query latency (microseconds) into the histogram.
     pub fn record_latency_us(&self, us: u64) {
         let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
         self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one executed batch of `size` queries.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_size_sum.fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// Mean executed batch size (0 before any batch ran).
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -60,6 +69,7 @@ impl Metrics {
         1u64 << BUCKETS
     }
 
+    /// One-line human-readable summary of every counter.
     pub fn summary(&self) -> String {
         format!(
             "queries={} done={} rejected={} batches={} mean_batch={:.2} \

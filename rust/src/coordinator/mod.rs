@@ -13,17 +13,28 @@
 //! tokio; DESIGN.md section Substitutions): bounded std::sync::mpsc
 //! queues, one OS thread per worker, a dedicated batcher thread, and a
 //! thread-per-connection TCP front-end. The searcher is pluggable:
-//! [`NativeSearcher`] runs the pure-rust two-step scan; the
+//! [`NativeSearcher`] runs the pure-rust two-step scan over one flat
+//! index; [`ShardedSearcher`] scatter-gathers the same scan across
+//! block-range shards ([`gather`], one persistent worker thread per
+//! shard, merged with `(distance, id)` tie-breaking); the
 //! XLA-runtime-backed searcher builds LUTs through the AOT graphs
-//! (python-free at runtime; see `examples/serve_pipeline.rs`).
+//! (python-free at runtime; see `examples/serve_pipeline.rs`). All
+//! batch paths run the LUT-major multi-query sweep, so each resident
+//! code block is swept with the whole batch of query LUTs.
+//!
+//! See `ARCHITECTURE.md` at the repo root for the full layer map.
+
+#![warn(missing_docs)]
 
 pub mod backpressure;
 pub mod batcher;
+pub mod gather;
 pub mod metrics;
 pub mod router;
 pub mod server;
 pub mod worker;
 
+pub use gather::ShardedSearcher;
 pub use metrics::Metrics;
 pub use server::{Coordinator, QueryRequest, QueryResponse};
 pub use worker::{BatchSearcher, NativeSearcher};

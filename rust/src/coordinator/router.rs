@@ -28,6 +28,7 @@ impl Router {
         Router { workers, loads, rr: AtomicUsize::new(0) }
     }
 
+    /// Worker queues routed over.
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }

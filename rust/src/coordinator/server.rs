@@ -21,8 +21,11 @@ use crate::core::Hit;
 
 /// A query in flight inside the coordinator.
 pub struct PendingQuery {
+    /// The query vector (validated against the index dim at ingress).
     pub vector: Vec<f32>,
+    /// Neighbors requested.
     pub top_k: usize,
+    /// When the query entered the pipeline (for latency metrics).
     pub enqueued: Instant,
     /// one-shot response channel (bounded(1) std mpsc).
     pub respond: SyncSender<QueryResponse>,
@@ -31,15 +34,20 @@ pub struct PendingQuery {
 /// Client-side request.
 #[derive(Clone, Debug)]
 pub struct QueryRequest {
+    /// The query vector; must match the index dimensionality.
     pub vector: Vec<f32>,
+    /// Neighbors requested (>= 1).
     pub top_k: usize,
 }
 
 /// Search response.
 #[derive(Clone, Debug)]
 pub struct QueryResponse {
+    /// Ranked hits, ascending (distance, id).
     pub hits: Vec<Hit>,
+    /// Queue + execution time inside the coordinator.
     pub latency: Duration,
+    /// Id of the worker that executed the batch.
     pub worker: usize,
 }
 
@@ -48,6 +56,7 @@ pub struct QueryResponse {
 pub struct Coordinator {
     ingress: SyncSender<PendingQuery>,
     admission: Admission,
+    /// Serving metrics, shared with every pipeline stage.
     pub metrics: Arc<Metrics>,
     dim: usize,
 }
@@ -97,20 +106,65 @@ impl Coordinator {
         }
     }
 
+    /// Query dimensionality this coordinator validates against.
     pub fn dim(&self) -> usize {
         self.dim
     }
 
-    /// Submit a query; blocks until a worker answers. Errors on shed
-    /// (admission full) or malformed input.
-    pub fn query(&self, req: QueryRequest) -> Result<QueryResponse> {
+    /// Validate a request against this coordinator's index before it
+    /// touches any serving state. Centralized so both [`Self::query`]
+    /// and the JSON front-end reject malformed input *up front* — a bad
+    /// request must never consume an admission permit, enter the
+    /// ingress queue, or reach the batcher, where a dimension mismatch
+    /// would poison the whole batch's `Matrix` assembly.
+    fn validate(&self, req: &QueryRequest) -> Result<()> {
+        anyhow::ensure!(!req.vector.is_empty(), "empty query vector");
         anyhow::ensure!(
             req.vector.len() == self.dim,
             "query dim {} != index dim {}",
             req.vector.len(),
             self.dim
         );
+        anyhow::ensure!(
+            req.vector.iter().all(|v| v.is_finite()),
+            "non-finite query vector entry"
+        );
         anyhow::ensure!(req.top_k >= 1, "top_k must be >= 1");
+        Ok(())
+    }
+
+    /// Submit a query; blocks until a worker answers. Errors on shed
+    /// (admission full) or malformed input — validation happens before
+    /// admission, so rejected requests never consume serving capacity.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use icq::config::{SearchConfig, ServeConfig};
+    /// use icq::coordinator::{Coordinator, NativeSearcher, QueryRequest};
+    /// use icq::core::{Matrix, Rng};
+    /// use icq::index::EncodedIndex;
+    /// use icq::quantizer::pq::{Pq, PqOpts};
+    ///
+    /// let mut rng = Rng::new(1);
+    /// let x = Matrix::from_fn(200, 8, |_, _| rng.normal_f32());
+    /// let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 3, seed: 0 });
+    /// let index = Arc::new(EncodedIndex::build(&pq, &x, vec![0; 200]));
+    /// let searcher = Arc::new(NativeSearcher::new(index, SearchConfig::default()));
+    /// let coord = Coordinator::start(searcher, ServeConfig::default());
+    ///
+    /// let resp = coord
+    ///     .query(QueryRequest { vector: vec![0.0; 8], top_k: 3 })
+    ///     .unwrap();
+    /// assert_eq!(resp.hits.len(), 3);
+    /// // malformed requests fail fast, before admission or batching
+    /// assert!(coord
+    ///     .query(QueryRequest { vector: vec![0.0; 5], top_k: 3 })
+    ///     .is_err());
+    /// ```
+    pub fn query(&self, req: QueryRequest) -> Result<QueryResponse> {
+        self.validate(&req)?;
         let Some(_permit) = self.admission.try_admit() else {
             self.metrics
                 .queries_rejected
@@ -322,5 +376,51 @@ mod tests {
         let c = coordinator(1, 8);
         assert!(c.handle_json("{nope").is_err());
         assert!(c.handle_json(r#"{"vector": "not an array"}"#).is_err());
+    }
+
+    /// Malformed requests must be rejected *up front* — specific error
+    /// messages, and no serving state consumed (no admission permit, no
+    /// ingress enqueue, so `queries_in` stays untouched).
+    #[test]
+    fn json_handler_rejects_bad_requests_before_enqueue() {
+        let c = coordinator(1, 8);
+        let err = |line: &str| c.handle_json(line).unwrap_err().to_string();
+
+        assert!(err(r#"{"top_k":3}"#).contains("missing 'vector'"));
+        assert!(err(r#"{"vector":[],"top_k":3}"#).contains("empty query vector"));
+        assert!(
+            err(r#"{"vector":[1,2,3],"top_k":3}"#)
+                .contains("query dim 3 != index dim 8"),
+            "wrong-dim error should name both dims"
+        );
+        assert!(err(r#"{"vector":[1,"x",3,4,5,6,7,8]}"#)
+            .contains("non-numeric vector entry"));
+        assert!(err(
+            r#"{"vector":[0,0,0,0,0,0,0,0],"top_k":0}"#
+        )
+        .contains("top_k must be >= 1"));
+
+        // none of the rejects consumed an admission permit or entered
+        // the pipeline
+        use std::sync::atomic::Ordering;
+        assert_eq!(c.metrics.queries_in.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.queries_rejected.load(Ordering::Relaxed), 0);
+
+        // and the coordinator still answers a well-formed request
+        let ok = c
+            .handle_json(r#"{"vector":[0,0,0,0,0,0,0,0],"top_k":2}"#)
+            .unwrap();
+        assert_eq!(
+            Json::parse(&ok).unwrap().get("ids").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn query_rejects_non_finite_vectors() {
+        let c = coordinator(1, 8);
+        let mut v = vec![0.0f32; 8];
+        v[3] = f32::NAN;
+        assert!(c.query(QueryRequest { vector: v, top_k: 2 }).is_err());
     }
 }

@@ -21,18 +21,24 @@ pub trait BatchSearcher: Send + Sync + 'static {
     fn dim(&self) -> usize;
 }
 
-/// Pure-rust two-step ICQ searcher over an [`EncodedIndex`]: per query,
-/// build the LUT, run the blocked crude sweep — quantized (u8 LUT, u16
-/// accumulators, SIMD on AVX2) when the index stores narrow codes, f32
-/// otherwise — then the shared threshold/refine engine
-/// (`search_icq::search_scanfirst_query_qlut`).
+/// Pure-rust two-step ICQ searcher over one flat [`EncodedIndex`]: per
+/// batch, build all query LUTs, run the LUT-major blocked crude sweep —
+/// quantized (u8 LUT, u16 accumulators, SIMD on AVX2) when the index
+/// stores narrow codes, f32 otherwise — then the shared threshold/refine
+/// engine per query (`search_icq::search_scanfirst_batch`). For a
+/// sharded scatter-gather variant see
+/// [`super::gather::ShardedSearcher`].
 pub struct NativeSearcher {
+    /// The database searched.
     pub index: Arc<EncodedIndex>,
+    /// Default search options (per-request `top_k` overrides `opts.k`).
     pub opts: IcqSearchOpts,
+    /// Op counters accumulated across every batch served.
     pub ops: Arc<OpCounter>,
 }
 
 impl NativeSearcher {
+    /// A searcher over `index` with `cfg`'s top-k / margin defaults.
     pub fn new(index: Arc<EncodedIndex>, cfg: SearchConfig) -> Self {
         NativeSearcher {
             index,
@@ -46,20 +52,18 @@ impl BatchSearcher for NativeSearcher {
     fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
         let opts = IcqSearchOpts { k: top_k, ..self.opts };
         // workers are already parallel across batches; keep the per-batch
-        // scan serial to avoid nested-thread oversubscription. The crude
-        // scratch buffer is reused across the batch.
-        let mut out = Vec::with_capacity(queries.rows());
+        // scan serial to avoid nested-thread oversubscription. The
+        // LUT-major engine holds each code block resident while sweeping
+        // the whole batch of LUTs over it (and reuses one crude scratch
+        // across the batch's tiles).
         let mut crude = Vec::new();
-        for qi in 0..queries.rows() {
-            out.push(search_icq::search_scanfirst_query_qlut(
-                &self.index,
-                queries.row(qi),
-                opts,
-                &self.ops,
-                &mut crude,
-            ));
-        }
-        out
+        search_icq::search_scanfirst_batch(
+            &self.index,
+            queries,
+            opts,
+            &self.ops,
+            &mut crude,
+        )
     }
 
     fn dim(&self) -> usize {

@@ -1,22 +1,48 @@
 //! Bounded top-k (nearest) selection — the neighbor list of section 3.4.
 //!
-//! A size-capped binary max-heap keyed on distance: the root is the
-//! *furthest* kept neighbor, which is exactly the element the paper's
+//! A size-capped binary max-heap keyed on `(distance, id)`: the root is
+//! the *furthest* kept neighbor, which is exactly the element the paper's
 //! two-step search compares against (crude test vs "the furthest element
 //! in the list"). `threshold()` exposes that radius in O(1).
+//!
+//! ## Canonical tie-breaking
+//!
+//! Selection is lexicographic on `(distance, id)`, not on distance
+//! alone: among candidates with equal distance, the smaller id wins a
+//! slot. This makes the kept set a pure function of the candidate
+//! *values* — independent of push order and of heap internals — which is
+//! what lets the sharded scatter-gather path
+//! ([`crate::coordinator::gather`]) merge per-shard top-k lists into
+//! results bitwise identical to the single-shard scan: both sides reduce
+//! to "the k smallest `(distance, id)` pairs".
 
 /// One search hit.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Hit {
+    /// Index of the matched vector in the database (global row id).
     pub id: u32,
+    /// (Approximate) squared L2 distance to the query.
     pub dist: f32,
 }
 
-/// Bounded max-heap of the k nearest candidates seen so far.
+/// Whether `a` orders strictly after `b` in the canonical
+/// `(distance, id)` order — i.e. `a` is the worse (farther) hit.
+/// NaN distances order after every finite distance (`f32::total_cmp`).
+#[inline]
+fn farther(a: &Hit, b: &Hit) -> bool {
+    match a.dist.total_cmp(&b.dist) {
+        std::cmp::Ordering::Greater => true,
+        std::cmp::Ordering::Less => false,
+        std::cmp::Ordering::Equal => a.id > b.id,
+    }
+}
+
+/// Bounded max-heap of the k nearest candidates seen so far, ordered by
+/// the canonical `(distance, id)` key (see the module docs).
 #[derive(Clone, Debug)]
 pub struct TopK {
     k: usize,
-    heap: Vec<Hit>, // max-heap on dist
+    heap: Vec<Hit>, // max-heap on (dist, id)
 }
 
 impl TopK {
@@ -51,15 +77,19 @@ impl TopK {
         }
     }
 
-    /// Offer a candidate; returns true if it entered the list.
+    /// Offer a candidate; returns true if it entered the list. A
+    /// candidate tied on distance with the current root enters iff its
+    /// id is smaller (the canonical `(distance, id)` rule), so the kept
+    /// set never depends on push order.
     #[inline]
     pub fn push(&mut self, id: u32, dist: f32) -> bool {
+        let cand = Hit { id, dist };
         if self.heap.len() < self.k {
-            self.heap.push(Hit { id, dist });
+            self.heap.push(cand);
             self.sift_up(self.heap.len() - 1);
             true
-        } else if dist < self.heap[0].dist {
-            self.heap[0] = Hit { id, dist };
+        } else if farther(&self.heap[0], &cand) {
+            self.heap[0] = cand;
             self.sift_down(0);
             true
         } else {
@@ -70,7 +100,7 @@ impl TopK {
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
             let parent = (i - 1) / 2;
-            if self.heap[i].dist > self.heap[parent].dist {
+            if farther(&self.heap[i], &self.heap[parent]) {
                 self.heap.swap(i, parent);
                 i = parent;
             } else {
@@ -84,10 +114,10 @@ impl TopK {
         loop {
             let (l, r) = (2 * i + 1, 2 * i + 2);
             let mut largest = i;
-            if l < n && self.heap[l].dist > self.heap[largest].dist {
+            if l < n && farther(&self.heap[l], &self.heap[largest]) {
                 largest = l;
             }
-            if r < n && self.heap[r].dist > self.heap[largest].dist {
+            if r < n && farther(&self.heap[r], &self.heap[largest]) {
                 largest = r;
             }
             if largest == i {
@@ -147,6 +177,30 @@ mod tests {
         assert!(!t.push(1, 2.0));
         assert!(t.push(2, 0.5));
         assert_eq!(t.into_sorted()[0].id, 2);
+    }
+
+    /// Ties at the selection boundary must resolve to the smaller id
+    /// regardless of push order — the canonical-selection invariant the
+    /// sharded gather merge relies on.
+    #[test]
+    fn ties_keep_smaller_ids_in_any_push_order() {
+        let orders: [&[(u32, f32)]; 3] = [
+            &[(0, 5.0), (1, 5.0), (2, 5.0), (3, 1.0)],
+            &[(3, 1.0), (2, 5.0), (1, 5.0), (0, 5.0)],
+            &[(2, 5.0), (3, 1.0), (0, 5.0), (1, 5.0)],
+        ];
+        for order in orders {
+            let mut t = TopK::new(2);
+            for &(id, d) in order {
+                t.push(id, d);
+            }
+            let hits = t.into_sorted();
+            assert_eq!(
+                hits.iter().map(|h| h.id).collect::<Vec<_>>(),
+                vec![3, 0],
+                "order {order:?} broke canonical tie-breaking"
+            );
+        }
     }
 
     #[test]

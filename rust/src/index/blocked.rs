@@ -144,11 +144,13 @@ impl<C: CodeUnit> BlockedCodes<C> {
         BlockedCodes { n, k, block, data }
     }
 
+    /// Stored vectors (excluding tail padding).
     #[inline]
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// Books per code row (K).
     #[inline]
     pub fn k(&self) -> usize {
         self.k
@@ -160,6 +162,7 @@ impl<C: CodeUnit> BlockedCodes<C> {
         self.block
     }
 
+    /// Blocks stored: `ceil(n / B)`.
     #[inline]
     pub fn num_blocks(&self) -> usize {
         self.n.div_ceil(self.block)
@@ -232,6 +235,37 @@ impl<C: CodeUnit> BlockedCodes<C> {
             out[base..base + take].copy_from_slice(&acc[..take]);
         }
     }
+
+    /// Multi-query dense sweep, LUT-major: the outer loop walks the code
+    /// blocks ONCE, and each resident block is swept with every LUT of
+    /// the batch before moving on — so a block's code bytes are streamed
+    /// from memory once per *batch* instead of once per query. `out` is
+    /// query-major `[luts.len()][n]` (`out[q * n + i]`).
+    ///
+    /// Per-(query, vector) accumulation is the same books-ascending
+    /// [`Self::block_partial_sums`] loop the single-query sweep runs, so
+    /// each query's row of `out` is bitwise identical to a
+    /// [`Self::partial_sums_into`] call with its LUT.
+    pub fn partial_sums_batch_into(
+        &self,
+        luts: &[Lut],
+        k0: usize,
+        k1: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(out.len(), luts.len() * self.n);
+        let (n, bs) = (self.n, self.block);
+        let mut acc = vec![0.0f32; bs];
+        for b in 0..self.num_blocks() {
+            let base = b * bs;
+            let take = self.block_len(b);
+            for (qi, lut) in luts.iter().enumerate() {
+                self.block_partial_sums(lut, k0, k1, b, &mut acc);
+                out[qi * n + base..qi * n + base + take]
+                    .copy_from_slice(&acc[..take]);
+            }
+        }
+    }
 }
 
 /// Width-erased blocked storage: the concrete [`BlockedCodes`] width an
@@ -239,7 +273,11 @@ impl<C: CodeUnit> BlockedCodes<C> {
 /// variant at the top of the sweep so the hot loops stay monomorphic.
 #[derive(Clone, Debug, PartialEq)]
 pub enum BlockedStore {
+    /// Narrow store: one byte per code (`m <= 256`, every shipped
+    /// config); the input layout of the quantized sweep in
+    /// [`super::qlut`].
     U8(BlockedCodes<u8>),
+    /// Wide fallback: two bytes per code (`256 < m <= 65536`).
     U16(BlockedCodes<u16>),
 }
 
@@ -272,6 +310,7 @@ impl BlockedStore {
         }
     }
 
+    /// Stored vectors (excluding tail padding).
     #[inline]
     pub fn n(&self) -> usize {
         match self {
@@ -280,6 +319,7 @@ impl BlockedStore {
         }
     }
 
+    /// Books per code row (K).
     #[inline]
     pub fn k(&self) -> usize {
         match self {
@@ -288,6 +328,7 @@ impl BlockedStore {
         }
     }
 
+    /// Vectors per block (B).
     #[inline]
     pub fn block_size(&self) -> usize {
         match self {
@@ -296,6 +337,7 @@ impl BlockedStore {
         }
     }
 
+    /// Blocks stored: `ceil(n / B)`.
     #[inline]
     pub fn num_blocks(&self) -> usize {
         match self {
@@ -304,6 +346,7 @@ impl BlockedStore {
         }
     }
 
+    /// Number of real (non-padding) lanes in block `b`.
     #[inline]
     pub fn block_len(&self, b: usize) -> usize {
         match self {
@@ -333,6 +376,24 @@ impl BlockedStore {
         match self {
             BlockedStore::U8(b) => b.partial_sums_into(lut, k0, k1, out),
             BlockedStore::U16(b) => b.partial_sums_into(lut, k0, k1, out),
+        }
+    }
+
+    /// Multi-query LUT-major dense sweep (see
+    /// [`BlockedCodes::partial_sums_batch_into`]); `out` is query-major
+    /// `[luts.len()][n]`.
+    pub fn partial_sums_batch_into(
+        &self,
+        luts: &[Lut],
+        k0: usize,
+        k1: usize,
+        out: &mut [f32],
+    ) {
+        match self {
+            BlockedStore::U8(b) => b.partial_sums_batch_into(luts, k0, k1, out),
+            BlockedStore::U16(b) => {
+                b.partial_sums_batch_into(luts, k0, k1, out)
+            }
         }
     }
 }
@@ -447,6 +508,36 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The LUT-major batched sweep must be bitwise identical to running
+    /// the single-query sweep once per LUT, including tail blocks and
+    /// partial book ranges.
+    #[test]
+    fn batch_sweep_matches_serial_sweep_bitwise() {
+        let (k, m) = (5, 16);
+        let codes = random_codes(130, k, m, 40);
+        let luts: Vec<Lut> =
+            (0..7).map(|s| random_lut(k, m, 50 + s)).collect();
+        for (k0, k1) in [(0usize, k), (0, 2), (1, 4)] {
+            for store_m in [m, 400] {
+                let store = BlockedStore::from_codes(&codes, store_m);
+                let mut batch = vec![f32::NAN; luts.len() * 130];
+                store.partial_sums_batch_into(&luts, k0, k1, &mut batch);
+                let mut serial = vec![f32::NAN; 130];
+                for (qi, lut) in luts.iter().enumerate() {
+                    store.partial_sums_into(lut, k0, k1, &mut serial);
+                    assert_eq!(
+                        &batch[qi * 130..(qi + 1) * 130],
+                        &serial[..],
+                        "store_m={store_m} q={qi} books [{k0},{k1}) diverged"
+                    );
+                }
+            }
+        }
+        // empty batch: nothing written, nothing read
+        let store = BlockedStore::from_codes(&codes, m);
+        store.partial_sums_batch_into(&[], 0, k, &mut []);
     }
 
     #[test]

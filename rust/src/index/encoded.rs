@@ -5,6 +5,8 @@
 //! The same structure serves baseline ADC search (fast_k = K, sigma = 0)
 //! and ICQ two-step search.
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use super::blocked::{BlockedStore, CodeUnit};
@@ -54,7 +56,10 @@ pub(crate) fn validate_snapshot(
 /// An immutable, searchable encoded database.
 #[derive(Clone, Debug)]
 pub struct EncodedIndex {
-    codebooks: Codebooks,
+    /// `Arc`-shared so [`EncodedIndex::slice`] (hence every shard of a
+    /// `ShardedIndex`) reuses one copy of the codebook state instead of
+    /// duplicating `K * m * d` floats per shard.
+    codebooks: Arc<Codebooks>,
     /// row-major codes: the encoder output, the refine step's layout,
     /// and the serial parity oracle's scan order.
     codes: Codes,
@@ -62,7 +67,9 @@ pub struct EncodedIndex {
     /// the layout every dense scan sweeps, stored at the narrowest code
     /// width the codebook size allows (u8 when m <= 256, u16 otherwise).
     blocked: BlockedStore,
-    lut_ctx: LutContext,
+    /// `Arc`-shared for the same reason as `codebooks`: it is derived
+    /// from them alone, so slices share it.
+    lut_ctx: Arc<LutContext>,
     /// leading fast-group size (|K|); == k for non-ICQ methods.
     pub fast_k: usize,
     /// crude margin sigma (eq. 11); 0 for non-ICQ methods.
@@ -84,14 +91,52 @@ impl EncodedIndex {
         sigma: f32,
         labels: Vec<i32>,
     ) -> Self {
-        let lut_ctx = LutContext::new(&codebooks);
+        let codebooks = Arc::new(codebooks);
+        let lut_ctx = Arc::new(LutContext::new(&codebooks));
+        Self::assemble_shared(codebooks, lut_ctx, codes, fast_k, sigma, labels)
+    }
+
+    /// [`Self::assemble`] with already-shared codebook state — the slice
+    /// path, where rebuilding the (codes-independent) LUT context and
+    /// cloning the codebooks per shard would multiply memory and build
+    /// time by the shard count.
+    fn assemble_shared(
+        codebooks: Arc<Codebooks>,
+        lut_ctx: Arc<LutContext>,
+        codes: Codes,
+        fast_k: usize,
+        sigma: f32,
+        labels: Vec<i32>,
+    ) -> Self {
         let blocked = BlockedStore::from_codes(&codes, codebooks.m());
         EncodedIndex { codebooks, codes, blocked, lut_ctx, fast_k, sigma, labels }
     }
 
     /// Encode `x` with any trained quantizer. For ICQ models the fast
     /// group / sigma come from the trainer; other methods get fast_k = K
-    /// (their search is the conventional full ADC).
+    /// (their search is the conventional full ADC). Like every
+    /// constructor, funnels through the internal `assemble` step that
+    /// derives the search state (LUT context + blocked transpose at the
+    /// auto-selected code width).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use icq::core::{Matrix, Rng};
+    /// use icq::index::{search_adc, EncodedIndex, OpCounter};
+    /// use icq::quantizer::pq::{Pq, PqOpts};
+    ///
+    /// let mut rng = Rng::new(0);
+    /// let x = Matrix::from_fn(200, 8, |_, _| rng.normal_f32());
+    /// let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 3, seed: 0 });
+    /// let index = EncodedIndex::build(&pq, &x, vec![0; 200]);
+    /// assert_eq!(index.len(), 200);
+    /// assert_eq!(index.blocked().code_width_bits(), 8); // m <= 256
+    ///
+    /// let hits = search_adc::search(&index, x.row(7), 5, &OpCounter::new());
+    /// assert_eq!(hits.len(), 5);
+    /// assert!(hits.windows(2).all(|w| w[0].dist <= w[1].dist));
+    /// ```
     pub fn build<Q: Quantizer>(q: &Q, x: &Matrix, labels: Vec<i32>) -> Self {
         assert_eq!(x.rows(), labels.len());
         let codes = q.encode(x);
@@ -128,35 +173,74 @@ impl EncodedIndex {
         ))
     }
 
+    /// A new standalone index over the contiguous row range
+    /// `[start, end)` of this one: same codebooks and two-step search
+    /// parameters (`fast_k`, `sigma`), codes and labels restricted to
+    /// the range, blocked storage rebuilt for the slice; codebooks and
+    /// LUT context are `Arc`-shared with this index, not copied. This is the
+    /// building block of [`super::shard::ShardedIndex`] — each shard is
+    /// a fully independent `EncodedIndex`, so every search executor
+    /// runs on it unchanged. Hit ids from the slice are range-local;
+    /// add `start` to translate them back to this index's row ids.
+    pub fn slice(&self, start: usize, end: usize) -> Self {
+        assert!(
+            start <= end && end <= self.len(),
+            "slice [{start}, {end}) out of bounds (n = {})",
+            self.len()
+        );
+        let k = self.k();
+        let codes = Codes::from_vec(
+            end - start,
+            k,
+            self.codes.as_slice()[start * k..end * k].to_vec(),
+        );
+        Self::assemble_shared(
+            self.codebooks.clone(),
+            self.lut_ctx.clone(),
+            codes,
+            self.fast_k,
+            self.sigma,
+            self.labels[start..end].to_vec(),
+        )
+    }
+
+    /// Encoded vectors in the database.
     #[inline]
     pub fn len(&self) -> usize {
         self.codes.n()
     }
 
+    /// Whether the database holds no vectors.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Number of codebooks (K).
     #[inline]
     pub fn k(&self) -> usize {
         self.codebooks.k()
     }
 
+    /// Codewords per book (m).
     #[inline]
     pub fn m(&self) -> usize {
         self.codebooks.m()
     }
 
+    /// Query/vector dimensionality.
     #[inline]
     pub fn dim(&self) -> usize {
         self.codebooks.d()
     }
 
+    /// The codebooks (full-d layout, shared by every method).
     pub fn codebooks(&self) -> &Codebooks {
         &self.codebooks
     }
 
+    /// Row-major codes: the refine step's layout and the serial parity
+    /// oracle's scan order.
     pub fn codes(&self) -> &Codes {
         &self.codes
     }
@@ -167,6 +251,7 @@ impl EncodedIndex {
         &self.blocked
     }
 
+    /// Precomputed query-independent LUT state (built once per index).
     pub fn lut_ctx(&self) -> &LutContext {
         &self.lut_ctx
     }
@@ -375,6 +460,47 @@ mod tests {
         let mut bad = base;
         bad.labels = vec![0; n - 1];
         assert!(EncodedIndex::from_bundle(&bad).is_err());
+    }
+
+    #[test]
+    fn slice_preserves_rows_params_and_labels() {
+        let x = hetero(90, 9, 8);
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 3, m: 8, fast_k: 1, kmeans_iters: 4, prior_steps: 50, seed: 0 },
+        );
+        let labels: Vec<i32> = (0..90).map(|i| i as i32).collect();
+        let idx = EncodedIndex::build_icq(&icq, &x, labels);
+        for (start, end) in [(0usize, 90usize), (10, 70), (64, 65), (30, 30)] {
+            let s = idx.slice(start, end);
+            assert_eq!(s.len(), end - start);
+            assert_eq!(s.fast_k, idx.fast_k);
+            assert_eq!(s.sigma, idx.sigma);
+            assert_eq!(s.k(), idx.k());
+            assert_eq!(s.dim(), idx.dim());
+            for i in 0..s.len() {
+                assert_eq!(s.labels[i], idx.labels[start + i]);
+                for kk in 0..idx.k() {
+                    assert_eq!(
+                        s.codes().get(i, kk),
+                        idx.codes().get(start + i, kk)
+                    );
+                    assert_eq!(
+                        s.blocked().get(i, kk),
+                        idx.blocked().get(start + i, kk)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_rejects_reversed_range() {
+        let x = hetero(20, 6, 9);
+        let pq = Pq::train(&x, PqOpts { k: 2, m: 4, iters: 3, seed: 0 });
+        let idx = EncodedIndex::build(&pq, &x, vec![0; 20]);
+        let _ = idx.slice(10, 5);
     }
 
     #[test]

@@ -31,6 +31,8 @@ pub struct LutContext {
 }
 
 impl LutContext {
+    /// Precompute the query-independent state for `codebooks`:
+    /// codeword norms, support dims, and compact per-book copies.
     pub fn new(codebooks: &Codebooks) -> Self {
         let (k, m, d) = (codebooks.k(), codebooks.m(), codebooks.d());
         let mut c_sq = vec![0.0f32; k * m];
@@ -56,11 +58,13 @@ impl LutContext {
         LutContext { k, m, d, c_sq, dims, compact }
     }
 
+    /// Number of codebooks (K).
     #[inline]
     pub fn k(&self) -> usize {
         self.k
     }
 
+    /// Codewords per book (m).
     #[inline]
     pub fn m(&self) -> usize {
         self.m
@@ -121,11 +125,13 @@ impl Lut {
         Lut { k, m, data }
     }
 
+    /// Entry for codeword `j` of book `k`.
     #[inline]
     pub fn get(&self, k: usize, j: usize) -> f32 {
         self.data[k * self.m + j]
     }
 
+    /// The m entries of book `k`, contiguous.
     #[inline]
     pub fn row(&self, k: usize) -> &[f32] {
         &self.data[k * self.m..(k + 1) * self.m]
@@ -141,11 +147,13 @@ impl Lut {
         s
     }
 
+    /// Number of codebooks (K).
     #[inline]
     pub fn k(&self) -> usize {
         self.k
     }
 
+    /// Codewords per book (m).
     #[inline]
     pub fn m(&self) -> usize {
         self.m

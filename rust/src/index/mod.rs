@@ -21,6 +21,16 @@
 //! accumulators ([`qlut`], Bolt-style, SIMD on AVX2). The shared "seed
 //! threshold from crude top-k -> refine shortlist" engine every dense
 //! path consumes lives in [`two_step`].
+//!
+//! For multi-worker serving, [`shard`] cuts one index into contiguous
+//! block-range shards (each a full [`EncodedIndex`]); the coordinator's
+//! scatter-gather layer fans queries across them and merges per-shard
+//! top-k lists (see `crate::coordinator::gather`). The dense sweeps and
+//! the two-step engine also come in LUT-major batched variants
+//! (`search_icq::search_scanfirst_batch`) that hold each code block
+//! resident while sweeping a whole batch of query LUTs over it.
+
+#![warn(missing_docs)]
 
 pub mod blocked;
 pub mod encoded;
@@ -30,6 +40,7 @@ pub mod qlut;
 pub mod search_adc;
 pub mod search_exact;
 pub mod search_icq;
+pub mod shard;
 pub mod two_step;
 
 pub use blocked::{BlockedCodes, BlockedStore, CodeUnit};
@@ -37,3 +48,4 @@ pub use encoded::EncodedIndex;
 pub use lut::Lut;
 pub use opcount::OpCounter;
 pub use qlut::QLut;
+pub use shard::{ShardPolicy, ShardSpec, ShardedIndex};

@@ -26,30 +26,36 @@ pub struct OpCounter {
 }
 
 impl OpCounter {
+    /// Fresh counters, all zero.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record `n` LUT-entry additions.
     #[inline]
     pub fn add_table_adds(&self, n: u64) {
         self.table_adds.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record `n` raw f32 multiply-adds.
     #[inline]
     pub fn add_flops(&self, n: u64) {
         self.flops.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record `n` candidates refined past the crude test.
     #[inline]
     pub fn add_refined(&self, n: u64) {
         self.refined.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record `n` candidates examined.
     #[inline]
     pub fn add_candidates(&self, n: u64) {
         self.candidates.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record `n` queries processed.
     #[inline]
     pub fn add_queries(&self, n: u64) {
         self.queries.fetch_add(n, Ordering::Relaxed);
@@ -74,6 +80,7 @@ impl OpCounter {
         self.refined.load(Ordering::Relaxed) as f64 / c as f64
     }
 
+    /// A plain-value copy of the current counter state.
     pub fn snapshot(&self) -> OpSnapshot {
         OpSnapshot {
             table_adds: self.table_adds.load(Ordering::Relaxed),
@@ -84,6 +91,7 @@ impl OpCounter {
         }
     }
 
+    /// Zero every counter.
     pub fn reset(&self) {
         self.table_adds.store(0, Ordering::Relaxed);
         self.flops.store(0, Ordering::Relaxed);
@@ -96,14 +104,21 @@ impl OpCounter {
 /// A plain-value copy of the counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpSnapshot {
+    /// LUT-entry additions during scans (the paper's op unit).
     pub table_adds: u64,
+    /// Raw f32 multiply-adds (exact search / LUT builds).
     pub flops: u64,
+    /// Candidates whose crude test passed and were refined.
     pub refined: u64,
+    /// Candidates examined in total.
     pub candidates: u64,
+    /// Queries processed.
     pub queries: u64,
 }
 
 impl OpSnapshot {
+    /// Average table-adds per (query, database element); see
+    /// [`OpCounter::avg_ops_per_candidate`].
     pub fn avg_ops_per_candidate(&self) -> f64 {
         if self.candidates == 0 {
             0.0
@@ -112,6 +127,7 @@ impl OpSnapshot {
         }
     }
 
+    /// Fraction of candidates that needed refinement.
     pub fn refine_rate(&self) -> f64 {
         if self.candidates == 0 {
             0.0

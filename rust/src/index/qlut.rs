@@ -302,6 +302,37 @@ fn pick_kernel(qlut: &QLut, bs: usize) -> Kernel {
     Kernel::Portable
 }
 
+/// Run the resolved kernel over one block slice, filling `acc` with the
+/// quantized (undequantized) block sums. Shared by the single-query and
+/// LUT-major batched sweeps so both take identical numeric paths.
+#[inline]
+fn run_kernel(
+    kernel: &Kernel,
+    blk: &[u8],
+    bs: usize,
+    qlut: &QLut,
+    acc: &mut [u16],
+) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Shuffle(tables) => {
+            // SAFETY: AVX2 availability, bs % 32 == 0 and m <= 16 were
+            // all checked in pick_kernel; blk spans all K books.
+            unsafe {
+                x86::block_qsums_shuffle(blk, bs, qlut.k0(), tables, acc)
+            };
+        }
+        #[cfg(target_arch = "x86_64")]
+        Kernel::LookupAvx2 => {
+            // SAFETY: AVX2 checked in pick_kernel.
+            unsafe { x86::block_qsums_lookup_avx2(blk, bs, qlut, acc) };
+        }
+        Kernel::Portable => {
+            block_qsums_lookup(blk, bs, qlut, acc);
+        }
+    }
+}
+
 /// Dense quantized crude sweep over the whole database:
 /// `out[i] = (sum_{t} e[t][code[i][k0 + t]]) * scale + bias_sum`,
 /// a lower bound of the f32 partial sum over books `[k0, k0 + books)`.
@@ -323,36 +354,60 @@ pub fn crude_sums_into(
     let mut acc = vec![0u16; bs];
     for b in 0..blocked.num_blocks() {
         let blk = blocked.block(b);
-        match &kernel {
-            #[cfg(target_arch = "x86_64")]
-            Kernel::Shuffle(tables) => {
-                // SAFETY: AVX2 checked in pick_kernel; bs % 32 == 0 and
-                // m <= 16 checked there too; blk spans all K books.
-                unsafe {
-                    x86::block_qsums_shuffle(
-                        blk,
-                        bs,
-                        qlut.k0(),
-                        tables,
-                        &mut acc,
-                    )
-                };
-            }
-            #[cfg(target_arch = "x86_64")]
-            Kernel::LookupAvx2 => {
-                // SAFETY: AVX2 checked in pick_kernel.
-                unsafe {
-                    x86::block_qsums_lookup_avx2(blk, bs, qlut, &mut acc)
-                };
-            }
-            Kernel::Portable => {
-                block_qsums_lookup(blk, bs, qlut, &mut acc);
-            }
-        }
+        run_kernel(&kernel, blk, bs, qlut, &mut acc);
         let base = b * bs;
         let take = blocked.block_len(b);
         for (o, &a) in out[base..base + take].iter_mut().zip(acc.iter()) {
             *o = a as f32 * scale + bias;
+        }
+    }
+}
+
+/// Multi-query quantized crude sweep, LUT-major: the outer loop walks
+/// the code blocks once, and each resident block is swept with every
+/// quantized LUT of the batch before moving on — the halved u8 code
+/// bytes are streamed from memory once per *batch* instead of once per
+/// query (the ROADMAP's multi-query blocked scan). `out` is query-major
+/// `[qluts.len()][n]` (`out[q * n + i]`).
+///
+/// Per-(query, block) work is the identical kernel invocation and
+/// dequantize loop [`crude_sums_into`] runs, so each query's row of
+/// `out` is bitwise equal to a single-query sweep with its `QLut` — the
+/// lower-bound guarantee carries over unchanged.
+pub fn crude_sums_batch_into(
+    blocked: &BlockedCodes<u8>,
+    qluts: &[QLut],
+    out: &mut [f32],
+) {
+    let n = blocked.n();
+    assert_eq!(out.len(), qluts.len() * n);
+    for qlut in qluts {
+        assert!(
+            qlut.k0() + qlut.books() <= blocked.k(),
+            "qlut covers books past the index's K"
+        );
+    }
+    let bs = blocked.block_size();
+    // kernel choice depends only on (m, bs), shared across the batch,
+    // but the shuffle variant carries per-qlut padded tables.
+    let kernels: Vec<Kernel> =
+        qluts.iter().map(|q| pick_kernel(q, bs)).collect();
+    let mut acc = vec![0u16; bs];
+    for b in 0..blocked.num_blocks() {
+        let blk = blocked.block(b);
+        let base = b * bs;
+        let take = blocked.block_len(b);
+        for (qi, (qlut, kernel)) in
+            qluts.iter().zip(&kernels).enumerate()
+        {
+            run_kernel(kernel, blk, bs, qlut, &mut acc);
+            let (scale, bias) = (qlut.scale(), qlut.bias_sum());
+            for (o, &a) in out[qi * n + base..qi * n + base + take]
+                .iter_mut()
+                .zip(acc.iter())
+            {
+                *o = a as f32 * scale + bias;
+            }
         }
     }
 }
@@ -472,6 +527,46 @@ mod tests {
             assert!(lb[i] <= exact + 1e-4);
             assert!(exact - lb[i] <= q.max_err() + 1e-4);
         }
+    }
+
+    /// The LUT-major batched sweep must be bitwise identical to the
+    /// single-query sweep per LUT, across the shuffle kernel (m = 16,
+    /// block 64), the wide lookup (m = 256) and the portable remainder
+    /// path (block 10), including tail blocks.
+    #[test]
+    fn batch_sweep_matches_serial_sweep_bitwise() {
+        for (n, k, m, block) in [
+            (130usize, 8usize, 16usize, 64usize),
+            (100, 4, 256, 64),
+            (37, 4, 16, 10),
+        ] {
+            let codes = random_codes(n, k, m, (n + 1) as u64);
+            let blocked = BlockedCodes::<u8>::with_block(&codes, block);
+            let qluts: Vec<QLut> = (0..5)
+                .map(|s| {
+                    QLut::from_lut(
+                        &random_lut(k, m, 77 + s),
+                        0,
+                        k - (s as usize % 2),
+                    )
+                })
+                .collect();
+            let mut batch = vec![f32::NAN; qluts.len() * n];
+            crude_sums_batch_into(&blocked, &qluts, &mut batch);
+            let mut serial = vec![f32::NAN; n];
+            for (qi, q) in qluts.iter().enumerate() {
+                crude_sums_into(&blocked, q, &mut serial);
+                assert_eq!(
+                    &batch[qi * n..(qi + 1) * n],
+                    &serial[..],
+                    "n={n} m={m} block={block} q={qi}: batched sweep \
+                     diverged from serial"
+                );
+            }
+        }
+        // empty batch over an empty index: no panic, nothing touched
+        let blocked = BlockedCodes::<u8>::from_codes(&Codes::zeros(0, 2));
+        crude_sums_batch_into(&blocked, &[], &mut []);
     }
 
     #[test]

@@ -250,6 +250,101 @@ pub fn search_scanfirst_query_qlut(
     search_scanfirst_qlut(index, &lut, opts, ops, crude)
 }
 
+/// Queries swept per block-resident pass of the batched engine: bounds
+/// the crude scratch at `SWEEP_TILE * n` f32 while keeping enough LUTs
+/// per resident code block that the block's bytes amortize across the
+/// batch (past ~32 LUTs the block is long gone from L1 anyway).
+pub const SWEEP_TILE: usize = 32;
+
+/// Batched scanfirst over prebuilt LUTs — the LUT-major multi-query
+/// engine (ROADMAP "multi-query blocked scan"): the batch is cut into
+/// [`SWEEP_TILE`]-sized tiles, and within a tile the crude pass walks
+/// the code blocks ONCE, sweeping each resident block with every LUT
+/// before moving on (`qlut::crude_sums_batch_into` on narrow indexes,
+/// [`BlockedCodes::partial_sums_batch_into`] otherwise), so the code
+/// bytes are streamed once per tile instead of once per query. The
+/// threshold/refine half then runs per query through the batched
+/// `two_step` entry points.
+///
+/// Results are bitwise identical to calling [`search_scanfirst_qlut`]
+/// once per LUT with the same scratch (the per-(query, block) kernel
+/// and refine work is the same; only the loop interleaving changes).
+/// `crude` is a caller-owned scratch reused across calls; it grows to
+/// `min(luts.len(), SWEEP_TILE) * n` floats.
+///
+/// [`BlockedCodes::partial_sums_batch_into`]: super::blocked::BlockedCodes::partial_sums_batch_into
+pub fn search_scanfirst_batch_with_luts(
+    index: &EncodedIndex,
+    luts: &[Lut],
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+    crude: &mut Vec<f32>,
+) -> Vec<Vec<Hit>> {
+    let kb = index.k();
+    let fk = index.fast_k.min(kb); // clamp a corrupt fast group
+    let margin = index.sigma * opts.margin_scale;
+    let n = index.len();
+    let mut out = Vec::with_capacity(luts.len());
+    for tile in luts.chunks(SWEEP_TILE) {
+        crude.clear();
+        crude.resize(tile.len() * n, 0.0);
+        let hits = match index.blocked().as_u8() {
+            Some(blocked8) if QLut::fits(fk) => {
+                let qluts: Vec<QLut> =
+                    tile.iter().map(|l| QLut::from_lut(l, 0, fk)).collect();
+                qlut::crude_sums_batch_into(blocked8, &qluts, crude);
+                two_step::refine_batch_from_crude_lb(
+                    index.codes(),
+                    tile,
+                    crude,
+                    kb,
+                    margin,
+                    opts.k,
+                    ops,
+                )
+            }
+            _ => {
+                index.blocked().partial_sums_batch_into(tile, 0, fk, crude);
+                two_step::refine_batch_from_crude(
+                    index.codes(),
+                    tile,
+                    crude,
+                    fk,
+                    kb,
+                    margin,
+                    opts.k,
+                    ops,
+                )
+            }
+        };
+        ops.add_table_adds((tile.len() * n * fk) as u64);
+        ops.add_candidates((tile.len() * n) as u64);
+        ops.add_queries(tile.len() as u64);
+        out.extend(hits);
+    }
+    out
+}
+
+/// Batched scanfirst for raw queries: builds one LUT per query row
+/// (charging the compact-support MACs) and runs
+/// [`search_scanfirst_batch_with_luts`]. This is the engine behind the
+/// coordinator's `NativeSearcher::search_batch`; the scatter-gather
+/// path (`coordinator::gather`) builds the LUTs once per batch instead
+/// and hands each shard worker the `_with_luts` variant.
+pub fn search_scanfirst_batch(
+    index: &EncodedIndex,
+    queries: &Matrix,
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+    crude: &mut Vec<f32>,
+) -> Vec<Vec<Hit>> {
+    let luts: Vec<Lut> = (0..queries.rows())
+        .map(|qi| Lut::build(index.lut_ctx(), index.codebooks(), queries.row(qi)))
+        .collect();
+    ops.add_flops((queries.rows() * index.lut_ctx().build_macs()) as u64);
+    search_scanfirst_batch_with_luts(index, &luts, opts, ops, crude)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -385,6 +480,68 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The batched LUT-major engine must return exactly (bitwise) what
+    /// the per-query qlut scanfirst returns — same kernels, same refine,
+    /// different loop interleaving only.
+    #[test]
+    fn batched_scanfirst_matches_per_query_bitwise() {
+        let (x, idx) = setup(500, 7);
+        let mut rng = Rng::new(31);
+        let nq = 9;
+        let queries = Matrix::from_fn(nq, 16, |i, j| {
+            x.get(i * 3, j) + rng.normal_f32() * 0.2
+        });
+        let ops = OpCounter::new();
+        let mut crude = Vec::new();
+        let batched = search_scanfirst_batch(
+            &idx,
+            &queries,
+            IcqSearchOpts::default(),
+            &ops,
+            &mut crude,
+        );
+        assert_eq!(batched.len(), nq);
+        let mut scratch = Vec::new();
+        for qi in 0..nq {
+            let serial = search_scanfirst_query_qlut(
+                &idx,
+                queries.row(qi),
+                IcqSearchOpts::default(),
+                &ops,
+                &mut scratch,
+            );
+            assert_eq!(
+                batched[qi], serial,
+                "query {qi}: batched engine diverged from per-query path"
+            );
+        }
+    }
+
+    /// Degenerate batch shapes: empty batch and batch of one.
+    #[test]
+    fn batched_scanfirst_edge_shapes() {
+        let (_, idx) = setup(100, 8);
+        let ops = OpCounter::new();
+        let mut crude = Vec::new();
+        let none = search_scanfirst_batch(
+            &idx,
+            &Matrix::zeros(0, 16),
+            IcqSearchOpts::default(),
+            &ops,
+            &mut crude,
+        );
+        assert!(none.is_empty());
+        let one = search_scanfirst_batch(
+            &idx,
+            &Matrix::zeros(1, 16),
+            IcqSearchOpts { k: 5, margin_scale: 1.0 },
+            &ops,
+            &mut crude,
+        );
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].len(), 5);
     }
 
     #[test]

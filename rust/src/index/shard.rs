@@ -1,0 +1,314 @@
+//! Sharding: cut one [`EncodedIndex`] into contiguous block-range
+//! shards that independent workers (threads today, hosts tomorrow) can
+//! scan in parallel.
+//!
+//! A single flat [`BlockedCodes`] store caps both dataset size and
+//! single-query latency at one core's memory bandwidth. The blocked
+//! layout makes the cut points obvious: blocks are already the unit the
+//! dense sweeps iterate, so a shard is simply a contiguous run of
+//! blocks, re-assembled as a fully independent [`EncodedIndex`] (own
+//! blocked transpose, own row-major refine codes, shared codebook
+//! values). Every search executor runs on a shard unchanged.
+//!
+//! ```text
+//! flat index rows   0 ........................................... n
+//! blocks (B = 64)   |b0|b1|b2|b3|b4|b5|b6|b7|b8|b9|
+//! 3 shards          [ shard 0  ][ shard 1  ][ shard 2 (tail) ]
+//! ShardSpec         {start:0}    {start:256} {start:512}
+//! ```
+//!
+//! Hit ids inside a shard are shard-local rows; `spec.start` translates
+//! them back to global ids (the scatter-gather layer in
+//! [`crate::coordinator::gather`] does this before merging). Labels are
+//! sliced per shard, so label lookups never cross the gather boundary —
+//! only small top-k candidate lists do.
+//!
+//! [`BlockedCodes`]: super::blocked::BlockedCodes
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use super::encoded::EncodedIndex;
+
+/// One shard's contiguous global row range `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Global row id of the shard's first vector.
+    pub start: usize,
+    /// One past the shard's last global row id.
+    pub end: usize,
+}
+
+impl ShardSpec {
+    /// Vectors in the shard.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Whether the shard holds no vectors.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// How [`ShardedIndex::build`] chooses the cut points. Both policies
+/// cut on block boundaries of the parent index, so a shard's blocked
+/// layout is exactly a contiguous run of the parent's blocks (no block
+/// straddles two shards, and only final tail blocks are partial).
+#[derive(Clone, Copy, Debug)]
+pub enum ShardPolicy {
+    /// Split into (up to) this many shards of near-equal block count;
+    /// clamped to the number of blocks, so every shard is non-empty.
+    Count(usize),
+    /// Bound each shard's blocked-code storage to roughly this many
+    /// bytes (at least one block per shard).
+    MaxBytes(usize),
+}
+
+/// An [`EncodedIndex`] cut into contiguous shards, each an independent
+/// index (`Arc`-shared so per-shard workers can own a handle).
+///
+/// # Examples
+///
+/// ```
+/// use icq::core::{Matrix, Rng};
+/// use icq::index::shard::{ShardPolicy, ShardedIndex};
+/// use icq::index::EncodedIndex;
+/// use icq::quantizer::pq::{Pq, PqOpts};
+///
+/// let mut rng = Rng::new(1);
+/// let x = Matrix::from_fn(300, 8, |_, _| rng.normal_f32());
+/// let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 3, seed: 0 });
+/// let index = EncodedIndex::build(&pq, &x, vec![0; 300]);
+///
+/// let sharded = ShardedIndex::build(&index, ShardPolicy::Count(3)).unwrap();
+/// assert_eq!(sharded.num_shards(), 3);
+/// assert_eq!(sharded.len(), index.len());
+/// // shards tile the row space contiguously
+/// assert_eq!(sharded.spec(0).start, 0);
+/// assert_eq!(sharded.spec(2).end, 300);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ShardedIndex {
+    shards: Vec<Arc<EncodedIndex>>,
+    specs: Vec<ShardSpec>,
+}
+
+impl ShardedIndex {
+    /// Cut `index` by `policy` (block-aligned boundaries; see
+    /// [`ShardPolicy`]). An empty index yields one empty shard so the
+    /// serving topology stays well-formed.
+    pub fn build(index: &EncodedIndex, policy: ShardPolicy) -> Result<Self> {
+        let n = index.len();
+        let bs = index.blocked().block_size();
+        let nb = index.blocked().num_blocks();
+        let blocks_per_shard = match policy {
+            ShardPolicy::Count(c) => {
+                ensure!(c >= 1, "shard count must be >= 1");
+                nb.div_ceil(c).max(1)
+            }
+            ShardPolicy::MaxBytes(bytes) => {
+                ensure!(bytes >= 1, "bytes per shard must be >= 1");
+                let block_bytes =
+                    index.k() * bs * index.blocked().code_width_bits() / 8;
+                (bytes / block_bytes.max(1)).max(1)
+            }
+        };
+        let mut cuts = vec![0usize];
+        let mut b = blocks_per_shard;
+        while b < nb {
+            cuts.push(b * bs);
+            b += blocks_per_shard;
+        }
+        cuts.push(n);
+        Self::from_boundaries(index, &cuts)
+    }
+
+    /// Cut at explicit global row boundaries: `cuts[0] == 0`,
+    /// nondecreasing, `cuts.last() == n`; each consecutive pair is one
+    /// shard (a repeated boundary makes an empty shard). Interior cuts
+    /// need not be block-aligned — each shard re-blocks its own rows —
+    /// but [`ShardedIndex::build`] always produces aligned cuts.
+    pub fn from_boundaries(
+        index: &EncodedIndex,
+        cuts: &[usize],
+    ) -> Result<Self> {
+        ensure!(cuts.len() >= 2, "need at least one shard range");
+        ensure!(cuts[0] == 0, "first boundary must be 0, got {}", cuts[0]);
+        let last = *cuts.last().unwrap();
+        ensure!(
+            last == index.len(),
+            "last boundary {last} != index length {}",
+            index.len()
+        );
+        ensure!(
+            cuts.windows(2).all(|w| w[0] <= w[1]),
+            "boundaries must be nondecreasing: {cuts:?}"
+        );
+        let mut shards = Vec::with_capacity(cuts.len() - 1);
+        let mut specs = Vec::with_capacity(cuts.len() - 1);
+        for w in cuts.windows(2) {
+            specs.push(ShardSpec { start: w[0], end: w[1] });
+            shards.push(Arc::new(index.slice(w[0], w[1])));
+        }
+        Ok(ShardedIndex { shards, specs })
+    }
+
+    /// Number of shards (always >= 1).
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total vectors across all shards.
+    pub fn len(&self) -> usize {
+        self.specs.iter().map(|s| s.len()).sum()
+    }
+
+    /// Whether the sharded database holds no vectors.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Query dimensionality (same for every shard).
+    pub fn dim(&self) -> usize {
+        self.shards[0].dim()
+    }
+
+    /// Shard `s` as an independent index.
+    #[inline]
+    pub fn shard(&self, s: usize) -> &Arc<EncodedIndex> {
+        &self.shards[s]
+    }
+
+    /// Global row range of shard `s`.
+    #[inline]
+    pub fn spec(&self, s: usize) -> ShardSpec {
+        self.specs[s]
+    }
+
+    /// All shard row ranges, in shard order.
+    pub fn specs(&self) -> &[ShardSpec] {
+        &self.specs
+    }
+
+    /// All shards, in shard order (parallel to [`Self::specs`]).
+    pub fn shards(&self) -> &[Arc<EncodedIndex>] {
+        &self.shards
+    }
+
+    /// Translate a shard-local hit id back to a global row id.
+    #[inline]
+    pub fn to_global(&self, s: usize, local_id: u32) -> u32 {
+        self.specs[s].start as u32 + local_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Matrix, Rng};
+    use crate::quantizer::pq::{Pq, PqOpts};
+
+    fn index(n: usize, seed: u64) -> EncodedIndex {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(n, 8, |_, _| rng.normal_f32());
+        let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 3, seed: 0 });
+        EncodedIndex::build(&pq, &x, (0..n).map(|i| i as i32).collect())
+    }
+
+    #[test]
+    fn count_policy_tiles_block_aligned_shards() {
+        // n = 330, block 64 -> 6 blocks; 3 shards of 2 blocks each
+        let idx = index(330, 1);
+        let bs = idx.blocked().block_size();
+        let sh = ShardedIndex::build(&idx, ShardPolicy::Count(3)).unwrap();
+        assert_eq!(sh.num_shards(), 3);
+        assert_eq!(sh.len(), 330);
+        let mut expect_start = 0;
+        for s in 0..sh.num_shards() {
+            let spec = sh.spec(s);
+            assert_eq!(spec.start, expect_start);
+            assert_eq!(spec.start % bs, 0, "unaligned shard start");
+            assert_eq!(sh.shard(s).len(), spec.len());
+            expect_start = spec.end;
+        }
+        assert_eq!(expect_start, 330);
+        // shard rows and labels match the flat index
+        for s in 0..sh.num_shards() {
+            let spec = sh.spec(s);
+            for i in 0..spec.len() {
+                assert_eq!(
+                    sh.shard(s).labels[i],
+                    idx.labels[spec.start + i]
+                );
+                assert_eq!(sh.to_global(s, i as u32), (spec.start + i) as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn count_policy_clamps_to_block_count() {
+        // 2 blocks cannot make 10 shards
+        let idx = index(100, 2);
+        let sh = ShardedIndex::build(&idx, ShardPolicy::Count(10)).unwrap();
+        assert_eq!(sh.num_shards(), 2);
+        assert!(sh.specs().iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn max_bytes_policy_bounds_shard_storage() {
+        let idx = index(640, 3);
+        let bs = idx.blocked().block_size();
+        let block_bytes =
+            idx.k() * bs * idx.blocked().code_width_bits() / 8;
+        // room for exactly 2 blocks per shard -> 5 shards of <= 128 rows
+        let sh = ShardedIndex::build(
+            &idx,
+            ShardPolicy::MaxBytes(2 * block_bytes),
+        )
+        .unwrap();
+        assert_eq!(sh.num_shards(), 5);
+        for spec in sh.specs() {
+            assert!(spec.len() <= 2 * bs);
+        }
+        // tighter than one block still gives one block per shard
+        let sh1 = ShardedIndex::build(&idx, ShardPolicy::MaxBytes(1)).unwrap();
+        assert_eq!(sh1.num_shards(), idx.blocked().num_blocks());
+    }
+
+    #[test]
+    fn explicit_boundaries_allow_empty_and_unaligned_shards() {
+        let idx = index(130, 4);
+        let sh =
+            ShardedIndex::from_boundaries(&idx, &[0, 0, 65, 65, 130]).unwrap();
+        assert_eq!(sh.num_shards(), 4);
+        assert!(sh.spec(0).is_empty());
+        assert!(sh.spec(2).is_empty());
+        assert_eq!(sh.shard(1).len(), 65);
+        assert_eq!(sh.len(), 130);
+    }
+
+    #[test]
+    fn rejects_malformed_boundaries() {
+        let idx = index(50, 5);
+        assert!(ShardedIndex::from_boundaries(&idx, &[0]).is_err());
+        assert!(ShardedIndex::from_boundaries(&idx, &[1, 50]).is_err());
+        assert!(ShardedIndex::from_boundaries(&idx, &[0, 40]).is_err());
+        assert!(ShardedIndex::from_boundaries(&idx, &[0, 30, 20, 50]).is_err());
+        assert!(ShardedIndex::build(&idx, ShardPolicy::Count(0)).is_err());
+        assert!(ShardedIndex::build(&idx, ShardPolicy::MaxBytes(0)).is_err());
+    }
+
+    #[test]
+    fn empty_index_yields_one_empty_shard() {
+        let idx = index(30, 6).slice(0, 0);
+        let sh = ShardedIndex::build(&idx, ShardPolicy::Count(4)).unwrap();
+        assert_eq!(sh.num_shards(), 1);
+        assert!(sh.is_empty());
+        assert_eq!(sh.dim(), 8);
+    }
+}

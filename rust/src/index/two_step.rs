@@ -132,6 +132,76 @@ pub fn refine_from_crude_lb(
     })
 }
 
+/// Batched [`refine_from_crude`]: one refine per query over a shared
+/// query-major crude matrix (`crude[q * n + i]`, as produced by the
+/// LUT-major sweeps `BlockedCodes::partial_sums_batch_into` /
+/// `qlut::crude_sums_batch_into`). `luts[q]` is query `q`'s table; each
+/// query's slice is refined independently, so results are identical to
+/// `luts.len()` single-query calls.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_batch_from_crude(
+    codes: &Codes,
+    luts: &[Lut],
+    crude: &mut [f32],
+    fast_k: usize,
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Vec<Hit>> {
+    let n = codes.n();
+    assert_eq!(crude.len(), luts.len() * n);
+    if n == 0 {
+        return luts
+            .iter()
+            .map(|lut| {
+                refine_from_crude(
+                    codes, lut, &mut [], fast_k, k_books, margin, top_k, ops,
+                )
+            })
+            .collect();
+    }
+    luts.iter()
+        .zip(crude.chunks_mut(n))
+        .map(|(lut, cr)| {
+            refine_from_crude(
+                codes, lut, cr, fast_k, k_books, margin, top_k, ops,
+            )
+        })
+        .collect()
+}
+
+/// Batched [`refine_from_crude_lb`] — the lower-bound flavor of
+/// [`refine_batch_from_crude`], for the quantized LUT-major sweep.
+pub fn refine_batch_from_crude_lb(
+    codes: &Codes,
+    luts: &[Lut],
+    crude: &mut [f32],
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Vec<Hit>> {
+    let n = codes.n();
+    assert_eq!(crude.len(), luts.len() * n);
+    if n == 0 {
+        return luts
+            .iter()
+            .map(|lut| {
+                refine_from_crude_lb(
+                    codes, lut, &mut [], k_books, margin, top_k, ops,
+                )
+            })
+            .collect();
+    }
+    luts.iter()
+        .zip(crude.chunks_mut(n))
+        .map(|(lut, cr)| {
+            refine_from_crude_lb(codes, lut, cr, k_books, margin, top_k, ops)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -268,6 +338,61 @@ mod tests {
         // every refined candidate paid all K adds
         let s = ops.snapshot();
         assert_eq!(s.table_adds, s.refined * k as u64);
+    }
+
+    /// The batched refine must return exactly what per-query refines
+    /// return, slice by slice, for both the exact and lower-bound
+    /// flavors.
+    #[test]
+    fn batched_refine_matches_per_query_refine() {
+        let (n, k, m, nq) = (120usize, 3usize, 8usize, 4usize);
+        let mut rng = Rng::new(15);
+        let code_data: Vec<u16> =
+            (0..n * k).map(|_| rng.below(m) as u16).collect();
+        let codes = Codes::from_vec(n, k, code_data);
+        let luts: Vec<Lut> = (0..nq)
+            .map(|_| {
+                let data: Vec<f32> =
+                    (0..k * m).map(|_| rng.uniform_f32()).collect();
+                Lut::from_flat(k, m, data)
+            })
+            .collect();
+        let fast_k = 1;
+        let crude_of = |lut: &Lut| -> Vec<f32> {
+            (0..n)
+                .map(|i| lut.partial_sum(codes.row(i), 0, fast_k))
+                .collect()
+        };
+        let mut crude_mat: Vec<f32> =
+            luts.iter().flat_map(|l| crude_of(l)).collect();
+        let ops = OpCounter::new();
+        let batched = refine_batch_from_crude(
+            &codes, &luts, &mut crude_mat, fast_k, k, 0.1, 7, &ops,
+        );
+        assert_eq!(batched.len(), nq);
+        for (lut, hits) in luts.iter().zip(&batched) {
+            let mut cr = crude_of(lut);
+            let serial = refine_from_crude(
+                &codes, lut, &mut cr, fast_k, k, 0.1, 7, &ops,
+            );
+            assert_eq!(hits, &serial, "batched refine diverged");
+        }
+
+        // lower-bound flavor, same construction with shaved crude sums
+        let lb_of = |lut: &Lut| -> Vec<f32> {
+            crude_of(lut).iter().map(|c| c - 0.05).collect()
+        };
+        let mut lb_mat: Vec<f32> =
+            luts.iter().flat_map(|l| lb_of(l)).collect();
+        let batched_lb = refine_batch_from_crude_lb(
+            &codes, &luts, &mut lb_mat, k, 0.1, 7, &ops,
+        );
+        for (lut, hits) in luts.iter().zip(&batched_lb) {
+            let mut cr = lb_of(lut);
+            let serial =
+                refine_from_crude_lb(&codes, lut, &mut cr, k, 0.1, 7, &ops);
+            assert_eq!(hits, &serial, "batched lb refine diverged");
+        }
     }
 
     #[test]

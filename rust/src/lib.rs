@@ -12,7 +12,9 @@
 //! * [`eval`]        — MAP / precision / recall, ground truth, the
 //!                     unseen-classes protocol, effective code length;
 //! * [`coordinator`] — the serving layer: router, dynamic batcher,
-//!                     worker pool, metrics, backpressure;
+//!                     worker pool, metrics, backpressure, and the
+//!                     sharded scatter-gather core
+//!                     ([`coordinator::gather`]);
 //! * [`runtime`]     — PJRT/XLA artifact loading + execution (the AOT
 //!                     bridge to the JAX/Pallas compute graphs);
 //! * [`bench`]       — the figure/table regeneration harness;
@@ -21,6 +23,16 @@
 //! Python (JAX + Pallas) exists only at build time: `make artifacts`
 //! lowers the query-path graphs to HLO text and trains the joint model;
 //! the rust binary is self-contained afterwards.
+//!
+//! Two serving topologies share one engine: a flat index behind
+//! [`coordinator::NativeSearcher`], or the same index cut into
+//! contiguous block-range shards ([`index::shard`]) behind
+//! [`coordinator::ShardedSearcher`] — per-shard worker threads run the
+//! LUT-major batched two-step scan and a gather merges per-shard top-k
+//! lists with `(distance, id)` tie-breaking, bitwise identical to the
+//! flat scan. `ARCHITECTURE.md` at the repo root walks the full layer
+//! map, the data layouts, and the lower-bound invariant chain that
+//! makes the pruning safe.
 
 pub mod bench;
 pub mod config;

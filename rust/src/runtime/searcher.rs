@@ -6,10 +6,11 @@
 //! * [`XlaLutSearcher`] — LUTs built by the `lut_only` graph (the Pallas
 //!   `adc_lut` kernel through PJRT), scan + two-step prune native. This is
 //!   the default serving path: LUT build is the MXU-shaped part, the scan
-//!   is branchy and stays on the host — on narrow (u8-code) indexes it
-//!   runs the quantized blocked crude sweep (`search_scanfirst_qlut`,
-//!   u8 LUT + u16 accumulators, SIMD on AVX2), falling back to the f32
-//!   blocked sweep on wide indexes.
+//!   is branchy and stays on the host — the whole batch of graph-built
+//!   LUTs feeds the LUT-major batched sweep
+//!   (`search_scanfirst_batch_with_luts`): quantized (u8 LUT + u16
+//!   accumulators, SIMD on AVX2) on narrow indexes, f32 blocked on wide
+//!   ones, each code block read once per batch tile.
 //! * [`XlaScanSearcher`] — additionally runs the crude pass through the
 //!   `scan_f{fast_k}` graph (the Pallas `icq_scan` kernel) over padded
 //!   code blocks, then refines natively through the shared
@@ -82,20 +83,17 @@ impl BatchSearcher for XlaLutSearcher {
     fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
         let luts = luts_for(&self.svc, &self.index, self.batch, queries)
             .expect("pjrt lut batch");
-        // blocked (and, on narrow indexes, quantized) crude sweep per
-        // LUT; the n-sized crude scratch is reused across the batch.
+        // LUT-major batched sweep over the PJRT-built LUTs: each code
+        // block is read once per batch tile, quantized (u8 LUT) on
+        // narrow indexes, f32 otherwise; one crude scratch per batch.
         let mut crude = Vec::new();
-        luts.iter()
-            .map(|lut| {
-                search_icq::search_scanfirst_qlut(
-                    &self.index,
-                    lut,
-                    IcqSearchOpts { k: top_k, ..self.opts },
-                    &self.ops,
-                    &mut crude,
-                )
-            })
-            .collect()
+        search_icq::search_scanfirst_batch_with_luts(
+            &self.index,
+            &luts,
+            IcqSearchOpts { k: top_k, ..self.opts },
+            &self.ops,
+            &mut crude,
+        )
     }
 
     fn dim(&self) -> usize {

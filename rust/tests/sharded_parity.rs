@@ -1,0 +1,236 @@
+//! Sharded scatter-gather parity suite: the sharded serving core must
+//! return *identical* `(distance, id)`-ordered top-k to the flat
+//! single-shard path — not merely close — across shard counts (1/2/7),
+//! unaligned and tail-block shard boundaries, empty shards, top-k
+//! larger than a shard, ICQ (sigma > 0) and PQ (fast_k == K) indexes,
+//! and the wide-m f32 fallback. Also asserts the batched LUT-major
+//! sweep is bitwise equal to the per-query sweep through the public
+//! serving surface.
+//!
+//! Why exactness is the right bar: every executor selects hits through
+//! the canonical `(distance, id)` top-k, shards recompute the same f32
+//! distances as the flat scan (same LUT values, same books-ascending
+//! accumulation), and the eq. 11 margin makes the two-step prune
+//! lossless — so flat and sharded both reduce to "the k smallest
+//! `(distance, id)` pairs of the database" and must agree bit for bit.
+
+use icq::config::SearchConfig;
+use icq::coordinator::{BatchSearcher, NativeSearcher, ShardedSearcher};
+use icq::core::{Hit, Matrix, Rng};
+use icq::data::format::TensorPack;
+use icq::index::shard::{ShardPolicy, ShardedIndex};
+use icq::index::{EncodedIndex, OpCounter};
+use icq::quantizer::icq::{Icq, IcqOpts};
+use icq::quantizer::pq::{Pq, PqOpts};
+use std::sync::Arc;
+
+fn hetero(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(n, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 3.0 } else { 0.4 }
+    })
+}
+
+fn icq_index(n: usize, seed: u64) -> EncodedIndex {
+    let x = hetero(n, 16, seed);
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k: 8, m: 16, fast_k: 2, kmeans_iters: 6, prior_steps: 100, seed },
+    );
+    EncodedIndex::build_icq(&icq, &x, (0..n).map(|i| i as i32).collect())
+}
+
+fn pq_index(n: usize, seed: u64) -> EncodedIndex {
+    let x = hetero(n, 16, seed);
+    let pq = Pq::train(&x, PqOpts { k: 4, m: 16, iters: 5, seed });
+    EncodedIndex::build(&pq, &x, (0..n).map(|i| i as i32).collect())
+}
+
+fn queries(nq: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(nq, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 2.0 } else { 0.5 }
+    })
+}
+
+/// Flat baseline through the same serving surface (NativeSearcher).
+fn flat_results(
+    index: &EncodedIndex,
+    qs: &Matrix,
+    top_k: usize,
+) -> Vec<Vec<Hit>> {
+    let s = NativeSearcher::new(
+        Arc::new(index.clone()),
+        SearchConfig::default(),
+    );
+    s.search_batch(qs, top_k)
+}
+
+fn assert_identical(
+    flat: &[Vec<Hit>],
+    sharded: &[Vec<Hit>],
+    label: &str,
+) {
+    assert_eq!(flat.len(), sharded.len(), "{label}: batch size mismatch");
+    for (qi, (f, s)) in flat.iter().zip(sharded).enumerate() {
+        assert_eq!(
+            f, s,
+            "{label}: query {qi} sharded top-k != flat top-k"
+        );
+    }
+}
+
+#[test]
+fn sharded_matches_flat_across_shard_counts() {
+    let index = icq_index(600, 1);
+    let qs = queries(6, 16, 2);
+    let flat = flat_results(&index, &qs, 10);
+    for shards in [1usize, 2, 7] {
+        let s = ShardedSearcher::from_index(
+            &index,
+            ShardPolicy::Count(shards),
+            SearchConfig::default(),
+        )
+        .unwrap();
+        let got = s.search_batch(&qs, 10);
+        assert_identical(&flat, &got, &format!("{shards} shards"));
+    }
+}
+
+#[test]
+fn sharded_matches_flat_on_pq_index() {
+    // fast_k == K, sigma == 0: the crude pass IS the full distance
+    let index = pq_index(400, 3);
+    let qs = queries(5, 16, 4);
+    let flat = flat_results(&index, &qs, 8);
+    for shards in [2usize, 5] {
+        let s = ShardedSearcher::from_index(
+            &index,
+            ShardPolicy::Count(shards),
+            SearchConfig::default(),
+        )
+        .unwrap();
+        assert_identical(&flat, &s.search_batch(&qs, 8), "pq sharded");
+    }
+}
+
+/// Unaligned cuts, a 1-vector shard, empty shards, and boundaries
+/// crossing the flat index's tail block must all merge back exactly.
+#[test]
+fn sharded_matches_flat_with_irregular_boundaries() {
+    let index = icq_index(599, 5);
+    let qs = queries(4, 16, 6);
+    let flat = flat_results(&index, &qs, 12);
+    for cuts in [
+        vec![0usize, 64, 65, 300, 599],        // 1-vector shard
+        vec![0, 0, 250, 250, 599],             // leading + interior empty
+        vec![0, 17, 130, 512, 598, 599],       // unaligned + tail block
+        vec![0, 599],                          // single shard, odd n
+    ] {
+        let sharded = ShardedIndex::from_boundaries(&index, &cuts).unwrap();
+        let s = ShardedSearcher::start(sharded, SearchConfig::default());
+        assert_identical(
+            &flat,
+            &s.search_batch(&qs, 12),
+            &format!("cuts {cuts:?}"),
+        );
+    }
+}
+
+/// top_k larger than individual shards (and larger than the whole
+/// database): every shard contributes everything it has, and the merge
+/// must still equal the flat ranking.
+#[test]
+fn sharded_matches_flat_when_k_exceeds_shard_size() {
+    let index = icq_index(150, 7);
+    let qs = queries(3, 16, 8);
+    // 3 blocks -> 3 shards of <= 64 rows each; ask for 100 > shard size
+    let s = ShardedSearcher::from_index(
+        &index,
+        ShardPolicy::Count(3),
+        SearchConfig::default(),
+    )
+    .unwrap();
+    let flat = flat_results(&index, &qs, 100);
+    assert_identical(&flat, &s.search_batch(&qs, 100), "k > shard size");
+
+    // k beyond the database: both sides return all 150, same order
+    let flat_all = flat_results(&index, &qs, 500);
+    let got_all = s.search_batch(&qs, 500);
+    assert_eq!(got_all[0].len(), 150);
+    assert_identical(&flat_all, &got_all, "k > n");
+}
+
+/// Wide-m (u16 codes) indexes take the f32 fallback sweep inside every
+/// shard; parity must hold there too.
+#[test]
+fn sharded_matches_flat_on_wide_index_fallback() {
+    let (n, k, m, d) = (300usize, 3usize, 300usize, 6usize);
+    let mut rng = Rng::new(9);
+    let cb: Vec<f32> = (0..k * m * d).map(|_| rng.normal_f32()).collect();
+    let codes: Vec<i32> = (0..n * k).map(|_| rng.below(m) as i32).collect();
+    let mut pack = TensorPack::new();
+    pack.insert_f32("codebooks", vec![k, m, d], cb);
+    pack.insert_i32("codes", vec![n, k], codes);
+    pack.insert_i32("fast_k", vec![1], vec![1]);
+    pack.insert_f32("sigma", vec![1], vec![0.5]);
+    pack.insert_i32("labels", vec![n], vec![0; n]);
+    let index = EncodedIndex::from_pack(&pack).unwrap();
+    assert!(index.blocked().as_u8().is_none(), "m=300 must store u16");
+
+    let qs = queries(4, d, 10);
+    let flat = flat_results(&index, &qs, 9);
+    let s = ShardedSearcher::from_index(
+        &index,
+        ShardPolicy::Count(4),
+        SearchConfig::default(),
+    )
+    .unwrap();
+    assert_identical(&flat, &s.search_batch(&qs, 9), "wide fallback");
+}
+
+/// An entirely empty database served sharded: no hits, no panic.
+#[test]
+fn sharded_empty_database_returns_no_hits() {
+    let index = icq_index(100, 11).slice(0, 0);
+    let s = ShardedSearcher::start(
+        ShardedIndex::build(&index, ShardPolicy::Count(3)).unwrap(),
+        SearchConfig::default(),
+    );
+    let res = s.search_batch(&queries(2, 16, 12), 5);
+    assert_eq!(res.len(), 2);
+    assert!(res.iter().all(|h| h.is_empty()));
+}
+
+/// The batched LUT-major sweep vs the per-query path, through the
+/// public serving surface: NativeSearcher (batched engine) must be
+/// bitwise equal to per-query scanfirst for every batch size, incl.
+/// batches above the engine's internal tile (32).
+#[test]
+fn batched_lut_major_sweep_is_bitwise_equal_to_per_query() {
+    let index = icq_index(500, 13);
+    let searcher =
+        NativeSearcher::new(Arc::new(index.clone()), SearchConfig::default());
+    for nq in [1usize, 8, 40] {
+        let qs = queries(nq, 16, 14 + nq as u64);
+        let batched = searcher.search_batch(&qs, 10);
+        let ops = OpCounter::new();
+        let mut scratch = Vec::new();
+        for qi in 0..nq {
+            let serial = icq::index::search_icq::search_scanfirst_query_qlut(
+                &index,
+                qs.row(qi),
+                icq::index::search_icq::IcqSearchOpts {
+                    k: 10,
+                    margin_scale: 1.0,
+                },
+                &ops,
+                &mut scratch,
+            );
+            assert_eq!(
+                batched[qi], serial,
+                "batch={nq} query {qi}: LUT-major sweep diverged"
+            );
+        }
+    }
+}
