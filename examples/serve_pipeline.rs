@@ -44,7 +44,11 @@ impl XlaPipelineSearcher {
 }
 
 impl BatchSearcher for XlaPipelineSearcher {
-    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
+    fn search_batch(
+        &self,
+        queries: &Matrix,
+        top_k: usize,
+    ) -> Result<Vec<Vec<Hit>>> {
         let (k, m, d) = (self.index.k(), self.index.m(), self.index.dim());
         let chunk = self.export_batch();
         let mut out = Vec::with_capacity(queries.rows());
@@ -66,7 +70,7 @@ impl BatchSearcher for XlaPipelineSearcher {
                     d,
                     &sub,
                 )
-                .expect("pjrt pipeline execution");
+                .context("pjrt pipeline execution")?;
             out.extend(luts.into_iter().map(|flat| {
                 let lut = Lut::from_flat(k, m, flat);
                 search_icq::search_with_lut(
@@ -78,7 +82,7 @@ impl BatchSearcher for XlaPipelineSearcher {
             }));
             start += len;
         }
-        out
+        Ok(out)
     }
 
     fn dim(&self) -> usize {
@@ -128,7 +132,7 @@ fn main() -> Result<()> {
     // full stack and compute MAP against the bundled database labels
     let nq = bundle.test_x.rows().min(96);
     let queries = Matrix::from_fn(nq, d_in, |i, j| bundle.test_x.get(i, j));
-    let results = searcher.search_batch(&queries, 50);
+    let results = searcher.search_batch(&queries, 50)?;
     let map = eval::mean_average_precision(
         &results,
         &bundle.test_labels[..nq],
@@ -147,7 +151,13 @@ fn main() -> Result<()> {
     // serve under closed-loop load through the coordinator
     let coord = Arc::new(Coordinator::start(
         searcher,
-        ServeConfig { max_batch: 16, max_wait_us: 300, workers: 2, max_inflight: 1024 },
+        ServeConfig {
+            max_batch: 16,
+            max_wait_us: 300,
+            workers: 2,
+            max_inflight: 1024,
+            ..ServeConfig::default()
+        },
     ));
     let test_x = bundle.test_x.clone();
     let tput = closed_loop_load(

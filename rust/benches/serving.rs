@@ -24,7 +24,11 @@ struct AdcSearcher {
 }
 
 impl BatchSearcher for AdcSearcher {
-    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
+    fn search_batch(
+        &self,
+        queries: &Matrix,
+        top_k: usize,
+    ) -> anyhow::Result<Vec<Vec<Hit>>> {
         let mut out = Vec::with_capacity(queries.rows());
         for qi in 0..queries.rows() {
             out.push(search_adc::search(
@@ -34,7 +38,7 @@ impl BatchSearcher for AdcSearcher {
                 &self.ops,
             ));
         }
-        out
+        Ok(out)
     }
 
     fn dim(&self) -> usize {
@@ -195,6 +199,7 @@ fn main() {
                 max_wait_us: 200,
                 workers: 4,
                 max_inflight: 4096,
+                ..ServeConfig::default()
             },
         ));
         let cs = centers.clone();
@@ -227,8 +232,8 @@ fn main() {
             m
         };
         assert_eq!(
-            searcher.search_batch(&probe, 10),
-            flat.search_batch(&probe, 10),
+            searcher.search_batch(&probe, 10).unwrap(),
+            flat.search_batch(&probe, 10).unwrap(),
             "sharded top-k diverged from flat at {shards} shards"
         );
         let coord = Arc::new(Coordinator::start(
@@ -238,6 +243,7 @@ fn main() {
                 max_wait_us: 200,
                 workers: 1,
                 max_inflight: 4096,
+                ..ServeConfig::default()
             },
         ));
         let cs = centers.clone();
@@ -265,6 +271,7 @@ fn main() {
                 max_wait_us: 200,
                 workers: 4,
                 max_inflight: 4096,
+                ..ServeConfig::default()
             },
         ));
         let cs = centers.clone();

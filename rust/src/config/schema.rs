@@ -57,7 +57,7 @@ impl Default for SearchConfig {
 }
 
 /// Serving-layer knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// max queries folded into one batch.
     pub max_batch: usize,
@@ -67,6 +67,14 @@ pub struct ServeConfig {
     pub workers: usize,
     /// admission-control bound on in-flight queries.
     pub max_inflight: usize,
+    /// local shards this process serves: 1 = the flat `NativeSearcher`,
+    /// >= 2 = a `ShardedSearcher` over that many local block-range
+    /// shards, 0 = no local shard (pure gateway over `remote_shards`).
+    pub shards: usize,
+    /// remote shard servers ("host:port" per entry, comma-separated in
+    /// config files), gathered alongside the local shards over the
+    /// binary wire protocol.
+    pub remote_shards: Vec<String>,
 }
 
 impl Default for ServeConfig {
@@ -76,6 +84,8 @@ impl Default for ServeConfig {
             max_wait_us: 200,
             workers: 2,
             max_inflight: 1024,
+            shards: 1,
+            remote_shards: Vec::new(),
         }
     }
 }
@@ -171,6 +181,15 @@ impl EngineConfig {
             "serve.max_wait_us" => self.serve.max_wait_us = value.parse()?,
             "serve.workers" => self.serve.workers = parse_usize(value)?,
             "serve.max_inflight" => self.serve.max_inflight = parse_usize(value)?,
+            "serve.shards" => self.serve.shards = parse_usize(value)?,
+            "serve.remote_shards" => {
+                self.serve.remote_shards = value
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect();
+            }
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             other => anyhow::bail!("unknown config key '{other}'"),
         }
@@ -208,6 +227,28 @@ mod tests {
         assert_eq!(c.method, MethodKind::Pq);
         assert_eq!(c.search.top_k, 50);
         assert_eq!(c.serve.max_batch, 32);
+    }
+
+    #[test]
+    fn parses_sharding_keys() {
+        let c = EngineConfig::from_str_pairs(
+            "serve.shards = 4\n\
+             serve.remote_shards = 10.0.0.1:7979, 10.0.0.2:7979,\n",
+        )
+        .unwrap();
+        assert_eq!(c.serve.shards, 4);
+        assert_eq!(
+            c.serve.remote_shards,
+            vec!["10.0.0.1:7979".to_string(), "10.0.0.2:7979".to_string()]
+        );
+        // defaults: one local flat shard, no remotes
+        let d = EngineConfig::default();
+        assert_eq!(d.serve.shards, 1);
+        assert!(d.serve.remote_shards.is_empty());
+        // an explicitly empty remote list parses to no remotes
+        let e =
+            EngineConfig::from_str_pairs("serve.remote_shards =\n").unwrap();
+        assert!(e.serve.remote_shards.is_empty());
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! The per-shard search contract behind the scatter-gather layer.
+//!
+//! [`ShardedSearcher`](super::gather::ShardedSearcher) fans a query
+//! batch out to a set of backends and merges their per-query top-k
+//! lists. A backend is *one shard's* executor: it runs the batched
+//! LUT-major two-step over its own `EncodedIndex` rows and returns
+//! `(distance, id)` top-k lists with **global** row ids. Where those
+//! rows live is the backend's business:
+//!
+//! * [`LocalShardBackend`] — the rows are in this process; runs the
+//!   batched engine directly over an `Arc`'d shard (PR 3's worker-thread
+//!   body, extracted behind the trait).
+//! * [`RemoteShardBackend`](super::wire::RemoteShardBackend) — the rows
+//!   live in a `shard-server` process (possibly on another host); the
+//!   same request crosses a length-prefixed binary protocol
+//!   ([`super::wire`]) and the server runs the identical engine.
+//!
+//! Because every backend computes the same f32 distances the flat scan
+//! computes (same codebooks → bitwise-identical LUTs, same
+//! books-ascending accumulation) and selects through the canonical
+//! `(distance, id)` top-k, the gather's merge stays bitwise identical to
+//! the flat single-process path no matter how backends are placed.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::SearchConfig;
+use crate::core::{Hit, Matrix};
+use crate::index::lut::Lut;
+use crate::index::search_icq::{self, IcqSearchOpts};
+use crate::index::{EncodedIndex, OpCounter};
+
+/// One scattered unit of work: the batch's query vectors plus (when the
+/// gather has a local LUT source) the prebuilt per-query LUTs. Local
+/// backends consume the shared LUTs — built exactly once per batch, as
+/// every shard shares the same codebook values — while remote backends
+/// serialize the raw vectors and let the shard server rebuild identical
+/// LUTs from its own (equal-valued) codebooks.
+#[derive(Clone, Debug)]
+pub struct ShardJob {
+    /// The batch's query vectors, one row per query.
+    pub queries: Arc<Matrix>,
+    /// Prebuilt per-query LUTs (`luts.len() == queries.rows()`), or
+    /// empty when the gather has no local shard to build them against.
+    pub luts: Arc<Vec<Lut>>,
+    /// Neighbors requested per query.
+    pub top_k: usize,
+}
+
+/// A shard executor the gather can scatter to. Implementations own
+/// whatever state the shard needs (an index, a TCP connection) and are
+/// driven from a dedicated gather-owned worker thread, so `search` takes
+/// `&mut self` and may block.
+///
+/// # Contract
+///
+/// `search` must return exactly `job.queries.rows()` hit lists, each the
+/// shard's k smallest `(distance, global id)` pairs in canonical order —
+/// or an error. Errors are **surfaced**, not papered over: a failed
+/// backend fails the whole batch (no silent partial top-k), because a
+/// gather that quietly drops a shard returns wrong answers that look
+/// right.
+pub trait ShardBackend: Send + 'static {
+    /// Human-readable identity for error messages and logs
+    /// (e.g. `"local shard rows [0, 256)"`, `"remote shard host:port"`).
+    fn describe(&self) -> String;
+
+    /// Execute the batched two-step over this backend's shard.
+    fn search(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>>;
+}
+
+/// In-process shard executor: the batched LUT-major two-step engine over
+/// an `Arc`'d [`EncodedIndex`] slice, with hit ids translated by the
+/// shard's global start row. This is exactly the body the PR 3 shard
+/// worker threads ran; the trait boundary just lets the same gather mix
+/// it with remote backends.
+pub struct LocalShardBackend {
+    start: usize,
+    shard: Arc<EncodedIndex>,
+    opts: IcqSearchOpts,
+    ops: Arc<OpCounter>,
+    /// per-backend crude scratch, reused across batches.
+    crude: Vec<f32>,
+}
+
+impl LocalShardBackend {
+    /// A backend over `shard`, whose first row is global row `start`.
+    /// `ops` accumulates this shard's scan/refine counters (share one
+    /// across backends for whole-database totals).
+    pub fn new(
+        start: usize,
+        shard: Arc<EncodedIndex>,
+        cfg: SearchConfig,
+        ops: Arc<OpCounter>,
+    ) -> Self {
+        LocalShardBackend {
+            start,
+            shard,
+            opts: IcqSearchOpts {
+                k: cfg.top_k,
+                margin_scale: cfg.margin_scale,
+            },
+            ops,
+            crude: Vec::new(),
+        }
+    }
+
+    /// The shard's global row range start.
+    pub fn start(&self) -> usize {
+        self.start
+    }
+}
+
+impl ShardBackend for LocalShardBackend {
+    fn describe(&self) -> String {
+        format!(
+            "local shard rows [{}, {})",
+            self.start,
+            self.start + self.shard.len()
+        )
+    }
+
+    fn search(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
+        let opts = IcqSearchOpts { k: job.top_k, ..self.opts };
+        let mut hits = if job.luts.len() == job.queries.rows() {
+            search_icq::search_scanfirst_batch_with_luts(
+                &self.shard,
+                &job.luts,
+                opts,
+                &self.ops,
+                &mut self.crude,
+            )
+        } else {
+            // no shared LUTs (all-remote gather running a lone local
+            // backend): build our own, charging the LUT-build flops here
+            search_icq::search_scanfirst_batch(
+                &self.shard,
+                &job.queries,
+                opts,
+                &self.ops,
+                &mut self.crude,
+            )
+        };
+        for per_query in &mut hits {
+            for h in per_query {
+                h.id += self.start as u32;
+            }
+        }
+        Ok(hits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+    use crate::quantizer::pq::{Pq, PqOpts};
+
+    fn index(n: usize) -> EncodedIndex {
+        let mut rng = Rng::new(3);
+        let x = Matrix::from_fn(n, 8, |_, _| rng.normal_f32());
+        let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 4, seed: 0 });
+        EncodedIndex::build(&pq, &x, (0..n).map(|i| i as i32).collect())
+    }
+
+    #[test]
+    fn local_backend_globalizes_ids_with_and_without_shared_luts() {
+        let idx = index(200);
+        let shard = Arc::new(idx.slice(64, 200));
+        let mut backend = LocalShardBackend::new(
+            64,
+            shard.clone(),
+            SearchConfig::default(),
+            Arc::new(OpCounter::new()),
+        );
+        assert!(backend.describe().contains("[64, 200)"));
+        let queries = Arc::new(Matrix::from_fn(3, 8, |i, _| i as f32 * 0.2));
+        let luts: Vec<Lut> = (0..3)
+            .map(|qi| {
+                Lut::build(shard.lut_ctx(), shard.codebooks(), queries.row(qi))
+            })
+            .collect();
+        let with_luts = backend
+            .search(&ShardJob {
+                queries: queries.clone(),
+                luts: Arc::new(luts),
+                top_k: 5,
+            })
+            .unwrap();
+        let without_luts = backend
+            .search(&ShardJob {
+                queries: queries.clone(),
+                luts: Arc::new(Vec::new()),
+                top_k: 5,
+            })
+            .unwrap();
+        assert_eq!(with_luts, without_luts, "LUT sharing changed results");
+        for hits in &with_luts {
+            assert_eq!(hits.len(), 5);
+            for h in hits {
+                assert!(
+                    (64..200).contains(&(h.id as usize)),
+                    "id {} not in the shard's global range",
+                    h.id
+                );
+            }
+        }
+    }
+}

@@ -1,137 +1,149 @@
-//! Scatter-gather over a sharded index: fan each query batch to
-//! per-shard workers, run the two-step crude+refine locally on every
-//! shard, and merge the per-shard top-k lists into global results.
+//! Scatter-gather over a set of shard backends: fan each query batch to
+//! per-backend workers, run the two-step crude+refine on every shard
+//! (in-process or across the wire), and merge the per-shard top-k lists
+//! into global results.
 //!
 //! ```text
-//!                    scatter                      gather
-//! query batch ──┬──> shard worker 0 (rows [0, s1))  ──┐
-//!               ├──> shard worker 1 (rows [s1, s2)) ──┼─> merge top-k
-//!               └──> shard worker 2 (rows [s2, n))  ──┘   (dist, id)
+//!                     scatter                            gather
+//! query batch ──┬──> backend 0: local shard  [0, s1)      ──┐
+//!               ├──> backend 1: local shard  [s1, s2)     ──┼─> merge
+//!               └──> backend 2: remote shard host:port    ──┘  top-k
+//!                    (wire protocol -> shard-server)         (dist, id)
 //! ```
 //!
-//! Each shard worker is a persistent OS thread owning one
-//! [`EncodedIndex`] shard. The gather builds each query's LUT exactly
-//! once per batch (shards `Arc`-share one set of codebooks, so the
-//! tables are identical everywhere) and scatters the `Arc`'d LUT batch;
-//! inside a worker the batch runs through the LUT-major batched engine
-//! (`search_icq::search_scanfirst_batch_with_luts`), so every resident
-//! code block is swept with the whole batch of query LUTs before the
-//! sweep moves on. Only the per-shard top-k candidate lists cross the
-//! gather boundary — the expensive refine work stays shard-local (the
-//! Composite Quantization serving argument), and with block-granular
-//! shards this is the topology that scales the crude pass past one
-//! core's memory bandwidth.
+//! Each backend ([`ShardBackend`]) is owned by a persistent OS thread.
+//! The gather builds each query's LUT exactly once per batch when any
+//! local backend exists (local shards `Arc`-share one set of codebooks,
+//! so the tables are identical everywhere) and scatters one `Arc`'d
+//! [`ShardJob`]; local backends sweep the shared LUTs through the
+//! LUT-major batched engine, remote backends forward the raw vectors
+//! and the shard server rebuilds bitwise-identical LUTs from its
+//! equal-valued codebooks. Only the per-shard top-k candidate lists
+//! cross the gather boundary — the expensive refine work stays
+//! shard-local (the Composite Quantization serving argument), and with
+//! block-granular shards this is the topology that scales the crude
+//! pass past one core's memory bandwidth — and, over the wire, past one
+//! machine.
 //!
 //! ## Why the merge is exact
 //!
 //! Every search executor selects hits through the canonical
 //! `(distance, id)` top-k ([`crate::core::TopK`]), and a shard computes
 //! the *same* f32 distance for a vector as the flat scan does (same
-//! LUT, same books-ascending accumulation). The per-shard top-k lists
-//! are therefore exactly "the k smallest `(distance, global id)` pairs
-//! of each row range", and merging them by the same order and keeping
-//! the k smallest reproduces the flat scan's result bit for bit — see
-//! [`merge_topk`] and the sharded parity suite.
+//! LUT values, same books-ascending accumulation) — locally or behind
+//! the wire protocol. The per-shard top-k lists are therefore exactly
+//! "the k smallest `(distance, global id)` pairs of each row range",
+//! and merging them by the same order and keeping the k smallest
+//! reproduces the flat scan's result bit for bit — see [`merge_topk`]
+//! and the sharded/loopback parity suites.
+//!
+//! ## Failure semantics
+//!
+//! A backend that fails (dead worker, refused connection, mid-stream
+//! disconnect, corrupt frame, version mismatch) fails the **whole
+//! batch** with a structured error naming the backend: a gather that
+//! silently dropped a shard would return confidently wrong top-k lists.
 
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::Arc;
 
+use anyhow::Result;
+
+use super::backend::{LocalShardBackend, ShardBackend, ShardJob};
 use super::worker::BatchSearcher;
 use crate::config::SearchConfig;
 use crate::core::{Hit, Matrix};
 use crate::index::lut::Lut;
-use crate::index::search_icq::{self, IcqSearchOpts};
 use crate::index::shard::{ShardPolicy, ShardedIndex};
 use crate::index::{EncodedIndex, OpCounter};
 
-/// One scatter to a shard worker: a shared view of the batch's prebuilt
-/// query LUTs plus the reply channel of this gather. LUTs are built
-/// ONCE per batch by the gather (every shard shares the same codebook
-/// values, so the tables are identical across shards) — workers only
-/// sweep and refine.
-struct ShardJob {
-    luts: Arc<Vec<Lut>>,
-    top_k: usize,
-    reply: SyncSender<ShardReply>,
+pub use crate::core::topk::merge_topk;
+
+/// One scattered unit: the shared job plus this gather's reply channel.
+struct BackendJob {
+    job: Arc<ShardJob>,
+    reply: SyncSender<(usize, Result<Vec<Vec<Hit>>>)>,
 }
 
-/// One shard's answer: per-query hit lists, ids already global.
-struct ShardReply {
-    hits: Vec<Vec<Hit>>,
-}
-
-/// Merge per-shard top-k lists into the global top-k, ordered by the
-/// canonical `(distance, id)` key — the same order every executor's
-/// [`crate::core::TopK`] selects by, which is what makes sharded
-/// results bitwise identical to the flat scan.
-///
-/// # Examples
-///
-/// ```
-/// use icq::coordinator::gather::merge_topk;
-/// use icq::core::Hit;
-///
-/// let shard0 = vec![Hit { id: 3, dist: 0.5 }, Hit { id: 1, dist: 2.0 }];
-/// let shard1 = vec![Hit { id: 9, dist: 1.0 }, Hit { id: 4, dist: 2.0 }];
-/// let merged = merge_topk(&[shard0, shard1], 3);
-/// assert_eq!(
-///     merged.iter().map(|h| h.id).collect::<Vec<_>>(),
-///     vec![3, 9, 1] // 2.0 tie broken toward the smaller id
-/// );
-/// ```
-pub fn merge_topk(lists: &[Vec<Hit>], top_k: usize) -> Vec<Hit> {
-    let mut all: Vec<Hit> =
-        lists.iter().flat_map(|l| l.iter().copied()).collect();
-    all.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id)));
-    all.truncate(top_k);
-    all
-}
-
-/// A [`BatchSearcher`] that serves a [`ShardedIndex`] scatter-gather:
-/// one persistent worker thread per shard, each running the LUT-major
-/// batched two-step engine over its own rows.
+/// A [`BatchSearcher`] that serves a set of [`ShardBackend`]s
+/// scatter-gather: one persistent worker thread per backend, each
+/// running its shard's batched two-step — in-process for
+/// [`LocalShardBackend`]s, over the wire protocol for
+/// [`RemoteShardBackend`]s — with results merged by the canonical
+/// `(distance, id)` order.
 ///
 /// The worker threads exit when the searcher is dropped (their job
-/// channels disconnect). A shard worker that died (panicked) is skipped
-/// at scatter time; the merged result then covers the remaining shards
-/// — degraded, never wedged.
+/// channels disconnect).
+///
+/// [`RemoteShardBackend`]: super::wire::RemoteShardBackend
 pub struct ShardedSearcher {
-    jobs: Vec<SyncSender<ShardJob>>,
-    /// Any one shard, kept for its (`Arc`-shared) codebooks/LUT context:
-    /// the gather builds each batch's LUTs once against it instead of
-    /// once per shard.
-    lut_source: Arc<EncodedIndex>,
+    jobs: Vec<SyncSender<BackendJob>>,
+    /// `describe()` of each backend, for structured gather errors.
+    names: Vec<String>,
+    /// Any one local shard, kept for its (`Arc`-shared) codebooks/LUT
+    /// context: the gather builds each batch's LUTs once against it
+    /// instead of once per shard. `None` in an all-remote topology —
+    /// the shard servers build their own (identical) LUTs.
+    lut_source: Option<Arc<EncodedIndex>>,
     dim: usize,
-    /// Shared op counters, aggregated across every shard worker.
-    /// `table_adds`/`candidates`/`refined` sum to whole-database totals
-    /// (each shard contributes its rows) and LUT-build `flops` are
-    /// charged once per batch; `queries` counts per-shard executions,
-    /// i.e. batch size x shard count.
+    /// Shared op counters, aggregated across every local shard worker.
+    /// `table_adds`/`candidates`/`refined` sum local-shard totals and
+    /// LUT-build `flops` are charged once per batch; remote shards do
+    /// their counting in their own process, so an all-remote gather
+    /// only accrues `queries`.
     pub ops: Arc<OpCounter>,
 }
 
 impl ShardedSearcher {
-    /// Spawn one worker thread per shard of `index`.
+    /// Serve an arbitrary mix of backends. `lut_source` enables the
+    /// build-LUTs-once optimization for local backends (pass any local
+    /// shard; all share codebook values); `dim` is the query
+    /// dimensionality every backend must agree on.
+    pub fn from_backends(
+        backends: Vec<Box<dyn ShardBackend>>,
+        lut_source: Option<Arc<EncodedIndex>>,
+        dim: usize,
+        ops: Arc<OpCounter>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            !backends.is_empty(),
+            "a sharded searcher needs at least one backend"
+        );
+        let names: Vec<String> =
+            backends.iter().map(|b| b.describe()).collect();
+        let mut jobs = Vec::with_capacity(backends.len());
+        for (bid, mut backend) in backends.into_iter().enumerate() {
+            let (tx, rx) = mpsc::sync_channel::<BackendJob>(4);
+            jobs.push(tx);
+            std::thread::Builder::new()
+                .name(format!("icq-shard-{bid}"))
+                .spawn(move || run_backend_worker(bid, &mut *backend, rx))
+                .expect("spawn shard worker");
+        }
+        Ok(ShardedSearcher { jobs, names, lut_source, dim, ops })
+    }
+
+    /// Spawn one local worker per shard of `index` — the single-host
+    /// topology (PR 3's behavior, now expressed as all-local backends).
     pub fn start(index: ShardedIndex, cfg: SearchConfig) -> Self {
-        let opts =
-            IcqSearchOpts { k: cfg.top_k, margin_scale: cfg.margin_scale };
         let ops = Arc::new(OpCounter::new());
         let dim = index.dim();
         let lut_source = index.shard(0).clone();
-        let mut jobs = Vec::with_capacity(index.num_shards());
-        for (sid, (spec, shard)) in
-            index.specs().iter().zip(index.shards()).enumerate()
-        {
-            let (tx, rx) = mpsc::sync_channel::<ShardJob>(4);
-            jobs.push(tx);
-            let (shard, ops) = (shard.clone(), ops.clone());
-            let start = spec.start;
-            std::thread::Builder::new()
-                .name(format!("icq-shard-{sid}"))
-                .spawn(move || run_shard_worker(start, shard, opts, ops, rx))
-                .expect("spawn shard worker");
-        }
-        ShardedSearcher { jobs, lut_source, dim, ops }
+        let backends: Vec<Box<dyn ShardBackend>> = index
+            .specs()
+            .iter()
+            .zip(index.shards())
+            .map(|(spec, shard)| {
+                Box::new(LocalShardBackend::new(
+                    spec.start,
+                    shard.clone(),
+                    cfg,
+                    ops.clone(),
+                )) as Box<dyn ShardBackend>
+            })
+            .collect();
+        Self::from_backends(backends, Some(lut_source), dim, ops)
+            .expect("sharded index always yields at least one shard")
     }
 
     /// Cut `index` by `policy` and spawn the shard workers — the
@@ -140,89 +152,114 @@ impl ShardedSearcher {
         index: &EncodedIndex,
         policy: ShardPolicy,
         cfg: SearchConfig,
-    ) -> anyhow::Result<Self> {
+    ) -> Result<Self> {
         Ok(Self::start(ShardedIndex::build(index, policy)?, cfg))
     }
 
-    /// Number of shard workers spawned.
+    /// Number of shard backends spawned.
     pub fn num_shards(&self) -> usize {
         self.jobs.len()
     }
 }
 
-/// One shard worker loop: drain jobs, run the batched two-step engine
-/// on the local shard over the gather's prebuilt LUTs, translate hit
-/// ids to global rows, reply.
-fn run_shard_worker(
-    start: usize,
-    shard: Arc<EncodedIndex>,
-    opts: IcqSearchOpts,
-    ops: Arc<OpCounter>,
-    rx: Receiver<ShardJob>,
+/// One backend worker loop: drain jobs, run the backend's shard search,
+/// reply with the (per-batch) outcome tagged by backend id. A panicking
+/// backend is contained to the batch that tripped it (structured error,
+/// worker thread survives) — one bad batch must not brick the searcher
+/// for every batch after it.
+fn run_backend_worker(
+    bid: usize,
+    backend: &mut dyn ShardBackend,
+    rx: Receiver<BackendJob>,
 ) {
-    let mut crude = Vec::new();
-    while let Ok(job) = rx.recv() {
-        let opts = IcqSearchOpts { k: job.top_k, ..opts };
-        let mut hits = search_icq::search_scanfirst_batch_with_luts(
-            &shard, &job.luts, opts, &ops, &mut crude,
-        );
-        for per_query in &mut hits {
-            for h in per_query {
-                h.id += start as u32;
-            }
-        }
+    while let Ok(BackendJob { job, reply }) = rx.recv() {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || backend.search(&job),
+        ))
+        .unwrap_or_else(|_| {
+            Err(anyhow::anyhow!("shard backend panicked on this batch"))
+        });
         // a gather that gave up (dropped receiver) is not an error
-        let _ = job.reply.send(ShardReply { hits });
+        let _ = reply.send((bid, res));
     }
 }
 
 impl BatchSearcher for ShardedSearcher {
-    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
+    fn search_batch(
+        &self,
+        queries: &Matrix,
+        top_k: usize,
+    ) -> Result<Vec<Vec<Hit>>> {
         let nq = queries.rows();
         if nq == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
-        // build each query's LUT exactly once — identical across shards
-        // (Arc-shared codebooks), so workers only sweep and refine
-        let luts: Vec<Lut> = (0..nq)
-            .map(|qi| {
-                Lut::build(
-                    self.lut_source.lut_ctx(),
-                    self.lut_source.codebooks(),
-                    queries.row(qi),
-                )
-            })
-            .collect();
-        self.ops.add_flops(
-            (nq * self.lut_source.lut_ctx().build_macs()) as u64,
-        );
-        let luts = Arc::new(luts);
-        // scatter: every live shard gets the same shared LUT batch
-        let (reply_tx, reply_rx) = mpsc::sync_channel(self.jobs.len());
-        let mut live = 0usize;
-        for tx in &self.jobs {
-            let job = ShardJob {
-                luts: luts.clone(),
-                top_k,
-                reply: reply_tx.clone(),
-            };
-            if tx.send(job).is_ok() {
-                live += 1;
+        // build each query's LUT exactly once when a local shard can
+        // host the build — identical across local shards (Arc-shared
+        // codebooks), so their workers only sweep and refine
+        let luts: Vec<Lut> = match &self.lut_source {
+            Some(src) => {
+                let luts = (0..nq)
+                    .map(|qi| {
+                        Lut::build(
+                            src.lut_ctx(),
+                            src.codebooks(),
+                            queries.row(qi),
+                        )
+                    })
+                    .collect();
+                self.ops
+                    .add_flops((nq * src.lut_ctx().build_macs()) as u64);
+                luts
             }
+            None => Vec::new(),
+        };
+        let job = Arc::new(ShardJob {
+            queries: Arc::new(queries.clone()),
+            luts: Arc::new(luts),
+            top_k,
+        });
+        // scatter: every backend gets the same shared job
+        let (reply_tx, reply_rx) = mpsc::sync_channel(self.jobs.len());
+        for (bid, tx) in self.jobs.iter().enumerate() {
+            let sent = tx.send(BackendJob {
+                job: job.clone(),
+                reply: reply_tx.clone(),
+            });
+            anyhow::ensure!(
+                sent.is_ok(),
+                "shard backend '{}' is gone (worker exited)",
+                self.names[bid]
+            );
         }
         drop(reply_tx);
-        // gather: collect per-shard lists, then merge per query
+        // gather: collect every backend's lists; any failure fails the
+        // batch (no silent partial top-k)
         let mut per_query: Vec<Vec<Vec<Hit>>> = vec![Vec::new(); nq];
-        for _ in 0..live {
-            let Ok(reply) = reply_rx.recv() else { break };
-            for (qi, hits) in reply.hits.into_iter().enumerate() {
+        for _ in 0..self.jobs.len() {
+            let (bid, res) = reply_rx.recv().map_err(|_| {
+                anyhow::anyhow!("a shard backend died mid-batch")
+            })?;
+            let lists = res.map_err(|e| {
+                e.context(format!(
+                    "shard backend '{}' failed the batch",
+                    self.names[bid]
+                ))
+            })?;
+            anyhow::ensure!(
+                lists.len() == nq,
+                "shard backend '{}' answered {} of {nq} queries",
+                self.names[bid],
+                lists.len()
+            );
+            for (qi, hits) in lists.into_iter().enumerate() {
                 per_query[qi].push(hits);
             }
         }
-        per_query
+        Ok(per_query
             .into_iter()
             .map(|lists| merge_topk(&lists, top_k))
-            .collect()
+            .collect())
     }
 
     fn dim(&self) -> usize {
@@ -249,19 +286,6 @@ mod tests {
     }
 
     #[test]
-    fn merge_orders_by_distance_then_id_and_truncates() {
-        let a = vec![Hit { id: 5, dist: 1.0 }, Hit { id: 0, dist: 3.0 }];
-        let b = vec![Hit { id: 2, dist: 1.0 }, Hit { id: 9, dist: 2.0 }];
-        let m = merge_topk(&[a, b], 3);
-        assert_eq!(
-            m.iter().map(|h| (h.id, h.dist)).collect::<Vec<_>>(),
-            vec![(2, 1.0), (5, 1.0), (9, 2.0)]
-        );
-        assert!(merge_topk(&[], 5).is_empty());
-        assert_eq!(merge_topk(&[vec![Hit { id: 1, dist: 0.0 }]], 5).len(), 1);
-    }
-
-    #[test]
     fn sharded_searcher_answers_batches_with_global_ids() {
         let idx = index(300, 7);
         let searcher = ShardedSearcher::from_index(
@@ -273,7 +297,7 @@ mod tests {
         assert_eq!(searcher.num_shards(), 3);
         assert_eq!(searcher.dim(), 8);
         let queries = Matrix::from_fn(4, 8, |i, _| i as f32 * 0.1);
-        let res = searcher.search_batch(&queries, 6);
+        let res = searcher.search_batch(&queries, 6).unwrap();
         assert_eq!(res.len(), 4);
         for hits in &res {
             assert_eq!(hits.len(), 6);
@@ -288,7 +312,10 @@ mod tests {
             }
         }
         // empty batch short-circuits
-        assert!(searcher.search_batch(&Matrix::zeros(0, 8), 3).is_empty());
+        assert!(searcher
+            .search_batch(&Matrix::zeros(0, 8), 3)
+            .unwrap()
+            .is_empty());
     }
 
     /// Hits must come from every shard's row range when the query is
@@ -304,7 +331,7 @@ mod tests {
         )
         .unwrap();
         let queries = Matrix::from_fn(1, 8, |_, _| 0.0);
-        let res = searcher.search_batch(&queries, 150);
+        let res = searcher.search_batch(&queries, 150).unwrap();
         let ids: Vec<u32> = res[0].iter().map(|h| h.id).collect();
         assert!(ids.iter().any(|&i| i >= 200), "no hits from the last shard");
         // no duplicate ids after the merge
@@ -312,5 +339,93 @@ mod tests {
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), ids.len());
+    }
+
+    /// A backend that errors must fail the whole batch with a
+    /// structured error naming it — not return a silently partial
+    /// top-k.
+    #[test]
+    fn failing_backend_fails_the_batch_with_its_name() {
+        struct Broken;
+        impl ShardBackend for Broken {
+            fn describe(&self) -> String {
+                "broken backend".to_string()
+            }
+            fn search(&mut self, _job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
+                anyhow::bail!("disk on fire")
+            }
+        }
+        let idx = Arc::new(index(128, 9));
+        let ops = Arc::new(OpCounter::new());
+        let backends: Vec<Box<dyn ShardBackend>> = vec![
+            Box::new(LocalShardBackend::new(
+                0,
+                idx.clone(),
+                SearchConfig::default(),
+                ops.clone(),
+            )),
+            Box::new(Broken),
+        ];
+        let searcher = ShardedSearcher::from_backends(
+            backends,
+            Some(idx),
+            8,
+            ops,
+        )
+        .unwrap();
+        let queries = Matrix::from_fn(2, 8, |i, _| i as f32 * 0.3);
+        let err = searcher.search_batch(&queries, 5).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("broken backend"), "error was: {msg}");
+        assert!(msg.contains("disk on fire"), "error was: {msg}");
+    }
+
+    /// A panicking backend must yield a per-batch structured error with
+    /// the worker thread surviving — the second batch gets the same
+    /// "panicked" error, not a "worker is gone" scatter failure.
+    #[test]
+    fn panicking_backend_is_contained_per_batch() {
+        struct Panicky;
+        impl ShardBackend for Panicky {
+            fn describe(&self) -> String {
+                "panicky backend".to_string()
+            }
+            fn search(&mut self, _job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
+                panic!("kernel assert tripped")
+            }
+        }
+        let idx = Arc::new(index(64, 10));
+        let ops = Arc::new(OpCounter::new());
+        let searcher = ShardedSearcher::from_backends(
+            vec![Box::new(Panicky)],
+            Some(idx),
+            8,
+            ops,
+        )
+        .unwrap();
+        let queries = Matrix::from_fn(1, 8, |_, _| 0.5);
+        for round in 0..2 {
+            let err = searcher.search_batch(&queries, 3).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("panicked"),
+                "round {round}: expected a contained panic error, got {msg}"
+            );
+            assert!(
+                !msg.contains("worker exited"),
+                "round {round}: worker thread died instead of surviving"
+            );
+        }
+    }
+
+    #[test]
+    fn no_backends_is_an_error() {
+        assert!(ShardedSearcher::from_backends(
+            Vec::new(),
+            None,
+            8,
+            Arc::new(OpCounter::new()),
+        )
+        .is_err());
     }
 }

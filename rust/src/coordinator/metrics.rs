@@ -17,6 +17,10 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Sum of executed batch sizes (for the mean).
     pub batch_size_sum: AtomicU64,
+    /// Batches whose searcher failed (every query of the batch got an
+    /// error response — e.g. a remote shard refused, disconnected, or
+    /// answered a corrupt frame).
+    pub batch_errors: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
 }
 
@@ -72,12 +76,13 @@ impl Metrics {
     /// One-line human-readable summary of every counter.
     pub fn summary(&self) -> String {
         format!(
-            "queries={} done={} rejected={} batches={} mean_batch={:.2} \
-             p50={}us p99={}us",
+            "queries={} done={} rejected={} batches={} errors={} \
+             mean_batch={:.2} p50={}us p99={}us",
             self.queries_in.load(Ordering::Relaxed),
             self.queries_done.load(Ordering::Relaxed),
             self.queries_rejected.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
+            self.batch_errors.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.99),

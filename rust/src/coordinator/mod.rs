@@ -14,27 +14,36 @@
 //! queues, one OS thread per worker, a dedicated batcher thread, and a
 //! thread-per-connection TCP front-end. The searcher is pluggable:
 //! [`NativeSearcher`] runs the pure-rust two-step scan over one flat
-//! index; [`ShardedSearcher`] scatter-gathers the same scan across
-//! block-range shards ([`gather`], one persistent worker thread per
-//! shard, merged with `(distance, id)` tie-breaking); the
-//! XLA-runtime-backed searcher builds LUTs through the AOT graphs
-//! (python-free at runtime; see `examples/serve_pipeline.rs`). All
-//! batch paths run the LUT-major multi-query sweep, so each resident
-//! code block is swept with the whole batch of query LUTs.
+//! index; [`ShardedSearcher`] scatter-gathers the same scan across a
+//! set of [`ShardBackend`]s ([`gather`], one persistent worker thread
+//! per backend, merged with `(distance, id)` tie-breaking) — in-process
+//! shards ([`LocalShardBackend`]), shard-server processes across hosts
+//! behind the binary wire protocol ([`wire`],
+//! [`RemoteShardBackend`]), or any mix; the XLA-runtime-backed searcher
+//! builds LUTs through the AOT graphs (python-free at runtime; see
+//! `examples/serve_pipeline.rs`). All batch paths run the LUT-major
+//! multi-query sweep, so each resident code block is swept with the
+//! whole batch of query LUTs; timeout-closed single-query batches take
+//! the low-latency streaming path.
 //!
-//! See `ARCHITECTURE.md` at the repo root for the full layer map.
+//! See `ARCHITECTURE.md` at the repo root for the full layer map and
+//! the multi-host topology.
 
 #![warn(missing_docs)]
 
+pub mod backend;
 pub mod backpressure;
 pub mod batcher;
 pub mod gather;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod wire;
 pub mod worker;
 
+pub use backend::{LocalShardBackend, ShardBackend, ShardJob};
 pub use gather::ShardedSearcher;
 pub use metrics::Metrics;
 pub use server::{Coordinator, QueryRequest, QueryResponse};
+pub use wire::RemoteShardBackend;
 pub use worker::{BatchSearcher, NativeSearcher};

@@ -27,8 +27,11 @@ pub struct PendingQuery {
     pub top_k: usize,
     /// When the query entered the pipeline (for latency metrics).
     pub enqueued: Instant,
-    /// one-shot response channel (bounded(1) std mpsc).
-    pub respond: SyncSender<QueryResponse>,
+    /// one-shot response channel (bounded(1) std mpsc). Carries the
+    /// worker's outcome: a response, or the searcher's structured error
+    /// (e.g. a remote shard failure) fanned out to every query of the
+    /// batch.
+    pub respond: SyncSender<Result<QueryResponse>>,
 }
 
 /// Client-side request.
@@ -184,7 +187,7 @@ impl Coordinator {
         self.ingress
             .send(pending)
             .map_err(|_| anyhow::anyhow!("coordinator shut down"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped query"))
+        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped query"))?
     }
 
     /// Serve a line-delimited JSON protocol on `addr`
@@ -297,7 +300,7 @@ pub fn closed_loop_load(
 }
 
 /// The receiver side of the one-shot pattern used by PendingQuery.
-pub type ResponseReceiver = Receiver<QueryResponse>;
+pub type ResponseReceiver = Receiver<Result<QueryResponse>>;
 
 #[cfg(test)]
 mod tests {
@@ -322,7 +325,13 @@ mod tests {
             Arc::new(NativeSearcher::new(Arc::new(idx), SearchConfig::default()));
         Coordinator::start(
             searcher,
-            ServeConfig { max_batch: 4, max_wait_us: 200, workers, max_inflight },
+            ServeConfig {
+                max_batch: 4,
+                max_wait_us: 200,
+                workers,
+                max_inflight,
+                ..ServeConfig::default()
+            },
         )
     }
 

@@ -1,0 +1,1036 @@
+//! The multi-host shard wire protocol: length-prefixed, versioned,
+//! checksummed binary frames over TCP, plus the two endpoints —
+//! [`RemoteShardBackend`] (coordinator side) and [`serve_shard`] (the
+//! `shard-server` side).
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "ICQW"
+//! 4       2     version (u16 LE, currently 1)
+//! 6       1     kind    (0 hello | 1 query | 2 results | 3 error)
+//! 7       4     payload length (u32 LE, capped at 64 MiB)
+//! 11      len   payload (little-endian scalars, see below)
+//! 11+len  4     CRC32 (IEEE) of kind byte + payload
+//! ```
+//!
+//! Payloads:
+//!
+//! ```text
+//! hello   : dim u32 | shard_len u64 | start u64 | fast_k u32
+//! query   : top_k u32 | fast_k u32 | margin_scale f32
+//!           | nq u32 | dim u32 | nq*dim f32
+//! results : nq u32 | per query: cnt u32 | cnt x (dist f32, id u64)
+//! error   : utf-8 message bytes
+//! ```
+//!
+//! The server speaks first: one `hello` frame per connection announcing
+//! the shard's geometry (query dim, row count, global start row, fast
+//! group size). Each `query` frame is answered by exactly one `results`
+//! or `error` frame. Hit ids in `results` are **global** rows (the
+//! server adds its `start`), widened to u64 on the wire.
+//!
+//! ## Failure semantics
+//!
+//! Every malformed input maps to a typed [`WireError`] — bad magic,
+//! version mismatch, checksum mismatch, truncated frame, oversized
+//! frame, unparseable payload — never a panic, a hang, or a silently
+//! wrong result. On the coordinator side any wire failure poisons the
+//! connection (the next `search` reconnects from scratch) and fails the
+//! whole gather batch: a dropped shard must surface as an error, not as
+//! a quietly partial top-k. Coordinator-side sockets carry read *and*
+//! write timeouts ([`DEFAULT_IO_TIMEOUT`]) so a wedged server cannot
+//! hang a gather worker; server-side sockets time out writes only —
+//! reads stay untimed because an idle persistent connection between
+//! batches is legitimate in the thread-per-connection model (an idle
+//! cap / connection limit is future hardening, see ROADMAP).
+//!
+//! ## Why remote results match local ones bitwise
+//!
+//! The server loads the same shard snapshot geometry the coordinator
+//! would slice locally (equal codebook values), rebuilds each query's
+//! LUT with the same deterministic `Lut::build`, and runs the identical
+//! batched two-step engine — so the `(distance, id)` lists crossing the
+//! wire are exactly what a [`LocalShardBackend`] would have produced,
+//! and the gather merge stays bitwise identical to the flat path (the
+//! loopback parity suite asserts this end to end).
+//!
+//! [`LocalShardBackend`]: super::backend::LocalShardBackend
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::backend::{ShardBackend, ShardJob};
+use crate::config::SearchConfig;
+use crate::core::{Hit, Matrix};
+use crate::index::search_icq::{self, IcqSearchOpts};
+use crate::index::{EncodedIndex, OpCounter};
+
+/// Frame magic: the first four bytes of every frame.
+pub const WIRE_MAGIC: [u8; 4] = *b"ICQW";
+
+/// Protocol version stamped into (and required of) every frame header.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Hard cap on a frame's payload length (64 MiB): a corrupt length
+/// prefix must not allocate unbounded memory.
+pub const MAX_PAYLOAD: usize = 64 << 20;
+
+/// Default socket read/write timeout: bounds how long a wedged peer can
+/// stall a gather worker (structured error instead of a hang).
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+const KIND_HELLO: u8 = 0;
+const KIND_QUERY: u8 = 1;
+const KIND_RESULTS: u8 = 2;
+const KIND_ERROR: u8 = 3;
+
+/// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320) over `bytes`.
+/// Bitwise implementation — the frames this guards are small relative
+/// to the search work they trigger.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Typed wire-protocol failure. Every decode path funnels here so
+/// callers (and tests) can distinguish the failure modes the protocol
+/// promises to surface: connection loss, framing corruption, version
+/// skew, and server-reported errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The peer closed the connection cleanly between frames.
+    Closed,
+    /// The stream ended (or the socket timed out) mid-frame.
+    Truncated(&'static str),
+    /// The frame did not start with [`WIRE_MAGIC`].
+    BadMagic([u8; 4]),
+    /// The peer speaks a different protocol version.
+    VersionMismatch {
+        /// Version the peer sent.
+        got: u16,
+        /// Version this build speaks ([`WIRE_VERSION`]).
+        want: u16,
+    },
+    /// The payload checksum did not match (corruption in flight).
+    ChecksumMismatch,
+    /// The length prefix exceeds [`MAX_PAYLOAD`].
+    FrameTooLarge(usize),
+    /// Unknown frame kind byte.
+    UnknownKind(u8),
+    /// The payload parsed structurally wrong for its kind.
+    BadPayload(String),
+    /// The peer answered with an `error` frame carrying this message.
+    Remote(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed by peer"),
+            WireError::Truncated(what) => {
+                write!(f, "connection dropped mid-frame (reading {what})")
+            }
+            WireError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:?} (expected \"ICQW\")")
+            }
+            WireError::VersionMismatch { got, want } => write!(
+                f,
+                "wire protocol version mismatch: peer speaks v{got}, \
+                 this build speaks v{want}"
+            ),
+            WireError::ChecksumMismatch => {
+                write!(f, "frame checksum mismatch (corrupt frame)")
+            }
+            WireError::FrameTooLarge(len) => write!(
+                f,
+                "frame payload of {len} bytes exceeds the {MAX_PAYLOAD} \
+                 byte cap"
+            ),
+            WireError::UnknownKind(k) => {
+                write!(f, "unknown frame kind {k}")
+            }
+            WireError::BadPayload(why) => {
+                write!(f, "malformed frame payload: {why}")
+            }
+            WireError::Remote(msg) => {
+                write!(f, "shard server error: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// A shard server's connection greeting: the geometry the coordinator
+/// needs to validate placement before scattering work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HelloInfo {
+    /// Query dimensionality the shard expects.
+    pub dim: usize,
+    /// Rows the shard holds.
+    pub shard_len: usize,
+    /// Global row id of the shard's first vector.
+    pub start: usize,
+    /// The shard index's fast-group size (crude-pass books).
+    pub fast_k: usize,
+}
+
+/// One decoded protocol frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Server greeting, sent once per connection.
+    Hello(HelloInfo),
+    /// A batched search request.
+    Query {
+        /// Neighbors requested per query.
+        top_k: usize,
+        /// The coordinator's expected fast-group size; the server
+        /// rejects a mismatch (config drift would silently change which
+        /// books the crude pass sums).
+        fast_k: usize,
+        /// Margin scale on the shard's sigma (eq. 11).
+        margin_scale: f32,
+        /// Query vectors, one row per query.
+        queries: Matrix,
+    },
+    /// Per-query `(distance, global id)` top-k lists.
+    Results {
+        /// One ranked hit list per query, in request order.
+        hits: Vec<Vec<Hit>>,
+    },
+    /// A structured failure the peer reports instead of results.
+    Error {
+        /// Human-readable failure description.
+        message: String,
+    },
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Byte cursor over a payload; every read is bounds-checked into
+/// [`WireError::BadPayload`].
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::BadPayload(format!(
+                "payload ends at byte {} but {} more were expected",
+                self.buf.len(),
+                self.pos + n - self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::BadPayload(format!(
+                "{} trailing bytes after payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello(_) => KIND_HELLO,
+            Frame::Query { .. } => KIND_QUERY,
+            Frame::Results { .. } => KIND_RESULTS,
+            Frame::Error { .. } => KIND_ERROR,
+        }
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        match self {
+            Frame::Hello(h) => {
+                let mut buf = Vec::with_capacity(24);
+                put_u32(&mut buf, h.dim as u32);
+                put_u64(&mut buf, h.shard_len as u64);
+                put_u64(&mut buf, h.start as u64);
+                put_u32(&mut buf, h.fast_k as u32);
+                buf
+            }
+            Frame::Query { top_k, fast_k, margin_scale, queries } => {
+                encode_query_payload(*top_k, *fast_k, *margin_scale, queries)
+            }
+            Frame::Results { hits } => {
+                let total: usize = hits.iter().map(|h| h.len()).sum();
+                let mut buf = Vec::with_capacity(4 + 4 * hits.len() + 12 * total);
+                put_u32(&mut buf, hits.len() as u32);
+                for per_query in hits {
+                    put_u32(&mut buf, per_query.len() as u32);
+                    for h in per_query {
+                        put_f32(&mut buf, h.dist);
+                        put_u64(&mut buf, h.id as u64);
+                    }
+                }
+                buf
+            }
+            Frame::Error { message } => message.as_bytes().to_vec(),
+        }
+    }
+
+    fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, WireError> {
+        let mut c = Cursor { buf: payload, pos: 0 };
+        match kind {
+            KIND_HELLO => {
+                let dim = c.u32()? as usize;
+                let shard_len = c.u64()? as usize;
+                let start = c.u64()? as usize;
+                let fast_k = c.u32()? as usize;
+                c.done()?;
+                Ok(Frame::Hello(HelloInfo { dim, shard_len, start, fast_k }))
+            }
+            KIND_QUERY => {
+                let top_k = c.u32()? as usize;
+                let fast_k = c.u32()? as usize;
+                let margin_scale = c.f32()?;
+                let nq = c.u32()? as usize;
+                let dim = c.u32()? as usize;
+                let want = nq.checked_mul(dim).ok_or_else(|| {
+                    WireError::BadPayload("query shape overflow".into())
+                })?;
+                let bytes = want.checked_mul(4).ok_or_else(|| {
+                    WireError::BadPayload("query shape overflow".into())
+                })?;
+                if bytes != payload.len().saturating_sub(c.pos) {
+                    return Err(WireError::BadPayload(format!(
+                        "query data holds {} bytes, shape {nq}x{dim} \
+                         needs {bytes}",
+                        payload.len().saturating_sub(c.pos),
+                    )));
+                }
+                let mut data = Vec::with_capacity(want);
+                for _ in 0..want {
+                    data.push(c.f32()?);
+                }
+                c.done()?;
+                Ok(Frame::Query {
+                    top_k,
+                    fast_k,
+                    margin_scale,
+                    queries: Matrix::from_vec(nq, dim, data),
+                })
+            }
+            KIND_RESULTS => {
+                let nq = c.u32()? as usize;
+                // each query costs at least a 4-byte count, so a corrupt
+                // (but checksummed) header cannot make us pre-allocate
+                // far past the actual payload
+                let remaining = payload.len().saturating_sub(c.pos);
+                if nq > remaining / 4 {
+                    return Err(WireError::BadPayload(format!(
+                        "results claim {nq} queries in a {}-byte payload",
+                        payload.len()
+                    )));
+                }
+                let mut hits = Vec::with_capacity(nq);
+                for _ in 0..nq {
+                    let cnt = c.u32()? as usize;
+                    if cnt * 12 > payload.len().saturating_sub(c.pos) {
+                        return Err(WireError::BadPayload(format!(
+                            "hit list of {cnt} entries exceeds payload"
+                        )));
+                    }
+                    let mut per_query = Vec::with_capacity(cnt);
+                    for _ in 0..cnt {
+                        let dist = c.f32()?;
+                        let id = c.u64()?;
+                        let id = u32::try_from(id).map_err(|_| {
+                            WireError::BadPayload(format!(
+                                "hit id {id} overflows the u32 id space"
+                            ))
+                        })?;
+                        per_query.push(Hit { id, dist });
+                    }
+                    hits.push(per_query);
+                }
+                c.done()?;
+                Ok(Frame::Results { hits })
+            }
+            KIND_ERROR => {
+                let message = String::from_utf8_lossy(payload).into_owned();
+                Ok(Frame::Error { message })
+            }
+            k => Err(WireError::UnknownKind(k)),
+        }
+    }
+}
+
+fn encode_query_payload(
+    top_k: usize,
+    fast_k: usize,
+    margin_scale: f32,
+    queries: &Matrix,
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(20 + 4 * queries.as_slice().len());
+    put_u32(&mut buf, top_k as u32);
+    put_u32(&mut buf, fast_k as u32);
+    put_f32(&mut buf, margin_scale);
+    put_u32(&mut buf, queries.rows() as u32);
+    put_u32(&mut buf, queries.cols() as u32);
+    for &v in queries.as_slice() {
+        put_f32(&mut buf, v);
+    }
+    buf
+}
+
+fn write_raw_frame(
+    w: &mut impl Write,
+    kind: u8,
+    payload: &[u8],
+) -> Result<()> {
+    anyhow::ensure!(
+        payload.len() <= MAX_PAYLOAD,
+        WireError::FrameTooLarge(payload.len())
+    );
+    let mut header = [0u8; 11];
+    header[..4].copy_from_slice(&WIRE_MAGIC);
+    header[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    header[6] = kind;
+    header[7..11].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    let mut sum = Vec::with_capacity(1 + payload.len());
+    sum.push(kind);
+    sum.extend_from_slice(payload);
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.write_all(&crc32(&sum).to_le_bytes())?;
+    Ok(())
+}
+
+/// Serialize one frame (header + payload + checksum) onto `w`. The
+/// caller is responsible for flushing buffered writers.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    write_raw_frame(w, frame.kind(), &frame.encode_payload())
+}
+
+/// Serialize a query frame straight from a borrowed matrix — the
+/// hot-path variant [`RemoteShardBackend`] uses, so a batch crosses the
+/// wire without first being cloned into an owned [`Frame::Query`].
+pub fn write_query_frame(
+    w: &mut impl Write,
+    top_k: usize,
+    fast_k: usize,
+    margin_scale: f32,
+    queries: &Matrix,
+) -> Result<()> {
+    write_raw_frame(
+        w,
+        KIND_QUERY,
+        &encode_query_payload(top_k, fast_k, margin_scale, queries),
+    )
+}
+
+fn read_exact_or(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    what: &'static str,
+) -> Result<(), WireError> {
+    r.read_exact(buf).map_err(|_| WireError::Truncated(what))
+}
+
+/// Read and validate one frame from `r`. Returns
+/// [`WireError::Closed`] if the peer hung up cleanly between frames;
+/// every other malformation maps to its typed [`WireError`] variant.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, WireError> {
+    // first byte separately: 0 bytes here is a clean close, not a
+    // truncation
+    let mut first = [0u8; 1];
+    match r.read(&mut first) {
+        Ok(0) => return Err(WireError::Closed),
+        Ok(_) => {}
+        Err(_) => return Err(WireError::Truncated("frame header")),
+    }
+    let mut rest = [0u8; 10];
+    read_exact_or(r, &mut rest, "frame header")?;
+    let magic = [first[0], rest[0], rest[1], rest[2]];
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes([rest[3], rest[4]]);
+    if version != WIRE_VERSION {
+        return Err(WireError::VersionMismatch {
+            got: version,
+            want: WIRE_VERSION,
+        });
+    }
+    let kind = rest[5];
+    let len = u32::from_le_bytes([rest[6], rest[7], rest[8], rest[9]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(WireError::FrameTooLarge(len));
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_or(r, &mut payload, "frame payload")?;
+    let mut crc_bytes = [0u8; 4];
+    read_exact_or(r, &mut crc_bytes, "frame checksum")?;
+    let mut sum = Vec::with_capacity(1 + len);
+    sum.push(kind);
+    sum.extend_from_slice(&payload);
+    if crc32(&sum) != u32::from_le_bytes(crc_bytes) {
+        return Err(WireError::ChecksumMismatch);
+    }
+    Frame::decode_payload(kind, &payload)
+}
+
+struct Conn {
+    writer: BufWriter<TcpStream>,
+    reader: BufReader<TcpStream>,
+}
+
+/// Coordinator-side backend for one remote shard: a persistent TCP
+/// connection to a `shard-server`, validated by its hello frame at
+/// connect time. `search` serializes the batch's query vectors (the
+/// server rebuilds bitwise-identical LUTs from its equal-valued
+/// codebooks), awaits exactly one results/error frame, and surfaces
+/// every wire failure as a structured error; a failed connection is
+/// redialed on the next call.
+pub struct RemoteShardBackend {
+    addr: String,
+    cfg: SearchConfig,
+    timeout: Duration,
+    conn: Option<Conn>,
+    hello: HelloInfo,
+}
+
+impl RemoteShardBackend {
+    /// Connect to `addr` ("host:port") with [`DEFAULT_IO_TIMEOUT`] and
+    /// read the server's hello. `cfg.margin_scale` rides every query
+    /// frame so the remote prune matches the local one.
+    pub fn connect(addr: &str, cfg: SearchConfig) -> Result<Self> {
+        Self::connect_with_timeout(addr, cfg, DEFAULT_IO_TIMEOUT)
+    }
+
+    /// [`Self::connect`] with an explicit dial/read/write timeout.
+    pub fn connect_with_timeout(
+        addr: &str,
+        cfg: SearchConfig,
+        timeout: Duration,
+    ) -> Result<Self> {
+        let (conn, hello) = Self::dial(addr, timeout)?;
+        Ok(RemoteShardBackend {
+            addr: addr.to_string(),
+            cfg,
+            timeout,
+            conn: Some(conn),
+            hello,
+        })
+    }
+
+    fn dial(addr: &str, timeout: Duration) -> Result<(Conn, HelloInfo)> {
+        let sock_addr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving shard server '{addr}'"))?
+            .next()
+            .ok_or_else(|| {
+                anyhow::anyhow!("shard server '{addr}' resolved to nothing")
+            })?;
+        let stream = TcpStream::connect_timeout(&sock_addr, timeout)
+            .with_context(|| format!("connecting to shard server {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(timeout)).ok();
+        stream.set_write_timeout(Some(timeout)).ok();
+        let reader = BufReader::new(
+            stream.try_clone().context("cloning shard stream")?,
+        );
+        let mut conn = Conn { writer: BufWriter::new(stream), reader };
+        let hello = match read_frame(&mut conn.reader) {
+            Ok(Frame::Hello(h)) => h,
+            Ok(Frame::Error { message }) => {
+                return Err(WireError::Remote(message).into())
+            }
+            Ok(_) => {
+                return Err(WireError::BadPayload(
+                    "expected a hello frame at connect".into(),
+                )
+                .into())
+            }
+            Err(e) => {
+                return Err(anyhow::Error::from(e)
+                    .context(format!("reading hello from {addr}")))
+            }
+        };
+        Ok((conn, hello))
+    }
+
+    /// The geometry the server announced at connect.
+    pub fn hello(&self) -> HelloInfo {
+        self.hello
+    }
+
+    /// Query dimensionality the remote shard expects.
+    pub fn dim(&self) -> usize {
+        self.hello.dim
+    }
+
+    /// The remote shard's address as given to [`Self::connect`].
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn search_inner(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
+        if self.conn.is_none() {
+            let (conn, hello) = Self::dial(&self.addr, self.timeout)?;
+            anyhow::ensure!(
+                hello == self.hello,
+                "shard server {} changed geometry across reconnect \
+                 ({:?} -> {:?})",
+                self.addr,
+                self.hello,
+                hello
+            );
+            self.conn = Some(conn);
+        }
+        let conn = self.conn.as_mut().expect("connection just established");
+        write_query_frame(
+            &mut conn.writer,
+            job.top_k,
+            self.hello.fast_k,
+            self.cfg.margin_scale,
+            &job.queries,
+        )?;
+        conn.writer.flush().context("flushing query frame")?;
+        match read_frame(&mut conn.reader) {
+            Ok(Frame::Results { hits }) => {
+                anyhow::ensure!(
+                    hits.len() == job.queries.rows(),
+                    "shard server answered {} queries for a batch of {}",
+                    hits.len(),
+                    job.queries.rows()
+                );
+                Ok(hits)
+            }
+            Ok(Frame::Error { message }) => {
+                Err(WireError::Remote(message).into())
+            }
+            Ok(_) => Err(WireError::BadPayload(
+                "expected a results frame".into(),
+            )
+            .into()),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+impl ShardBackend for RemoteShardBackend {
+    fn describe(&self) -> String {
+        format!("remote shard {}", self.addr)
+    }
+
+    fn search(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
+        let res = self.search_inner(job);
+        if res.is_err() {
+            // poison the connection: a failed exchange leaves the stream
+            // in an unknown framing state, so the next call redials
+            self.conn = None;
+        }
+        res.map_err(|e| {
+            e.context(format!("remote shard {} failed", self.addr))
+        })
+    }
+}
+
+/// Validate one query frame against the served shard before any search
+/// work runs; violations become `error` frames, mirroring the
+/// coordinator's up-front request validation.
+fn validate_query(
+    index: &EncodedIndex,
+    top_k: usize,
+    fast_k: usize,
+    margin_scale: f32,
+    queries: &Matrix,
+) -> Result<()> {
+    anyhow::ensure!(top_k >= 1, "top_k must be >= 1");
+    anyhow::ensure!(
+        queries.cols() == index.dim(),
+        "query dim {} != shard dim {}",
+        queries.cols(),
+        index.dim()
+    );
+    anyhow::ensure!(
+        fast_k == index.fast_k,
+        "request fast_k {fast_k} != shard fast_k {} (config drift)",
+        index.fast_k
+    );
+    anyhow::ensure!(
+        margin_scale.is_finite() && margin_scale >= 0.0,
+        "margin_scale {margin_scale} must be finite and >= 0"
+    );
+    anyhow::ensure!(
+        queries.as_slice().iter().all(|v| v.is_finite()),
+        "non-finite query vector entry"
+    );
+    Ok(())
+}
+
+/// Serve one accepted connection: hello, then one results/error frame
+/// per query frame. Returns when the peer disconnects or the stream
+/// breaks. Exposed so tests can drive a single in-process connection.
+pub fn serve_shard_conn(
+    sock: TcpStream,
+    index: &EncodedIndex,
+    start: usize,
+    ops: &OpCounter,
+) {
+    sock.set_nodelay(true).ok();
+    // reads stay untimed (an idle persistent connection between batches
+    // is legitimate); writes get a timeout so a client that stopped
+    // draining cannot wedge this thread mid-reply
+    sock.set_write_timeout(Some(DEFAULT_IO_TIMEOUT)).ok();
+    let Ok(read_half) = sock.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(sock);
+    let hello = Frame::Hello(HelloInfo {
+        dim: index.dim(),
+        shard_len: index.len(),
+        start,
+        fast_k: index.fast_k,
+    });
+    if write_frame(&mut writer, &hello).is_err() || writer.flush().is_err() {
+        return;
+    }
+    let mut crude = Vec::new();
+    loop {
+        let reply = match read_frame(&mut reader) {
+            Ok(Frame::Query { top_k, fast_k, margin_scale, queries }) => {
+                match validate_query(
+                    index,
+                    top_k,
+                    fast_k,
+                    margin_scale,
+                    &queries,
+                ) {
+                    Ok(()) => {
+                        let opts = IcqSearchOpts { k: top_k, margin_scale };
+                        let mut hits = search_icq::search_scanfirst_batch(
+                            index, &queries, opts, ops, &mut crude,
+                        );
+                        for per_query in &mut hits {
+                            for h in per_query {
+                                h.id += start as u32;
+                            }
+                        }
+                        Frame::Results { hits }
+                    }
+                    Err(e) => Frame::Error { message: e.to_string() },
+                }
+            }
+            Ok(_) => Frame::Error {
+                message: "expected a query frame".to_string(),
+            },
+            Err(WireError::Closed) => return,
+            Err(e) => {
+                // best-effort structured goodbye; the framing state is
+                // unknown, so drop the connection either way
+                let _ = write_frame(
+                    &mut writer,
+                    &Frame::Error { message: e.to_string() },
+                );
+                let _ = writer.flush();
+                return;
+            }
+        };
+        if write_frame(&mut writer, &reply).is_err()
+            || writer.flush().is_err()
+        {
+            return;
+        }
+    }
+}
+
+/// The `shard-server` accept loop: serve `index` (whose first row is
+/// global row `start`) on `listener`, one thread per connection, until
+/// the listener errors out. This is what `icq shard-server` runs after
+/// loading its shard snapshot; tests bind an ephemeral listener and run
+/// it on a thread for in-process loopback topologies.
+pub fn serve_shard(
+    listener: TcpListener,
+    index: Arc<EncodedIndex>,
+    start: usize,
+) -> Result<()> {
+    let ops = Arc::new(OpCounter::new());
+    for stream in listener.incoming() {
+        let sock = match stream {
+            Ok(sock) => sock,
+            Err(_) => {
+                // transient accept failures (e.g. fd exhaustion) must
+                // not busy-spin the accept thread at 100% CPU
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        let (index, ops) = (index.clone(), ops.clone());
+        std::thread::spawn(move || serve_shard_conn(sock, &index, start, &ops));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        read_frame(&mut &buf[..]).unwrap()
+    }
+
+    #[test]
+    fn frames_roundtrip_all_kinds() {
+        let hello = Frame::Hello(HelloInfo {
+            dim: 16,
+            shard_len: 1000,
+            start: 512,
+            fast_k: 2,
+        });
+        assert_eq!(roundtrip(&hello), hello);
+
+        let query = Frame::Query {
+            top_k: 7,
+            fast_k: 2,
+            margin_scale: 1.5,
+            queries: Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32 * 0.25),
+        };
+        assert_eq!(roundtrip(&query), query);
+
+        let results = Frame::Results {
+            hits: vec![
+                vec![Hit { id: 5, dist: 0.5 }, Hit { id: 900, dist: 1.25 }],
+                vec![],
+                vec![Hit { id: u32::MAX, dist: f32::MAX }],
+            ],
+        };
+        assert_eq!(roundtrip(&results), results);
+
+        let error = Frame::Error { message: "nope — bad dim".to_string() };
+        assert_eq!(roundtrip(&error), error);
+    }
+
+    /// The borrow-based hot-path writer must emit byte-identical frames
+    /// to the owned [`Frame::Query`] writer.
+    #[test]
+    fn query_frame_writers_are_byte_identical() {
+        let queries = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let mut owned = Vec::new();
+        write_frame(
+            &mut owned,
+            &Frame::Query {
+                top_k: 5,
+                fast_k: 2,
+                margin_scale: 0.5,
+                queries: queries.clone(),
+            },
+        )
+        .unwrap();
+        let mut borrowed = Vec::new();
+        write_query_frame(&mut borrowed, 5, 2, 0.5, &queries).unwrap();
+        assert_eq!(owned, borrowed);
+    }
+
+    #[test]
+    fn empty_query_and_results_roundtrip() {
+        let query = Frame::Query {
+            top_k: 1,
+            fast_k: 1,
+            margin_scale: 0.0,
+            queries: Matrix::zeros(0, 8),
+        };
+        assert_eq!(roundtrip(&query), query);
+        let results = Frame::Results { hits: vec![] };
+        assert_eq!(roundtrip(&results), results);
+    }
+
+    #[test]
+    fn corrupt_byte_is_checksum_mismatch() {
+        let mut buf = Vec::new();
+        write_frame(
+            &mut buf,
+            &Frame::Error { message: "hello".to_string() },
+        )
+        .unwrap();
+        let payload_at = 11; // flip a payload byte, not the header
+        buf[payload_at] ^= 0x40;
+        assert_eq!(
+            read_frame(&mut &buf[..]).unwrap_err(),
+            WireError::ChecksumMismatch
+        );
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Results { hits: vec![] }).unwrap();
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        match read_frame(&mut &bad[..]).unwrap_err() {
+            WireError::BadMagic(m) => assert_eq!(m[0], b'X'),
+            e => panic!("expected BadMagic, got {e}"),
+        }
+        let mut future = buf.clone();
+        future[4..6].copy_from_slice(&99u16.to_le_bytes());
+        assert_eq!(
+            read_frame(&mut &future[..]).unwrap_err(),
+            WireError::VersionMismatch { got: 99, want: WIRE_VERSION }
+        );
+    }
+
+    #[test]
+    fn truncation_and_close_are_distinguished() {
+        let mut buf = Vec::new();
+        write_frame(
+            &mut buf,
+            &Frame::Error { message: "partial".to_string() },
+        )
+        .unwrap();
+        // clean close: zero bytes available
+        assert_eq!(read_frame(&mut &[][..]).unwrap_err(), WireError::Closed);
+        // mid-header
+        assert_eq!(
+            read_frame(&mut &buf[..5]).unwrap_err(),
+            WireError::Truncated("frame header")
+        );
+        // mid-payload
+        assert_eq!(
+            read_frame(&mut &buf[..13]).unwrap_err(),
+            WireError::Truncated("frame payload")
+        );
+        // missing checksum
+        assert_eq!(
+            read_frame(&mut &buf[..buf.len() - 2]).unwrap_err(),
+            WireError::Truncated("frame checksum")
+        );
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Results { hits: vec![] }).unwrap();
+        buf[7..11].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert_eq!(
+            read_frame(&mut &buf[..]).unwrap_err(),
+            WireError::FrameTooLarge(u32::MAX as usize)
+        );
+    }
+
+    #[test]
+    fn unknown_kind_and_malformed_payload_are_rejected() {
+        // hand-build a frame of kind 9 with an empty payload
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&WIRE_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.push(9);
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&crc32(&[9]).to_le_bytes());
+        assert_eq!(
+            read_frame(&mut &buf[..]).unwrap_err(),
+            WireError::UnknownKind(9)
+        );
+
+        // a hello frame with a short payload
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&WIRE_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.push(0);
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(&[1, 2, 3]);
+        buf.extend_from_slice(&crc32(&[0, 1, 2, 3]).to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut &buf[..]).unwrap_err(),
+            WireError::BadPayload(_)
+        ));
+    }
+
+    /// Checksummed-but-lying shape headers must be rejected as
+    /// BadPayload before any oversized allocation (no abort, no OOM).
+    #[test]
+    fn lying_shape_headers_cannot_force_huge_allocations() {
+        let frame_with = |kind: u8, payload: &[u8]| -> Vec<u8> {
+            let mut buf = Vec::new();
+            buf.extend_from_slice(&WIRE_MAGIC);
+            buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+            buf.push(kind);
+            buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            buf.extend_from_slice(payload);
+            let mut sum = vec![kind];
+            sum.extend_from_slice(payload);
+            buf.extend_from_slice(&crc32(&sum).to_le_bytes());
+            buf
+        };
+        // query frame claiming nq = dim = 2^31 with no data: nq * dim
+        // fits usize but the byte count overflows — must be BadPayload
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 3); // top_k
+        put_u32(&mut payload, 1); // fast_k
+        put_f32(&mut payload, 1.0); // margin
+        put_u32(&mut payload, 0x8000_0000); // nq
+        put_u32(&mut payload, 0x8000_0000); // dim
+        let buf = frame_with(1, &payload);
+        assert!(matches!(
+            read_frame(&mut &buf[..]).unwrap_err(),
+            WireError::BadPayload(_)
+        ));
+        // results frame claiming 67M queries in an empty body
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 67_000_000);
+        let buf = frame_with(2, &payload);
+        assert!(matches!(
+            read_frame(&mut &buf[..]).unwrap_err(),
+            WireError::BadPayload(_)
+        ));
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC32 of "123456789" is the classic check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

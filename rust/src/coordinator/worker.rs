@@ -4,22 +4,52 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use super::metrics::Metrics;
 use super::server::{PendingQuery, QueryResponse};
 use crate::config::SearchConfig;
+use crate::core::parallel::num_threads;
 use crate::core::{Hit, Matrix};
+use crate::index::lut::Lut;
 use crate::index::search_icq::{self, IcqSearchOpts};
 use crate::index::{EncodedIndex, OpCounter};
 
 /// A batch search backend. Implementations must be cheap to share
 /// (`Arc`) and safe to call from multiple worker threads.
+///
+/// Search is fallible: a backend whose substrate can fail mid-request
+/// (a remote shard connection, a PJRT executor) surfaces the failure as
+/// an error, and the coordinator relays it to every query of the batch
+/// — results are never silently partial.
 pub trait BatchSearcher: Send + Sync + 'static {
     /// Search all rows of `queries`; returns one ranked hit list each.
-    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>>;
+    fn search_batch(
+        &self,
+        queries: &Matrix,
+        top_k: usize,
+    ) -> Result<Vec<Vec<Hit>>>;
+
+    /// Single-query entry point, used by the worker pool when a batch
+    /// degenerates to one query (timeout-closed batches under light
+    /// load). Defaults to a one-row [`Self::search_batch`]; searchers
+    /// with a cheaper low-latency path override it (see
+    /// [`NativeSearcher`]).
+    fn search_one(&self, q: &[f32], top_k: usize) -> Result<Vec<Hit>> {
+        let queries = Matrix::from_vec(1, q.len(), q.to_vec());
+        let mut hits = self.search_batch(&queries, top_k)?;
+        Ok(hits.pop().unwrap_or_default())
+    }
 
     /// Dimensionality the searcher expects.
     fn dim(&self) -> usize;
 }
+
+/// Rows below which the single-query path takes the serial streaming
+/// two-step (lowest constant factor); at or above it, the block-parallel
+/// scan (`search_scanfirst_parallel`) spreads the crude pass across
+/// cores — the memory-bandwidth win only pays for itself on big shards.
+pub const SINGLE_QUERY_PARALLEL_MIN_ROWS: usize = 1 << 15;
 
 /// Pure-rust two-step ICQ searcher over one flat [`EncodedIndex`]: per
 /// batch, build all query LUTs, run the LUT-major blocked crude sweep —
@@ -28,6 +58,12 @@ pub trait BatchSearcher: Send + Sync + 'static {
 /// engine per query (`search_icq::search_scanfirst_batch`). For a
 /// sharded scatter-gather variant see
 /// [`super::gather::ShardedSearcher`].
+///
+/// Single queries ([`BatchSearcher::search_one`]) skip the batch
+/// engine: small indexes run the paper's serial streaming two-step
+/// (`search_icq::search_with_lut` — threshold updates per candidate,
+/// lowest latency), large ones the block-parallel scan
+/// (`search_icq::search_scanfirst_parallel`).
 pub struct NativeSearcher {
     /// The database searched.
     pub index: Arc<EncodedIndex>,
@@ -46,10 +82,23 @@ impl NativeSearcher {
             ops: Arc::new(OpCounter::new()),
         }
     }
+
+    /// The serial streaming two-step for one query — the paper's
+    /// algorithm verbatim, with the pruning threshold updated after
+    /// every accepted candidate. This is the batch-size-1 low-latency
+    /// serving path on small indexes; exposed for benches and tests.
+    pub fn search_streaming(&self, q: &[f32], top_k: usize) -> Vec<Hit> {
+        let opts = IcqSearchOpts { k: top_k, ..self.opts };
+        search_icq::search(&self.index, q, opts, &self.ops)
+    }
 }
 
 impl BatchSearcher for NativeSearcher {
-    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
+    fn search_batch(
+        &self,
+        queries: &Matrix,
+        top_k: usize,
+    ) -> Result<Vec<Vec<Hit>>> {
         let opts = IcqSearchOpts { k: top_k, ..self.opts };
         // workers are already parallel across batches; keep the per-batch
         // scan serial to avoid nested-thread oversubscription. The
@@ -57,13 +106,32 @@ impl BatchSearcher for NativeSearcher {
         // the whole batch of LUTs over it (and reuses one crude scratch
         // across the batch's tiles).
         let mut crude = Vec::new();
-        search_icq::search_scanfirst_batch(
+        Ok(search_icq::search_scanfirst_batch(
             &self.index,
             queries,
             opts,
             &self.ops,
             &mut crude,
-        )
+        ))
+    }
+
+    fn search_one(&self, q: &[f32], top_k: usize) -> Result<Vec<Hit>> {
+        let threads = num_threads();
+        if self.index.len() >= SINGLE_QUERY_PARALLEL_MIN_ROWS && threads > 1 {
+            // big shard: spread the crude pass across block ranges
+            let opts = IcqSearchOpts { k: top_k, ..self.opts };
+            let lut =
+                Lut::build(self.index.lut_ctx(), self.index.codebooks(), q);
+            self.ops.add_flops(self.index.lut_ctx().build_macs() as u64);
+            return Ok(search_icq::search_scanfirst_parallel(
+                &self.index,
+                &lut,
+                opts,
+                &self.ops,
+                threads,
+            ));
+        }
+        Ok(self.search_streaming(q, top_k))
     }
 
     fn dim(&self) -> usize {
@@ -72,7 +140,10 @@ impl BatchSearcher for NativeSearcher {
 }
 
 /// One worker loop: drain batches from the queue, search, resolve the
-/// per-query response channels, decrement the router's load gauge.
+/// per-query response channels, decrement the router's load gauge. A
+/// searcher error is fanned out to every query of the batch (and
+/// counted on `metrics.batch_errors`) — callers see the failure instead
+/// of a hang or a silently dropped shard.
 pub fn run_worker(
     id: usize,
     rx: Receiver<Vec<PendingQuery>>,
@@ -84,22 +155,46 @@ pub fn run_worker(
         if batch.is_empty() {
             continue;
         }
-        let d = searcher.dim();
-        let mut data = Vec::with_capacity(batch.len() * d);
-        for q in &batch {
-            data.extend_from_slice(&q.vector);
-        }
-        let queries = Matrix::from_vec(batch.len(), d, data);
-        let top_k = batch.iter().map(|q| q.top_k).max().unwrap_or(10);
-        let results = searcher.search_batch(&queries, top_k);
+        let results = if batch.len() == 1 {
+            // timeout-closed singleton: take the low-latency path
+            searcher
+                .search_one(&batch[0].vector, batch[0].top_k)
+                .map(|hits| vec![hits])
+        } else {
+            let d = searcher.dim();
+            let mut data = Vec::with_capacity(batch.len() * d);
+            for q in &batch {
+                data.extend_from_slice(&q.vector);
+            }
+            let queries = Matrix::from_vec(batch.len(), d, data);
+            let top_k = batch.iter().map(|q| q.top_k).max().unwrap_or(10);
+            searcher.search_batch(&queries, top_k)
+        };
         metrics.record_batch(batch.len());
         load.fetch_sub(batch.len(), Ordering::Relaxed);
-        for (q, mut hits) in batch.into_iter().zip(results) {
-            hits.truncate(q.top_k);
-            let latency = q.enqueued.elapsed();
-            metrics.record_latency_us(latency.as_micros() as u64);
-            metrics.queries_done.fetch_add(1, Ordering::Relaxed);
-            let _ = q.respond.send(QueryResponse { hits, latency, worker: id });
+        match results {
+            Ok(results) => {
+                for (q, mut hits) in batch.into_iter().zip(results) {
+                    hits.truncate(q.top_k);
+                    let latency = q.enqueued.elapsed();
+                    metrics.record_latency_us(latency.as_micros() as u64);
+                    metrics.queries_done.fetch_add(1, Ordering::Relaxed);
+                    let _ = q.respond.send(Ok(QueryResponse {
+                        hits,
+                        latency,
+                        worker: id,
+                    }));
+                }
+            }
+            Err(e) => {
+                metrics.batch_errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("{e:#}");
+                for q in batch {
+                    let _ = q.respond.send(Err(anyhow::anyhow!(
+                        "search failed: {msg}"
+                    )));
+                }
+            }
         }
     }
 }
@@ -127,7 +222,7 @@ mod tests {
     fn native_searcher_returns_ranked_hits() {
         let s = native();
         let q = Matrix::from_fn(3, 8, |_, _| 0.1);
-        let res = s.search_batch(&q, 5);
+        let res = s.search_batch(&q, 5).unwrap();
         assert_eq!(res.len(), 3);
         for hits in res {
             assert_eq!(hits.len(), 5);
@@ -135,6 +230,40 @@ mod tests {
                 assert!(w[0].dist <= w[1].dist);
             }
         }
+    }
+
+    /// The batch-size-1 low-latency path (serial streaming two-step on
+    /// this small index) must agree with the batched engine: same hit
+    /// count, distances within the two-step tolerance the rest of the
+    /// suite uses.
+    #[test]
+    fn single_query_streaming_path_matches_batched_engine() {
+        let s = native();
+        let mut rng = Rng::new(29);
+        for _ in 0..8 {
+            let q: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            let one = s.search_one(&q, 6).unwrap();
+            let batched = s
+                .search_batch(&Matrix::from_vec(1, 8, q.clone()), 6)
+                .unwrap()
+                .remove(0);
+            assert_eq!(one.len(), batched.len());
+            for (a, b) in one.iter().zip(&batched) {
+                assert!(
+                    (a.dist - b.dist).abs() < 1e-3,
+                    "streaming {} vs batched {}",
+                    a.dist,
+                    b.dist
+                );
+            }
+        }
+        // streaming is the path actually taken on this small index
+        let q = vec![0.2f32; 8];
+        assert_eq!(
+            s.search_one(&q, 4).unwrap(),
+            s.search_streaming(&q, 4),
+            "search_one did not take the streaming path"
+        );
     }
 
     #[test]
@@ -165,12 +294,62 @@ mod tests {
             },
         ];
         tx.send(batch).unwrap();
-        let r1 = rrx1.recv().unwrap();
-        let r2 = rrx2.recv().unwrap();
+        let r1 = rrx1.recv().unwrap().unwrap();
+        let r2 = rrx2.recv().unwrap().unwrap();
         assert_eq!(r1.hits.len(), 3);
         assert_eq!(r2.hits.len(), 2);
         assert_eq!(load.load(Ordering::Relaxed), 0);
         assert_eq!(metrics.mean_batch_size(), 2.0);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    /// A failing searcher must answer every query of the batch with a
+    /// structured error (and count it) instead of dropping channels.
+    #[test]
+    fn worker_fans_search_errors_out_to_each_query() {
+        use std::sync::mpsc;
+        struct Failing;
+        impl BatchSearcher for Failing {
+            fn search_batch(
+                &self,
+                _queries: &Matrix,
+                _top_k: usize,
+            ) -> Result<Vec<Vec<Hit>>> {
+                anyhow::bail!("backend exploded")
+            }
+            fn dim(&self) -> usize {
+                4
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let load = Arc::new(AtomicUsize::new(2));
+        let (tx, rx) = mpsc::sync_channel(1);
+        let h = {
+            let (m, l) = (metrics.clone(), load.clone());
+            std::thread::spawn(move || {
+                run_worker(1, rx, Arc::new(Failing), m, l)
+            })
+        };
+        let (rtx1, rrx1) = mpsc::sync_channel(1);
+        let (rtx2, rrx2) = mpsc::sync_channel(1);
+        let mk = |respond| PendingQuery {
+            vector: vec![0.0; 4],
+            top_k: 2,
+            enqueued: std::time::Instant::now(),
+            respond,
+        };
+        tx.send(vec![mk(rtx1), mk(rtx2)]).unwrap();
+        let e1 = rrx1.recv().unwrap().unwrap_err();
+        let e2 = rrx2.recv().unwrap().unwrap_err();
+        assert!(e1.to_string().contains("backend exploded"));
+        assert!(e2.to_string().contains("backend exploded"));
+        assert_eq!(load.load(Ordering::Relaxed), 0);
+        assert_eq!(
+            metrics.batch_errors.load(Ordering::Relaxed),
+            1,
+            "batch error not counted"
+        );
         drop(tx);
         h.join().unwrap();
     }

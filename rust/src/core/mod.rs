@@ -15,4 +15,4 @@ pub mod topk;
 pub use distance::{dot, l2_sq};
 pub use matrix::Matrix;
 pub use rng::Rng;
-pub use topk::{Hit, TopK};
+pub use topk::{merge_topk, Hit, TopK};

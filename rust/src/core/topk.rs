@@ -140,6 +140,38 @@ impl TopK {
     }
 }
 
+/// Merge per-partition top-k lists into the global top-k, ordered by the
+/// canonical `(distance, id)` key — the same order every executor's
+/// [`TopK`] selects by. This is the gather step of both the sharded
+/// scatter-gather serving path ([`crate::coordinator::gather`]) and the
+/// block-parallel single-query scan
+/// (`search_icq::search_scanfirst_parallel`): because each input list is
+/// "the k smallest `(distance, id)` pairs of its row range", merging by
+/// the same order and truncating reproduces the flat scan's result bit
+/// for bit.
+///
+/// # Examples
+///
+/// ```
+/// use icq::core::topk::merge_topk;
+/// use icq::core::Hit;
+///
+/// let shard0 = vec![Hit { id: 3, dist: 0.5 }, Hit { id: 1, dist: 2.0 }];
+/// let shard1 = vec![Hit { id: 9, dist: 1.0 }, Hit { id: 4, dist: 2.0 }];
+/// let merged = merge_topk(&[shard0, shard1], 3);
+/// assert_eq!(
+///     merged.iter().map(|h| h.id).collect::<Vec<_>>(),
+///     vec![3, 9, 1] // 2.0 tie broken toward the smaller id
+/// );
+/// ```
+pub fn merge_topk(lists: &[Vec<Hit>], top_k: usize) -> Vec<Hit> {
+    let mut all: Vec<Hit> =
+        lists.iter().flat_map(|l| l.iter().copied()).collect();
+    all.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id)));
+    all.truncate(top_k);
+    all
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +233,19 @@ mod tests {
                 "order {order:?} broke canonical tie-breaking"
             );
         }
+    }
+
+    #[test]
+    fn merge_orders_by_distance_then_id_and_truncates() {
+        let a = vec![Hit { id: 5, dist: 1.0 }, Hit { id: 0, dist: 3.0 }];
+        let b = vec![Hit { id: 2, dist: 1.0 }, Hit { id: 9, dist: 2.0 }];
+        let m = merge_topk(&[a, b], 3);
+        assert_eq!(
+            m.iter().map(|h| (h.id, h.dist)).collect::<Vec<_>>(),
+            vec![(2, 1.0), (5, 1.0), (9, 2.0)]
+        );
+        assert!(merge_topk(&[], 5).is_empty());
+        assert_eq!(merge_topk(&[vec![Hit { id: 1, dist: 0.0 }]], 5).len(), 1);
     }
 
     #[test]

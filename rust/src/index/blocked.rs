@@ -226,11 +226,42 @@ impl<C: CodeUnit> BlockedCodes<C> {
         out: &mut [f32],
     ) {
         assert_eq!(out.len(), self.n);
+        self.partial_sums_range_into(lut, k0, k1, 0, self.num_blocks(), out);
+    }
+
+    /// Rows covered by the block range `[b0, b1)` — the length the range
+    /// sweeps write (only the final block of the store is partial).
+    #[inline]
+    pub fn range_rows(&self, b0: usize, b1: usize) -> usize {
+        if b0 >= b1 {
+            return 0;
+        }
+        (b1 * self.block).min(self.n) - b0 * self.block
+    }
+
+    /// [`Self::partial_sums_into`] restricted to the block range
+    /// `[b0, b1)`: `out[i - b0 * B]` receives the partial sum of global
+    /// row `i`. `out.len()` must equal [`Self::range_rows`]. Per-row
+    /// accumulation is the identical [`Self::block_partial_sums`] loop,
+    /// so a range sweep is bitwise equal to the corresponding slice of a
+    /// whole-database sweep — the block-parallel single-query scan
+    /// splits the store this way across scoped threads.
+    pub fn partial_sums_range_into(
+        &self,
+        lut: &Lut,
+        k0: usize,
+        k1: usize,
+        b0: usize,
+        b1: usize,
+        out: &mut [f32],
+    ) {
+        assert!(b1 <= self.num_blocks(), "block range past the store");
+        assert_eq!(out.len(), self.range_rows(b0, b1));
         let bs = self.block;
         let mut acc = vec![0.0f32; bs];
-        for b in 0..self.num_blocks() {
+        for b in b0..b1 {
             self.block_partial_sums(lut, k0, k1, b, &mut acc);
-            let base = b * bs;
+            let base = (b - b0) * bs;
             let take = self.block_len(b);
             out[base..base + take].copy_from_slice(&acc[..take]);
         }
@@ -376,6 +407,38 @@ impl BlockedStore {
         match self {
             BlockedStore::U8(b) => b.partial_sums_into(lut, k0, k1, out),
             BlockedStore::U16(b) => b.partial_sums_into(lut, k0, k1, out),
+        }
+    }
+
+    /// Rows covered by the block range `[b0, b1)` (see
+    /// [`BlockedCodes::range_rows`]).
+    #[inline]
+    pub fn range_rows(&self, b0: usize, b1: usize) -> usize {
+        match self {
+            BlockedStore::U8(b) => b.range_rows(b0, b1),
+            BlockedStore::U16(b) => b.range_rows(b0, b1),
+        }
+    }
+
+    /// Dense f32 sweep over the block range `[b0, b1)` (see
+    /// [`BlockedCodes::partial_sums_range_into`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn partial_sums_range_into(
+        &self,
+        lut: &Lut,
+        k0: usize,
+        k1: usize,
+        b0: usize,
+        b1: usize,
+        out: &mut [f32],
+    ) {
+        match self {
+            BlockedStore::U8(b) => {
+                b.partial_sums_range_into(lut, k0, k1, b0, b1, out)
+            }
+            BlockedStore::U16(b) => {
+                b.partial_sums_range_into(lut, k0, k1, b0, b1, out)
+            }
         }
     }
 
@@ -538,6 +601,33 @@ mod tests {
         // empty batch: nothing written, nothing read
         let store = BlockedStore::from_codes(&codes, m);
         store.partial_sums_batch_into(&[], 0, k, &mut []);
+    }
+
+    /// Range sweeps must be bitwise equal to the matching slice of the
+    /// whole-database sweep, including tail blocks and empty ranges.
+    #[test]
+    fn range_sweep_matches_whole_sweep_slices() {
+        let (k, m) = (4, 16);
+        let lut = random_lut(k, m, 21);
+        let codes = random_codes(150, k, m, 22);
+        for store_m in [m, 400] {
+            let store = BlockedStore::from_codes(&codes, store_m);
+            let bs = store.block_size();
+            let nb = store.num_blocks();
+            let mut whole = vec![f32::NAN; 150];
+            store.partial_sums_into(&lut, 0, k, &mut whole);
+            for (b0, b1) in [(0usize, nb), (0, 1), (1, nb), (2, 2), (nb - 1, nb)]
+            {
+                let rows = store.range_rows(b0, b1);
+                let mut out = vec![f32::NAN; rows];
+                store.partial_sums_range_into(&lut, 0, k, b0, b1, &mut out);
+                assert_eq!(
+                    &out[..],
+                    &whole[b0 * bs..b0 * bs + rows],
+                    "store_m={store_m} blocks [{b0},{b1}) diverged"
+                );
+            }
+        }
     }
 
     #[test]

@@ -23,12 +23,17 @@
 //! path consumes lives in [`two_step`].
 //!
 //! For multi-worker serving, [`shard`] cuts one index into contiguous
-//! block-range shards (each a full [`EncodedIndex`]); the coordinator's
+//! block-range shards (each a full [`EncodedIndex`]), exportable as
+//! standalone placement-carrying snapshots (`ShardedIndex::shard_pack`)
+//! for `shard-server` processes on other hosts; the coordinator's
 //! scatter-gather layer fans queries across them and merges per-shard
 //! top-k lists (see `crate::coordinator::gather`). The dense sweeps and
 //! the two-step engine also come in LUT-major batched variants
 //! (`search_icq::search_scanfirst_batch`) that hold each code block
-//! resident while sweeping a whole batch of query LUTs over it.
+//! resident while sweeping a whole batch of query LUTs over it, and in
+//! block-range variants that let `search_icq::search_scanfirst_parallel`
+//! run the full two-step per block range under scoped threads and merge
+//! by the canonical `(distance, id)` order.
 
 #![warn(missing_docs)]
 

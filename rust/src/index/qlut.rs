@@ -344,6 +344,25 @@ pub fn crude_sums_into(
     out: &mut [f32],
 ) {
     assert_eq!(out.len(), blocked.n());
+    crude_sums_range_into(blocked, qlut, 0, blocked.num_blocks(), out);
+}
+
+/// [`crude_sums_into`] restricted to the block range `[b0, b1)`:
+/// `out[i - b0 * B]` receives global row `i`'s quantized crude sum.
+/// `out.len()` must equal [`BlockedCodes::range_rows`]. Per-(block, row)
+/// work is the identical kernel invocation and dequantize loop, so a
+/// range sweep is bitwise equal to the corresponding slice of a
+/// whole-database sweep — this is how the block-parallel single-query
+/// scan splits the quantized crude pass across scoped threads.
+pub fn crude_sums_range_into(
+    blocked: &BlockedCodes<u8>,
+    qlut: &QLut,
+    b0: usize,
+    b1: usize,
+    out: &mut [f32],
+) {
+    assert!(b1 <= blocked.num_blocks(), "block range past the store");
+    assert_eq!(out.len(), blocked.range_rows(b0, b1));
     assert!(
         qlut.k0() + qlut.books() <= blocked.k(),
         "qlut covers books past the index's K"
@@ -352,10 +371,10 @@ pub fn crude_sums_into(
     let (scale, bias) = (qlut.scale(), qlut.bias_sum());
     let kernel = pick_kernel(qlut, bs);
     let mut acc = vec![0u16; bs];
-    for b in 0..blocked.num_blocks() {
+    for b in b0..b1 {
         let blk = blocked.block(b);
         run_kernel(&kernel, blk, bs, qlut, &mut acc);
-        let base = b * bs;
+        let base = (b - b0) * bs;
         let take = blocked.block_len(b);
         for (o, &a) in out[base..base + take].iter_mut().zip(acc.iter()) {
             *o = a as f32 * scale + bias;
@@ -576,5 +595,36 @@ mod tests {
         let q = QLut::from_lut(&lut, 0, 2);
         let mut out: Vec<f32> = Vec::new();
         crude_sums_into(&blocked, &q, &mut out);
+    }
+
+    /// Range sweeps must be bitwise equal to the matching slice of the
+    /// whole-database quantized sweep, across kernels and tail blocks.
+    #[test]
+    fn range_sweep_matches_whole_sweep_slices() {
+        for (n, k, m, block) in [
+            (130usize, 8usize, 16usize, 64usize), // shuffle kernel
+            (100, 4, 256, 64),                    // wide lookup
+            (37, 4, 16, 10),                      // portable remainder
+        ] {
+            let codes = random_codes(n, k, m, (n + 3) as u64);
+            let blocked = BlockedCodes::<u8>::with_block(&codes, block);
+            let lut = random_lut(k, m, 91);
+            let q = QLut::from_lut(&lut, 0, k);
+            let mut whole = vec![f32::NAN; n];
+            crude_sums_into(&blocked, &q, &mut whole);
+            let nb = blocked.num_blocks();
+            for (b0, b1) in
+                [(0usize, nb), (0, 1), (1, nb), (1, 1), (nb - 1, nb)]
+            {
+                let rows = blocked.range_rows(b0, b1);
+                let mut out = vec![f32::NAN; rows];
+                crude_sums_range_into(&blocked, &q, b0, b1, &mut out);
+                assert_eq!(
+                    &out[..],
+                    &whole[b0 * block..b0 * block + rows],
+                    "n={n} m={m} block={block} range [{b0},{b1}) diverged"
+                );
+            }
+        }
     }
 }

@@ -250,6 +250,96 @@ pub fn search_scanfirst_query_qlut(
     search_scanfirst_qlut(index, &lut, opts, ops, crude)
 }
 
+/// Block-parallel single-query scanfirst: split the blocked store into
+/// `threads` contiguous block ranges, run the full two-step (crude sweep
+/// + threshold + refine) on each range under scoped threads, and merge
+/// the per-range top-k lists by the canonical `(distance, id)` order
+/// ([`crate::core::merge_topk`]) — the ROADMAP's "parallelize the dense
+/// crude pass across blocks" item, for single-query latency inside one
+/// big shard.
+///
+/// Each range is mathematically a shard: the crude kernels are the
+/// identical per-block invocations the whole-database sweep runs
+/// (`qlut::crude_sums_range_into` / blocked range sweep), the per-range
+/// refine recomputes the same f32 distances with global row ids
+/// (`two_step::refine_range_from_crude{,_lb}`), and the merge is the
+/// sharded gather's merge — so results match a [`ShardedSearcher`] cut
+/// at the same block boundaries bit for bit, and the flat
+/// [`search_scanfirst_qlut`] on every workload where the sharded path
+/// does (see the sharded parity suite).
+///
+/// Falls back to the serial sweep when the index has fewer blocks than
+/// requested threads would pay for (`threads <= 1` or one block).
+///
+/// [`ShardedSearcher`]: crate::coordinator::ShardedSearcher
+pub fn search_scanfirst_parallel(
+    index: &EncodedIndex,
+    lut: &Lut,
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+    threads: usize,
+) -> Vec<Hit> {
+    let kb = index.k();
+    let fk = index.fast_k.min(kb); // clamp a corrupt fast group
+    let margin = index.sigma * opts.margin_scale;
+    let n = index.len();
+    let nb = index.blocked().num_blocks();
+    let t = threads.min(nb).max(1);
+    if t <= 1 {
+        return search_scanfirst_scratch(index, lut, opts, ops, &mut Vec::new());
+    }
+    let bs = index.blocked().block_size();
+    let chunk = nb.div_ceil(t);
+    let ranges: Vec<(usize, usize)> = (0..t)
+        .map(|i| (i * chunk, ((i + 1) * chunk).min(nb)))
+        .filter(|&(b0, b1)| b0 < b1)
+        .collect();
+    let qlut = match index.blocked().as_u8() {
+        Some(_) if QLut::fits(fk) => Some(QLut::from_lut(lut, 0, fk)),
+        _ => None,
+    };
+    let lists = par_map_indexed(ranges.len(), |ri| {
+        let (b0, b1) = ranges[ri];
+        let row0 = b0 * bs;
+        let mut crude = vec![0.0f32; index.blocked().range_rows(b0, b1)];
+        match (&qlut, index.blocked().as_u8()) {
+            (Some(q), Some(blocked8)) => {
+                qlut::crude_sums_range_into(blocked8, q, b0, b1, &mut crude);
+                two_step::refine_range_from_crude_lb(
+                    index.codes(),
+                    lut,
+                    &mut crude,
+                    row0,
+                    kb,
+                    margin,
+                    opts.k,
+                    ops,
+                )
+            }
+            _ => {
+                index
+                    .blocked()
+                    .partial_sums_range_into(lut, 0, fk, b0, b1, &mut crude);
+                two_step::refine_range_from_crude(
+                    index.codes(),
+                    lut,
+                    &mut crude,
+                    row0,
+                    fk,
+                    kb,
+                    margin,
+                    opts.k,
+                    ops,
+                )
+            }
+        }
+    });
+    ops.add_table_adds((n * fk) as u64);
+    ops.add_candidates(n as u64);
+    ops.add_queries(1);
+    crate::core::merge_topk(&lists, opts.k)
+}
+
 /// Queries swept per block-resident pass of the batched engine: bounds
 /// the crude scratch at `SWEEP_TILE * n` f32 while keeping enough LUTs
 /// per resident code block that the block's bytes amortize across the
@@ -542,6 +632,88 @@ mod tests {
         );
         assert_eq!(one.len(), 1);
         assert_eq!(one[0].len(), 5);
+    }
+
+    /// The block-parallel scanfirst must return exactly what the flat
+    /// scanfirst returns on the workloads where the (mathematically
+    /// identical) sharded gather does — across thread counts, including
+    /// t > number of blocks and the serial fallback.
+    #[test]
+    fn parallel_scanfirst_matches_flat_scanfirst() {
+        let (_, idx) = setup(600, 11);
+        assert!(idx.blocked().as_u8().is_some());
+        let mut rng = Rng::new(51);
+        let mut crude = Vec::new();
+        for threads in [1usize, 2, 3, 7, 64] {
+            for _ in 0..4 {
+                let q: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+                let lut = Lut::build(idx.lut_ctx(), idx.codebooks(), &q);
+                let ops = OpCounter::new();
+                let flat = search_scanfirst_qlut(
+                    &idx,
+                    &lut,
+                    IcqSearchOpts::default(),
+                    &ops,
+                    &mut crude,
+                );
+                let par = search_scanfirst_parallel(
+                    &idx,
+                    &lut,
+                    IcqSearchOpts::default(),
+                    &ops,
+                    threads,
+                );
+                assert_eq!(
+                    flat, par,
+                    "threads={threads}: parallel scanfirst diverged"
+                );
+            }
+        }
+    }
+
+    /// Wide (u16) indexes take the f32 range sweep; parity must hold
+    /// there too, and an empty index must return no hits.
+    #[test]
+    fn parallel_scanfirst_wide_fallback_and_empty() {
+        use crate::data::format::TensorPack;
+        let (n, k, m, d) = (200usize, 3usize, 300usize, 6usize);
+        let mut rng = Rng::new(23);
+        let cb: Vec<f32> = (0..k * m * d).map(|_| rng.normal_f32()).collect();
+        let codes: Vec<i32> =
+            (0..n * k).map(|_| rng.below(m) as i32).collect();
+        let mut pack = TensorPack::new();
+        pack.insert_f32("codebooks", vec![k, m, d], cb);
+        pack.insert_i32("codes", vec![n, k], codes);
+        pack.insert_i32("fast_k", vec![1], vec![1]);
+        pack.insert_f32("sigma", vec![1], vec![0.5]);
+        pack.insert_i32("labels", vec![n], vec![0; n]);
+        let idx = EncodedIndex::from_pack(&pack).unwrap();
+        assert!(idx.blocked().as_u8().is_none(), "m=300 must store u16");
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let lut = Lut::build(idx.lut_ctx(), idx.codebooks(), &q);
+        let ops = OpCounter::new();
+        let flat =
+            search_scanfirst(&idx, &lut, IcqSearchOpts::default(), &ops);
+        for threads in [2usize, 4] {
+            let par = search_scanfirst_parallel(
+                &idx,
+                &lut,
+                IcqSearchOpts::default(),
+                &ops,
+                threads,
+            );
+            assert_eq!(flat, par, "wide fallback diverged at {threads}");
+        }
+
+        let empty = idx.slice(0, 0);
+        let hits = search_scanfirst_parallel(
+            &empty,
+            &lut,
+            IcqSearchOpts::default(),
+            &ops,
+            4,
+        );
+        assert!(hits.is_empty());
     }
 
     #[test]

@@ -30,6 +30,7 @@ use std::sync::Arc;
 use anyhow::{ensure, Result};
 
 use super::encoded::EncodedIndex;
+use crate::data::format::TensorPack;
 
 /// One shard's contiguous global row range `[start, end)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -205,6 +206,49 @@ impl ShardedIndex {
     pub fn to_global(&self, s: usize, local_id: u32) -> u32 {
         self.specs[s].start as u32 + local_id
     }
+
+    /// Serialize shard `s` as a standalone icqfmt snapshot: the shard's
+    /// own [`EncodedIndex::to_pack`] tensors plus its placement manifest
+    /// (`shard_start` = global row id of the shard's first vector,
+    /// `shard_total` = rows in the parent index). This is what a
+    /// `shard-server` process loads to serve one shard of a larger
+    /// database over the wire protocol — [`load_shard_pack`] reads it
+    /// back and the server adds `shard_start` to every hit id, so remote
+    /// replies arrive in the parent's global id space.
+    pub fn shard_pack(&self, s: usize) -> TensorPack {
+        let mut pack = self.shards[s].to_pack();
+        pack.insert_i32(
+            "shard_start",
+            vec![1],
+            vec![self.specs[s].start as i32],
+        );
+        pack.insert_i32("shard_total", vec![1], vec![self.len() as i32]);
+        pack
+    }
+}
+
+/// Load a shard snapshot written by [`ShardedIndex::shard_pack`]:
+/// returns the shard's standalone [`EncodedIndex`] plus the global row
+/// id of its first vector. Plain whole-index snapshots (no
+/// `shard_start` tensor, e.g. from `icq train`) load with start 0, so
+/// one loader serves both the single-host and multi-host paths.
+pub fn load_shard_pack(pack: &TensorPack) -> Result<(EncodedIndex, usize)> {
+    let index = EncodedIndex::from_pack(pack)?;
+    let start = match pack.scalar_i32("shard_start") {
+        Ok(v) => {
+            ensure!(v >= 0, "negative shard_start {v}");
+            v as usize
+        }
+        Err(_) => 0,
+    };
+    if let Ok(total) = pack.scalar_i32("shard_total") {
+        ensure!(
+            total >= 0 && start + index.len() <= total as usize,
+            "shard rows [{start}, {}) exceed shard_total {total}",
+            start + index.len()
+        );
+    }
+    Ok((index, start))
 }
 
 #[cfg(test)]
@@ -301,6 +345,35 @@ mod tests {
         assert!(ShardedIndex::from_boundaries(&idx, &[0, 30, 20, 50]).is_err());
         assert!(ShardedIndex::build(&idx, ShardPolicy::Count(0)).is_err());
         assert!(ShardedIndex::build(&idx, ShardPolicy::MaxBytes(0)).is_err());
+    }
+
+    /// Shard snapshots must round-trip (codes, labels, search params,
+    /// placement) and plain index packs must load with start 0.
+    #[test]
+    fn shard_pack_roundtrips_with_placement() {
+        let idx = index(330, 7);
+        let sh = ShardedIndex::build(&idx, ShardPolicy::Count(3)).unwrap();
+        for s in 0..sh.num_shards() {
+            let pack = sh.shard_pack(s);
+            let (back, start) = load_shard_pack(&pack).unwrap();
+            assert_eq!(start, sh.spec(s).start);
+            assert_eq!(back.len(), sh.shard(s).len());
+            assert_eq!(back.codes(), sh.shard(s).codes());
+            assert_eq!(back.labels, sh.shard(s).labels);
+            assert_eq!(back.fast_k, idx.fast_k);
+            assert_eq!(back.sigma, idx.sigma);
+        }
+        // a plain whole-index snapshot has no placement: start 0
+        let (whole, start) = load_shard_pack(&idx.to_pack()).unwrap();
+        assert_eq!(start, 0);
+        assert_eq!(whole.len(), idx.len());
+        // corrupt placement is rejected
+        let mut bad = sh.shard_pack(1);
+        bad.insert_i32("shard_start", vec![1], vec![-3]);
+        assert!(load_shard_pack(&bad).is_err());
+        let mut bad = sh.shard_pack(2);
+        bad.insert_i32("shard_total", vec![1], vec![10]);
+        assert!(load_shard_pack(&bad).is_err());
     }
 
     #[test]

@@ -50,10 +50,35 @@ pub fn refine_from_crude(
     top_k: usize,
     ops: &OpCounter,
 ) -> Vec<Hit> {
+    refine_range_from_crude(
+        codes, lut, crude, 0, fast_k, k_books, margin, top_k, ops,
+    )
+}
+
+/// [`refine_from_crude`] over the contiguous row range
+/// `[row0, row0 + crude.len())` of `codes`: `crude[i]` is the crude sum
+/// of global row `row0 + i`, and returned hit ids are global. This is
+/// the per-chunk refine of the block-parallel single-query scan
+/// (`search_icq::search_scanfirst_parallel`) — each scoped thread
+/// refines its own block range, and the canonical `(distance, id)`
+/// merge reassembles the global top-k.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_range_from_crude(
+    codes: &Codes,
+    lut: &Lut,
+    crude: &mut [f32],
+    row0: usize,
+    fast_k: usize,
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Hit> {
     let fast_k = fast_k.min(k_books);
     refine_impl(
         codes,
         crude,
+        row0,
         margin,
         top_k,
         k_books - fast_k,
@@ -66,39 +91,43 @@ pub fn refine_from_crude(
 /// run; `full_dist(code_row, crude_entry)` produces the exact distance
 /// of one candidate and `adds_per_refine` is what each call costs in
 /// table-adds.
+#[allow(clippy::too_many_arguments)]
 fn refine_impl(
     codes: &Codes,
     crude: &mut [f32],
+    row0: usize,
     margin: f32,
     top_k: usize,
     adds_per_refine: usize,
     ops: &OpCounter,
     mut full_dist: impl FnMut(&[u16], f32) -> f32,
 ) -> Vec<Hit> {
-    debug_assert_eq!(crude.len(), codes.n());
+    debug_assert!(row0 + crude.len() <= codes.n());
     // seed the threshold by refining the crude top-k first: their FULL
-    // distances give a valid pruning radius.
+    // distances give a valid pruning radius. Ids are global rows
+    // (row0 + local index) throughout, so tie-breaking and the returned
+    // hits match the whole-database refine's id space.
     let mut seed = TopK::new(top_k);
     for (i, &c) in crude.iter().enumerate() {
-        seed.push(i as u32, c);
+        seed.push((row0 + i) as u32, c);
     }
     let mut top = TopK::new(top_k);
     let mut refined = 0u64;
     for hit in seed.into_sorted() {
         let i = hit.id as usize;
-        let full = full_dist(codes.row(i), crude[i]);
+        let full = full_dist(codes.row(i), crude[i - row0]);
         refined += 1;
         top.push(hit.id, full);
-        crude[i] = f32::INFINITY; // mask: never refined twice
+        crude[i - row0] = f32::INFINITY; // mask: never refined twice
     }
 
     // dense refine over everything still potentially inside the radius
     let thresh = top.threshold() + margin;
     for (i, &c) in crude.iter().enumerate() {
         if c < thresh {
-            let full = full_dist(codes.row(i), c);
+            let full = full_dist(codes.row(row0 + i), c);
             refined += 1;
-            top.push(i as u32, full);
+            top.push((row0 + i) as u32, full);
         }
     }
     ops.add_table_adds(refined * adds_per_refine as u64);
@@ -127,7 +156,24 @@ pub fn refine_from_crude_lb(
     top_k: usize,
     ops: &OpCounter,
 ) -> Vec<Hit> {
-    refine_impl(codes, crude, margin, top_k, k_books, ops, |row, _| {
+    refine_range_from_crude_lb(codes, lut, crude, 0, k_books, margin, top_k, ops)
+}
+
+/// [`refine_from_crude_lb`] over the contiguous row range
+/// `[row0, row0 + crude.len())` — the lower-bound flavor of
+/// [`refine_range_from_crude`], for the block-parallel quantized scan.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_range_from_crude_lb(
+    codes: &Codes,
+    lut: &Lut,
+    crude: &mut [f32],
+    row0: usize,
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    refine_impl(codes, crude, row0, margin, top_k, k_books, ops, |row, _| {
         lut.partial_sum(row, 0, k_books)
     })
 }
@@ -392,6 +438,51 @@ mod tests {
             let serial =
                 refine_from_crude_lb(&codes, lut, &mut cr, k, 0.1, 7, &ops);
             assert_eq!(hits, &serial, "batched lb refine diverged");
+        }
+    }
+
+    /// Splitting the rows into ranges, refining each with
+    /// `refine_range_from_crude`, and merging by the canonical
+    /// `(distance, id)` order must reproduce the whole-database refine
+    /// (margin 0 + exact crude sums make both sides the exact full-
+    /// distance top-k, so equality is guaranteed, ids included).
+    #[test]
+    fn range_refines_merge_back_to_whole_refine() {
+        use crate::core::merge_topk;
+        let (n, k, m) = (160usize, 4usize, 8usize);
+        let mut rng = Rng::new(17);
+        let lut_data: Vec<f32> =
+            (0..k * m).map(|_| rng.uniform_f32()).collect();
+        let lut = Lut::from_flat(k, m, lut_data);
+        let code_data: Vec<u16> =
+            (0..n * k).map(|_| rng.below(m) as u16).collect();
+        let codes = Codes::from_vec(n, k, code_data);
+        let fast_k = 2;
+        let crude_of = |lo: usize, hi: usize| -> Vec<f32> {
+            (lo..hi)
+                .map(|i| lut.partial_sum(codes.row(i), 0, fast_k))
+                .collect()
+        };
+        let ops = OpCounter::new();
+        let mut whole = crude_of(0, n);
+        let expect = refine_from_crude(
+            &codes, &lut, &mut whole, fast_k, k, 0.0, 9, &ops,
+        );
+        for cuts in [vec![0usize, 64, n], vec![0, 1, 80, 80, n]] {
+            let lists: Vec<Vec<Hit>> = cuts
+                .windows(2)
+                .map(|w| {
+                    let mut cr = crude_of(w[0], w[1]);
+                    refine_range_from_crude(
+                        &codes, &lut, &mut cr, w[0], fast_k, k, 0.0, 9, &ops,
+                    )
+                })
+                .collect();
+            assert_eq!(
+                merge_topk(&lists, 9),
+                expect,
+                "cuts {cuts:?}: merged range refines diverged"
+            );
         }
     }
 

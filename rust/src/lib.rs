@@ -24,15 +24,19 @@
 //! lowers the query-path graphs to HLO text and trains the joint model;
 //! the rust binary is self-contained afterwards.
 //!
-//! Two serving topologies share one engine: a flat index behind
-//! [`coordinator::NativeSearcher`], or the same index cut into
-//! contiguous block-range shards ([`index::shard`]) behind
+//! Three serving topologies share one engine: a flat index behind
+//! [`coordinator::NativeSearcher`]; the same index cut into contiguous
+//! block-range shards ([`index::shard`]) behind
 //! [`coordinator::ShardedSearcher`] — per-shard worker threads run the
 //! LUT-major batched two-step scan and a gather merges per-shard top-k
 //! lists with `(distance, id)` tie-breaking, bitwise identical to the
-//! flat scan. `ARCHITECTURE.md` at the repo root walks the full layer
-//! map, the data layouts, and the lower-bound invariant chain that
-//! makes the pruning safe.
+//! flat scan; and the same gather stretched across hosts, where some
+//! (or all) shards are `icq shard-server` processes spoken to over a
+//! length-prefixed binary protocol ([`coordinator::wire`]) behind the
+//! [`coordinator::ShardBackend`] trait. `ARCHITECTURE.md` at the repo
+//! root walks the full layer map, the data layouts, the lower-bound
+//! invariant chain that makes the pruning safe, and the multi-host
+//! topology.
 
 pub mod bench;
 pub mod config;

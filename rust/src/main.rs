@@ -4,7 +4,10 @@
 //!   gen-synthetic            print Table 1 + materialize the datasets
 //!   train                    train ICQ, write an index snapshot
 //!   eval                     run one configuration end-to-end, print metrics
-//!   serve                    start the TCP serving coordinator
+//!   serve                    start the TCP serving coordinator (flat,
+//!                            locally sharded, and/or over remote shards)
+//!   shard-server             serve one shard over the binary wire protocol
+//!   export-shards            cut an index into per-shard snapshots
 //!   bench-figure <id>        regenerate a paper table/figure (or `all`)
 //!   runtime-check            verify the PJRT artifacts against native math
 //!
@@ -19,10 +22,15 @@ use anyhow::Result;
 use icq::bench::figures::{run_figure, Scale};
 use icq::bench::workload::{run_method, EmbedKind, RunSpec};
 use icq::config::{EngineConfig, MethodKind};
-use icq::coordinator::{Coordinator, NativeSearcher};
+use icq::coordinator::{
+    wire, BatchSearcher, Coordinator, LocalShardBackend, NativeSearcher,
+    RemoteShardBackend, ShardBackend, ShardedSearcher,
+};
 use icq::core::Matrix;
+use icq::data::format::TensorPack;
 use icq::data::loader;
-use icq::index::EncodedIndex;
+use icq::index::shard::{load_shard_pack, ShardPolicy, ShardedIndex};
+use icq::index::{EncodedIndex, OpCounter};
 use icq::quantizer::icq::{Icq, IcqOpts};
 use icq::quantizer::Quantizer;
 
@@ -33,7 +41,16 @@ commands:
   gen-synthetic            print Table 1 + dataset summaries
   train [--out PATH]       train ICQ, write an index snapshot (icqfmt)
   eval                     run one configuration, print metrics
-  serve [--addr HOST:PORT] start the TCP serving coordinator
+  serve [--addr HOST:PORT] start the TCP serving coordinator; with
+                           serve.shards=N / serve.remote_shards=... it
+                           gathers over local and/or remote shards
+  shard-server [--addr HOST:PORT] [--index PATH] [--shard I/N]
+                           serve one shard over the binary wire protocol
+                           (loads a snapshot, or trains and cuts shard
+                           I of N from the configured dataset)
+  export-shards --shards N [--out PREFIX]
+                           train, cut N shards, write PREFIX<i>.icqf
+                           snapshots for shard-server processes
   bench-figure <ID> [--fast]  regenerate table1|fig1..fig6|all
   runtime-check            verify PJRT artifacts vs native math
 ";
@@ -107,6 +124,24 @@ fn main() -> Result<()> {
             let addr =
                 flag_value(tail, "--addr").unwrap_or_else(|| "127.0.0.1:7878".into());
             serve(&cfg, &addr)
+        }
+        "shard-server" => {
+            let addr =
+                flag_value(tail, "--addr").unwrap_or_else(|| "127.0.0.1:7979".into());
+            shard_server(
+                &cfg,
+                &addr,
+                flag_value(tail, "--index"),
+                flag_value(tail, "--shard"),
+            )
+        }
+        "export-shards" => {
+            let shards = flag_value(tail, "--shards")
+                .ok_or_else(|| anyhow::anyhow!("export-shards needs --shards N\n{USAGE}"))?
+                .parse::<usize>()?;
+            let prefix =
+                flag_value(tail, "--out").unwrap_or_else(|| "shard".into());
+            export_shards(&cfg, shards, &prefix)
         }
         "bench-figure" => {
             let id = tail
@@ -205,7 +240,9 @@ fn eval(cfg: &EngineConfig) -> Result<()> {
     Ok(())
 }
 
-fn serve(cfg: &EngineConfig, addr: &str) -> Result<()> {
+/// Train the configured ICQ index over the configured dataset (the
+/// `serve` / `shard-server` build path when no snapshot is given).
+fn build_index(cfg: &EngineConfig) -> Result<EncodedIndex> {
     let data = loader::load_named(
         &cfg.dataset,
         if cfg.n_database == 0 { 4000 } else { cfg.n_database },
@@ -223,10 +260,251 @@ fn serve(cfg: &EngineConfig, addr: &str) -> Result<()> {
             seed: cfg.seed,
         },
     );
-    let index = Arc::new(EncodedIndex::build_icq(&icq, &data.x, data.y.clone()));
-    let searcher = Arc::new(NativeSearcher::new(index, cfg.search));
-    let coord = Arc::new(Coordinator::start(searcher, cfg.serve));
+    Ok(EncodedIndex::build_icq(&icq, &data.x, data.y.clone()))
+}
+
+/// Build the serving searcher the config asks for: the flat
+/// `NativeSearcher` (shards <= 1, no remotes), a `ShardedSearcher`
+/// over local block-range shards, or a mixed/remote gather.
+///
+/// With remote shards configured, the remotes' hello placement
+/// (`shard_start`/`shard_len`) decides which rows they own: remotes
+/// must not overlap each other, must agree on `dim` and `fast_k` with
+/// the local index, and the local side serves exactly the *uncovered*
+/// rows (each contiguous gap cut into up to `serve.shards` block-range
+/// shards). That keeps the gathered row set a partition of the dataset
+/// — overlapping coverage would duplicate hits in the merged top-k.
+fn build_searcher(cfg: &EngineConfig) -> Result<Arc<dyn BatchSearcher>> {
+    let serve_cfg = &cfg.serve;
+    anyhow::ensure!(
+        serve_cfg.shards >= 1 || !serve_cfg.remote_shards.is_empty(),
+        "serve.shards = 0 means 'no local shard' and needs at least one \
+         serve.remote_shards entry — an empty remote list here is a \
+         misconfiguration, not a flat server"
+    );
+    if serve_cfg.shards <= 1 && serve_cfg.remote_shards.is_empty() {
+        let index = Arc::new(build_index(cfg)?);
+        return Ok(Arc::new(NativeSearcher::new(index, cfg.search)));
+    }
+    let ops = Arc::new(OpCounter::new());
+
+    // connect every remote first: their placement decides what is left
+    // for the local side to serve
+    let mut remotes = Vec::new();
+    for addr in &serve_cfg.remote_shards {
+        let remote = RemoteShardBackend::connect(addr, cfg.search)?;
+        let hello = remote.hello();
+        println!(
+            "[serve] remote shard {addr}: rows [{}, {}) dim={} fast_k={}",
+            hello.start,
+            hello.start + hello.shard_len,
+            hello.dim,
+            hello.fast_k
+        );
+        remotes.push(remote);
+    }
+    for r in &remotes {
+        anyhow::ensure!(
+            r.hello().dim == remotes[0].hello().dim,
+            "remote shard {} dim {} != remote shard {} dim {}",
+            r.addr(),
+            r.hello().dim,
+            remotes[0].addr(),
+            remotes[0].hello().dim
+        );
+    }
+    // remotes must tile disjoint row ranges — overlap means the same
+    // vector answers twice and the merge returns duplicated top-k
+    let mut covered: Vec<(usize, usize, String)> = remotes
+        .iter()
+        .map(|r| {
+            let h = r.hello();
+            (h.start, h.start + h.shard_len, r.addr().to_string())
+        })
+        .collect();
+    covered.sort();
+    for w in covered.windows(2) {
+        anyhow::ensure!(
+            w[0].1 <= w[1].0,
+            "remote shards {} (rows [{}, {})) and {} (rows [{}, {})) \
+             overlap — each database row must be served exactly once",
+            w[0].2,
+            w[0].0,
+            w[0].1,
+            w[1].2,
+            w[1].0,
+            w[1].1
+        );
+    }
+
+    let mut backends: Vec<Box<dyn ShardBackend>> = Vec::new();
+    let mut lut_source = None;
+    let mut dim = remotes.first().map(|r| r.hello().dim);
+    if serve_cfg.shards >= 1 {
+        let index = build_index(cfg)?;
+        if let Some(d) = dim {
+            anyhow::ensure!(
+                d == index.dim(),
+                "remote shard dim {d} != local index dim {}",
+                index.dim()
+            );
+        }
+        dim = Some(index.dim());
+        for r in &remotes {
+            let h = r.hello();
+            anyhow::ensure!(
+                h.fast_k == index.fast_k,
+                "remote shard {} fast_k {} != local index fast_k {} \
+                 (config drift would silently change the crude pass)",
+                r.addr(),
+                h.fast_k,
+                index.fast_k
+            );
+            anyhow::ensure!(
+                h.start + h.shard_len <= index.len(),
+                "remote shard {} rows [{}, {}) exceed the database ({} rows)",
+                r.addr(),
+                h.start,
+                h.start + h.shard_len,
+                index.len()
+            );
+        }
+        // local side = the complement of the remote coverage, each
+        // contiguous gap cut into up to serve.shards local shards
+        let mut gaps = Vec::new();
+        let mut cursor = 0usize;
+        for &(s, e, _) in &covered {
+            if cursor < s {
+                gaps.push((cursor, s));
+            }
+            cursor = cursor.max(e);
+        }
+        if cursor < index.len() {
+            gaps.push((cursor, index.len()));
+        }
+        if gaps.is_empty() {
+            println!(
+                "[serve] remote shards cover every row; nothing to serve \
+                 locally"
+            );
+        }
+        for (a, b) in gaps {
+            let slice = index.slice(a, b);
+            let sharded = ShardedIndex::build(
+                &slice,
+                ShardPolicy::Count(serve_cfg.shards),
+            )?;
+            println!(
+                "[serve] local rows [{a}, {b}) cut into {} shard(s)",
+                sharded.num_shards()
+            );
+            for (spec, shard) in sharded.specs().iter().zip(sharded.shards())
+            {
+                if lut_source.is_none() {
+                    lut_source = Some(shard.clone());
+                }
+                backends.push(Box::new(LocalShardBackend::new(
+                    a + spec.start,
+                    shard.clone(),
+                    cfg.search,
+                    ops.clone(),
+                )));
+            }
+        }
+    }
+    for remote in remotes {
+        backends.push(Box::new(remote));
+    }
+    let dim = dim.ok_or_else(|| {
+        anyhow::anyhow!("serve.shards=0 needs at least one remote shard")
+    })?;
+    Ok(Arc::new(ShardedSearcher::from_backends(
+        backends, lut_source, dim, ops,
+    )?))
+}
+
+fn serve(cfg: &EngineConfig, addr: &str) -> Result<()> {
+    let searcher = build_searcher(cfg)?;
+    let coord = Arc::new(Coordinator::start(searcher, cfg.serve.clone()));
     coord.serve_tcp(addr)
+}
+
+/// Serve one shard of the database over the binary wire protocol. With
+/// `--index PATH` the shard (and its global start row) comes from a
+/// snapshot written by `export-shards` (or `train`, start 0); otherwise
+/// the configured dataset is trained in-process, and `--shard I/N` cuts
+/// shard I of an N-way block-aligned split — every process that trains
+/// with the same config derives the identical index, so cutting
+/// per-process stays consistent across hosts.
+fn shard_server(
+    cfg: &EngineConfig,
+    addr: &str,
+    index_path: Option<String>,
+    shard_sel: Option<String>,
+) -> Result<()> {
+    let (index, start) = match index_path {
+        Some(path) => {
+            let pack = TensorPack::load(&path)?;
+            let (index, start) = load_shard_pack(&pack)?;
+            println!(
+                "[shard-server] loaded {path}: rows [{start}, {})",
+                start + index.len()
+            );
+            (index, start)
+        }
+        None => (build_index(cfg)?, 0),
+    };
+    let (index, start) = match shard_sel {
+        Some(sel) => {
+            let (i, n) = sel
+                .split_once('/')
+                .and_then(|(i, n)| {
+                    Some((i.parse::<usize>().ok()?, n.parse::<usize>().ok()?))
+                })
+                .ok_or_else(|| {
+                    anyhow::anyhow!("--shard expects I/N, got '{sel}'")
+                })?;
+            let sharded = ShardedIndex::build(&index, ShardPolicy::Count(n))?;
+            anyhow::ensure!(
+                i < sharded.num_shards(),
+                "--shard {i}/{n}: only {} shards exist",
+                sharded.num_shards()
+            );
+            let spec = sharded.spec(i);
+            println!(
+                "[shard-server] cut shard {i}/{n}: rows [{}, {})",
+                start + spec.start,
+                start + spec.end
+            );
+            (sharded.shard(i).as_ref().clone(), start + spec.start)
+        }
+        None => (index, start),
+    };
+    let listener = std::net::TcpListener::bind(addr)?;
+    // announce the bound address on stdout (flushed) so supervisors and
+    // the loopback integration test can read the ephemeral port back
+    println!("[shard-server] listening on {}", listener.local_addr()?);
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    wire::serve_shard(listener, Arc::new(index), start)
+}
+
+/// Train once, cut `shards` block-aligned shards, and write each as a
+/// standalone snapshot (`PREFIX<i>.icqf`) carrying its global placement
+/// — the artifacts `shard-server --index` processes load.
+fn export_shards(cfg: &EngineConfig, shards: usize, prefix: &str) -> Result<()> {
+    let index = build_index(cfg)?;
+    let sharded = ShardedIndex::build(&index, ShardPolicy::Count(shards))?;
+    for s in 0..sharded.num_shards() {
+        let path = format!("{prefix}{s}.icqf");
+        sharded.shard_pack(s).save(&path)?;
+        let spec = sharded.spec(s);
+        println!(
+            "[export-shards] wrote {path}: rows [{}, {})",
+            spec.start, spec.end
+        );
+    }
+    Ok(())
 }
 
 fn bench_figure(id: &str, fast: bool) -> Result<()> {

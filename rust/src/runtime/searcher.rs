@@ -80,20 +80,23 @@ impl XlaLutSearcher {
 }
 
 impl BatchSearcher for XlaLutSearcher {
-    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
-        let luts = luts_for(&self.svc, &self.index, self.batch, queries)
-            .expect("pjrt lut batch");
+    fn search_batch(
+        &self,
+        queries: &Matrix,
+        top_k: usize,
+    ) -> Result<Vec<Vec<Hit>>> {
+        let luts = luts_for(&self.svc, &self.index, self.batch, queries)?;
         // LUT-major batched sweep over the PJRT-built LUTs: each code
         // block is read once per batch tile, quantized (u8 LUT) on
         // narrow indexes, f32 otherwise; one crude scratch per batch.
         let mut crude = Vec::new();
-        search_icq::search_scanfirst_batch_with_luts(
+        Ok(search_icq::search_scanfirst_batch_with_luts(
             &self.index,
             &luts,
             IcqSearchOpts { k: top_k, ..self.opts },
             &self.ops,
             &mut crude,
-        )
+        ))
     }
 
     fn dim(&self) -> usize {
@@ -197,25 +200,29 @@ impl XlaScanSearcher {
 }
 
 impl BatchSearcher for XlaScanSearcher {
-    fn search_batch(&self, queries: &Matrix, top_k: usize) -> Vec<Vec<Hit>> {
+    fn search_batch(
+        &self,
+        queries: &Matrix,
+        top_k: usize,
+    ) -> Result<Vec<Vec<Hit>>> {
         let k = self.index.k();
         let fast_k = self.index.fast_k;
         let margin = self.index.sigma * self.opts.margin_scale;
         // one LUT-graph pass serves both the crude scan and the refine
-        let luts = luts_for(&self.svc, &self.index, self.batch, queries)
-            .expect("pjrt lut batch");
-        let crude = self.crude_from_luts(&luts).expect("pjrt scan");
+        let luts = luts_for(&self.svc, &self.index, self.batch, queries)?;
+        let crude = self.crude_from_luts(&luts)?;
         let codes = self.index.codes();
         // crude-pass ops are counted inside crude_from_luts; the shared
         // engine counts the refine side.
-        luts.iter()
+        Ok(luts
+            .iter()
             .zip(crude)
             .map(|(lut, mut cr)| {
                 two_step::refine_from_crude(
                     codes, lut, &mut cr, fast_k, k, margin, top_k, &self.ops,
                 )
             })
-            .collect()
+            .collect())
     }
 
     fn dim(&self) -> usize {

@@ -84,6 +84,7 @@ fn sheds_load_when_admission_exhausted() {
         max_wait_us: 10,
         workers: 1,
         max_inflight: 1,
+        ..ServeConfig::default()
     });
     let mut rejected = 0;
     let mut ok = 0;
@@ -119,6 +120,7 @@ fn metrics_track_completed_queries() {
         max_wait_us: 100,
         workers: 2,
         max_inflight: 256,
+        ..ServeConfig::default()
     });
     for i in 0..20 {
         let v = vec![(i % 5) as f32 * 0.2; 12];

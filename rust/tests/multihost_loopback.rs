@@ -1,0 +1,148 @@
+//! Multi-host loopback integration: spawn two real `icq shard-server`
+//! *processes* on 127.0.0.1 serving exported shard snapshots, gather
+//! over them (plus one in-process local shard) from this process, and
+//! assert the result is bitwise identical to the flat single-process
+//! path — the end-to-end proof that the serving topology survives a
+//! process (and therefore a host) boundary. CI runs this test as its
+//! own step.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+use icq::config::SearchConfig;
+use icq::coordinator::{
+    BatchSearcher, LocalShardBackend, NativeSearcher, RemoteShardBackend,
+    ShardBackend, ShardedSearcher,
+};
+use icq::core::{Matrix, Rng};
+use icq::index::shard::{ShardPolicy, ShardedIndex};
+use icq::index::{EncodedIndex, OpCounter};
+use icq::quantizer::icq::{Icq, IcqOpts};
+
+/// Kill the child on drop so failed asserts don't leak servers.
+struct ServerProc(Child);
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Spawn `icq shard-server --index <snapshot>` on an ephemeral port and
+/// read the bound address back off its stdout.
+fn spawn_shard_server(snapshot: &std::path::Path) -> (ServerProc, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_icq"))
+        .args([
+            "shard-server",
+            "--addr",
+            "127.0.0.1:0",
+            "--index",
+            snapshot.to_str().unwrap(),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn shard-server");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut addr = None;
+    for _ in 0..50 {
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            break;
+        }
+        if let Some(rest) = line.trim().strip_prefix("[shard-server] listening on ")
+        {
+            addr = Some(rest.to_string());
+            break;
+        }
+    }
+    let addr = addr.expect("shard-server never announced its address");
+    (ServerProc(child), addr)
+}
+
+#[test]
+#[ignore = "spawns real server processes; run via the dedicated CI step \
+            (cargo test --test multihost_loopback -- --ignored)"]
+fn two_processes_plus_local_shard_match_flat_bitwise() {
+    // deterministic index, small enough to train quickly
+    let n = 330;
+    let mut rng = Rng::new(41);
+    let x = Matrix::from_fn(n, 16, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 3.0 } else { 0.4 }
+    });
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k: 8, m: 16, fast_k: 2, kmeans_iters: 6, prior_steps: 100, seed: 7 },
+    );
+    let index =
+        EncodedIndex::build_icq(&icq, &x, (0..n as i32).collect());
+    let sharded = ShardedIndex::build(&index, ShardPolicy::Count(3)).unwrap();
+    assert_eq!(sharded.num_shards(), 3);
+
+    // export shards 0 and 1 as standalone snapshots
+    let dir = std::env::temp_dir()
+        .join(format!("icq_multihost_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for s in [0usize, 1] {
+        let path = dir.join(format!("shard{s}.icqf"));
+        sharded.shard_pack(s).save(&path).unwrap();
+        let (proc_, addr) = spawn_shard_server(&path);
+        servers.push(proc_);
+        addrs.push(addr);
+    }
+
+    // gather: two remote shard-server processes + one local shard
+    let cfg = SearchConfig::default();
+    let ops = Arc::new(OpCounter::new());
+    let mut backends: Vec<Box<dyn ShardBackend>> = Vec::new();
+    for (s, addr) in addrs.iter().enumerate() {
+        let remote = RemoteShardBackend::connect_with_timeout(
+            addr,
+            cfg,
+            Duration::from_secs(20),
+        )
+        .unwrap_or_else(|e| panic!("connecting to shard {s}: {e:#}"));
+        assert_eq!(remote.hello().start, sharded.spec(s).start);
+        backends.push(Box::new(remote));
+    }
+    backends.push(Box::new(LocalShardBackend::new(
+        sharded.spec(2).start,
+        sharded.shard(2).clone(),
+        cfg,
+        ops.clone(),
+    )));
+    let searcher = ShardedSearcher::from_backends(
+        backends,
+        Some(sharded.shard(2).clone()),
+        index.dim(),
+        ops,
+    )
+    .unwrap();
+
+    // flat single-process baseline through the same serving surface
+    let flat = NativeSearcher::new(Arc::new(index.clone()), cfg);
+    let mut qrng = Rng::new(43);
+    let qs = Matrix::from_fn(6, 16, |_, j| {
+        qrng.normal_f32() * if j % 4 == 0 { 2.0 } else { 0.5 }
+    });
+    for top_k in [1usize, 10, 200] {
+        let got = searcher.search_batch(&qs, top_k).unwrap();
+        let want = flat.search_batch(&qs, top_k).unwrap();
+        for (qi, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g, w,
+                "top_k={top_k} query {qi}: multi-process gather diverged \
+                 from the flat index"
+            );
+        }
+    }
+
+    drop(servers); // kill the children before cleaning their snapshots
+    let _ = std::fs::remove_dir_all(&dir);
+}

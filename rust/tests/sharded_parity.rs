@@ -63,7 +63,7 @@ fn flat_results(
         Arc::new(index.clone()),
         SearchConfig::default(),
     );
-    s.search_batch(qs, top_k)
+    s.search_batch(qs, top_k).unwrap()
 }
 
 fn assert_identical(
@@ -92,7 +92,7 @@ fn sharded_matches_flat_across_shard_counts() {
             SearchConfig::default(),
         )
         .unwrap();
-        let got = s.search_batch(&qs, 10);
+        let got = s.search_batch(&qs, 10).unwrap();
         assert_identical(&flat, &got, &format!("{shards} shards"));
     }
 }
@@ -110,7 +110,7 @@ fn sharded_matches_flat_on_pq_index() {
             SearchConfig::default(),
         )
         .unwrap();
-        assert_identical(&flat, &s.search_batch(&qs, 8), "pq sharded");
+        assert_identical(&flat, &s.search_batch(&qs, 8).unwrap(), "pq sharded");
     }
 }
 
@@ -131,7 +131,7 @@ fn sharded_matches_flat_with_irregular_boundaries() {
         let s = ShardedSearcher::start(sharded, SearchConfig::default());
         assert_identical(
             &flat,
-            &s.search_batch(&qs, 12),
+            &s.search_batch(&qs, 12).unwrap(),
             &format!("cuts {cuts:?}"),
         );
     }
@@ -152,11 +152,15 @@ fn sharded_matches_flat_when_k_exceeds_shard_size() {
     )
     .unwrap();
     let flat = flat_results(&index, &qs, 100);
-    assert_identical(&flat, &s.search_batch(&qs, 100), "k > shard size");
+    assert_identical(
+        &flat,
+        &s.search_batch(&qs, 100).unwrap(),
+        "k > shard size",
+    );
 
     // k beyond the database: both sides return all 150, same order
     let flat_all = flat_results(&index, &qs, 500);
-    let got_all = s.search_batch(&qs, 500);
+    let got_all = s.search_batch(&qs, 500).unwrap();
     assert_eq!(got_all[0].len(), 150);
     assert_identical(&flat_all, &got_all, "k > n");
 }
@@ -186,7 +190,11 @@ fn sharded_matches_flat_on_wide_index_fallback() {
         SearchConfig::default(),
     )
     .unwrap();
-    assert_identical(&flat, &s.search_batch(&qs, 9), "wide fallback");
+    assert_identical(
+        &flat,
+        &s.search_batch(&qs, 9).unwrap(),
+        "wide fallback",
+    );
 }
 
 /// An entirely empty database served sharded: no hits, no panic.
@@ -197,9 +205,49 @@ fn sharded_empty_database_returns_no_hits() {
         ShardedIndex::build(&index, ShardPolicy::Count(3)).unwrap(),
         SearchConfig::default(),
     );
-    let res = s.search_batch(&queries(2, 16, 12), 5);
+    let res = s.search_batch(&queries(2, 16, 12), 5).unwrap();
     assert_eq!(res.len(), 2);
     assert!(res.iter().all(|h| h.is_empty()));
+}
+
+/// The block-parallel single-query scan is the sharded topology run on
+/// scoped threads: with matching cut points (`Count(t)` and `threads =
+/// t` derive the same `div_ceil` boundaries) the two must agree bit for
+/// bit — same per-block crude kernels, same refine math, same
+/// `(distance, id)` merge.
+#[test]
+fn block_parallel_scan_matches_sharded_gather_bitwise() {
+    use icq::index::lut::Lut;
+    use icq::index::search_icq::{self, IcqSearchOpts};
+
+    let index = icq_index(500, 21);
+    let qs = queries(3, 16, 22);
+    let ops = OpCounter::new();
+    for threads in [2usize, 3, 7] {
+        let sharded = ShardedSearcher::from_index(
+            &index,
+            ShardPolicy::Count(threads),
+            SearchConfig::default(),
+        )
+        .unwrap();
+        let gathered = sharded.search_batch(&qs, 10).unwrap();
+        for qi in 0..qs.rows() {
+            let lut =
+                Lut::build(index.lut_ctx(), index.codebooks(), qs.row(qi));
+            let par = search_icq::search_scanfirst_parallel(
+                &index,
+                &lut,
+                IcqSearchOpts { k: 10, margin_scale: 1.0 },
+                &ops,
+                threads,
+            );
+            assert_eq!(
+                gathered[qi], par,
+                "threads={threads} query {qi}: block-parallel scan \
+                 diverged from the sharded gather"
+            );
+        }
+    }
 }
 
 /// The batched LUT-major sweep vs the per-query path, through the
@@ -213,7 +261,7 @@ fn batched_lut_major_sweep_is_bitwise_equal_to_per_query() {
         NativeSearcher::new(Arc::new(index.clone()), SearchConfig::default());
     for nq in [1usize, 8, 40] {
         let qs = queries(nq, 16, 14 + nq as u64);
-        let batched = searcher.search_batch(&qs, 10);
+        let batched = searcher.search_batch(&qs, 10).unwrap();
         let ops = OpCounter::new();
         let mut scratch = Vec::new();
         for qi in 0..nq {

@@ -1,0 +1,540 @@
+//! Remote-shard serving suite: the mixed local+remote scatter-gather
+//! must be bitwise identical to the flat single-process path across the
+//! whole quantizer zoo (PQ / OPQ / CQ / SQ / ICQ), tied distances, and
+//! k > shard size — and every remote failure mode (dead shard at
+//! connect, mid-stream disconnect, truncated/corrupt frame, version
+//! mismatch) must surface as a structured error: no hang, no silent
+//! partial top-k.
+//!
+//! Servers here are in-process threads running the real
+//! [`wire::serve_shard`] accept loop over real loopback TCP sockets —
+//! the same code path `icq shard-server` runs (the multi-process flavor
+//! is covered by `tests/multihost_loopback.rs`).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use icq::config::SearchConfig;
+use icq::coordinator::wire::{
+    self, Frame, HelloInfo, WireError, WIRE_MAGIC,
+};
+use icq::coordinator::{
+    BatchSearcher, LocalShardBackend, NativeSearcher, RemoteShardBackend,
+    ShardBackend, ShardedSearcher,
+};
+use icq::core::{Matrix, Rng};
+use icq::data::Dataset;
+use icq::index::shard::{ShardPolicy, ShardedIndex};
+use icq::index::{EncodedIndex, OpCounter};
+use icq::quantizer::cq::{Cq, CqOpts};
+use icq::quantizer::icq::{Icq, IcqOpts};
+use icq::quantizer::opq::{Opq, OpqOpts};
+use icq::quantizer::pq::{Pq, PqOpts};
+use icq::quantizer::sq::{Sq, SqOpts};
+
+fn hetero(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(n, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 3.0 } else { 0.4 }
+    })
+}
+
+fn queries(nq: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(nq, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 2.0 } else { 0.5 }
+    })
+}
+
+/// Serve `index` (global start row `start`) on an ephemeral loopback
+/// port from a detached thread; returns the address to dial.
+fn spawn_server(index: EncodedIndex, start: usize) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let _ = wire::serve_shard(listener, Arc::new(index), start);
+    });
+    addr
+}
+
+fn timeout() -> Duration {
+    Duration::from_secs(10)
+}
+
+/// Cut `index` into 3 shards, serve shards 0 and 1 over loopback TCP,
+/// keep shard 2 local, and assert the gather equals the flat batched
+/// path exactly for every `top_k` given.
+fn assert_mixed_parity(index: &EncodedIndex, qs: &Matrix, top_ks: &[usize]) {
+    let sharded = ShardedIndex::build(index, ShardPolicy::Count(3)).unwrap();
+    assert_eq!(sharded.num_shards(), 3, "index too small for 3 shards");
+    let cfg = SearchConfig::default();
+    let mut backends: Vec<Box<dyn ShardBackend>> = Vec::new();
+    for s in [0usize, 1] {
+        let addr =
+            spawn_server(sharded.shard(s).as_ref().clone(), sharded.spec(s).start);
+        let remote =
+            RemoteShardBackend::connect_with_timeout(&addr, cfg, timeout())
+                .unwrap();
+        assert_eq!(remote.hello().start, sharded.spec(s).start);
+        assert_eq!(remote.hello().shard_len, sharded.shard(s).len());
+        backends.push(Box::new(remote));
+    }
+    let ops = Arc::new(OpCounter::new());
+    backends.push(Box::new(LocalShardBackend::new(
+        sharded.spec(2).start,
+        sharded.shard(2).clone(),
+        cfg,
+        ops.clone(),
+    )));
+    let searcher = ShardedSearcher::from_backends(
+        backends,
+        Some(sharded.shard(2).clone()),
+        index.dim(),
+        ops,
+    )
+    .unwrap();
+    let flat = NativeSearcher::new(Arc::new(index.clone()), cfg);
+    for &top_k in top_ks {
+        let got = searcher.search_batch(qs, top_k).unwrap();
+        let want = flat.search_batch(qs, top_k).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (qi, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g, w,
+                "top_k={top_k} query {qi}: mixed local+remote gather \
+                 diverged from flat"
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_gather_matches_flat_icq_with_ties_and_large_k() {
+    // duplicate every vector (i and i + 150 encode identically), so
+    // equal distances appear across shard boundaries and the merge's
+    // (distance, id) tie-breaking is load-bearing
+    let base = hetero(150, 16, 1);
+    let x = Matrix::from_fn(300, 16, |i, j| base.get(i % 150, j));
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k: 8, m: 16, fast_k: 2, kmeans_iters: 6, prior_steps: 100, seed: 1 },
+    );
+    let index =
+        EncodedIndex::build_icq(&icq, &x, (0..300).map(|i| i as i32).collect());
+    // top_k 40: ties guaranteed inside the list; top_k 200 > shard size
+    assert_mixed_parity(&index, &queries(5, 16, 2), &[10, 40, 200]);
+}
+
+#[test]
+fn mixed_gather_matches_flat_pq() {
+    let x = hetero(260, 16, 3);
+    let pq = Pq::train(&x, PqOpts { k: 4, m: 16, iters: 5, seed: 3 });
+    let index =
+        EncodedIndex::build(&pq, &x, (0..260).map(|i| i as i32).collect());
+    assert_mixed_parity(&index, &queries(4, 16, 4), &[8, 100]);
+}
+
+#[test]
+fn mixed_gather_matches_flat_opq() {
+    let x = hetero(260, 8, 5);
+    let opq = Opq::train(
+        &x,
+        OpqOpts { pq: PqOpts { k: 4, m: 8, iters: 4, seed: 1 }, outer_iters: 2 },
+    );
+    let index =
+        EncodedIndex::build(&opq, &x, (0..260).map(|i| i as i32).collect());
+    assert_mixed_parity(&index, &queries(4, 8, 6), &[10]);
+}
+
+#[test]
+fn mixed_gather_matches_flat_cq() {
+    let x = hetero(260, 8, 7);
+    let cq =
+        Cq::train(&x, CqOpts { k: 3, m: 8, iters: 3, icm_sweeps: 1, seed: 2 });
+    let index =
+        EncodedIndex::build(&cq, &x, (0..260).map(|i| i as i32).collect());
+    assert_mixed_parity(&index, &queries(4, 8, 8), &[10]);
+}
+
+#[test]
+fn mixed_gather_matches_flat_sq() {
+    let x = hetero(260, 10, 9);
+    let y: Vec<i32> = (0..260).map(|i| (i % 3) as i32).collect();
+    let data = Dataset::new(x, y.clone());
+    let sq = Sq::train(
+        &data,
+        SqOpts {
+            d_out: 6,
+            cq: CqOpts { k: 2, m: 8, iters: 3, icm_sweeps: 1, seed: 3 },
+            ridge: 1e-3,
+        },
+    );
+    let index = EncodedIndex::build(&sq, &data.x, y);
+    // the SQ index lives in the embedded space; queries must be embedded
+    let qz = sq.embed(&queries(4, 10, 10));
+    assert_mixed_parity(&index, &qz, &[10]);
+}
+
+fn small_icq_index(n: usize, seed: u64) -> EncodedIndex {
+    let x = hetero(n, 16, seed);
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k: 8, m: 16, fast_k: 2, kmeans_iters: 5, prior_steps: 80, seed },
+    );
+    EncodedIndex::build_icq(&icq, &x, (0..n).map(|i| i as i32).collect())
+}
+
+// ---------------------------------------------------------------------
+// failure modes
+// ---------------------------------------------------------------------
+
+/// Dead shard at connect: a port nobody listens on must produce a
+/// structured connect error, not a hang.
+#[test]
+fn dead_shard_at_connect_is_a_structured_error() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener); // now definitely nothing is listening
+    let err = RemoteShardBackend::connect_with_timeout(
+        &addr,
+        SearchConfig::default(),
+        timeout(),
+    )
+    .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("connecting to shard server"),
+        "unexpected error: {err:#}"
+    );
+}
+
+/// Mid-stream disconnect: the server dies after the hello; the next
+/// search must fail with a structured wire error and the gather must
+/// fail the whole batch, naming the backend.
+#[test]
+fn mid_stream_disconnect_fails_the_batch() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        // accept one connection, greet, read a bit, then hang up
+        let (sock, _) = listener.accept().unwrap();
+        let mut w = sock.try_clone().unwrap();
+        wire::write_frame(
+            &mut w,
+            &Frame::Hello(HelloInfo {
+                dim: 16,
+                shard_len: 100,
+                start: 0,
+                fast_k: 2,
+            }),
+        )
+        .unwrap();
+        w.flush().unwrap();
+        let mut buf = [0u8; 16];
+        let _ = (&sock).read(&mut buf);
+        // sock drops here: mid-exchange disconnect
+    });
+    let cfg = SearchConfig::default();
+    let remote =
+        RemoteShardBackend::connect_with_timeout(&addr, cfg, timeout())
+            .unwrap();
+    assert_eq!(remote.dim(), 16);
+
+    let index = small_icq_index(120, 11);
+    let ops = Arc::new(OpCounter::new());
+    let idx = Arc::new(index);
+    let backends: Vec<Box<dyn ShardBackend>> = vec![
+        Box::new(LocalShardBackend::new(0, idx.clone(), cfg, ops.clone())),
+        Box::new(remote),
+    ];
+    let searcher =
+        ShardedSearcher::from_backends(backends, Some(idx), 16, ops).unwrap();
+    let err = searcher
+        .search_batch(&queries(2, 16, 12), 5)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&addr), "error does not name the shard: {msg}");
+    assert!(
+        msg.contains("failed the batch"),
+        "gather did not fail the batch: {msg}"
+    );
+}
+
+/// Truncated and corrupt reply frames must surface as typed wire
+/// errors (checksum / truncation), never as garbage results.
+#[test]
+fn corrupt_and_truncated_frames_are_structured_errors() {
+    // server that greets properly, then answers any request with a
+    // frame whose payload byte was flipped (checksum mismatch), then
+    // with a truncated frame on the next connection
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for mode in 0.. {
+            let Ok((sock, _)) = listener.accept() else { break };
+            let mut w = sock.try_clone().unwrap();
+            wire::write_frame(
+                &mut w,
+                &Frame::Hello(HelloInfo {
+                    dim: 4,
+                    shard_len: 10,
+                    start: 0,
+                    fast_k: 1,
+                }),
+            )
+            .unwrap();
+            w.flush().unwrap();
+            // wait for a request frame (read its header worth of bytes)
+            let mut reader = sock.try_clone().unwrap();
+            let mut hdr = [0u8; 11];
+            if reader.read_exact(&mut hdr).is_err() {
+                continue;
+            }
+            let len = u32::from_le_bytes([hdr[7], hdr[8], hdr[9], hdr[10]]);
+            let mut rest = vec![0u8; len as usize + 4];
+            let _ = reader.read_exact(&mut rest);
+            let mut reply = Vec::new();
+            wire::write_frame(&mut reply, &Frame::Results { hits: vec![vec![]] })
+                .unwrap();
+            if mode % 2 == 0 {
+                reply[12] ^= 0x10; // corrupt a payload byte
+                let _ = w.write_all(&reply);
+            } else {
+                let _ = w.write_all(&reply[..reply.len() - 2]); // truncate
+            }
+            let _ = w.flush();
+            // drop the socket: the client must not wait for more
+        }
+    });
+    let cfg = SearchConfig::default();
+    let job_queries = Arc::new(Matrix::zeros(1, 4));
+    for expect in ["checksum", "mid-frame"] {
+        let mut remote =
+            RemoteShardBackend::connect_with_timeout(&addr, cfg, timeout())
+                .unwrap();
+        let err = remote
+            .search(&icq::coordinator::ShardJob {
+                queries: job_queries.clone(),
+                luts: Arc::new(Vec::new()),
+                top_k: 3,
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(expect) || msg.contains("closed"),
+            "expected a '{expect}' wire error, got: {msg}"
+        );
+    }
+}
+
+/// A server speaking a different protocol version must be rejected at
+/// connect with a typed version-mismatch error.
+#[test]
+fn version_mismatch_is_rejected_at_connect() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let (mut sock, _) = listener.accept().unwrap();
+        // hand-build a v99 hello frame
+        let payload = [0u8; 24];
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&WIRE_MAGIC);
+        frame.extend_from_slice(&99u16.to_le_bytes());
+        frame.push(0);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let mut sum = vec![0u8];
+        sum.extend_from_slice(&payload);
+        frame.extend_from_slice(&wire::crc32(&sum).to_le_bytes());
+        sock.write_all(&frame).unwrap();
+        sock.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+    });
+    let err = RemoteShardBackend::connect_with_timeout(
+        &addr,
+        SearchConfig::default(),
+        timeout(),
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("version mismatch") && msg.contains("v99"),
+        "expected a version mismatch, got: {msg}"
+    );
+    assert!(
+        err.chain().any(|c| {
+            matches!(
+                c.downcast_ref::<WireError>(),
+                Some(WireError::VersionMismatch { got: 99, .. })
+            )
+        }),
+        "typed WireError not in the chain: {msg}"
+    );
+}
+
+/// Server-side request validation: wrong dim and drifted fast_k get an
+/// error frame (surfaced as a remote error), and the connection stays
+/// usable for a following well-formed request.
+#[test]
+fn server_rejects_bad_requests_but_connection_survives() {
+    let index = small_icq_index(130, 13);
+    let fast_k = index.fast_k;
+    let addr = spawn_server(index.clone(), 0);
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = std::io::BufReader::new(stream);
+    let hello = wire::read_frame(&mut r).unwrap();
+    assert!(matches!(hello, Frame::Hello(h) if h.fast_k == fast_k));
+
+    // wrong dimensionality
+    wire::write_frame(
+        &mut w,
+        &Frame::Query {
+            top_k: 3,
+            fast_k,
+            margin_scale: 1.0,
+            queries: Matrix::zeros(1, 5),
+        },
+    )
+    .unwrap();
+    w.flush().unwrap();
+    match wire::read_frame(&mut r).unwrap() {
+        Frame::Error { message } => {
+            assert!(message.contains("dim"), "got: {message}")
+        }
+        f => panic!("expected an error frame, got {f:?}"),
+    }
+
+    // drifted fast_k
+    wire::write_frame(
+        &mut w,
+        &Frame::Query {
+            top_k: 3,
+            fast_k: fast_k + 1,
+            margin_scale: 1.0,
+            queries: Matrix::zeros(1, 16),
+        },
+    )
+    .unwrap();
+    w.flush().unwrap();
+    match wire::read_frame(&mut r).unwrap() {
+        Frame::Error { message } => {
+            assert!(message.contains("fast_k"), "got: {message}")
+        }
+        f => panic!("expected an error frame, got {f:?}"),
+    }
+
+    // the connection still answers a good request
+    wire::write_frame(
+        &mut w,
+        &Frame::Query {
+            top_k: 4,
+            fast_k,
+            margin_scale: 1.0,
+            queries: queries(2, 16, 14),
+        },
+    )
+    .unwrap();
+    w.flush().unwrap();
+    match wire::read_frame(&mut r).unwrap() {
+        Frame::Results { hits } => {
+            assert_eq!(hits.len(), 2);
+            for per_query in &hits {
+                assert_eq!(per_query.len(), 4);
+                for win in per_query.windows(2) {
+                    assert!(
+                        win[0].dist < win[1].dist
+                            || (win[0].dist == win[1].dist
+                                && win[0].id < win[1].id),
+                        "unordered hits"
+                    );
+                }
+            }
+        }
+        f => panic!("expected results, got {f:?}"),
+    }
+}
+
+/// A remote backend must recover after a failed exchange by redialing:
+/// first server instance dies mid-stream, a healthy one takes over the
+/// same address... which ephemeral ports cannot guarantee, so instead:
+/// the backend's poisoned connection makes the *next* search fail fast
+/// on reconnect (refused), still structured.
+#[test]
+fn poisoned_connection_redials_and_reports_refusal() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let (sock, _) = listener.accept().unwrap();
+        let mut w = sock.try_clone().unwrap();
+        wire::write_frame(
+            &mut w,
+            &Frame::Hello(HelloInfo {
+                dim: 4,
+                shard_len: 10,
+                start: 0,
+                fast_k: 1,
+            }),
+        )
+        .unwrap();
+        w.flush().unwrap();
+        // die immediately: listener drops too, so redials are refused
+    });
+    let mut remote = RemoteShardBackend::connect_with_timeout(
+        &addr,
+        SearchConfig::default(),
+        timeout(),
+    )
+    .unwrap();
+    handle.join().unwrap();
+    let job = icq::coordinator::ShardJob {
+        queries: Arc::new(Matrix::zeros(1, 4)),
+        luts: Arc::new(Vec::new()),
+        top_k: 2,
+    };
+    let first = remote.search(&job).unwrap_err();
+    assert!(
+        format!("{first:#}").contains(&addr),
+        "first failure unnamed: {first:#}"
+    );
+    let second = remote.search(&job).unwrap_err();
+    assert!(
+        format!("{second:#}").contains("connecting to shard server"),
+        "redial not attempted / not structured: {second:#}"
+    );
+}
+
+/// Sanity: hits crossing the wire are genuinely global ids from the
+/// served shard's range.
+#[test]
+fn remote_hits_arrive_in_global_id_space() {
+    let index = small_icq_index(200, 15);
+    let shard = index.slice(64, 200);
+    let addr = spawn_server(shard, 64);
+    let mut remote = RemoteShardBackend::connect_with_timeout(
+        &addr,
+        SearchConfig::default(),
+        timeout(),
+    )
+    .unwrap();
+    assert_eq!(remote.hello().start, 64);
+    let res = remote
+        .search(&icq::coordinator::ShardJob {
+            queries: Arc::new(queries(3, 16, 16)),
+            luts: Arc::new(Vec::new()),
+            top_k: 6,
+        })
+        .unwrap();
+    assert_eq!(res.len(), 3);
+    for hits in &res {
+        assert_eq!(hits.len(), 6);
+        for h in hits {
+            assert!(
+                (64..200).contains(&(h.id as usize)),
+                "id {} outside the shard's global range",
+                h.id
+            );
+        }
+    }
+}
