@@ -71,10 +71,33 @@ pub struct ServeConfig {
     /// >= 2 = a `ShardedSearcher` over that many local block-range
     /// shards, 0 = no local shard (pure gateway over `remote_shards`).
     pub shards: usize,
-    /// remote shard servers ("host:port" per entry, comma-separated in
-    /// config files), gathered alongside the local shards over the
-    /// binary wire protocol.
+    /// remote shard servers, gathered alongside the local shards over
+    /// the binary wire protocol. Comma-separated entries are distinct
+    /// shard ranges; `|`-separated addresses *within* an entry are
+    /// interchangeable replicas of one range (e.g.
+    /// `a:7979, b:7979|c:7979` = shard A unreplicated, shard B with
+    /// two replicas). See [`ServeConfig::replica_groups`].
     pub remote_shards: Vec<String>,
+    /// connections pooled per remote endpoint (also the pipelining
+    /// width: concurrent exchanges each check out their own).
+    pub remote_pool: usize,
+    /// redial rounds allowed when a *pooled* remote connection turns
+    /// out stale (e.g. reaped by a server-side idle timeout).
+    pub remote_retries: usize,
+    /// hedge timer in ms: an unanswered remote attempt older than this
+    /// fires the same batch at the next replica (0 disables hedging;
+    /// error-triggered failover still happens).
+    pub remote_hedge_ms: u64,
+    /// per-batch deadline in ms across all replica attempts of one
+    /// remote group (0 disables the deadline; each attempt stays
+    /// bounded by its connection's io timeout).
+    pub remote_deadline_ms: u64,
+    /// health-probe period in ms for circuit-open replicas (0 = no
+    /// background prober; circuits then close via half-open trials).
+    pub remote_probe_ms: u64,
+    /// consecutive failures that open a replica's circuit (0 disables
+    /// the circuit breaker).
+    pub remote_circuit_failures: u32,
 }
 
 impl Default for ServeConfig {
@@ -86,7 +109,33 @@ impl Default for ServeConfig {
             max_inflight: 1024,
             shards: 1,
             remote_shards: Vec::new(),
+            remote_pool: 2,
+            remote_retries: 1,
+            remote_hedge_ms: 50,
+            remote_deadline_ms: 15_000,
+            remote_probe_ms: 1_000,
+            remote_circuit_failures: 3,
         }
+    }
+}
+
+impl ServeConfig {
+    /// `remote_shards` split into replica groups: each entry is one
+    /// shard range; `|`-separated addresses within an entry are
+    /// interchangeable replicas of it.
+    pub fn replica_groups(&self) -> Vec<Vec<String>> {
+        self.remote_shards
+            .iter()
+            .map(|entry| {
+                entry
+                    .split('|')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect()
+            })
+            .filter(|g: &Vec<String>| !g.is_empty())
+            .collect()
     }
 }
 
@@ -190,6 +239,26 @@ impl EngineConfig {
                     .map(str::to_string)
                     .collect();
             }
+            "serve.remote_pool" => self.serve.remote_pool = parse_usize(value)?,
+            "serve.remote_retries" => {
+                self.serve.remote_retries = parse_usize(value)?
+            }
+            "serve.remote_hedge_ms" => {
+                self.serve.remote_hedge_ms =
+                    value.parse().with_context(|| format!("{key}={value}"))?
+            }
+            "serve.remote_deadline_ms" => {
+                self.serve.remote_deadline_ms =
+                    value.parse().with_context(|| format!("{key}={value}"))?
+            }
+            "serve.remote_probe_ms" => {
+                self.serve.remote_probe_ms =
+                    value.parse().with_context(|| format!("{key}={value}"))?
+            }
+            "serve.remote_circuit_failures" => {
+                self.serve.remote_circuit_failures =
+                    value.parse().with_context(|| format!("{key}={value}"))?
+            }
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             other => anyhow::bail!("unknown config key '{other}'"),
         }
@@ -249,6 +318,41 @@ mod tests {
         let e =
             EngineConfig::from_str_pairs("serve.remote_shards =\n").unwrap();
         assert!(e.serve.remote_shards.is_empty());
+    }
+
+    #[test]
+    fn parses_replica_groups_and_resilience_keys() {
+        let c = EngineConfig::from_str_pairs(
+            "serve.remote_shards = a:1, b:1 | c:2\n\
+             serve.remote_pool = 4\n\
+             serve.remote_retries = 2\n\
+             serve.remote_hedge_ms = 25\n\
+             serve.remote_deadline_ms = 5000\n\
+             serve.remote_probe_ms = 500\n\
+             serve.remote_circuit_failures = 5\n",
+        )
+        .unwrap();
+        // comma separates shard ranges, '|' separates replicas
+        assert_eq!(
+            c.serve.replica_groups(),
+            vec![
+                vec!["a:1".to_string()],
+                vec!["b:1".to_string(), "c:2".to_string()],
+            ]
+        );
+        assert_eq!(c.serve.remote_pool, 4);
+        assert_eq!(c.serve.remote_retries, 2);
+        assert_eq!(c.serve.remote_hedge_ms, 25);
+        assert_eq!(c.serve.remote_deadline_ms, 5000);
+        assert_eq!(c.serve.remote_probe_ms, 500);
+        assert_eq!(c.serve.remote_circuit_failures, 5);
+        // resilience defaults
+        let d = ServeConfig::default();
+        assert_eq!(d.remote_pool, 2);
+        assert_eq!(d.remote_retries, 1);
+        assert_eq!(d.remote_hedge_ms, 50);
+        assert_eq!(d.remote_circuit_failures, 3);
+        assert!(d.replica_groups().is_empty());
     }
 
     #[test]

@@ -43,6 +43,12 @@
 //! disconnect, corrupt frame, version mismatch) fails the **whole
 //! batch** with a structured error naming the backend: a gather that
 //! silently dropped a shard would return confidently wrong top-k lists.
+//! Remote backends absorb most faults *before* they reach the gather:
+//! a stale pooled connection is redialed transparently
+//! ([`super::pool`]), and a replicated shard range
+//! ([`super::replica::ReplicaSetBackend`]) hedges or fails over to a
+//! replica — the gather only sees an error once a backend's whole
+//! replica set is out of options or past its deadline.
 
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::Arc;

@@ -1,4 +1,7 @@
-//! Serving metrics: counters + log2-bucketed latency histogram.
+//! Serving metrics: counters + log2-bucketed latency histogram, plus
+//! the remote-shard resilience counters ([`RemoteMetrics`]: pool
+//! redials, hedged retries, circuit-breaker transitions, health
+//! probes).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -90,6 +93,64 @@ impl Metrics {
     }
 }
 
+/// Lock-free counters for the remote-shard resilience layer: the
+/// connection pool, the stale-connection redial path, hedged retries,
+/// the per-replica circuit breaker, and health probing. One instance is
+/// shared across every remote endpoint a serve process talks to (see
+/// [`super::pool`] / [`super::replica`]), so the numbers describe the
+/// whole gateway, not one socket.
+#[derive(Debug, Default)]
+pub struct RemoteMetrics {
+    /// TCP dials attempted (initial connects, redials, and probes).
+    pub dials: AtomicU64,
+    /// Stale pooled connections transparently replaced by a redial
+    /// (e.g. after a server-side idle timeout reaped them).
+    pub redials: AtomicU64,
+    /// Hedge attempts launched because the hedge timer expired before
+    /// the running attempt answered.
+    pub hedges: AtomicU64,
+    /// Batches won by a non-primary attempt (a hedge or a failover).
+    pub hedge_wins: AtomicU64,
+    /// Attempts launched because a prior attempt returned an error.
+    pub failovers: AtomicU64,
+    /// Replica circuits opened (consecutive-failure threshold hit).
+    pub circuit_opens: AtomicU64,
+    /// Replica circuits closed again (successful exchange or probe).
+    pub circuit_closes: AtomicU64,
+    /// Health probes attempted against circuit-open replicas.
+    pub probes: AtomicU64,
+    /// Health probes that failed (the circuit stays open).
+    pub probe_failures: AtomicU64,
+    /// Batches that exceeded a replica group's deadline.
+    pub deadline_exceeded: AtomicU64,
+}
+
+impl RemoteMetrics {
+    /// Fresh counters, all zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One-line human-readable summary of every counter.
+    pub fn summary(&self) -> String {
+        format!(
+            "dials={} redials={} hedges={} hedge_wins={} failovers={} \
+             circuit_opens={} circuit_closes={} probes={} \
+             probe_failures={} deadline_exceeded={}",
+            self.dials.load(Ordering::Relaxed),
+            self.redials.load(Ordering::Relaxed),
+            self.hedges.load(Ordering::Relaxed),
+            self.hedge_wins.load(Ordering::Relaxed),
+            self.failovers.load(Ordering::Relaxed),
+            self.circuit_opens.load(Ordering::Relaxed),
+            self.circuit_closes.load(Ordering::Relaxed),
+            self.probes.load(Ordering::Relaxed),
+            self.probe_failures.load(Ordering::Relaxed),
+            self.deadline_exceeded.load(Ordering::Relaxed),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +179,20 @@ mod tests {
     #[test]
     fn empty_percentile_zero() {
         assert_eq!(Metrics::new().latency_percentile_us(0.9), 0);
+    }
+
+    #[test]
+    fn remote_metrics_summary_reports_counters() {
+        let m = RemoteMetrics::new();
+        m.dials.fetch_add(3, Ordering::Relaxed);
+        m.redials.fetch_add(1, Ordering::Relaxed);
+        m.hedges.fetch_add(2, Ordering::Relaxed);
+        m.circuit_opens.fetch_add(1, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("dials=3"), "{s}");
+        assert!(s.contains("redials=1"), "{s}");
+        assert!(s.contains("hedges=2"), "{s}");
+        assert!(s.contains("circuit_opens=1"), "{s}");
+        assert!(s.contains("deadline_exceeded=0"), "{s}");
     }
 }

@@ -18,8 +18,10 @@
 //! set of [`ShardBackend`]s ([`gather`], one persistent worker thread
 //! per backend, merged with `(distance, id)` tie-breaking) — in-process
 //! shards ([`LocalShardBackend`]), shard-server processes across hosts
-//! behind the binary wire protocol ([`wire`],
-//! [`RemoteShardBackend`]), or any mix; the XLA-runtime-backed searcher
+//! behind the binary wire protocol ([`wire`], [`RemoteShardBackend`] —
+//! connection-pooled with transparent redial ([`pool`]), optionally
+//! grouped into replica sets with health probing, circuit breaking,
+//! and hedged retries ([`replica`])), or any mix; the XLA-runtime-backed searcher
 //! builds LUTs through the AOT graphs (python-free at runtime; see
 //! `examples/serve_pipeline.rs`). All batch paths run the LUT-major
 //! multi-query sweep, so each resident code block is swept with the
@@ -36,6 +38,9 @@ pub mod backpressure;
 pub mod batcher;
 pub mod gather;
 pub mod metrics;
+pub mod placement;
+pub mod pool;
+pub mod replica;
 pub mod router;
 pub mod server;
 pub mod wire;
@@ -43,7 +48,9 @@ pub mod worker;
 
 pub use backend::{LocalShardBackend, ShardBackend, ShardJob};
 pub use gather::ShardedSearcher;
-pub use metrics::Metrics;
+pub use metrics::{Metrics, RemoteMetrics};
+pub use pool::{PoolOpts, RemoteEndpoint};
+pub use replica::{ReplicaOpts, ReplicaSetBackend, ReplicaSetHandle};
 pub use server::{Coordinator, QueryRequest, QueryResponse};
 pub use wire::RemoteShardBackend;
 pub use worker::{BatchSearcher, NativeSearcher};

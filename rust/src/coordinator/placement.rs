@@ -1,0 +1,211 @@
+//! Shard-range placement arithmetic for the serve startup path:
+//! sorting remote coverage, rejecting overlap, computing the local
+//! complement — and, for pure gateways (`serve.shards = 0`, no local
+//! index), proving the remote ranges tile the database with no gaps.
+//!
+//! These are pure functions over `(start, end)` ranges precisely so the
+//! placement rules `icq serve` enforces at startup are unit-testable
+//! without dialing anything.
+
+use anyhow::Result;
+
+/// One remote group's claimed global row range (from its hello),
+/// tagged with a display name for structured errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RemoteRange {
+    /// First global row (inclusive).
+    pub start: usize,
+    /// One past the last global row.
+    pub end: usize,
+    /// Display name (address or `|`-joined replica list).
+    pub name: String,
+}
+
+/// Sort ranges ascending and reject any pairwise overlap — the same
+/// row served twice would duplicate hits in the merged top-k.
+pub fn sort_and_check_disjoint(
+    mut ranges: Vec<RemoteRange>,
+) -> Result<Vec<RemoteRange>> {
+    ranges.sort_by(|a, b| (a.start, a.end).cmp(&(b.start, b.end)));
+    for w in ranges.windows(2) {
+        anyhow::ensure!(
+            w[0].end <= w[1].start,
+            "remote shards {} (rows [{}, {})) and {} (rows [{}, {})) \
+             overlap — each database row must be served exactly once",
+            w[0].name,
+            w[0].start,
+            w[0].end,
+            w[1].name,
+            w[1].start,
+            w[1].end
+        );
+    }
+    Ok(ranges)
+}
+
+/// The complement of `sorted` (disjoint, ascending) within
+/// `[0, total)`: the row ranges the local side must serve.
+pub fn coverage_gaps(
+    sorted: &[RemoteRange],
+    total: usize,
+) -> Vec<(usize, usize)> {
+    let mut gaps = Vec::new();
+    let mut cursor = 0usize;
+    for r in sorted {
+        if cursor < r.start.min(total) {
+            gaps.push((cursor, r.start.min(total)));
+        }
+        cursor = cursor.max(r.end);
+    }
+    if cursor < total {
+        gaps.push((cursor, total));
+    }
+    gaps
+}
+
+/// Pure-gateway (`serve.shards = 0`) coverage check: with no local
+/// index to serve the complement, the remote ranges must *exactly*
+/// tile `[0, N)` — start at row 0 and leave no internal gap. Returns
+/// the total covered row count.
+///
+/// A truncated tail (remotes that stop before the real end of a
+/// database this process has never seen) is inherently unverifiable
+/// without a local index; every *detectable* gap is rejected here,
+/// which closes the ROADMAP "gap detection in the pure gateway case"
+/// hole.
+pub fn validate_exact_partition(sorted: &[RemoteRange]) -> Result<usize> {
+    anyhow::ensure!(
+        !sorted.is_empty(),
+        "a pure remote gateway (serve.shards = 0) needs at least one \
+         remote shard"
+    );
+    let mut cursor = 0usize;
+    for r in sorted {
+        anyhow::ensure!(
+            r.start <= cursor,
+            "remote coverage gap: rows [{cursor}, {}) are served by no \
+             one (next remote is {} starting at row {}) — a pure gateway \
+             (serve.shards = 0) has no local index to serve the \
+             complement",
+            r.start,
+            r.name,
+            r.start
+        );
+        cursor = cursor.max(r.end);
+    }
+    Ok(cursor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn range(start: usize, end: usize, name: &str) -> RemoteRange {
+        RemoteRange { start, end, name: name.to_string() }
+    }
+
+    #[test]
+    fn disjoint_ranges_sort_and_pass() {
+        let sorted = sort_and_check_disjoint(vec![
+            range(200, 300, "b"),
+            range(0, 100, "a"),
+            range(100, 200, "c"),
+        ])
+        .unwrap();
+        assert_eq!(
+            sorted.iter().map(|r| r.start).collect::<Vec<_>>(),
+            vec![0, 100, 200]
+        );
+    }
+
+    #[test]
+    fn overlap_is_rejected_naming_both_shards() {
+        let err = sort_and_check_disjoint(vec![
+            range(0, 150, "a:1"),
+            range(100, 200, "b:1"),
+        ])
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("a:1"), "{msg}");
+        assert!(msg.contains("b:1"), "{msg}");
+        assert!(msg.contains("overlap"), "{msg}");
+    }
+
+    #[test]
+    fn touching_ranges_are_not_overlap() {
+        assert!(sort_and_check_disjoint(vec![
+            range(0, 100, "a"),
+            range(100, 200, "b"),
+        ])
+        .is_ok());
+    }
+
+    #[test]
+    fn coverage_gaps_finds_head_middle_and_tail() {
+        let sorted = sort_and_check_disjoint(vec![
+            range(50, 100, "a"),
+            range(150, 200, "b"),
+        ])
+        .unwrap();
+        assert_eq!(
+            coverage_gaps(&sorted, 260),
+            vec![(0, 50), (100, 150), (200, 260)]
+        );
+        // full coverage -> no gaps
+        let full = sort_and_check_disjoint(vec![
+            range(0, 130, "a"),
+            range(130, 260, "b"),
+        ])
+        .unwrap();
+        assert!(coverage_gaps(&full, 260).is_empty());
+        // no remotes -> one gap spanning everything
+        assert_eq!(coverage_gaps(&[], 40), vec![(0, 40)]);
+    }
+
+    #[test]
+    fn exact_partition_passes_and_reports_total() {
+        let sorted = sort_and_check_disjoint(vec![
+            range(100, 250, "b"),
+            range(0, 100, "a"),
+        ])
+        .unwrap();
+        assert_eq!(validate_exact_partition(&sorted).unwrap(), 250);
+        // a single range covering everything is also a partition
+        assert_eq!(
+            validate_exact_partition(&[range(0, 70, "solo")]).unwrap(),
+            70
+        );
+    }
+
+    #[test]
+    fn gateway_gap_is_rejected_naming_the_rows() {
+        // internal gap [100, 150)
+        let sorted = sort_and_check_disjoint(vec![
+            range(0, 100, "a"),
+            range(150, 300, "late:7979"),
+        ])
+        .unwrap();
+        let msg = validate_exact_partition(&sorted).unwrap_err().to_string();
+        assert!(msg.contains("[100, 150)"), "{msg}");
+        assert!(msg.contains("late:7979"), "{msg}");
+        // head gap: coverage not starting at row 0
+        let headless =
+            sort_and_check_disjoint(vec![range(10, 90, "a")]).unwrap();
+        let msg =
+            validate_exact_partition(&headless).unwrap_err().to_string();
+        assert!(msg.contains("[0, 10)"), "{msg}");
+        // no remotes at all
+        assert!(validate_exact_partition(&[]).is_err());
+    }
+
+    #[test]
+    fn empty_ranges_do_not_break_partition_checks() {
+        let sorted = sort_and_check_disjoint(vec![
+            range(0, 100, "a"),
+            range(100, 100, "empty"),
+            range(100, 200, "b"),
+        ])
+        .unwrap();
+        assert_eq!(validate_exact_partition(&sorted).unwrap(), 200);
+    }
+}

@@ -1,0 +1,416 @@
+//! Per-remote connection pool: N persistent wire-protocol connections
+//! to one shard server, checked out per exchange.
+//!
+//! Two properties fall out of the pool that the single-connection
+//! [`RemoteShardBackend`](super::wire::RemoteShardBackend) of PR 4
+//! could not offer:
+//!
+//! * **Pipelining** — concurrent callers (the gather worker plus any
+//!   hedged attempt, or several gathers sharing one endpoint) each
+//!   check out their own connection, so more than one batch can be in
+//!   flight to the same remote at once.
+//! * **Transparent redial** — a *pooled* connection that died while
+//!   idle (a server restart, or a server-side `--idle-timeout` reaping
+//!   it) is detected on its next use, every equally-stale idle
+//!   connection is flushed, and the exchange is retried once on a fresh
+//!   dial. The search exchange is a pure read (idempotent), so the
+//!   retry can never double-apply work. This is what makes server-side
+//!   idle timeouts safe to enable.
+//!
+//! Failures on a connection dialed *within* the current exchange are
+//! never retried here: they indicate a live fault at the server, which
+//! is the replica layer's ([`super::replica`]) job to route around.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::backend::ShardJob;
+use super::metrics::RemoteMetrics;
+use super::wire::{
+    read_frame, write_query_frame, DeadlineReader, Frame, HelloInfo,
+    WireError, DEFAULT_IO_TIMEOUT,
+};
+use crate::config::SearchConfig;
+use crate::core::Hit;
+
+/// Connection-pool knobs for one remote shard endpoint.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolOpts {
+    /// Idle connections retained per endpoint — also the natural
+    /// pipelining width, since each concurrent exchange checks out its
+    /// own connection (extra concurrent callers dial beyond the pool
+    /// and their connections are dropped at check-in).
+    pub size: usize,
+    /// TCP connect timeout per dial.
+    pub connect_timeout: Duration,
+    /// Socket io budget: writes get it as a per-send timeout, and every
+    /// read (hello, results) is bounded by it as a *whole-frame* budget
+    /// (re-armed before each recv, `DeadlineReader`-style) — a server
+    /// trickling one byte per interval cannot stall an exchange past it.
+    pub io_timeout: Duration,
+    /// Redial rounds allowed after a connection-level failure on a
+    /// *reused* (pooled) connection. Failures on freshly dialed
+    /// connections are never retried — they indicate a live fault, not
+    /// a stale socket.
+    pub retries: usize,
+}
+
+impl Default for PoolOpts {
+    fn default() -> Self {
+        PoolOpts {
+            size: 2,
+            connect_timeout: DEFAULT_IO_TIMEOUT,
+            io_timeout: DEFAULT_IO_TIMEOUT,
+            retries: 1,
+        }
+    }
+}
+
+/// One established wire-protocol connection (split buffered halves).
+struct WireConn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+/// `cap` shrunk to what remains until `deadline` (if any); a timeout
+/// error once the deadline has already passed.
+fn step_budget(
+    cap: Duration,
+    deadline: Option<Instant>,
+) -> std::io::Result<Duration> {
+    let Some(d) = deadline else { return Ok(cap) };
+    let remaining = d.saturating_duration_since(Instant::now());
+    if remaining.is_zero() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            "attempt deadline expired",
+        ));
+    }
+    Ok(cap.min(remaining))
+}
+
+/// Dial `addr`, read the server's hello, and return the connection.
+/// Both the TCP connect and the whole hello read are bounded — by the
+/// pool's own timeouts, further shrunk to an attempt `deadline` when
+/// the caller has one.
+fn dial_raw(
+    addr: &str,
+    opts: &PoolOpts,
+    metrics: &RemoteMetrics,
+    deadline: Option<Instant>,
+) -> Result<(WireConn, HelloInfo)> {
+    metrics.dials.fetch_add(1, Ordering::Relaxed);
+    let sock_addr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving shard server '{addr}'"))?
+        .next()
+        .ok_or_else(|| {
+            anyhow::anyhow!("shard server '{addr}' resolved to nothing")
+        })?;
+    let connect_budget = step_budget(opts.connect_timeout, deadline)
+        .with_context(|| format!("dialing shard server {addr}"))?;
+    let stream = TcpStream::connect_timeout(&sock_addr, connect_budget)
+        .with_context(|| format!("connecting to shard server {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(opts.io_timeout)).ok();
+    stream.set_write_timeout(Some(opts.io_timeout)).ok();
+    let reader =
+        BufReader::new(stream.try_clone().context("cloning shard stream")?);
+    let mut conn = WireConn { writer: BufWriter::new(stream), reader };
+    let hello_budget = step_budget(opts.io_timeout, deadline)
+        .with_context(|| format!("reading hello from {addr}"))?;
+    let hello_read = read_frame(&mut DeadlineReader {
+        inner: &mut conn.reader,
+        deadline: Some(Instant::now() + hello_budget),
+    });
+    let hello = match hello_read {
+        Ok(Frame::Hello(h)) => h,
+        Ok(Frame::Error { message }) => {
+            return Err(WireError::Remote(message).into())
+        }
+        Ok(_) => {
+            return Err(WireError::BadPayload(
+                "expected a hello frame at connect".into(),
+            )
+            .into())
+        }
+        Err(e) => {
+            return Err(anyhow::Error::from(e)
+                .context(format!("reading hello from {addr}")))
+        }
+    };
+    Ok((conn, hello))
+}
+
+/// True when the failure says the *connection* died (clean close,
+/// mid-frame drop, broken pipe) rather than the peer speaking the
+/// protocol wrong, timing out, or reporting a structured error — only
+/// the former is stale-socket behavior and therefore redial-safe.
+/// Timeouts are excluded on purpose: a server that is wedged will wedge
+/// the redial too, so that failure belongs to the replica layer.
+fn is_connection_level(e: &anyhow::Error) -> bool {
+    for cause in e.chain() {
+        if let Some(w) = cause.downcast_ref::<WireError>() {
+            return matches!(
+                w,
+                WireError::Closed | WireError::Truncated(_)
+            );
+        }
+        if let Some(io) = cause.downcast_ref::<std::io::Error>() {
+            return !matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+            );
+        }
+    }
+    false
+}
+
+/// One remote shard server behind a connection pool. Shared (`Arc`) so
+/// the replica layer can run hedged attempts against the same endpoint
+/// concurrently; all interior state is lock-protected.
+pub struct RemoteEndpoint {
+    addr: String,
+    cfg: SearchConfig,
+    opts: PoolOpts,
+    hello: HelloInfo,
+    idle: Mutex<Vec<WireConn>>,
+    metrics: Arc<RemoteMetrics>,
+}
+
+impl RemoteEndpoint {
+    /// Dial `addr`, validate the server's hello, and seed the pool with
+    /// the connection. `cfg.margin_scale` rides every query frame so
+    /// the remote prune matches the local one.
+    pub fn connect(
+        addr: &str,
+        cfg: SearchConfig,
+        opts: PoolOpts,
+        metrics: Arc<RemoteMetrics>,
+    ) -> Result<Arc<Self>> {
+        let opts = PoolOpts { size: opts.size.max(1), ..opts };
+        let (conn, hello) = dial_raw(addr, &opts, &metrics, None)?;
+        Ok(Arc::new(RemoteEndpoint {
+            addr: addr.to_string(),
+            cfg,
+            opts,
+            hello,
+            idle: Mutex::new(vec![conn]),
+            metrics,
+        }))
+    }
+
+    /// The remote shard's address as given to [`Self::connect`].
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The geometry the server announced at connect.
+    pub fn hello(&self) -> HelloInfo {
+        self.hello
+    }
+
+    /// The shared resilience counters this endpoint reports into.
+    pub fn metrics(&self) -> &Arc<RemoteMetrics> {
+        &self.metrics
+    }
+
+    /// Dial a fresh connection, enforcing that the server still
+    /// announces the geometry seen at connect time.
+    fn dial(&self, deadline: Option<Instant>) -> Result<WireConn> {
+        let (conn, hello) =
+            dial_raw(&self.addr, &self.opts, &self.metrics, deadline)?;
+        anyhow::ensure!(
+            hello == self.hello,
+            "shard server {} changed geometry across reconnect \
+             ({:?} -> {:?})",
+            self.addr,
+            self.hello,
+            hello
+        );
+        Ok(conn)
+    }
+
+    /// Pop an idle connection, or dial a fresh one. The bool reports
+    /// whether the connection was reused from the pool.
+    fn checkout(
+        &self,
+        deadline: Option<Instant>,
+    ) -> Result<(WireConn, bool)> {
+        if let Some(conn) = self.idle.lock().expect("pool lock").pop() {
+            return Ok((conn, true));
+        }
+        Ok((self.dial(deadline)?, false))
+    }
+
+    /// Return a healthy connection to the pool (dropped if the pool is
+    /// already at capacity).
+    fn checkin(&self, conn: WireConn) {
+        let mut idle = self.idle.lock().expect("pool lock");
+        if idle.len() < self.opts.size {
+            idle.push(conn);
+        }
+    }
+
+    /// Drop every idle connection (when one pooled connection turns out
+    /// stale, the rest — idle at least as long — share its fate).
+    fn clear_idle(&self) {
+        self.idle.lock().expect("pool lock").clear();
+    }
+
+    /// Lightweight health probe: dial a fresh connection, validate the
+    /// hello geometry, and pool the connection on success so the next
+    /// exchange starts warm.
+    pub fn probe(&self) -> Result<HelloInfo> {
+        let conn = self.dial(None)?;
+        self.checkin(conn);
+        Ok(self.hello)
+    }
+
+    /// Execute one batched search against this endpoint: check out a
+    /// connection, exchange query/results frames, and check the
+    /// connection back in on success. A connection-level failure on a
+    /// pooled connection flushes the pool and redials (see the module
+    /// docs); every other failure surfaces as a structured error naming
+    /// the endpoint.
+    pub fn search_job(&self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
+        self.search_job_by(job, None)
+    }
+
+    /// [`Self::search_job`] with an absolute attempt deadline: every
+    /// step (dial, hello, results read) runs under the sooner of its
+    /// own io budget and the deadline, so the caller gets back control
+    /// by the deadline without needing a watchdog thread.
+    pub fn search_job_by(
+        &self,
+        job: &ShardJob,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<Vec<Hit>>> {
+        let mut redials = 0;
+        loop {
+            let (conn, reused) = match self.checkout(deadline) {
+                Ok(c) => c,
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "remote shard {} failed",
+                        self.addr
+                    )))
+                }
+            };
+            match self.exchange(conn, job, deadline) {
+                Ok(hits) => return Ok(hits),
+                Err(e) => {
+                    // the failed stream's framing state is unknown — it
+                    // was dropped inside exchange; decide whether this
+                    // was a stale pooled socket worth one redial
+                    if reused
+                        && redials < self.opts.retries
+                        && is_connection_level(&e)
+                    {
+                        self.clear_idle();
+                        self.metrics.redials.fetch_add(1, Ordering::Relaxed);
+                        redials += 1;
+                        continue;
+                    }
+                    return Err(e.context(format!(
+                        "remote shard {} failed",
+                        self.addr
+                    )));
+                }
+            }
+        }
+    }
+
+    /// One request/response exchange on `conn`. The connection is
+    /// returned to the pool only after a well-formed results frame; the
+    /// whole results read is budgeted (io timeout shrunk to `deadline`)
+    /// so even a byte-trickling server cannot stall past it.
+    fn exchange(
+        &self,
+        mut conn: WireConn,
+        job: &ShardJob,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<Vec<Hit>>> {
+        write_query_frame(
+            &mut conn.writer,
+            job.top_k,
+            self.hello.fast_k,
+            self.cfg.margin_scale,
+            &job.queries,
+        )?;
+        conn.writer.flush().context("flushing query frame")?;
+        let reply_budget = step_budget(self.opts.io_timeout, deadline)
+            .context("awaiting the results frame")?;
+        let reply = read_frame(&mut DeadlineReader {
+            inner: &mut conn.reader,
+            deadline: Some(Instant::now() + reply_budget),
+        });
+        match reply {
+            Ok(Frame::Results { hits }) => {
+                anyhow::ensure!(
+                    hits.len() == job.queries.rows(),
+                    "shard server answered {} queries for a batch of {}",
+                    hits.len(),
+                    job.queries.rows()
+                );
+                self.checkin(conn);
+                Ok(hits)
+            }
+            Ok(Frame::Error { message }) => {
+                Err(WireError::Remote(message).into())
+            }
+            Ok(_) => Err(WireError::BadPayload(
+                "expected a results frame".into(),
+            )
+            .into()),
+            Err(e) => Err(anyhow::Error::from(e)
+                .context("awaiting the results frame")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connection_level_classifier() {
+        let closed = anyhow::Error::from(WireError::Closed);
+        assert!(is_connection_level(&closed));
+        let trunc = anyhow::Error::from(WireError::Truncated("frame header"))
+            .context("remote shard x failed");
+        assert!(is_connection_level(&trunc), "context must not hide it");
+        let checksum = anyhow::Error::from(WireError::ChecksumMismatch);
+        assert!(!is_connection_level(&checksum));
+        let timed = anyhow::Error::from(WireError::TimedOut("frame payload"));
+        assert!(!is_connection_level(&timed), "timeouts are not redialed");
+        let remote = anyhow::Error::from(WireError::Remote("bad dim".into()));
+        assert!(!is_connection_level(&remote));
+        let pipe = anyhow::Error::from(std::io::Error::new(
+            std::io::ErrorKind::BrokenPipe,
+            "pipe",
+        ));
+        assert!(is_connection_level(&pipe));
+        let would_block = anyhow::Error::from(std::io::Error::new(
+            std::io::ErrorKind::WouldBlock,
+            "wb",
+        ));
+        assert!(!is_connection_level(&would_block));
+        let plain = anyhow::anyhow!("not a wire failure");
+        assert!(!is_connection_level(&plain));
+    }
+
+    #[test]
+    fn pool_opts_default_is_sane() {
+        let o = PoolOpts::default();
+        assert!(o.size >= 1);
+        assert_eq!(o.retries, 1);
+        assert_eq!(o.io_timeout, DEFAULT_IO_TIMEOUT);
+    }
+}

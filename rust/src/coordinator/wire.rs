@@ -34,17 +34,23 @@
 //! ## Failure semantics
 //!
 //! Every malformed input maps to a typed [`WireError`] — bad magic,
-//! version mismatch, checksum mismatch, truncated frame, oversized
-//! frame, unparseable payload — never a panic, a hang, or a silently
-//! wrong result. On the coordinator side any wire failure poisons the
-//! connection (the next `search` reconnects from scratch) and fails the
+//! version mismatch, checksum mismatch, truncated frame, socket
+//! timeout, oversized frame, unparseable payload — never a panic, a
+//! hang, or a silently wrong result. On the coordinator side a failed
+//! exchange drops its connection (the framing state is unknown) and, if
+//! the connection came stale out of the pool, is retried once on a
+//! fresh dial (see [`super::pool`]); any surviving failure fails the
 //! whole gather batch: a dropped shard must surface as an error, not as
 //! a quietly partial top-k. Coordinator-side sockets carry read *and*
 //! write timeouts ([`DEFAULT_IO_TIMEOUT`]) so a wedged server cannot
-//! hang a gather worker; server-side sockets time out writes only —
-//! reads stay untimed because an idle persistent connection between
-//! batches is legitimate in the thread-per-connection model (an idle
-//! cap / connection limit is future hardening, see ROADMAP).
+//! hang a gather worker. Server-side sockets time out writes (a client
+//! that stopped draining), and — with [`ServeShardOpts::idle_timeout`]
+//! set — reads too, so an idle or slowloris connection is reaped
+//! instead of pinning a thread forever; the client-side redial layer is
+//! what makes that reaping invisible to healthy callers.
+//! [`ServeShardOpts::max_conns`] additionally caps concurrent
+//! connections, answering excess connects with a structured error
+//! frame.
 //!
 //! ## Why remote results match local ones bitwise
 //!
@@ -59,13 +65,16 @@
 //! [`LocalShardBackend`]: super::backend::LocalShardBackend
 
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::backend::{ShardBackend, ShardJob};
+use super::metrics::RemoteMetrics;
+use super::pool::{PoolOpts, RemoteEndpoint};
 use crate::config::SearchConfig;
 use crate::core::{Hit, Matrix};
 use crate::index::search_icq::{self, IcqSearchOpts};
@@ -90,6 +99,15 @@ const KIND_QUERY: u8 = 1;
 const KIND_RESULTS: u8 = 2;
 const KIND_ERROR: u8 = 3;
 
+/// The [`WireError::TimedOut`] marker for a timeout with zero bytes of
+/// the next frame read — a peer with no frame in progress, as opposed
+/// to a mid-frame stall (whose marker names the field being read). The
+/// server reaps such idle connections *silently* (no goodbye frame), so
+/// a pooled client that idled past the server's `--idle-timeout` finds
+/// a clean EOF — which its redial layer recovers from — rather than a
+/// stale error frame ahead of its next reply.
+pub const IDLE_TIMEOUT_WHAT: &str = "waiting for a frame";
+
 /// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320) over `bytes`.
 /// Bitwise implementation — the frames this guards are small relative
 /// to the search work they trigger.
@@ -113,8 +131,11 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 pub enum WireError {
     /// The peer closed the connection cleanly between frames.
     Closed,
-    /// The stream ended (or the socket timed out) mid-frame.
+    /// The stream ended mid-frame.
     Truncated(&'static str),
+    /// The socket timed out waiting for frame bytes — an idle peer (no
+    /// frame started) or a slowloris stall mid-frame.
+    TimedOut(&'static str),
     /// The frame did not start with [`WIRE_MAGIC`].
     BadMagic([u8; 4]),
     /// The peer speaks a different protocol version.
@@ -142,6 +163,9 @@ impl std::fmt::Display for WireError {
             WireError::Closed => write!(f, "connection closed by peer"),
             WireError::Truncated(what) => {
                 write!(f, "connection dropped mid-frame (reading {what})")
+            }
+            WireError::TimedOut(what) => {
+                write!(f, "socket read timed out ({what})")
             }
             WireError::BadMagic(m) => {
                 write!(f, "bad frame magic {m:?} (expected \"ICQW\")")
@@ -470,24 +494,43 @@ pub fn write_query_frame(
     )
 }
 
+/// True for the error kinds a socket read timeout raises.
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
 fn read_exact_or(
     r: &mut impl Read,
     buf: &mut [u8],
     what: &'static str,
 ) -> Result<(), WireError> {
-    r.read_exact(buf).map_err(|_| WireError::Truncated(what))
+    r.read_exact(buf).map_err(|e| {
+        if is_timeout(&e) {
+            WireError::TimedOut(what)
+        } else {
+            WireError::Truncated(what)
+        }
+    })
 }
 
 /// Read and validate one frame from `r`. Returns
 /// [`WireError::Closed`] if the peer hung up cleanly between frames;
 /// every other malformation maps to its typed [`WireError`] variant.
 pub fn read_frame(r: &mut impl Read) -> Result<Frame, WireError> {
-    // first byte separately: 0 bytes here is a clean close, not a
-    // truncation
+    // the first byte is read separately: 0 bytes here is a clean close
+    // (not a truncation), and a timeout here means an *idle* peer with
+    // no frame in progress (distinguishable from a slowloris stall
+    // mid-frame, which times out further down naming the field read)
     let mut first = [0u8; 1];
     match r.read(&mut first) {
         Ok(0) => return Err(WireError::Closed),
         Ok(_) => {}
+        Err(e) if is_timeout(&e) => {
+            return Err(WireError::TimedOut(IDLE_TIMEOUT_WHAT))
+        }
         Err(_) => return Err(WireError::Truncated("frame header")),
     }
     let mut rest = [0u8; 10];
@@ -521,32 +564,31 @@ pub fn read_frame(r: &mut impl Read) -> Result<Frame, WireError> {
     Frame::decode_payload(kind, &payload)
 }
 
-struct Conn {
-    writer: BufWriter<TcpStream>,
-    reader: BufReader<TcpStream>,
-}
-
-/// Coordinator-side backend for one remote shard: a persistent TCP
-/// connection to a `shard-server`, validated by its hello frame at
-/// connect time. `search` serializes the batch's query vectors (the
-/// server rebuilds bitwise-identical LUTs from its equal-valued
-/// codebooks), awaits exactly one results/error frame, and surfaces
-/// every wire failure as a structured error; a failed connection is
-/// redialed on the next call.
+/// Coordinator-side backend for one remote shard: a pooled set of TCP
+/// connections to a `shard-server` ([`RemoteEndpoint`]), validated by
+/// the hello frame at connect time. `search` serializes the batch's
+/// query vectors (the server rebuilds bitwise-identical LUTs from its
+/// equal-valued codebooks), awaits exactly one results/error frame, and
+/// surfaces every wire failure as a structured error. A stale pooled
+/// connection is transparently replaced by a redial (making server-side
+/// idle timeouts safe); for replica failover and hedged retries on top
+/// of this, see [`super::replica::ReplicaSetBackend`].
 pub struct RemoteShardBackend {
-    addr: String,
-    cfg: SearchConfig,
-    timeout: Duration,
-    conn: Option<Conn>,
-    hello: HelloInfo,
+    endpoint: Arc<RemoteEndpoint>,
 }
 
 impl RemoteShardBackend {
-    /// Connect to `addr` ("host:port") with [`DEFAULT_IO_TIMEOUT`] and
-    /// read the server's hello. `cfg.margin_scale` rides every query
-    /// frame so the remote prune matches the local one.
+    /// Connect to `addr` ("host:port") with default [`PoolOpts`]
+    /// ([`DEFAULT_IO_TIMEOUT`] sockets) and read the server's hello.
+    /// `cfg.margin_scale` rides every query frame so the remote prune
+    /// matches the local one.
     pub fn connect(addr: &str, cfg: SearchConfig) -> Result<Self> {
-        Self::connect_with_timeout(addr, cfg, DEFAULT_IO_TIMEOUT)
+        Self::connect_pooled(
+            addr,
+            cfg,
+            PoolOpts::default(),
+            Arc::new(RemoteMetrics::new()),
+        )
     }
 
     /// [`Self::connect`] with an explicit dial/read/write timeout.
@@ -555,126 +597,60 @@ impl RemoteShardBackend {
         cfg: SearchConfig,
         timeout: Duration,
     ) -> Result<Self> {
-        let (conn, hello) = Self::dial(addr, timeout)?;
-        Ok(RemoteShardBackend {
-            addr: addr.to_string(),
+        Self::connect_pooled(
+            addr,
             cfg,
-            timeout,
-            conn: Some(conn),
-            hello,
-        })
+            PoolOpts {
+                connect_timeout: timeout,
+                io_timeout: timeout,
+                ..PoolOpts::default()
+            },
+            Arc::new(RemoteMetrics::new()),
+        )
     }
 
-    fn dial(addr: &str, timeout: Duration) -> Result<(Conn, HelloInfo)> {
-        let sock_addr = addr
-            .to_socket_addrs()
-            .with_context(|| format!("resolving shard server '{addr}'"))?
-            .next()
-            .ok_or_else(|| {
-                anyhow::anyhow!("shard server '{addr}' resolved to nothing")
-            })?;
-        let stream = TcpStream::connect_timeout(&sock_addr, timeout)
-            .with_context(|| format!("connecting to shard server {addr}"))?;
-        stream.set_nodelay(true).ok();
-        stream.set_read_timeout(Some(timeout)).ok();
-        stream.set_write_timeout(Some(timeout)).ok();
-        let reader = BufReader::new(
-            stream.try_clone().context("cloning shard stream")?,
-        );
-        let mut conn = Conn { writer: BufWriter::new(stream), reader };
-        let hello = match read_frame(&mut conn.reader) {
-            Ok(Frame::Hello(h)) => h,
-            Ok(Frame::Error { message }) => {
-                return Err(WireError::Remote(message).into())
-            }
-            Ok(_) => {
-                return Err(WireError::BadPayload(
-                    "expected a hello frame at connect".into(),
-                )
-                .into())
-            }
-            Err(e) => {
-                return Err(anyhow::Error::from(e)
-                    .context(format!("reading hello from {addr}")))
-            }
-        };
-        Ok((conn, hello))
+    /// [`Self::connect`] with explicit pool options and a shared
+    /// metrics sink — the fully-specified constructor `serve` uses.
+    pub fn connect_pooled(
+        addr: &str,
+        cfg: SearchConfig,
+        opts: PoolOpts,
+        metrics: Arc<RemoteMetrics>,
+    ) -> Result<Self> {
+        Ok(RemoteShardBackend {
+            endpoint: RemoteEndpoint::connect(addr, cfg, opts, metrics)?,
+        })
     }
 
     /// The geometry the server announced at connect.
     pub fn hello(&self) -> HelloInfo {
-        self.hello
+        self.endpoint.hello()
     }
 
     /// Query dimensionality the remote shard expects.
     pub fn dim(&self) -> usize {
-        self.hello.dim
+        self.endpoint.hello().dim
     }
 
     /// The remote shard's address as given to [`Self::connect`].
     pub fn addr(&self) -> &str {
-        &self.addr
+        self.endpoint.addr()
     }
 
-    fn search_inner(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
-        if self.conn.is_none() {
-            let (conn, hello) = Self::dial(&self.addr, self.timeout)?;
-            anyhow::ensure!(
-                hello == self.hello,
-                "shard server {} changed geometry across reconnect \
-                 ({:?} -> {:?})",
-                self.addr,
-                self.hello,
-                hello
-            );
-            self.conn = Some(conn);
-        }
-        let conn = self.conn.as_mut().expect("connection just established");
-        write_query_frame(
-            &mut conn.writer,
-            job.top_k,
-            self.hello.fast_k,
-            self.cfg.margin_scale,
-            &job.queries,
-        )?;
-        conn.writer.flush().context("flushing query frame")?;
-        match read_frame(&mut conn.reader) {
-            Ok(Frame::Results { hits }) => {
-                anyhow::ensure!(
-                    hits.len() == job.queries.rows(),
-                    "shard server answered {} queries for a batch of {}",
-                    hits.len(),
-                    job.queries.rows()
-                );
-                Ok(hits)
-            }
-            Ok(Frame::Error { message }) => {
-                Err(WireError::Remote(message).into())
-            }
-            Ok(_) => Err(WireError::BadPayload(
-                "expected a results frame".into(),
-            )
-            .into()),
-            Err(e) => Err(e.into()),
-        }
+    /// The pooled endpoint behind this backend (shareable across
+    /// threads for concurrent in-flight exchanges).
+    pub fn endpoint(&self) -> &Arc<RemoteEndpoint> {
+        &self.endpoint
     }
 }
 
 impl ShardBackend for RemoteShardBackend {
     fn describe(&self) -> String {
-        format!("remote shard {}", self.addr)
+        format!("remote shard {}", self.endpoint.addr())
     }
 
     fn search(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
-        let res = self.search_inner(job);
-        if res.is_err() {
-            // poison the connection: a failed exchange leaves the stream
-            // in an unknown framing state, so the next call redials
-            self.conn = None;
-        }
-        res.map_err(|e| {
-            e.context(format!("remote shard {} failed", self.addr))
-        })
+        self.endpoint.search_job(job)
     }
 }
 
@@ -711,6 +687,21 @@ fn validate_query(
     Ok(())
 }
 
+/// Server-side hardening knobs for [`serve_shard_with`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeShardOpts {
+    /// Reap a connection when no complete frame arrives within this
+    /// window — closing both the idle-forever and the slowloris
+    /// (bytes-trickled-mid-frame) holes. `None` keeps reads untimed
+    /// (the pre-hardening behavior); clients with a redial layer
+    /// ([`super::pool`]) are unaffected by reaping.
+    pub idle_timeout: Option<Duration>,
+    /// Maximum concurrently served connections; further connects are
+    /// answered with a structured error frame and closed. 0 means
+    /// unlimited.
+    pub max_conns: usize,
+}
+
 /// Serve one accepted connection: hello, then one results/error frame
 /// per query frame. Returns when the peer disconnects or the stream
 /// breaks. Exposed so tests can drive a single in-process connection.
@@ -720,10 +711,54 @@ pub fn serve_shard_conn(
     start: usize,
     ops: &OpCounter,
 ) {
+    serve_shard_conn_with(sock, index, start, ops, None)
+}
+
+/// A reader that bounds the *whole* frame read by one deadline: before
+/// every socket read the remaining budget is re-armed as the socket's
+/// read timeout, so a slowloris peer trickling one byte per interval —
+/// which resets a plain per-recv timeout every time — still runs out of
+/// budget after the window. With no deadline it degrades to an untimed
+/// passthrough. Used server-side for `--idle-timeout` and client-side
+/// ([`super::pool`]) to bound hello/results reads, so a trickling peer
+/// can wedge neither a shard server thread nor a gather worker.
+pub(crate) struct DeadlineReader<'a> {
+    pub(crate) inner: &'a mut BufReader<TcpStream>,
+    pub(crate) deadline: Option<Instant>,
+}
+
+impl Read for DeadlineReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if let Some(d) = self.deadline {
+            let now = Instant::now();
+            if now >= d {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "frame read deadline expired",
+                ));
+            }
+            self.inner.get_ref().set_read_timeout(Some(d - now)).ok();
+        }
+        self.inner.read(buf)
+    }
+}
+
+/// [`serve_shard_conn`] with an optional idle/read timeout: when set,
+/// a connection that produces no complete frame within the window —
+/// whether idle-silent or trickling bytes (slowloris) — is reaped.
+pub fn serve_shard_conn_with(
+    sock: TcpStream,
+    index: &EncodedIndex,
+    start: usize,
+    ops: &OpCounter,
+    idle_timeout: Option<Duration>,
+) {
     sock.set_nodelay(true).ok();
-    // reads stay untimed (an idle persistent connection between batches
-    // is legitimate); writes get a timeout so a client that stopped
-    // draining cannot wedge this thread mid-reply
+    // writes get a timeout so a client that stopped draining cannot
+    // wedge this thread mid-reply; reads are budgeted per frame through
+    // DeadlineReader only when the caller opted into an idle timeout
+    // (an idle persistent connection between batches is otherwise
+    // legitimate)
     sock.set_write_timeout(Some(DEFAULT_IO_TIMEOUT)).ok();
     let Ok(read_half) = sock.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
@@ -739,7 +774,11 @@ pub fn serve_shard_conn(
     }
     let mut crude = Vec::new();
     loop {
-        let reply = match read_frame(&mut reader) {
+        let frame = read_frame(&mut DeadlineReader {
+            inner: &mut reader,
+            deadline: idle_timeout.map(|t| Instant::now() + t),
+        });
+        let reply = match frame {
             Ok(Frame::Query { top_k, fast_k, margin_scale, queries }) => {
                 match validate_query(
                     index,
@@ -767,6 +806,11 @@ pub fn serve_shard_conn(
                 message: "expected a query frame".to_string(),
             },
             Err(WireError::Closed) => return,
+            // an *idle* connection (zero bytes of a next frame) is
+            // reaped silently: a pooled client must find a clean EOF it
+            // can redial through, not a stale goodbye frame queued in
+            // front of its next reply
+            Err(WireError::TimedOut(IDLE_TIMEOUT_WHAT)) => return,
             Err(e) => {
                 // best-effort structured goodbye; the framing state is
                 // unknown, so drop the connection either way
@@ -796,7 +840,56 @@ pub fn serve_shard(
     index: Arc<EncodedIndex>,
     start: usize,
 ) -> Result<()> {
+    serve_shard_with(listener, index, start, ServeShardOpts::default())
+}
+
+/// Decrements the active-connection gauge when the handler thread
+/// exits, however it exits (including an unwind).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Concurrent goodbye-writer cap for over-limit refusals: past this,
+/// excess connections are dropped without a frame, so a connect flood
+/// that never reads cannot amass refusal threads — the very resource
+/// blow-up `max_conns` exists to bound.
+const MAX_REFUSAL_THREADS: usize = 64;
+
+/// Write budget for one refusal goodbye. The frame is a few dozen
+/// bytes and fits any socket send buffer, so this effectively never
+/// blocks; the timeout is the backstop for a peer whose receive window
+/// is already wedged shut.
+const REFUSAL_WRITE_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Tell an over-limit client why it is being turned away (a structured
+/// error frame where its hello would be), then close.
+fn refuse_conn(sock: TcpStream, limit: usize) {
+    sock.set_write_timeout(Some(REFUSAL_WRITE_TIMEOUT)).ok();
+    let mut writer = BufWriter::new(sock);
+    let _ = write_frame(
+        &mut writer,
+        &Frame::Error {
+            message: format!("connection limit reached ({limit} active)"),
+        },
+    );
+    let _ = writer.flush();
+}
+
+/// [`serve_shard`] with server-side hardening knobs: an idle/read
+/// timeout per connection and a cap on concurrent connections.
+pub fn serve_shard_with(
+    listener: TcpListener,
+    index: Arc<EncodedIndex>,
+    start: usize,
+    opts: ServeShardOpts,
+) -> Result<()> {
     let ops = Arc::new(OpCounter::new());
+    let active = Arc::new(AtomicUsize::new(0));
+    let refusing = Arc::new(AtomicUsize::new(0));
     for stream in listener.incoming() {
         let sock = match stream {
             Ok(sock) => sock,
@@ -807,8 +900,31 @@ pub fn serve_shard(
                 continue;
             }
         };
-        let (index, ops) = (index.clone(), ops.clone());
-        std::thread::spawn(move || serve_shard_conn(sock, &index, start, &ops));
+        if opts.max_conns > 0
+            && active.load(Ordering::Relaxed) >= opts.max_conns
+        {
+            // refusal happens off-thread (a limit-probing client that
+            // never reads must not stall the accept loop), with its own
+            // bounded worker count and a short write budget; past the
+            // cap, excess connects just get a clean close
+            if refusing.load(Ordering::Relaxed) < MAX_REFUSAL_THREADS {
+                refusing.fetch_add(1, Ordering::Relaxed);
+                let refusing = refusing.clone();
+                let limit = opts.max_conns;
+                std::thread::spawn(move || {
+                    let _guard = ConnGuard(refusing);
+                    refuse_conn(sock, limit);
+                });
+            }
+            continue;
+        }
+        active.fetch_add(1, Ordering::Relaxed);
+        let (index, ops, active) = (index.clone(), ops.clone(), active.clone());
+        let idle_timeout = opts.idle_timeout;
+        std::thread::spawn(move || {
+            let _guard = ConnGuard(active);
+            serve_shard_conn_with(sock, &index, start, &ops, idle_timeout);
+        });
     }
     Ok(())
 }

@@ -16,15 +16,18 @@
 //! vendored registry).
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use icq::bench::figures::{run_figure, Scale};
 use icq::bench::workload::{run_method, EmbedKind, RunSpec};
 use icq::config::{EngineConfig, MethodKind};
+use icq::coordinator::placement::{self, RemoteRange};
 use icq::coordinator::{
     wire, BatchSearcher, Coordinator, LocalShardBackend, NativeSearcher,
-    RemoteShardBackend, ShardBackend, ShardedSearcher,
+    PoolOpts, RemoteMetrics, ReplicaOpts, ReplicaSetBackend, ShardBackend,
+    ShardedSearcher,
 };
 use icq::core::Matrix;
 use icq::data::format::TensorPack;
@@ -44,10 +47,16 @@ commands:
   serve [--addr HOST:PORT] start the TCP serving coordinator; with
                            serve.shards=N / serve.remote_shards=... it
                            gathers over local and/or remote shards
+                           ('|' inside one remote entry lists replicas
+                           of that shard range, e.g. a:7979|b:7979)
   shard-server [--addr HOST:PORT] [--index PATH] [--shard I/N]
+               [--idle-timeout SECS] [--max-conns N]
                            serve one shard over the binary wire protocol
                            (loads a snapshot, or trains and cuts shard
-                           I of N from the configured dataset)
+                           I of N from the configured dataset);
+                           --idle-timeout reaps idle/slowloris
+                           connections, --max-conns caps concurrent
+                           connections
   export-shards --shards N [--out PREFIX]
                            train, cut N shards, write PREFIX<i>.icqf
                            snapshots for shard-server processes
@@ -133,6 +142,8 @@ fn main() -> Result<()> {
                 &addr,
                 flag_value(tail, "--index"),
                 flag_value(tail, "--shard"),
+                flag_value(tail, "--idle-timeout"),
+                flag_value(tail, "--max-conns"),
             )
         }
         "export-shards" => {
@@ -267,75 +278,106 @@ fn build_index(cfg: &EngineConfig) -> Result<EncodedIndex> {
 /// `NativeSearcher` (shards <= 1, no remotes), a `ShardedSearcher`
 /// over local block-range shards, or a mixed/remote gather.
 ///
-/// With remote shards configured, the remotes' hello placement
-/// (`shard_start`/`shard_len`) decides which rows they own: remotes
-/// must not overlap each other, must agree on `dim` and `fast_k` with
-/// the local index, and the local side serves exactly the *uncovered*
-/// rows (each contiguous gap cut into up to `serve.shards` block-range
-/// shards). That keeps the gathered row set a partition of the dataset
-/// — overlapping coverage would duplicate hits in the merged top-k.
-fn build_searcher(cfg: &EngineConfig) -> Result<Arc<dyn BatchSearcher>> {
+/// With remote shards configured, each `serve.remote_shards` entry is
+/// one shard range (its `|`-separated addresses are interchangeable
+/// replicas, gathered through a `ReplicaSetBackend` with connection
+/// pooling, hedged retries, and health probing). The groups' hello
+/// placement decides which rows they own: groups must not overlap each
+/// other, must agree on `dim` and `fast_k` with the local index, and
+/// the local side serves exactly the *uncovered* rows (each contiguous
+/// gap cut into up to `serve.shards` block-range shards). A pure
+/// gateway (`serve.shards = 0`) has no local index to serve the
+/// complement, so the remote ranges must tile the database exactly —
+/// any detectable gap is a startup error. That keeps the gathered row
+/// set a partition of the dataset — overlapping coverage would
+/// duplicate hits in the merged top-k, a gap would silently drop rows.
+fn build_searcher(
+    cfg: &EngineConfig,
+) -> Result<(Arc<dyn BatchSearcher>, Option<Arc<RemoteMetrics>>)> {
     let serve_cfg = &cfg.serve;
+    let groups = serve_cfg.replica_groups();
     anyhow::ensure!(
-        serve_cfg.shards >= 1 || !serve_cfg.remote_shards.is_empty(),
+        serve_cfg.shards >= 1 || !groups.is_empty(),
         "serve.shards = 0 means 'no local shard' and needs at least one \
          serve.remote_shards entry — an empty remote list here is a \
          misconfiguration, not a flat server"
     );
-    if serve_cfg.shards <= 1 && serve_cfg.remote_shards.is_empty() {
+    if serve_cfg.shards <= 1 && groups.is_empty() {
         let index = Arc::new(build_index(cfg)?);
-        return Ok(Arc::new(NativeSearcher::new(index, cfg.search)));
+        return Ok((Arc::new(NativeSearcher::new(index, cfg.search)), None));
     }
     let ops = Arc::new(OpCounter::new());
+    let remote_metrics = Arc::new(RemoteMetrics::new());
+    let pool = PoolOpts {
+        size: serve_cfg.remote_pool.max(1),
+        retries: serve_cfg.remote_retries,
+        ..PoolOpts::default()
+    };
+    let ropts = ReplicaOpts {
+        hedge_after: Duration::from_millis(serve_cfg.remote_hedge_ms),
+        deadline: Duration::from_millis(serve_cfg.remote_deadline_ms),
+        circuit_failures: serve_cfg.remote_circuit_failures,
+        probe_interval: Duration::from_millis(serve_cfg.remote_probe_ms),
+    };
 
-    // connect every remote first: their placement decides what is left
-    // for the local side to serve
+    // connect every remote group first: their placement decides what is
+    // left for the local side to serve
     let mut remotes = Vec::new();
-    for addr in &serve_cfg.remote_shards {
-        let remote = RemoteShardBackend::connect(addr, cfg.search)?;
-        let hello = remote.hello();
+    for group in &groups {
+        let set = ReplicaSetBackend::connect(
+            group,
+            cfg.search,
+            pool,
+            ropts,
+            remote_metrics.clone(),
+        )?;
+        let hello = set.hello();
         println!(
-            "[serve] remote shard {addr}: rows [{}, {}) dim={} fast_k={}",
+            "[serve] remote shard group {}: rows [{}, {}) dim={} fast_k={} \
+             replicas={}",
+            set.names(),
             hello.start,
             hello.start + hello.shard_len,
             hello.dim,
-            hello.fast_k
+            hello.fast_k,
+            set.num_replicas()
         );
-        remotes.push(remote);
+        remotes.push(set);
     }
     for r in &remotes {
         anyhow::ensure!(
             r.hello().dim == remotes[0].hello().dim,
             "remote shard {} dim {} != remote shard {} dim {}",
-            r.addr(),
+            r.names(),
             r.hello().dim,
-            remotes[0].addr(),
+            remotes[0].names(),
             remotes[0].hello().dim
         );
-    }
-    // remotes must tile disjoint row ranges — overlap means the same
-    // vector answers twice and the merge returns duplicated top-k
-    let mut covered: Vec<(usize, usize, String)> = remotes
-        .iter()
-        .map(|r| {
-            let h = r.hello();
-            (h.start, h.start + h.shard_len, r.addr().to_string())
-        })
-        .collect();
-    covered.sort();
-    for w in covered.windows(2) {
         anyhow::ensure!(
-            w[0].1 <= w[1].0,
-            "remote shards {} (rows [{}, {})) and {} (rows [{}, {})) \
-             overlap — each database row must be served exactly once",
-            w[0].2,
-            w[0].0,
-            w[0].1,
-            w[1].2,
-            w[1].0,
-            w[1].1
+            r.hello().fast_k == remotes[0].hello().fast_k,
+            "remote shard {} fast_k {} != remote shard {} fast_k {} \
+             (config drift would silently change the crude pass)",
+            r.names(),
+            r.hello().fast_k,
+            remotes[0].names(),
+            remotes[0].hello().fast_k
         );
     }
+    // groups must tile disjoint row ranges — overlap means the same
+    // vector answers twice and the merge returns duplicated top-k
+    let covered = placement::sort_and_check_disjoint(
+        remotes
+            .iter()
+            .map(|r| {
+                let h = r.hello();
+                RemoteRange {
+                    start: h.start,
+                    end: h.start + h.shard_len,
+                    name: r.names().to_string(),
+                }
+            })
+            .collect(),
+    )?;
 
     let mut backends: Vec<Box<dyn ShardBackend>> = Vec::new();
     let mut lut_source = None;
@@ -356,14 +398,14 @@ fn build_searcher(cfg: &EngineConfig) -> Result<Arc<dyn BatchSearcher>> {
                 h.fast_k == index.fast_k,
                 "remote shard {} fast_k {} != local index fast_k {} \
                  (config drift would silently change the crude pass)",
-                r.addr(),
+                r.names(),
                 h.fast_k,
                 index.fast_k
             );
             anyhow::ensure!(
                 h.start + h.shard_len <= index.len(),
                 "remote shard {} rows [{}, {}) exceed the database ({} rows)",
-                r.addr(),
+                r.names(),
                 h.start,
                 h.start + h.shard_len,
                 index.len()
@@ -371,17 +413,7 @@ fn build_searcher(cfg: &EngineConfig) -> Result<Arc<dyn BatchSearcher>> {
         }
         // local side = the complement of the remote coverage, each
         // contiguous gap cut into up to serve.shards local shards
-        let mut gaps = Vec::new();
-        let mut cursor = 0usize;
-        for &(s, e, _) in &covered {
-            if cursor < s {
-                gaps.push((cursor, s));
-            }
-            cursor = cursor.max(e);
-        }
-        if cursor < index.len() {
-            gaps.push((cursor, index.len()));
-        }
+        let gaps = placement::coverage_gaps(&covered, index.len());
         if gaps.is_empty() {
             println!(
                 "[serve] remote shards cover every row; nothing to serve \
@@ -411,6 +443,15 @@ fn build_searcher(cfg: &EngineConfig) -> Result<Arc<dyn BatchSearcher>> {
                 )));
             }
         }
+    } else {
+        // pure gateway: no local index can serve the complement, so
+        // prove the remote groups tile the database with no detectable
+        // gap (a gap would silently drop rows from every top-k)
+        let total = placement::validate_exact_partition(&covered)?;
+        println!(
+            "[serve] pure gateway: remote groups cover rows [0, {total}) \
+             with no gaps"
+        );
     }
     for remote in remotes {
         backends.push(Box::new(remote));
@@ -418,13 +459,26 @@ fn build_searcher(cfg: &EngineConfig) -> Result<Arc<dyn BatchSearcher>> {
     let dim = dim.ok_or_else(|| {
         anyhow::anyhow!("serve.shards=0 needs at least one remote shard")
     })?;
-    Ok(Arc::new(ShardedSearcher::from_backends(
-        backends, lut_source, dim, ops,
-    )?))
+    let searcher: Arc<dyn BatchSearcher> = Arc::new(
+        ShardedSearcher::from_backends(backends, lut_source, dim, ops)?,
+    );
+    let metrics = if groups.is_empty() { None } else { Some(remote_metrics) };
+    Ok((searcher, metrics))
 }
 
 fn serve(cfg: &EngineConfig, addr: &str) -> Result<()> {
-    let searcher = build_searcher(cfg)?;
+    let (searcher, remote_metrics) = build_searcher(cfg)?;
+    // the resilience counters must be observable in production: log the
+    // remote summary periodically while serving remote shards
+    if let Some(metrics) = remote_metrics {
+        std::thread::Builder::new()
+            .name("icq-remote-metrics".into())
+            .spawn(move || loop {
+                std::thread::sleep(Duration::from_secs(60));
+                println!("[serve] remote {}", metrics.summary());
+            })
+            .expect("spawn remote metrics logger");
+    }
     let coord = Arc::new(Coordinator::start(searcher, cfg.serve.clone()));
     coord.serve_tcp(addr)
 }
@@ -435,13 +489,33 @@ fn serve(cfg: &EngineConfig, addr: &str) -> Result<()> {
 /// the configured dataset is trained in-process, and `--shard I/N` cuts
 /// shard I of an N-way block-aligned split — every process that trains
 /// with the same config derives the identical index, so cutting
-/// per-process stays consistent across hosts.
+/// per-process stays consistent across hosts. `--idle-timeout SECS`
+/// reaps connections that stall (idle or slowloris) and `--max-conns N`
+/// caps concurrent connections; both are safe for healthy coordinators,
+/// whose pooled backends transparently redial a reaped connection.
 fn shard_server(
     cfg: &EngineConfig,
     addr: &str,
     index_path: Option<String>,
     shard_sel: Option<String>,
+    idle_timeout: Option<String>,
+    max_conns: Option<String>,
 ) -> Result<()> {
+    let opts = wire::ServeShardOpts {
+        idle_timeout: match idle_timeout {
+            Some(s) => {
+                let secs: u64 =
+                    s.parse().context("--idle-timeout expects whole seconds")?;
+                anyhow::ensure!(secs > 0, "--idle-timeout must be > 0");
+                Some(Duration::from_secs(secs))
+            }
+            None => None,
+        },
+        max_conns: match max_conns {
+            Some(s) => s.parse().context("--max-conns expects a count")?,
+            None => 0,
+        },
+    };
     let (index, start) = match index_path {
         Some(path) => {
             let pack = TensorPack::load(&path)?;
@@ -486,7 +560,7 @@ fn shard_server(
     println!("[shard-server] listening on {}", listener.local_addr()?);
     use std::io::Write as _;
     std::io::stdout().flush().ok();
-    wire::serve_shard(listener, Arc::new(index), start)
+    wire::serve_shard_with(listener, Arc::new(index), start, opts)
 }
 
 /// Train once, cut `shards` block-aligned shards, and write each as a

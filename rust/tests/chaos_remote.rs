@@ -1,0 +1,543 @@
+//! Chaos suite: every resilience behavior of the remote-shard serving
+//! layer — hedged retries, error failover, circuit breaking + health
+//! probes, pool pipelining, transparent redial, server-side idle
+//! timeouts and connection caps — exercised deterministically through
+//! the scripted fault-injecting proxy in `tests/support/chaos_proxy.rs`
+//! (faults fire on exact frame indexes, not on wall-clock luck).
+//!
+//! The core acceptance assertions: with a 2-replica remote shard,
+//! black-holing or killing the primary mid-batch still returns results
+//! **bitwise identical** to the flat path within the configured
+//! deadline (no hang, no partial top-k), and a slowloris connection
+//! against a `--idle-timeout` server is reaped without disturbing a
+//! concurrent healthy client.
+
+mod support;
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use icq::config::SearchConfig;
+use icq::coordinator::wire::{self, Frame, ServeShardOpts, WireError};
+use icq::coordinator::{
+    BatchSearcher, LocalShardBackend, NativeSearcher, PoolOpts,
+    RemoteMetrics, RemoteShardBackend, ReplicaOpts, ReplicaSetBackend,
+    ShardBackend, ShardJob, ShardedSearcher,
+};
+use icq::core::{Matrix, Rng};
+use icq::index::shard::{ShardPolicy, ShardedIndex};
+use icq::index::{EncodedIndex, OpCounter};
+use icq::quantizer::icq::{Icq, IcqOpts};
+
+use support::chaos_proxy::{ChaosProxy, Fault};
+
+fn icq_index(n: usize, seed: u64) -> EncodedIndex {
+    let mut rng = Rng::new(seed);
+    let x = Matrix::from_fn(n, 16, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 3.0 } else { 0.4 }
+    });
+    let icq = Icq::train(
+        &x,
+        IcqOpts {
+            k: 8,
+            m: 16,
+            fast_k: 2,
+            kmeans_iters: 5,
+            prior_steps: 80,
+            seed,
+        },
+    );
+    EncodedIndex::build_icq(&icq, &x, (0..n as i32).collect())
+}
+
+fn queries(nq: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(nq, 16, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 2.0 } else { 0.5 }
+    })
+}
+
+/// Serve `index` on an ephemeral loopback port from a detached thread.
+fn spawn_server(index: EncodedIndex, start: usize) -> String {
+    spawn_server_with(index, start, ServeShardOpts::default())
+}
+
+fn spawn_server_with(
+    index: EncodedIndex,
+    start: usize,
+    opts: ServeShardOpts,
+) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let _ = wire::serve_shard_with(listener, Arc::new(index), start, opts);
+    });
+    addr
+}
+
+fn job(qs: &Matrix, top_k: usize) -> ShardJob {
+    ShardJob {
+        queries: Arc::new(qs.clone()),
+        luts: Arc::new(Vec::new()),
+        top_k,
+    }
+}
+
+fn pool(io_timeout: Duration, retries: usize) -> PoolOpts {
+    PoolOpts {
+        size: 2,
+        connect_timeout: Duration::from_secs(10),
+        io_timeout,
+        retries,
+    }
+}
+
+/// Acceptance: a black-holed primary must not stall the gather — the
+/// hedge fires, the replica answers, and the merged top-k stays
+/// bitwise identical to the flat path.
+#[test]
+fn hedge_fires_on_blackholed_primary_and_results_match_flat_bitwise() {
+    let index = icq_index(300, 21);
+    let sharded = ShardedIndex::build(&index, ShardPolicy::Count(2)).unwrap();
+    assert_eq!(sharded.num_shards(), 2);
+    let cfg = SearchConfig::default();
+
+    // shard 0 behind two "replicas": the primary routed through a proxy
+    // that black-holes its first reply, the second dialed directly
+    let upstream =
+        spawn_server(sharded.shard(0).as_ref().clone(), sharded.spec(0).start);
+    let proxy = ChaosProxy::spawn(
+        upstream.clone(),
+        vec![vec![Fault::Pass, Fault::BlackHole]],
+    );
+    let metrics = Arc::new(RemoteMetrics::new());
+    let set = ReplicaSetBackend::connect(
+        &[proxy.addr().to_string(), upstream.clone()],
+        cfg,
+        pool(Duration::from_secs(3), 1),
+        ReplicaOpts {
+            hedge_after: Duration::from_millis(50),
+            deadline: Duration::from_secs(30),
+            circuit_failures: 100,
+            probe_interval: Duration::ZERO,
+        },
+        metrics.clone(),
+    )
+    .unwrap();
+    assert_eq!(set.num_replicas(), 2);
+
+    let ops = Arc::new(OpCounter::new());
+    let backends: Vec<Box<dyn ShardBackend>> = vec![
+        Box::new(set),
+        Box::new(LocalShardBackend::new(
+            sharded.spec(1).start,
+            sharded.shard(1).clone(),
+            cfg,
+            ops.clone(),
+        )),
+    ];
+    let searcher = ShardedSearcher::from_backends(
+        backends,
+        Some(sharded.shard(1).clone()),
+        index.dim(),
+        ops,
+    )
+    .unwrap();
+    let flat = NativeSearcher::new(Arc::new(index.clone()), cfg);
+
+    let qs = queries(4, 22);
+    // batch 1: primary's reply is black-holed -> the hedge must win
+    let got = searcher.search_batch(&qs, 7).unwrap();
+    let want = flat.search_batch(&qs, 7).unwrap();
+    assert_eq!(got, want, "hedged gather diverged from flat");
+    assert!(
+        metrics.hedges.load(Ordering::Relaxed) >= 1,
+        "hedge never fired: {}",
+        metrics.summary()
+    );
+    assert!(
+        metrics.hedge_wins.load(Ordering::Relaxed) >= 1,
+        "hedge never won: {}",
+        metrics.summary()
+    );
+
+    // batch 2 (steady state): the proxy's script is exhausted, so a
+    // fresh primary connection passes everything through
+    let got = searcher.search_batch(&qs, 50).unwrap();
+    let want = flat.search_batch(&qs, 50).unwrap();
+    assert_eq!(got, want, "post-chaos gather diverged from flat");
+}
+
+/// Acceptance: killing the primary mid-batch (connection dropped while
+/// the reply is in flight, and refused on redial) fails over to the
+/// replica with bitwise-identical results — no hang, no partial top-k.
+#[test]
+fn failover_on_primary_killed_mid_batch_matches_flat_bitwise() {
+    let index = icq_index(220, 23);
+    let cfg = SearchConfig::default();
+    let upstream = spawn_server(index.clone(), 0);
+    // conn 0: greet, then kill the connection on the first reply;
+    // conn 1 (the transparent redial): kill at the hello
+    let proxy = ChaosProxy::spawn(
+        upstream.clone(),
+        vec![vec![Fault::Pass, Fault::Disconnect], vec![Fault::Disconnect]],
+    );
+    let metrics = Arc::new(RemoteMetrics::new());
+    let mut set = ReplicaSetBackend::connect(
+        &[proxy.addr().to_string(), upstream.clone()],
+        cfg,
+        pool(Duration::from_secs(3), 1),
+        ReplicaOpts {
+            // hedge timer long on purpose: recovery must come from the
+            // error-triggered failover, not the clock
+            hedge_after: Duration::from_secs(20),
+            deadline: Duration::from_secs(30),
+            circuit_failures: 100,
+            probe_interval: Duration::ZERO,
+        },
+        metrics.clone(),
+    )
+    .unwrap();
+
+    let qs = queries(3, 24);
+    let started = Instant::now();
+    let got = set.search(&job(&qs, 9)).unwrap();
+    let flat = NativeSearcher::new(Arc::new(index.clone()), cfg);
+    let want = flat.search_batch(&qs, 9).unwrap();
+    assert_eq!(got, want, "failover result diverged from flat");
+    assert!(
+        started.elapsed() < Duration::from_secs(20),
+        "failover waited on the hedge timer instead of the error"
+    );
+    assert_eq!(
+        metrics.failovers.load(Ordering::Relaxed),
+        1,
+        "{}",
+        metrics.summary()
+    );
+    assert_eq!(
+        metrics.redials.load(Ordering::Relaxed),
+        1,
+        "mid-stream kill on the pooled connection earns one redial: {}",
+        metrics.summary()
+    );
+    assert_eq!(proxy.accepted(), 2, "expected exactly one redial dial");
+}
+
+/// Consecutive primary failures open its circuit (traffic flows to the
+/// replica without touching the primary); a failed probe keeps it open,
+/// a successful probe closes it and traffic returns to the primary.
+#[test]
+fn circuit_opens_after_failures_and_probe_closes_it() {
+    let index = icq_index(200, 25);
+    let cfg = SearchConfig::default();
+    let upstream = spawn_server(index.clone(), 0);
+    // conn 0: die on the first reply; conns 1, 2: die at the hello;
+    // conn 3+: healthy again (scripts exhausted -> pass-through)
+    let proxy = ChaosProxy::spawn(
+        upstream.clone(),
+        vec![
+            vec![Fault::Pass, Fault::Disconnect],
+            vec![Fault::Disconnect],
+            vec![Fault::Disconnect],
+        ],
+    );
+    let metrics = Arc::new(RemoteMetrics::new());
+    let mut set = ReplicaSetBackend::connect(
+        &[proxy.addr().to_string(), upstream.clone()],
+        cfg,
+        // retries = 0: every connection-level failure surfaces to the
+        // replica layer, making the failure accounting exact
+        pool(Duration::from_secs(3), 0),
+        ReplicaOpts {
+            hedge_after: Duration::ZERO, // no hedge timer: errors only
+            deadline: Duration::from_secs(30),
+            circuit_failures: 2,
+            // long interval: the background prober can't interfere and
+            // the open circuit cannot half-open mid-test
+            probe_interval: Duration::from_secs(120),
+        },
+        metrics.clone(),
+    )
+    .unwrap();
+    let handle = set.handle();
+    let flat = NativeSearcher::new(Arc::new(index.clone()), cfg);
+    let qs = queries(3, 26);
+    let want = flat.search_batch(&qs, 8).unwrap();
+
+    // batch 1: pooled conn 0 dies mid-reply -> failure #1 -> failover
+    assert_eq!(set.search(&job(&qs, 8)).unwrap(), want);
+    assert!(!handle.circuit_open(0));
+    // batch 2: fresh dial (conn 1) dies at hello -> failure #2 -> open
+    assert_eq!(set.search(&job(&qs, 8)).unwrap(), want);
+    assert!(handle.circuit_open(0), "{}", metrics.summary());
+    assert_eq!(metrics.circuit_opens.load(Ordering::Relaxed), 1);
+    assert_eq!(proxy.accepted(), 2);
+
+    // batch 3: circuit open -> the replica serves, primary untouched
+    assert_eq!(set.search(&job(&qs, 8)).unwrap(), want);
+    assert_eq!(
+        proxy.accepted(),
+        2,
+        "an open circuit must not dial the primary"
+    );
+
+    // probe 1 lands on conn 2 (still scripted to die): circuit stays
+    // open
+    handle.probe_now();
+    assert!(handle.circuit_open(0));
+    assert_eq!(metrics.probe_failures.load(Ordering::Relaxed), 1);
+    // probe 2 lands on conn 3 (healthy): circuit closes
+    handle.probe_now();
+    assert!(!handle.circuit_open(0), "{}", metrics.summary());
+    assert_eq!(metrics.circuit_closes.load(Ordering::Relaxed), 1);
+    assert_eq!(proxy.accepted(), 4);
+
+    // batch 4: primary serves again, over the connection the probe
+    // left warm in the pool
+    assert_eq!(set.search(&job(&qs, 8)).unwrap(), want);
+    assert_eq!(proxy.accepted(), 4, "probe's connection was not reused");
+}
+
+/// The pool really pipelines: two concurrent exchanges on one endpoint
+/// each get their own connection (one reused, one dialed), and both
+/// return correct results.
+#[test]
+fn pool_runs_two_exchanges_in_flight_on_separate_connections() {
+    let index = icq_index(180, 27);
+    let cfg = SearchConfig::default();
+    let upstream = spawn_server(index.clone(), 0);
+    // the pooled connection's first reply is held 1.5 s — a wide margin
+    // over thread-scheduling jitter — guaranteeing the second exchange
+    // overlaps the first and must dial its own connection
+    let proxy = ChaosProxy::spawn(
+        upstream,
+        vec![vec![Fault::Pass, Fault::Delay(Duration::from_millis(1500))]],
+    );
+    let metrics = Arc::new(RemoteMetrics::new());
+    let remote = RemoteShardBackend::connect_pooled(
+        proxy.addr(),
+        cfg,
+        pool(Duration::from_secs(5), 1),
+        metrics.clone(),
+    )
+    .unwrap();
+    let endpoint = remote.endpoint().clone();
+
+    let flat = NativeSearcher::new(Arc::new(index.clone()), cfg);
+    let qa = queries(2, 28);
+    let qb = queries(2, 29);
+    let want_a = flat.search_batch(&qa, 6).unwrap();
+    let want_b = flat.search_batch(&qb, 6).unwrap();
+
+    let barrier = Arc::new(Barrier::new(2));
+    let mut handles = Vec::new();
+    for qs in [qa, qb] {
+        let endpoint = endpoint.clone();
+        let barrier = barrier.clone();
+        let j = job(&qs, 6);
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            endpoint.search_job(&j)
+        }));
+    }
+    let results: Vec<_> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(results[0].as_ref().unwrap(), &want_a);
+    assert_eq!(results[1].as_ref().unwrap(), &want_b);
+    assert_eq!(
+        metrics.dials.load(Ordering::Relaxed),
+        2,
+        "two in-flight exchanges must use two connections: {}",
+        metrics.summary()
+    );
+    assert_eq!(proxy.accepted(), 2);
+}
+
+/// A corrupted reply frame injected in flight surfaces as a checksum
+/// error and is never blindly retried.
+#[test]
+fn corrupted_frame_in_flight_is_a_structured_checksum_error() {
+    let index = icq_index(160, 31);
+    let cfg = SearchConfig::default();
+    let upstream = spawn_server(index, 0);
+    let proxy = ChaosProxy::spawn(
+        upstream,
+        vec![vec![Fault::Pass, Fault::CorruptBit]],
+    );
+    let metrics = Arc::new(RemoteMetrics::new());
+    let mut remote = RemoteShardBackend::connect_pooled(
+        proxy.addr(),
+        cfg,
+        pool(Duration::from_secs(5), 1),
+        metrics.clone(),
+    )
+    .unwrap();
+    let qs = queries(1, 32);
+    let err = remote.search(&job(&qs, 5)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checksum"), "got: {msg}");
+    assert_eq!(
+        metrics.redials.load(Ordering::Relaxed),
+        0,
+        "protocol corruption must not be redialed"
+    );
+}
+
+/// An unanswerable replica set fails the batch at the configured
+/// deadline with a structured error — bounded latency, not a hang.
+#[test]
+fn unanswered_batch_fails_at_the_deadline_not_the_io_timeout() {
+    let index = icq_index(150, 33);
+    let cfg = SearchConfig::default();
+    let upstream = spawn_server(index, 0);
+    let proxy = ChaosProxy::spawn(
+        upstream,
+        vec![vec![Fault::Pass, Fault::BlackHole]],
+    );
+    let metrics = Arc::new(RemoteMetrics::new());
+    let mut set = ReplicaSetBackend::connect(
+        &[proxy.addr().to_string()],
+        cfg,
+        // io timeout far beyond the deadline: only the deadline can
+        // unblock the caller
+        pool(Duration::from_secs(60), 1),
+        ReplicaOpts {
+            hedge_after: Duration::ZERO,
+            deadline: Duration::from_millis(400),
+            circuit_failures: 0,
+            probe_interval: Duration::ZERO,
+        },
+        metrics.clone(),
+    )
+    .unwrap();
+    let qs = queries(2, 34);
+    let started = Instant::now();
+    let err = set.search(&job(&qs, 4)).unwrap_err();
+    let elapsed = started.elapsed();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("deadline"), "got: {msg}");
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "deadline did not bound the wait ({elapsed:?})"
+    );
+    assert_eq!(metrics.deadline_exceeded.load(Ordering::Relaxed), 1);
+}
+
+/// Acceptance: a slowloris connection against `--idle-timeout` is
+/// reaped without disturbing a concurrent healthy client — whose pooled
+/// connection, reaped while idle between batches, is replaced by a
+/// transparent redial (zero client-visible errors).
+#[test]
+fn idle_timeout_reaps_slowloris_while_healthy_client_is_undisturbed() {
+    let index = icq_index(170, 35);
+    let cfg = SearchConfig::default();
+    let idle = Duration::from_millis(150);
+    let addr = spawn_server_with(
+        index.clone(),
+        0,
+        ServeShardOpts { idle_timeout: Some(idle), max_conns: 0 },
+    );
+
+    // slowloris: greet, then trickle 3 bytes of a frame and stall
+    let slow_addr = addr.clone();
+    let slowloris = std::thread::spawn(move || {
+        let sock = TcpStream::connect(&slow_addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(20))).ok();
+        let mut reader = sock.try_clone().unwrap();
+        let hello = wire::read_frame(&mut reader).unwrap();
+        assert!(matches!(hello, Frame::Hello(_)));
+        use std::io::Write as _;
+        (&sock).write_all(b"IC\x00").unwrap();
+        // the server must reap us: first a goodbye naming the stall
+        // (we are mid-frame, not idle), then EOF
+        match wire::read_frame(&mut reader) {
+            Ok(Frame::Error { message }) => {
+                assert!(
+                    message.contains("timed out"),
+                    "unexpected goodbye: {message}"
+                );
+                // after the goodbye the connection must be gone
+                assert!(wire::read_frame(&mut reader).is_err());
+            }
+            // the goodbye can race the close; EOF alone also proves
+            // the reap
+            Err(WireError::Closed | WireError::Truncated(_)) => {}
+            other => panic!("expected reap, got {other:?}"),
+        }
+    });
+
+    // healthy client, concurrently: three batches with idle gaps
+    // longer than the server's timeout between them
+    let metrics = Arc::new(RemoteMetrics::new());
+    let mut remote = RemoteShardBackend::connect_pooled(
+        &addr,
+        cfg,
+        pool(Duration::from_secs(5), 1),
+        metrics.clone(),
+    )
+    .unwrap();
+    let flat = NativeSearcher::new(Arc::new(index.clone()), cfg);
+    let qs = queries(2, 36);
+    let want = flat.search_batch(&qs, 6).unwrap();
+    for round in 0..3 {
+        let got = remote
+            .search(&job(&qs, 6))
+            .unwrap_or_else(|e| panic!("round {round} failed: {e:#}"));
+        assert_eq!(got, want, "round {round} diverged");
+        std::thread::sleep(idle + Duration::from_millis(150));
+    }
+    assert!(
+        metrics.redials.load(Ordering::Relaxed) >= 1,
+        "server reaping never exercised the redial path: {}",
+        metrics.summary()
+    );
+    slowloris.join().unwrap();
+}
+
+/// `--max-conns` turns away excess connections with a structured error
+/// frame and admits new ones as slots free up.
+#[test]
+fn connection_cap_refuses_excess_and_recovers_when_a_slot_frees() {
+    let index = icq_index(140, 37);
+    let addr = spawn_server_with(
+        index,
+        0,
+        ServeShardOpts { idle_timeout: None, max_conns: 2 },
+    );
+    let dial = |addr: &str| -> (TcpStream, Result<Frame, WireError>) {
+        let sock = TcpStream::connect(addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(10))).ok();
+        let mut reader = sock.try_clone().unwrap();
+        let frame = wire::read_frame(&mut reader);
+        (sock, frame)
+    };
+    let (c1, f1) = dial(&addr);
+    assert!(matches!(f1, Ok(Frame::Hello(_))), "conn 1: {f1:?}");
+    let (_c2, f2) = dial(&addr);
+    assert!(matches!(f2, Ok(Frame::Hello(_))), "conn 2: {f2:?}");
+    // third connection: structured refusal instead of a hello
+    let (_c3, f3) = dial(&addr);
+    match f3 {
+        Ok(Frame::Error { message }) => {
+            assert!(message.contains("connection limit"), "{message}")
+        }
+        other => panic!("expected a connection-limit error, got {other:?}"),
+    }
+    // free a slot and poll until the server admits a new connection
+    drop(c1);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (_c, f) = dial(&addr);
+        if matches!(f, Ok(Frame::Hello(_))) {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "freed slot never became admittable; last answer: {f:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}

@@ -3,8 +3,11 @@
 //! registry has no proptest, so these are seeded sweeps over the in-tree
 //! RNG — shrinkless but broad, with the failing seed printed on panic.
 
+use icq::coordinator::wire::{
+    self, Frame, HelloInfo, WireError, WIRE_VERSION,
+};
 use icq::core::json::Json;
-use icq::core::{Matrix, Rng, TopK};
+use icq::core::{Hit, Matrix, Rng, TopK};
 use icq::data::format::TensorPack;
 use icq::index::lut::{Lut, LutContext};
 use icq::index::search_icq::{self, IcqSearchOpts};
@@ -202,6 +205,164 @@ fn prop_json_roundtrip() {
             panic!("seed {seed}: reparse failed: {e}\n{text}")
         });
         assert_eq!(v, back, "seed {seed}: {text}");
+    }
+}
+
+/// One random wire frame of any kind, with random payload shapes
+/// (empty queries, empty hit lists, and empty error strings included).
+fn random_frame(rng: &mut Rng) -> Frame {
+    match rng.below(4) {
+        0 => Frame::Hello(HelloInfo {
+            dim: rng.below(512),
+            shard_len: rng.below(1 << 20),
+            start: rng.below(1 << 20),
+            fast_k: rng.below(16),
+        }),
+        1 => {
+            let nq = rng.below(4);
+            let d = 1 + rng.below(8);
+            Frame::Query {
+                top_k: 1 + rng.below(100),
+                fast_k: rng.below(8),
+                margin_scale: rng.uniform_f32(),
+                queries: Matrix::from_fn(nq, d, |_, _| rng.normal_f32()),
+            }
+        }
+        2 => Frame::Results {
+            hits: (0..rng.below(4))
+                .map(|_| {
+                    (0..rng.below(6))
+                        .map(|_| Hit {
+                            id: rng.below(1 << 30) as u32,
+                            dist: rng.uniform_f32() * 100.0,
+                        })
+                        .collect()
+                })
+                .collect(),
+        },
+        _ => Frame::Error { message: "e".repeat(rng.below(48)) },
+    }
+}
+
+fn encode(frame: &Frame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    wire::write_frame(&mut buf, frame).unwrap();
+    buf
+}
+
+/// Property: encode -> decode is the identity for arbitrary frame
+/// kinds and payload sizes, including frames decoded back-to-back off
+/// one stream.
+#[test]
+fn prop_wire_roundtrip_random_frames() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed + 4000);
+        let frames: Vec<Frame> =
+            (0..3).map(|_| random_frame(&mut rng)).collect();
+        let mut stream = Vec::new();
+        for f in &frames {
+            let bytes = encode(f);
+            assert_eq!(
+                wire::read_frame(&mut &bytes[..]).unwrap(),
+                *f,
+                "seed {seed}"
+            );
+            stream.extend_from_slice(&bytes);
+        }
+        // the same frames parse back-to-back off one buffered stream
+        let mut r = &stream[..];
+        for f in &frames {
+            assert_eq!(wire::read_frame(&mut r).unwrap(), *f, "seed {seed}");
+        }
+        assert_eq!(
+            wire::read_frame(&mut r).unwrap_err(),
+            WireError::Closed,
+            "seed {seed}: stream must end with a clean close"
+        );
+    }
+}
+
+/// Property: flipping any single bit of an encoded frame never yields
+/// the original frame back — and for every byte the checksum covers
+/// (the kind byte, the payload, and the CRC itself) the error is
+/// exactly `ChecksumMismatch`; header bytes map to their own typed
+/// errors (magic / version / length).
+#[test]
+fn prop_wire_single_bit_flip_is_always_detected() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed + 5000);
+        let frame = random_frame(&mut rng);
+        let bytes = encode(&frame);
+        for bit in 0..bytes.len() * 8 {
+            let byte = bit / 8;
+            let mut corrupt = bytes.clone();
+            corrupt[byte] ^= 1 << (bit % 8);
+            let res = wire::read_frame(&mut &corrupt[..]);
+            let err = match res {
+                Err(e) => e,
+                Ok(f) => panic!(
+                    "seed {seed} bit {bit}: corrupt frame decoded as {f:?}"
+                ),
+            };
+            match byte {
+                0..=3 => assert!(
+                    matches!(err, WireError::BadMagic(_)),
+                    "seed {seed} bit {bit}: {err}"
+                ),
+                4..=5 => assert!(
+                    matches!(
+                        err,
+                        WireError::VersionMismatch { want: WIRE_VERSION, .. }
+                    ),
+                    "seed {seed} bit {bit}: {err}"
+                ),
+                6 => assert_eq!(
+                    err,
+                    WireError::ChecksumMismatch,
+                    "seed {seed} bit {bit}: kind is checksummed"
+                ),
+                7..=10 => assert!(
+                    matches!(
+                        err,
+                        WireError::Truncated(_)
+                            | WireError::FrameTooLarge(_)
+                            | WireError::ChecksumMismatch
+                    ),
+                    "seed {seed} bit {bit} (length field): {err}"
+                ),
+                _ => assert_eq!(
+                    err,
+                    WireError::ChecksumMismatch,
+                    "seed {seed} bit {bit}: payload/CRC flips must trip \
+                     the checksum"
+                ),
+            }
+        }
+    }
+}
+
+/// Property: truncating an encoded frame at *every* prefix length
+/// yields `Closed` (zero bytes) or `Truncated` — never a panic, never
+/// a wrong frame.
+#[test]
+fn prop_wire_truncation_at_every_prefix_is_typed() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed + 6000);
+        let frame = random_frame(&mut rng);
+        let bytes = encode(&frame);
+        for cut in 0..bytes.len() {
+            let err = wire::read_frame(&mut &bytes[..cut]).unwrap_err();
+            if cut == 0 {
+                assert_eq!(err, WireError::Closed, "seed {seed}");
+            } else {
+                assert!(
+                    matches!(err, WireError::Truncated(_)),
+                    "seed {seed} cut {cut}: {err}"
+                );
+            }
+        }
+        // the untruncated frame still parses (sanity)
+        assert_eq!(wire::read_frame(&mut &bytes[..]).unwrap(), frame);
     }
 }
 

@@ -1,0 +1,184 @@
+//! Deterministic fault-injecting TCP proxy for the chaos suite.
+//!
+//! Sits between a wire-protocol client and a real shard server and
+//! applies a scripted fault per server→client frame (the hello is
+//! frame 0), so tests trigger "the reply never came", "the connection
+//! died mid-frame", or "a byte flipped in flight" exactly when they
+//! mean to — no sleeps-and-prayers timing. The client→server direction
+//! is pumped through untouched.
+//!
+//! Scripts are consumed per accepted connection in order; once the
+//! scripts run out, further connections pass everything through
+//! (letting recovery paths — probes, redials — succeed on purpose).
+
+#![allow(dead_code)] // each test crate uses the subset it needs
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One scripted action applied to the n-th server→client frame of a
+/// proxied connection. Entries past the script's end are `Pass`.
+#[derive(Clone, Copy, Debug)]
+pub enum Fault {
+    /// Forward the frame untouched.
+    Pass,
+    /// Forward the frame after a fixed delay.
+    Delay(Duration),
+    /// Swallow this frame and every later one; the connection stays
+    /// open (a peer that accepted work and will never answer).
+    BlackHole,
+    /// Close both directions before forwarding this frame.
+    Disconnect,
+    /// Forward only the first `n` bytes of this frame, then close.
+    TruncateAfter(usize),
+    /// Flip one payload bit, then forward (the checksum now lies).
+    CorruptBit,
+}
+
+/// A fault-injecting TCP proxy in front of one upstream address.
+pub struct ChaosProxy {
+    addr: String,
+    accepted: Arc<AtomicUsize>,
+}
+
+impl ChaosProxy {
+    /// Bind an ephemeral loopback port and start proxying to
+    /// `upstream`. Connection `i` (in accept order) runs `scripts[i]`;
+    /// connections past the end of `scripts` pass everything through.
+    pub fn spawn(upstream: String, scripts: Vec<Vec<Fault>>) -> ChaosProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let counter = accepted.clone();
+        let scripts: Arc<Mutex<VecDeque<Vec<Fault>>>> =
+            Arc::new(Mutex::new(scripts.into_iter().collect()));
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(client) = stream else { break };
+                counter.fetch_add(1, Ordering::SeqCst);
+                let script =
+                    scripts.lock().unwrap().pop_front().unwrap_or_default();
+                let upstream = upstream.clone();
+                std::thread::spawn(move || {
+                    proxy_conn(client, &upstream, script)
+                });
+            }
+        });
+        ChaosProxy { addr, accepted }
+    }
+
+    /// The proxy's dialable "host:port".
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Connections accepted so far (for asserting dial/redial counts).
+    pub fn accepted(&self) -> usize {
+        self.accepted.load(Ordering::SeqCst)
+    }
+}
+
+fn proxy_conn(client: TcpStream, upstream: &str, script: Vec<Fault>) {
+    let Ok(server) = TcpStream::connect(upstream) else {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    };
+    client.set_nodelay(true).ok();
+    server.set_nodelay(true).ok();
+    // client -> server: raw byte pump on its own thread
+    let (c_read, s_write) =
+        (client.try_clone().unwrap(), server.try_clone().unwrap());
+    let c2s = std::thread::spawn(move || pump_raw(c_read, s_write));
+    // server -> client: frame-aware, scripted
+    pump_frames(server, &client, &script);
+    let _ = client.shutdown(Shutdown::Both);
+    let _ = c2s.join();
+}
+
+fn pump_raw(mut from: TcpStream, mut to: TcpStream) {
+    let mut buf = [0u8; 4096];
+    loop {
+        match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                if to.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = to.shutdown(Shutdown::Write);
+}
+
+/// Read one whole wire frame (11-byte header + payload + 4-byte CRC).
+fn read_whole_frame(from: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut header = [0u8; 11];
+    from.read_exact(&mut header).ok()?;
+    let len =
+        u32::from_le_bytes([header[7], header[8], header[9], header[10]])
+            as usize;
+    let mut frame = vec![0u8; 11 + len + 4];
+    frame[..11].copy_from_slice(&header);
+    from.read_exact(&mut frame[11..]).ok()?;
+    Some(frame)
+}
+
+fn pump_frames(mut server: TcpStream, client: &TcpStream, script: &[Fault]) {
+    // `Write` is implemented for `&TcpStream`; a mutable binding to the
+    // shared reference is all we need to write to the client half
+    let mut out = client;
+    let mut blackholed = false;
+    let mut frame_idx = 0usize;
+    loop {
+        let Some(mut frame) = read_whole_frame(&mut server) else {
+            // upstream closed: mirror it to the client
+            return;
+        };
+        let fault = script.get(frame_idx).copied().unwrap_or(Fault::Pass);
+        frame_idx += 1;
+        if blackholed {
+            // keep draining upstream so its writer never wedges, but
+            // nothing reaches the client anymore
+            continue;
+        }
+        match fault {
+            Fault::Pass => {
+                if out.write_all(&frame).is_err() {
+                    return;
+                }
+            }
+            Fault::Delay(d) => {
+                std::thread::sleep(d);
+                if out.write_all(&frame).is_err() {
+                    return;
+                }
+            }
+            Fault::BlackHole => {
+                blackholed = true;
+            }
+            Fault::Disconnect => {
+                let _ = server.shutdown(Shutdown::Both);
+                return;
+            }
+            Fault::TruncateAfter(n) => {
+                let n = n.min(frame.len());
+                let _ = out.write_all(&frame[..n]);
+                let _ = server.shutdown(Shutdown::Both);
+                return;
+            }
+            Fault::CorruptBit => {
+                // flip inside the payload when there is one, else in
+                // the CRC — either way the checksum check must trip
+                let off = if frame.len() > 15 { 11 } else { frame.len() - 1 };
+                frame[off] ^= 0x04;
+                if out.write_all(&frame).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}

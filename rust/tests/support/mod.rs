@@ -1,0 +1,4 @@
+//! Shared test-support modules (not a test crate by itself: cargo only
+//! builds top-level files in `tests/` as test binaries).
+
+pub mod chaos_proxy;

@@ -261,17 +261,18 @@ fn mid_stream_disconnect_fails_the_batch() {
     );
 }
 
-/// Truncated and corrupt reply frames must surface as typed wire
-/// errors (checksum / truncation), never as garbage results.
-#[test]
-fn corrupt_and_truncated_frames_are_structured_errors() {
-    // server that greets properly, then answers any request with a
-    // frame whose payload byte was flipped (checksum mismatch), then
-    // with a truncated frame on the next connection
+/// Spawn a server that greets every connection properly, then answers
+/// any request with a corrupted (flipped payload byte) or truncated
+/// results frame and hangs up. Every connection misbehaves the same
+/// way, so the client's stale-connection redial cannot "fix" it.
+/// (Deliberately not the chaos proxy from `tests/support`: this fakes
+/// the *server's own* bytes with no real index behind it, while the
+/// proxy injects faults in front of a healthy server.)
+fn evil_reply_server(truncate: bool) -> String {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     std::thread::spawn(move || {
-        for mode in 0.. {
+        loop {
             let Ok((sock, _)) = listener.accept() else { break };
             let mut w = sock.try_clone().unwrap();
             wire::write_frame(
@@ -297,19 +298,30 @@ fn corrupt_and_truncated_frames_are_structured_errors() {
             let mut reply = Vec::new();
             wire::write_frame(&mut reply, &Frame::Results { hits: vec![vec![]] })
                 .unwrap();
-            if mode % 2 == 0 {
+            if truncate {
+                let _ = w.write_all(&reply[..reply.len() - 2]);
+            } else {
                 reply[12] ^= 0x10; // corrupt a payload byte
                 let _ = w.write_all(&reply);
-            } else {
-                let _ = w.write_all(&reply[..reply.len() - 2]); // truncate
             }
             let _ = w.flush();
             // drop the socket: the client must not wait for more
         }
     });
+    addr
+}
+
+/// Truncated and corrupt reply frames must surface as typed wire
+/// errors (checksum / truncation), never as garbage results. A
+/// truncated reply on a pooled connection is allowed one transparent
+/// redial (the stale-socket path); a persistently evil server must
+/// still surface the error after it.
+#[test]
+fn corrupt_and_truncated_frames_are_structured_errors() {
     let cfg = SearchConfig::default();
     let job_queries = Arc::new(Matrix::zeros(1, 4));
-    for expect in ["checksum", "mid-frame"] {
+    for (truncate, expect) in [(false, "checksum"), (true, "mid-frame")] {
+        let addr = evil_reply_server(truncate);
         let mut remote =
             RemoteShardBackend::connect_with_timeout(&addr, cfg, timeout())
                 .unwrap();
@@ -325,6 +337,17 @@ fn corrupt_and_truncated_frames_are_structured_errors() {
             msg.contains(expect) || msg.contains("closed"),
             "expected a '{expect}' wire error, got: {msg}"
         );
+        let metrics = remote.endpoint().metrics();
+        let redials =
+            metrics.redials.load(std::sync::atomic::Ordering::Relaxed);
+        if truncate {
+            // mid-frame drop on the pooled connection earned exactly
+            // one redial; the fresh connection's failure surfaced
+            assert_eq!(redials, 1, "expected one transparent redial");
+        } else {
+            // checksum corruption is a protocol fault, never redialed
+            assert_eq!(redials, 0, "corrupt frames must not be retried");
+        }
     }
 }
 
