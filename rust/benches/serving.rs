@@ -1,20 +1,25 @@
 //! Serving-path benchmark (EXPERIMENTS.md section Perf): end-to-end
 //! coordinator throughput/latency under closed-loop load, ICQ two-step vs
-//! full-ADC searchers, plus batching-policy sensitivity.
+//! full-ADC searchers, batching-policy sensitivity, plus the
+//! exhaustive-vs-IVF nprobe sweep (QPS and recall@10 against the exact
+//! float oracle, machine-readable in `BENCH_ivf.json`; override the
+//! path with `ICQ_BENCH_IVF_JSON`).
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use icq::bench::timing::bench;
 use icq::config::{SearchConfig, ServeConfig};
 use icq::coordinator::server::closed_loop_load;
 use icq::coordinator::{
-    BatchSearcher, Coordinator, NativeSearcher, ShardedSearcher,
+    BatchSearcher, Coordinator, IvfSearcher, NativeSearcher, ShardedSearcher,
 };
+use icq::core::json::Json;
 use icq::core::{Hit, Matrix, Rng};
 use icq::index::lut::Lut;
 use icq::index::qlut::{self, QLut};
 use icq::index::shard::ShardPolicy;
-use icq::index::{search_adc, EncodedIndex, OpCounter};
+use icq::index::{search_adc, EncodedIndex, IvfBuildOpts, IvfIndex, OpCounter};
 use icq::quantizer::icq::{Icq, IcqOpts};
 
 /// Full-ADC searcher (the baseline serving path).
@@ -288,5 +293,156 @@ fn main() {
             coord.metrics.latency_percentile_us(0.99),
             coord.metrics.mean_batch_size(),
         );
+    }
+
+    // --- exhaustive vs IVF non-exhaustive sweep ---
+    ivf_sweep(fast);
+}
+
+/// Exhaustive crude scan vs the IVF coarse partition at nprobe in
+/// {1, 4, 16, ncells}: QPS over a query batch and recall@10 against
+/// both the exact float oracle and the flat quantized top-10 (the
+/// ceiling IVF can actually reach — the quantizer's own recall bounds
+/// it against the exact oracle). Also asserts the full probe is
+/// bitwise equal to the flat scan before timing anything. Results go
+/// to `BENCH_ivf.json` (override with `ICQ_BENCH_IVF_JSON`).
+fn ivf_sweep(fast: bool) {
+    let (n, ncells, nq) =
+        if fast { (5_000, 32, 64) } else { (100_000, 256, 256) };
+    let d = 32usize;
+    eprintln!(
+        "[serving bench] IVF sweep: corpus n={n} d={d}, ncells={ncells}..."
+    );
+    let mut rng = Rng::new(4242);
+    let n_clusters = 64;
+    let centers = Matrix::from_fn(n_clusters, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 4.0 } else { 0.4 }
+    });
+    let x = Matrix::from_fn(n, d, |i, j| {
+        centers.get(i % n_clusters, j)
+            + rng.normal_f32() * if j % 4 == 0 { 0.8 } else { 0.2 }
+    });
+    let icq = Icq::train(
+        &x,
+        IcqOpts {
+            k: 8,
+            m: 256,
+            fast_k: 0,
+            kmeans_iters: 8,
+            prior_steps: 200,
+            seed: 0,
+        },
+    );
+    let index = Arc::new(EncodedIndex::build_icq(&icq, &x, vec![0; n]));
+    let ivf = Arc::new(
+        IvfIndex::partition(
+            &index,
+            &x,
+            IvfBuildOpts { ncells, iters: 10, seed: 0 },
+        )
+        .expect("partition the bench index"),
+    );
+    let queries = {
+        let mut m = Matrix::zeros(nq, d);
+        for i in 0..nq {
+            m.row_mut(i).copy_from_slice(&make_query(&centers, i + 31337));
+        }
+        m
+    };
+    let exact = icq::eval::GroundTruth::compute(&x, &queries, 10);
+
+    let flat = NativeSearcher::new(index.clone(), SearchConfig::default());
+    let flat_hits = flat.search_batch(&queries, 10).expect("flat scan");
+    let flat_ids: Vec<Vec<u32>> = flat_hits
+        .iter()
+        .map(|hs| hs.iter().map(|h| h.id).collect())
+        .collect();
+
+    // the recall/speed knob is only trustworthy if its endpoint is the
+    // flat scan exactly
+    let full =
+        IvfSearcher::new(ivf.clone(), ncells, SearchConfig::default());
+    assert_eq!(
+        full.search_batch(&queries, 10).expect("full probe"),
+        flat_hits,
+        "IVF full probe diverged from the flat exhaustive scan"
+    );
+
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("ivf_sweep".to_string()));
+    for (key, v) in [
+        ("n", n as f64),
+        ("d", d as f64),
+        ("ncells", ncells as f64),
+        ("nq", nq as f64),
+    ] {
+        obj.insert(key.to_string(), Json::Num(v));
+    }
+
+    let m_flat = bench("ivf/exhaustive flat scan", || {
+        icq::bench::timing::black_box(
+            flat.search_batch(&queries, 10).expect("flat scan"),
+        );
+    });
+    println!("{}", m_flat.report());
+    let flat_qps = nq as f64 / m_flat.median.as_secs_f64();
+    let flat_recall = icq::eval::recall_at(&flat_hits, &exact.ids, 10);
+    println!(
+        "ivf/exhaustive: {flat_qps:.0} qps | recall@10 vs exact \
+         {flat_recall:.3}"
+    );
+    obj.insert("exhaustive_qps".to_string(), Json::Num(flat_qps));
+    obj.insert("exhaustive_recall10".to_string(), Json::Num(flat_recall));
+
+    let mut best_speedup_at_090 = 0.0f64;
+    for nprobe in [1usize, 4, 16, ncells] {
+        if nprobe > ncells {
+            continue;
+        }
+        let searcher =
+            IvfSearcher::new(ivf.clone(), nprobe, SearchConfig::default());
+        let hits = searcher.search_batch(&queries, 10).expect("ivf scan");
+        let m = bench(&format!("ivf/nprobe={nprobe}"), || {
+            icq::bench::timing::black_box(
+                searcher.search_batch(&queries, 10).expect("ivf scan"),
+            );
+        });
+        println!("{}", m.report());
+        let qps = nq as f64 / m.median.as_secs_f64();
+        let recall = icq::eval::recall_at(&hits, &exact.ids, 10);
+        let recall_vs_flat = icq::eval::recall_at(&hits, &flat_ids, 10);
+        let speedup = qps / flat_qps;
+        println!(
+            "ivf/nprobe={nprobe}: {qps:.0} qps ({speedup:.1}x exhaustive) | \
+             recall@10 vs exact {recall:.3} | vs flat quantized \
+             {recall_vs_flat:.3}"
+        );
+        if recall_vs_flat >= 0.9 && speedup > best_speedup_at_090 {
+            best_speedup_at_090 = speedup;
+        }
+        let tag = if nprobe == ncells {
+            "all".to_string()
+        } else {
+            nprobe.to_string()
+        };
+        obj.insert(format!("ivf_nprobe{tag}_qps"), Json::Num(qps));
+        obj.insert(format!("ivf_nprobe{tag}_recall10"), Json::Num(recall));
+        obj.insert(
+            format!("ivf_nprobe{tag}_recall10_vs_flat"),
+            Json::Num(recall_vs_flat),
+        );
+        obj.insert(format!("ivf_nprobe{tag}_speedup"), Json::Num(speedup));
+    }
+    obj.insert(
+        "max_speedup_at_recall90_vs_flat".to_string(),
+        Json::Num(best_speedup_at_090),
+    );
+
+    let json_path = std::env::var("ICQ_BENCH_IVF_JSON")
+        .unwrap_or_else(|_| "BENCH_ivf.json".to_string());
+    let json = Json::Obj(obj).to_string_json();
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("[serving bench] could not write {json_path}: {e}"),
     }
 }

@@ -7,4 +7,6 @@
 
 pub mod schema;
 
-pub use schema::{EngineConfig, MethodKind, SearchConfig, ServeConfig};
+pub use schema::{
+    EngineConfig, IvfParams, MethodKind, SearchConfig, ServeConfig,
+};

@@ -56,6 +56,29 @@ impl Default for SearchConfig {
     }
 }
 
+/// IVF coarse-partition knobs (non-exhaustive search).
+#[derive(Clone, Copy, Debug)]
+pub struct IvfParams {
+    /// coarse k-means cells; 0 disables IVF (the flat exhaustive
+    /// path, today's default).
+    pub ncells: usize,
+    /// cells probed per query, clamped to `ncells`. `nprobe = ncells`
+    /// probes everything and (in partition mode) is bitwise identical
+    /// to the flat scan; small values trade recall for QPS.
+    pub nprobe: usize,
+    /// encode residuals `x - centroid(x)` (IVFADC) instead of
+    /// partitioning the flat codes; better per-cell quantization at
+    /// the cost of one LUT build per probed cell and no bitwise-parity
+    /// guarantee against the flat scan.
+    pub residual: bool,
+}
+
+impl Default for IvfParams {
+    fn default() -> Self {
+        IvfParams { ncells: 0, nprobe: 8, residual: false }
+    }
+}
+
 /// Serving-layer knobs.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -159,6 +182,7 @@ pub struct EngineConfig {
     pub d_embed: usize,
     pub seed: u64,
     pub search: SearchConfig,
+    pub ivf: IvfParams,
     pub serve: ServeConfig,
     /// artifacts directory for the PJRT runtime.
     pub artifacts_dir: String,
@@ -177,6 +201,7 @@ impl Default for EngineConfig {
             d_embed: 16,
             seed: 0,
             search: SearchConfig::default(),
+            ivf: IvfParams::default(),
             serve: ServeConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
@@ -226,6 +251,15 @@ impl EngineConfig {
             "seed" => self.seed = value.parse()?,
             "search.top_k" => self.search.top_k = parse_usize(value)?,
             "search.margin_scale" => self.search.margin_scale = value.parse()?,
+            "ivf.ncells" => self.ivf.ncells = parse_usize(value)?,
+            "ivf.nprobe" => self.ivf.nprobe = parse_usize(value)?,
+            "ivf.residual" => {
+                self.ivf.residual = match value {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    other => anyhow::bail!("ivf.residual={other} (want true/false)"),
+                }
+            }
             "serve.max_batch" => self.serve.max_batch = parse_usize(value)?,
             "serve.max_wait_us" => self.serve.max_wait_us = value.parse()?,
             "serve.workers" => self.serve.workers = parse_usize(value)?,
@@ -318,6 +352,24 @@ mod tests {
         let e =
             EngineConfig::from_str_pairs("serve.remote_shards =\n").unwrap();
         assert!(e.serve.remote_shards.is_empty());
+    }
+
+    #[test]
+    fn parses_ivf_keys() {
+        let c = EngineConfig::from_str_pairs(
+            "ivf.ncells = 256\nivf.nprobe = 16\nivf.residual = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.ivf.ncells, 256);
+        assert_eq!(c.ivf.nprobe, 16);
+        assert!(c.ivf.residual);
+        // defaults: IVF off, a modest probe width once enabled
+        let d = EngineConfig::default();
+        assert_eq!(d.ivf.ncells, 0);
+        assert_eq!(d.ivf.nprobe, 8);
+        assert!(!d.ivf.residual);
+        assert!(EngineConfig::from_str_pairs("ivf.residual = maybe\n")
+            .is_err());
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::config::SearchConfig;
 use crate::core::{Hit, Matrix};
 use crate::index::lut::Lut;
 use crate::index::search_icq::{self, IcqSearchOpts};
-use crate::index::{EncodedIndex, OpCounter};
+use crate::index::{EncodedIndex, IvfIndex, OpCounter};
 
 /// One scattered unit of work: the batch's query vectors plus (when the
 /// gather has a local LUT source) the prebuilt per-query LUTs. Local
@@ -151,10 +151,79 @@ impl ShardBackend for LocalShardBackend {
     }
 }
 
+/// In-process IVF shard executor: one shard view from
+/// [`IvfIndex::split_cells`], holding whole cells. Each query ranks
+/// the (shared, global) centroid table and scans the probed cells this
+/// shard owns — hits already carry global row ids, so no translation
+/// happens here. The gather runs with no shared LUT source for IVF
+/// (residual cells need a per-cell LUT, and partition cells build one
+/// shared LUT per query internally), so `job.luts` is ignored.
+///
+/// Because every shard ranks the same centroids and k-smallest
+/// selection under the canonical `(distance, id)` order is
+/// associative, the gather's merge over these backends equals the
+/// single-process [`IvfIndex::search`] exactly.
+pub struct LocalIvfShardBackend {
+    shard: Arc<IvfIndex>,
+    nprobe: usize,
+    opts: IcqSearchOpts,
+    ops: Arc<OpCounter>,
+}
+
+impl LocalIvfShardBackend {
+    /// A backend over one cell-granular shard view probing `nprobe`
+    /// cells per query. `ops` accumulates this shard's counters (share
+    /// one across backends for whole-database totals).
+    pub fn new(
+        shard: Arc<IvfIndex>,
+        nprobe: usize,
+        cfg: SearchConfig,
+        ops: Arc<OpCounter>,
+    ) -> Self {
+        LocalIvfShardBackend {
+            shard,
+            nprobe: nprobe.max(1),
+            opts: IcqSearchOpts {
+                k: cfg.top_k,
+                margin_scale: cfg.margin_scale,
+            },
+            ops,
+        }
+    }
+}
+
+impl ShardBackend for LocalIvfShardBackend {
+    fn describe(&self) -> String {
+        format!(
+            "local ivf shard ({} of {} cells, {} rows)",
+            self.shard.num_owned_cells(),
+            self.shard.ncells(),
+            self.shard.len()
+        )
+    }
+
+    fn search(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
+        let opts = IcqSearchOpts { k: job.top_k, ..self.opts };
+        let mut out = Vec::with_capacity(job.queries.rows());
+        let mut crude = Vec::new();
+        for qi in 0..job.queries.rows() {
+            out.push(self.shard.search_scratch(
+                job.queries.row(qi),
+                self.nprobe,
+                opts,
+                &self.ops,
+                &mut crude,
+            ));
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::core::Rng;
+    use crate::index::ivf::IvfBuildOpts;
     use crate::quantizer::pq::{Pq, PqOpts};
 
     fn index(n: usize) -> EncodedIndex {
@@ -204,6 +273,53 @@ mod tests {
                     "id {} not in the shard's global range",
                     h.id
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn ivf_backends_union_to_the_flat_ivf_result() {
+        let mut rng = Rng::new(7);
+        let x = Matrix::from_fn(180, 8, |_, _| rng.normal_f32());
+        let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 4, seed: 0 });
+        let idx =
+            EncodedIndex::build(&pq, &x, (0..180).map(|i| i as i32).collect());
+        let ivf = Arc::new(
+            IvfIndex::partition(
+                &idx,
+                &x,
+                IvfBuildOpts { ncells: 5, iters: 6, seed: 0 },
+            )
+            .unwrap(),
+        );
+        let queries = Arc::new(Matrix::from_fn(4, 8, |i, j| {
+            x.get(i * 31, j) + 0.01 * j as f32
+        }));
+        let job = ShardJob {
+            queries: queries.clone(),
+            luts: Arc::new(Vec::new()),
+            top_k: 7,
+        };
+        let ops = Arc::new(OpCounter::new());
+        let opts = IcqSearchOpts { k: 7, margin_scale: 1.0 };
+        for nprobe in [2usize, 5] {
+            let mut lists: Vec<Vec<Vec<Hit>>> = Vec::new();
+            for shard in ivf.split_cells(2).unwrap() {
+                let mut backend = LocalIvfShardBackend::new(
+                    Arc::new(shard),
+                    nprobe,
+                    SearchConfig { top_k: 7, margin_scale: 1.0 },
+                    ops.clone(),
+                );
+                lists.push(backend.search(&job).unwrap());
+            }
+            for qi in 0..queries.rows() {
+                let per_shard: Vec<Vec<Hit>> =
+                    lists.iter().map(|l| l[qi].clone()).collect();
+                let merged = crate::core::merge_topk(&per_shard, 7);
+                let flat =
+                    ivf.search(queries.row(qi), nprobe, opts, &ops);
+                assert_eq!(merged, flat, "nprobe {nprobe} query {qi}");
             }
         }
     }

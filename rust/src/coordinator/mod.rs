@@ -46,11 +46,13 @@ pub mod server;
 pub mod wire;
 pub mod worker;
 
-pub use backend::{LocalShardBackend, ShardBackend, ShardJob};
+pub use backend::{
+    LocalIvfShardBackend, LocalShardBackend, ShardBackend, ShardJob,
+};
 pub use gather::ShardedSearcher;
 pub use metrics::{Metrics, RemoteMetrics};
 pub use pool::{PoolOpts, RemoteEndpoint};
 pub use replica::{ReplicaOpts, ReplicaSetBackend, ReplicaSetHandle};
 pub use server::{Coordinator, QueryRequest, QueryResponse};
 pub use wire::RemoteShardBackend;
-pub use worker::{BatchSearcher, NativeSearcher};
+pub use worker::{BatchSearcher, IvfSearcher, NativeSearcher};

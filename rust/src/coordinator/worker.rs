@@ -13,7 +13,7 @@ use crate::core::parallel::num_threads;
 use crate::core::{Hit, Matrix};
 use crate::index::lut::Lut;
 use crate::index::search_icq::{self, IcqSearchOpts};
-use crate::index::{EncodedIndex, OpCounter};
+use crate::index::{EncodedIndex, IvfIndex, OpCounter};
 
 /// A batch search backend. Implementations must be cheap to share
 /// (`Arc`) and safe to call from multiple worker threads.
@@ -132,6 +132,57 @@ impl BatchSearcher for NativeSearcher {
             ));
         }
         Ok(self.search_streaming(q, top_k))
+    }
+
+    fn dim(&self) -> usize {
+        self.index.dim()
+    }
+}
+
+/// Non-exhaustive searcher over an IVF-partitioned index: every query
+/// ranks the coarse centroids and runs the two-step engine over its
+/// `nprobe` nearest cells only (see [`crate::index::ivf`]). With
+/// `nprobe >= ncells` this degrades gracefully to the exhaustive scan
+/// — bitwise-identical to [`NativeSearcher`] over the un-partitioned
+/// index when the partition was built in (non-residual) partition
+/// mode.
+pub struct IvfSearcher {
+    /// The partitioned database.
+    pub index: Arc<IvfIndex>,
+    /// Cells probed per query (clamped to `ncells` by the index).
+    pub nprobe: usize,
+    /// Default search options (per-request `top_k` overrides `opts.k`).
+    pub opts: IcqSearchOpts,
+    /// Op counters accumulated across every batch served.
+    pub ops: Arc<OpCounter>,
+}
+
+impl IvfSearcher {
+    /// A searcher probing `nprobe` cells with `cfg`'s top-k / margin
+    /// defaults.
+    pub fn new(index: Arc<IvfIndex>, nprobe: usize, cfg: SearchConfig) -> Self {
+        IvfSearcher {
+            index,
+            nprobe: nprobe.max(1),
+            opts: IcqSearchOpts { k: cfg.top_k, margin_scale: cfg.margin_scale },
+            ops: Arc::new(OpCounter::new()),
+        }
+    }
+}
+
+impl BatchSearcher for IvfSearcher {
+    fn search_batch(
+        &self,
+        queries: &Matrix,
+        top_k: usize,
+    ) -> Result<Vec<Vec<Hit>>> {
+        let opts = IcqSearchOpts { k: top_k, ..self.opts };
+        Ok(self.index.search_batch(queries, self.nprobe, opts, &self.ops))
+    }
+
+    fn search_one(&self, q: &[f32], top_k: usize) -> Result<Vec<Hit>> {
+        let opts = IcqSearchOpts { k: top_k, ..self.opts };
+        Ok(self.index.search(q, self.nprobe, opts, &self.ops))
     }
 
     fn dim(&self) -> usize {

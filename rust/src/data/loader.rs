@@ -18,8 +18,31 @@ use crate::core::Matrix;
 /// Resolve a workload name:
 ///   "synthetic1" | "synthetic2" | "synthetic3"  — Table 1 datasets
 ///   "mnist" | "cifar10"                          — real-world look-alikes
-/// `n_samples = 0` keeps the canonical size (Table 1: 11k; real: 6k).
+///   "path/to/file.fvecs" | ".bvecs"              — on-disk vector corpora
+/// `n_samples = 0` keeps the canonical size (Table 1: 11k; real: 6k;
+/// vecs files: every record). File corpora carry no class labels, so
+/// every row gets label 0 (recall-oriented workloads only).
 pub fn load_named(name: &str, n_samples: usize, seed: u64) -> Result<Dataset> {
+    // file-path datasets: match on the ORIGINAL name — paths are
+    // case-sensitive, unlike the catalog names below.
+    let lower_ext = name.rsplit('.').next().map(str::to_ascii_lowercase);
+    if let Some(ext) = lower_ext.as_deref() {
+        if name.contains('.') && (ext == "fvecs" || ext == "bvecs") {
+            let x = if ext == "fvecs" {
+                realworld::read_fvecs(name)?
+            } else {
+                realworld::read_bvecs(name)?
+            };
+            let x = if n_samples > 0 && n_samples < x.rows() {
+                let keep: Vec<usize> = (0..n_samples).collect();
+                x.select_rows(&keep)
+            } else {
+                x
+            };
+            let y = vec![0; x.rows()];
+            return Ok(Dataset::new(x, y));
+        }
+    }
     let name = name.to_ascii_lowercase();
     if let Some(rest) = name.strip_prefix("synthetic") {
         let idx: usize = rest.parse().context("synthetic index")?;
@@ -38,7 +61,10 @@ pub fn load_named(name: &str, n_samples: usize, seed: u64) -> Result<Dataset> {
         let n = if n_samples > 0 { n_samples } else { 6000 };
         return Ok(realworld::generate(kind, n, seed));
     }
-    anyhow::bail!("unknown dataset '{name}' (synthetic1-3 | mnist | cifar10)")
+    anyhow::bail!(
+        "unknown dataset '{name}' (synthetic1-3 | mnist | cifar10 | \
+         path to a .fvecs/.bvecs file)"
+    )
 }
 
 /// A python-trained ICQ parameter pack, materialized.
@@ -169,6 +195,21 @@ mod tests {
     fn load_named_unknown_errors() {
         assert!(load_named("imagenet", 10, 0).is_err());
         assert!(load_named("synthetic9", 10, 0).is_err());
+        assert!(load_named("no/such/file.fvecs", 10, 0).is_err());
+    }
+
+    #[test]
+    fn load_named_routes_vecs_paths() {
+        let path = format!(
+            "{}/tests/fixtures/tiny.fvecs",
+            env!("CARGO_MANIFEST_DIR")
+        );
+        let d = load_named(&path, 0, 0).unwrap();
+        assert_eq!((d.len(), d.dim()), (3, 4));
+        assert!(d.y.iter().all(|&c| c == 0));
+        let trimmed = load_named(&path, 2, 0).unwrap();
+        assert_eq!(trimmed.len(), 2);
+        assert_eq!(trimmed.x.row(1), d.x.row(1));
     }
 
     #[test]

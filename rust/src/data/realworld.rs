@@ -1,4 +1,5 @@
-//! MNIST-like / CIFAR-like deterministic dataset substitutes.
+//! MNIST-like / CIFAR-like deterministic dataset substitutes, plus the
+//! fvecs/bvecs/ivecs loaders for real ANN corpora.
 //!
 //! The sandbox has no network access, so the paper's MNIST [2] and
 //! CIFAR-10 [11] experiments (Figs. 3-6) run on generative look-alikes
@@ -9,6 +10,19 @@
 //! (the prior P(Lambda) of section 3.1) and class-clustered geometry
 //! (the MAP relevance model) — while keeping absolute MAP values
 //! incomparable to the paper's (shape reproduction only).
+//!
+//! When a real corpus *is* on disk (SIFT1M, GIST1M, DEEP1B slices, ...
+//! the TexMex distribution formats), [`read_fvecs`] / [`read_bvecs`] /
+//! [`read_ivecs`] parse it: each record is a little-endian `i32`
+//! dimension header followed by `dim` elements (`f32`, `u8`, `i32`
+//! respectively). Parsing is bounds-checked end to end with typed
+//! [`VecsError`]s — a truncated or corrupt file names the byte offset
+//! and record instead of panicking or wrapping around.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::Context;
 
 use super::Dataset;
 use crate::core::{Matrix, Rng};
@@ -109,6 +123,255 @@ pub fn generate(kind: RealWorldKind, n_samples: usize, seed: u64) -> Dataset {
     Dataset::new(xs, ys)
 }
 
+/// Largest per-record dimension the vecs parsers accept. Real corpora
+/// top out at a few thousand dims (GIST1M is 960); anything near this
+/// bound is a corrupt header, and rejecting it keeps one bad 4-byte
+/// read from driving a multi-gigabyte allocation.
+pub const MAX_VECS_DIM: usize = 1 << 20;
+
+/// A structural defect in an fvecs/bvecs/ivecs byte stream. Every
+/// variant names the 0-based record it was found in, so a corrupt
+/// multi-gigabyte corpus is diagnosable without a hex dump.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VecsError {
+    /// Fewer than 4 bytes remained where record `record`'s dimension
+    /// header should start (at byte `offset`).
+    TruncatedHeader {
+        /// 0-based record index.
+        record: usize,
+        /// byte offset of the partial header.
+        offset: usize,
+    },
+    /// Record `record` declared `dim` elements but the file ended
+    /// before its body (starting at byte `offset`) was complete.
+    TruncatedBody {
+        /// 0-based record index.
+        record: usize,
+        /// the element count its header declared.
+        dim: usize,
+        /// byte offset where the body started.
+        offset: usize,
+    },
+    /// Record `record`'s header decoded to a dimension that cannot be
+    /// real: zero, negative, or above [`MAX_VECS_DIM`].
+    BadDim {
+        /// 0-based record index.
+        record: usize,
+        /// the decoded (invalid) dimension value.
+        dim: i64,
+    },
+    /// Record `record` declared `dim` elements where record 0 declared
+    /// `expect` — these formats are matrix-shaped, so a ragged file is
+    /// corrupt (usually an element-size / format confusion).
+    DimMismatch {
+        /// 0-based record index.
+        record: usize,
+        /// this record's dimension.
+        dim: usize,
+        /// the file-wide dimension set by record 0.
+        expect: usize,
+    },
+}
+
+impl fmt::Display for VecsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            VecsError::TruncatedHeader { record, offset } => write!(
+                f,
+                "record {record}: truncated dimension header at byte \
+                 {offset}"
+            ),
+            VecsError::TruncatedBody { record, dim, offset } => write!(
+                f,
+                "record {record}: file ends inside the {dim}-element \
+                 body starting at byte {offset}"
+            ),
+            VecsError::BadDim { record, dim } => write!(
+                f,
+                "record {record}: implausible dimension {dim} (must be \
+                 in [1, {MAX_VECS_DIM}])"
+            ),
+            VecsError::DimMismatch { record, dim, expect } => write!(
+                f,
+                "record {record}: dimension {dim} differs from record \
+                 0's {expect}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for VecsError {}
+
+/// Decode record `record`'s 4-byte little-endian dimension header at
+/// `offset`; returns `(dim, body_offset)`.
+fn vecs_header(
+    bytes: &[u8],
+    record: usize,
+    offset: usize,
+) -> Result<(usize, usize), VecsError> {
+    let Some(raw) = bytes.get(offset..offset + 4) else {
+        return Err(VecsError::TruncatedHeader { record, offset });
+    };
+    let dim = i32::from_le_bytes(raw.try_into().unwrap());
+    if dim <= 0 || dim as usize > MAX_VECS_DIM {
+        return Err(VecsError::BadDim { record, dim: i64::from(dim) });
+    }
+    Ok((dim as usize, offset + 4))
+}
+
+/// Shared record walk for the three formats: per record, a header then
+/// `dim * elem_size` body bytes handed to `decode`. Returns
+/// `(n_records, dim, flat data)`; an empty input is `(0, 0, [])`.
+fn parse_vecs<T>(
+    bytes: &[u8],
+    elem_size: usize,
+    mut decode: impl FnMut(&[u8], &mut Vec<T>),
+) -> Result<(usize, usize, Vec<T>), VecsError> {
+    let mut data = Vec::new();
+    let mut offset = 0usize;
+    let mut record = 0usize;
+    let mut dim = 0usize;
+    while offset < bytes.len() {
+        let (d, body) = vecs_header(bytes, record, offset)?;
+        if record == 0 {
+            dim = d;
+        } else if d != dim {
+            return Err(VecsError::DimMismatch {
+                record,
+                dim: d,
+                expect: dim,
+            });
+        }
+        // d <= MAX_VECS_DIM and elem_size <= 4, so this cannot overflow.
+        let len = d * elem_size;
+        let Some(slice) = bytes.get(body..body + len) else {
+            return Err(VecsError::TruncatedBody {
+                record,
+                dim: d,
+                offset: body,
+            });
+        };
+        decode(slice, &mut data);
+        offset = body + len;
+        record += 1;
+    }
+    Ok((record, dim, data))
+}
+
+/// Parse `.fvecs` bytes (TexMex float vectors: per record a LE `i32`
+/// dimension then `dim` LE `f32`s) into an `n x dim` [`Matrix`]. An
+/// empty input parses as a `0 x 0` matrix.
+pub fn parse_fvecs(bytes: &[u8]) -> Result<Matrix, VecsError> {
+    let (n, d, data) =
+        parse_vecs(bytes, 4, |body, out: &mut Vec<f32>| {
+            for chunk in body.chunks_exact(4) {
+                out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+        })?;
+    Ok(Matrix::from_vec(n, d, data))
+}
+
+/// Parse `.bvecs` bytes (per record a LE `i32` dimension then `dim`
+/// `u8`s) into an `n x dim` [`Matrix`], widening each byte to `f32`
+/// (the engine is f32-only; SIFT-style byte corpora lose nothing).
+pub fn parse_bvecs(bytes: &[u8]) -> Result<Matrix, VecsError> {
+    let (n, d, data) =
+        parse_vecs(bytes, 1, |body, out: &mut Vec<f32>| {
+            out.extend(body.iter().map(|&b| f32::from(b)));
+        })?;
+    Ok(Matrix::from_vec(n, d, data))
+}
+
+/// Parse `.ivecs` bytes (per record a LE `i32` dimension then `dim` LE
+/// `i32`s — the TexMex ground-truth neighbor-list format) into one
+/// `Vec<i32>` per record. A uniform dimension is enforced like the
+/// matrix formats.
+pub fn parse_ivecs(bytes: &[u8]) -> Result<Vec<Vec<i32>>, VecsError> {
+    let (_n, d, data) =
+        parse_vecs(bytes, 4, |body, out: &mut Vec<i32>| {
+            for chunk in body.chunks_exact(4) {
+                out.push(i32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+        })?;
+    if d == 0 {
+        return Ok(Vec::new());
+    }
+    Ok(data.chunks(d).map(<[i32]>::to_vec).collect())
+}
+
+/// Read and parse an `.fvecs` file.
+pub fn read_fvecs(path: impl AsRef<Path>) -> anyhow::Result<Matrix> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_fvecs(&bytes)
+        .with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Read and parse a `.bvecs` file (bytes widened to f32).
+pub fn read_bvecs(path: impl AsRef<Path>) -> anyhow::Result<Matrix> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_bvecs(&bytes)
+        .with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Read and parse an `.ivecs` file.
+pub fn read_ivecs(path: impl AsRef<Path>) -> anyhow::Result<Vec<Vec<i32>>> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_ivecs(&bytes)
+        .with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Write a matrix as `.fvecs` (one record per row).
+pub fn write_fvecs(path: impl AsRef<Path>, x: &Matrix) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    let mut out = Vec::with_capacity(x.rows() * (4 + 4 * x.cols()));
+    for i in 0..x.rows() {
+        out.extend_from_slice(&(x.cols() as i32).to_le_bytes());
+        for &v in x.row(i) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(path, out)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Write byte rows as `.bvecs` (one record per row, dims as given).
+pub fn write_bvecs(
+    path: impl AsRef<Path>,
+    rows: &[Vec<u8>],
+) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    let mut out = Vec::new();
+    for row in rows {
+        out.extend_from_slice(&(row.len() as i32).to_le_bytes());
+        out.extend_from_slice(row);
+    }
+    std::fs::write(path, out)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Write integer rows as `.ivecs` (one record per row, dims as given).
+pub fn write_ivecs(
+    path: impl AsRef<Path>,
+    rows: &[Vec<i32>],
+) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    let mut out = Vec::new();
+    for row in rows {
+        out.extend_from_slice(&(row.len() as i32).to_le_bytes());
+        for &v in row {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(path, out)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,5 +448,120 @@ mod tests {
             Some(RealWorldKind::Cifar10)
         );
         assert_eq!(RealWorldKind::parse("imagenet"), None);
+    }
+
+    fn fixture(name: &str) -> String {
+        format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn fvecs_fixture_parses_exact_values() {
+        let x = read_fvecs(fixture("tiny.fvecs")).unwrap();
+        assert_eq!((x.rows(), x.cols()), (3, 4));
+        for i in 0..3 {
+            for j in 0..4 {
+                assert_eq!(x.get(i, j), (i * 4 + j) as f32 * 0.5);
+            }
+        }
+    }
+
+    #[test]
+    fn bvecs_fixture_parses_exact_values() {
+        let x = read_bvecs(fixture("tiny.bvecs")).unwrap();
+        assert_eq!((x.rows(), x.cols()), (3, 4));
+        for i in 0..3 {
+            for j in 0..4 {
+                assert_eq!(x.get(i, j), (i * 4 + j) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn ivecs_fixture_parses_exact_values() {
+        let gt = read_ivecs(fixture("tiny.ivecs")).unwrap();
+        assert_eq!(gt, vec![vec![0, 1, 2], vec![3, 4, 5]]);
+    }
+
+    #[test]
+    fn empty_input_parses_as_empty() {
+        let x = parse_fvecs(&[]).unwrap();
+        assert_eq!((x.rows(), x.cols()), (0, 0));
+        assert!(parse_ivecs(&[]).unwrap().is_empty());
+    }
+
+    /// One fvecs record: dim header + dim f32 elements.
+    fn fvecs_record(vals: &[f32]) -> Vec<u8> {
+        let mut out = (vals.len() as i32).to_le_bytes().to_vec();
+        for v in vals {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn truncation_errors_are_typed_and_located() {
+        let mut bytes = fvecs_record(&[1.0, 2.0]);
+        bytes.extend_from_slice(&3i32.to_le_bytes()[..2]);
+        assert_eq!(
+            parse_fvecs(&bytes),
+            Err(VecsError::TruncatedHeader { record: 1, offset: 12 })
+        );
+        let mut bytes = fvecs_record(&[1.0, 2.0]);
+        bytes.truncate(bytes.len() - 1);
+        assert_eq!(
+            parse_fvecs(&bytes),
+            Err(VecsError::TruncatedBody { record: 0, dim: 2, offset: 4 })
+        );
+    }
+
+    #[test]
+    fn implausible_dims_are_rejected_before_allocation() {
+        for bad in [0i32, -1, (MAX_VECS_DIM as i32) + 1, i32::MIN] {
+            let bytes = bad.to_le_bytes().to_vec();
+            assert_eq!(
+                parse_fvecs(&bytes),
+                Err(VecsError::BadDim { record: 0, dim: i64::from(bad) }),
+                "dim {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn ragged_records_are_rejected() {
+        let mut bytes = fvecs_record(&[1.0, 2.0]);
+        bytes.extend_from_slice(&fvecs_record(&[3.0, 4.0, 5.0]));
+        assert_eq!(
+            parse_fvecs(&bytes),
+            Err(VecsError::DimMismatch { record: 1, dim: 3, expect: 2 })
+        );
+    }
+
+    #[test]
+    fn write_read_round_trips_bitwise() {
+        let dir = std::env::temp_dir().join("icq_vecs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(11);
+        let x = Matrix::from_fn(7, 5, |_, _| rng.normal_f32());
+        let fp = dir.join("rt.fvecs");
+        write_fvecs(&fp, &x).unwrap();
+        assert_eq!(read_fvecs(&fp).unwrap(), x);
+
+        let brows: Vec<Vec<u8>> =
+            (0..4).map(|i| (0..6).map(|j| (i * 40 + j) as u8).collect())
+                .collect();
+        let bp = dir.join("rt.bvecs");
+        write_bvecs(&bp, &brows).unwrap();
+        let back = read_bvecs(&bp).unwrap();
+        assert_eq!((back.rows(), back.cols()), (4, 6));
+        for (i, row) in brows.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                assert_eq!(back.get(i, j), f32::from(v));
+            }
+        }
+
+        let irows = vec![vec![9, -3, 7], vec![0, 1, 2]];
+        let ip = dir.join("rt.ivecs");
+        write_ivecs(&ip, &irows).unwrap();
+        assert_eq!(read_ivecs(&ip).unwrap(), irows);
     }
 }

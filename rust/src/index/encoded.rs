@@ -100,7 +100,7 @@ impl EncodedIndex {
     /// path, where rebuilding the (codes-independent) LUT context and
     /// cloning the codebooks per shard would multiply memory and build
     /// time by the shard count.
-    fn assemble_shared(
+    pub(crate) fn assemble_shared(
         codebooks: Arc<Codebooks>,
         lut_ctx: Arc<LutContext>,
         codes: Codes,
@@ -201,6 +201,44 @@ impl EncodedIndex {
             self.fast_k,
             self.sigma,
             self.labels[start..end].to_vec(),
+        )
+    }
+
+    /// A new standalone index over an arbitrary row subset: the
+    /// gather-indexed sibling of [`Self::slice`], and the building
+    /// block of the IVF coarse partition (each cell is a `select` of
+    /// its member rows). Codebooks and LUT context stay `Arc`-shared;
+    /// codes/labels are gathered and the blocked transpose rebuilt for
+    /// the subset. Hit ids from the result are subset-local (`i` maps
+    /// to `rows[i]`).
+    ///
+    /// Callers that rely on the canonical `(distance, id)` tie-break
+    /// agreeing with the parent index must pass `rows` in ascending
+    /// order, so subset-local order is monotone in parent row order
+    /// (the IVF bitwise-parity invariant).
+    pub fn select(&self, rows: &[u32]) -> Self {
+        let k = self.k();
+        let src = self.codes.as_slice();
+        let mut data = Vec::with_capacity(rows.len() * k);
+        let mut labels = Vec::with_capacity(rows.len());
+        for &r in rows {
+            let r = r as usize;
+            assert!(
+                r < self.len(),
+                "select row {r} out of bounds (n = {})",
+                self.len()
+            );
+            data.extend_from_slice(&src[r * k..(r + 1) * k]);
+            labels.push(self.labels[r]);
+        }
+        let codes = Codes::from_vec(rows.len(), k, data);
+        Self::assemble_shared(
+            self.codebooks.clone(),
+            self.lut_ctx.clone(),
+            codes,
+            self.fast_k,
+            self.sigma,
+            labels,
         )
     }
 
@@ -492,6 +530,52 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn select_gathers_rows_and_shares_search_state() {
+        let x = hetero(80, 9, 11);
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 3, m: 8, fast_k: 1, kmeans_iters: 4, prior_steps: 50, seed: 0 },
+        );
+        let labels: Vec<i32> = (0..80).map(|i| i as i32).collect();
+        let idx = EncodedIndex::build_icq(&icq, &x, labels);
+        for rows in [
+            vec![0u32, 3, 7, 64, 65, 79],
+            vec![5u32],
+            vec![],
+            (0..80u32).collect::<Vec<_>>(),
+        ] {
+            let s = idx.select(&rows);
+            assert_eq!(s.len(), rows.len());
+            assert_eq!(s.fast_k, idx.fast_k);
+            assert_eq!(s.sigma, idx.sigma);
+            assert_eq!(s.k(), idx.k());
+            assert_eq!(s.dim(), idx.dim());
+            for (i, &r) in rows.iter().enumerate() {
+                assert_eq!(s.labels[i], idx.labels[r as usize]);
+                for kk in 0..idx.k() {
+                    assert_eq!(
+                        s.codes().get(i, kk),
+                        idx.codes().get(r as usize, kk)
+                    );
+                    assert_eq!(
+                        s.blocked().get(i, kk),
+                        idx.blocked().get(r as usize, kk)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn select_rejects_out_of_range_row() {
+        let x = hetero(20, 6, 12);
+        let pq = Pq::train(&x, PqOpts { k: 2, m: 4, iters: 3, seed: 0 });
+        let idx = EncodedIndex::build(&pq, &x, vec![0; 20]);
+        let _ = idx.select(&[3, 20]);
     }
 
     #[test]

@@ -1,0 +1,883 @@
+//! IVF coarse partition over an encoded index — non-exhaustive search.
+//!
+//! A k-means coarse quantizer splits the database into `ncells` cells;
+//! each cell is a standalone [`EncodedIndex`] (its own block-interleaved
+//! store) over the cell's member rows, with codebooks and the LUT
+//! context `Arc`-shared across cells, plus a cell-local -> global row-id
+//! map. A query ranks all centroids, probes the `nprobe` nearest cells
+//! with the existing QLut crude sweep + two-step refine, remaps hits to
+//! global ids and merges per-cell top-k lists through the canonical
+//! [`merge_topk`]. The `qlut <= crude <= full` lower-bound chain holds
+//! unchanged *within* each probed cell — IVF only restricts *which*
+//! rows are scanned, never how a scanned row is compared.
+//!
+//! Two build modes:
+//!
+//! * **partition** ([`IvfIndex::partition`]) — regroups the rows of an
+//!   already-encoded flat index into cells without re-encoding. Every
+//!   row keeps the exact codes the flat scan uses, per-cell id lists
+//!   are ascending, and [`merge_topk`] applies the same canonical
+//!   `(distance, id)` order as the flat executors — so `nprobe =
+//!   ncells` is **bitwise identical** to the exhaustive flat path
+//!   (asserted in `tests/ivf_parity.rs`).
+//! * **residual** ([`IvfIndex::build_residual`]) — re-encodes each row
+//!   as `x - centroid(cell(x))`, the IVFADC construction: per-cell
+//!   quantization error shrinks because the quantizer only has to
+//!   cover the residual ball, at the cost of one LUT build per probed
+//!   cell (the LUT argument is the query residual `q - centroid`,
+//!   which differs per cell). Residual codes differ from flat codes,
+//!   so this mode trades the bitwise-parity guarantee for recall.
+//!
+//! For serving, [`IvfIndex::split_cells`] deals whole cells round-robin
+//! across shard-local sub-indexes: every shard keeps the full (cheap,
+//! `Arc`-shared) centroid table so it ranks cells globally and scans
+//! the probed cells it owns; because hits already carry global ids and
+//! k-smallest selection is associative, the scatter-gather merge of
+//! shard results equals the single-process IVF result exactly.
+//!
+//! Snapshots extend the flat icqfmt layout (the base tensors are the
+//! cell-major concatenation of all cells, loadable by the same
+//! validation path) with `ivf_*` tensors; packs without them are plain
+//! flat indexes, so pre-IVF snapshots keep loading ([`load_index`]).
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use super::encoded::EncodedIndex;
+use super::lut::Lut;
+use super::opcount::OpCounter;
+use super::search_icq::{self, IcqSearchOpts};
+use crate::core::parallel::par_map_indexed;
+use crate::core::{distance, merge_topk, Hit, Matrix, TopK};
+use crate::data::format::TensorPack;
+use crate::quantizer::kmeans::{self, KMeansOpts};
+use crate::quantizer::Quantizer;
+
+/// Snapshot format version written by [`IvfIndex::to_pack`]; bumped on
+/// incompatible layout changes so old binaries fail loudly instead of
+/// misreading.
+const IVF_VERSION: i32 = 1;
+
+/// Coarse-quantizer training options.
+#[derive(Clone, Copy, Debug)]
+pub struct IvfBuildOpts {
+    /// Number of coarse cells (k-means centroids). Clamped to the
+    /// database size by the trainer.
+    pub ncells: usize,
+    /// Lloyd iterations for the coarse k-means.
+    pub iters: usize,
+    /// Deterministic seed (thread the config seed through so builds
+    /// are reproducible).
+    pub seed: u64,
+}
+
+impl Default for IvfBuildOpts {
+    fn default() -> Self {
+        IvfBuildOpts { ncells: 64, iters: 15, seed: 0 }
+    }
+}
+
+/// One coarse cell: the cell's rows as a standalone block-interleaved
+/// [`EncodedIndex`] plus the map from cell-local row to global row id.
+#[derive(Clone, Debug)]
+pub struct IvfCell {
+    /// Cell rows as a full index (codebooks/LUT context `Arc`-shared
+    /// with every other cell); hit ids are cell-local.
+    pub index: Arc<EncodedIndex>,
+    /// Global row id per cell-local row, strictly ascending — the
+    /// invariant that keeps the canonical `(distance, id)` tie-break
+    /// identical to the flat scan's.
+    pub ids: Arc<Vec<u32>>,
+}
+
+/// An IVF-partitioned index: coarse centroids + per-cell code lists.
+///
+/// A "flat" IVF index owns every cell; [`IvfIndex::split_cells`]
+/// produces shard views that own a subset (non-owned slots are `None`)
+/// but share the centroid table, so all shards agree on probe ranking.
+#[derive(Clone, Debug)]
+pub struct IvfIndex {
+    /// `[ncells, d]` coarse centroids (shared across shard views).
+    centroids: Arc<Matrix>,
+    /// Cell `c`'s codes + id map; `None` when another shard owns it.
+    cells: Vec<Option<IvfCell>>,
+    /// Residual mode: cells store codes of `x - centroid(x)` and each
+    /// probed cell needs its own `q - centroid` LUT.
+    residual: bool,
+    /// Rows across *all* cells (the database size).
+    n_total: usize,
+    /// Rows across the cells this view owns (== `n_total` when flat).
+    n_owned: usize,
+}
+
+impl IvfIndex {
+    /// Partition an existing flat index into `opts.ncells` coarse
+    /// cells *without re-encoding*: k-means over `x` (the same vectors
+    /// `index` encodes, row-aligned), then each cell is
+    /// [`EncodedIndex::select`] of its member rows in ascending global
+    /// order. Because every row keeps its flat codes and the per-cell
+    /// id maps are monotone, searching with `nprobe = ncells` is
+    /// bitwise identical to the flat exhaustive scan.
+    pub fn partition(
+        index: &EncodedIndex,
+        x: &Matrix,
+        opts: IvfBuildOpts,
+    ) -> Result<Self> {
+        ensure!(opts.ncells >= 1, "ivf: ncells must be >= 1");
+        ensure!(!index.is_empty(), "ivf: cannot partition an empty index");
+        ensure!(
+            x.rows() == index.len(),
+            "ivf: training rows ({}) != index rows ({})",
+            x.rows(),
+            index.len()
+        );
+        ensure!(
+            x.cols() == index.dim(),
+            "ivf: training dim ({}) != index dim ({})",
+            x.cols(),
+            index.dim()
+        );
+        let km = kmeans::train(
+            x,
+            KMeansOpts { m: opts.ncells, iters: opts.iters, seed: opts.seed },
+            None,
+        );
+        let ncells = km.centroids.rows();
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); ncells];
+        // ascending global order per cell: the parity invariant
+        for (i, &c) in km.assignment.iter().enumerate() {
+            members[c as usize].push(i as u32);
+        }
+        let cells = members
+            .into_iter()
+            .map(|ids| {
+                let cell = index.select(&ids);
+                Some(IvfCell {
+                    index: Arc::new(cell),
+                    ids: Arc::new(ids),
+                })
+            })
+            .collect();
+        Ok(IvfIndex {
+            centroids: Arc::new(km.centroids),
+            cells,
+            residual: false,
+            n_total: index.len(),
+            n_owned: index.len(),
+        })
+    }
+
+    /// Build an IVFADC-style residual index: k-means over `x` for the
+    /// coarse cells, then each cell encodes its rows' residuals
+    /// `x - centroid(cell)` with `quantizer` (already trained — on
+    /// residuals for best quality, though any codebooks in the common
+    /// layout work). `fast_k`/`sigma` wire the two-step search
+    /// parameters exactly as [`EncodedIndex::build_icq`] does; pass
+    /// `(K, 0.0)` for plain-ADC methods. Cells share one `Arc`'d
+    /// codebook set and LUT context.
+    pub fn build_residual<Q: Quantizer>(
+        quantizer: &Q,
+        x: &Matrix,
+        labels: &[i32],
+        fast_k: usize,
+        sigma: f32,
+        opts: IvfBuildOpts,
+    ) -> Result<Self> {
+        ensure!(opts.ncells >= 1, "ivf: ncells must be >= 1");
+        ensure!(x.rows() > 0, "ivf: cannot build over an empty database");
+        ensure!(
+            x.rows() == labels.len(),
+            "ivf: labels length ({}) != rows ({})",
+            labels.len(),
+            x.rows()
+        );
+        let codebooks = quantizer.codebooks().clone();
+        ensure!(
+            x.cols() == codebooks.d(),
+            "ivf: data dim ({}) != codebook dim ({})",
+            x.cols(),
+            codebooks.d()
+        );
+        ensure!(
+            fast_k >= 1 && fast_k <= codebooks.k(),
+            "ivf: fast_k {fast_k} out of [1, {}]",
+            codebooks.k()
+        );
+        let km = kmeans::train(
+            x,
+            KMeansOpts { m: opts.ncells, iters: opts.iters, seed: opts.seed },
+            None,
+        );
+        let ncells = km.centroids.rows();
+        let d = x.cols();
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); ncells];
+        for (i, &c) in km.assignment.iter().enumerate() {
+            members[c as usize].push(i as u32);
+        }
+        let codebooks = Arc::new(codebooks);
+        let lut_ctx =
+            Arc::new(super::lut::LutContext::new(codebooks.as_ref()));
+        let cells = members
+            .into_iter()
+            .enumerate()
+            .map(|(c, ids)| {
+                let cent = km.centroids.row(c);
+                let mut resid = Matrix::zeros(ids.len(), d);
+                let mut cell_labels = Vec::with_capacity(ids.len());
+                for (li, &g) in ids.iter().enumerate() {
+                    let row = x.row(g as usize);
+                    let out = resid.row_mut(li);
+                    for j in 0..d {
+                        out[j] = row[j] - cent[j];
+                    }
+                    cell_labels.push(labels[g as usize]);
+                }
+                let codes = quantizer.encode(&resid);
+                let cell = EncodedIndex::assemble_shared(
+                    codebooks.clone(),
+                    lut_ctx.clone(),
+                    codes,
+                    fast_k,
+                    sigma,
+                    cell_labels,
+                );
+                Some(IvfCell {
+                    index: Arc::new(cell),
+                    ids: Arc::new(ids),
+                })
+            })
+            .collect();
+        Ok(IvfIndex {
+            centroids: Arc::new(km.centroids),
+            cells,
+            residual: true,
+            n_total: x.rows(),
+            n_owned: x.rows(),
+        })
+    }
+
+    /// Number of coarse cells (owned or not).
+    pub fn ncells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Cells this view owns (== [`Self::ncells`] for a flat index).
+    pub fn num_owned_cells(&self) -> usize {
+        self.cells.iter().flatten().count()
+    }
+
+    /// Vector dimensionality.
+    pub fn dim(&self) -> usize {
+        self.centroids.cols()
+    }
+
+    /// Rows held by this view (a shard view owns a subset).
+    pub fn len(&self) -> usize {
+        self.n_owned
+    }
+
+    /// Whether this view holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.n_owned == 0
+    }
+
+    /// Database size across all cells (same for every shard view).
+    pub fn n_total(&self) -> usize {
+        self.n_total
+    }
+
+    /// Whether cells store residual codes (`x - centroid`).
+    pub fn residual(&self) -> bool {
+        self.residual
+    }
+
+    /// The `[ncells, d]` coarse centroid table.
+    pub fn centroids(&self) -> &Matrix {
+        &self.centroids
+    }
+
+    /// Cell `c` if this view owns it.
+    pub fn cell(&self, c: usize) -> Option<&IvfCell> {
+        self.cells[c].as_ref()
+    }
+
+    /// Rank all centroids by L2 distance to `q` and return the
+    /// `min(nprobe, ncells)` nearest cell ids, nearest first (ties by
+    /// cell id, via the canonical [`TopK`] order).
+    pub fn probe_order(&self, q: &[f32], nprobe: usize) -> Vec<u32> {
+        let ncells = self.ncells();
+        let mut top = TopK::new(nprobe.clamp(1, ncells.max(1)));
+        for c in 0..ncells {
+            top.push(c as u32, distance::l2_sq(q, self.centroids.row(c)));
+        }
+        top.into_sorted().iter().map(|h| h.id).collect()
+    }
+
+    /// Search the `nprobe` nearest owned cells and merge to global
+    /// top-`opts.k` hits (ids are global row ids; labels come from the
+    /// cells). `nprobe >= ncells` probes everything — bitwise equal to
+    /// the flat exhaustive scan in partition mode.
+    pub fn search(
+        &self,
+        q: &[f32],
+        nprobe: usize,
+        opts: IcqSearchOpts,
+        ops: &OpCounter,
+    ) -> Vec<Hit> {
+        self.search_scratch(q, nprobe, opts, ops, &mut Vec::new())
+    }
+
+    /// [`Self::search`] with a caller-owned crude-distance scratch
+    /// buffer (reused across queries on a hot path).
+    ///
+    /// Operation accounting: centroid ranking charges `ncells * d`
+    /// MACs as flops; each probed cell then accounts exactly like a
+    /// flat scan of that cell (so the per-cell sweeps each bump the
+    /// query counter — per-query executor invocations, not end-user
+    /// queries).
+    pub fn search_scratch(
+        &self,
+        q: &[f32],
+        nprobe: usize,
+        opts: IcqSearchOpts,
+        ops: &OpCounter,
+        crude: &mut Vec<f32>,
+    ) -> Vec<Hit> {
+        let probes = self.probe_order(q, nprobe);
+        ops.add_flops((self.ncells() * self.dim()) as u64);
+        let mut shared: Option<Lut> = None;
+        let mut lists: Vec<Vec<Hit>> = Vec::with_capacity(probes.len());
+        for &c in &probes {
+            let cell = match &self.cells[c as usize] {
+                Some(cell) if !cell.index.is_empty() => cell,
+                _ => continue,
+            };
+            let hits = if self.residual {
+                // per-cell LUT over the query residual q - centroid
+                let cent = self.centroids.row(c as usize);
+                let rq: Vec<f32> =
+                    q.iter().zip(cent).map(|(qv, cv)| qv - cv).collect();
+                let lut = Lut::build(
+                    cell.index.lut_ctx(),
+                    cell.index.codebooks(),
+                    &rq,
+                );
+                ops.add_flops(cell.index.lut_ctx().build_macs() as u64);
+                search_icq::search_scanfirst_qlut(
+                    &cell.index,
+                    &lut,
+                    opts,
+                    ops,
+                    crude,
+                )
+            } else {
+                // partition mode: one LUT serves every cell (same
+                // codebooks, codes unchanged from the flat index)
+                if shared.is_none() {
+                    shared = Some(Lut::build(
+                        cell.index.lut_ctx(),
+                        cell.index.codebooks(),
+                        q,
+                    ));
+                    ops.add_flops(cell.index.lut_ctx().build_macs() as u64);
+                }
+                search_icq::search_scanfirst_qlut(
+                    &cell.index,
+                    shared.as_ref().expect("lut built above"),
+                    opts,
+                    ops,
+                    crude,
+                )
+            };
+            lists.push(
+                hits.into_iter()
+                    .map(|h| Hit {
+                        id: cell.ids[h.id as usize],
+                        dist: h.dist,
+                    })
+                    .collect(),
+            );
+        }
+        merge_topk(&lists, opts.k)
+    }
+
+    /// Batched [`Self::search`], rayon-parallel over queries.
+    pub fn search_batch(
+        &self,
+        queries: &Matrix,
+        nprobe: usize,
+        opts: IcqSearchOpts,
+        ops: &OpCounter,
+    ) -> Vec<Vec<Hit>> {
+        par_map_indexed(queries.rows(), |i| {
+            self.search(queries.row(i), nprobe, opts, ops)
+        })
+    }
+
+    /// Deal owned cells round-robin (`cell_id % n_shards`) into
+    /// `n_shards` shard views. Every view shares the centroid table
+    /// (so probe ranking is global) and the dealt cells' `Arc`s; the
+    /// merge of all shard results equals this index's result exactly,
+    /// because hits carry global ids and k-smallest selection under
+    /// the canonical order is associative.
+    pub fn split_cells(&self, n_shards: usize) -> Result<Vec<IvfIndex>> {
+        ensure!(n_shards >= 1, "ivf: n_shards must be >= 1");
+        let n_shards = n_shards.min(self.ncells());
+        let mut shards: Vec<IvfIndex> = (0..n_shards)
+            .map(|_| IvfIndex {
+                centroids: self.centroids.clone(),
+                cells: vec![None; self.ncells()],
+                residual: self.residual,
+                n_total: self.n_total,
+                n_owned: 0,
+            })
+            .collect();
+        for (c, cell) in self.cells.iter().enumerate() {
+            if let Some(cell) = cell {
+                let s = c % n_shards;
+                shards[s].n_owned += cell.index.len();
+                shards[s].cells[c] = Some(cell.clone());
+            }
+        }
+        Ok(shards)
+    }
+
+    /// Serialize to an icqfmt pack. The base tensors (`codes`,
+    /// `labels`, ...) hold the cell-major concatenation of all cells —
+    /// the exact layout [`EncodedIndex::from_pack`] validates — plus
+    /// `ivf_version`, `ivf_centroids`, `ivf_residual`,
+    /// `ivf_cell_sizes` and `ivf_row_global` describing the partition.
+    /// Only whole (un-split) indexes snapshot; shard views are an
+    /// in-process serving construct.
+    pub fn to_pack(&self) -> TensorPack {
+        assert!(
+            self.cells.iter().all(Option::is_some),
+            "ivf: only a whole IVF index snapshots; shard views do not"
+        );
+        let first = self.cells[0].as_ref().expect("checked above");
+        let codebooks = first.index.codebooks();
+        let (k, d) = (codebooks.k(), codebooks.d());
+        let (fast_k, sigma) = (first.index.fast_k, first.index.sigma);
+        let ncells = self.ncells();
+
+        let mut codes = Vec::with_capacity(self.n_total * k);
+        let mut labels = Vec::with_capacity(self.n_total);
+        let mut globals = Vec::with_capacity(self.n_total);
+        let mut sizes = Vec::with_capacity(ncells);
+        for cell in self.cells.iter().flatten() {
+            codes.extend(
+                cell.index.codes().as_slice().iter().map(|&c| c as i32),
+            );
+            labels.extend_from_slice(&cell.index.labels);
+            globals.extend(cell.ids.iter().map(|&g| g as i32));
+            sizes.push(cell.index.len() as i32);
+        }
+
+        let mut pack = TensorPack::new();
+        codebooks.to_pack(&mut pack, "");
+        pack.insert_i32("codes", vec![self.n_total, k], codes);
+        pack.insert_i32("fast_k", vec![1], vec![fast_k as i32]);
+        pack.insert_f32("sigma", vec![1], vec![sigma]);
+        pack.insert_i32("labels", vec![self.n_total], labels);
+        pack.insert_i32("ivf_version", vec![1], vec![IVF_VERSION]);
+        pack.insert_f32(
+            "ivf_centroids",
+            vec![ncells, d],
+            self.centroids.as_slice().to_vec(),
+        );
+        pack.insert_i32(
+            "ivf_residual",
+            vec![1],
+            vec![i32::from(self.residual)],
+        );
+        pack.insert_i32("ivf_cell_sizes", vec![ncells], sizes);
+        pack.insert_i32("ivf_row_global", vec![self.n_total], globals);
+        pack
+    }
+
+    /// Load a snapshot written by [`Self::to_pack`]. The base index is
+    /// validated by [`EncodedIndex::from_pack`]; the partition tensors
+    /// are then checked for internal consistency (sizes sum to `n`,
+    /// global ids a permutation of `0..n`, ascending within each cell
+    /// — the parity invariant) before cells are cut out of the flat
+    /// cell-major store with [`EncodedIndex::slice`], `Arc`-sharing
+    /// the codebooks and LUT context.
+    pub fn from_pack(pack: &TensorPack) -> Result<Self> {
+        let version = pack.scalar_i32("ivf_version")?;
+        ensure!(
+            version == IVF_VERSION,
+            "unsupported ivf_version {version} (this build reads {IVF_VERSION})"
+        );
+        let flat = EncodedIndex::from_pack(pack)?;
+        let n = flat.len();
+
+        let (cdims, cents) = pack.f32("ivf_centroids")?;
+        ensure!(
+            cdims.len() == 2 && cdims[0] >= 1,
+            "ivf_centroids must be [ncells >= 1, d]"
+        );
+        let (ncells, d) = (cdims[0], cdims[1]);
+        ensure!(
+            d == flat.dim(),
+            "ivf_centroids dim {d} != codebook dim {}",
+            flat.dim()
+        );
+        let residual = match pack.scalar_i32("ivf_residual")? {
+            0 => false,
+            1 => true,
+            other => bail!("ivf_residual must be 0 or 1, got {other}"),
+        };
+
+        let (sdims, sizes) = pack.i32("ivf_cell_sizes")?;
+        ensure!(
+            sdims.len() == 1 && sdims[0] == ncells,
+            "ivf_cell_sizes must be [ncells]"
+        );
+        let mut total = 0usize;
+        for &s in sizes {
+            ensure!(s >= 0, "ivf_cell_sizes holds a negative size {s}");
+            total += s as usize;
+        }
+        ensure!(
+            total == n,
+            "ivf_cell_sizes sum to {total} but the index holds {n} rows"
+        );
+
+        let (gdims, globals) = pack.i32("ivf_row_global")?;
+        ensure!(
+            gdims.len() == 1 && gdims[0] == n,
+            "ivf_row_global must be [n]"
+        );
+        let mut seen = vec![false; n];
+        for &g in globals {
+            ensure!(
+                g >= 0 && (g as usize) < n,
+                "ivf_row_global id {g} out of [0, {n})"
+            );
+            ensure!(!seen[g as usize], "duplicate global row id {g}");
+            seen[g as usize] = true;
+        }
+
+        let mut cells = Vec::with_capacity(ncells);
+        let mut off = 0usize;
+        for &sz in sizes {
+            let sz = sz as usize;
+            let ids: Vec<u32> =
+                globals[off..off + sz].iter().map(|&g| g as u32).collect();
+            ensure!(
+                ids.windows(2).all(|w| w[0] < w[1]),
+                "cell row ids must be strictly ascending (parity invariant)"
+            );
+            let cell = flat.slice(off, off + sz);
+            cells.push(Some(IvfCell {
+                index: Arc::new(cell),
+                ids: Arc::new(ids),
+            }));
+            off += sz;
+        }
+        let centroids = Matrix::from_vec(ncells, d, cents.to_vec());
+        Ok(IvfIndex {
+            centroids: Arc::new(centroids),
+            cells,
+            residual,
+            n_total: n,
+            n_owned: n,
+        })
+    }
+}
+
+/// Whether `pack` carries an IVF coarse partition (vs a flat index).
+pub fn is_ivf_pack(pack: &TensorPack) -> bool {
+    pack.i32("ivf_version").is_ok()
+}
+
+/// A loaded index snapshot: flat or IVF-partitioned.
+#[derive(Clone, Debug)]
+pub enum AnyIndex {
+    /// A plain exhaustive-scan index (pre-IVF snapshots land here).
+    Flat(EncodedIndex),
+    /// An index carrying a coarse partition.
+    Ivf(Box<IvfIndex>),
+}
+
+/// Load either snapshot flavor: packs without the `ivf_*` tensors are
+/// flat indexes (old snapshots keep loading unchanged); packs with
+/// them are validated and cut into cells.
+pub fn load_index(pack: &TensorPack) -> Result<AnyIndex> {
+    if is_ivf_pack(pack) {
+        Ok(AnyIndex::Ivf(Box::new(IvfIndex::from_pack(pack)?)))
+    } else {
+        Ok(AnyIndex::Flat(EncodedIndex::from_pack(pack)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+    use crate::quantizer::icq::{Icq, IcqOpts};
+    use crate::quantizer::pq::{Pq, PqOpts};
+
+    fn hetero(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, j| {
+            rng.normal_f32() * if j % 4 == 0 { 3.0 } else { 0.4 }
+        })
+    }
+
+    fn icq_index(n: usize, d: usize, seed: u64) -> (EncodedIndex, Matrix) {
+        let x = hetero(n, d, seed);
+        let icq = Icq::train(
+            &x,
+            IcqOpts {
+                k: 4,
+                m: 16,
+                fast_k: 1,
+                kmeans_iters: 5,
+                prior_steps: 60,
+                seed,
+            },
+        );
+        let labels = (0..n).map(|i| i as i32).collect();
+        (EncodedIndex::build_icq(&icq, &x, labels), x)
+    }
+
+    #[test]
+    fn partition_covers_every_row_exactly_once() {
+        let (idx, x) = icq_index(130, 12, 1);
+        let ivf = IvfIndex::partition(
+            &idx,
+            &x,
+            IvfBuildOpts { ncells: 7, iters: 8, seed: 0 },
+        )
+        .unwrap();
+        assert_eq!(ivf.n_total(), 130);
+        assert_eq!(ivf.len(), 130);
+        let mut seen = vec![false; 130];
+        for c in 0..ivf.ncells() {
+            let cell = ivf.cell(c).unwrap();
+            assert_eq!(cell.index.len(), cell.ids.len());
+            assert!(cell.ids.windows(2).all(|w| w[0] < w[1]));
+            for (li, &g) in cell.ids.iter().enumerate() {
+                assert!(!seen[g as usize]);
+                seen[g as usize] = true;
+                // codes gathered, not re-encoded
+                for kk in 0..idx.k() {
+                    assert_eq!(
+                        cell.index.codes().get(li, kk),
+                        idx.codes().get(g as usize, kk)
+                    );
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn full_probe_matches_flat_search() {
+        let (idx, x) = icq_index(150, 12, 2);
+        let ivf = IvfIndex::partition(
+            &idx,
+            &x,
+            IvfBuildOpts { ncells: 6, iters: 8, seed: 0 },
+        )
+        .unwrap();
+        let ops = OpCounter::new();
+        let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+        let mut crude = Vec::new();
+        for qi in 0..8 {
+            let q = x.row(qi * 17 % 150);
+            let flat = search_icq::search_scanfirst_query_qlut(
+                &idx, q, opts, &ops, &mut crude,
+            );
+            let got = ivf.search(q, ivf.ncells(), opts, &ops);
+            assert_eq!(got, flat, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn duplicate_points_leave_empty_cells_and_search_survives() {
+        // 2 distinct points, 6 requested cells: at most 2 cells can be
+        // non-empty (ties assign to the lowest-index centroid), so the
+        // probe path must skip empties without dropping hits.
+        let n = 40;
+        let x = Matrix::from_fn(n, 4, |i, j| {
+            if i % 2 == 0 {
+                j as f32
+            } else {
+                10.0 + j as f32
+            }
+        });
+        let pq = Pq::train(&x, PqOpts { k: 2, m: 4, iters: 4, seed: 0 });
+        let idx = EncodedIndex::build(&pq, &x, vec![0; n]);
+        let ivf = IvfIndex::partition(
+            &idx,
+            &x,
+            IvfBuildOpts { ncells: 6, iters: 6, seed: 0 },
+        )
+        .unwrap();
+        let empty = (0..ivf.ncells())
+            .filter(|&c| ivf.cell(c).unwrap().index.is_empty())
+            .count();
+        assert!(empty >= 4, "expected >= 4 empty cells, got {empty}");
+        let ops = OpCounter::new();
+        let opts = IcqSearchOpts { k: 50, margin_scale: 1.0 };
+        let mut crude = Vec::new();
+        let flat = search_icq::search_scanfirst_query_qlut(
+            &idx,
+            x.row(0),
+            opts,
+            &ops,
+            &mut crude,
+        );
+        let got = ivf.search(x.row(0), ivf.ncells(), opts, &ops);
+        assert_eq!(got, flat);
+        assert_eq!(got.len(), n.min(50));
+    }
+
+    #[test]
+    fn split_cells_deals_every_owned_cell_once() {
+        let (idx, x) = icq_index(120, 12, 3);
+        let ivf = IvfIndex::partition(
+            &idx,
+            &x,
+            IvfBuildOpts { ncells: 5, iters: 6, seed: 0 },
+        )
+        .unwrap();
+        let shards = ivf.split_cells(3).unwrap();
+        assert_eq!(shards.len(), 3);
+        let mut owned = vec![0usize; ivf.ncells()];
+        let mut rows = 0;
+        for s in &shards {
+            assert_eq!(s.ncells(), ivf.ncells());
+            assert_eq!(s.n_total(), ivf.n_total());
+            rows += s.len();
+            for c in 0..s.ncells() {
+                if s.cell(c).is_some() {
+                    owned[c] += 1;
+                }
+            }
+        }
+        assert_eq!(rows, ivf.len());
+        assert!(owned.iter().all(|&o| o == 1));
+    }
+
+    #[test]
+    fn pack_roundtrip_preserves_search_bitwise() {
+        let (idx, x) = icq_index(100, 12, 4);
+        let ivf = IvfIndex::partition(
+            &idx,
+            &x,
+            IvfBuildOpts { ncells: 5, iters: 6, seed: 0 },
+        )
+        .unwrap();
+        let pack = ivf.to_pack();
+        let back = IvfIndex::from_pack(&pack).unwrap();
+        assert_eq!(back.ncells(), ivf.ncells());
+        assert!(!back.residual());
+        let ops = OpCounter::new();
+        let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+        for qi in 0..5 {
+            let q = x.row(qi * 13);
+            for nprobe in [1, 2, ivf.ncells()] {
+                assert_eq!(
+                    back.search(q, nprobe, opts, &ops),
+                    ivf.search(q, nprobe, opts, &ops)
+                );
+            }
+        }
+        // flat packs (no ivf tensors) still load as flat
+        match load_index(&idx.to_pack()).unwrap() {
+            AnyIndex::Flat(f) => assert_eq!(f.len(), idx.len()),
+            AnyIndex::Ivf(_) => panic!("flat pack loaded as IVF"),
+        }
+        match load_index(&pack).unwrap() {
+            AnyIndex::Ivf(i) => assert_eq!(i.n_total(), 100),
+            AnyIndex::Flat(_) => panic!("ivf pack loaded as flat"),
+        }
+    }
+
+    #[test]
+    fn from_pack_rejects_corrupt_partitions() {
+        let (idx, x) = icq_index(60, 12, 5);
+        let ivf = IvfIndex::partition(
+            &idx,
+            &x,
+            IvfBuildOpts { ncells: 4, iters: 6, seed: 0 },
+        )
+        .unwrap();
+        let good = ivf.to_pack();
+        assert!(IvfIndex::from_pack(&good).is_ok());
+
+        // future version
+        let mut bad = good.clone();
+        bad.insert_i32("ivf_version", vec![1], vec![99]);
+        assert!(IvfIndex::from_pack(&bad).is_err());
+
+        // sizes that do not sum to n
+        let mut bad = good.clone();
+        let sizes = good.i32("ivf_cell_sizes").unwrap().1.to_vec();
+        let mut wrong = sizes.clone();
+        wrong[0] += 1;
+        bad.insert_i32("ivf_cell_sizes", vec![wrong.len()], wrong);
+        assert!(IvfIndex::from_pack(&bad).is_err());
+
+        // duplicate global id
+        let mut bad = good.clone();
+        let mut globals = good.i32("ivf_row_global").unwrap().1.to_vec();
+        globals[1] = globals[0];
+        bad.insert_i32("ivf_row_global", vec![globals.len()], globals);
+        assert!(IvfIndex::from_pack(&bad).is_err());
+
+        // out-of-range global id
+        let mut bad = good.clone();
+        let mut globals = good.i32("ivf_row_global").unwrap().1.to_vec();
+        globals[0] = 60;
+        bad.insert_i32("ivf_row_global", vec![globals.len()], globals);
+        assert!(IvfIndex::from_pack(&bad).is_err());
+    }
+
+    #[test]
+    fn residual_mode_searches_and_roundtrips() {
+        let n = 160;
+        let x = hetero(n, 12, 6);
+        let icq = Icq::train(
+            &x,
+            IcqOpts {
+                k: 4,
+                m: 16,
+                fast_k: 1,
+                kmeans_iters: 5,
+                prior_steps: 60,
+                seed: 6,
+            },
+        );
+        let labels: Vec<i32> = (0..n).map(|i| i as i32).collect();
+        let ivf = IvfIndex::build_residual(
+            &icq,
+            &x,
+            &labels,
+            icq.fast_k,
+            icq.sigma,
+            IvfBuildOpts { ncells: 6, iters: 8, seed: 0 },
+        )
+        .unwrap();
+        assert!(ivf.residual());
+        let ops = OpCounter::new();
+        let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+        let hits = ivf.search(x.row(3), ivf.ncells(), opts, &ops);
+        assert_eq!(hits.len(), 10);
+        assert!(hits
+            .windows(2)
+            .all(|w| (w[0].dist, w[0].id) <= (w[1].dist, w[1].id)));
+        assert!(hits.iter().all(|h| (h.id as usize) < n));
+        // snapshot roundtrip is bitwise for residual mode too
+        let back = IvfIndex::from_pack(&ivf.to_pack()).unwrap();
+        assert!(back.residual());
+        assert_eq!(
+            back.search(x.row(3), 3, opts, &ops),
+            ivf.search(x.row(3), 3, opts, &ops)
+        );
+    }
+}

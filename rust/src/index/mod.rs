@@ -22,6 +22,12 @@
 //! threshold from crude top-k -> refine shortlist" engine every dense
 //! path consumes lives in [`two_step`].
 //!
+//! For non-exhaustive search, [`ivf`] puts a k-means coarse partition
+//! in front of the encoded index: per-cell block-interleaved code
+//! lists (each cell its own [`EncodedIndex`], codebooks/LUT context
+//! `Arc`-shared), an `nprobe` recall/speed knob, and — in partition
+//! mode — bitwise parity with the exhaustive scan at `nprobe = ncells`.
+//!
 //! For multi-worker serving, [`shard`] cuts one index into contiguous
 //! block-range shards (each a full [`EncodedIndex`]), exportable as
 //! standalone placement-carrying snapshots (`ShardedIndex::shard_pack`)
@@ -39,6 +45,7 @@
 
 pub mod blocked;
 pub mod encoded;
+pub mod ivf;
 pub mod lut;
 pub mod opcount;
 pub mod qlut;
@@ -50,6 +57,7 @@ pub mod two_step;
 
 pub use blocked::{BlockedCodes, BlockedStore, CodeUnit};
 pub use encoded::EncodedIndex;
+pub use ivf::{AnyIndex, IvfBuildOpts, IvfCell, IvfIndex};
 pub use lut::Lut;
 pub use opcount::OpCounter;
 pub use qlut::QLut;

@@ -233,6 +233,15 @@ impl ShardedIndex {
 /// `shard_start` tensor, e.g. from `icq train`) load with start 0, so
 /// one loader serves both the single-host and multi-host paths.
 pub fn load_shard_pack(pack: &TensorPack) -> Result<(EncodedIndex, usize)> {
+    // An IVF snapshot's base tensors are cell-major, so loading it as
+    // a flat range shard would silently misnumber every row id. IVF
+    // serving is cell-granular and in-process (`serve` with
+    // ivf.ncells > 0), not wire-sharded.
+    ensure!(
+        !super::ivf::is_ivf_pack(pack),
+        "snapshot carries an IVF coarse partition; serve it with \
+         `serve` (ivf.ncells > 0), not as a wire shard"
+    );
     let index = EncodedIndex::from_pack(pack)?;
     let start = match pack.scalar_i32("shard_start") {
         Ok(v) => {

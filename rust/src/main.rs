@@ -25,15 +25,16 @@ use icq::bench::workload::{run_method, EmbedKind, RunSpec};
 use icq::config::{EngineConfig, MethodKind};
 use icq::coordinator::placement::{self, RemoteRange};
 use icq::coordinator::{
-    wire, BatchSearcher, Coordinator, LocalShardBackend, NativeSearcher,
-    PoolOpts, RemoteMetrics, ReplicaOpts, ReplicaSetBackend, ShardBackend,
-    ShardedSearcher,
+    wire, BatchSearcher, Coordinator, IvfSearcher, LocalIvfShardBackend,
+    LocalShardBackend, NativeSearcher, PoolOpts, RemoteMetrics, ReplicaOpts,
+    ReplicaSetBackend, ShardBackend, ShardedSearcher,
 };
 use icq::core::Matrix;
 use icq::data::format::TensorPack;
 use icq::data::loader;
+use icq::data::Dataset;
 use icq::index::shard::{load_shard_pack, ShardPolicy, ShardedIndex};
-use icq::index::{EncodedIndex, OpCounter};
+use icq::index::{EncodedIndex, IvfBuildOpts, IvfIndex, OpCounter};
 use icq::quantizer::icq::{Icq, IcqOpts};
 use icq::quantizer::Quantizer;
 
@@ -48,7 +49,9 @@ commands:
                            serve.shards=N / serve.remote_shards=... it
                            gathers over local and/or remote shards
                            ('|' inside one remote entry lists replicas
-                           of that shard range, e.g. a:7979|b:7979)
+                           of that shard range, e.g. a:7979|b:7979);
+                           ivf.ncells=N + ivf.nprobe=P switch to
+                           non-exhaustive IVF search (local only)
   shard-server [--addr HOST:PORT] [--index PATH] [--shard I/N]
                [--idle-timeout SECS] [--max-conns N]
                            serve one shard over the binary wire protocol
@@ -214,6 +217,34 @@ fn train(cfg: &EngineConfig, out: &str) -> Result<()> {
         icq.quantization_error(&data.x),
     );
     let index = EncodedIndex::build_icq(&icq, &data.x, data.y.clone());
+    if cfg.ivf.ncells > 0 {
+        // snapshot carries the coarse partition; loaders detect the
+        // ivf_* tensors and dispatch to the IVF search path
+        let opts = IvfBuildOpts {
+            ncells: cfg.ivf.ncells,
+            iters: 15,
+            seed: cfg.seed,
+        };
+        let ivf = if cfg.ivf.residual {
+            IvfIndex::build_residual(
+                &icq,
+                &data.x,
+                &data.y,
+                icq.fast_k,
+                icq.sigma,
+                opts,
+            )?
+        } else {
+            IvfIndex::partition(&index, &data.x, opts)?
+        };
+        ivf.to_pack().save(out)?;
+        println!(
+            "[train] wrote {out} (IVF: {} cells{})",
+            ivf.ncells(),
+            if ivf.residual() { ", residual" } else { "" }
+        );
+        return Ok(());
+    }
     index.to_pack().save(out)?;
     println!("[train] wrote {out}");
     Ok(())
@@ -251,14 +282,17 @@ fn eval(cfg: &EngineConfig) -> Result<()> {
     Ok(())
 }
 
-/// Train the configured ICQ index over the configured dataset (the
-/// `serve` / `shard-server` build path when no snapshot is given).
-fn build_index(cfg: &EngineConfig) -> Result<EncodedIndex> {
-    let data = loader::load_named(
+/// Load the configured dataset at the serve-time default size.
+fn load_db(cfg: &EngineConfig) -> Result<Dataset> {
+    loader::load_named(
         &cfg.dataset,
         if cfg.n_database == 0 { 4000 } else { cfg.n_database },
         cfg.seed,
-    )?;
+    )
+}
+
+/// Train the configured ICQ model over `data` and encode it.
+fn train_encoded(cfg: &EngineConfig, data: &Dataset) -> EncodedIndex {
     println!("[serve] building ICQ index over {} vectors...", data.len());
     let icq = Icq::train(
         &data.x,
@@ -271,7 +305,56 @@ fn build_index(cfg: &EngineConfig) -> Result<EncodedIndex> {
             seed: cfg.seed,
         },
     );
-    Ok(EncodedIndex::build_icq(&icq, &data.x, data.y.clone()))
+    EncodedIndex::build_icq(&icq, &data.x, data.y.clone())
+}
+
+/// Train the configured ICQ index over the configured dataset (the
+/// `serve` / `shard-server` build path when no snapshot is given).
+fn build_index(cfg: &EngineConfig) -> Result<EncodedIndex> {
+    let data = load_db(cfg)?;
+    Ok(train_encoded(cfg, &data))
+}
+
+/// Build the configured IVF index: partition mode regroups the flat
+/// codes into cells (bitwise-compatible with the exhaustive scan at
+/// `nprobe = ncells`); `ivf.residual = true` re-encodes per-cell
+/// residuals `x - centroid(x)` instead (IVFADC).
+fn build_ivf(cfg: &EngineConfig) -> Result<IvfIndex> {
+    let data = load_db(cfg)?;
+    let opts = IvfBuildOpts {
+        ncells: cfg.ivf.ncells,
+        iters: 15,
+        seed: cfg.seed,
+    };
+    if cfg.ivf.residual {
+        println!(
+            "[serve] building residual IVF ({} cells) over {} vectors...",
+            cfg.ivf.ncells,
+            data.len()
+        );
+        let icq = Icq::train(
+            &data.x,
+            IcqOpts {
+                k: cfg.k,
+                m: cfg.m,
+                fast_k: cfg.fast_k,
+                kmeans_iters: 10,
+                prior_steps: 300,
+                seed: cfg.seed,
+            },
+        );
+        IvfIndex::build_residual(
+            &icq,
+            &data.x,
+            &data.y,
+            icq.fast_k,
+            icq.sigma,
+            opts,
+        )
+    } else {
+        let index = train_encoded(cfg, &data);
+        IvfIndex::partition(&index, &data.x, opts)
+    }
 }
 
 /// Build the serving searcher the config asks for: the flat
@@ -302,6 +385,51 @@ fn build_searcher(
          serve.remote_shards entry — an empty remote list here is a \
          misconfiguration, not a flat server"
     );
+    if cfg.ivf.ncells > 0 {
+        // IVF serving is cell-granular and in-process: remote wire
+        // shards carry contiguous row ranges, which an IVF partition
+        // does not have.
+        anyhow::ensure!(
+            groups.is_empty(),
+            "ivf.ncells > 0 cannot combine with serve.remote_shards; \
+             drop one of the two"
+        );
+        let ivf = Arc::new(build_ivf(cfg)?);
+        let nprobe = cfg.ivf.nprobe.max(1);
+        println!(
+            "[serve] IVF: {} cells, nprobe={}, {} rows{}",
+            ivf.ncells(),
+            nprobe,
+            ivf.n_total(),
+            if ivf.residual() { ", residual" } else { "" }
+        );
+        if serve_cfg.shards <= 1 {
+            let searcher = IvfSearcher::new(ivf, nprobe, cfg.search);
+            return Ok((Arc::new(searcher), None));
+        }
+        // cell-granular local shards: each holds whole cells, ranks
+        // the shared centroid table globally, and the gather's merge
+        // equals the single-process IVF result exactly
+        let ops = Arc::new(OpCounter::new());
+        let dim = ivf.dim();
+        let mut backends: Vec<Box<dyn ShardBackend>> = Vec::new();
+        for shard in ivf.split_cells(serve_cfg.shards)? {
+            println!(
+                "[serve] ivf shard: {} cell(s), {} rows",
+                shard.num_owned_cells(),
+                shard.len()
+            );
+            backends.push(Box::new(LocalIvfShardBackend::new(
+                Arc::new(shard),
+                nprobe,
+                cfg.search,
+                ops.clone(),
+            )));
+        }
+        let searcher: Arc<dyn BatchSearcher> =
+            Arc::new(ShardedSearcher::from_backends(backends, None, dim, ops)?);
+        return Ok((searcher, None));
+    }
     if serve_cfg.shards <= 1 && groups.is_empty() {
         let index = Arc::new(build_index(cfg)?);
         return Ok((Arc::new(NativeSearcher::new(index, cfg.search)), None));
@@ -501,6 +629,11 @@ fn shard_server(
     idle_timeout: Option<String>,
     max_conns: Option<String>,
 ) -> Result<()> {
+    anyhow::ensure!(
+        cfg.ivf.ncells == 0,
+        "shard-server serves contiguous row-range shards; IVF cells are \
+         served in-process by `serve` (drop ivf.ncells)"
+    );
     let opts = wire::ServeShardOpts {
         idle_timeout: match idle_timeout {
             Some(s) => {
@@ -567,6 +700,12 @@ fn shard_server(
 /// standalone snapshot (`PREFIX<i>.icqf`) carrying its global placement
 /// — the artifacts `shard-server --index` processes load.
 fn export_shards(cfg: &EngineConfig, shards: usize, prefix: &str) -> Result<()> {
+    anyhow::ensure!(
+        cfg.ivf.ncells == 0,
+        "export-shards cuts contiguous row ranges; IVF snapshots are \
+         whole-index (`train` writes one) and serve cell-granular shards \
+         in-process"
+    );
     let index = build_index(cfg)?;
     let sharded = ShardedIndex::build(&index, ShardPolicy::Count(shards))?;
     for s in 0..sharded.num_shards() {

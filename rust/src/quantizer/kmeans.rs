@@ -99,18 +99,21 @@ pub fn train(x: &Matrix, opts: KMeansOpts, support: Option<&[u32]>) -> KMeans {
                 sums[c * d + dim as usize] += row[dim as usize] as f64;
             }
         }
+        let mut dists: Vec<f32> = pairs.iter().map(|p| p.1).collect();
+        reseed_empty_clusters(
+            x,
+            dims,
+            &mut centroids,
+            &mut assignment,
+            &mut counts,
+            &mut sums,
+            &mut dists,
+            d,
+        );
         for c in 0..m {
             if counts[c] == 0 {
-                // re-seed empty cluster at the worst-fit point
-                let worst = pairs
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
-                    .map(|(i, _)| i)
-                    .unwrap_or(0);
-                for &dim in dims {
-                    centroids.set(c, dim as usize, x.get(worst, dim as usize));
-                }
+                // unsplittable (no donor cluster with >= 2 points):
+                // keep the seed centroid rather than writing NaN
                 continue;
             }
             for &dim in dims {
@@ -128,6 +131,62 @@ pub fn train(x: &Matrix, opts: KMeansOpts, support: Option<&[u32]>) -> KMeans {
         distortion = new_distortion;
     }
     KMeans { centroids, assignment, distortion }
+}
+
+/// Repair empty clusters by splitting the largest one: each empty
+/// cluster (ascending index) takes the farthest-assigned point of the
+/// currently largest cluster as its new centroid. `counts`/`sums`/
+/// `assignment`/`dists` are updated consistently (the donor loses the
+/// point, the moved point's distance-to-centroid becomes 0), so the
+/// caller's mean update then yields correct centroids for both donor
+/// and repaired cluster. All tie-breaks take the smallest index, so
+/// the repair is fully deterministic. Clusters stay empty only when no
+/// donor with >= 2 points exists.
+#[allow(clippy::too_many_arguments)]
+fn reseed_empty_clusters(
+    x: &Matrix,
+    dims: &[u32],
+    centroids: &mut Matrix,
+    assignment: &mut [u32],
+    counts: &mut [usize],
+    sums: &mut [f64],
+    dists: &mut [f32],
+    d: usize,
+) {
+    let m = counts.len();
+    for c in 0..m {
+        if counts[c] != 0 {
+            continue;
+        }
+        // smallest-index largest cluster
+        let mut donor = 0usize;
+        for (j, &cnt) in counts.iter().enumerate() {
+            if cnt > counts[donor] {
+                donor = j;
+            }
+        }
+        if counts[donor] < 2 {
+            continue; // nothing to split
+        }
+        // the donor's farthest point (smallest index on ties)
+        let mut far = usize::MAX;
+        for (i, &a) in assignment.iter().enumerate() {
+            if a as usize == donor && (far == usize::MAX || dists[i] > dists[far])
+            {
+                far = i;
+            }
+        }
+        for &dim in dims {
+            let v = x.get(far, dim as usize);
+            centroids.set(c, dim as usize, v);
+            sums[donor * d + dim as usize] -= v as f64;
+            sums[c * d + dim as usize] += v as f64;
+        }
+        counts[donor] -= 1;
+        counts[c] = 1;
+        assignment[far] = c as u32;
+        dists[far] = 0.0;
+    }
 }
 
 #[cfg(test)]
@@ -194,6 +253,108 @@ mod tests {
         let km = train(&x, KMeansOpts { m: 8, iters: 5, seed: 0 }, None);
         assert_eq!(km.centroids.rows(), 3); // clamped
         assert!(km.distortion < 1e-6);
+    }
+
+    #[test]
+    fn same_seed_is_bitwise_deterministic() {
+        let x = blobs(40, &[[0., 0.], [6., 1.], [2., 7.]], 6);
+        let a = train(&x, KMeansOpts { m: 5, iters: 12, seed: 9 }, None);
+        let b = train(&x, KMeansOpts { m: 5, iters: 12, seed: 9 }, None);
+        assert_eq!(a.centroids.as_slice(), b.centroids.as_slice());
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.distortion, b.distortion);
+        // a different seed is allowed to land elsewhere but must still
+        // produce a full, valid assignment
+        let c = train(&x, KMeansOpts { m: 5, iters: 12, seed: 10 }, None);
+        assert_eq!(c.assignment.len(), x.rows());
+        assert!(c.assignment.iter().all(|&a| (a as usize) < 5));
+    }
+
+    #[test]
+    fn reseed_moves_farthest_point_of_largest_cluster() {
+        // cluster 0 owns rows {0, 1, 2} (row 2 farthest), cluster 1
+        // owns row 3, cluster 2 is empty.
+        let x = Matrix::from_vec(4, 1, vec![0.0, 1.0, 5.0, 9.0]);
+        let dims = [0u32];
+        let mut centroids = Matrix::from_vec(3, 1, vec![2.0, 9.0, 0.0]);
+        let mut assignment = vec![0u32, 0, 0, 1];
+        let mut counts = vec![3usize, 1, 0];
+        let mut sums = vec![6.0f64, 9.0, 0.0];
+        let mut dists = vec![4.0f32, 1.0, 9.0, 0.0];
+        reseed_empty_clusters(
+            &x,
+            &dims,
+            &mut centroids,
+            &mut assignment,
+            &mut counts,
+            &mut sums,
+            &mut dists,
+            1,
+        );
+        assert_eq!(assignment, vec![0, 0, 2, 1]);
+        assert_eq!(counts, vec![2, 1, 1]);
+        assert_eq!(centroids.get(2, 0), 5.0);
+        assert_eq!(sums, vec![1.0, 9.0, 5.0]);
+        assert_eq!(dists[2], 0.0);
+    }
+
+    #[test]
+    fn reseed_gives_each_empty_cluster_a_distinct_point() {
+        // two empty clusters: the first split shrinks the donor, so the
+        // second empty cluster must draw a different point (the old
+        // dead-centroid path parked every empty at the same one).
+        let x =
+            Matrix::from_vec(5, 1, vec![0.0, 1.0, 2.0, 3.0, 10.0]);
+        let dims = [0u32];
+        let mut centroids =
+            Matrix::from_vec(4, 1, vec![1.5, 10.0, 0.0, 0.0]);
+        let mut assignment = vec![0u32, 0, 0, 0, 1];
+        let mut counts = vec![4usize, 1, 0, 0];
+        let mut sums = vec![6.0f64, 10.0, 0.0, 0.0];
+        let mut dists = vec![2.25f32, 0.25, 0.25, 2.25, 0.0];
+        reseed_empty_clusters(
+            &x,
+            &dims,
+            &mut centroids,
+            &mut assignment,
+            &mut counts,
+            &mut sums,
+            &mut dists,
+            1,
+        );
+        // cluster 2 takes row 0 (farthest of cluster 0, smallest index
+        // on the tie with row 3); cluster 3 then takes row 3.
+        assert_eq!(assignment, vec![2, 0, 0, 3, 1]);
+        assert_eq!(counts, vec![2, 1, 1, 1]);
+        assert_ne!(centroids.get(2, 0), centroids.get(3, 0));
+        assert_eq!(centroids.get(2, 0), 0.0);
+        assert_eq!(centroids.get(3, 0), 3.0);
+    }
+
+    #[test]
+    fn duplicate_heavy_data_yields_no_dead_centroids() {
+        // only two distinct values: however seeding lands, every
+        // centroid must end at a data location (never stale garbage),
+        // and the assignment must stay consistent with the centroids.
+        let x = Matrix::from_fn(
+            30,
+            2,
+            |i, j| if i % 2 == 0 { j as f32 } else { 7.0 + j as f32 },
+        );
+        let km = train(&x, KMeansOpts { m: 4, iters: 10, seed: 0 }, None);
+        for c in 0..km.centroids.rows() {
+            let row = km.centroids.row(c);
+            let at_a = row[0] == 0.0 && row[1] == 1.0;
+            let at_b = row[0] == 7.0 && row[1] == 8.0;
+            assert!(at_a || at_b, "centroid {c} at {row:?} is off-data");
+        }
+        for i in 0..x.rows() {
+            let (j, dist) =
+                distance::nearest_row(x.row(i), km.centroids.as_slice(), 2);
+            let assigned = km.assignment[i] as usize;
+            let adist = distance::l2_sq(x.row(i), km.centroids.row(assigned));
+            assert_eq!(adist, dist, "row {i}: not assigned to a nearest ({j})");
+        }
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! IVF coarse-partition parity suite.
+//!
+//! The non-exhaustive layer is only trustworthy if it degrades to the
+//! exhaustive scan *exactly*: with `nprobe == ncells` every cell is
+//! probed, the cells regroup the flat index's own codes (partition
+//! mode never re-encodes), one shared LUT computes the same f32
+//! distances, and the per-cell ascending global-id maps keep the
+//! canonical `(distance, id)` order — so the merged top-k must be
+//! bitwise equal to the flat scan. This suite pins that across every
+//! quantizer family (ICQ / PQ / OPQ / CQ / SQ), tail blocks, empty
+//! cells, and `k` larger than any cell; pins recall@10 against the
+//! flat quantized ranking as monotonically non-decreasing in `nprobe`
+//! (probed cell sets are nested, so a flat-top-10 row once probed can
+//! never be displaced); and pins the cell-granular sharded gather and
+//! the snapshot round-trip to the single-process IVF result.
+
+use std::sync::Arc;
+
+use icq::config::SearchConfig;
+use icq::coordinator::{
+    BatchSearcher, IvfSearcher, LocalIvfShardBackend, ShardBackend,
+    ShardedSearcher,
+};
+use icq::core::{Hit, Matrix, Rng};
+use icq::data::Dataset;
+use icq::index::ivf::{load_index, AnyIndex};
+use icq::index::search_icq::{self, IcqSearchOpts};
+use icq::index::{EncodedIndex, IvfBuildOpts, IvfIndex, OpCounter};
+use icq::quantizer::cq::{Cq, CqOpts};
+use icq::quantizer::icq::{Icq, IcqOpts};
+use icq::quantizer::opq::{Opq, OpqOpts};
+use icq::quantizer::pq::{Pq, PqOpts};
+use icq::quantizer::sq::{Sq, SqOpts};
+
+fn hetero(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(n, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 3.0 } else { 0.4 }
+    })
+}
+
+fn queries(nq: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(nq, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 2.0 } else { 0.5 }
+    })
+}
+
+/// Build one index per quantizer family over the same kind of data.
+/// Returns `(name, index, vectors)` — `vectors` live in the index's own
+/// coordinate space (embedded for SQ), which is what the coarse
+/// quantizer partitions.
+fn method_indexes(
+    n: usize,
+    seed: u64,
+) -> Vec<(&'static str, EncodedIndex, Matrix)> {
+    let x = hetero(n, 16, seed);
+    let labels: Vec<i32> = (0..n).map(|i| i as i32).collect();
+    let mut out = Vec::new();
+
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k: 8, m: 16, fast_k: 2, kmeans_iters: 5, prior_steps: 80, seed },
+    );
+    out.push(("icq", EncodedIndex::build_icq(&icq, &x, labels.clone()), x.clone()));
+
+    let pq = Pq::train(&x, PqOpts { k: 4, m: 16, iters: 4, seed });
+    out.push(("pq", EncodedIndex::build(&pq, &x, labels.clone()), x.clone()));
+
+    let opq = Opq::train(
+        &x,
+        OpqOpts { pq: PqOpts { k: 4, m: 16, iters: 4, seed }, outer_iters: 2 },
+    );
+    let mut opq_idx = EncodedIndex::build(&opq, &x, labels.clone());
+    opq_idx.sigma = 0.0;
+    out.push(("opq", opq_idx, x.clone()));
+
+    let cq = Cq::train(
+        &x,
+        CqOpts { k: 4, m: 16, iters: 3, icm_sweeps: 2, seed },
+    );
+    out.push(("cq", EncodedIndex::build(&cq, &x, labels.clone()), x.clone()));
+
+    // SQ: supervised projection + CQ; the index lives in the embedded
+    // space, so the coarse partition runs on the embedded vectors.
+    let y: Vec<i32> = (0..n).map(|i| (i % 4) as i32).collect();
+    let sq = Sq::train(
+        &Dataset::new(x.clone(), y),
+        SqOpts {
+            d_out: 8,
+            cq: CqOpts { k: 4, m: 16, iters: 3, icm_sweeps: 2, seed },
+            ridge: 1e-3,
+        },
+    );
+    let emb = sq.embed(&x);
+    out.push(("sq", EncodedIndex::build(&sq, &x, labels), emb));
+    out
+}
+
+/// Flat exhaustive baseline: the per-query two-step scan over the
+/// un-partitioned index (the path the IVF full probe must reproduce).
+fn flat_topk(index: &EncodedIndex, qs: &Matrix, k: usize) -> Vec<Vec<Hit>> {
+    let ops = OpCounter::new();
+    let mut scratch = Vec::new();
+    (0..qs.rows())
+        .map(|qi| {
+            search_icq::search_scanfirst_query_qlut(
+                index,
+                qs.row(qi),
+                IcqSearchOpts { k, margin_scale: 1.0 },
+                &ops,
+                &mut scratch,
+            )
+        })
+        .collect()
+}
+
+/// nprobe == ncells must be bitwise-identical to the flat scan for
+/// every quantizer family — including tail blocks (n = 330 is not a
+/// multiple of the 64-row code block).
+#[test]
+fn full_probe_is_bitwise_flat_for_every_method() {
+    for (name, index, x) in method_indexes(330, 1) {
+        let qs = queries(5, x.cols(), 2);
+        let ivf = IvfIndex::partition(
+            &index,
+            &x,
+            IvfBuildOpts { ncells: 7, iters: 6, seed: 0 },
+        )
+        .unwrap();
+        let flat = flat_topk(&index, &qs, 10);
+        let ops = OpCounter::new();
+        for qi in 0..qs.rows() {
+            let got = ivf.search(
+                qs.row(qi),
+                ivf.ncells(),
+                IcqSearchOpts { k: 10, margin_scale: 1.0 },
+                &ops,
+            );
+            assert_eq!(
+                got, flat[qi],
+                "{name}: query {qi} full-probe IVF != flat"
+            );
+        }
+    }
+}
+
+/// Parity must survive k larger than every cell (each cell contributes
+/// everything it has) and k larger than the database.
+#[test]
+fn full_probe_parity_when_k_exceeds_cell_size() {
+    let (_, index, x) = method_indexes(150, 3).swap_remove(0);
+    let qs = queries(3, 16, 4);
+    let ivf = IvfIndex::partition(
+        &index,
+        &x,
+        IvfBuildOpts { ncells: 6, iters: 6, seed: 0 },
+    )
+    .unwrap();
+    let ops = OpCounter::new();
+    for k in [100usize, 500] {
+        let flat = flat_topk(&index, &qs, k);
+        for qi in 0..qs.rows() {
+            let got = ivf.search(
+                qs.row(qi),
+                ivf.ncells(),
+                IcqSearchOpts { k, margin_scale: 1.0 },
+                &ops,
+            );
+            assert_eq!(got, flat[qi], "k={k} query {qi}");
+        }
+    }
+    let all = flat_topk(&index, &qs, 500);
+    assert_eq!(all[0].len(), 150, "k > n must return the whole database");
+}
+
+/// Duplicate-heavy data leaves most cells empty (two distinct points
+/// cannot feed six centroids); empty cells must be skipped cleanly and
+/// the full probe must still equal flat.
+#[test]
+fn full_probe_parity_with_empty_cells() {
+    let a: Vec<f32> = (0..16).map(|j| j as f32 * 0.3).collect();
+    let b: Vec<f32> = (0..16).map(|j| 5.0 - j as f32 * 0.2).collect();
+    let x = Matrix::from_fn(60, 16, |i, j| {
+        if i % 2 == 0 { a[j] } else { b[j] }
+    });
+    let pq = Pq::train(&x, PqOpts { k: 4, m: 16, iters: 4, seed: 0 });
+    let index =
+        EncodedIndex::build(&pq, &x, (0..60).map(|i| i as i32).collect());
+    let ivf = IvfIndex::partition(
+        &index,
+        &x,
+        IvfBuildOpts { ncells: 6, iters: 8, seed: 0 },
+    )
+    .unwrap();
+    let empties = (0..ivf.ncells())
+        .filter(|&c| ivf.cell(c).unwrap().index.is_empty())
+        .count();
+    assert!(empties >= 4, "expected >= 4 empty cells, got {empties}");
+    let qs = queries(4, 16, 5);
+    let flat = flat_topk(&index, &qs, 12);
+    let ops = OpCounter::new();
+    for qi in 0..qs.rows() {
+        let got = ivf.search(
+            qs.row(qi),
+            ivf.ncells(),
+            IcqSearchOpts { k: 12, margin_scale: 1.0 },
+            &ops,
+        );
+        assert_eq!(got, flat[qi], "query {qi} with empty cells");
+    }
+}
+
+/// recall@10 against the flat *quantized* top-10 must be monotonically
+/// non-decreasing in nprobe, reaching exactly 1.0 at the full probe.
+/// (Probed-cell sets are nested in nprobe and a flat-top-10 row, once
+/// probed, is beaten by at most 9 rows anywhere — so it stays ranked.)
+#[test]
+fn recall_at_10_is_monotone_in_nprobe() {
+    let x = hetero(600, 16, 7);
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k: 8, m: 16, fast_k: 2, kmeans_iters: 5, prior_steps: 80, seed: 7 },
+    );
+    let index =
+        EncodedIndex::build_icq(&icq, &x, (0..600).map(|i| i as i32).collect());
+    let ivf = IvfIndex::partition(
+        &index,
+        &x,
+        IvfBuildOpts { ncells: 16, iters: 8, seed: 0 },
+    )
+    .unwrap();
+    let qs = queries(8, 16, 8);
+    let oracle = flat_topk(&index, &qs, 10);
+    let ops = OpCounter::new();
+    let mut prev = -1.0f64;
+    for nprobe in [1usize, 2, 4, 8, 16] {
+        let mut hit_count = 0usize;
+        for qi in 0..qs.rows() {
+            let got = ivf.search(
+                qs.row(qi),
+                nprobe,
+                IcqSearchOpts { k: 10, margin_scale: 1.0 },
+                &ops,
+            );
+            let ids: std::collections::HashSet<u32> =
+                got.iter().map(|h| h.id).collect();
+            hit_count +=
+                oracle[qi].iter().filter(|h| ids.contains(&h.id)).count();
+        }
+        let recall = hit_count as f64 / (qs.rows() * 10) as f64;
+        assert!(
+            recall >= prev,
+            "recall@10 dropped from {prev} to {recall} at nprobe {nprobe}"
+        );
+        prev = recall;
+        if nprobe == 16 {
+            assert_eq!(recall, 1.0, "full probe must recover the flat top-10");
+        }
+    }
+}
+
+/// Cell-granular shards served through the scatter-gather must equal
+/// the single-process IVF search — for partial probes too, because
+/// every shard ranks the same shared centroid table.
+#[test]
+fn ivf_sharded_gather_equals_ivf_flat() {
+    let x = hetero(400, 16, 9);
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k: 8, m: 16, fast_k: 2, kmeans_iters: 5, prior_steps: 80, seed: 9 },
+    );
+    let index =
+        EncodedIndex::build_icq(&icq, &x, (0..400).map(|i| i as i32).collect());
+    let ivf = Arc::new(
+        IvfIndex::partition(
+            &index,
+            &x,
+            IvfBuildOpts { ncells: 9, iters: 6, seed: 0 },
+        )
+        .unwrap(),
+    );
+    let qs = queries(6, 16, 10);
+    for nprobe in [1usize, 3, 9] {
+        let searcher =
+            IvfSearcher::new(ivf.clone(), nprobe, SearchConfig::default());
+        let flat = searcher.search_batch(&qs, 10).unwrap();
+        for n_shards in [2usize, 4] {
+            let ops = Arc::new(OpCounter::new());
+            let backends: Vec<Box<dyn ShardBackend>> = ivf
+                .split_cells(n_shards)
+                .unwrap()
+                .into_iter()
+                .map(|shard| {
+                    Box::new(LocalIvfShardBackend::new(
+                        Arc::new(shard),
+                        nprobe,
+                        SearchConfig::default(),
+                        ops.clone(),
+                    )) as Box<dyn ShardBackend>
+                })
+                .collect();
+            let gather =
+                ShardedSearcher::from_backends(backends, None, 16, ops)
+                    .unwrap();
+            let got = gather.search_batch(&qs, 10).unwrap();
+            assert_eq!(
+                got, flat,
+                "nprobe {nprobe} x {n_shards} shards diverged from flat IVF"
+            );
+        }
+    }
+}
+
+/// Snapshot round-trip through a real file: the reloaded index (via the
+/// version-dispatching loader) must search bitwise-identically, and the
+/// same loader must hand a plain flat snapshot back as flat.
+#[test]
+fn snapshot_roundtrip_through_file_is_bitwise() {
+    let x = hetero(260, 16, 11);
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k: 8, m: 16, fast_k: 2, kmeans_iters: 5, prior_steps: 80, seed: 11 },
+    );
+    let index =
+        EncodedIndex::build_icq(&icq, &x, (0..260).map(|i| i as i32).collect());
+    let ivf = IvfIndex::partition(
+        &index,
+        &x,
+        IvfBuildOpts { ncells: 5, iters: 6, seed: 0 },
+    )
+    .unwrap();
+    let dir = std::env::temp_dir().join("icq_ivf_parity_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ivf.icqf");
+    ivf.to_pack().save(&path).unwrap();
+    let pack = icq::data::format::TensorPack::load(&path).unwrap();
+    let AnyIndex::Ivf(back) = load_index(&pack).unwrap() else {
+        panic!("IVF snapshot loaded as flat");
+    };
+    let qs = queries(5, 16, 12);
+    let ops = OpCounter::new();
+    for nprobe in [2usize, 5] {
+        for qi in 0..qs.rows() {
+            let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+            assert_eq!(
+                back.search(qs.row(qi), nprobe, opts, &ops),
+                ivf.search(qs.row(qi), nprobe, opts, &ops),
+                "nprobe {nprobe} query {qi} changed across the round-trip"
+            );
+        }
+    }
+    // flat snapshots still load as flat through the same entry point
+    let flat_path = dir.join("flat.icqf");
+    index.to_pack().save(&flat_path).unwrap();
+    let flat_pack = icq::data::format::TensorPack::load(&flat_path).unwrap();
+    match load_index(&flat_pack).unwrap() {
+        AnyIndex::Flat(f) => assert_eq!(f.len(), index.len()),
+        AnyIndex::Ivf(_) => panic!("flat snapshot loaded as IVF"),
+    }
+}
