@@ -1,0 +1,11 @@
+//! icqfmt container parse + every snapshot loader must be total on
+//! arbitrary bytes. Body shared with `tests/fuzz_smoke.rs` via
+//! `icq::fuzzing`.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    icq::fuzzing::fuzz_snapshot_pack(data);
+});

@@ -1,0 +1,10 @@
+//! fvecs/bvecs/ivecs parsers must fail only through typed `VecsError`s.
+//! Body shared with `tests/fuzz_smoke.rs` via `icq::fuzzing`.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    icq::fuzzing::fuzz_vecs(data);
+});

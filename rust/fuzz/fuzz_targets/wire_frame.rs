@@ -1,0 +1,11 @@
+//! Wire frame decode must never panic or overallocate; decoded frames
+//! must re-encode/re-decode cleanly. Body shared with
+//! `tests/fuzz_smoke.rs` via `icq::fuzzing`.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    icq::fuzzing::fuzz_wire_frame(data);
+});

@@ -21,9 +21,9 @@
 //! `(distance, id)` top-k, the gather's merge stays bitwise identical to
 //! the flat single-process path no matter how backends are placed.
 
-use std::sync::Arc;
-
 use anyhow::Result;
+
+use super::sync::Arc;
 
 use crate::config::SearchConfig;
 use crate::core::{Hit, Matrix};

@@ -1,9 +1,11 @@
 //! Admission control: a counting semaphore bounding in-flight queries.
 //! When the bound is hit, new queries are rejected immediately
 //! (load-shedding) rather than queued unboundedly — tail latency stays
-//! bounded under overload. std-only (Mutex + Condvar).
+//! bounded under overload. Mutex + Condvar only, via the
+//! [`super::sync`] shim — `tests/loom_models.rs` model-checks this
+//! exact type (never over capacity, no lost wakeup).
 
-use std::sync::{Arc, Condvar, Mutex};
+use super::sync::{Arc, Condvar, Mutex};
 
 struct Inner {
     available: Mutex<usize>,

@@ -3,10 +3,10 @@
 //! standard latency/throughput knob of serving systems (vLLM-style),
 //! implemented over bounded std::sync::mpsc queues.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
 
 use super::server::PendingQuery;
+use super::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]

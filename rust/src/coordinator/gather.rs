@@ -50,12 +50,11 @@
 //! replica — the gather only sees an error once a backend's whole
 //! replica set is out of options or past its deadline.
 
-use std::sync::mpsc::{self, Receiver, SyncSender};
-use std::sync::Arc;
-
 use anyhow::Result;
 
 use super::backend::{LocalShardBackend, ShardBackend, ShardJob};
+use super::sync::mpsc::{self, Receiver, SyncSender};
+use super::sync::{spawn_named, Arc};
 use super::worker::BatchSearcher;
 use crate::config::SearchConfig;
 use crate::core::{Hit, Matrix};
@@ -121,10 +120,9 @@ impl ShardedSearcher {
         for (bid, mut backend) in backends.into_iter().enumerate() {
             let (tx, rx) = mpsc::sync_channel::<BackendJob>(4);
             jobs.push(tx);
-            std::thread::Builder::new()
-                .name(format!("icq-shard-{bid}"))
-                .spawn(move || run_backend_worker(bid, &mut *backend, rx))
-                .expect("spawn shard worker");
+            spawn_named(&format!("icq-shard-{bid}"), move || {
+                run_backend_worker(bid, &mut *backend, rx)
+            });
         }
         Ok(ShardedSearcher { jobs, names, lut_source, dim, ops })
     }

@@ -3,7 +3,7 @@
 //! redials, hedged retries, circuit-breaker transitions, health
 //! probes).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use super::sync::atomic::{AtomicU64, Ordering};
 
 const BUCKETS: usize = 32; // log2 us buckets: [1us .. ~35min]
 

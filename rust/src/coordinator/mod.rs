@@ -28,6 +28,13 @@
 //! whole batch of query LUTs; timeout-closed single-query batches take
 //! the low-latency streaming path.
 //!
+//! Blocking sync primitives come exclusively from the [`sync`] shim
+//! (enforced by `cargo xtask lint`): in production they are `std`
+//! types, inside `modelcheck::model` they become schedule points, so
+//! `tests/loom_models.rs` exhaustively model-checks the pool checkout,
+//! circuit breaker, hedge-win, and admission machinery on the exact
+//! types this layer runs.
+//!
 //! See `ARCHITECTURE.md` at the repo root for the full layer map and
 //! the multi-host topology.
 
@@ -43,6 +50,7 @@ pub mod pool;
 pub mod replica;
 pub mod router;
 pub mod server;
+pub mod sync;
 pub mod wire;
 pub mod worker;
 
@@ -51,8 +59,8 @@ pub use backend::{
 };
 pub use gather::ShardedSearcher;
 pub use metrics::{Metrics, RemoteMetrics};
-pub use pool::{PoolOpts, RemoteEndpoint};
-pub use replica::{ReplicaOpts, ReplicaSetBackend, ReplicaSetHandle};
+pub use pool::{IdlePool, PoolOpts, RemoteEndpoint};
+pub use replica::{Breaker, ReplicaOpts, ReplicaSetBackend, ReplicaSetHandle};
 pub use server::{Coordinator, QueryRequest, QueryResponse};
 pub use wire::RemoteShardBackend;
 pub use worker::{BatchSearcher, IvfSearcher, NativeSearcher};

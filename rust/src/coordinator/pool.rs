@@ -23,14 +23,14 @@
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::backend::ShardJob;
 use super::metrics::RemoteMetrics;
+use super::sync::atomic::Ordering;
+use super::sync::{Arc, Mutex};
 use super::wire::{
     read_frame, write_query_frame, DeadlineReader, Frame, HelloInfo,
     WireError, DEFAULT_IO_TIMEOUT,
@@ -75,6 +75,64 @@ impl Default for PoolOpts {
 struct WireConn {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+}
+
+/// A lock-protected stack of idle reusable resources with a retention
+/// cap: the checkout/check-in primitive behind the connection pool.
+///
+/// Factored out of [`RemoteEndpoint`] so `tests/loom_models.rs` can
+/// exhaustively model-check the lending discipline — a taken item is
+/// owned by exactly one caller until it is put back — on the very type
+/// production runs (the `Mutex` comes from [`super::sync`], so inside
+/// `modelcheck::model` every take/put is an explored schedule point).
+pub struct IdlePool<C> {
+    idle: Mutex<Vec<C>>,
+    cap: usize,
+}
+
+impl<C> IdlePool<C> {
+    /// Empty pool retaining at most `cap.max(1)` idle items.
+    pub fn new(cap: usize) -> Self {
+        IdlePool::with_items(cap, Vec::new())
+    }
+
+    /// Pool seeded with `items` (retention cap still `cap.max(1)`;
+    /// seeding beyond the cap is allowed — excess drains on take).
+    pub fn with_items(cap: usize, items: Vec<C>) -> Self {
+        IdlePool { idle: Mutex::new(items), cap: cap.max(1) }
+    }
+
+    /// Pop an idle item, transferring ownership to the caller.
+    pub fn take(&self) -> Option<C> {
+        self.idle.lock().expect("pool lock").pop()
+    }
+
+    /// Return an item; reports whether it was retained (`false` means
+    /// the pool was at capacity and the item was dropped).
+    pub fn put(&self, item: C) -> bool {
+        let mut idle = self.idle.lock().expect("pool lock");
+        if idle.len() < self.cap {
+            idle.push(item);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drop every idle item.
+    pub fn clear(&self) {
+        self.idle.lock().expect("pool lock").clear();
+    }
+
+    /// Idle items currently retained.
+    pub fn len(&self) -> usize {
+        self.idle.lock().expect("pool lock").len()
+    }
+
+    /// True when no idle item is retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// `cap` shrunk to what remains until `deadline` (if any); a timeout
@@ -180,7 +238,7 @@ pub struct RemoteEndpoint {
     cfg: SearchConfig,
     opts: PoolOpts,
     hello: HelloInfo,
-    idle: Mutex<Vec<WireConn>>,
+    idle: IdlePool<WireConn>,
     metrics: Arc<RemoteMetrics>,
 }
 
@@ -201,7 +259,7 @@ impl RemoteEndpoint {
             cfg,
             opts,
             hello,
-            idle: Mutex::new(vec![conn]),
+            idle: IdlePool::with_items(opts.size, vec![conn]),
             metrics,
         }))
     }
@@ -243,7 +301,7 @@ impl RemoteEndpoint {
         &self,
         deadline: Option<Instant>,
     ) -> Result<(WireConn, bool)> {
-        if let Some(conn) = self.idle.lock().expect("pool lock").pop() {
+        if let Some(conn) = self.idle.take() {
             return Ok((conn, true));
         }
         Ok((self.dial(deadline)?, false))
@@ -252,16 +310,13 @@ impl RemoteEndpoint {
     /// Return a healthy connection to the pool (dropped if the pool is
     /// already at capacity).
     fn checkin(&self, conn: WireConn) {
-        let mut idle = self.idle.lock().expect("pool lock");
-        if idle.len() < self.opts.size {
-            idle.push(conn);
-        }
+        self.idle.put(conn);
     }
 
     /// Drop every idle connection (when one pooled connection turns out
     /// stale, the rest — idle at least as long — share its fate).
     fn clear_idle(&self) {
-        self.idle.lock().expect("pool lock").clear();
+        self.idle.clear();
     }
 
     /// Lightweight health probe: dial a fresh connection, validate the
@@ -404,6 +459,25 @@ mod tests {
         assert!(!is_connection_level(&would_block));
         let plain = anyhow::anyhow!("not a wire failure");
         assert!(!is_connection_level(&plain));
+    }
+
+    #[test]
+    fn idle_pool_lending_and_cap() {
+        let pool: IdlePool<u32> = IdlePool::with_items(2, vec![7]);
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool.take(), Some(7));
+        assert_eq!(pool.take(), None);
+        assert!(pool.is_empty());
+        assert!(pool.put(1));
+        assert!(pool.put(2));
+        assert!(!pool.put(3), "beyond-cap check-in must drop");
+        assert_eq!(pool.len(), 2);
+        pool.clear();
+        assert!(pool.is_empty());
+        // a zero cap is promoted to 1 so check-in can always retain one
+        let tiny: IdlePool<u32> = IdlePool::new(0);
+        assert!(tiny.put(9));
+        assert!(!tiny.put(10));
     }
 
     #[test]

@@ -34,9 +34,6 @@
 //! open still attempts its first replica — a recovered cluster must be
 //! able to serve again even with probing disabled.
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{self, RecvTimeoutError};
-use std::sync::{Arc, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -44,6 +41,9 @@ use anyhow::{Context, Result};
 use super::backend::{ShardBackend, ShardJob};
 use super::metrics::RemoteMetrics;
 use super::pool::{PoolOpts, RemoteEndpoint};
+use super::sync::atomic::Ordering;
+use super::sync::mpsc::{self, RecvTimeoutError};
+use super::sync::{spawn_named, thread, Arc, Mutex, Weak};
 use super::wire::HelloInfo;
 use crate::config::SearchConfig;
 use crate::core::Hit;
@@ -86,29 +86,77 @@ impl Default for ReplicaOpts {
 const DEFAULT_CIRCUIT_HOLD: Duration = Duration::from_secs(1);
 
 #[derive(Debug, Default)]
-struct HealthInner {
+struct BreakerInner {
     consecutive_failures: u32,
     /// `Some(t)` = circuit open; eligible for a half-open trial once
     /// `t` passes.
     open_until: Option<Instant>,
 }
 
-struct Replica {
-    endpoint: Arc<RemoteEndpoint>,
-    health: Mutex<HealthInner>,
+/// Per-replica circuit-breaker state machine: a consecutive-failure
+/// streak opens the circuit for a hold period; any success closes it
+/// and resets the streak.
+///
+/// Factored out of the replica set so `tests/loom_models.rs` can
+/// model-check it under every interleaving of concurrent attempt
+/// threads recording outcomes (its `Mutex` comes from [`super::sync`]).
+/// Time is an explicit `now` argument throughout — models pass a fixed
+/// instant, production passes `Instant::now()`.
+#[derive(Debug, Default)]
+pub struct Breaker {
+    inner: Mutex<BreakerInner>,
 }
 
-impl Replica {
-    fn eligible(&self, now: Instant) -> bool {
-        match self.health.lock().expect("health lock").open_until {
+impl Breaker {
+    /// A closed breaker with no failure streak.
+    pub fn new() -> Self {
+        Breaker::default()
+    }
+
+    /// True when attempts may be routed here: circuit closed, or open
+    /// but past its hold (the half-open trial).
+    pub fn eligible(&self, now: Instant) -> bool {
+        match self.inner.lock().expect("breaker lock").open_until {
             None => true,
             Some(t) => now >= t,
         }
     }
 
-    fn circuit_open(&self) -> bool {
-        self.health.lock().expect("health lock").open_until.is_some()
+    /// True while the circuit is open (even if half-open-eligible).
+    pub fn is_open(&self) -> bool {
+        self.inner.lock().expect("breaker lock").open_until.is_some()
     }
+
+    /// Record a successful attempt; returns true when this closed an
+    /// open circuit (the caller counts the transition).
+    pub fn record_success(&self) -> bool {
+        let mut b = self.inner.lock().expect("breaker lock");
+        let was_open = b.open_until.is_some();
+        b.consecutive_failures = 0;
+        b.open_until = None;
+        was_open
+    }
+
+    /// Record a failed attempt; once the streak reaches `limit` the
+    /// circuit (re-)opens until `now + hold`. Returns true when this
+    /// call opened a previously-closed circuit (the caller counts the
+    /// transition). `limit == 0` disables the breaker.
+    pub fn record_failure(&self, now: Instant, limit: u32, hold: Duration) -> bool {
+        let mut b = self.inner.lock().expect("breaker lock");
+        b.consecutive_failures = b.consecutive_failures.saturating_add(1);
+        if limit > 0 && b.consecutive_failures >= limit {
+            let newly_opened = b.open_until.is_none();
+            b.open_until = Some(now + hold);
+            newly_opened
+        } else {
+            false
+        }
+    }
+}
+
+struct Replica {
+    endpoint: Arc<RemoteEndpoint>,
+    breaker: Breaker,
 }
 
 struct ReplicaSetShared {
@@ -119,28 +167,23 @@ struct ReplicaSetShared {
 
 impl ReplicaSetShared {
     fn record_success(&self, idx: usize) {
-        let mut h = self.replicas[idx].health.lock().expect("health lock");
-        if h.open_until.is_some() {
+        if self.replicas[idx].breaker.record_success() {
             self.metrics.circuit_closes.fetch_add(1, Ordering::Relaxed);
         }
-        h.consecutive_failures = 0;
-        h.open_until = None;
     }
 
     fn record_failure(&self, idx: usize, now: Instant) {
-        let mut h = self.replicas[idx].health.lock().expect("health lock");
-        h.consecutive_failures = h.consecutive_failures.saturating_add(1);
-        let limit = self.opts.circuit_failures;
-        if limit > 0 && h.consecutive_failures >= limit {
-            if h.open_until.is_none() {
-                self.metrics.circuit_opens.fetch_add(1, Ordering::Relaxed);
-            }
-            let hold = if self.opts.probe_interval.is_zero() {
-                DEFAULT_CIRCUIT_HOLD
-            } else {
-                self.opts.probe_interval
-            };
-            h.open_until = Some(now + hold);
+        let hold = if self.opts.probe_interval.is_zero() {
+            DEFAULT_CIRCUIT_HOLD
+        } else {
+            self.opts.probe_interval
+        };
+        if self.replicas[idx].breaker.record_failure(
+            now,
+            self.opts.circuit_failures,
+            hold,
+        ) {
+            self.metrics.circuit_opens.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -149,7 +192,7 @@ impl ReplicaSetShared {
     /// pool), failure re-arms the hold.
     fn probe_round(&self) {
         for (idx, r) in self.replicas.iter().enumerate() {
-            if !r.circuit_open() {
+            if !r.breaker.is_open() {
                 continue;
             }
             self.metrics.probes.fetch_add(1, Ordering::Relaxed);
@@ -169,7 +212,7 @@ impl ReplicaSetShared {
 /// no longer upgrades).
 fn run_prober(weak: Weak<ReplicaSetShared>, interval: Duration) {
     loop {
-        std::thread::sleep(interval);
+        thread::sleep(interval);
         match weak.upgrade() {
             Some(shared) => shared.probe_round(),
             None => return,
@@ -200,7 +243,7 @@ impl ReplicaSetHandle {
 
     /// True if replica `idx`'s circuit is currently open.
     pub fn circuit_open(&self, idx: usize) -> bool {
-        self.shared.replicas[idx].circuit_open()
+        self.shared.replicas[idx].breaker.is_open()
     }
 }
 
@@ -236,10 +279,7 @@ impl ReplicaSetBackend {
             let endpoint =
                 RemoteEndpoint::connect(addr, cfg, pool, metrics.clone())
                     .with_context(|| format!("connecting replica {addr}"))?;
-            replicas.push(Replica {
-                endpoint,
-                health: Mutex::new(HealthInner::default()),
-            });
+            replicas.push(Replica { endpoint, breaker: Breaker::new() });
         }
         let hello = replicas[0].endpoint.hello();
         for r in &replicas[1..] {
@@ -259,10 +299,7 @@ impl ReplicaSetBackend {
         if !opts.probe_interval.is_zero() && addrs.len() > 1 {
             let weak = Arc::downgrade(&shared);
             let interval = opts.probe_interval;
-            std::thread::Builder::new()
-                .name("icq-replica-probe".into())
-                .spawn(move || run_prober(weak, interval))
-                .expect("spawn replica prober");
+            spawn_named("icq-replica-probe", move || run_prober(weak, interval));
         }
         Ok(ReplicaSetBackend { shared, hello, names })
     }
@@ -304,20 +341,20 @@ impl ReplicaSetBackend {
         let shared = self.shared.clone();
         let job = job.clone();
         let tx = tx.clone();
-        std::thread::Builder::new()
-            .name("icq-replica-attempt".into())
-            .spawn(move || {
-                let res = shared.replicas[idx]
-                    .endpoint
-                    .search_job_by(&job, deadline);
-                match &res {
-                    Ok(_) => shared.record_success(idx),
-                    Err(_) => shared.record_failure(idx, Instant::now()),
-                }
-                // nobody listening (hedge already won) is fine
-                let _ = tx.send((idx, res));
-            })
-            .expect("spawn replica attempt thread");
+        spawn_named("icq-replica-attempt", move || {
+            let res = shared.replicas[idx]
+                .endpoint
+                .search_job_by(&job, deadline);
+            // outcome recorded *before* the send: by the time a winner
+            // is observable, its health bookkeeping has landed (the
+            // hedge-win model pins this ordering)
+            match &res {
+                Ok(_) => shared.record_success(idx),
+                Err(_) => shared.record_failure(idx, Instant::now()),
+            }
+            // nobody listening (hedge already won) is fine
+            let _ = tx.send((idx, res));
+        });
     }
 
     fn search_replicated(&self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
@@ -336,7 +373,7 @@ impl ReplicaSetBackend {
         // set must still try someone or a recovered cluster could
         // never serve again
         let mut order: Vec<usize> = (0..n)
-            .filter(|&i| shared.replicas[i].eligible(started))
+            .filter(|&i| shared.replicas[i].breaker.eligible(started))
             .collect();
         for i in 0..n {
             if !order.contains(&i) {
@@ -536,7 +573,7 @@ mod tests {
                     metrics.clone(),
                 )
                 .unwrap(),
-                health: Mutex::new(HealthInner::default()),
+                breaker: Breaker::new(),
             })
             .collect();
         (
@@ -554,23 +591,30 @@ mod tests {
         };
         let (shared, metrics) = shared_with(1, opts);
         let now = Instant::now();
-        assert!(shared.replicas[0].eligible(now));
+        assert!(shared.replicas[0].breaker.eligible(now));
         shared.record_failure(0, now);
-        assert!(!shared.replicas[0].circuit_open(), "one failure is not enough");
+        assert!(
+            !shared.replicas[0].breaker.is_open(),
+            "one failure is not enough"
+        );
         shared.record_failure(0, now);
-        assert!(shared.replicas[0].circuit_open());
+        assert!(shared.replicas[0].breaker.is_open());
         assert_eq!(metrics.circuit_opens.load(Ordering::Relaxed), 1);
         // open circuit is skipped until its hold expires...
-        assert!(!shared.replicas[0].eligible(now));
+        assert!(!shared.replicas[0].breaker.eligible(now));
         // ...and eligible again (half-open) once it does
         assert!(shared.replicas[0]
+            .breaker
             .eligible(now + DEFAULT_CIRCUIT_HOLD + Duration::from_millis(1)));
         // a success closes it and resets the streak
         shared.record_success(0);
-        assert!(!shared.replicas[0].circuit_open());
+        assert!(!shared.replicas[0].breaker.is_open());
         assert_eq!(metrics.circuit_closes.load(Ordering::Relaxed), 1);
         shared.record_failure(0, now);
-        assert!(!shared.replicas[0].circuit_open(), "streak was not reset");
+        assert!(
+            !shared.replicas[0].breaker.is_open(),
+            "streak was not reset"
+        );
     }
 
     #[test]
@@ -583,7 +627,7 @@ mod tests {
         for _ in 0..10 {
             shared.record_failure(0, Instant::now());
         }
-        assert!(!shared.replicas[0].circuit_open());
+        assert!(!shared.replicas[0].breaker.is_open());
         assert_eq!(metrics.circuit_opens.load(Ordering::Relaxed), 0);
     }
 
@@ -596,10 +640,10 @@ mod tests {
         };
         let (shared, metrics) = shared_with(1, opts);
         shared.record_failure(0, Instant::now());
-        assert!(shared.replicas[0].circuit_open());
+        assert!(shared.replicas[0].breaker.is_open());
         // the replica's server is healthy, so one probe closes it
         shared.probe_round();
-        assert!(!shared.replicas[0].circuit_open());
+        assert!(!shared.replicas[0].breaker.is_open());
         assert_eq!(metrics.probes.load(Ordering::Relaxed), 1);
         assert_eq!(metrics.circuit_closes.load(Ordering::Relaxed), 1);
         // no circuit open -> probe round is a no-op

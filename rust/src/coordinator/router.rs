@@ -4,15 +4,15 @@
 //! tie-break — keeps per-worker queues short so p99 does not collapse
 //! onto the slowest worker under burst load.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
-
 use super::server::PendingQuery;
+use super::sync::atomic::{AtomicUsize, Ordering};
+use super::sync::mpsc::{Receiver, SendError, SyncSender, TrySendError};
+use super::sync::Arc;
 
 /// Routes batches to worker queues.
 pub struct Router {
     workers: Vec<SyncSender<Vec<PendingQuery>>>,
-    loads: Vec<std::sync::Arc<AtomicUsize>>,
+    loads: Vec<Arc<AtomicUsize>>,
     rr: AtomicUsize,
 }
 
@@ -21,7 +21,7 @@ impl Router {
     /// decremented by the worker when a batch completes).
     pub fn new(
         workers: Vec<SyncSender<Vec<PendingQuery>>>,
-        loads: Vec<std::sync::Arc<AtomicUsize>>,
+        loads: Vec<Arc<AtomicUsize>>,
     ) -> Self {
         assert!(!workers.is_empty(), "router needs at least one worker");
         assert_eq!(workers.len(), loads.len());
@@ -76,7 +76,7 @@ impl Router {
                     // upstream)
                     match self.workers[best].send(b) {
                         Ok(()) => return true,
-                        Err(std::sync::mpsc::SendError(b)) => {
+                        Err(SendError(b)) => {
                             // worker died while we were blocked: undo
                             // the gauge and retry the others
                             self.loads[best]

@@ -3,9 +3,6 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
-use std::sync::atomic::AtomicUsize;
-use std::sync::mpsc::{Receiver, SyncSender};
-use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -14,6 +11,9 @@ use super::backpressure::Admission;
 use super::batcher::{run_batcher, BatchPolicy};
 use super::metrics::Metrics;
 use super::router::{run_router, Router};
+use super::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use super::sync::mpsc::{self, Receiver, SyncSender};
+use super::sync::{spawn_named, thread, Arc};
 use super::worker::{run_worker, BatchSearcher};
 use crate::config::ServeConfig;
 use crate::core::json::Json;
@@ -77,10 +77,9 @@ impl Coordinator {
             max_batch: cfg.max_batch.max(1),
             max_wait: Duration::from_micros(cfg.max_wait_us),
         };
-        std::thread::Builder::new()
-            .name("icq-batcher".into())
-            .spawn(move || run_batcher(ingress_rx, batch_tx, policy))
-            .expect("spawn batcher");
+        spawn_named("icq-batcher", move || {
+            run_batcher(ingress_rx, batch_tx, policy)
+        });
 
         let mut worker_txs = Vec::new();
         let mut loads = Vec::new();
@@ -90,16 +89,12 @@ impl Coordinator {
             worker_txs.push(tx);
             loads.push(load.clone());
             let (s, m) = (searcher.clone(), metrics.clone());
-            std::thread::Builder::new()
-                .name(format!("icq-worker-{id}"))
-                .spawn(move || run_worker(id, rx, s, m, load))
-                .expect("spawn worker");
+            spawn_named(&format!("icq-worker-{id}"), move || {
+                run_worker(id, rx, s, m, load)
+            });
         }
         let router = Router::new(worker_txs, loads);
-        std::thread::Builder::new()
-            .name("icq-router".into())
-            .spawn(move || run_router(batch_rx, router))
-            .expect("spawn router");
+        spawn_named("icq-router", move || run_router(batch_rx, router));
 
         Coordinator {
             ingress: ingress_tx,
@@ -171,12 +166,10 @@ impl Coordinator {
         let Some(_permit) = self.admission.try_admit() else {
             self.metrics
                 .queries_rejected
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                .fetch_add(1, Ordering::Relaxed);
             anyhow::bail!("overloaded: admission limit reached");
         };
-        self.metrics
-            .queries_in
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.queries_in.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::sync_channel(1);
         let pending = PendingQuery {
             vector: req.vector,
@@ -200,7 +193,7 @@ impl Coordinator {
         for stream in listener.incoming() {
             let Ok(sock) = stream else { continue };
             let me = self.clone();
-            std::thread::spawn(move || {
+            thread::spawn(move || {
                 let mut writer = match sock.try_clone() {
                     Ok(w) => w,
                     Err(_) => return,
@@ -279,8 +272,8 @@ pub fn closed_loop_load(
     top_k: usize,
 ) -> f64 {
     let start = Instant::now();
-    let ok = std::sync::atomic::AtomicU64::new(0);
-    std::thread::scope(|scope| {
+    let ok = AtomicU64::new(0);
+    thread::scope(|scope| {
         for t in 0..threads {
             let coord = coord.clone();
             let make_query = &make_query;
@@ -289,13 +282,13 @@ pub fn closed_loop_load(
                 for i in 0..queries_per_thread {
                     let vector = make_query(t * queries_per_thread + i);
                     if coord.query(QueryRequest { vector, top_k }).is_ok() {
-                        ok.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        ok.fetch_add(1, Ordering::Relaxed);
                     }
                 }
             });
         }
     });
-    let done = ok.load(std::sync::atomic::Ordering::Relaxed);
+    let done = ok.load(Ordering::Relaxed);
     done as f64 / start.elapsed().as_secs_f64()
 }
 

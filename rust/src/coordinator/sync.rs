@@ -1,0 +1,41 @@
+//! The coordinator's single doorway to sync primitives.
+//!
+//! **Shim rule (enforced by `cargo xtask lint`):** no module under
+//! `coordinator/` other than this one may import `std::sync` or
+//! `std::thread` directly. Everything goes through `super::sync`, so
+//! the blocking primitives the serving layer is built on are the
+//! model-aware types from [`crate::modelcheck::sync`] — in production
+//! they delegate straight to `std` (one `Option` check of overhead),
+//! and inside `modelcheck::model` every lock/unlock/wait/notify becomes
+//! a schedule point that `tests/loom_models.rs` explores exhaustively.
+//!
+//! What is deliberately **not** modeled (plain `std` re-exports):
+//!
+//! * [`atomic`] — the coordinator uses atomics for monotone metrics
+//!   counters and load gauges; models assert on their *final* values.
+//! * [`mpsc`] — queue plumbing whose blocking behavior the chaos suite
+//!   exercises end to end; models needing a channel build one from the
+//!   modeled `Mutex` + `Condvar`.
+//! * [`thread`] — OS thread spawn/join/sleep. Models use
+//!   `modelcheck::spawn` instead, which participates in scheduling.
+
+pub use crate::modelcheck::sync::{Condvar, Mutex, MutexGuard};
+pub use std::sync::atomic;
+pub use std::sync::mpsc;
+pub use std::sync::{Arc, Weak};
+pub use std::thread;
+
+/// Spawn a named OS thread, panicking with a descriptive message if
+/// the OS refuses — the coordinator's threads are all load-bearing, so
+/// a failed spawn is fatal by design (and this keeps `unwrap`/`expect`
+/// out of the request paths the lint guards).
+pub fn spawn_named<F, T>(name: &str, f: F) -> thread::JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .unwrap_or_else(|e| panic!("failed to spawn thread '{name}': {e}"))
+}

@@ -66,8 +66,6 @@
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -75,6 +73,8 @@ use anyhow::Result;
 use super::backend::{ShardBackend, ShardJob};
 use super::metrics::RemoteMetrics;
 use super::pool::{PoolOpts, RemoteEndpoint};
+use super::sync::atomic::{AtomicUsize, Ordering};
+use super::sync::{thread, Arc};
 use crate::config::SearchConfig;
 use crate::core::{Hit, Matrix};
 use crate::index::search_icq::{self, IcqSearchOpts};
@@ -896,7 +896,7 @@ pub fn serve_shard_with(
             Err(_) => {
                 // transient accept failures (e.g. fd exhaustion) must
                 // not busy-spin the accept thread at 100% CPU
-                std::thread::sleep(Duration::from_millis(50));
+                thread::sleep(Duration::from_millis(50));
                 continue;
             }
         };
@@ -911,7 +911,7 @@ pub fn serve_shard_with(
                 refusing.fetch_add(1, Ordering::Relaxed);
                 let refusing = refusing.clone();
                 let limit = opts.max_conns;
-                std::thread::spawn(move || {
+                thread::spawn(move || {
                     let _guard = ConnGuard(refusing);
                     refuse_conn(sock, limit);
                 });
@@ -921,7 +921,7 @@ pub fn serve_shard_with(
         active.fetch_add(1, Ordering::Relaxed);
         let (index, ops, active) = (index.clone(), ops.clone(), active.clone());
         let idle_timeout = opts.idle_timeout;
-        std::thread::spawn(move || {
+        thread::spawn(move || {
             let _guard = ConnGuard(active);
             serve_shard_conn_with(sock, &index, start, &ops, idle_timeout);
         });

@@ -1,13 +1,12 @@
 //! Worker pool: OS threads executing batches against a pluggable searcher.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::Receiver;
-use std::sync::Arc;
-
 use anyhow::Result;
 
 use super::metrics::Metrics;
 use super::server::{PendingQuery, QueryResponse};
+use super::sync::atomic::{AtomicUsize, Ordering};
+use super::sync::mpsc::Receiver;
+use super::sync::Arc;
 use crate::config::SearchConfig;
 use crate::core::parallel::num_threads;
 use crate::core::{Hit, Matrix};

@@ -179,11 +179,15 @@ impl TensorPack {
                 r.read_exact(&mut b)?;
                 dims.push(u64::from_le_bytes(b) as usize);
             }
-            let n: usize = dims.iter().product();
+            let n = dims.iter().try_fold(1usize, |acc, &d| {
+                acc.checked_mul(d)
+            });
+            let Some(n) = n else {
+                bail!("tensor '{name}': element count overflows usize");
+            };
             let tensor = match tag[0] {
                 0 => {
-                    let mut raw = vec![0u8; n * 4];
-                    r.read_exact(&mut raw)?;
+                    let raw = read_payload(r, n, 4, &name)?;
                     let data = raw
                         .chunks_exact(4)
                         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -191,8 +195,7 @@ impl TensorPack {
                     Tensor::F32 { dims, data }
                 }
                 1 => {
-                    let mut raw = vec![0u8; n * 4];
-                    r.read_exact(&mut raw)?;
+                    let raw = read_payload(r, n, 4, &name)?;
                     let data = raw
                         .chunks_exact(4)
                         .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -200,8 +203,7 @@ impl TensorPack {
                     Tensor::I32 { dims, data }
                 }
                 2 => {
-                    let mut raw = vec![0u8; n * 2];
-                    r.read_exact(&mut raw)?;
+                    let raw = read_payload(r, n, 2, &name)?;
                     let data = raw
                         .chunks_exact(2)
                         .map(|c| u16::from_le_bytes([c[0], c[1]]))
@@ -209,8 +211,7 @@ impl TensorPack {
                     Tensor::U16 { dims, data }
                 }
                 3 => {
-                    let mut data = vec![0u8; n];
-                    r.read_exact(&mut data)?;
+                    let data = read_payload(r, n, 1, &name)?;
                     Tensor::U8 { dims, data }
                 }
                 t => bail!("unknown dtype tag {t}"),
@@ -230,6 +231,34 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+/// Read `n * elem` payload bytes in bounded chunks. The declared
+/// element count comes straight from the (possibly corrupt or hostile)
+/// header, so the buffer grows at most [`PAYLOAD_CHUNK`] per
+/// `read_exact` — a snapshot claiming a multi-exabyte tensor against a
+/// short stream fails with an EOF error after one small allocation
+/// instead of attempting the full claimed size up front.
+fn read_payload(
+    r: &mut impl Read,
+    n: usize,
+    elem: usize,
+    name: &str,
+) -> Result<Vec<u8>> {
+    const PAYLOAD_CHUNK: usize = 1 << 20;
+    let Some(total) = n.checked_mul(elem) else {
+        bail!("tensor '{name}': byte length overflows usize");
+    };
+    let mut raw = Vec::new();
+    let mut remaining = total;
+    while remaining > 0 {
+        let step = remaining.min(PAYLOAD_CHUNK);
+        let start = raw.len();
+        raw.resize(start + step, 0);
+        r.read_exact(&mut raw[start..])?;
+        remaining -= step;
+    }
+    Ok(raw)
 }
 
 #[cfg(test)]
@@ -265,6 +294,47 @@ mod tests {
     fn missing_tensor_is_error() {
         let p = TensorPack::new();
         assert!(p.get("nothing").is_err());
+    }
+
+    /// Header bytes for one tensor named "x" of dtype `tag` with `dims`,
+    /// and no payload — the shape of a truncated or hostile snapshot.
+    fn headless_pack(tag: u8, dims: &[u64]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"ICQF");
+        buf.extend_from_slice(&1u32.to_le_bytes()); // version
+        buf.extend_from_slice(&1u32.to_le_bytes()); // tensor count
+        buf.extend_from_slice(&1u32.to_le_bytes()); // name length
+        buf.push(b'x');
+        buf.push(tag);
+        buf.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+        for &d in dims {
+            buf.extend_from_slice(&d.to_le_bytes());
+        }
+        buf
+    }
+
+    #[test]
+    fn huge_claimed_tensors_fail_without_allocating_the_claim() {
+        // element count overflows usize
+        let buf = headless_pack(0, &[u64::MAX, 2]);
+        assert!(TensorPack::read_from(&mut &buf[..]).is_err());
+        // byte length (n * 4) overflows usize
+        let buf = headless_pack(0, &[u64::MAX]);
+        assert!(TensorPack::read_from(&mut &buf[..]).is_err());
+        // representable but absurd (4 TiB claimed, zero payload bytes):
+        // must fail at EOF after one bounded chunk, not allocate 4 TiB
+        let buf = headless_pack(0, &[1u64 << 40]);
+        assert!(TensorPack::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        let mut p = TensorPack::new();
+        p.insert_f32("x", vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(TensorPack::read_from(&mut &buf[..]).is_err());
     }
 
     #[test]

@@ -1,0 +1,92 @@
+//! Shared fuzz-target bodies: one function per untrusted input surface,
+//! asserting the library's robustness contract on arbitrary bytes.
+//!
+//! Each function takes raw fuzzer-chosen bytes and must be **total**:
+//! return normally for every input, failing only through the typed
+//! error paths (`WireError`, `VecsError`, `anyhow::Error`) — never a
+//! panic, index/arithmetic overflow, or input-controlled allocation.
+//!
+//! The bodies live in the library (not the fuzz crate) so two harnesses
+//! can drive them:
+//!
+//! * `rust/fuzz/` — the cargo-fuzz crate; each `fuzz_targets/*.rs` is a
+//!   one-line libfuzzer wrapper around one of these functions,
+//!   coverage-guided from the committed corpus seeds. Excluded from the
+//!   root workspace (needs the nightly-only libfuzzer runtime).
+//! * `tests/fuzz_smoke.rs` — a deterministic tier-1 test sweeping the
+//!   same bodies over seed inputs and xorshift-derived mutations, so
+//!   every CI run exercises the exact code the fuzzers hammer.
+
+use crate::coordinator::wire::{read_frame, write_frame};
+use crate::data::format::TensorPack;
+use crate::data::realworld::{parse_bvecs, parse_fvecs, parse_ivecs};
+use crate::index::ivf::load_index;
+use crate::index::shard::load_shard_pack;
+use crate::index::EncodedIndex;
+
+/// Upper bound on frames decoded per input: a stream of tiny valid
+/// frames decodes O(len) of them, so unbounded looping would make the
+/// fuzzer's wall-clock input-controlled.
+const MAX_FRAMES: usize = 64;
+
+/// Wire frame decode (`coordinator::wire::read_frame`) over arbitrary
+/// bytes: every outcome is `Ok(frame)` or a typed [`WireError`] — no
+/// panic, no allocation proportional to a lying length prefix. Any
+/// successfully decoded frame must survive an encode/decode round trip
+/// (what the server writes, the client can always read).
+pub fn fuzz_wire_frame(data: &[u8]) {
+    let mut r = data;
+    for _ in 0..MAX_FRAMES {
+        match read_frame(&mut r) {
+            Ok(frame) => {
+                let mut buf = Vec::new();
+                write_frame(&mut buf, &frame)
+                    .expect("encoding a decoded frame into a Vec cannot fail");
+                read_frame(&mut &buf[..])
+                    .expect("re-decoding an encoded frame cannot fail");
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// fvecs/bvecs/ivecs parsers over arbitrary bytes: `Ok` or a typed
+/// [`VecsError`](crate::data::realworld::VecsError), never a panic or
+/// a header-driven overallocation. A parse that succeeds must be
+/// internally consistent (flat data sized `rows * cols`; uniform
+/// ground-truth row lengths).
+pub fn fuzz_vecs(data: &[u8]) {
+    if let Ok(m) = parse_fvecs(data) {
+        assert_eq!(m.as_slice().len(), m.rows() * m.cols());
+    }
+    if let Ok(m) = parse_bvecs(data) {
+        assert_eq!(m.as_slice().len(), m.rows() * m.cols());
+    }
+    if let Ok(rows) = parse_ivecs(data) {
+        if let Some(first) = rows.first() {
+            assert!(rows.iter().all(|r| r.len() == first.len()));
+        }
+    }
+}
+
+/// Snapshot validation over arbitrary bytes: the icqfmt container
+/// parse, then — when the container parses — every snapshot loader
+/// (`EncodedIndex::from_pack`, the flat/IVF `load_index`, the
+/// shard-server `load_shard_pack`) must return a `Result`, never panic,
+/// on whatever tensors the bytes happened to spell. A parsed container
+/// must also survive a write/read round trip bit-for-bit.
+pub fn fuzz_snapshot_pack(data: &[u8]) {
+    let Ok(pack) = TensorPack::read_from(&mut &data[..]) else {
+        return;
+    };
+    let mut buf = Vec::new();
+    pack.write_to(&mut buf)
+        .expect("serializing a parsed pack into a Vec cannot fail");
+    let back = TensorPack::read_from(&mut &buf[..])
+        .expect("re-reading a serialized pack cannot fail");
+    assert_eq!(pack, back, "icqfmt parse/print round trip diverged");
+
+    let _ = EncodedIndex::from_pack(&pack);
+    let _ = load_index(&pack);
+    let _ = load_shard_pack(&pack);
+}

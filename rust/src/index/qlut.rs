@@ -185,6 +185,12 @@ fn block_qsums_lookup(
     for t in 0..qlut.books() {
         let row = qlut.row(t);
         let codes = &blk[(k0 + t) * bs..(k0 + t + 1) * bs];
+        debug_assert!(
+            codes.iter().all(|&c| (c as usize) < qlut.m()),
+            "block carries a code >= m = {} in book {}",
+            qlut.m(),
+            k0 + t
+        );
         let mut acc4 = acc.chunks_exact_mut(4);
         let mut codes4 = codes.chunks_exact(4);
         for (a, c) in (&mut acc4).zip(&mut codes4) {
@@ -223,6 +229,15 @@ mod x86 {
         acc: &mut [u16],
     ) {
         debug_assert!(bs % 32 == 0 && acc.len() == bs);
+        debug_assert!(blk.len() >= (k0 + tables.len()) * bs);
+        // the shuffle selects tbl[code & 0x0F] with the high bit
+        // clearing the lane — any code >= 16 would silently read a pad
+        // entry (or zero) instead of faulting, so the bound the gather
+        // relies on is asserted here, not just documented.
+        debug_assert!(
+            blk[k0 * bs..(k0 + tables.len()) * bs].iter().all(|&c| c < 16),
+            "shuffle kernel requires every code < 16"
+        );
         acc.fill(0);
         for (t, tbl_bytes) in tables.iter().enumerate() {
             let tbl = _mm256_broadcastsi128_si256(_mm_loadu_si128(
@@ -289,6 +304,13 @@ enum Kernel {
 }
 
 fn pick_kernel(qlut: &QLut, bs: usize) -> Kernel {
+    // Miri interprets MIR and cannot execute AVX2 intrinsics (or trust
+    // runtime feature detection); force the portable kernel so the
+    // whole quantized sweep — and every test built on it — runs under
+    // `cargo miri test`.
+    if cfg!(miri) {
+        return Kernel::Portable;
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if is_x86_feature_detected!("avx2") {

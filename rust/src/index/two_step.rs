@@ -173,8 +173,20 @@ pub fn refine_range_from_crude_lb(
     top_k: usize,
     ops: &OpCounter,
 ) -> Vec<Hit> {
-    refine_impl(codes, crude, row0, margin, top_k, k_books, ops, |row, _| {
-        lut.partial_sum(row, 0, k_books)
+    refine_impl(codes, crude, row0, margin, top_k, k_books, ops, |row, lb| {
+        let full = lut.partial_sum(row, 0, k_books);
+        // The chain the two-step prune stands on (see the qlut module
+        // docs): dequantized quantized-crude <= f32 crude partial sum
+        // <= full ADC distance, up to f32 round-off in the dequantize
+        // multiply-add. A violation here means a quantizer regression
+        // that could silently drop true neighbors, so it is asserted on
+        // every refined candidate in debug builds.
+        debug_assert!(
+            lb <= full + 1e-4 * full.abs().max(1.0),
+            "lower-bound chain violated: quantized crude {lb} > full \
+             ADC distance {full}"
+        );
+        full
     })
 }
 

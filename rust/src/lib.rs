@@ -18,7 +18,12 @@
 //! * [`runtime`]     — PJRT/XLA artifact loading + execution (the AOT
 //!                     bridge to the JAX/Pallas compute graphs);
 //! * [`bench`]       — the figure/table regeneration harness;
-//! * [`config`]      — engine configuration.
+//! * [`config`]      — engine configuration;
+//! * [`modelcheck`]  — in-tree exhaustive interleaving checker behind
+//!                     the [`coordinator::sync`] primitives;
+//! * [`fuzzing`]     — panic-safety entry points over the untrusted-
+//!                     input parsers, shared by the `rust/fuzz` targets
+//!                     and the deterministic CI smoke test.
 //!
 //! Python (JAX + Pallas) exists only at build time: `make artifacts`
 //! lowers the query-path graphs to HLO text and trains the joint model;
@@ -44,6 +49,8 @@ pub mod coordinator;
 pub mod core;
 pub mod data;
 pub mod eval;
+pub mod fuzzing;
 pub mod index;
+pub mod modelcheck;
 pub mod quantizer;
 pub mod runtime;

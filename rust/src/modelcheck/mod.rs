@@ -1,0 +1,710 @@
+//! In-tree exhaustive interleaving model checker (a minimal loom).
+//!
+//! The vendored registry carries no `loom`, so this module implements
+//! the same idea from scratch: run a small concurrent *model* — a
+//! closure that spawns a few threads and exercises [`sync::Mutex`] /
+//! [`sync::Condvar`] — under **every** schedule the primitives allow,
+//! and fail on the first interleaving that panics, asserts, or
+//! deadlocks. The coordinator's concurrency hot spots route their lock
+//! traffic through `coordinator::sync`, whose `Mutex`/`Condvar` are the
+//! model-aware types defined here, so the exact production types are
+//! what the models in `tests/loom_models.rs` explore.
+//!
+//! # How it works
+//!
+//! Each schedule runs the model closure on real OS threads, but only
+//! one thread is ever *runnable*: a token-passing scheduler blocks
+//! every participant except the current one, and every sync operation
+//! (lock, unlock, condvar wait/notify, spawn, join) is a *schedule
+//! point* where the scheduler picks which participant runs next. The
+//! sequence of picks is recorded as a trace of `(choice, n_options)`
+//! pairs; after a schedule completes, the next schedule replays the
+//! longest prefix with the last branchable choice advanced —
+//! depth-first search over the full schedule tree. Exploration is
+//! exhaustive up to the documented modeling limits, and terminates
+//! because every model runs a finite number of schedule points.
+//!
+//! A deadlock (no participant runnable, not all done) is detected and
+//! reported with the failing schedule; so is the first panic raised by
+//! any participant (assertion failures inside models are how invariant
+//! violations surface).
+//!
+//! # Modeling limits
+//!
+//! * Only `sync::Mutex` and `sync::Condvar` create schedule points.
+//!   Atomics and `mpsc` channels are deliberately *not* modeled: the
+//!   coordinator uses atomics for monotone metrics counters and load
+//!   gauges, and `mpsc` for queue plumbing whose blocking behavior the
+//!   chaos suite exercises end to end. Models that need a channel build
+//!   one from the modeled mutex + condvar (see `tests/loom_models.rs`).
+//! * Condvar waits have no spurious wakeups; `notify_one`'s choice of
+//!   waiter *is* explored as a schedule choice.
+//! * Models must be deterministic: no wall-clock branching, no OS
+//!   randomness. Capture `Instant::now()` once per schedule and pass it
+//!   around if time values are needed.
+//! * Mutexes and condvars must be **created inside** the model closure
+//!   (they register with the running schedule); keep models small —
+//!   two or three threads and a handful of lock sessions each. The
+//!   schedule count is the number of interleavings of the schedule
+//!   points, which grows combinatorially.
+//!
+//! Under `RUSTFLAGS="--cfg loom"` the schedule budget is raised (see
+//! [`ModelOpts`]); the exploration itself is identical, so the models
+//! in `tests/loom_models.rs` run on plain `cargo test` too.
+
+pub mod sync;
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as OsCondvar, Mutex as OsMutex, MutexGuard as OsMutexGuard};
+
+/// Panic payload used to unwind participants of an already-failed
+/// schedule; never reported as the failure itself.
+const ABORT_MSG: &str = "__modelcheck_schedule_aborted__";
+
+/// What a participant thread is doing, from the scheduler's view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TState {
+    /// Can run user code when given the token.
+    Runnable,
+    /// Blocked acquiring mutex `.0`; runnable once it is free.
+    WantsLock(usize),
+    /// Parked on condvar `cv`, will re-acquire `mutex` when notified.
+    WaitingCv { cv: usize, mutex: usize },
+    /// Blocked joining participant `.0`; runnable once it is done.
+    Joining(usize),
+    /// Finished (returned or unwound).
+    Done,
+}
+
+/// Scheduler state for one schedule of one model.
+struct Inner {
+    threads: Vec<TState>,
+    /// The participant holding the run token.
+    cur: usize,
+    /// Ledger of mutex ownership (index = registration order).
+    mutex_owner: Vec<Option<usize>>,
+    /// Condvars registered so far (waiters live in `threads`).
+    n_condvars: usize,
+    /// Forced choices replayed from the previous schedule.
+    prefix: Vec<usize>,
+    /// Choices taken so far this schedule.
+    depth: usize,
+    /// `(choice, n_options)` per schedule point, for DFS backtracking.
+    trace: Vec<(u32, u32)>,
+    /// First failure (panic message or deadlock report), if any.
+    failure: Option<String>,
+    /// OS handles of spawned participants, joined by the driver.
+    handles: Vec<std::thread::JoinHandle<()>>,
+    max_threads: usize,
+}
+
+/// One schedule's shared scheduler: every sync operation funnels here.
+pub(crate) struct Shared {
+    inner: OsMutex<Inner>,
+    cv: OsCondvar,
+}
+
+impl Shared {
+    fn new(prefix: Vec<usize>, max_threads: usize) -> Self {
+        Shared {
+            inner: OsMutex::new(Inner {
+                threads: vec![TState::Runnable],
+                cur: 0,
+                mutex_owner: Vec::new(),
+                n_condvars: 0,
+                prefix,
+                depth: 0,
+                trace: Vec::new(),
+                failure: None,
+                handles: Vec::new(),
+                max_threads,
+            }),
+            cv: OsCondvar::new(),
+        }
+    }
+}
+
+/// A participant's identity within a running schedule.
+#[derive(Clone)]
+pub(crate) struct Participant {
+    pub(crate) shared: Arc<Shared>,
+    pub(crate) id: usize,
+}
+
+thread_local! {
+    static PARTICIPANT: RefCell<Option<Participant>> = RefCell::new(None);
+}
+
+/// The participant registration of the calling thread, if it is one.
+pub(crate) fn current() -> Option<Participant> {
+    PARTICIPANT.with(|p| p.borrow().clone())
+}
+
+fn locki(shared: &Shared) -> OsMutexGuard<'_, Inner> {
+    // poison-tolerant: a participant that panicked while the scheduler
+    // lock was held (impossible in normal operation) must not cascade.
+    shared
+        .inner
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Take the next choice at a branch with `n` options: replayed from the
+/// prefix while it lasts, option 0 afterwards (DFS leftmost descent).
+fn choice(inner: &mut Inner, n: usize) -> usize {
+    let pick = if inner.depth < inner.prefix.len() {
+        inner.prefix[inner.depth].min(n - 1)
+    } else {
+        0
+    };
+    inner.trace.push((pick as u32, n as u32));
+    inner.depth += 1;
+    pick
+}
+
+fn enabled(inner: &Inner) -> Vec<usize> {
+    inner
+        .threads
+        .iter()
+        .enumerate()
+        .filter(|&(_, &st)| match st {
+            TState::Runnable => true,
+            TState::WantsLock(m) => inner.mutex_owner[m].is_none(),
+            TState::Joining(c) => inner.threads[c] == TState::Done,
+            TState::WaitingCv { .. } | TState::Done => false,
+        })
+        .map(|(t, _)| t)
+        .collect()
+}
+
+/// Pick (and unblock) the next participant to run. Reports a deadlock
+/// when nobody is enabled but the schedule has not finished.
+fn schedule_next(inner: &mut Inner) {
+    if inner.failure.is_some() {
+        return;
+    }
+    let en = enabled(inner);
+    if en.is_empty() {
+        if inner.threads.iter().all(|&t| t == TState::Done) {
+            return; // schedule complete
+        }
+        inner.failure = Some(format!(
+            "deadlock: no participant is runnable (states: {:?}, \
+             mutex owners: {:?})",
+            inner.threads, inner.mutex_owner
+        ));
+        return;
+    }
+    let t = en[choice(inner, en.len())];
+    match inner.threads[t] {
+        TState::WantsLock(m) => {
+            inner.mutex_owner[m] = Some(t);
+            inner.threads[t] = TState::Runnable;
+        }
+        TState::Joining(_) => inner.threads[t] = TState::Runnable,
+        TState::Runnable => {}
+        TState::WaitingCv { .. } | TState::Done => {
+            unreachable!("scheduled a blocked participant")
+        }
+    }
+    inner.cur = t;
+}
+
+/// Apply `update` to the scheduler state, pass the token, and block
+/// until this participant is scheduled again. The workhorse behind
+/// every blocking sync operation.
+pub(crate) fn yield_point(p: &Participant, update: impl FnOnce(&mut Inner)) {
+    let mut inner = locki(&p.shared);
+    update(&mut inner);
+    schedule_next(&mut inner);
+    p.shared.cv.notify_all();
+    loop {
+        if inner.failure.is_some() {
+            drop(inner);
+            p.shared.cv.notify_all();
+            panic!("{ABORT_MSG}");
+        }
+        if inner.cur == p.id && inner.threads[p.id] == TState::Runnable {
+            return;
+        }
+        inner = p
+            .shared
+            .cv
+            .wait(inner)
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+    }
+}
+
+/// Block until mutex `m` is granted to this participant.
+pub(crate) fn acquire_mutex(p: &Participant, m: usize) {
+    let id = p.id;
+    yield_point(p, |inner| inner.threads[id] = TState::WantsLock(m));
+}
+
+/// Try to take mutex `m` without blocking; schedule point either way.
+pub(crate) fn try_acquire_mutex(p: &Participant, m: usize) -> bool {
+    yield_point(p, |_| {});
+    let mut inner = locki(&p.shared);
+    if inner.mutex_owner[m].is_none() {
+        inner.mutex_owner[m] = Some(p.id);
+        true
+    } else {
+        false
+    }
+}
+
+/// Release mutex `m`. A schedule point in normal operation; during a
+/// failed schedule or a panic unwind it only frees the ledger slot
+/// (panicking inside `Drop` would abort the process).
+pub(crate) fn release_mutex(p: &Participant, m: usize) {
+    let mut inner = locki(&p.shared);
+    if inner.mutex_owner[m] == Some(p.id) {
+        inner.mutex_owner[m] = None;
+    }
+    if inner.failure.is_some() || std::thread::panicking() {
+        drop(inner);
+        p.shared.cv.notify_all();
+        return;
+    }
+    schedule_next(&mut inner);
+    p.shared.cv.notify_all();
+    loop {
+        if inner.failure.is_some() {
+            drop(inner);
+            p.shared.cv.notify_all();
+            panic!("{ABORT_MSG}");
+        }
+        if inner.cur == p.id && inner.threads[p.id] == TState::Runnable {
+            return;
+        }
+        inner = p
+            .shared
+            .cv
+            .wait(inner)
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+    }
+}
+
+/// Register a model mutex; returns its ledger slot.
+pub(crate) fn register_mutex(p: &Participant) -> usize {
+    let mut inner = locki(&p.shared);
+    inner.mutex_owner.push(None);
+    inner.mutex_owner.len() - 1
+}
+
+/// Register a model condvar; returns its id.
+pub(crate) fn register_condvar(p: &Participant) -> usize {
+    let mut inner = locki(&p.shared);
+    inner.n_condvars += 1;
+    inner.n_condvars - 1
+}
+
+/// Park on condvar `cvid`, releasing mutex `m`; returns with `m`
+/// re-acquired after a notify reaches this participant.
+pub(crate) fn cv_wait(p: &Participant, cvid: usize, m: usize) {
+    let id = p.id;
+    yield_point(p, |inner| {
+        debug_assert_eq!(inner.mutex_owner[m], Some(id), "cv wait without the lock");
+        inner.mutex_owner[m] = None;
+        inner.threads[id] = TState::WaitingCv { cv: cvid, mutex: m };
+    });
+}
+
+/// Notify one (scheduler's choice — explored) or all waiters of
+/// condvar `cvid`; each woken waiter re-contends for its mutex.
+pub(crate) fn cv_notify(p: &Participant, cvid: usize, all: bool) {
+    {
+        let mut inner = locki(&p.shared);
+        let waiters: Vec<usize> = inner
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|&(_, &st)| matches!(st, TState::WaitingCv { cv, .. } if cv == cvid))
+            .map(|(t, _)| t)
+            .collect();
+        let chosen: Vec<usize> = if waiters.is_empty() {
+            Vec::new()
+        } else if all {
+            waiters
+        } else {
+            let pick = choice(&mut inner, waiters.len());
+            vec![waiters[pick]]
+        };
+        for t in chosen {
+            if let TState::WaitingCv { mutex, .. } = inner.threads[t] {
+                inner.threads[t] = TState::WantsLock(mutex);
+            }
+        }
+    }
+    yield_point(p, |_| {});
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "participant panicked with a non-string payload".to_string()
+    }
+}
+
+/// Body of every participant OS thread: register, wait for the first
+/// turn, run the user closure with panic containment, then hand the
+/// token on.
+fn participant_main<F: FnOnce()>(p: Participant, f: F) {
+    PARTICIPANT.with(|tl| *tl.borrow_mut() = Some(p.clone()));
+    {
+        let mut inner = locki(&p.shared);
+        loop {
+            if inner.failure.is_some() {
+                // schedule already failed: never run the user closure
+                inner.threads[p.id] = TState::Done;
+                schedule_next(&mut inner);
+                drop(inner);
+                p.shared.cv.notify_all();
+                return;
+            }
+            if inner.cur == p.id && inner.threads[p.id] == TState::Runnable {
+                break;
+            }
+            inner = p
+                .shared
+                .cv
+                .wait(inner)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+    let result = catch_unwind(AssertUnwindSafe(f));
+    let mut inner = locki(&p.shared);
+    for owner in inner.mutex_owner.iter_mut() {
+        if *owner == Some(p.id) {
+            *owner = None;
+        }
+    }
+    inner.threads[p.id] = TState::Done;
+    if let Err(payload) = result {
+        let msg = panic_message(payload.as_ref());
+        if msg != ABORT_MSG && inner.failure.is_none() {
+            inner.failure = Some(msg);
+        }
+    }
+    schedule_next(&mut inner);
+    drop(inner);
+    p.shared.cv.notify_all();
+}
+
+/// Handle to a participant spawned with [`spawn`]. Join happens at the
+/// scheduler level; the OS thread itself is joined by the driver.
+pub struct JoinHandle {
+    id: usize,
+}
+
+impl JoinHandle {
+    /// Block (as a schedule point) until the participant finishes.
+    pub fn join(self) {
+        let p = current()
+            .unwrap_or_else(|| panic!("modelcheck::JoinHandle::join outside model()"));
+        let id = self.id;
+        let me = p.id;
+        yield_point(&p, |inner| inner.threads[me] = TState::Joining(id));
+    }
+}
+
+/// Spawn a participant thread inside a running model. Panics when
+/// called outside [`model`].
+pub fn spawn<F>(f: F) -> JoinHandle
+where
+    F: FnOnce() + Send + 'static,
+{
+    let p = current().unwrap_or_else(|| panic!("modelcheck::spawn outside model()"));
+    let id;
+    {
+        let mut inner = locki(&p.shared);
+        id = inner.threads.len();
+        assert!(
+            id < inner.max_threads,
+            "model spawned more than {} threads",
+            inner.max_threads
+        );
+        inner.threads.push(TState::Runnable);
+        let child = Participant { shared: p.shared.clone(), id };
+        let handle = std::thread::Builder::new()
+            .name(format!("modelcheck-{id}"))
+            .spawn(move || participant_main(child, f))
+            .unwrap_or_else(|e| panic!("modelcheck participant spawn failed: {e}"));
+        inner.handles.push(handle);
+    }
+    // schedule point: the child starting first is an explored ordering
+    yield_point(&p, |_| {});
+    JoinHandle { id }
+}
+
+/// Exploration bounds for [`model_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct ModelOpts {
+    /// Hard cap on explored schedules; exceeding it fails the model
+    /// (shrink the model rather than raising the cap — exploration is
+    /// only meaningful when it completes).
+    pub max_schedules: usize,
+    /// Hard cap on participants per schedule.
+    pub max_threads: usize,
+}
+
+impl Default for ModelOpts {
+    fn default() -> Self {
+        ModelOpts {
+            // `--cfg loom` runs get a deeper budget; either way the
+            // exploration is exhaustive or the model fails loudly.
+            max_schedules: if cfg!(loom) { 500_000 } else { 100_000 },
+            max_threads: 8,
+        }
+    }
+}
+
+/// Run `f` under every schedule its sync operations allow (see the
+/// module docs). Panics on the first schedule that fails, reporting
+/// the failure and the choice sequence that reached it.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    model_with(ModelOpts::default(), f);
+}
+
+/// [`model`] with explicit exploration bounds.
+pub fn model_with<F>(opts: ModelOpts, f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut schedules = 0usize;
+    loop {
+        schedules += 1;
+        assert!(
+            schedules <= opts.max_schedules,
+            "modelcheck: exceeded {} schedules — shrink the model",
+            opts.max_schedules
+        );
+        let shared = Arc::new(Shared::new(prefix.clone(), opts.max_threads));
+        let root = Participant { shared: shared.clone(), id: 0 };
+        let f0 = Arc::clone(&f);
+        let h0 = std::thread::Builder::new()
+            .name("modelcheck-0".into())
+            .spawn(move || participant_main(root, move || (*f0)()))
+            .unwrap_or_else(|e| panic!("modelcheck root spawn failed: {e}"));
+        let _ = h0.join();
+        // children keep running after the root returns; drain until the
+        // schedule has fully quiesced (spawn pushes while we pop)
+        loop {
+            let handle = locki(&shared).handles.pop();
+            match handle {
+                Some(h) => {
+                    let _ = h.join();
+                }
+                None => break,
+            }
+        }
+        let (failure, trace) = {
+            let inner = locki(&shared);
+            (inner.failure.clone(), inner.trace.clone())
+        };
+        if let Some(msg) = failure {
+            let sched: Vec<u32> = trace.iter().map(|&(c, _)| c).collect();
+            panic!(
+                "modelcheck: schedule #{schedules} {sched:?} failed: {msg}"
+            );
+        }
+        match next_prefix(&trace) {
+            Some(next) => prefix = next,
+            None => break, // leftmost-descent tree exhausted
+        }
+    }
+}
+
+/// Lexicographic successor of `trace` in the schedule tree: the longest
+/// prefix whose last choice can be advanced. `None` when exploration
+/// is complete.
+fn next_prefix(trace: &[(u32, u32)]) -> Option<Vec<usize>> {
+    for i in (0..trace.len()).rev() {
+        let (c, n) = trace[i];
+        if c + 1 < n {
+            let mut p: Vec<usize> =
+                trace[..i].iter().map(|&(c, _)| c as usize).collect();
+            p.push((c + 1) as usize);
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::{Condvar, Mutex};
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+    /// Two increments under one lock session each: every interleaving
+    /// must end at 2, and the critical sections must never overlap.
+    #[test]
+    fn mutual_exclusion_holds_in_every_schedule() {
+        model(|| {
+            let counter = Arc::new(Mutex::new(0i32));
+            let in_crit = Arc::new(AtomicBool::new(false));
+            let spawn_one = |counter: Arc<Mutex<i32>>, in_crit: Arc<AtomicBool>| {
+                spawn(move || {
+                    let mut g = counter.lock().unwrap();
+                    assert!(
+                        !in_crit.swap(true, Ordering::SeqCst),
+                        "two participants inside the critical section"
+                    );
+                    *g += 1;
+                    in_crit.store(false, Ordering::SeqCst);
+                    drop(g);
+                })
+            };
+            let h1 = spawn_one(counter.clone(), in_crit.clone());
+            let h2 = spawn_one(counter.clone(), in_crit.clone());
+            h1.join();
+            h2.join();
+            assert_eq!(*counter.lock().unwrap(), 2);
+        });
+    }
+
+    /// A read-then-write race (two separate lock sessions) must be
+    /// *found*: some schedule loses an update, some schedule doesn't.
+    /// This is the canary that exploration actually branches.
+    #[test]
+    fn exploration_finds_a_seeded_lost_update() {
+        let saw_lost = Arc::new(AtomicBool::new(false));
+        let saw_both = Arc::new(AtomicBool::new(false));
+        let (lost, both) = (saw_lost.clone(), saw_both.clone());
+        model(move || {
+            let cell = Arc::new(Mutex::new(0i32));
+            let racer = |cell: Arc<Mutex<i32>>| {
+                spawn(move || {
+                    let read = *cell.lock().unwrap(); // session 1: read
+                    *cell.lock().unwrap() = read + 1; // session 2: write
+                })
+            };
+            let h1 = racer(cell.clone());
+            let h2 = racer(cell.clone());
+            h1.join();
+            h2.join();
+            match *cell.lock().unwrap() {
+                1 => lost.store(true, Ordering::SeqCst),
+                2 => both.store(true, Ordering::SeqCst),
+                v => panic!("impossible final value {v}"),
+            }
+        });
+        assert!(saw_lost.load(Ordering::SeqCst), "lost-update schedule never explored");
+        assert!(saw_both.load(Ordering::SeqCst), "clean schedule never explored");
+    }
+
+    /// Opposite lock orders deadlock in some interleaving; the checker
+    /// must report it rather than hang.
+    #[test]
+    fn deadlock_is_detected_and_reported() {
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            model(|| {
+                let a = Arc::new(Mutex::new(()));
+                let b = Arc::new(Mutex::new(()));
+                let h1 = {
+                    let (a, b) = (a.clone(), b.clone());
+                    spawn(move || {
+                        let _ga = a.lock().unwrap();
+                        let _gb = b.lock().unwrap();
+                    })
+                };
+                let h2 = {
+                    let (a, b) = (a.clone(), b.clone());
+                    spawn(move || {
+                        let _gb = b.lock().unwrap();
+                        let _ga = a.lock().unwrap();
+                    })
+                };
+                h1.join();
+                h2.join();
+            });
+        }));
+        let msg = panic_message(result.expect_err("AB/BA locks must deadlock somewhere").as_ref());
+        assert!(msg.contains("deadlock"), "wrong failure: {msg}");
+    }
+
+    /// Producer/consumer over Mutex + Condvar: the consumer must see
+    /// the value in every schedule, including notify-before-wait.
+    #[test]
+    fn condvar_handoff_never_loses_the_wakeup() {
+        model(|| {
+            let slot = Arc::new((Mutex::new(None::<i32>), Condvar::new()));
+            let producer = {
+                let slot = slot.clone();
+                spawn(move || {
+                    let (m, cv) = &*slot;
+                    *m.lock().unwrap() = Some(42);
+                    cv.notify_one();
+                })
+            };
+            let (m, cv) = &*slot;
+            let mut g = m.lock().unwrap();
+            while g.is_none() {
+                g = cv.wait(g).unwrap();
+            }
+            assert_eq!(*g, Some(42));
+            drop(g);
+            producer.join();
+        });
+    }
+
+    /// An invariant violation reachable only through a specific
+    /// interleaving must be reported with the failing schedule.
+    #[test]
+    fn interleaving_dependent_assertion_failure_is_caught() {
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            model(|| {
+                let cell = Arc::new(Mutex::new(0i32));
+                let racer = |cell: Arc<Mutex<i32>>| {
+                    spawn(move || {
+                        let read = *cell.lock().unwrap();
+                        *cell.lock().unwrap() = read + 1;
+                    })
+                };
+                let h1 = racer(cell.clone());
+                let h2 = racer(cell.clone());
+                h1.join();
+                h2.join();
+                // fails exactly on the lost-update interleavings
+                assert_eq!(*cell.lock().unwrap(), 2, "lost update");
+            });
+        }));
+        let msg = panic_message(result.expect_err("lost update must be found").as_ref());
+        assert!(msg.contains("lost update"), "wrong failure: {msg}");
+    }
+
+    /// The same model explores the same number of schedules every time
+    /// — determinism is what makes the DFS replay sound.
+    #[test]
+    fn exploration_is_deterministic() {
+        let count = |out: Arc<AtomicUsize>| {
+            model(move || {
+                out.fetch_add(1, Ordering::SeqCst);
+                let m = Arc::new(Mutex::new(0u32));
+                let h = {
+                    let m = m.clone();
+                    spawn(move || *m.lock().unwrap() += 1)
+                };
+                *m.lock().unwrap() += 1;
+                h.join();
+            });
+        };
+        let a = Arc::new(AtomicUsize::new(0));
+        let b = Arc::new(AtomicUsize::new(0));
+        count(a.clone());
+        count(b.clone());
+        let (na, nb) = (a.load(Ordering::SeqCst), b.load(Ordering::SeqCst));
+        assert_eq!(na, nb, "non-deterministic exploration");
+        assert!(na > 1, "model with a race explored only one schedule");
+    }
+}

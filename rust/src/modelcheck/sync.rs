@@ -1,0 +1,262 @@
+//! Model-aware drop-in replacements for `std::sync::Mutex` and
+//! `std::sync::Condvar`.
+//!
+//! A `Mutex`/`Condvar` created **inside** a running [`super::model`]
+//! registers with that schedule's scheduler: every lock, unlock, wait,
+//! and notify becomes a schedule point the checker explores. Created
+//! anywhere else (production, ordinary tests), the types delegate
+//! straight to their `std` counterparts — the only overhead is one
+//! `Option` check per operation, and the API mirrors `std` so
+//! `coordinator::sync` can re-export them as the coordinator's only
+//! sync primitives.
+//!
+//! Poisoning: the model path never poisons (a participant panic aborts
+//! the schedule through the scheduler instead); the delegating path
+//! forwards `std`'s poison semantics untouched.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, LockResult, PoisonError, TryLockError, TryLockResult};
+use std::sync::{Condvar as OsCondvar, Mutex as OsMutex, MutexGuard as OsMutexGuard};
+
+use super::{
+    acquire_mutex, current, cv_notify, cv_wait, register_condvar, register_mutex,
+    release_mutex, try_acquire_mutex, Participant, Shared,
+};
+
+/// Scheduler registration of a primitive created inside a model.
+struct ModelRef {
+    shared: Arc<Shared>,
+    id: usize,
+}
+
+impl ModelRef {
+    /// The calling thread's participant handle, if it belongs to the
+    /// same schedule this primitive registered with.
+    fn participant(&self) -> Option<Participant> {
+        let p = current()?;
+        if Arc::ptr_eq(&self.shared, &p.shared) {
+            Some(p)
+        } else {
+            None
+        }
+    }
+}
+
+fn register() -> Option<ModelRef> {
+    current().map(|p| ModelRef {
+        id: register_mutex(&p),
+        shared: p.shared,
+    })
+}
+
+fn register_cv() -> Option<ModelRef> {
+    current().map(|p| ModelRef {
+        id: register_condvar(&p),
+        shared: p.shared,
+    })
+}
+
+/// A mutual-exclusion lock with the `std::sync::Mutex` API; modeled as
+/// a schedule point when created inside [`super::model`].
+pub struct Mutex<T> {
+    model: Option<ModelRef>,
+    inner: OsMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    /// Create a new mutex holding `value`.
+    pub fn new(value: T) -> Self {
+        Mutex {
+            model: register(),
+            inner: OsMutex::new(value),
+        }
+    }
+
+    /// Consume the mutex, returning the protected value.
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    /// Acquire the lock, blocking until it is available.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if let Some(p) = self.model.as_ref().and_then(ModelRef::participant) {
+            let slot = self.model.as_ref().map(|m| m.id).unwrap_or(0);
+            acquire_mutex(&p, slot);
+            let guard = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            return Ok(MutexGuard { lock: self, inner: Some(guard) });
+        }
+        match self.inner.lock() {
+            Ok(guard) => Ok(MutexGuard { lock: self, inner: Some(guard) }),
+            Err(poisoned) => Err(PoisonError::new(MutexGuard {
+                lock: self,
+                inner: Some(poisoned.into_inner()),
+            })),
+        }
+    }
+
+    /// Attempt to acquire the lock without blocking.
+    pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+        if let Some(p) = self.model.as_ref().and_then(ModelRef::participant) {
+            let slot = self.model.as_ref().map(|m| m.id).unwrap_or(0);
+            if !try_acquire_mutex(&p, slot) {
+                return Err(TryLockError::WouldBlock);
+            }
+            let guard = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            return Ok(MutexGuard { lock: self, inner: Some(guard) });
+        }
+        match self.inner.try_lock() {
+            Ok(guard) => Ok(MutexGuard { lock: self, inner: Some(guard) }),
+            Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+            Err(TryLockError::Poisoned(poisoned)) => {
+                Err(TryLockError::Poisoned(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(poisoned.into_inner()),
+                })))
+            }
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // debug-format through the OS mutex without a schedule point
+        match self.inner.try_lock() {
+            Ok(guard) => f.debug_struct("Mutex").field("data", &&*guard).finish(),
+            Err(_) => f.debug_struct("Mutex").field("data", &"<locked>").finish(),
+        }
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Mutex::new(T::default())
+    }
+}
+
+/// RAII guard returned by [`Mutex::lock`]; releases on drop (a schedule
+/// point inside a model).
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: Option<OsMutexGuard<'a, T>>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match self.inner.as_ref() {
+            Some(guard) => guard,
+            None => unreachable!("guard accessed after release"),
+        }
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match self.inner.as_mut() {
+            Some(guard) => guard,
+            None => unreachable!("guard accessed after release"),
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for MutexGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // free the OS lock first, then the scheduler's ledger slot —
+        // the next participant granted the ledger must find it free
+        drop(self.inner.take());
+        if let Some(model) = self.lock.model.as_ref() {
+            if let Some(p) = model.participant() {
+                release_mutex(&p, model.id);
+            }
+        }
+    }
+}
+
+/// A condition variable with the `std::sync::Condvar` API; waiter
+/// selection under `notify_one` is itself an explored schedule choice
+/// inside a model.
+pub struct Condvar {
+    model: Option<ModelRef>,
+    inner: OsCondvar,
+}
+
+impl Condvar {
+    /// Create a new condition variable.
+    pub fn new() -> Self {
+        Condvar {
+            model: register_cv(),
+            inner: OsCondvar::new(),
+        }
+    }
+
+    /// Release `guard`'s mutex and park until notified; the mutex is
+    /// re-acquired before returning.
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let lock = guard.lock;
+        if let Some(p) = self.model.as_ref().and_then(ModelRef::participant) {
+            let cvid = self.model.as_ref().map(|m| m.id).unwrap_or(0);
+            let mid = match lock.model.as_ref() {
+                Some(m) => m.id,
+                None => panic!("modeled Condvar waiting on an unmodeled Mutex"),
+            };
+            // release the OS lock by hand and skip the guard's Drop:
+            // cv_wait owns the ledger hand-off for this wait
+            drop(guard.inner.take());
+            std::mem::forget(guard);
+            cv_wait(&p, cvid, mid);
+            let re = lock.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            return Ok(MutexGuard { lock, inner: Some(re) });
+        }
+        let os = match guard.inner.take() {
+            Some(g) => g,
+            None => unreachable!("guard accessed after release"),
+        };
+        std::mem::forget(guard);
+        match self.inner.wait(os) {
+            Ok(re) => Ok(MutexGuard { lock, inner: Some(re) }),
+            Err(poisoned) => Err(PoisonError::new(MutexGuard {
+                lock,
+                inner: Some(poisoned.into_inner()),
+            })),
+        }
+    }
+
+    /// Wake one waiter (scheduler-chosen inside a model).
+    pub fn notify_one(&self) {
+        if let Some(p) = self.model.as_ref().and_then(ModelRef::participant) {
+            let cvid = self.model.as_ref().map(|m| m.id).unwrap_or(0);
+            cv_notify(&p, cvid, false);
+            return;
+        }
+        self.inner.notify_one();
+    }
+
+    /// Wake every waiter.
+    pub fn notify_all(&self) {
+        if let Some(p) = self.model.as_ref().and_then(ModelRef::participant) {
+            let cvid = self.model.as_ref().map(|m| m.id).unwrap_or(0);
+            cv_notify(&p, cvid, true);
+            return;
+        }
+        self.inner.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+impl fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad("Condvar")
+    }
+}

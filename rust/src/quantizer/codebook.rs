@@ -140,10 +140,17 @@ impl Codebooks {
         );
     }
 
-    /// Deserialize from a TensorPack.
+    /// Deserialize from a TensorPack. A real codebook tensor has no
+    /// zero axis; rejecting them here (rather than panicking on an
+    /// `m - 1` underflow or a zero divisor deep in the LUT/blocked
+    /// assembly) keeps every snapshot loader total on corrupt input.
     pub fn from_pack(pack: &TensorPack, prefix: &str) -> anyhow::Result<Self> {
         let (dims, data) = pack.f32(&format!("{prefix}codebooks"))?;
         anyhow::ensure!(dims.len() == 3, "codebooks must be [K, m, d]");
+        anyhow::ensure!(
+            dims.iter().all(|&v| v >= 1),
+            "codebooks dims {dims:?} contain a zero axis"
+        );
         Ok(Codebooks::from_vec(dims[0], dims[1], dims[2], data.to_vec()))
     }
 }

@@ -1,0 +1,110 @@
+//! Deterministic fuzz smoke: drives the shared fuzz-target bodies
+//! (`icq::fuzzing`) over the committed corpus seeds plus xorshift-
+//! derived mutations on every run of the plain test suite. The
+//! coverage-guided fuzzers (`rust/fuzz/`) explore further, but this
+//! sweep guarantees tier-1 CI exercises the exact robustness contracts
+//! the fuzz targets assert — with reproducible inputs.
+
+use std::path::PathBuf;
+
+/// Mutations per corpus seed. Miri interprets ~1000x slower than
+/// native, so it sweeps a reduced (but still corpus-complete) set.
+const ROUNDS: usize = if cfg!(miri) { 6 } else { 150 };
+
+fn corpus(target: &str) -> Vec<Vec<u8>> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("fuzz/corpus")
+        .join(target);
+    let mut seeds = Vec::new();
+    let entries = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {} missing: {e}", dir.display()));
+    let mut paths: Vec<PathBuf> =
+        entries.map(|e| e.unwrap().path()).collect();
+    paths.sort(); // deterministic order
+    for p in paths {
+        seeds.push(std::fs::read(&p).unwrap());
+    }
+    assert!(!seeds.is_empty(), "no seeds committed for {target}");
+    seeds
+}
+
+/// xorshift64* — tiny deterministic PRNG for mutation choices.
+struct XorShift(u64);
+
+impl XorShift {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n.max(1) as u64) as usize
+    }
+}
+
+/// Sweep `body` over every seed, then over [`ROUNDS`] mutated variants
+/// per seed: bit flips, truncations, byte rewrites, and length-changing
+/// splices — the cheap mutations that historically shake out parser
+/// panics (off-by-one bounds, length-prefix trust, overflow).
+fn sweep(target: &str, salt: u64, body: fn(&[u8])) {
+    body(&[]);
+    let seeds = corpus(target);
+    for (si, seed) in seeds.iter().enumerate() {
+        body(seed);
+        let mut rng = XorShift(salt ^ (si as u64).wrapping_mul(0x9E37_79B9));
+        for _ in 0..ROUNDS {
+            let mut m = seed.clone();
+            match rng.below(4) {
+                0 => {
+                    // flip one bit
+                    if !m.is_empty() {
+                        let i = rng.below(m.len());
+                        m[i] ^= 1 << rng.below(8);
+                    }
+                }
+                1 => {
+                    // truncate
+                    let keep = rng.below(m.len() + 1);
+                    m.truncate(keep);
+                }
+                2 => {
+                    // rewrite a short window with random bytes
+                    if !m.is_empty() {
+                        let start = rng.below(m.len());
+                        let end = (start + 1 + rng.below(8)).min(m.len());
+                        for b in &mut m[start..end] {
+                            *b = rng.next() as u8;
+                        }
+                    }
+                }
+                _ => {
+                    // splice a random-length random chunk somewhere
+                    let at = rng.below(m.len() + 1);
+                    let extra: Vec<u8> =
+                        (0..rng.below(16)).map(|_| rng.next() as u8).collect();
+                    m.splice(at..at, extra);
+                }
+            }
+            body(&m);
+        }
+    }
+}
+
+#[test]
+fn wire_frame_decode_survives_seed_mutations() {
+    sweep("wire_frame", 0xD1CE, icq::fuzzing::fuzz_wire_frame);
+}
+
+#[test]
+fn vecs_parsers_survive_seed_mutations() {
+    sweep("vecs", 0xBEEF, icq::fuzzing::fuzz_vecs);
+}
+
+#[test]
+fn snapshot_loaders_survive_seed_mutations() {
+    sweep("snapshot_pack", 0xF00D, icq::fuzzing::fuzz_snapshot_pack);
+}

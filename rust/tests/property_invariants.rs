@@ -9,10 +9,13 @@ use icq::coordinator::wire::{
 use icq::core::json::Json;
 use icq::core::{Hit, Matrix, Rng, TopK};
 use icq::data::format::TensorPack;
+use icq::index::ivf::{load_index, AnyIndex, IvfBuildOpts, IvfIndex};
 use icq::index::lut::{Lut, LutContext};
 use icq::index::search_icq::{self, IcqSearchOpts};
+use icq::index::shard::{load_shard_pack, ShardPolicy, ShardedIndex};
 use icq::index::{search_adc, EncodedIndex, OpCounter};
 use icq::quantizer::icq::{Icq, IcqOpts};
+use icq::quantizer::pq::{Pq, PqOpts};
 use icq::quantizer::Quantizer;
 
 /// Property: for any heteroscedastic dataset / geometry, the two-step
@@ -363,6 +366,130 @@ fn prop_wire_truncation_at_every_prefix_is_typed() {
         }
         // the untruncated frame still parses (sanity)
         assert_eq!(wire::read_frame(&mut &bytes[..]).unwrap(), frame);
+    }
+}
+
+fn pq_index(n: usize, seed: u64) -> (EncodedIndex, Matrix) {
+    let mut rng = Rng::new(seed);
+    let x = Matrix::from_fn(n, 8, |_, _| rng.normal_f32());
+    let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 3, seed: 0 });
+    let labels = (0..n).map(|i| i as i32).collect();
+    (EncodedIndex::build(&pq, &x, labels), x)
+}
+
+fn pack_bytes(pack: &TensorPack) -> Vec<u8> {
+    let mut buf = Vec::new();
+    pack.write_to(&mut buf).unwrap();
+    buf
+}
+
+/// Property: every shard snapshot roundtrips through icqfmt byte-for-
+/// byte and `load_shard_pack` reconstructs the exact placement manifest
+/// (global start row, shard length, sliced labels) for any shard count.
+#[test]
+fn prop_shard_pack_roundtrip_preserves_placement() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed + 71);
+        let n = 150 + rng.below(300);
+        let (index, _) = pq_index(n, seed);
+        let nshards = 1 + rng.below(4);
+        let sharded =
+            ShardedIndex::build(&index, ShardPolicy::Count(nshards)).unwrap();
+        for s in 0..sharded.num_shards() {
+            let pack = sharded.shard_pack(s);
+            let bytes = pack_bytes(&pack);
+            let back = TensorPack::read_from(&mut &bytes[..]).unwrap();
+            assert_eq!(pack, back, "seed {seed} shard {s}");
+            let (loaded, start) = load_shard_pack(&back).unwrap();
+            let spec = sharded.spec(s);
+            assert_eq!(start, spec.start, "seed {seed} shard {s}");
+            assert_eq!(loaded.len(), spec.len(), "seed {seed} shard {s}");
+            // labels were sliced per shard, so the first label is the
+            // shard's global start row (labels are the row ids here)
+            if !loaded.is_empty() {
+                assert_eq!(
+                    loaded.labels[0] as usize,
+                    spec.start,
+                    "seed {seed} shard {s}"
+                );
+            }
+        }
+        // a plain whole-index snapshot (no placement tensors) loads as
+        // the degenerate single shard starting at row 0
+        let (whole, start) = load_shard_pack(&index.to_pack()).unwrap();
+        assert_eq!((whole.len(), start), (n, 0), "seed {seed}");
+    }
+}
+
+/// Property: corrupt placement manifests are rejected with typed errors
+/// — never loaded as silently misnumbered shards.
+#[test]
+fn prop_shard_pack_manifest_corruption_is_rejected() {
+    let (index, x) = pq_index(300, 9);
+    let sharded =
+        ShardedIndex::build(&index, ShardPolicy::Count(3)).unwrap();
+    let good = sharded.shard_pack(1); // non-zero start
+    assert!(load_shard_pack(&good).is_ok());
+
+    // negative start
+    let mut bad = good.clone();
+    bad.insert_i32("shard_start", vec![1], vec![-1]);
+    assert!(load_shard_pack(&bad).is_err());
+
+    // total smaller than start + len
+    let mut bad = good.clone();
+    bad.insert_i32("shard_total", vec![1], vec![1]);
+    assert!(load_shard_pack(&bad).is_err());
+
+    // an IVF snapshot is cell-major: loading it as a flat range shard
+    // would misnumber every row, so the loader must refuse it outright
+    let ivf = IvfIndex::partition(
+        &index,
+        &x,
+        IvfBuildOpts { ncells: 4, iters: 3, seed: 0 },
+    )
+    .unwrap();
+    assert!(load_shard_pack(&ivf.to_pack()).is_err());
+    match load_index(&ivf.to_pack()).unwrap() {
+        AnyIndex::Ivf(i) => assert_eq!(i.n_total(), 300),
+        AnyIndex::Flat(_) => panic!("ivf pack loaded as flat"),
+    }
+}
+
+/// Property: every snapshot loader is total under random single-byte
+/// corruption and truncation of real serialized snapshots — the
+/// deterministic mirror of the `snapshot_pack` fuzz target, run over
+/// all three snapshot flavors (flat, shard, IVF).
+#[test]
+fn prop_snapshot_byte_corruption_never_panics_loaders() {
+    let (index, x) = pq_index(120, 3);
+    let sharded =
+        ShardedIndex::build(&index, ShardPolicy::Count(2)).unwrap();
+    let ivf = IvfIndex::partition(
+        &index,
+        &x,
+        IvfBuildOpts { ncells: 3, iters: 3, seed: 0 },
+    )
+    .unwrap();
+    let flavors = [
+        pack_bytes(&index.to_pack()),
+        pack_bytes(&sharded.shard_pack(1)),
+        pack_bytes(&ivf.to_pack()),
+    ];
+    let mut rng = Rng::new(0xC0FFEE);
+    for bytes in &flavors {
+        // the pristine snapshot exercises the happy path of the body
+        icq::fuzzing::fuzz_snapshot_pack(bytes);
+        for _ in 0..300 {
+            let mut m = bytes.clone();
+            if rng.below(4) == 0 {
+                m.truncate(rng.below(m.len() + 1));
+            } else {
+                let i = rng.below(m.len());
+                m[i] ^= 1 + rng.below(255) as u8;
+            }
+            icq::fuzzing::fuzz_snapshot_pack(&m);
+        }
     }
 }
 

@@ -1,0 +1,650 @@
+//! The repo's invariant linter (`cargo xtask lint`).
+//!
+//! Four rules, each encoding a safety or architecture contract the
+//! compiler cannot express:
+//!
+//! 1. **unsafe-allowlist** — the `unsafe` keyword may appear only in
+//!    the allowlisted modules ([`UNSAFE_ALLOWLIST`], today exactly the
+//!    SIMD kernels in `index/qlut.rs`). New `unsafe` anywhere else is a
+//!    lint failure, so widening the unsafe surface is an explicit,
+//!    reviewed allowlist change.
+//! 2. **safety-comment / safety-doc** — inside allowlisted modules,
+//!    every `unsafe` block must carry a `// SAFETY:` comment within the
+//!    three preceding non-blank lines, and every `unsafe fn` must
+//!    document its contract under a `# Safety` doc heading.
+//! 3. **sync-shim** — no module under `coordinator/` other than
+//!    `coordinator/sync.rs` may name `std::sync` or `std::thread`
+//!    directly: blocking primitives go through the shim so they are the
+//!    model-aware types `tests/loom_models.rs` explores. `#[cfg(test)]`
+//!    modules are exempt (tests drive real OS threads on purpose).
+//! 4. **no-panic** — the request-path modules (`coordinator/wire.rs`,
+//!    `coordinator/server.rs`) must not call `.unwrap()` or `.expect(`
+//!    outside `#[cfg(test)]`: a malformed peer or request must surface
+//!    as a typed error, never tear down the serving thread.
+//!
+//! All rules run over a *masked* view of each source file — comments,
+//! string/char literals, and raw strings blanked out with line
+//! structure preserved — so prose mentioning `unsafe` or `std::sync`
+//! never trips them, and reported line numbers match the real file.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Files (repo-relative, `/`-separated) allowed to contain `unsafe`.
+const UNSAFE_ALLOWLIST: &[&str] = &["rust/src/index/qlut.rs"];
+
+/// Directory whose modules must route sync primitives via the shim.
+const COORD_PREFIX: &str = "rust/src/coordinator/";
+
+/// The shim itself — the one coordinator module allowed to name std.
+const COORD_SHIM: &str = "rust/src/coordinator/sync.rs";
+
+/// Request-path files where `.unwrap()` / `.expect(` are forbidden.
+const NO_PANIC_FILES: &[&str] =
+    &["rust/src/coordinator/wire.rs", "rust/src/coordinator/server.rs"];
+
+/// Directories (repo-relative) swept for `.rs` files.
+const LINT_DIRS: &[&str] = &[
+    "rust/src",
+    "rust/tests",
+    "rust/benches",
+    "rust/fuzz/fuzz_targets",
+    "examples",
+    "xtask/src",
+];
+
+/// One rule violation at one source line.
+#[derive(Debug)]
+pub struct Violation {
+    /// Repo-relative path, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule id (used by the self-tests).
+    pub rule: &'static str,
+    /// Human explanation of what to change.
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Lint every source file under `repo` (see [`LINT_DIRS`]). Returns all
+/// violations, sorted by file then line; empty means the repo is clean.
+pub fn run(repo: &Path) -> Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    for dir in LINT_DIRS {
+        collect_rs(&repo.join(dir), &mut files)?;
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(repo)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        out.extend(lint_file(&rel, &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in
+        fs::read_dir(dir).with_context(|| format!("walking {}", dir.display()))?
+    {
+        let p = entry?.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file's source. `rel` is the repo-relative path with `/`
+/// separators — it selects which rules apply. Pure, so the self-tests
+/// can feed seeded fixtures without touching the filesystem.
+pub fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
+    let masked = mask_source(src);
+    let raw_lines: Vec<&str> = src.split('\n').collect();
+    let starts = line_starts(&masked);
+    let tests = test_line_flags(&masked, &starts);
+    let mut out = Vec::new();
+
+    // Rules 1 + 2: `unsafe` placement and discipline.
+    let allowlisted = UNSAFE_ALLOWLIST.contains(&rel);
+    for at in find_word(&masked, "unsafe") {
+        let line = line_of(&starts, at);
+        if !allowlisted {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: line + 1,
+                rule: "unsafe-allowlist",
+                message: format!(
+                    "`unsafe` outside the allowlisted modules ({})",
+                    UNSAFE_ALLOWLIST.join(", ")
+                ),
+            });
+            continue;
+        }
+        let rest = masked[at + "unsafe".len()..].trim_start();
+        let is_fn = rest.starts_with("fn")
+            && !rest.chars().nth(2).is_some_and(is_ident_char);
+        if is_fn {
+            if !has_safety_doc(&raw_lines, line) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: line + 1,
+                    rule: "safety-doc",
+                    message: "`unsafe fn` without a `# Safety` doc heading \
+                              stating the caller's obligations"
+                        .to_string(),
+                });
+            }
+        } else if !has_safety_comment(&raw_lines, line) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: line + 1,
+                rule: "safety-comment",
+                message: "`unsafe` block without a `// SAFETY:` comment in \
+                          the 3 preceding non-blank lines"
+                    .to_string(),
+            });
+        }
+    }
+
+    // Rule 3: coordinator modules use the sync shim.
+    if rel.starts_with(COORD_PREFIX) && rel != COORD_SHIM {
+        for needle in ["std::sync", "std::thread"] {
+            for at in find_word(&masked, needle) {
+                let line = line_of(&starts, at);
+                if tests.get(line).copied().unwrap_or(false) {
+                    continue;
+                }
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: line + 1,
+                    rule: "sync-shim",
+                    message: format!(
+                        "direct `{needle}` in coordinator code; import it \
+                         from `coordinator::sync` (the modelcheck-aware shim)"
+                    ),
+                });
+            }
+        }
+    }
+
+    // Rule 4: request paths never panic on peer input.
+    if NO_PANIC_FILES.contains(&rel) {
+        for (li, mline) in masked.split('\n').enumerate() {
+            if tests.get(li).copied().unwrap_or(false) {
+                continue;
+            }
+            for needle in [".unwrap()", ".expect("] {
+                if mline.contains(needle) {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: li + 1,
+                        rule: "no-panic",
+                        message: format!(
+                            "`{needle}` in request-path code; return a typed \
+                             error instead"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    out.sort_by(|a, b| a.line.cmp(&b.line).then_with(|| a.rule.cmp(b.rule)));
+    out
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets where each line starts (always begins with 0).
+fn line_starts(s: &str) -> Vec<usize> {
+    let mut v = vec![0];
+    for (i, b) in s.bytes().enumerate() {
+        if b == b'\n' {
+            v.push(i + 1);
+        }
+    }
+    v
+}
+
+/// 0-based line of byte offset `off`.
+fn line_of(starts: &[usize], off: usize) -> usize {
+    match starts.binary_search(&off) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    }
+}
+
+/// Byte offsets of `word` appearing as a whole token (not embedded in a
+/// longer identifier) in already-masked text.
+fn find_word(masked: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = masked[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0
+            || !masked[..at].chars().next_back().is_some_and(is_ident_char);
+        let after_ok = !masked[at + word.len()..]
+            .chars()
+            .next()
+            .is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len();
+    }
+    out
+}
+
+/// Whether raw line `line` (0-based) or one of the 3 preceding
+/// non-blank raw lines carries a `SAFETY:` marker.
+fn has_safety_comment(raw_lines: &[&str], line: usize) -> bool {
+    if raw_lines[line].contains("SAFETY:") {
+        return true;
+    }
+    let mut seen = 0;
+    let mut l = line;
+    while l > 0 && seen < 3 {
+        l -= 1;
+        let t = raw_lines[l].trim();
+        if t.is_empty() {
+            continue;
+        }
+        seen += 1;
+        if t.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Whether the doc comment block directly above raw line `line`
+/// (skipping attribute lines such as `#[target_feature(...)]`) contains
+/// a `# Safety` heading.
+fn has_safety_doc(raw_lines: &[&str], line: usize) -> bool {
+    let mut l = line;
+    // hop over attributes between the docs and the fn
+    while l > 0 {
+        let t = raw_lines[l - 1].trim_start();
+        if t.starts_with("#[") {
+            l -= 1;
+        } else {
+            break;
+        }
+    }
+    while l > 0 {
+        let t = raw_lines[l - 1].trim_start();
+        let Some(doc) = t.strip_prefix("///") else { break };
+        if doc.trim().to_ascii_lowercase().starts_with("# safety") {
+            return true;
+        }
+        l -= 1;
+    }
+    false
+}
+
+/// Per-line flags: true for lines inside a `#[cfg(test)]`-gated item.
+/// The gated item's extent is found by brace matching from its first
+/// `{` (a brace-less gated item, e.g. a `use`, ends at `;`).
+fn test_line_flags(masked: &str, starts: &[usize]) -> Vec<bool> {
+    let mut flags = vec![false; starts.len()];
+    let bytes = masked.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = masked[from..].find("#[cfg(test)]") {
+        let at = from + pos;
+        from = at + 1;
+        let mut i = at + "#[cfg(test)]".len();
+        let mut open = None;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => {
+                    open = Some(i);
+                    break;
+                }
+                b';' => break,
+                _ => i += 1,
+            }
+        }
+        let end = match open {
+            Some(ob) => {
+                let mut depth = 0usize;
+                let mut j = ob;
+                loop {
+                    if j >= bytes.len() {
+                        break bytes.len() - 1;
+                    }
+                    match bytes[j] {
+                        b'{' => depth += 1,
+                        b'}' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break j;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+            None => i.min(bytes.len() - 1),
+        };
+        let lo = line_of(starts, at);
+        let hi = line_of(starts, end);
+        for f in flags.iter_mut().take(hi + 1).skip(lo) {
+            *f = true;
+        }
+    }
+    flags
+}
+
+/// Opening quote position and hash count if `chars[i..]` starts a raw
+/// string literal (`r"`, `r#"`, `br##"` ...).
+fn raw_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j, hashes))
+    } else {
+        None
+    }
+}
+
+/// Blank out comments (line + nested block), string literals (plain,
+/// byte, raw), and char literals, preserving newlines so every byte of
+/// the result is on the same line as in the input. Lifetimes (`'a`)
+/// are kept verbatim.
+pub fn mask_source(src: &str) -> String {
+    fn blank(c: char) -> char {
+        if c == '\n' {
+            '\n'
+        } else {
+            ' '
+        }
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        // line comment
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < n && chars[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // block comment, nested
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1;
+            out.push_str("  ");
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(blank(chars[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        let prev_ident = i > 0 && is_ident_char(chars[i - 1]);
+        // raw / byte literal prefixes
+        if !prev_ident && (c == 'r' || c == 'b') {
+            if let Some((quote, hashes)) = raw_open(&chars, i) {
+                for &ch in &chars[i..=quote] {
+                    out.push(blank(ch));
+                }
+                i = quote + 1;
+                while i < n {
+                    if chars[i] == '"' {
+                        let mut h = 0;
+                        while h < hashes && chars.get(i + 1 + h) == Some(&'#')
+                        {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            for &ch in &chars[i..=i + hashes] {
+                                out.push(blank(ch));
+                            }
+                            i += hashes + 1;
+                            break;
+                        }
+                    }
+                    out.push(blank(chars[i]));
+                    i += 1;
+                }
+                continue;
+            }
+            if c == 'b'
+                && matches!(chars.get(i + 1), Some(&'"') | Some(&'\''))
+            {
+                // consume the prefix; the quote is handled next round
+                out.push(' ');
+                i += 1;
+                continue;
+            }
+        }
+        // plain string literal
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(blank(chars[i + 1]));
+                    i += 2;
+                } else if chars[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(chars[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if chars.get(i + 1) == Some(&'\\') {
+                // escaped char literal: scan to the closing quote
+                out.push(' ');
+                i += 1;
+                while i < n {
+                    if chars[i] == '\\' && i + 1 < n {
+                        out.push_str("  ");
+                        i += 2;
+                    } else if chars[i] == '\'' {
+                        out.push(' ');
+                        i += 1;
+                        break;
+                    } else {
+                        out.push(blank(chars[i]));
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'')
+            {
+                out.push_str("   ");
+                i += 3;
+                continue;
+            }
+            // a lifetime — keep it
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masker_blanks_comments_strings_and_char_literals() {
+        let src = "let a = \"has unsafe inside\"; // unsafe here too\n\
+                   /* unsafe in /* nested */ block */\n\
+                   let b = r#\"raw unsafe\"#;\n\
+                   let c = 'u'; let e = '\\u{1F600}';\n\
+                   let d: &'static [u8] = b\"unsafe\";\n";
+        let m = mask_source(src);
+        assert!(!m.contains("unsafe"), "leaked through mask:\n{m}");
+        assert!(m.contains("let a ="));
+        assert!(m.contains("&'static [u8]"), "lifetime mangled:\n{m}");
+        assert_eq!(m.split('\n').count(), src.split('\n').count());
+    }
+
+    #[test]
+    fn unsafe_outside_allowlist_is_flagged() {
+        let v = lint_file("rust/src/core/mod.rs", "fn f() { unsafe { } }\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!((v[0].rule, v[0].line), ("unsafe-allowlist", 1));
+    }
+
+    #[test]
+    fn unsafe_in_prose_is_ignored() {
+        let src = "// unsafe\nconst X: &str = \"unsafe\";\n/// unsafe\n";
+        assert!(lint_file("rust/src/core/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allowlisted_unsafe_block_needs_safety_comment() {
+        let bad = "fn f() {\n    unsafe { work() }\n}\n";
+        let v = lint_file("rust/src/index/qlut.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "safety-comment");
+
+        let good = "fn f() {\n    // SAFETY: bounds checked above.\n    \
+                    unsafe { work() }\n}\n";
+        assert!(lint_file("rust/src/index/qlut.rs", good).is_empty());
+    }
+
+    #[test]
+    fn allowlisted_unsafe_fn_needs_safety_doc_heading() {
+        let bad = "/// Fast kernel.\npub unsafe fn k() {}\n";
+        let v = lint_file("rust/src/index/qlut.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "safety-doc");
+
+        let good = "/// Fast kernel.\n///\n/// # Safety\n/// Caller checks \
+                    AVX2.\n#[target_feature(enable = \"avx2\")]\npub unsafe \
+                    fn k() {}\n";
+        assert!(lint_file("rust/src/index/qlut.rs", good).is_empty());
+    }
+
+    #[test]
+    fn coordinator_must_use_the_sync_shim() {
+        let bad = "use std::sync::Mutex;\nuse std::thread;\n";
+        let v = lint_file("rust/src/coordinator/gather.rs", bad);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|x| x.rule == "sync-shim"));
+        // the shim itself, test modules, and non-coordinator code are
+        // all out of the rule's scope
+        assert!(lint_file("rust/src/coordinator/sync.rs", bad).is_empty());
+        assert!(lint_file("rust/src/core/mod.rs", bad).is_empty());
+        let test_only = "#[cfg(test)]\nmod tests {\n    use std::sync::mpsc;\
+                         \n    use std::thread;\n}\n";
+        assert!(
+            lint_file("rust/src/coordinator/gather.rs", test_only).is_empty()
+        );
+    }
+
+    #[test]
+    fn request_paths_reject_panicking_calls() {
+        let bad = "fn f() { x.unwrap(); y.expect(\"m\"); }\n";
+        let v = lint_file("rust/src/coordinator/wire.rs", bad);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|x| x.rule == "no-panic"));
+        // non-panicking cousins, test modules, and other files pass
+        let or = "fn f() { x.unwrap_or(0); y.unwrap_or_else(g); }\n";
+        assert!(lint_file("rust/src/coordinator/wire.rs", or).is_empty());
+        let test_only =
+            "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\n";
+        assert!(
+            lint_file("rust/src/coordinator/server.rs", test_only).is_empty()
+        );
+        assert!(lint_file("rust/src/coordinator/gather.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn the_repo_is_clean() {
+        let repo = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap();
+        let v = run(repo).unwrap();
+        assert!(
+            v.is_empty(),
+            "lint violations in the repo:\n{}",
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn seeded_violation_fixture_fails_the_lint() {
+        let root = std::env::temp_dir()
+            .join(format!("icq-xtask-lint-fixture-{}", std::process::id()));
+        let dir = root.join("rust/src/coordinator");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("gather.rs"),
+            "use std::thread;\nfn f() { unsafe { } }\nfn g() {}\n",
+        )
+        .unwrap();
+        let v = run(&root).unwrap();
+        std::fs::remove_dir_all(&root).unwrap();
+        let rules: Vec<&str> = v.iter().map(|x| x.rule).collect();
+        assert!(rules.contains(&"sync-shim"), "{rules:?}");
+        assert!(rules.contains(&"unsafe-allowlist"), "{rules:?}");
+    }
+}

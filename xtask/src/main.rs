@@ -1,0 +1,43 @@
+//! Repo automation, cargo-xtask style: a plain binary in the workspace
+//! so `cargo xtask <cmd>` needs nothing installed beyond the toolchain
+//! (the alias lives in `.cargo/config.toml`).
+//!
+//! Commands:
+//!
+//! * `lint` — the invariant linter (see [`lint`] for the rule list).
+//!   Exits non-zero with one line per violation; CI runs it as a
+//!   required job, so a violating change cannot merge.
+
+mod lint;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+fn main() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => run_lint(),
+        Some(other) => bail!("unknown xtask command '{other}'\n{USAGE}"),
+        None => bail!("missing xtask command\n{USAGE}"),
+    }
+}
+
+const USAGE: &str = "usage: cargo xtask lint";
+
+fn run_lint() -> Result<()> {
+    // xtask/ sits directly under the repo root.
+    let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask crate has a parent directory")
+        .to_path_buf();
+    let violations = lint::run(&repo)?;
+    if violations.is_empty() {
+        println!("xtask lint: OK");
+        return Ok(());
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    bail!("xtask lint: {} violation(s)", violations.len());
+}
