@@ -4,9 +4,13 @@
 //! are built — the PJRT-executed Pallas LUT/scan graphs.
 //!
 //! Besides the human-readable report, the crude-pass comparison is
-//! written to `BENCH_kernels.json` (override the path with
+//! written to `BENCH_kernels_micro.json` (override the path with
 //! `ICQ_BENCH_JSON`) so the perf trajectory of the scan core is machine
-//! trackable across commits.
+//! trackable across commits. (The committed repo-root
+//! `BENCH_kernels.json` belongs to `icq gauntlet`, which owns the
+//! schema-versioned trajectory artifacts; this bench writes its finer-
+//! grained ladder next to it under the `_micro` name so an ad-hoc run
+//! cannot clobber the gauntlet baseline.)
 
 use std::collections::BTreeMap;
 
@@ -262,7 +266,7 @@ fn main() {
 
     // machine-readable crude-pass trajectory
     let json_path = std::env::var("ICQ_BENCH_JSON")
-        .unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+        .unwrap_or_else(|_| "BENCH_kernels_micro.json".to_string());
     let mut obj = BTreeMap::new();
     obj.insert("bench".to_string(), Json::Str("kernels".to_string()));
     for (key, v) in [

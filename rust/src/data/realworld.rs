@@ -317,6 +317,23 @@ pub fn read_bvecs(path: impl AsRef<Path>) -> anyhow::Result<Matrix> {
         .with_context(|| format!("parsing {}", path.display()))
 }
 
+/// Read a vector file, dispatching on its extension: `.fvecs` (f32
+/// records) or `.bvecs` (byte records widened to f32). The TexMex
+/// datasets mix both (SIFT bases are bvecs, GIST/queries fvecs), so
+/// callers taking user-supplied paths — `icq gauntlet` — accept either.
+pub fn read_vecs_auto(path: impl AsRef<Path>) -> anyhow::Result<Matrix> {
+    let path = path.as_ref();
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("fvecs") => read_fvecs(path),
+        Some("bvecs") => read_bvecs(path),
+        other => anyhow::bail!(
+            "{}: unsupported vector extension {:?} (expected .fvecs or .bvecs)",
+            path.display(),
+            other
+        ),
+    }
+}
+
 /// Read and parse an `.ivecs` file.
 pub fn read_ivecs(path: impl AsRef<Path>) -> anyhow::Result<Vec<Vec<i32>>> {
     let path = path.as_ref();

@@ -1,0 +1,1008 @@
+//! The recall gauntlet: the repo's end-to-end evaluation subsystem.
+//!
+//! One entry point (`icq gauntlet`, [`run`]) sweeps every quantizer
+//! family (ICQ / PQ / OPQ / CQ / SQ) over its operating points
+//! (`fast_k`, IVF `nprobe`) and the serving topologies (flat,
+//! block-parallel, locally sharded, remote loopback with replicas),
+//! measuring recall@1/10/100 against exact ground truth plus QPS per
+//! configuration, and emits three schema-versioned JSON artifacts at a
+//! chosen directory:
+//!
+//! * `BENCH_recall.json`  — quantizer × operating-point recall/QPS rows;
+//! * `BENCH_serving.json` — topology QPS rows, each parity-checked;
+//! * `BENCH_kernels.json` — scan-primitive throughput rows.
+//!
+//! The committed copies at the repo root are the perf trajectory;
+//! `cargo xtask bench-check` compares a fresh `--profile fast` run
+//! against them and fails on recall drops beyond tolerance.
+//!
+//! ## Datasets
+//!
+//! A TexMex-format dataset can be supplied (`.fvecs`/`.bvecs` base +
+//! query files, optional `.ivecs` ground truth — the PR 6 loaders);
+//! otherwise a deterministic clustered synthetic corpus is generated
+//! and exact ground truth is computed in-tree by brute force
+//! ([`crate::eval::GroundTruth`]). Every configuration is seeded, so a
+//! profile run is a pure function of (profile, dataset).
+//!
+//! ## Parity before timing
+//!
+//! Numbers from a broken searcher are worse than no numbers, so before
+//! anything is timed the gauntlet asserts, for every family:
+//!
+//! * the full-`fast_k` two-step scan is **bitwise** equal to the flat
+//!   exhaustive ADC scan (the serial two-step at `fast_k = K` computes
+//!   the same sums in the same order — `crude == full` exactly — and
+//!   both scan ascending ids into the canonical `(distance, id)`
+//!   top-k, so equality is exact, not approximate);
+//! * the IVF full probe (`nprobe = ncells`) is bitwise equal to the
+//!   flat searcher (the `tests/ivf_parity.rs` invariant, re-checked on
+//!   this corpus);
+//! * every serving topology returns bitwise the flat searcher's results
+//!   (the sharded/remote-gather invariants, re-checked live).
+//!
+//! Recall rows for lower-bound families (ICQ/PQ/OPQ) at reduced
+//! `fast_k` use the serial two-step, which by the same scan-order
+//! argument returns exactly the full-distance top-k at margin 0 —
+//! their `recall10_vs_flat` is 1.0 by construction, and the committed
+//! baseline pins that. Dense-codebook families (CQ/SQ) have no
+//! lower-bound guarantee at reduced `fast_k`; their crude pass is a
+//! lossy prune and the recall row records how lossy.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::bench::timing::{bench_config, black_box};
+use crate::config::SearchConfig;
+use crate::coordinator::{
+    wire, BatchSearcher, NativeSearcher, PoolOpts, RemoteMetrics, ReplicaOpts,
+    ReplicaSetBackend, ShardBackend, ShardedSearcher,
+};
+use crate::core::json::Json;
+use crate::core::{Hit, Matrix, Rng};
+use crate::data::realworld::{read_ivecs, read_vecs_auto};
+use crate::data::Dataset;
+use crate::eval::{self, GroundTruth};
+use crate::index::search_icq::{self, IcqSearchOpts};
+use crate::index::shard::{ShardPolicy, ShardedIndex};
+use crate::index::{
+    search_adc, EncodedIndex, IvfBuildOpts, IvfIndex, Lut, OpCounter,
+};
+use crate::quantizer::cq::{Cq, CqOpts};
+use crate::quantizer::icq::{Icq, IcqOpts};
+use crate::quantizer::opq::{Opq, OpqOpts};
+use crate::quantizer::pq::{Pq, PqOpts};
+use crate::quantizer::sq::{Sq, SqOpts};
+
+/// Bump when a field is renamed/removed or its meaning changes in
+/// `BENCH_recall.json`; adding fields is backward compatible.
+pub const RECALL_SCHEMA_VERSION: f64 = 1.0;
+/// Same contract for `BENCH_serving.json`.
+pub const SERVING_SCHEMA_VERSION: f64 = 1.0;
+/// Same contract for `BENCH_kernels.json`.
+pub const KERNELS_SCHEMA_VERSION: f64 = 1.0;
+
+/// Keys every `BENCH_recall.json` row must carry (golden-schema tests
+/// and `cargo xtask bench-check` both enforce this list).
+pub const RECALL_ROW_KEYS: &[&str] = &[
+    "id", "method", "mode", "param", "recall1", "recall10", "recall100",
+    "recall10_vs_flat", "qps",
+];
+/// Keys every `BENCH_serving.json` row must carry.
+pub const SERVING_ROW_KEYS: &[&str] = &["id", "qps", "parity"];
+/// Keys every `BENCH_kernels.json` row must carry.
+pub const KERNELS_ROW_KEYS: &[&str] = &["id", "qps"];
+
+/// One gauntlet scale. Everything that varies between the CI-runnable
+/// run and a real-dataset run lives here, so a profile name fully
+/// determines geometry, trainer effort, and timing effort.
+#[derive(Clone, Debug)]
+pub struct GauntletProfile {
+    pub name: &'static str,
+    /// synthetic corpus size (file datasets are truncated to this when
+    /// ground truth is computed in-tree; see [`load_data`]).
+    pub n: usize,
+    pub nq: usize,
+    pub d: usize,
+    pub k: usize,
+    pub m: usize,
+    pub ncells: usize,
+    /// depth of every retrieved list (recall@100 needs >= 100).
+    pub top_k: usize,
+    /// reduced-`fast_k` operating points (all `< k`).
+    pub fast_ks: Vec<usize>,
+    /// partial `nprobe` operating points (`ncells` itself is always
+    /// appended as the `nprobe=all` row).
+    pub nprobes: Vec<usize>,
+    pub kmeans_iters: usize,
+    pub prior_steps: usize,
+    pub pq_iters: usize,
+    pub opq_outer: usize,
+    pub cq_iters: usize,
+    pub bench_target: Duration,
+    pub bench_min_iters: usize,
+    pub seed: u64,
+}
+
+/// Resolve `--profile NAME`.
+///
+/// * `fast`  — the CI profile: seeded, hard-bounded runtime (~tens of
+///   seconds), the geometry the committed baselines pin.
+/// * `full`  — a larger sweep for real datasets / overnight runs.
+/// * `smoke` — minimal, for the test suite itself.
+pub fn profile_by_name(name: &str) -> Result<GauntletProfile> {
+    match name {
+        "fast" => Ok(GauntletProfile {
+            name: "fast",
+            n: 4000,
+            nq: 100,
+            d: 32,
+            k: 8,
+            m: 16,
+            ncells: 16,
+            top_k: 100,
+            fast_ks: vec![1, 4],
+            nprobes: vec![1, 4],
+            kmeans_iters: 6,
+            prior_steps: 120,
+            pq_iters: 6,
+            opq_outer: 2,
+            cq_iters: 4,
+            bench_target: Duration::from_millis(150),
+            bench_min_iters: 3,
+            seed: 42,
+        }),
+        "full" => Ok(GauntletProfile {
+            name: "full",
+            n: 20_000,
+            nq: 500,
+            d: 32,
+            k: 8,
+            m: 16,
+            ncells: 64,
+            top_k: 100,
+            fast_ks: vec![1, 2, 4],
+            nprobes: vec![1, 4, 16],
+            kmeans_iters: 15,
+            prior_steps: 400,
+            pq_iters: 15,
+            opq_outer: 4,
+            cq_iters: 6,
+            bench_target: Duration::from_millis(700),
+            bench_min_iters: 5,
+            seed: 42,
+        }),
+        "smoke" => Ok(GauntletProfile {
+            name: "smoke",
+            n: 600,
+            nq: 16,
+            d: 16,
+            k: 4,
+            m: 16,
+            ncells: 8,
+            top_k: 100,
+            fast_ks: vec![1, 2],
+            nprobes: vec![1, 4],
+            kmeans_iters: 3,
+            prior_steps: 40,
+            pq_iters: 3,
+            opq_outer: 1,
+            cq_iters: 2,
+            bench_target: Duration::from_millis(5),
+            bench_min_iters: 2,
+            seed: 42,
+        }),
+        other => anyhow::bail!(
+            "unknown gauntlet profile '{other}' (expected fast|full|smoke)"
+        ),
+    }
+}
+
+/// The evaluation corpus: base vectors, queries, exact ground truth,
+/// and per-row class labels (real labels are unavailable for TexMex
+/// files, so a deterministic pseudo-labeling feeds SQ's supervised
+/// projection there).
+pub struct GauntletData {
+    pub base: Matrix,
+    pub queries: Matrix,
+    pub truth: GroundTruth,
+    pub labels: Vec<i32>,
+    /// "synthetic" or the base file path.
+    pub source: String,
+}
+
+/// How many synthetic clusters the generator draws (also the pseudo-
+/// label modulus for file datasets).
+const N_CLUSTERS: usize = 32;
+
+/// Deterministic clustered heteroscedastic corpus + in-distribution
+/// queries (cluster center + small noise), the serving bench's data
+/// shape: per-dimension variance is deliberately uneven so the ICQ
+/// prior has structure to find.
+fn synthetic_corpus(p: &GauntletProfile) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(p.seed);
+    let centers = Matrix::from_fn(N_CLUSTERS, p.d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 4.0 } else { 0.4 }
+    });
+    let base = Matrix::from_fn(p.n, p.d, |i, j| {
+        centers.get(i % N_CLUSTERS, j)
+            + rng.normal_f32() * if j % 4 == 0 { 0.8 } else { 0.2 }
+    });
+    let mut qdata = Vec::with_capacity(p.nq * p.d);
+    for i in 0..p.nq {
+        let mut r =
+            Rng::new(p.seed ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let c = r.below(N_CLUSTERS);
+        for j in 0..p.d {
+            qdata.push(centers.get(c, j) + r.normal_f32() * 0.2);
+        }
+    }
+    (base, Matrix::from_vec(p.nq, p.d, qdata))
+}
+
+/// Copy the first `rows` rows of `m` (no-op when `m` is small enough).
+fn truncate_rows(m: &Matrix, rows: usize) -> Matrix {
+    if m.rows() <= rows {
+        m.clone()
+    } else {
+        Matrix::from_fn(rows, m.cols(), |i, j| m.get(i, j))
+    }
+}
+
+/// Load the corpus: TexMex files when given, synthetic otherwise.
+///
+/// With a ground-truth file the base is used **as-is** (truncating it
+/// would invalidate the file's neighbor ids); queries beyond the
+/// profile's `nq` are dropped along with their truth rows, which stays
+/// consistent. Without one, base and queries are truncated to the
+/// profile size and exact truth is brute-forced in-tree.
+pub fn load_data(
+    p: &GauntletProfile,
+    base_path: Option<&str>,
+    query_path: Option<&str>,
+    gt_path: Option<&str>,
+) -> Result<GauntletData> {
+    let (base, queries, truth, source) = match (base_path, query_path) {
+        (Some(bp), Some(qp)) => {
+            let base = read_vecs_auto(bp)
+                .with_context(|| format!("gauntlet base '{bp}'"))?;
+            let queries = read_vecs_auto(qp)
+                .with_context(|| format!("gauntlet queries '{qp}'"))?;
+            anyhow::ensure!(
+                base.cols() == queries.cols(),
+                "base dim {} != query dim {}",
+                base.cols(),
+                queries.cols()
+            );
+            match gt_path {
+                Some(gp) => {
+                    let queries = truncate_rows(&queries, p.nq);
+                    let raw = read_ivecs(gp)
+                        .with_context(|| format!("gauntlet gt '{gp}'"))?;
+                    anyhow::ensure!(
+                        raw.len() >= queries.rows(),
+                        "gt file has {} rows for {} queries",
+                        raw.len(),
+                        queries.rows()
+                    );
+                    let mut ids = Vec::with_capacity(queries.rows());
+                    let mut r = usize::MAX;
+                    for row in raw.iter().take(queries.rows()) {
+                        let mut out = Vec::with_capacity(row.len());
+                        for &v in row {
+                            anyhow::ensure!(
+                                v >= 0 && (v as usize) < base.rows(),
+                                "gt id {v} out of range for {} base rows",
+                                base.rows()
+                            );
+                            out.push(v as u32);
+                        }
+                        r = r.min(out.len());
+                        ids.push(out);
+                    }
+                    anyhow::ensure!(
+                        r > 0,
+                        "gt file contains an empty neighbor list"
+                    );
+                    let truth = GroundTruth { ids, r };
+                    (base, queries, truth, bp.to_string())
+                }
+                None => {
+                    let base = truncate_rows(&base, p.n);
+                    let queries = truncate_rows(&queries, p.nq);
+                    let truth =
+                        GroundTruth::compute(&base, &queries, p.top_k);
+                    (base, queries, truth, bp.to_string())
+                }
+            }
+        }
+        (None, None) => {
+            let (base, queries) = synthetic_corpus(p);
+            let truth = GroundTruth::compute(&base, &queries, p.top_k);
+            (base, queries, truth, "synthetic".to_string())
+        }
+        _ => anyhow::bail!("--base and --queries must be given together"),
+    };
+    let labels: Vec<i32> =
+        (0..base.rows()).map(|i| (i % N_CLUSTERS) as i32).collect();
+    Ok(GauntletData { base, queries, truth, labels, source })
+}
+
+/// One quantizer family under evaluation: its encoded index plus the
+/// query/partition matrices in the index's own coordinate space (OPQ
+/// rotates, SQ embeds; the others search raw).
+struct Family {
+    name: &'static str,
+    index: EncodedIndex,
+    queries: Matrix,
+    /// what the IVF coarse quantizer partitions — same space as
+    /// `queries`, so `probe_order` ranks cells consistently.
+    vectors: Matrix,
+}
+
+/// Train all five families over the corpus. Deterministic in the
+/// profile seed.
+fn train_families(p: &GauntletProfile, data: &GauntletData) -> Vec<Family> {
+    let x = &data.base;
+    let labels = &data.labels;
+    let mut out = Vec::new();
+
+    let icq = Icq::train(
+        x,
+        IcqOpts {
+            k: p.k,
+            m: p.m,
+            fast_k: 0,
+            kmeans_iters: p.kmeans_iters,
+            prior_steps: p.prior_steps,
+            seed: p.seed,
+        },
+    );
+    out.push(Family {
+        name: "icq",
+        index: EncodedIndex::build_icq(&icq, x, labels.clone()),
+        queries: data.queries.clone(),
+        vectors: x.clone(),
+    });
+
+    let pq = Pq::train(
+        x,
+        PqOpts { k: p.k, m: p.m, iters: p.pq_iters, seed: p.seed },
+    );
+    out.push(Family {
+        name: "pq",
+        index: EncodedIndex::build(&pq, x, labels.clone()),
+        queries: data.queries.clone(),
+        vectors: x.clone(),
+    });
+
+    let opq = Opq::train(
+        x,
+        OpqOpts {
+            pq: PqOpts { k: p.k, m: p.m, iters: p.pq_iters, seed: p.seed },
+            outer_iters: p.opq_outer,
+        },
+    );
+    let mut opq_idx = EncodedIndex::build(&opq, x, labels.clone());
+    opq_idx.sigma = 0.0;
+    // the codes live in the rotated space: rotate queries and the
+    // partition vectors to match
+    out.push(Family {
+        name: "opq",
+        index: opq_idx,
+        queries: opq.rotate(&data.queries),
+        vectors: opq.rotate(x),
+    });
+
+    let cq = Cq::train(
+        x,
+        CqOpts {
+            k: p.k,
+            m: p.m,
+            iters: p.cq_iters,
+            icm_sweeps: 2,
+            seed: p.seed,
+        },
+    );
+    out.push(Family {
+        name: "cq",
+        index: EncodedIndex::build(&cq, x, labels.clone()),
+        queries: data.queries.clone(),
+        vectors: x.clone(),
+    });
+
+    // SQ = supervised projection + CQ; index and queries live in the
+    // embedded space (recall is still measured against raw-space truth:
+    // the embedding's geometry change is part of what SQ trades).
+    let d_out = (p.d / 2).clamp(4, p.d);
+    let sq = Sq::train(
+        &Dataset::new(x.clone(), labels.clone()),
+        SqOpts {
+            d_out,
+            cq: CqOpts {
+                k: p.k,
+                m: p.m,
+                iters: p.cq_iters,
+                icm_sweeps: 2,
+                seed: p.seed,
+            },
+            ridge: 1e-3,
+        },
+    );
+    let emb_q = sq.embed(&data.queries);
+    let emb_x = sq.embed(x);
+    out.push(Family {
+        name: "sq",
+        index: EncodedIndex::build(&sq, x, labels.clone()),
+        queries: emb_q,
+        vectors: emb_x,
+    });
+    out
+}
+
+/// Clone `index` with the crude pass disabled: `fast_k = K` makes the
+/// crude sum the full sum (`sigma` is then irrelevant and zeroed) —
+/// the flat exhaustive scan expressed through the two-step engine.
+fn full_scan_clone(index: &EncodedIndex) -> EncodedIndex {
+    let mut c = index.clone();
+    c.fast_k = c.k();
+    c.sigma = 0.0;
+    c
+}
+
+/// Clone `index` at a reduced `fast_k` operating point.
+fn fast_k_clone(index: &EncodedIndex, fast_k: usize) -> EncodedIndex {
+    let mut c = index.clone();
+    c.fast_k = fast_k.min(c.k());
+    c
+}
+
+type Results = Vec<Vec<Hit>>;
+
+fn ids_of(results: &Results) -> Vec<Vec<u32>> {
+    results
+        .iter()
+        .map(|hits| hits.iter().map(|h| h.id).collect())
+        .collect()
+}
+
+/// One measured recall row.
+struct RecallRow {
+    id: String,
+    method: &'static str,
+    mode: &'static str,
+    param: f64,
+    recall1: f64,
+    recall10: f64,
+    recall100: f64,
+    recall10_vs_flat: f64,
+    qps: f64,
+}
+
+fn recall_row_json(r: &RecallRow) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("id".into(), Json::Str(r.id.clone()));
+    o.insert("method".into(), Json::Str(r.method.to_string()));
+    o.insert("mode".into(), Json::Str(r.mode.to_string()));
+    o.insert("param".into(), Json::Num(r.param));
+    o.insert("recall1".into(), Json::Num(r.recall1));
+    o.insert("recall10".into(), Json::Num(r.recall10));
+    o.insert("recall100".into(), Json::Num(r.recall100));
+    o.insert("recall10_vs_flat".into(), Json::Num(r.recall10_vs_flat));
+    o.insert("qps".into(), Json::Num(r.qps));
+    Json::Obj(o)
+}
+
+/// Measure one operating point: recall@{1,10,100} vs exact truth,
+/// recall@10 vs the family's flat quantized top-k, and QPS.
+#[allow(clippy::too_many_arguments)]
+fn measure_point(
+    p: &GauntletProfile,
+    id: String,
+    method: &'static str,
+    mode: &'static str,
+    param: f64,
+    results: Results,
+    flat_ids: &[Vec<u32>],
+    truth: &GroundTruth,
+    mut rerun: impl FnMut() -> Results,
+) -> RecallRow {
+    let recall1 = eval::recall_at(&results, &truth.ids, 1);
+    let recall10 = eval::recall_at(&results, &truth.ids, 10);
+    let recall100 = eval::recall_at(&results, &truth.ids, 100);
+    let recall10_vs_flat = eval::recall_at(&results, flat_ids, 10);
+    let nq = results.len();
+    let meas = bench_config(&id, p.bench_target, p.bench_min_iters, &mut || {
+        black_box(rerun());
+    });
+    RecallRow {
+        id,
+        method,
+        mode,
+        param,
+        recall1,
+        recall10,
+        recall100,
+        recall10_vs_flat,
+        qps: meas.throughput(nq),
+    }
+}
+
+/// One serving-topology row: QPS plus the parity bit (always asserted
+/// true before timing — a row is only emitted for a topology whose
+/// results matched the flat searcher bitwise).
+struct ServingRow {
+    id: String,
+    qps: f64,
+    parity: bool,
+}
+
+/// The three artifacts of one gauntlet run.
+pub struct GauntletReport {
+    pub recall: Json,
+    pub serving: Json,
+    pub kernels: Json,
+}
+
+fn common_header(p: &GauntletProfile, data: &GauntletData) -> BTreeMap<String, Json> {
+    let mut o = BTreeMap::new();
+    o.insert("profile".into(), Json::Str(p.name.to_string()));
+    o.insert("seeded".into(), Json::Bool(false));
+    o.insert("source".into(), Json::Str(data.source.clone()));
+    o.insert("n".into(), Json::Num(data.base.rows() as f64));
+    o.insert("nq".into(), Json::Num(data.queries.rows() as f64));
+    o.insert("d".into(), Json::Num(data.base.cols() as f64));
+    o.insert("k".into(), Json::Num(p.k as f64));
+    o.insert("m".into(), Json::Num(p.m as f64));
+    o
+}
+
+/// Run the full gauntlet: train every family, assert the parity
+/// anchors, sweep the operating points and topologies, and build the
+/// three artifacts. Everything that feeds recall fields is
+/// deterministic in (profile, dataset); only `qps` varies run to run
+/// (see [`stable_subset`]).
+pub fn run(p: &GauntletProfile, data: &GauntletData) -> Result<GauntletReport> {
+    let ops = Arc::new(OpCounter::new());
+    let families = train_families(p, data);
+    let mut rows: Vec<Json> = Vec::new();
+
+    for fam in &families {
+        let full = full_scan_clone(&fam.index);
+        let opts = IcqSearchOpts { k: p.top_k, margin_scale: 1.0 };
+
+        // parity anchor 1: the full-fast_k two-step == the flat
+        // exhaustive ADC scan, bitwise, before anything is timed
+        let adc = search_adc::search_batch(&full, &fam.queries, p.top_k, &ops);
+        let flat =
+            search_icq::search_batch(&full, &fam.queries, opts, &ops);
+        anyhow::ensure!(
+            flat == adc,
+            "{}: full-fast_k two-step != flat ADC scan (bitwise)",
+            fam.name
+        );
+        let flat_ids = ids_of(&flat);
+
+        eprintln!("[gauntlet] {}: flat parity ok, sweeping...", fam.name);
+        rows.push(recall_row_json(&measure_point(
+            p,
+            format!("{}/flat/full", fam.name),
+            fam.name,
+            "full",
+            p.k as f64,
+            flat,
+            &flat_ids,
+            &data.truth,
+            || search_icq::search_batch(&full, &fam.queries, opts, &ops),
+        )));
+
+        for &fk in &p.fast_ks {
+            let idx = fast_k_clone(&fam.index, fk);
+            let res = search_icq::search_batch(&idx, &fam.queries, opts, &ops);
+            rows.push(recall_row_json(&measure_point(
+                p,
+                format!("{}/flat/fastk={fk}", fam.name),
+                fam.name,
+                "fastk",
+                fk as f64,
+                res,
+                &flat_ids,
+                &data.truth,
+                || search_icq::search_batch(&idx, &fam.queries, opts, &ops),
+            )));
+        }
+
+        let ivf = IvfIndex::partition(
+            &fam.index,
+            &fam.vectors,
+            IvfBuildOpts { ncells: p.ncells, iters: 8, seed: p.seed },
+        )?;
+        // parity anchor 2: the full probe == the flat scan through the
+        // same per-family index (the ivf_parity invariant, live)
+        let ivf_all =
+            ivf.search_batch(&fam.queries, ivf.ncells(), opts, &ops);
+        let native = NativeSearcher::new(
+            Arc::new(fam.index.clone()),
+            SearchConfig { top_k: p.top_k, margin_scale: 1.0 },
+        );
+        let native_res = native
+            .search_batch(&fam.queries, p.top_k)
+            .context("flat searcher failed during parity check")?;
+        anyhow::ensure!(
+            ivf_all == native_res,
+            "{}: IVF full probe != flat searcher (bitwise)",
+            fam.name
+        );
+
+        let mut points: Vec<(String, usize)> = p
+            .nprobes
+            .iter()
+            .filter(|&&np| np < ivf.ncells())
+            .map(|&np| (format!("nprobe={np}"), np))
+            .collect();
+        points.push(("nprobe=all".to_string(), ivf.ncells()));
+        for (tag, np) in points {
+            let res = ivf.search_batch(&fam.queries, np, opts, &ops);
+            rows.push(recall_row_json(&measure_point(
+                p,
+                format!("{}/ivf/{tag}", fam.name),
+                fam.name,
+                "nprobe",
+                np as f64,
+                res,
+                &flat_ids,
+                &data.truth,
+                || ivf.search_batch(&fam.queries, np, opts, &ops),
+            )));
+        }
+    }
+
+    let mut recall_obj = common_header(p, data);
+    recall_obj.insert("bench".into(), Json::Str("gauntlet_recall".into()));
+    recall_obj
+        .insert("schema_version".into(), Json::Num(RECALL_SCHEMA_VERSION));
+    recall_obj.insert("ncells".into(), Json::Num(p.ncells as f64));
+    recall_obj.insert("top_k".into(), Json::Num(p.top_k as f64));
+    recall_obj.insert("rows".into(), Json::Arr(rows));
+
+    // --- serving topologies (operational ICQ index) ---
+    let icq_fam = &families[0];
+    let serving_rows = serving_sweep(p, icq_fam)?;
+    let mut serving_obj = common_header(p, data);
+    serving_obj.insert("bench".into(), Json::Str("gauntlet_serving".into()));
+    serving_obj
+        .insert("schema_version".into(), Json::Num(SERVING_SCHEMA_VERSION));
+    serving_obj.insert("top_k".into(), Json::Num(SERVING_TOP_K as f64));
+    serving_obj.insert(
+        "rows".into(),
+        Json::Arr(
+            serving_rows
+                .iter()
+                .map(|r| {
+                    let mut o = BTreeMap::new();
+                    o.insert("id".into(), Json::Str(r.id.clone()));
+                    o.insert("qps".into(), Json::Num(r.qps));
+                    o.insert("parity".into(), Json::Bool(r.parity));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+
+    // --- scan kernels (informational throughput trajectory) ---
+    let kernel_rows = kernel_sweep(p, icq_fam);
+    let mut kernels_obj = common_header(p, data);
+    kernels_obj.insert("bench".into(), Json::Str("gauntlet_kernels".into()));
+    kernels_obj
+        .insert("schema_version".into(), Json::Num(KERNELS_SCHEMA_VERSION));
+    kernels_obj.insert(
+        "rows".into(),
+        Json::Arr(
+            kernel_rows
+                .into_iter()
+                .map(|(id, qps)| {
+                    let mut o = BTreeMap::new();
+                    o.insert("id".into(), Json::Str(id));
+                    o.insert("qps".into(), Json::Num(qps));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+
+    Ok(GauntletReport {
+        recall: Json::Obj(recall_obj),
+        serving: Json::Obj(serving_obj),
+        kernels: Json::Obj(kernels_obj),
+    })
+}
+
+/// Serving rows use a production-shaped top-k.
+const SERVING_TOP_K: usize = 10;
+
+/// Measure the serving topologies over the ICQ index, each parity-
+/// checked bitwise against the flat searcher before timing.
+fn serving_sweep(p: &GauntletProfile, fam: &Family) -> Result<Vec<ServingRow>> {
+    let cfg = SearchConfig { top_k: SERVING_TOP_K, margin_scale: 1.0 };
+    let index = Arc::new(fam.index.clone());
+    let batch = truncate_rows(&fam.queries, fam.queries.rows().min(32));
+    let nq = batch.rows();
+    let ops = Arc::new(OpCounter::new());
+    let mut rows = Vec::new();
+
+    let flat = NativeSearcher::new(index.clone(), cfg);
+    let flat_res = flat
+        .search_batch(&batch, SERVING_TOP_K)
+        .context("flat serving searcher")?;
+    let meas =
+        bench_config("serving/flat", p.bench_target, p.bench_min_iters, &mut || {
+            black_box(flat.search_batch(&batch, SERVING_TOP_K).ok());
+        });
+    rows.push(ServingRow {
+        id: "serving/flat".into(),
+        qps: meas.throughput(nq),
+        parity: true,
+    });
+
+    // block-parallel single-query scan: bitwise == the per-query flat
+    // scan (pinned by search_icq's parallel-parity test), re-checked
+    // here against the flat searcher rows
+    let opts = IcqSearchOpts { k: SERVING_TOP_K, margin_scale: 1.0 };
+    let luts: Vec<Lut> = (0..batch.rows())
+        .map(|qi| {
+            Lut::build(index.lut_ctx(), index.codebooks(), batch.row(qi))
+        })
+        .collect();
+    let par_res: Results = luts
+        .iter()
+        .map(|lut| {
+            search_icq::search_scanfirst_parallel(&index, lut, opts, &ops, 4)
+        })
+        .collect();
+    anyhow::ensure!(
+        par_res == flat_res,
+        "block-parallel scan != flat searcher (bitwise)"
+    );
+    let meas = bench_config(
+        "serving/block_parallel",
+        p.bench_target,
+        p.bench_min_iters,
+        &mut || {
+            for lut in &luts {
+                black_box(search_icq::search_scanfirst_parallel(
+                    &index, lut, opts, &ops, 4,
+                ));
+            }
+        },
+    );
+    rows.push(ServingRow {
+        id: "serving/block_parallel".into(),
+        qps: meas.throughput(nq),
+        parity: true,
+    });
+
+    let sharded =
+        ShardedSearcher::from_index(&index, ShardPolicy::Count(4), cfg)?;
+    let sharded_res = sharded
+        .search_batch(&batch, SERVING_TOP_K)
+        .context("sharded serving searcher")?;
+    anyhow::ensure!(
+        sharded_res == flat_res,
+        "sharded-local gather != flat searcher (bitwise)"
+    );
+    let meas = bench_config(
+        "serving/sharded_local",
+        p.bench_target,
+        p.bench_min_iters,
+        &mut || {
+            black_box(sharded.search_batch(&batch, SERVING_TOP_K).ok());
+        },
+    );
+    rows.push(ServingRow {
+        id: "serving/sharded_local".into(),
+        qps: meas.throughput(nq),
+        parity: true,
+    });
+
+    // remote loopback: 2 wire shards x 2 replicas each, gathered
+    // through pooled, hedging replica sets — the full PR 4/5 stack
+    let cut = ShardedIndex::build(&index, ShardPolicy::Count(2))?;
+    let metrics = Arc::new(RemoteMetrics::new());
+    let mut backends: Vec<Box<dyn ShardBackend>> = Vec::new();
+    let mut lut_source = None;
+    for s in 0..cut.num_shards() {
+        let spec = cut.spec(s);
+        let shard = cut.shard(s).clone();
+        if lut_source.is_none() {
+            lut_source = Some(shard.clone());
+        }
+        let mut addrs = Vec::new();
+        for _ in 0..2 {
+            let listener = TcpListener::bind("127.0.0.1:0")
+                .context("bind loopback shard server")?;
+            addrs.push(listener.local_addr()?.to_string());
+            let shard = shard.clone();
+            let start = spec.start;
+            std::thread::Builder::new()
+                .name(format!("gauntlet-shard-{s}"))
+                .spawn(move || {
+                    let _ = wire::serve_shard(listener, shard, start);
+                })
+                .context("spawn loopback shard server")?;
+        }
+        backends.push(Box::new(ReplicaSetBackend::connect(
+            &addrs,
+            cfg,
+            PoolOpts { size: 2, retries: 1, ..PoolOpts::default() },
+            ReplicaOpts {
+                hedge_after: Duration::from_millis(50),
+                deadline: Duration::from_secs(5),
+                circuit_failures: 3,
+                probe_interval: Duration::from_millis(200),
+            },
+            metrics.clone(),
+        )?));
+    }
+    let remote = ShardedSearcher::from_backends(
+        backends,
+        lut_source,
+        index.dim(),
+        Arc::new(OpCounter::new()),
+    )?;
+    let remote_res = remote
+        .search_batch(&batch, SERVING_TOP_K)
+        .context("remote loopback searcher")?;
+    anyhow::ensure!(
+        remote_res == flat_res,
+        "remote replica gather != flat searcher (bitwise)"
+    );
+    let meas = bench_config(
+        "serving/remote_replicas",
+        p.bench_target,
+        p.bench_min_iters,
+        &mut || {
+            black_box(remote.search_batch(&batch, SERVING_TOP_K).ok());
+        },
+    );
+    rows.push(ServingRow {
+        id: "serving/remote_replicas".into(),
+        qps: meas.throughput(nq),
+        parity: true,
+    });
+    Ok(rows)
+}
+
+/// Scan-primitive throughput rows (queries/s; informational — the
+/// regression gate never fails on timing, only on recall).
+fn kernel_sweep(p: &GauntletProfile, fam: &Family) -> Vec<(String, f64)> {
+    let index = &fam.index;
+    let ops = OpCounter::new();
+    let q: Vec<f32> = fam.queries.row(0).to_vec();
+    let opts = IcqSearchOpts { k: SERVING_TOP_K, margin_scale: 1.0 };
+    let mut rows = Vec::new();
+
+    let meas = bench_config(
+        "kernels/lut_build",
+        p.bench_target,
+        p.bench_min_iters,
+        &mut || {
+            black_box(Lut::build(index.lut_ctx(), index.codebooks(), &q));
+        },
+    );
+    rows.push(("kernels/lut_build".to_string(), meas.throughput(1)));
+
+    let meas = bench_config(
+        "kernels/full_adc",
+        p.bench_target,
+        p.bench_min_iters,
+        &mut || {
+            black_box(search_adc::search(index, &q, SERVING_TOP_K, &ops));
+        },
+    );
+    rows.push(("kernels/full_adc".to_string(), meas.throughput(1)));
+
+    let meas = bench_config(
+        "kernels/two_step_serial",
+        p.bench_target,
+        p.bench_min_iters,
+        &mut || {
+            black_box(search_icq::search(index, &q, opts, &ops));
+        },
+    );
+    rows.push(("kernels/two_step_serial".to_string(), meas.throughput(1)));
+
+    let nb = fam.queries.rows().min(8);
+    let qb = truncate_rows(&fam.queries, nb);
+    let meas = bench_config(
+        "kernels/two_step_batched",
+        p.bench_target,
+        p.bench_min_iters,
+        &mut || {
+            black_box(search_icq::search_batch(index, &qb, opts, &ops));
+        },
+    );
+    rows.push(("kernels/two_step_batched".to_string(), meas.throughput(nb)));
+    rows
+}
+
+/// Write the three artifacts into `out_dir` (created if missing).
+pub fn write_report(report: &GauntletReport, out_dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("create {}", out_dir.display()))?;
+    for (name, json) in [
+        ("BENCH_recall.json", &report.recall),
+        ("BENCH_serving.json", &report.serving),
+        ("BENCH_kernels.json", &report.kernels),
+    ] {
+        let path = out_dir.join(name);
+        std::fs::write(&path, json.to_string_json() + "\n")
+            .with_context(|| format!("write {}", path.display()))?;
+        println!("[gauntlet] wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// The run-to-run-stable projection of an artifact: every `qps` field
+/// (the only machine/load-dependent numbers) removed, recursively.
+/// Two same-seed gauntlet runs must serialize this subset **bitwise**
+/// identically — pinned by `tests/recall_properties.rs`.
+pub fn stable_subset(json: &Json) -> Json {
+    match json {
+        Json::Obj(o) => Json::Obj(
+            o.iter()
+                .filter(|(k, _)| k.as_str() != "qps")
+                .map(|(k, v)| (k.clone(), stable_subset(v)))
+                .collect(),
+        ),
+        Json::Arr(a) => Json::Arr(a.iter().map(stable_subset).collect()),
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_resolve() {
+        for name in ["fast", "full", "smoke"] {
+            let p = profile_by_name(name).unwrap();
+            assert_eq!(p.name, name);
+            assert!(p.fast_ks.iter().all(|&fk| fk < p.k));
+        }
+        assert!(profile_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn synthetic_corpus_is_deterministic() {
+        let p = profile_by_name("smoke").unwrap();
+        let (a, aq) = synthetic_corpus(&p);
+        let (b, bq) = synthetic_corpus(&p);
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert_eq!(aq.as_slice(), bq.as_slice());
+    }
+
+    #[test]
+    fn stable_subset_strips_qps_recursively() {
+        let text = r#"{"qps": 1.5, "rows": [{"id": "a", "qps": 2.0, "recall1": 0.5}]}"#;
+        let j = Json::parse(text).unwrap();
+        let s = stable_subset(&j);
+        let out = s.to_string_json();
+        assert!(!out.contains("qps"), "{out}");
+        assert!(out.contains("recall1"), "{out}");
+    }
+
+    #[test]
+    fn truncate_rows_copies_prefix() {
+        let m = Matrix::from_fn(4, 2, |i, j| (i * 2 + j) as f32);
+        let t = truncate_rows(&m, 2);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.row(1), m.row(1));
+        assert_eq!(truncate_rows(&m, 10).rows(), 4);
+    }
+}

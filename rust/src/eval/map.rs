@@ -17,8 +17,12 @@ pub fn average_precision(
     }
     let mut hits = 0usize;
     let mut sum = 0.0f64;
+    // tied-distance merges (sharded gathers, duplicate rows) can hand
+    // us the same id twice; count each relevant id once so AP cannot
+    // exceed 1 or double-credit a duplicate
+    let mut seen = std::collections::HashSet::new();
     for (rank, h) in ranked.iter().enumerate() {
-        if is_relevant(h.id) {
+        if is_relevant(h.id) && seen.insert(h.id) {
             hits += 1;
             sum += hits as f64 / (rank + 1) as f64;
         }
@@ -67,20 +71,37 @@ pub fn precision_at(
 }
 
 /// Recall@R against exact nearest-neighbor ground truth id sets.
+///
+/// Per-query denominator is the number of *distinct* truth ids within
+/// the first `r` (so `r` larger than a truth list measures against
+/// what the list actually holds), duplicate retrieved ids count once
+/// (tied-distance merges can surface the same id twice), and queries
+/// with an empty truth list are excluded from the mean rather than
+/// dragged in as zeros — all-empty truth is defined as 0.
 pub fn recall_at(results: &[Vec<Hit>], truth: &[Vec<u32>], r: usize) -> f64 {
     assert_eq!(results.len(), truth.len());
     let mut total = 0.0;
+    let mut counted = 0usize;
     for (ranked, t) in results.iter().zip(truth) {
         let tset: std::collections::HashSet<u32> =
             t.iter().take(r).copied().collect();
+        if tset.is_empty() {
+            continue;
+        }
+        let mut seen = std::collections::HashSet::new();
         let got = ranked
             .iter()
             .take(r)
-            .filter(|h| tset.contains(&h.id))
+            .filter(|h| tset.contains(&h.id) && seen.insert(h.id))
             .count();
-        total += got as f64 / tset.len().max(1) as f64;
+        total += got as f64 / tset.len() as f64;
+        counted += 1;
     }
-    total / results.len().max(1) as f64
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +154,64 @@ mod tests {
         let truth = vec![vec![1u32, 2, 9]];
         // top-3 retrieved {3,1,2} vs truth {1,2,9}: 2/3
         assert!((recall_at(&results, &truth, 3) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recall_empty_truth_rows_are_skipped_not_zeroed() {
+        // query 0 has truth, query 1 has none: the empty row must not
+        // divide by zero and must not drag the mean down
+        let results = vec![hits(&[1, 2]), hits(&[5, 6])];
+        let truth = vec![vec![1u32, 2], vec![]];
+        assert!((recall_at(&results, &truth, 2) - 1.0).abs() < 1e-9);
+        // all-empty truth is defined as 0, not NaN
+        let none = vec![vec![], vec![]];
+        assert_eq!(recall_at(&results, &none, 2), 0.0);
+    }
+
+    #[test]
+    fn recall_r_larger_than_truth_list_uses_truth_len() {
+        // 2 truth ids, r = 10: retrieving both must score 1.0, not 2/10
+        let results = vec![hits(&[7, 3, 0, 1])];
+        let truth = vec![vec![3u32, 7]];
+        assert!((recall_at(&results, &truth, 10) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recall_duplicate_retrieved_ids_count_once() {
+        // a tied-distance merge can return the same id twice; that must
+        // not double-count toward recall (2 hits of {1} vs truth {1,2}
+        // is 1/2, not 2/2)
+        let results = vec![vec![
+            Hit { id: 1, dist: 0.5 },
+            Hit { id: 1, dist: 0.5 },
+        ]];
+        let truth = vec![vec![1u32, 2]];
+        assert!((recall_at(&results, &truth, 2) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recall_never_exceeds_one() {
+        // duplicates in the truth row must not inflate the denominator
+        // inconsistently either: truth {1,1} collapses to {1}
+        let results = vec![hits(&[1, 9])];
+        let truth = vec![vec![1u32, 1]];
+        assert!((recall_at(&results, &truth, 2) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ap_duplicate_relevant_ids_count_once() {
+        // same id surfacing twice (tied-distance gather) must not earn
+        // precision credit twice: AP = 1/1 over 1 relevant = 1.0
+        let ranked = vec![
+            Hit { id: 4, dist: 1.0 },
+            Hit { id: 4, dist: 1.0 },
+        ];
+        let ap = average_precision(&ranked, |id| id == 4, 1);
+        assert!((ap - 1.0).abs() < 1e-9, "ap {ap}");
+        // and MAP built on it stays <= 1
+        let results = vec![ranked];
+        let m = mean_average_precision(&results, &[0], &[0, 1, 2, 3, 0]);
+        assert!(m <= 1.0 + 1e-9, "map {m}");
     }
 
     #[test]

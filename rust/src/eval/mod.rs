@@ -1,6 +1,9 @@
-//! Evaluation: MAP / precision / recall under the paper's protocols.
+//! Evaluation: MAP / precision / recall under the paper's protocols,
+//! plus the end-to-end recall gauntlet ([`gauntlet`]) behind
+//! `icq gauntlet` and the committed `BENCH_*.json` trajectory.
 
 pub mod effective;
+pub mod gauntlet;
 pub mod groundtruth;
 pub mod map;
 pub mod unseen;

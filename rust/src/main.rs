@@ -9,6 +9,7 @@
 //!   shard-server             serve one shard over the binary wire protocol
 //!   export-shards            cut an index into per-shard snapshots
 //!   bench-figure <id>        regenerate a paper table/figure (or `all`)
+//!   gauntlet                 recall/QPS evaluation sweep -> BENCH_*.json
 //!   runtime-check            verify the PJRT artifacts against native math
 //!
 //! Global flags: --config <file>, --set key=value (repeatable; see
@@ -64,6 +65,17 @@ commands:
                            train, cut N shards, write PREFIX<i>.icqf
                            snapshots for shard-server processes
   bench-figure <ID> [--fast]  regenerate table1|fig1..fig6|all
+  gauntlet [--profile fast|full|smoke] [--out DIR]
+           [--base F.fvecs --queries F.fvecs [--gt F.ivecs]]
+                           sweep quantizers (PQ/OPQ/CQ/SQ/ICQ) x
+                           operating points (fast_k, IVF nprobe) x
+                           serving topologies over a TexMex dataset or
+                           the deterministic synthetic corpus; asserts
+                           bitwise parity with the flat scan, then
+                           writes BENCH_recall.json / BENCH_serving.json
+                           / BENCH_kernels.json to DIR (default '.');
+                           `cargo xtask bench-check` gates fresh runs
+                           against the committed copies
   runtime-check            verify PJRT artifacts vs native math
 ";
 
@@ -163,6 +175,18 @@ fn main() -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("bench-figure needs an id\n{USAGE}"))?;
             let fast = tail.iter().any(|a| a == "--fast");
             bench_figure(id, fast)
+        }
+        "gauntlet" => {
+            let profile =
+                flag_value(tail, "--profile").unwrap_or_else(|| "fast".into());
+            let out = flag_value(tail, "--out").unwrap_or_else(|| ".".into());
+            gauntlet(
+                &profile,
+                &out,
+                flag_value(tail, "--base"),
+                flag_value(tail, "--queries"),
+                flag_value(tail, "--gt"),
+            )
         }
         "runtime-check" => runtime_check(&cfg),
         other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
@@ -734,6 +758,33 @@ fn bench_figure(id: &str, fast: bool) -> Result<()> {
         run_figure(id, scale)?.print_and_save()?;
     }
     Ok(())
+}
+
+/// The recall gauntlet (see `eval::gauntlet`): sweep quantizers x
+/// operating points x topologies, assert flat-scan parity, and write
+/// the three `BENCH_*.json` artifacts into `out`.
+fn gauntlet(
+    profile: &str,
+    out: &str,
+    base: Option<String>,
+    queries: Option<String>,
+    gt: Option<String>,
+) -> Result<()> {
+    use icq::eval::gauntlet as g;
+
+    let p = g::profile_by_name(profile)?;
+    let data =
+        g::load_data(&p, base.as_deref(), queries.as_deref(), gt.as_deref())?;
+    println!(
+        "[gauntlet] profile={} source={} n={} nq={} d={}",
+        p.name,
+        data.source,
+        data.base.rows(),
+        data.queries.rows(),
+        data.base.cols()
+    );
+    let report = g::run(&p, &data)?;
+    g::write_report(&report, std::path::Path::new(out))
 }
 
 fn runtime_check(cfg: &EngineConfig) -> Result<()> {

@@ -1,0 +1,214 @@
+//! Golden-schema suite for the three gauntlet artifacts
+//! (`BENCH_recall.json`, `BENCH_serving.json`, `BENCH_kernels.json`).
+//!
+//! Pins three contracts:
+//!
+//! * **round-trip** — every artifact the gauntlet emits survives
+//!   parse(serialize(x)) == x through the in-tree JSON;
+//! * **required keys** — the top-level header and every row carry the
+//!   keys named by the `*_ROW_KEYS` constants (`cargo xtask
+//!   bench-check` gates on these, so dropping one is an API break);
+//! * **version-bump detection** — the `schema_version` inside the
+//!   *committed* repo-root baselines must equal the in-code constants.
+//!   Bumping a constant without regenerating (and re-reviewing) the
+//!   committed artifacts fails here, and regenerating with a new
+//!   version without bumping the constant fails too.
+
+use std::sync::OnceLock;
+
+use icq::core::json::Json;
+use icq::eval::gauntlet::{
+    self, GauntletReport, KERNELS_ROW_KEYS, KERNELS_SCHEMA_VERSION,
+    RECALL_ROW_KEYS, RECALL_SCHEMA_VERSION, SERVING_ROW_KEYS,
+    SERVING_SCHEMA_VERSION,
+};
+
+/// One smoke-profile run shared by every test in this binary (the
+/// gauntlet is deterministic, so sharing loses nothing).
+fn report() -> &'static GauntletReport {
+    static REPORT: OnceLock<GauntletReport> = OnceLock::new();
+    REPORT.get_or_init(|| {
+        let p = gauntlet::profile_by_name("smoke").unwrap();
+        let data = gauntlet::load_data(&p, None, None, None).unwrap();
+        gauntlet::run(&p, &data).unwrap()
+    })
+}
+
+/// Top-level keys common to all three artifacts.
+const HEADER_KEYS: &[&str] = &[
+    "bench",
+    "schema_version",
+    "profile",
+    "seeded",
+    "source",
+    "n",
+    "nq",
+    "d",
+    "k",
+    "m",
+    "rows",
+];
+
+fn assert_keys(j: &Json, keys: &[&str], what: &str) {
+    for key in keys {
+        assert!(
+            j.get(key).is_some(),
+            "{what}: required key '{key}' is missing"
+        );
+    }
+}
+
+fn assert_artifact_shape(
+    j: &Json,
+    bench: &str,
+    version: f64,
+    row_keys: &[&str],
+) {
+    assert_keys(j, HEADER_KEYS, bench);
+    assert_eq!(j.get("bench").and_then(Json::as_str), Some(bench));
+    assert_eq!(
+        j.get("schema_version").and_then(Json::as_f64),
+        Some(version),
+        "{bench}: schema_version drifted from the in-code constant"
+    );
+    let rows = j.get("rows").and_then(Json::as_arr).unwrap();
+    assert!(!rows.is_empty(), "{bench}: artifact has no rows");
+    for row in rows {
+        let id = row.get("id").and_then(Json::as_str).unwrap_or("<no id>");
+        assert_keys(row, row_keys, &format!("{bench} row '{id}'"));
+    }
+}
+
+#[test]
+fn generated_artifacts_round_trip_through_json() {
+    let r = report();
+    for (name, j) in [
+        ("recall", &r.recall),
+        ("serving", &r.serving),
+        ("kernels", &r.kernels),
+    ] {
+        let text = j.to_string_json();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("BENCH_{name} reparse failed: {e}"));
+        assert_eq!(&back, j, "BENCH_{name} changed across a round-trip");
+    }
+}
+
+#[test]
+fn generated_artifacts_carry_required_keys() {
+    let r = report();
+    assert_artifact_shape(
+        &r.recall,
+        "gauntlet_recall",
+        RECALL_SCHEMA_VERSION,
+        RECALL_ROW_KEYS,
+    );
+    assert_keys(&r.recall, &["ncells", "top_k"], "gauntlet_recall extras");
+    assert_artifact_shape(
+        &r.serving,
+        "gauntlet_serving",
+        SERVING_SCHEMA_VERSION,
+        SERVING_ROW_KEYS,
+    );
+    assert_keys(&r.serving, &["top_k"], "gauntlet_serving extras");
+    assert_artifact_shape(
+        &r.kernels,
+        "gauntlet_kernels",
+        KERNELS_SCHEMA_VERSION,
+        KERNELS_ROW_KEYS,
+    );
+}
+
+/// Distinct row ids: duplicated ids would let bench-check silently
+/// compare the wrong rows.
+#[test]
+fn generated_row_ids_are_unique() {
+    let r = report();
+    for (name, j) in [
+        ("recall", &r.recall),
+        ("serving", &r.serving),
+        ("kernels", &r.kernels),
+    ] {
+        let mut seen = std::collections::HashSet::new();
+        for row in j.get("rows").and_then(Json::as_arr).unwrap() {
+            let id = row.get("id").and_then(Json::as_str).unwrap();
+            assert!(seen.insert(id.to_string()), "BENCH_{name}: dup id {id}");
+        }
+    }
+}
+
+/// The committed repo-root baselines: parse, round-trip, required keys,
+/// and schema-version agreement with the in-code constants (the
+/// version-bump tripwire described in the module docs).
+#[test]
+fn committed_baselines_match_schema_constants() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .to_path_buf();
+    for (file, bench, version, row_keys) in [
+        (
+            "BENCH_recall.json",
+            "gauntlet_recall",
+            RECALL_SCHEMA_VERSION,
+            RECALL_ROW_KEYS,
+        ),
+        (
+            "BENCH_serving.json",
+            "gauntlet_serving",
+            SERVING_SCHEMA_VERSION,
+            SERVING_ROW_KEYS,
+        ),
+        (
+            "BENCH_kernels.json",
+            "gauntlet_kernels",
+            KERNELS_SCHEMA_VERSION,
+            KERNELS_ROW_KEYS,
+        ),
+    ] {
+        let path = root.join(file);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let j = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("{file} does not parse: {e}"));
+        assert_artifact_shape(&j, bench, version, row_keys);
+        let back = Json::parse(&j.to_string_json()).unwrap();
+        assert_eq!(back, j, "{file} changed across a round-trip");
+        assert_eq!(
+            j.get("profile").and_then(Json::as_str),
+            Some("fast"),
+            "{file}: committed baseline must be the CI fast profile"
+        );
+    }
+}
+
+/// The smoke profile run used here and the committed fast baselines
+/// must agree on the *set* of serving and kernel row ids (they are
+/// profile-independent); recall rows differ only in the numeric
+/// operating points, so compare the id shape `family/mode/...`.
+#[test]
+fn committed_baseline_row_families_match_generated() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .to_path_buf();
+    let committed =
+        Json::parse(&std::fs::read_to_string(root.join("BENCH_recall.json")).unwrap())
+            .unwrap();
+    let families = |j: &Json| -> std::collections::BTreeSet<String> {
+        j.get("rows")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|r| {
+                r.get("method").and_then(Json::as_str).unwrap().to_string()
+            })
+            .collect()
+    };
+    assert_eq!(
+        families(&committed),
+        families(&report().recall),
+        "committed BENCH_recall.json covers different quantizer families \
+         than the gauntlet emits"
+    );
+}

@@ -1,0 +1,100 @@
+//! Brute-force ground-truth generator vs the committed TexMex fixtures.
+//!
+//! `tiny_gt.ivecs` holds the hand-computed exact neighbor lists of the
+//! `tiny.bvecs` queries against the `tiny.fvecs` base (squared-L2
+//! distances 3.5 / 7.5 / 43.5 for query 0, reversed order for the
+//! others), so [`GroundTruth::compute`] must reproduce it byte for
+//! byte through the `.ivecs` reader — the same path `icq gauntlet
+//! --gt` trusts for real datasets. Tie-breaking is pinned separately:
+//! equal distances rank by ascending id, the canonical `(distance,
+//! id)` order every `TopK`-based searcher in the tree shares.
+
+use icq::core::Matrix;
+use icq::data::realworld::{read_bvecs, read_fvecs, read_ivecs};
+use icq::eval::gauntlet;
+use icq::eval::GroundTruth;
+use icq::index::{search_exact, OpCounter};
+
+fn fixture(name: &str) -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+/// The generator must reproduce the committed fixture exactly — every
+/// neighbor, in order, for every query.
+#[test]
+fn compute_matches_committed_fixture_exactly() {
+    let base = read_fvecs(fixture("tiny.fvecs")).unwrap();
+    let queries = read_bvecs(fixture("tiny.bvecs")).unwrap();
+    let gt = GroundTruth::compute(&base, &queries, 3);
+    let committed: Vec<Vec<u32>> = read_ivecs(fixture("tiny_gt.ivecs"))
+        .unwrap()
+        .into_iter()
+        .map(|row| row.into_iter().map(|v| v as u32).collect())
+        .collect();
+    assert_eq!(gt.r, 3);
+    assert_eq!(
+        gt.ids, committed,
+        "brute-force ground truth diverged from the committed fixture"
+    );
+}
+
+/// `load_data` with explicit files must hand the gauntlet the same
+/// truth the fixture commits (base kept as-is, queries and truth rows
+/// aligned) — the file-backed path of the `icq gauntlet` CLI.
+#[test]
+fn gauntlet_file_path_loads_committed_truth() {
+    let p = gauntlet::profile_by_name("smoke").unwrap();
+    let base = fixture("tiny.fvecs");
+    let queries = fixture("tiny.bvecs");
+    let gt = fixture("tiny_gt.ivecs");
+    let data = gauntlet::load_data(
+        &p,
+        Some(base.to_str().unwrap()),
+        Some(queries.to_str().unwrap()),
+        Some(gt.to_str().unwrap()),
+    )
+    .unwrap();
+    assert_eq!(data.base.rows(), 3, "--gt mode must keep the base as-is");
+    assert_eq!(data.queries.rows(), 3);
+    assert_eq!(data.truth.r, 3);
+    assert_eq!(data.truth.ids, vec![vec![0, 1, 2], vec![2, 1, 0], vec![2, 1, 0]]);
+}
+
+/// Equal distances rank by ascending id. A database of duplicated rows
+/// makes every distance tied, so the truth list *is* the tie-break
+/// order — and it must agree bitwise with the exact searcher, which
+/// shares the canonical `TopK`.
+#[test]
+fn tied_distances_rank_by_ascending_id() {
+    // rows 0..6 alternate between two identical points: all distances
+    // to a query tie within each group of duplicates
+    let a = [1.0f32, 2.0, 3.0, 4.0];
+    let b = [5.0f32, 1.0, 0.0, 2.0];
+    let db = Matrix::from_fn(6, 4, |i, j| if i % 2 == 0 { a[j] } else { b[j] });
+    let q = Matrix::from_fn(1, 4, |_, j| a[j] + 0.1);
+    let gt = GroundTruth::compute(&db, &q, 6);
+    // the three copies of `a` (ids 0,2,4) are nearer; ties ascend by id
+    assert_eq!(gt.ids[0], vec![0, 2, 4, 1, 3, 5]);
+
+    // and the exact searcher agrees bitwise (same TopK order)
+    let ops = OpCounter::new();
+    let exact = search_exact::search_batch(&db, &q, 6, &ops);
+    let exact_ids: Vec<u32> = exact[0].iter().map(|h| h.id).collect();
+    assert_eq!(gt.ids[0], exact_ids, "GT and exact searcher tie-break differ");
+}
+
+/// Truncation: a partial-ranking fixture (`r` smaller than the base)
+/// still matches the prefix of a deeper computation — the generator is
+/// prefix-stable in `r`.
+#[test]
+fn truth_is_prefix_stable_in_r() {
+    let base = read_fvecs(fixture("tiny.fvecs")).unwrap();
+    let queries = read_bvecs(fixture("tiny.bvecs")).unwrap();
+    let deep = GroundTruth::compute(&base, &queries, 3);
+    let shallow = GroundTruth::compute(&base, &queries, 1);
+    for (d, s) in deep.ids.iter().zip(&shallow.ids) {
+        assert_eq!(&d[..1], &s[..], "top-1 differs from the top-3 prefix");
+    }
+}

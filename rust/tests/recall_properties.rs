@@ -1,0 +1,233 @@
+//! Property suite for the recall metric and the gauntlet sweep.
+//!
+//! Each property here is *provable* for the code under test, not
+//! merely observed on one lucky seed:
+//!
+//! * `recall_at` is a mean of per-query fractions in [0, 1], so it
+//!   stays in [0, 1] for arbitrary inputs — duplicates, empty rows,
+//!   `r` past either list;
+//! * a searcher that returns the ground truth itself scores exactly
+//!   1.0 (the oracle fixed point);
+//! * IVF recall against the flat quantized ranking is monotone
+//!   non-decreasing in `nprobe` (probed cell sets are nested: a
+//!   flat-top-k row, once probed, is beaten by at most k-1 rows
+//!   anywhere, so it can never drop out at a larger probe) and exactly
+//!   1.0 at the full probe;
+//! * for lower-bound families (crude sum <= full sum) the serial
+//!   two-step returns the *same* result at every `fast_k` — entering
+//!   the final top-k requires the full distance to beat the threshold
+//!   at arrival, and the crude lower bound beats it first — so recall
+//!   vs the flat scan is constant 1.0, hence monotone in `fast_k`;
+//! * two same-seed gauntlet runs are bitwise identical once the
+//!   timing-only `qps` fields are stripped ([`gauntlet::stable_subset`]).
+
+use icq::core::{Hit, Matrix, Rng};
+use icq::eval::gauntlet;
+use icq::eval::{recall_at, GroundTruth};
+use icq::index::search_icq::{self, IcqSearchOpts};
+use icq::index::{EncodedIndex, IvfBuildOpts, IvfIndex, OpCounter};
+use icq::quantizer::icq::{Icq, IcqOpts};
+use icq::quantizer::pq::{Pq, PqOpts};
+
+fn hetero(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(n, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 3.0 } else { 0.4 }
+    })
+}
+
+fn queries(nq: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(nq, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 2.0 } else { 0.5 }
+    })
+}
+
+fn ids_of(results: &[Vec<Hit>]) -> Vec<Vec<u32>> {
+    results
+        .iter()
+        .map(|hits| hits.iter().map(|h| h.id).collect())
+        .collect()
+}
+
+/// Arbitrary adversarial inputs — duplicate ids, empty rows, truth
+/// longer and shorter than the result list — must keep recall in
+/// [0, 1] for every cutoff.
+#[test]
+fn recall_stays_in_unit_interval_on_arbitrary_inputs() {
+    let mut rng = Rng::new(99);
+    for trial in 0..50u64 {
+        let nq = 1 + rng.below(6);
+        let results: Vec<Vec<Hit>> = (0..nq)
+            .map(|_| {
+                (0..rng.below(12))
+                    .map(|rank| Hit {
+                        id: rng.below(8) as u32, // dense id range => duplicates
+                        dist: rank as f32,
+                    })
+                    .collect()
+            })
+            .collect();
+        let truth: Vec<Vec<u32>> = (0..nq)
+            .map(|_| (0..rng.below(12)).map(|_| rng.below(8) as u32).collect())
+            .collect();
+        for r in [0usize, 1, 3, 10, 100] {
+            let v = recall_at(&results, &truth, r);
+            assert!(
+                (0.0..=1.0).contains(&v),
+                "trial {trial} r={r}: recall {v} out of [0,1]"
+            );
+        }
+    }
+}
+
+/// The oracle fixed point: handing the exact ground truth back as the
+/// result list must score exactly 1.0 at every cutoff that the truth
+/// covers — no floating-point slack.
+#[test]
+fn oracle_searcher_scores_exactly_one() {
+    let base = hetero(300, 16, 21);
+    let qs = queries(12, 16, 22);
+    let truth = GroundTruth::compute(&base, &qs, 20);
+    let as_results: Vec<Vec<Hit>> = truth
+        .ids
+        .iter()
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .map(|(rank, &id)| Hit { id, dist: rank as f32 })
+                .collect()
+        })
+        .collect();
+    for r in [1usize, 5, 10, 20] {
+        assert_eq!(
+            recall_at(&as_results, &truth.ids, r),
+            1.0,
+            "oracle recall@{r} must be exactly 1.0"
+        );
+    }
+}
+
+/// IVF recall@10 against the flat quantized ranking is monotone
+/// non-decreasing in `nprobe` and exactly 1.0 at the full probe —
+/// measured through the same `recall_at` the gauntlet reports, so the
+/// committed `recall10_vs_flat` trajectory inherits the property.
+#[test]
+fn ivf_recall_vs_flat_is_monotone_in_nprobe() {
+    let x = hetero(500, 16, 31);
+    let icq = Icq::train(
+        &x,
+        IcqOpts {
+            k: 8,
+            m: 16,
+            fast_k: 2,
+            kmeans_iters: 5,
+            prior_steps: 80,
+            seed: 31,
+        },
+    );
+    let index =
+        EncodedIndex::build_icq(&icq, &x, (0..500).map(|i| i as i32).collect());
+    let ivf = IvfIndex::partition(
+        &index,
+        &x,
+        IvfBuildOpts { ncells: 12, iters: 6, seed: 0 },
+    )
+    .unwrap();
+    let qs = queries(10, 16, 32);
+    let ops = OpCounter::new();
+    let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+    let flat_ids = ids_of(&search_icq::search_batch(&index, &qs, opts, &ops));
+    let mut prev = -1.0f64;
+    for nprobe in [1usize, 2, 4, 8, 12] {
+        let res = ivf.search_batch(&qs, nprobe, opts, &ops);
+        let recall = recall_at(&res, &flat_ids, 10);
+        assert!(
+            recall >= prev,
+            "recall@10 vs flat dropped {prev} -> {recall} at nprobe {nprobe}"
+        );
+        prev = recall;
+    }
+    assert_eq!(prev, 1.0, "full probe must recover the flat top-10 exactly");
+}
+
+/// Lower-bound families: the serial two-step returns the flat scan's
+/// exact result at *every* `fast_k`, so recall vs flat is constant 1.0
+/// across the sweep — the strongest form of "monotone non-decreasing
+/// in fast_k". Checked for ICQ (sigma > 0, margin gate) and PQ
+/// (sigma = 0, margin 0, strict lower bound).
+#[test]
+fn fast_k_sweep_is_lossless_for_lower_bound_families() {
+    let x = hetero(400, 16, 41);
+    let labels: Vec<i32> = (0..400).map(|i| i as i32).collect();
+    let qs = queries(8, 16, 42);
+    let ops = OpCounter::new();
+    let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+
+    let icq = Icq::train(
+        &x,
+        IcqOpts {
+            k: 8,
+            m: 16,
+            fast_k: 8,
+            kmeans_iters: 5,
+            prior_steps: 80,
+            seed: 41,
+        },
+    );
+    let pq = Pq::train(&x, PqOpts { k: 8, m: 16, iters: 4, seed: 41 });
+    let indexes = [
+        ("icq", EncodedIndex::build_icq(&icq, &x, labels.clone())),
+        ("pq", EncodedIndex::build(&pq, &x, labels)),
+    ];
+    for (name, index) in indexes {
+        let mut full = index.clone();
+        full.fast_k = full.k();
+        full.sigma = 0.0;
+        let flat_ids =
+            ids_of(&search_icq::search_batch(&full, &qs, opts, &ops));
+        let mut prev = -1.0f64;
+        for fk in [1usize, 2, 4, 8] {
+            let mut idx = index.clone();
+            idx.fast_k = fk;
+            let res = search_icq::search_batch(&idx, &qs, opts, &ops);
+            let recall = recall_at(&res, &flat_ids, 10);
+            assert!(
+                recall >= prev,
+                "{name}: recall vs flat dropped {prev} -> {recall} at \
+                 fast_k {fk}"
+            );
+            assert_eq!(
+                recall, 1.0,
+                "{name}: fast_k={fk} must be lossless for a lower-bound \
+                 family"
+            );
+            prev = recall;
+        }
+    }
+}
+
+/// Two same-seed gauntlet runs must agree bitwise on everything except
+/// wall-clock throughput: strip `qps` and compare the serialized
+/// artifacts byte for byte. This is the determinism contract the
+/// committed BENCH baselines (and `cargo xtask bench-check`) rely on.
+#[test]
+fn same_seed_gauntlet_runs_are_bitwise_stable() {
+    let p = gauntlet::profile_by_name("smoke").unwrap();
+    let run = || {
+        let data = gauntlet::load_data(&p, None, None, None).unwrap();
+        gauntlet::run(&p, &data).unwrap()
+    };
+    let (a, b) = (run(), run());
+    for (name, x, y) in [
+        ("recall", &a.recall, &b.recall),
+        ("serving", &a.serving, &b.serving),
+        ("kernels", &a.kernels, &b.kernels),
+    ] {
+        assert_eq!(
+            gauntlet::stable_subset(x).to_string_json(),
+            gauntlet::stable_subset(y).to_string_json(),
+            "BENCH_{name} differs across same-seed runs"
+        );
+    }
+}

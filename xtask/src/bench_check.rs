@@ -1,0 +1,397 @@
+//! `cargo xtask bench-check` — the perf-trajectory regression gate.
+//!
+//! Compares a fresh `icq gauntlet --profile fast` run against the
+//! committed repo-root baselines (`BENCH_recall.json`,
+//! `BENCH_serving.json`, `BENCH_kernels.json`) and fails when the
+//! fresh run regresses:
+//!
+//! * **recall** — every baseline row must exist in the fresh run with
+//!   the same id, and each `recall1` / `recall10` / `recall100` /
+//!   `recall10_vs_flat` must be at least `baseline - tolerance`
+//!   (one-sided: improvements always pass — the committed values are
+//!   conservative floors to ratchet upward, not exact pins);
+//! * **serving** — row ids must match and every fresh row must report
+//!   `parity: true` (topology results bitwise equal to the flat scan);
+//! * **kernels** — row ids must match and carry the required keys.
+//!
+//! QPS fields are never gated — timing depends on the machine; the
+//! artifacts record it, the gate only enforces correctness-shaped
+//! fields. Schema versions and the profile name must match exactly, so
+//! a format change or geometry drift is a loud failure, not a silently
+//! vacuous comparison.
+//!
+//! Run without `--fresh`, the baseline is checked against itself —
+//! a structural self-check that the committed artifacts parse and
+//! carry the required keys (useful locally and as a cheap CI step).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use icq::core::json::Json;
+use icq::eval::gauntlet::{
+    KERNELS_ROW_KEYS, KERNELS_SCHEMA_VERSION, RECALL_ROW_KEYS,
+    RECALL_SCHEMA_VERSION, SERVING_ROW_KEYS, SERVING_SCHEMA_VERSION,
+};
+
+/// Default one-sided recall tolerance: a fresh value may sit this far
+/// below the committed floor before the gate trips (absorbs seed-free
+/// timing jitter upstream of recall: none — recall is deterministic at
+/// fixed profile+corpus — but keeps the gate robust to future corpus
+/// tweaks landing together with refreshed baselines).
+pub const DEFAULT_TOLERANCE: f64 = 0.05;
+
+/// The recall fields the gate enforces (subset of `RECALL_ROW_KEYS`).
+const GATED_RECALL_FIELDS: &[&str] =
+    &["recall1", "recall10", "recall100", "recall10_vs_flat"];
+
+fn get_str<'j>(j: &'j Json, key: &str, what: &str) -> Result<&'j str> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("{what}: missing string field '{key}'"))
+}
+
+fn get_num(j: &Json, key: &str, what: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("{what}: missing numeric field '{key}'"))
+}
+
+fn rows<'j>(j: &'j Json, what: &str) -> Result<&'j [Json]> {
+    j.get("rows")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{what}: missing 'rows' array"))
+}
+
+/// Header checks shared by all three artifacts: schema version, bench
+/// name, profile, and per-row required keys on both sides.
+fn check_header(
+    baseline: &Json,
+    fresh: &Json,
+    name: &str,
+    version: f64,
+    row_keys: &[&str],
+    failures: &mut Vec<String>,
+) -> Result<()> {
+    for (side, j) in [("baseline", baseline), ("fresh", fresh)] {
+        let what = format!("{name} ({side})");
+        let v = get_num(j, "schema_version", &what)?;
+        if v != version {
+            failures.push(format!(
+                "{what}: schema_version {v} != supported {version} \
+                 (regenerate the artifact or update the gate)"
+            ));
+        }
+        for row in rows(j, &what)? {
+            let id = get_str(row, "id", &what)?;
+            for key in row_keys {
+                if row.get(key).is_none() {
+                    failures.push(format!(
+                        "{what}: row '{id}' is missing required key '{key}'"
+                    ));
+                }
+            }
+        }
+    }
+    let bp = get_str(baseline, "profile", name)?;
+    let fp = get_str(fresh, "profile", name)?;
+    if bp != fp {
+        failures.push(format!(
+            "{name}: baseline profile '{bp}' != fresh profile '{fp}' — \
+             the comparison would be meaningless"
+        ));
+    }
+    Ok(())
+}
+
+/// Row-id set equality in both directions: a dropped configuration is
+/// a regression (silent coverage loss), an added one means the
+/// baseline is stale and must be refreshed in the same change.
+fn check_row_ids(
+    baseline: &Json,
+    fresh: &Json,
+    name: &str,
+    failures: &mut Vec<String>,
+) -> Result<()> {
+    let bids: Vec<&str> = rows(baseline, name)?
+        .iter()
+        .filter_map(|r| r.get("id").and_then(Json::as_str))
+        .collect();
+    let fids: Vec<&str> = rows(fresh, name)?
+        .iter()
+        .filter_map(|r| r.get("id").and_then(Json::as_str))
+        .collect();
+    for id in &bids {
+        if !fids.contains(id) {
+            failures.push(format!(
+                "{name}: baseline row '{id}' is missing from the fresh run"
+            ));
+        }
+    }
+    for id in &fids {
+        if !bids.contains(id) {
+            failures.push(format!(
+                "{name}: fresh row '{id}' has no committed baseline \
+                 (refresh the committed artifact in this change)"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn find_row<'j>(j: &'j Json, id: &str) -> Option<&'j Json> {
+    j.get("rows")?
+        .as_arr()?
+        .iter()
+        .find(|r| r.get("id").and_then(Json::as_str) == Some(id))
+}
+
+/// Gate the recall artifact pair. Returns human-readable failures
+/// (empty = pass).
+pub fn check_recall(
+    baseline: &Json,
+    fresh: &Json,
+    tolerance: f64,
+) -> Result<Vec<String>> {
+    let mut failures = Vec::new();
+    check_header(
+        baseline,
+        fresh,
+        "BENCH_recall",
+        RECALL_SCHEMA_VERSION,
+        RECALL_ROW_KEYS,
+        &mut failures,
+    )?;
+    check_row_ids(baseline, fresh, "BENCH_recall", &mut failures)?;
+    for brow in rows(baseline, "BENCH_recall")? {
+        let id = get_str(brow, "id", "BENCH_recall")?;
+        let Some(frow) = find_row(fresh, id) else { continue };
+        for field in GATED_RECALL_FIELDS {
+            let (Ok(base), Ok(new)) = (
+                get_num(brow, field, "BENCH_recall baseline row"),
+                get_num(frow, field, "BENCH_recall fresh row"),
+            ) else {
+                continue; // missing keys already reported by the header check
+            };
+            if new < base - tolerance {
+                failures.push(format!(
+                    "BENCH_recall: row '{id}' {field} regressed: \
+                     {new:.4} < baseline {base:.4} - tolerance {tolerance}"
+                ));
+            }
+        }
+    }
+    Ok(failures)
+}
+
+/// Gate the serving artifact pair: ids + the parity bit.
+pub fn check_serving(baseline: &Json, fresh: &Json) -> Result<Vec<String>> {
+    let mut failures = Vec::new();
+    check_header(
+        baseline,
+        fresh,
+        "BENCH_serving",
+        SERVING_SCHEMA_VERSION,
+        SERVING_ROW_KEYS,
+        &mut failures,
+    )?;
+    check_row_ids(baseline, fresh, "BENCH_serving", &mut failures)?;
+    for frow in rows(fresh, "BENCH_serving")? {
+        let id = get_str(frow, "id", "BENCH_serving")?;
+        if !matches!(frow.get("parity"), Some(Json::Bool(true))) {
+            failures.push(format!(
+                "BENCH_serving: fresh row '{id}' does not report \
+                 parity=true — the topology diverged from the flat scan"
+            ));
+        }
+    }
+    Ok(failures)
+}
+
+/// Gate the kernels artifact pair: ids + required keys (throughput is
+/// informational).
+pub fn check_kernels(baseline: &Json, fresh: &Json) -> Result<Vec<String>> {
+    let mut failures = Vec::new();
+    check_header(
+        baseline,
+        fresh,
+        "BENCH_kernels",
+        KERNELS_SCHEMA_VERSION,
+        KERNELS_ROW_KEYS,
+        &mut failures,
+    )?;
+    check_row_ids(baseline, fresh, "BENCH_kernels", &mut failures)?;
+    Ok(failures)
+}
+
+fn load(dir: &Path, name: &str) -> Result<Json> {
+    let path = dir.join(name);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Json::parse(&text)
+        .with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Run the full gate: baseline artifacts from `baseline_dir` (the repo
+/// root in CI), fresh artifacts from `fresh_dir` (or the baseline
+/// itself when absent — the structural self-check mode).
+pub fn run(
+    baseline_dir: &Path,
+    fresh_dir: Option<&Path>,
+    tolerance: f64,
+) -> Result<Vec<String>> {
+    let mut failures = Vec::new();
+    for name in
+        ["BENCH_recall.json", "BENCH_serving.json", "BENCH_kernels.json"]
+    {
+        let baseline = load(baseline_dir, name)?;
+        let fresh = match fresh_dir {
+            Some(d) => load(d, name)?,
+            None => baseline.clone(),
+        };
+        let fs = match name {
+            "BENCH_recall.json" => check_recall(&baseline, &fresh, tolerance)?,
+            "BENCH_serving.json" => check_serving(&baseline, &fresh)?,
+            _ => check_kernels(&baseline, &fresh)?,
+        };
+        failures.extend(fs);
+    }
+    Ok(failures)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recall_pair() -> (Json, Json) {
+        let text = r#"{
+            "bench": "gauntlet_recall",
+            "schema_version": 1,
+            "profile": "fast",
+            "rows": [
+                {"id": "icq/flat/full", "method": "icq", "mode": "full",
+                 "param": 8, "recall1": 0.30, "recall10": 0.50,
+                 "recall100": 0.70, "recall10_vs_flat": 1.0, "qps": 100.0}
+            ]
+        }"#;
+        let j = Json::parse(text).unwrap();
+        (j.clone(), j)
+    }
+
+    fn set_row_field(j: &mut Json, field: &str, v: f64) {
+        let Json::Obj(o) = j else { panic!("not an object") };
+        let Some(Json::Arr(rows)) = o.get_mut("rows") else {
+            panic!("no rows")
+        };
+        let Json::Obj(row) = &mut rows[0] else { panic!("row not object") };
+        row.insert(field.to_string(), Json::Num(v));
+    }
+
+    #[test]
+    fn identical_artifacts_pass() {
+        let (b, f) = recall_pair();
+        assert!(check_recall(&b, &f, DEFAULT_TOLERANCE).unwrap().is_empty());
+    }
+
+    /// The acceptance demonstration: hand-lowering a recall value on
+    /// the fresh side below `baseline - tolerance` must trip the gate.
+    #[test]
+    fn fails_when_recall_hand_lowered() {
+        let (b, mut f) = recall_pair();
+        set_row_field(&mut f, "recall10", 0.30); // baseline 0.50, tol 0.05
+        let failures = check_recall(&b, &f, DEFAULT_TOLERANCE).unwrap();
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("recall10 regressed"), "{failures:?}");
+    }
+
+    #[test]
+    fn improvement_passes_one_sided() {
+        let (b, mut f) = recall_pair();
+        set_row_field(&mut f, "recall10", 0.95);
+        assert!(check_recall(&b, &f, DEFAULT_TOLERANCE).unwrap().is_empty());
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let (b, mut f) = recall_pair();
+        set_row_field(&mut f, "recall10", 0.46); // 0.50 - 0.05 boundary
+        assert!(check_recall(&b, &f, DEFAULT_TOLERANCE).unwrap().is_empty());
+    }
+
+    #[test]
+    fn missing_fresh_row_fails() {
+        let (b, mut f) = recall_pair();
+        let Json::Obj(o) = &mut f else { unreachable!() };
+        o.insert("rows".into(), Json::Arr(vec![]));
+        let failures = check_recall(&b, &f, DEFAULT_TOLERANCE).unwrap();
+        assert!(
+            failures.iter().any(|m| m.contains("missing from the fresh run")),
+            "{failures:?}"
+        );
+    }
+
+    #[test]
+    fn extra_fresh_row_demands_baseline_refresh() {
+        let (b, mut f) = recall_pair();
+        let Json::Obj(o) = &mut f else { unreachable!() };
+        let Some(Json::Arr(rows)) = o.get_mut("rows") else { unreachable!() };
+        let mut extra = rows[0].clone();
+        let Json::Obj(eo) = &mut extra else { unreachable!() };
+        eo.insert("id".into(), Json::Str("icq/flat/fastk=2".into()));
+        rows.push(extra);
+        let failures = check_recall(&b, &f, DEFAULT_TOLERANCE).unwrap();
+        assert!(
+            failures.iter().any(|m| m.contains("no committed baseline")),
+            "{failures:?}"
+        );
+    }
+
+    #[test]
+    fn schema_version_bump_fails() {
+        let (b, mut f) = recall_pair();
+        let Json::Obj(o) = &mut f else { unreachable!() };
+        o.insert("schema_version".into(), Json::Num(2.0));
+        let failures = check_recall(&b, &f, DEFAULT_TOLERANCE).unwrap();
+        assert!(
+            failures.iter().any(|m| m.contains("schema_version")),
+            "{failures:?}"
+        );
+    }
+
+    #[test]
+    fn profile_mismatch_fails() {
+        let (b, mut f) = recall_pair();
+        let Json::Obj(o) = &mut f else { unreachable!() };
+        o.insert("profile".into(), Json::Str("smoke".into()));
+        let failures = check_recall(&b, &f, DEFAULT_TOLERANCE).unwrap();
+        assert!(failures.iter().any(|m| m.contains("profile")), "{failures:?}");
+    }
+
+    #[test]
+    fn serving_parity_false_fails() {
+        let text = r#"{
+            "bench": "gauntlet_serving", "schema_version": 1,
+            "profile": "fast",
+            "rows": [{"id": "serving/flat", "qps": 10.0, "parity": true}]
+        }"#;
+        let b = Json::parse(text).unwrap();
+        let mut f = b.clone();
+        let Json::Obj(o) = &mut f else { unreachable!() };
+        let Some(Json::Arr(rows)) = o.get_mut("rows") else { unreachable!() };
+        let Json::Obj(row) = &mut rows[0] else { unreachable!() };
+        row.insert("parity".into(), Json::Bool(false));
+        let failures = check_serving(&b, &f).unwrap();
+        assert!(failures.iter().any(|m| m.contains("parity")), "{failures:?}");
+    }
+
+    #[test]
+    fn committed_repo_artifacts_self_check() {
+        // the real committed baselines must parse and be structurally
+        // valid (the no-fresh-dir mode CI runs after the gauntlet step)
+        let repo = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap()
+            .to_path_buf();
+        let failures = run(&repo, None, DEFAULT_TOLERANCE).unwrap();
+        assert!(failures.is_empty(), "{failures:?}");
+    }
+}

@@ -7,30 +7,85 @@
 //! * `lint` — the invariant linter (see [`lint`] for the rule list).
 //!   Exits non-zero with one line per violation; CI runs it as a
 //!   required job, so a violating change cannot merge.
+//! * `bench-check` — the recall-trajectory regression gate (see
+//!   [`bench_check`]): compares a fresh `icq gauntlet` run against the
+//!   committed repo-root `BENCH_*.json` baselines and fails on recall
+//!   drops beyond tolerance or lost parity.
 
+mod bench_check;
 mod lint;
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 fn main() -> Result<()> {
     let mut args = std::env::args().skip(1);
     match args.next().as_deref() {
         Some("lint") => run_lint(),
+        Some("bench-check") => run_bench_check(args),
         Some(other) => bail!("unknown xtask command '{other}'\n{USAGE}"),
         None => bail!("missing xtask command\n{USAGE}"),
     }
 }
 
-const USAGE: &str = "usage: cargo xtask lint";
+const USAGE: &str = "usage: cargo xtask lint\n       cargo xtask bench-check \
+                     [--baseline DIR] [--fresh DIR] [--tolerance F]";
 
-fn run_lint() -> Result<()> {
-    // xtask/ sits directly under the repo root.
-    let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+/// xtask/ sits directly under the repo root.
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("xtask crate has a parent directory")
-        .to_path_buf();
+        .to_path_buf()
+}
+
+fn run_bench_check(mut args: impl Iterator<Item = String>) -> Result<()> {
+    let mut baseline: Option<PathBuf> = None;
+    let mut fresh: Option<PathBuf> = None;
+    let mut tolerance = bench_check::DEFAULT_TOLERANCE;
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--baseline" => {
+                let v = args.next().context("--baseline needs a directory")?;
+                baseline = Some(PathBuf::from(v));
+            }
+            "--fresh" => {
+                let v = args.next().context("--fresh needs a directory")?;
+                fresh = Some(PathBuf::from(v));
+            }
+            "--tolerance" => {
+                let v = args.next().context("--tolerance needs a value")?;
+                tolerance = v.parse().context("--tolerance must be a number")?;
+            }
+            other => bail!("unknown bench-check flag '{other}'\n{USAGE}"),
+        }
+    }
+    let baseline = baseline.unwrap_or_else(repo_root);
+    let failures =
+        bench_check::run(&baseline, fresh.as_deref(), tolerance)?;
+    if failures.is_empty() {
+        match fresh {
+            Some(d) => println!(
+                "xtask bench-check: OK ({} vs baseline {})",
+                d.display(),
+                baseline.display()
+            ),
+            None => println!(
+                "xtask bench-check: OK (structural self-check of {})",
+                baseline.display()
+            ),
+        }
+        return Ok(());
+    }
+    for f in &failures {
+        eprintln!("{f}");
+    }
+    bail!("xtask bench-check: {} failure(s)", failures.len());
+}
+
+fn run_lint() -> Result<()> {
+    let repo = repo_root();
     let violations = lint::run(&repo)?;
     if violations.is_empty() {
         println!("xtask lint: OK");
