@@ -1,0 +1,11 @@
+//! icqfmt2 mapped-container validation + every mapped loader must be
+//! total on arbitrary bytes. Body shared with `tests/fuzz_smoke.rs`
+//! via `icq::fuzzing`.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    icq::fuzzing::fuzz_mapped_open(data);
+});

@@ -150,9 +150,12 @@ impl TensorPack {
         Ok(())
     }
 
+    /// Write the pack to `path` atomically: bytes go to a unique temp
+    /// file in the target directory, then `rename` into place — a
+    /// crashed exporter can never publish a torn snapshot for a
+    /// shard-server to load (or map).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        self.write_to(&mut f)
+        atomic_write(path.as_ref(), |w| self.write_to(w))
     }
 
     pub fn read_from(r: &mut impl Read) -> Result<Self> {
@@ -225,6 +228,41 @@ impl TensorPack {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         Self::read_from(&mut f)
     }
+}
+
+/// Run `write` against a buffered temp file created next to `path`
+/// (same directory, so the final `rename` cannot cross filesystems),
+/// fsync it, and rename it into place. On any failure the temp file is
+/// removed and `path` is left untouched — readers only ever observe
+/// either the old complete file or the new complete file.
+pub(crate) fn atomic_write(
+    path: &Path,
+    write: impl FnOnce(&mut std::io::BufWriter<std::fs::File>) -> Result<()>,
+) -> Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let base = path.file_name().and_then(|n| n.to_str()).unwrap_or("snapshot");
+    let tmp_name = format!(
+        ".{base}.tmp-{}-{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    );
+    let tmp = match path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        Some(dir) => dir.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    let result = (|| -> Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        write(&mut w)?;
+        w.flush()?;
+        w.get_ref().sync_all()?;
+        Ok(())
+    })()
+    .and_then(|()| Ok(std::fs::rename(&tmp, path)?));
+    if result.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    result
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
@@ -345,6 +383,46 @@ mod tests {
         assert_eq!(p.scalar_f32("sigma").unwrap(), 2.5);
         assert_eq!(p.scalar_i32("fast_k").unwrap(), 3);
         assert!(p.scalar_f32("fast_k").is_err()); // wrong dtype
+    }
+
+    #[test]
+    fn save_is_atomic_overwrite_with_no_temp_litter() {
+        let dir = std::env::temp_dir()
+            .join(format!("icqfmt_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.icqf");
+        let mut p = TensorPack::new();
+        p.insert_i32("a", vec![2], vec![1, 2]);
+        p.save(&path).unwrap();
+        // overwrite with different content — the rename publishes the
+        // new file whole or not at all
+        let mut q = TensorPack::new();
+        q.insert_i32("a", vec![3], vec![7, 8, 9]);
+        q.save(&path).unwrap();
+        assert_eq!(TensorPack::load(&path).unwrap(), q);
+        let entries: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(entries, vec!["snap.icqf".to_string()], "{entries:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_atomic_write_removes_temp_and_keeps_old_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("icqfmt_atomic_fail_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.icqf");
+        let mut p = TensorPack::new();
+        p.insert_i32("a", vec![1], vec![5]);
+        p.save(&path).unwrap();
+        let err = atomic_write(&path, |_| anyhow::bail!("boom"));
+        assert!(err.is_err());
+        // the old snapshot survives untouched and no temp file remains
+        assert_eq!(TensorPack::load(&path).unwrap(), p);
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

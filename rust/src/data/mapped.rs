@@ -1,0 +1,1215 @@
+//! icqfmt2 — the aligned, versioned, `mmap`-able tensor container, and
+//! the copy-on-write storage backing (`CowSlice`) that makes the search
+//! stack generic over owned-heap vs mapped-file code storage.
+//!
+//! # Why a second container
+//!
+//! icqfmt v1 ([`super::format`]) is a streaming format: tensors are
+//! parsed element by element into owned heap memory, so snapshot load
+//! time and RSS scale with index size, and N shard-server processes on
+//! one box hold N private copies of the same codes. icqfmt2 lays the
+//! payload out so a reader can `mmap` the file and search it *in
+//! place*: load cost becomes O(metadata), resident memory is whatever
+//! the scan actually touches, and co-located processes share pages
+//! through the kernel page cache.
+//!
+//! # Byte layout
+//!
+//! ```text
+//! offset   size  field
+//! ------   ----  -----------------------------------------------
+//!      0      4  magic  "ICQ2"
+//!      4      4  format version (u32 LE) = 2
+//!      8      4  endianness tag: the bytes of 0x01020304 stored
+//!                little-endian; a reader re-assembles them with
+//!                NATIVE order and requires 0x01020304, so a
+//!                big-endian host fails closed instead of
+//!                reinterpreting the payload wrong
+//!     12      4  segment alignment A (u32 LE, power of two >= 8;
+//!                the writer uses 4096 so segments are page-aligned)
+//!     16      8  n_entries (u64 LE)
+//!     24      8  dir_len: directory byte length (u64 LE)
+//!     32      4  dir_crc: CRC32 of the directory bytes (u32 LE)
+//!     36      4  header_crc: CRC32 of bytes [0, 36) (u32 LE)
+//!     40     24  reserved, must be zero
+//!     64      D  directory: n_entries records, each
+//!                  name_len u16 | name utf-8 | dtype u8 | ndims u8
+//!                  | ndims x dim u64 | offset u64 | byte_len u64
+//!   ....          zero padding to the next multiple of A
+//!  off_i  len_i  payload segment i: raw little-endian elements,
+//!                offset % A == 0, segments non-overlapping
+//! ```
+//!
+//! Dtype tags match icqfmt v1: 0 = f32, 1 = i32, 2 = u16, 3 = u8.
+//!
+//! # Validate before map
+//!
+//! [`MappedPack::open`] reads the fixed-offset header and the directory
+//! with ordinary `File` reads and fully validates them — magic,
+//! version, endianness, both CRCs, name/dim bounds, checked size
+//! products, per-segment alignment, in-file bounds, and pairwise
+//! non-overlap — *before* the file is mapped. Validation never touches
+//! a payload page, so a truncated or hostile file is rejected without
+//! faulting in (or allocating) any payload, and after `open` succeeds
+//! every [`SegmentSlice`] handed out is in bounds and aligned by
+//! construction.
+//!
+//! # Trust model
+//!
+//! Structural metadata is CRC-checked and validated at open. Payload
+//! *values* (e.g. code indices) are not scanned — doing so would fault
+//! in every page and defeat the zero-copy open. The search kernels
+//! index LUT rows with safe (bounds-checked or masked) lookups, so a
+//! snapshot with corrupt code values can mis-score or panic a search,
+//! never corrupt memory. Callers who need value-level validation can
+//! round-trip through [`MappedPack::to_tensor_pack`] and the owned
+//! loaders. A mapped file must also not be truncated or rewritten in
+//! place while a reader holds it (inherent to `mmap`; the atomic
+//! rename writers below never modify a published file in place).
+//!
+//! # Unsafe surface
+//!
+//! All `unsafe` in the storage layer lives in this module (enforced by
+//! `cargo xtask lint`'s allowlist): the two raw `mmap`/`munmap` calls,
+//! and the byte -> typed-slice casts whose alignment/bounds are
+//! established once at open.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Read;
+use std::marker::PhantomData;
+use std::ops::{Deref, Range};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::format::{Tensor, TensorPack};
+use crate::coordinator::wire::crc32;
+
+/// icqfmt2 magic bytes.
+pub const MAGIC2: &[u8; 4] = b"ICQ2";
+/// icqfmt2 format version.
+pub const VERSION2: u32 = 2;
+/// Endianness probe value (see the module docs for how it is checked).
+const ENDIAN_TAG: u32 = 0x0102_0304;
+/// Fixed header length; the directory always starts here.
+const HEADER_LEN: usize = 64;
+/// Segment alignment the writer emits (one page on every supported
+/// target, so mapped segments are page-aligned and page-cache-shared).
+pub const SEGMENT_ALIGN: usize = 4096;
+/// Hard cap on directory entries a reader will accept.
+const MAX_ENTRIES: u64 = 1 << 16;
+/// Hard cap on the directory byte length a reader will accept.
+const MAX_DIR_LEN: u64 = 1 << 26;
+/// Bounds shared with icqfmt v1.
+const MAX_NAME: usize = 4096;
+const MAX_DIMS: usize = 8;
+
+fn elem_size(dtype: u8) -> Option<usize> {
+    match dtype {
+        0 | 1 => Some(4), // f32, i32
+        2 => Some(2),     // u16
+        3 => Some(1),     // u8
+        _ => None,
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+    impl Sealed for u16 {}
+    impl Sealed for u8 {}
+}
+
+/// Element types that may view mapped bytes in place: fixed-size
+/// primitives for which every bit pattern is a valid value. Sealed —
+/// the byte -> slice cast in [`SegmentSlice`] is only sound for these.
+pub trait Scalar:
+    sealed::Sealed + Copy + PartialEq + std::fmt::Debug + Send + Sync + 'static
+{
+    /// icqfmt dtype tag for this element type.
+    const DTYPE: u8;
+}
+
+impl Scalar for f32 {
+    const DTYPE: u8 = 0;
+}
+impl Scalar for i32 {
+    const DTYPE: u8 = 1;
+}
+impl Scalar for u16 {
+    const DTYPE: u8 = 2;
+}
+impl Scalar for u8 {
+    const DTYPE: u8 = 3;
+}
+
+// ---------------------------------------------------------------------------
+// Backing storage: an owned 8-byte-aligned buffer, or a real mapping.
+// ---------------------------------------------------------------------------
+
+/// Owned byte buffer whose base pointer is 8-byte aligned (it borrows a
+/// `Vec<u64>`'s allocation), so the same offset arithmetic that holds
+/// for page-aligned mappings holds for heap-backed packs: any segment
+/// offset that is a multiple of the file alignment (>= 8) is aligned
+/// for every element type we store (max align 4).
+pub(crate) struct AlignedBytes {
+    storage: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBytes {
+    fn from_slice(b: &[u8]) -> Self {
+        let mut storage = vec![0u64; b.len().div_ceil(8)];
+        if !b.is_empty() {
+            // SAFETY: `storage` owns `b.len().div_ceil(8) * 8 >=
+            // b.len()` writable bytes; u8 has alignment 1; the ranges
+            // cannot overlap (fresh allocation).
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    b.as_ptr(),
+                    storage.as_mut_ptr() as *mut u8,
+                    b.len(),
+                );
+            }
+        }
+        Self { storage, len: b.len() }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        // SAFETY: the storage allocation holds at least `self.len`
+        // initialized bytes (zero-filled at construction, then
+        // overwritten); u8 has alignment 1 and any bit pattern is
+        // valid; the borrow is tied to &self.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.storage.as_ptr() as *const u8,
+                self.len,
+            )
+        }
+    }
+}
+
+impl std::fmt::Debug for AlignedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBytes({} bytes)", self.len)
+    }
+}
+
+/// Read-only `mmap(2)` of a whole file, unmapped on drop. 64-bit unix
+/// only (the hand-declared prototype assumes a 64-bit `off_t`); other
+/// targets fall back to the owned heap backing.
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod mm {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    use anyhow::{ensure, Result};
+
+    // Hand-declared prototypes: libc is always linked on unix targets
+    // and the vendored registry has no libc crate to import.
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_SHARED: i32 = 1;
+
+    /// RAII read-only mapping of `len` bytes of a file.
+    pub(super) struct Mmap {
+        ptr: *mut u8,
+        len: usize,
+    }
+
+    impl Mmap {
+        pub(super) fn map(file: &File, len: usize) -> Result<Self> {
+            ensure!(len > 0, "cannot mmap an empty file");
+            // SAFETY: a fresh read-only shared mapping of `len` bytes
+            // of an open fd at offset 0; the kernel picks the address
+            // (addr hint null). The caller verified the file is at
+            // least `len` bytes long, so no access through the
+            // returned pages faults past EOF. The result is checked
+            // against MAP_FAILED below before use.
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_SHARED,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            ensure!(
+                ptr as isize != -1, // MAP_FAILED
+                "mmap failed: {}",
+                std::io::Error::last_os_error()
+            );
+            Ok(Self { ptr, len })
+        }
+
+        pub(super) fn bytes(&self) -> &[u8] {
+            // SAFETY: `ptr` is a live PROT_READ mapping of exactly
+            // `len` bytes (unmapped only in Drop); u8 has alignment 1
+            // and any bit pattern is valid; the borrow is tied to
+            // &self, which outlives no Drop.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            // SAFETY: `ptr`/`len` came from a successful mmap and are
+            // unmapped exactly once, here.
+            let _ = unsafe { munmap(self.ptr, self.len) };
+        }
+    }
+
+    impl std::fmt::Debug for Mmap {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "Mmap({} bytes)", self.len)
+        }
+    }
+
+    // SAFETY: the mapping is read-only (PROT_READ) and owned solely by
+    // this handle, so moving it or reading it from multiple threads
+    // is a data-race-free read of immutable memory.
+    unsafe impl Send for Mmap {}
+    // SAFETY: as above — shared &Mmap access only ever reads a
+    // read-only mapping.
+    unsafe impl Sync for Mmap {}
+}
+
+/// Where a pack's payload bytes live.
+#[derive(Debug)]
+pub(crate) enum Backing {
+    /// Owned heap copy (8-byte-aligned base).
+    Heap(AlignedBytes),
+    /// Live read-only file mapping (page-aligned base).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Map(mm::Mmap),
+}
+
+impl Backing {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            Backing::Heap(b) => b.bytes(),
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Map(m) => m.bytes(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy typed views.
+// ---------------------------------------------------------------------------
+
+/// A typed view of one validated byte range of a [`Backing`].
+///
+/// Invariant (established at construction and preserved by
+/// [`SegmentSlice::slice`]): `byte_off + len * size_of::<T>()` is in
+/// bounds of the backing, and `byte_off` is a multiple of
+/// `size_of::<T>()` offset from an `align`-aligned segment start, so
+/// `base + byte_off` is aligned for `T` (backing bases are >= 8-byte
+/// aligned and segment alignment is >= 8).
+pub struct SegmentSlice<T: Scalar> {
+    backing: Arc<Backing>,
+    byte_off: usize,
+    len: usize,
+    _marker: PhantomData<T>,
+}
+
+impl<T: Scalar> SegmentSlice<T> {
+    fn new(backing: Arc<Backing>, byte_off: usize, len: usize) -> Self {
+        debug_assert!(byte_off % std::mem::size_of::<T>() == 0);
+        debug_assert!(
+            byte_off + len * std::mem::size_of::<T>() <= backing.bytes().len()
+        );
+        Self { backing, byte_off, len, _marker: PhantomData }
+    }
+
+    /// Number of elements in the view.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Zero-copy sub-view of an element range (used to cut IVF cells
+    /// and shard rows out of one cell-major mapped segment).
+    pub fn slice(&self, r: Range<usize>) -> SegmentSlice<T> {
+        assert!(r.start <= r.end && r.end <= self.len, "slice out of range");
+        SegmentSlice::new(
+            self.backing.clone(),
+            self.byte_off + r.start * std::mem::size_of::<T>(),
+            r.end - r.start,
+        )
+    }
+}
+
+impl<T: Scalar> Deref for SegmentSlice<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        let base = self.backing.bytes();
+        // SAFETY: by the struct invariant the range is in bounds of
+        // `base` and `base.as_ptr() + byte_off` is aligned for T; T is
+        // a sealed primitive for which every bit pattern is valid; the
+        // backing is immutable and kept alive by the Arc for at least
+        // the borrow of &self.
+        unsafe {
+            std::slice::from_raw_parts(
+                base.as_ptr().add(self.byte_off) as *const T,
+                self.len,
+            )
+        }
+    }
+}
+
+impl<T: Scalar> Clone for SegmentSlice<T> {
+    fn clone(&self) -> Self {
+        Self {
+            backing: self.backing.clone(),
+            byte_off: self.byte_off,
+            len: self.len,
+            _marker: PhantomData,
+        }
+    }
+}
+
+impl<T: Scalar> PartialEq for SegmentSlice<T> {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+impl<T: Scalar> std::fmt::Debug for SegmentSlice<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SegmentSlice(len={})", self.len)
+    }
+}
+
+/// Element storage that is either an owned `Vec` (today's heap path,
+/// unchanged) or a zero-copy view of a mapped snapshot. Reads go
+/// through `Deref<Target = [T]>` either way; the rare mutation
+/// ([`CowSlice::to_mut`]) copies a mapped view out first — classic
+/// copy-on-write, so index *construction* paths stay owned and mapped
+/// indexes stay read-only views.
+pub enum CowSlice<T: Scalar> {
+    /// Owned heap storage.
+    Owned(Vec<T>),
+    /// Borrowed view of a mapped (or heap-backed) snapshot segment.
+    Mapped(SegmentSlice<T>),
+}
+
+impl<T: Scalar> CowSlice<T> {
+    /// Mutable access to the elements, copying a mapped view into
+    /// owned storage first (copy-on-write).
+    pub fn to_mut(&mut self) -> &mut Vec<T> {
+        if let CowSlice::Mapped(s) = self {
+            *self = CowSlice::Owned(s.to_vec());
+        }
+        match self {
+            CowSlice::Owned(v) => v,
+            CowSlice::Mapped(_) => unreachable!("replaced above"),
+        }
+    }
+
+    /// Sub-range view: zero-copy for mapped storage, a copy for owned.
+    pub fn slice(&self, r: Range<usize>) -> CowSlice<T> {
+        match self {
+            CowSlice::Owned(v) => CowSlice::Owned(v[r].to_vec()),
+            CowSlice::Mapped(s) => CowSlice::Mapped(s.slice(r)),
+        }
+    }
+
+    /// Whether this storage views a mapped snapshot (false = owned).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, CowSlice::Mapped(_))
+    }
+}
+
+impl<T: Scalar> Deref for CowSlice<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        match self {
+            CowSlice::Owned(v) => v,
+            CowSlice::Mapped(s) => s,
+        }
+    }
+}
+
+impl<T: Scalar> From<Vec<T>> for CowSlice<T> {
+    fn from(v: Vec<T>) -> Self {
+        CowSlice::Owned(v)
+    }
+}
+
+impl<T: Scalar> Default for CowSlice<T> {
+    fn default() -> Self {
+        CowSlice::Owned(Vec::new())
+    }
+}
+
+impl<T: Scalar> Clone for CowSlice<T> {
+    fn clone(&self) -> Self {
+        match self {
+            CowSlice::Owned(v) => CowSlice::Owned(v.clone()),
+            CowSlice::Mapped(s) => CowSlice::Mapped(s.clone()),
+        }
+    }
+}
+
+impl<T: Scalar> PartialEq for CowSlice<T> {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+impl<T: Scalar> std::fmt::Debug for CowSlice<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        (**self).fmt(f)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Directory parsing + validation (never touches payload bytes).
+// ---------------------------------------------------------------------------
+
+/// One validated directory entry.
+#[derive(Clone, Debug, PartialEq)]
+struct Entry {
+    dtype: u8,
+    dims: Vec<usize>,
+    offset: usize,
+    byte_len: usize,
+}
+
+fn le_u16(b: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes([b[at], b[at + 1]])
+}
+
+fn le_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn le_u64(b: &[u8], at: usize) -> u64 {
+    let mut x = [0u8; 8];
+    x.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(x)
+}
+
+/// Validated header fields needed to read the directory.
+struct Header {
+    align: usize,
+    n_entries: u64,
+    dir_len: usize,
+    dir_crc: u32,
+}
+
+/// Parse + validate the fixed 64-byte header (magic, version,
+/// endianness, alignment, bounds, header CRC, reserved zeros).
+fn parse_header(h: &[u8; HEADER_LEN], file_len: u64) -> Result<Header> {
+    ensure!(&h[0..4] == MAGIC2, "bad icqfmt2 magic {:?}", &h[0..4]);
+    let version = le_u32(h, 4);
+    ensure!(version == VERSION2, "unsupported icqfmt2 version {version}");
+    // Native-order probe of the little-endian tag bytes: only equal to
+    // ENDIAN_TAG on a little-endian host (see module docs).
+    let endian = u32::from_ne_bytes([h[8], h[9], h[10], h[11]]);
+    ensure!(
+        endian == ENDIAN_TAG,
+        "snapshot byte order does not match this host \
+         (icqfmt2 payloads are little-endian)"
+    );
+    let align = le_u32(h, 12) as usize;
+    ensure!(
+        align.is_power_of_two() && (8..=(1 << 20)).contains(&align),
+        "bad segment alignment {align} (want a power of two in [8, 2^20])"
+    );
+    let n_entries = le_u64(h, 16);
+    ensure!(n_entries <= MAX_ENTRIES, "too many segments ({n_entries})");
+    let dir_len = le_u64(h, 24);
+    ensure!(dir_len <= MAX_DIR_LEN, "directory too long ({dir_len} bytes)");
+    ensure!(
+        HEADER_LEN as u64 + dir_len <= file_len,
+        "directory (len {dir_len}) runs past end of file (len {file_len})"
+    );
+    let dir_crc = le_u32(h, 32);
+    let header_crc = le_u32(h, 36);
+    let computed = crc32(&h[0..36]);
+    ensure!(
+        header_crc == computed,
+        "header CRC mismatch (stored {header_crc:#010x}, \
+         computed {computed:#010x})"
+    );
+    ensure!(
+        h[40..HEADER_LEN].iter().all(|&b| b == 0),
+        "reserved header bytes are not zero"
+    );
+    Ok(Header {
+        align,
+        n_entries,
+        dir_len: dir_len as usize,
+        dir_crc,
+    })
+}
+
+/// Parse + validate the directory bytes against the (untouched) file
+/// geometry: CRC, exact consumption, per-entry bounds, checked size
+/// products, alignment, in-file placement after the metadata, and
+/// pairwise non-overlap.
+fn parse_dir(
+    dir: &[u8],
+    hdr: &Header,
+    file_len: u64,
+) -> Result<BTreeMap<String, Entry>> {
+    let computed = crc32(dir);
+    ensure!(
+        computed == hdr.dir_crc,
+        "directory CRC mismatch (stored {:#010x}, computed {computed:#010x})",
+        hdr.dir_crc
+    );
+    let meta_end = (HEADER_LEN + dir.len()) as u64;
+    let mut entries = BTreeMap::new();
+    let mut spans: Vec<(u64, u64, String)> = Vec::new();
+    let mut at = 0usize;
+    for _ in 0..hdr.n_entries {
+        ensure!(at + 2 <= dir.len(), "directory truncated (name length)");
+        let name_len = le_u16(dir, at) as usize;
+        at += 2;
+        ensure!(name_len <= MAX_NAME, "segment name too long ({name_len})");
+        ensure!(at + name_len <= dir.len(), "directory truncated (name)");
+        let name = std::str::from_utf8(&dir[at..at + name_len])
+            .context("segment name is not utf-8")?
+            .to_string();
+        at += name_len;
+        ensure!(at + 2 <= dir.len(), "directory truncated (dtype/ndims)");
+        let dtype = dir[at];
+        let ndims = dir[at + 1] as usize;
+        at += 2;
+        let Some(elem) = elem_size(dtype) else {
+            bail!("segment '{name}': unknown dtype tag {dtype}");
+        };
+        ensure!(ndims <= MAX_DIMS, "segment '{name}': too many dims ({ndims})");
+        ensure!(
+            at + ndims * 8 + 16 <= dir.len(),
+            "directory truncated (dims/extent of '{name}')"
+        );
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            let d = le_u64(dir, at);
+            at += 8;
+            ensure!(
+                d <= usize::MAX as u64,
+                "segment '{name}': dim {d} overflows usize"
+            );
+            dims.push(d as usize);
+        }
+        let offset = le_u64(dir, at);
+        let byte_len = le_u64(dir, at + 8);
+        at += 16;
+        let count = dims
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .with_context(|| {
+                format!("segment '{name}': element count overflows usize")
+            })?;
+        let expect_bytes = count.checked_mul(elem).with_context(|| {
+            format!("segment '{name}': byte length overflows usize")
+        })?;
+        ensure!(
+            byte_len == expect_bytes as u64,
+            "segment '{name}': stored byte length {byte_len} != \
+             dims x elem_size = {expect_bytes}"
+        );
+        ensure!(
+            offset % hdr.align as u64 == 0,
+            "segment '{name}': offset {offset} is not {}-byte aligned",
+            hdr.align
+        );
+        ensure!(
+            offset >= meta_end,
+            "segment '{name}': offset {offset} overlaps the \
+             header/directory (ends at {meta_end})"
+        );
+        let end = offset.checked_add(byte_len).with_context(|| {
+            format!("segment '{name}': extent overflows u64")
+        })?;
+        ensure!(
+            end <= file_len,
+            "segment '{name}': extent [{offset}, {end}) runs past end of \
+             file (len {file_len})"
+        );
+        spans.push((offset, end, name.clone()));
+        let prev = entries.insert(
+            name.clone(),
+            Entry {
+                dtype,
+                dims,
+                offset: offset as usize,
+                byte_len: byte_len as usize,
+            },
+        );
+        ensure!(prev.is_none(), "duplicate segment name '{name}'");
+    }
+    ensure!(
+        at == dir.len(),
+        "directory has {} trailing bytes after {} entries",
+        dir.len() - at,
+        hdr.n_entries
+    );
+    spans.sort();
+    for w in spans.windows(2) {
+        let (_, a_end, a_name) = &w[0];
+        let (b_off, _, b_name) = &w[1];
+        ensure!(
+            a_end <= b_off,
+            "segments '{a_name}' and '{b_name}' overlap"
+        );
+    }
+    Ok(entries)
+}
+
+// ---------------------------------------------------------------------------
+// The pack.
+// ---------------------------------------------------------------------------
+
+/// An opened icqfmt2 container: validated directory + payload backing
+/// (a live `mmap` or an owned aligned buffer). Cloning shares the
+/// backing.
+#[derive(Clone, Debug)]
+pub struct MappedPack {
+    backing: Arc<Backing>,
+    entries: BTreeMap<String, Entry>,
+}
+
+impl MappedPack {
+    /// Open a snapshot zero-copy: validate header + directory with
+    /// plain file reads (no payload page is touched), then `mmap` the
+    /// file read-only. On targets without the mmap binding this falls
+    /// back to [`MappedPack::open_owned`].
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            let mut f = File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?;
+            let file_len = f.metadata()?.len();
+            let mut h = [0u8; HEADER_LEN];
+            f.read_exact(&mut h).context("reading icqfmt2 header")?;
+            let hdr = parse_header(&h, file_len)?;
+            let mut dir = vec![0u8; hdr.dir_len];
+            f.read_exact(&mut dir).context("reading icqfmt2 directory")?;
+            let entries = parse_dir(&dir, &hdr, file_len)?;
+            let map = mm::Mmap::map(&f, file_len as usize)?;
+            Ok(Self { backing: Arc::new(Backing::Map(map)), entries })
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            Self::open_owned(path)
+        }
+    }
+
+    /// Open a snapshot through the same validator but with the whole
+    /// file copied into an owned (8-byte-aligned) heap buffer — the
+    /// non-`--mmap` path for icqfmt2 files, and the fallback on
+    /// targets without the mmap binding.
+    pub fn open_owned(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Validate and adopt an in-memory icqfmt2 image (heap backing).
+    /// This is the same validator `open` runs — the fuzz target drives
+    /// it with arbitrary bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let file_len = bytes.len() as u64;
+        ensure!(
+            bytes.len() >= HEADER_LEN,
+            "file too short for an icqfmt2 header ({} bytes)",
+            bytes.len()
+        );
+        let mut h = [0u8; HEADER_LEN];
+        h.copy_from_slice(&bytes[..HEADER_LEN]);
+        let hdr = parse_header(&h, file_len)?;
+        let dir = &bytes[HEADER_LEN..HEADER_LEN + hdr.dir_len];
+        let entries = parse_dir(dir, &hdr, file_len)?;
+        Ok(Self {
+            backing: Arc::new(Backing::Heap(AlignedBytes::from_slice(bytes))),
+            entries,
+        })
+    }
+
+    /// Whether the container holds a segment named `name`.
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// Segment names, sorted.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    /// Dims of segment `name`.
+    pub fn dims(&self, name: &str) -> Result<&[usize]> {
+        Ok(&self.entry(name)?.dims)
+    }
+
+    fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing segment '{name}'"))
+    }
+
+    /// Typed zero-copy view of segment `name` (dtype-checked).
+    pub fn segment<T: Scalar>(
+        &self,
+        name: &str,
+    ) -> Result<(&[usize], SegmentSlice<T>)> {
+        let e = self.entry(name)?;
+        ensure!(
+            e.dtype == T::DTYPE,
+            "segment '{name}' has dtype tag {} (wanted {})",
+            e.dtype,
+            T::DTYPE
+        );
+        let len = e.byte_len / std::mem::size_of::<T>();
+        Ok((
+            &e.dims,
+            SegmentSlice::new(self.backing.clone(), e.offset, len),
+        ))
+    }
+
+    /// Scalar convenience (first element of a 1-element i32 segment).
+    pub fn scalar_i32(&self, name: &str) -> Result<i32> {
+        let (_, s) = self.segment::<i32>(name)?;
+        ensure!(!s.is_empty(), "empty segment '{name}'");
+        Ok(s[0])
+    }
+
+    /// Scalar convenience (first element of a 1-element f32 segment).
+    pub fn scalar_f32(&self, name: &str) -> Result<f32> {
+        let (_, s) = self.segment::<f32>(name)?;
+        ensure!(!s.is_empty(), "empty segment '{name}'");
+        Ok(s[0])
+    }
+
+    /// Copy every segment out into an owned [`TensorPack`] (the v1
+    /// in-memory form) — the escape hatch back to the owned loaders.
+    pub fn to_tensor_pack(&self) -> Result<TensorPack> {
+        let mut pack = TensorPack::new();
+        for name in self.entries.keys() {
+            let e = &self.entries[name];
+            let dims = e.dims.clone();
+            let t = match e.dtype {
+                0 => {
+                    let (_, s) = self.segment::<f32>(name)?;
+                    Tensor::F32 { dims, data: s.to_vec() }
+                }
+                1 => {
+                    let (_, s) = self.segment::<i32>(name)?;
+                    Tensor::I32 { dims, data: s.to_vec() }
+                }
+                2 => {
+                    let (_, s) = self.segment::<u16>(name)?;
+                    Tensor::U16 { dims, data: s.to_vec() }
+                }
+                _ => {
+                    let (_, s) = self.segment::<u8>(name)?;
+                    Tensor::U8 { dims, data: s.to_vec() }
+                }
+            };
+            pack.tensors.insert(name.clone(), t);
+        }
+        Ok(pack)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer.
+// ---------------------------------------------------------------------------
+
+fn round_up(x: usize, a: usize) -> usize {
+    x.div_ceil(a) * a
+}
+
+fn tensor_dtype_elem(t: &Tensor) -> (u8, usize) {
+    match t {
+        Tensor::F32 { .. } => (0, 4),
+        Tensor::I32 { .. } => (1, 4),
+        Tensor::U16 { .. } => (2, 2),
+        Tensor::U8 { .. } => (3, 1),
+    }
+}
+
+fn tensor_le_bytes(t: &Tensor, out: &mut Vec<u8>) {
+    match t {
+        Tensor::F32 { data, .. } => {
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Tensor::I32 { data, .. } => {
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Tensor::U16 { data, .. } => {
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Tensor::U8 { data, .. } => out.extend_from_slice(data),
+    }
+}
+
+/// Serialize `pack` as an icqfmt2 image (page-aligned segments,
+/// CRC-protected metadata). Deterministic: tensors are laid out in
+/// name order.
+pub fn write_mapped(pack: &TensorPack) -> Vec<u8> {
+    // Directory first (its length decides where payloads start).
+    struct Placed<'p> {
+        name: &'p str,
+        t: &'p Tensor,
+        dtype: u8,
+        byte_len: usize,
+        offset: usize,
+    }
+    let mut placed: Vec<Placed<'_>> = pack
+        .tensors
+        .iter()
+        .map(|(name, t)| {
+            let (dtype, elem) = tensor_dtype_elem(t);
+            Placed {
+                name,
+                t,
+                dtype,
+                byte_len: t.len() * elem,
+                offset: 0,
+            }
+        })
+        .collect();
+    let dir_len: usize = placed
+        .iter()
+        .map(|p| 2 + p.name.len() + 2 + p.t.dims().len() * 8 + 16)
+        .sum();
+    let mut at = round_up(HEADER_LEN + dir_len, SEGMENT_ALIGN);
+    for p in &mut placed {
+        p.offset = at;
+        at = round_up(at + p.byte_len, SEGMENT_ALIGN);
+    }
+    let total = placed
+        .last()
+        .map_or(HEADER_LEN + dir_len, |p| p.offset + p.byte_len);
+
+    let mut dir = Vec::with_capacity(dir_len);
+    for p in &placed {
+        dir.extend_from_slice(&(p.name.len() as u16).to_le_bytes());
+        dir.extend_from_slice(p.name.as_bytes());
+        dir.push(p.dtype);
+        dir.push(p.t.dims().len() as u8);
+        for &d in p.t.dims() {
+            dir.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        dir.extend_from_slice(&(p.offset as u64).to_le_bytes());
+        dir.extend_from_slice(&(p.byte_len as u64).to_le_bytes());
+    }
+    debug_assert_eq!(dir.len(), dir_len);
+
+    let mut out = Vec::with_capacity(total);
+    out.extend_from_slice(MAGIC2);
+    out.extend_from_slice(&VERSION2.to_le_bytes());
+    out.extend_from_slice(&ENDIAN_TAG.to_le_bytes());
+    out.extend_from_slice(&(SEGMENT_ALIGN as u32).to_le_bytes());
+    out.extend_from_slice(&(placed.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(dir_len as u64).to_le_bytes());
+    out.extend_from_slice(&crc32(&dir).to_le_bytes());
+    let header_crc = crc32(&out);
+    out.extend_from_slice(&header_crc.to_le_bytes());
+    out.resize(HEADER_LEN, 0);
+    out.extend_from_slice(&dir);
+    for p in &placed {
+        out.resize(p.offset, 0);
+        tensor_le_bytes(p.t, &mut out);
+    }
+    out
+}
+
+/// Write `pack` to `path` as icqfmt2, atomically (temp file in the
+/// target directory + rename — see [`super::format::atomic_write`]).
+pub fn save_mapped(pack: &TensorPack, path: impl AsRef<Path>) -> Result<()> {
+    let bytes = write_mapped(pack);
+    super::format::atomic_write(path.as_ref(), |w| {
+        use std::io::Write;
+        w.write_all(&bytes)?;
+        Ok(())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Container format sniffing.
+// ---------------------------------------------------------------------------
+
+/// Which container a snapshot file uses, decided by its magic bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ContainerFormat {
+    /// icqfmt v1 — streaming owned-heap container (`b"ICQF"`).
+    PackV1,
+    /// icqfmt2 — aligned mmap-able container (`b"ICQ2"`).
+    MappedV2,
+}
+
+/// Sniff a snapshot file's container format from its magic bytes.
+pub fn sniff_container(path: impl AsRef<Path>) -> Result<ContainerFormat> {
+    let path = path.as_ref();
+    let mut f = File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)
+        .with_context(|| format!("reading magic of {}", path.display()))?;
+    match &magic {
+        m if m == MAGIC2 => Ok(ContainerFormat::MappedV2),
+        b"ICQF" => Ok(ContainerFormat::PackV1),
+        m => bail!("{}: unknown snapshot magic {m:?}", path.display()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_pack() -> TensorPack {
+        let mut p = TensorPack::new();
+        p.insert_f32("cb", vec![2, 3], vec![1., -2., 3., 0.5, 0., 9.]);
+        p.insert_i32("labels", vec![4], vec![-1, 0, 7, 300]);
+        p.tensors.insert(
+            "codes".into(),
+            Tensor::U16 { dims: vec![2, 2], data: vec![9, 65535, 0, 1] },
+        );
+        p.tensors.insert(
+            "blk".into(),
+            Tensor::U8 { dims: vec![5], data: vec![0, 128, 255, 3, 4] },
+        );
+        p
+    }
+
+    #[test]
+    fn roundtrip_through_bytes() {
+        let p = sample_pack();
+        let bytes = write_mapped(&p);
+        let mp = MappedPack::from_bytes(&bytes).unwrap();
+        assert_eq!(mp.to_tensor_pack().unwrap(), p);
+        let (dims, s) = mp.segment::<f32>("cb").unwrap();
+        assert_eq!(dims, &[2, 3]);
+        assert_eq!(&s[..], &[1., -2., 3., 0.5, 0., 9.]);
+        let (_, codes) = mp.segment::<u16>("codes").unwrap();
+        assert_eq!(&codes[..], &[9, 65535, 0, 1]);
+        // dtype mismatch is a typed error
+        assert!(mp.segment::<i32>("cb").is_err());
+        assert!(mp.segment::<f32>("missing").is_err());
+    }
+
+    #[test]
+    fn segments_are_page_aligned_in_the_image() {
+        let bytes = write_mapped(&sample_pack());
+        let mp = MappedPack::from_bytes(&bytes).unwrap();
+        for name in ["cb", "labels", "codes", "blk"] {
+            assert_eq!(mp.entry(name).unwrap().offset % SEGMENT_ALIGN, 0);
+        }
+    }
+
+    #[test]
+    fn open_and_open_owned_agree() {
+        let dir = std::env::temp_dir()
+            .join(format!("icqfmt2-open-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.icqf");
+        let p = sample_pack();
+        save_mapped(&p, &path).unwrap();
+        assert_eq!(
+            sniff_container(&path).unwrap(),
+            ContainerFormat::MappedV2
+        );
+        let mapped = MappedPack::open(&path).unwrap();
+        let owned = MappedPack::open_owned(&path).unwrap();
+        assert_eq!(mapped.to_tensor_pack().unwrap(), p);
+        assert_eq!(owned.to_tensor_pack().unwrap(), p);
+        // no temp-file litter from the atomic writer
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["t.icqf".to_string()], "{names:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_files_sniff_as_pack() {
+        let dir = std::env::temp_dir()
+            .join(format!("icqfmt2-sniff-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.icqf");
+        sample_pack().save(&path).unwrap();
+        assert_eq!(sniff_container(&path).unwrap(), ContainerFormat::PackV1);
+        // and the v2 opener rejects it before touching payload
+        assert!(MappedPack::open(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncation_fails_closed() {
+        let bytes = write_mapped(&sample_pack());
+        for keep in
+            [0, 3, HEADER_LEN - 1, HEADER_LEN + 4, bytes.len() - 1]
+        {
+            assert!(
+                MappedPack::from_bytes(&bytes[..keep]).is_err(),
+                "truncation to {keep} bytes was accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn header_corruption_fails_closed() {
+        let good = write_mapped(&sample_pack());
+        // magic
+        let mut b = good.clone();
+        b[0] = b'X';
+        assert!(MappedPack::from_bytes(&b).is_err());
+        // version
+        let mut b = good.clone();
+        b[4] = 9;
+        assert!(MappedPack::from_bytes(&b).is_err());
+        // endianness tag (byte-swapped = a big-endian writer)
+        let mut b = good.clone();
+        b[8..12].reverse();
+        assert!(MappedPack::from_bytes(&b).is_err());
+        // alignment not a power of two (header CRC fixed up to prove
+        // the alignment check itself fires)
+        let mut b = good.clone();
+        b[12] = 7;
+        let crc = crc32(&b[0..36]).to_le_bytes();
+        b[36..40].copy_from_slice(&crc);
+        assert!(MappedPack::from_bytes(&b).is_err());
+        // header CRC
+        let mut b = good.clone();
+        b[16] ^= 1; // n_entries, covered by header_crc
+        assert!(MappedPack::from_bytes(&b).is_err());
+        // reserved bytes
+        let mut b = good.clone();
+        b[50] = 1;
+        assert!(MappedPack::from_bytes(&b).is_err());
+    }
+
+    /// Rewrite the directory through a mutator and fix up both CRCs so
+    /// only the targeted validation can reject the result.
+    fn with_dir(bytes: &[u8], f: impl FnOnce(&mut [u8])) -> Vec<u8> {
+        let mut b = bytes.to_vec();
+        let dir_len = le_u64(&b, 24) as usize;
+        f(&mut b[HEADER_LEN..HEADER_LEN + dir_len]);
+        let dir_crc = crc32(&b[HEADER_LEN..HEADER_LEN + dir_len]);
+        b[32..36].copy_from_slice(&dir_crc.to_le_bytes());
+        let hcrc = crc32(&b[0..36]);
+        b[36..40].copy_from_slice(&hcrc.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn directory_corruption_fails_closed() {
+        let good = write_mapped(&sample_pack());
+        // plain bit flip in the directory: caught by dir CRC
+        let mut b = good.clone();
+        b[HEADER_LEN + 1] ^= 0x40;
+        assert!(MappedPack::from_bytes(&b).is_err());
+
+        // first entry is "blk" (BTreeMap order): name_len 3 at 0,
+        // name at 2..5, dtype at 5, ndims at 6, dim u64 at 7..15,
+        // offset u64 at 15..23, byte_len u64 at 23..31.
+        // lying byte_len (!= dims * elem)
+        let b = with_dir(&good, |d| d[23] = d[23].wrapping_add(1));
+        assert!(MappedPack::from_bytes(&b).is_err());
+        // misaligned offset
+        let b = with_dir(&good, |d| d[15] = d[15].wrapping_add(1));
+        assert!(MappedPack::from_bytes(&b).is_err());
+        // offset pointing past EOF
+        let b = with_dir(&good, |d| d[20] = 0xFF);
+        assert!(MappedPack::from_bytes(&b).is_err());
+        // offset 0 — overlaps the header
+        let b = with_dir(&good, |d| {
+            for x in &mut d[15..23] {
+                *x = 0;
+            }
+        });
+        assert!(MappedPack::from_bytes(&b).is_err());
+        // overlapping segments: point "blk" at "cb"'s page
+        let cb_off = {
+            let mp = MappedPack::from_bytes(&good).unwrap();
+            mp.entry("cb").unwrap().offset as u64
+        };
+        let b = with_dir(&good, |d| {
+            d[15..23].copy_from_slice(&cb_off.to_le_bytes());
+        });
+        assert!(MappedPack::from_bytes(&b).is_err());
+        // bad dtype tag
+        let b = with_dir(&good, |d| d[5] = 9);
+        assert!(MappedPack::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn empty_pack_roundtrips() {
+        let p = TensorPack::new();
+        let bytes = write_mapped(&p);
+        let mp = MappedPack::from_bytes(&bytes).unwrap();
+        assert_eq!(mp.names().count(), 0);
+        assert_eq!(mp.to_tensor_pack().unwrap(), p);
+    }
+
+    #[test]
+    fn cow_slice_copy_on_write_and_subslice() {
+        let p = sample_pack();
+        let bytes = write_mapped(&p);
+        let mp = MappedPack::from_bytes(&bytes).unwrap();
+        let (_, s) = mp.segment::<i32>("labels").unwrap();
+        let mut cow = CowSlice::Mapped(s.clone());
+        assert!(cow.is_mapped());
+        assert_eq!(&cow[..], &[-1, 0, 7, 300]);
+        // equality is by contents, across variants
+        assert_eq!(cow, CowSlice::Owned(vec![-1, 0, 7, 300]));
+        // zero-copy subslice
+        let sub = cow.slice(1..3);
+        assert!(sub.is_mapped());
+        assert_eq!(&sub[..], &[0, 7]);
+        // mutation copies out; the mapped bytes are untouched
+        cow.to_mut()[0] = 42;
+        assert!(!cow.is_mapped());
+        assert_eq!(&cow[..], &[42, 0, 7, 300]);
+        assert_eq!(s[0], -1);
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let mut p = TensorPack::new();
+        p.insert_i32("fast_k", vec![1], vec![3]);
+        p.insert_f32("sigma", vec![1], vec![2.5]);
+        let mp = MappedPack::from_bytes(&write_mapped(&p)).unwrap();
+        assert_eq!(mp.scalar_i32("fast_k").unwrap(), 3);
+        assert_eq!(mp.scalar_f32("sigma").unwrap(), 2.5);
+        assert!(mp.scalar_i32("sigma").is_err());
+    }
+}

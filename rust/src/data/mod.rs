@@ -4,6 +4,7 @@
 
 pub mod format;
 pub mod loader;
+pub mod mapped;
 pub mod realworld;
 pub mod synthetic;
 

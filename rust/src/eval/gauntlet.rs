@@ -82,8 +82,10 @@ use crate::quantizer::sq::{Sq, SqOpts};
 /// Bump when a field is renamed/removed or its meaning changes in
 /// `BENCH_recall.json`; adding fields is backward compatible.
 pub const RECALL_SCHEMA_VERSION: f64 = 1.0;
-/// Same contract for `BENCH_serving.json`.
-pub const SERVING_SCHEMA_VERSION: f64 = 1.0;
+/// Same contract for `BENCH_serving.json`. 1.1 added the cold-start
+/// columns (`load_ms`, `peak_rss_bytes`) and the `serving/flat_mapped`
+/// row measuring the zero-copy icqfmt2 open.
+pub const SERVING_SCHEMA_VERSION: f64 = 1.1;
 /// Same contract for `BENCH_kernels.json`.
 pub const KERNELS_SCHEMA_VERSION: f64 = 1.0;
 
@@ -94,7 +96,8 @@ pub const RECALL_ROW_KEYS: &[&str] = &[
     "recall10_vs_flat", "qps",
 ];
 /// Keys every `BENCH_serving.json` row must carry.
-pub const SERVING_ROW_KEYS: &[&str] = &["id", "qps", "parity"];
+pub const SERVING_ROW_KEYS: &[&str] =
+    &["id", "qps", "parity", "load_ms", "peak_rss_bytes"];
 /// Keys every `BENCH_kernels.json` row must carry.
 pub const KERNELS_ROW_KEYS: &[&str] = &["id", "qps"];
 
@@ -535,11 +538,18 @@ fn measure_point(
 
 /// One serving-topology row: QPS plus the parity bit (always asserted
 /// true before timing — a row is only emitted for a topology whose
-/// results matched the flat searcher bitwise).
+/// results matched the flat searcher bitwise), plus the cold-start
+/// columns: `load_ms` / `peak_rss_bytes` measure opening a snapshot of
+/// the index from disk on the rows that have a load story
+/// (`serving/flat` = v1 owned deserialization, `serving/flat_mapped` =
+/// icqfmt2 validate-then-map) and are 0 elsewhere. Timing-class
+/// numbers: recorded in the artifact, never gated.
 struct ServingRow {
     id: String,
     qps: f64,
     parity: bool,
+    load_ms: f64,
+    peak_rss_bytes: f64,
 }
 
 /// The three artifacts of one gauntlet run.
@@ -568,6 +578,21 @@ fn common_header(p: &GauntletProfile, data: &GauntletData) -> BTreeMap<String, J
 /// deterministic in (profile, dataset); only `qps` varies run to run
 /// (see [`stable_subset`]).
 pub fn run(p: &GauntletProfile, data: &GauntletData) -> Result<GauntletReport> {
+    run_with(p, data, false)
+}
+
+/// [`run`] with the serving-container knob: `mmap = true` serves every
+/// local topology from a zero-copy mapped icqfmt2 snapshot of the ICQ
+/// index (written to a temp file, opened with `MappedPack::open`)
+/// instead of the in-memory build. Row ids are unchanged — the same
+/// committed baselines gate both modes — and parity is re-anchored
+/// against the owned index bitwise, so the flag can only change `qps`,
+/// never results. This is what `icq gauntlet --mmap` runs.
+pub fn run_with(
+    p: &GauntletProfile,
+    data: &GauntletData,
+    mmap: bool,
+) -> Result<GauntletReport> {
     let ops = Arc::new(OpCounter::new());
     let families = train_families(p, data);
     let mut rows: Vec<Json> = Vec::new();
@@ -672,7 +697,7 @@ pub fn run(p: &GauntletProfile, data: &GauntletData) -> Result<GauntletReport> {
 
     // --- serving topologies (operational ICQ index) ---
     let icq_fam = &families[0];
-    let serving_rows = serving_sweep(p, icq_fam)?;
+    let serving_rows = serving_sweep(p, icq_fam, mmap)?;
     let mut serving_obj = common_header(p, data);
     serving_obj.insert("bench".into(), Json::Str("gauntlet_serving".into()));
     serving_obj
@@ -688,6 +713,11 @@ pub fn run(p: &GauntletProfile, data: &GauntletData) -> Result<GauntletReport> {
                     o.insert("id".into(), Json::Str(r.id.clone()));
                     o.insert("qps".into(), Json::Num(r.qps));
                     o.insert("parity".into(), Json::Bool(r.parity));
+                    o.insert("load_ms".into(), Json::Num(r.load_ms));
+                    o.insert(
+                        "peak_rss_bytes".into(),
+                        Json::Num(r.peak_rss_bytes),
+                    );
                     Json::Obj(o)
                 })
                 .collect(),
@@ -725,20 +755,136 @@ pub fn run(p: &GauntletProfile, data: &GauntletData) -> Result<GauntletReport> {
 /// Serving rows use a production-shaped top-k.
 const SERVING_TOP_K: usize = 10;
 
+/// Cold-start cost of the two snapshot load paths, measured on real
+/// files of the same index.
+struct LoadCost {
+    owned_ms: f64,
+    owned_rss: f64,
+    mapped_ms: f64,
+    mapped_rss: f64,
+}
+
+/// Resident-set size of this process in bytes. Linux-only (`/proc`);
+/// 0.0 where unavailable — the artifact column is informational and
+/// never gated.
+fn current_rss_bytes() -> f64 {
+    #[cfg(target_os = "linux")]
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmRSS:") {
+                if let Some(kb) = rest
+                    .split_whitespace()
+                    .next()
+                    .and_then(|v| v.parse::<f64>().ok())
+                {
+                    return kb * 1024.0;
+                }
+            }
+        }
+    }
+    0.0
+}
+
+/// Measure cold-start load time and resident-set growth for both
+/// container formats of the same index: v1 full deserialization
+/// (`TensorPack::load` + `from_pack`) vs the icqfmt2 validate-then-map
+/// open, each min-of-5 on a freshly written temp file. The mapped open
+/// touches only header, directory, codebooks, and id maps — never a
+/// code page — which is the whole point of the format; these columns
+/// record that gap per run. RSS growth is a coarse process-level delta
+/// (allocator reuse can hide later iterations; we keep the max).
+fn measure_load(index: &EncodedIndex) -> Result<LoadCost> {
+    let tag = std::process::id();
+    let v1 = std::env::temp_dir().join(format!("icq-gauntlet-load-{tag}.icqf"));
+    let v2 = std::env::temp_dir().join(format!("icq-gauntlet-load-{tag}.icq2"));
+    index.to_pack().save(&v1).context("write v1 load probe")?;
+    crate::data::mapped::save_mapped(&index.to_mapped_tensors(), &v2)
+        .context("write icqfmt2 load probe")?;
+
+    let mut cost = LoadCost {
+        owned_ms: f64::INFINITY,
+        owned_rss: 0.0,
+        mapped_ms: f64::INFINITY,
+        mapped_rss: 0.0,
+    };
+    for _ in 0..5 {
+        let rss0 = current_rss_bytes();
+        let t = std::time::Instant::now();
+        let pack = crate::data::format::TensorPack::load(&v1)?;
+        let idx = EncodedIndex::from_pack(&pack)?;
+        cost.owned_ms = cost.owned_ms.min(t.elapsed().as_secs_f64() * 1e3);
+        cost.owned_rss =
+            cost.owned_rss.max((current_rss_bytes() - rss0).max(0.0));
+        black_box(&idx);
+    }
+    for _ in 0..5 {
+        let rss0 = current_rss_bytes();
+        let t = std::time::Instant::now();
+        let mp = crate::data::mapped::MappedPack::open(&v2)?;
+        let idx = EncodedIndex::from_mapped(&mp)?;
+        cost.mapped_ms = cost.mapped_ms.min(t.elapsed().as_secs_f64() * 1e3);
+        cost.mapped_rss =
+            cost.mapped_rss.max((current_rss_bytes() - rss0).max(0.0));
+        black_box(&idx);
+    }
+    let _ = std::fs::remove_file(&v1);
+    let _ = std::fs::remove_file(&v2);
+    Ok(cost)
+}
+
+/// Reopen `index` through a real mapped icqfmt2 snapshot: written to a
+/// temp file, opened zero-copy, unlinked after open (the mapping keeps
+/// the pages reachable; the owned-image fallback on platforms without
+/// mmap has already read the file).
+fn open_mapped_clone(index: &EncodedIndex) -> Result<EncodedIndex> {
+    let path = std::env::temp_dir()
+        .join(format!("icq-gauntlet-mapped-{}.icq2", std::process::id()));
+    crate::data::mapped::save_mapped(&index.to_mapped_tensors(), &path)
+        .context("write mapped serving snapshot")?;
+    let mp = crate::data::mapped::MappedPack::open(&path)?;
+    let out = EncodedIndex::from_mapped(&mp)?;
+    let _ = std::fs::remove_file(&path);
+    Ok(out)
+}
+
 /// Measure the serving topologies over the ICQ index, each parity-
-/// checked bitwise against the flat searcher before timing.
-fn serving_sweep(p: &GauntletProfile, fam: &Family) -> Result<Vec<ServingRow>> {
+/// checked bitwise against the flat searcher before timing. With
+/// `mmap` the topologies all serve from the mapped-open index (same
+/// row ids, parity re-anchored against the owned build first).
+fn serving_sweep(
+    p: &GauntletProfile,
+    fam: &Family,
+    mmap: bool,
+) -> Result<Vec<ServingRow>> {
     let cfg = SearchConfig { top_k: SERVING_TOP_K, margin_scale: 1.0 };
-    let index = Arc::new(fam.index.clone());
+    let owned = Arc::new(fam.index.clone());
     let batch = truncate_rows(&fam.queries, fam.queries.rows().min(32));
     let nq = batch.rows();
     let ops = Arc::new(OpCounter::new());
     let mut rows = Vec::new();
 
+    let load = measure_load(&fam.index)?;
+    let mapped = Arc::new(open_mapped_clone(&fam.index)?);
+
+    // everything downstream serves from this index; in mmap mode that
+    // is the zero-copy snapshot, whose payload views the file image
+    let index = if mmap { mapped.clone() } else { owned.clone() };
+
     let flat = NativeSearcher::new(index.clone(), cfg);
     let flat_res = flat
         .search_batch(&batch, SERVING_TOP_K)
         .context("flat serving searcher")?;
+    if mmap {
+        // parity anchor for the whole mmap mode: the mapped index must
+        // reproduce the owned build bitwise before it feeds any row
+        let owned_res = NativeSearcher::new(owned.clone(), cfg)
+            .search_batch(&batch, SERVING_TOP_K)
+            .context("owned flat searcher (mmap parity anchor)")?;
+        anyhow::ensure!(
+            flat_res == owned_res,
+            "mapped flat serving != owned flat serving (bitwise)"
+        );
+    }
     let meas =
         bench_config("serving/flat", p.bench_target, p.bench_min_iters, &mut || {
             black_box(flat.search_batch(&batch, SERVING_TOP_K).ok());
@@ -747,6 +893,35 @@ fn serving_sweep(p: &GauntletProfile, fam: &Family) -> Result<Vec<ServingRow>> {
         id: "serving/flat".into(),
         qps: meas.throughput(nq),
         parity: true,
+        load_ms: load.owned_ms,
+        peak_rss_bytes: load.owned_rss,
+    });
+
+    // the mapped open, served and parity-checked regardless of mode:
+    // this row carries the cold-start story (validate-then-map load
+    // time + RSS growth vs serving/flat's full deserialization)
+    let mapped_flat = NativeSearcher::new(mapped.clone(), cfg);
+    let mapped_res = mapped_flat
+        .search_batch(&batch, SERVING_TOP_K)
+        .context("mapped flat serving searcher")?;
+    anyhow::ensure!(
+        mapped_res == flat_res,
+        "mapped-open flat != flat searcher (bitwise)"
+    );
+    let meas = bench_config(
+        "serving/flat_mapped",
+        p.bench_target,
+        p.bench_min_iters,
+        &mut || {
+            black_box(mapped_flat.search_batch(&batch, SERVING_TOP_K).ok());
+        },
+    );
+    rows.push(ServingRow {
+        id: "serving/flat_mapped".into(),
+        qps: meas.throughput(nq),
+        parity: true,
+        load_ms: load.mapped_ms,
+        peak_rss_bytes: load.mapped_rss,
     });
 
     // block-parallel single-query scan: bitwise == the per-query flat
@@ -784,6 +959,8 @@ fn serving_sweep(p: &GauntletProfile, fam: &Family) -> Result<Vec<ServingRow>> {
         id: "serving/block_parallel".into(),
         qps: meas.throughput(nq),
         parity: true,
+        load_ms: 0.0,
+        peak_rss_bytes: 0.0,
     });
 
     let sharded =
@@ -807,6 +984,8 @@ fn serving_sweep(p: &GauntletProfile, fam: &Family) -> Result<Vec<ServingRow>> {
         id: "serving/sharded_local".into(),
         qps: meas.throughput(nq),
         parity: true,
+        load_ms: 0.0,
+        peak_rss_bytes: 0.0,
     });
 
     // remote loopback: 2 wire shards x 2 replicas each, gathered
@@ -873,6 +1052,8 @@ fn serving_sweep(p: &GauntletProfile, fam: &Family) -> Result<Vec<ServingRow>> {
         id: "serving/remote_replicas".into(),
         qps: meas.throughput(nq),
         parity: true,
+        load_ms: 0.0,
+        peak_rss_bytes: 0.0,
     });
     Ok(rows)
 }
@@ -947,15 +1128,18 @@ pub fn write_report(report: &GauntletReport, out_dir: &Path) -> Result<()> {
     Ok(())
 }
 
-/// The run-to-run-stable projection of an artifact: every `qps` field
-/// (the only machine/load-dependent numbers) removed, recursively.
-/// Two same-seed gauntlet runs must serialize this subset **bitwise**
-/// identically — pinned by `tests/recall_properties.rs`.
+/// The run-to-run-stable projection of an artifact: every timing-class
+/// field (`qps`, `load_ms`, `peak_rss_bytes` — the only machine/load-
+/// dependent numbers) removed, recursively. Two same-seed gauntlet
+/// runs must serialize this subset **bitwise** identically — pinned by
+/// `tests/recall_properties.rs`.
 pub fn stable_subset(json: &Json) -> Json {
     match json {
         Json::Obj(o) => Json::Obj(
             o.iter()
-                .filter(|(k, _)| k.as_str() != "qps")
+                .filter(|(k, _)| {
+                    !matches!(k.as_str(), "qps" | "load_ms" | "peak_rss_bytes")
+                })
                 .map(|(k, v)| (k.clone(), stable_subset(v)))
                 .collect(),
         ),
@@ -988,12 +1172,14 @@ mod tests {
     }
 
     #[test]
-    fn stable_subset_strips_qps_recursively() {
-        let text = r#"{"qps": 1.5, "rows": [{"id": "a", "qps": 2.0, "recall1": 0.5}]}"#;
+    fn stable_subset_strips_timing_fields_recursively() {
+        let text = r#"{"qps": 1.5, "rows": [{"id": "a", "qps": 2.0, "load_ms": 3.0, "peak_rss_bytes": 4096.0, "recall1": 0.5}]}"#;
         let j = Json::parse(text).unwrap();
         let s = stable_subset(&j);
         let out = s.to_string_json();
         assert!(!out.contains("qps"), "{out}");
+        assert!(!out.contains("load_ms"), "{out}");
+        assert!(!out.contains("peak_rss_bytes"), "{out}");
         assert!(out.contains("recall1"), "{out}");
     }
 

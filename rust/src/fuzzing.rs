@@ -19,9 +19,10 @@
 
 use crate::coordinator::wire::{read_frame, write_frame};
 use crate::data::format::TensorPack;
+use crate::data::mapped::MappedPack;
 use crate::data::realworld::{parse_bvecs, parse_fvecs, parse_ivecs};
-use crate::index::ivf::load_index;
-use crate::index::shard::load_shard_pack;
+use crate::index::ivf::{load_index, load_index_mapped, IvfIndex};
+use crate::index::shard::{load_shard_mapped, load_shard_pack};
 use crate::index::EncodedIndex;
 
 /// Upper bound on frames decoded per input: a stream of tiny valid
@@ -89,4 +90,36 @@ pub fn fuzz_snapshot_pack(data: &[u8]) {
     let _ = EncodedIndex::from_pack(&pack);
     let _ = load_index(&pack);
     let _ = load_shard_pack(&pack);
+}
+
+/// icqfmt2 mapped-container open over arbitrary bytes: the
+/// header/directory validator ([`MappedPack::from_bytes`] — the same
+/// checks `MappedPack::open` runs on a real mapping, minus the mmap
+/// syscall) must fail closed on truncations, misaligned offsets,
+/// overlapping segments, and lying lengths; and when the container
+/// *does* validate, every structural accessor and every mapped loader
+/// must be total on whatever tensors the bytes happened to spell —
+/// typed errors only, no panic, no out-of-bounds read.
+pub fn fuzz_mapped_open(data: &[u8]) {
+    let Ok(mp) = MappedPack::from_bytes(data) else {
+        return;
+    };
+    // a validated directory's structural queries are total
+    for name in mp.names() {
+        assert!(mp.contains(name));
+        mp.dims(name).expect("listed entry must have dims");
+        let _ = mp.scalar_i32(name);
+        let _ = mp.scalar_f32(name);
+        let _ = mp.segment::<f32>(name);
+        let _ = mp.segment::<i32>(name);
+        let _ = mp.segment::<u16>(name);
+        let _ = mp.segment::<u8>(name);
+    }
+    mp.to_tensor_pack()
+        .expect("a validated container always converts to a pack");
+    // the mapped loaders interpret the tensors; all must fail typed
+    let _ = EncodedIndex::from_mapped(&mp);
+    let _ = IvfIndex::from_mapped(&mp);
+    let _ = load_index_mapped(&mp);
+    let _ = load_shard_mapped(&mp);
 }

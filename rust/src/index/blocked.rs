@@ -42,6 +42,7 @@
 //! `search_icq::search_with_lut`).
 
 use super::lut::Lut;
+use crate::data::mapped::{CowSlice, Scalar};
 use crate::quantizer::Codes;
 
 /// Default vectors per block: 64 lanes keeps a whole block of codes
@@ -53,9 +54,11 @@ pub const DEFAULT_BLOCK: usize = 64;
 /// A fixed-width unsigned integer a code can be stored in.
 ///
 /// Implemented for `u8` (m <= 256) and `u16` (m <= 65536). The trait is
-/// sealed by construction: nothing else in the crate implements it.
+/// sealed by construction: nothing else in the crate implements it. The
+/// [`crate::data::mapped::Scalar`] supertrait is what lets a store view
+/// an `mmap`ed snapshot segment in place instead of owning heap memory.
 pub trait CodeUnit:
-    Copy + Default + PartialEq + std::fmt::Debug + Send + Sync + 'static
+    Scalar + Copy + Default + PartialEq + std::fmt::Debug + Send + Sync + 'static
 {
     /// Largest codebook size this width can index (exclusive code bound).
     const MAX_M: usize;
@@ -112,14 +115,17 @@ impl CodeUnit for u16 {
 
 /// Codes regrouped into fixed-size blocks of `B` vectors, book-major
 /// (`[K][B]`) within each block, stored at width `C`. Built once at index
-/// construction from the row-major [`Codes`]; immutable afterwards.
+/// construction from the row-major [`Codes`] — or adopted pre-transposed
+/// from a mapped snapshot via [`Self::from_parts`]; immutable afterwards.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BlockedCodes<C: CodeUnit> {
     n: usize,
     k: usize,
     block: usize,
     /// `ceil(n / block)` blocks, each `[K][block]`; tail lanes are 0.
-    data: Vec<C>,
+    /// Owned heap storage on the construction path, a zero-copy view of
+    /// a mapped snapshot on the `--mmap` open path.
+    data: CowSlice<C>,
 }
 
 impl<C: CodeUnit> BlockedCodes<C> {
@@ -141,7 +147,43 @@ impl<C: CodeUnit> BlockedCodes<C> {
                     C::from_wide(codes.get(i, kk));
             }
         }
-        BlockedCodes { n, k, block, data }
+        BlockedCodes { n, k, block, data: data.into() }
+    }
+
+    /// Adopt already-transposed block-major storage (the mapped-snapshot
+    /// open path: the file holds the exact `[K][B]` layout this module
+    /// writes, so no transpose or copy happens). `data` must hold
+    /// exactly `ceil(n / block) * k * block` codes.
+    pub fn from_parts(
+        n: usize,
+        k: usize,
+        block: usize,
+        data: CowSlice<C>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(block > 0, "block size must be >= 1");
+        let expect = n
+            .div_ceil(block)
+            .checked_mul(k)
+            .and_then(|x| x.checked_mul(block));
+        anyhow::ensure!(
+            Some(data.len()) == expect,
+            "blocked storage holds {} codes; n={n} k={k} block={block} \
+             needs {expect:?}",
+            data.len()
+        );
+        Ok(BlockedCodes { n, k, block, data })
+    }
+
+    /// The raw block-major code array (serialization; layout per the
+    /// module docs, tail lanes included).
+    #[inline]
+    pub fn raw(&self) -> &[C] {
+        &self.data
+    }
+
+    /// Whether the codes view a mapped snapshot (false = owned heap).
+    pub fn is_mapped(&self) -> bool {
+        self.data.is_mapped()
     }
 
     /// Stored vectors (excluding tail padding).
@@ -329,6 +371,14 @@ impl BlockedStore {
         match self {
             BlockedStore::U8(_) => 8,
             BlockedStore::U16(_) => 16,
+        }
+    }
+
+    /// Whether the codes view a mapped snapshot (false = owned heap).
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            BlockedStore::U8(b) => b.is_mapped(),
+            BlockedStore::U16(b) => b.is_mapped(),
         }
     }
 

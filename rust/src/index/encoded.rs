@@ -9,11 +9,12 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
-use super::blocked::{BlockedStore, CodeUnit};
+use super::blocked::{BlockedCodes, BlockedStore, CodeUnit};
 use super::lut::LutContext;
 use crate::core::Matrix;
-use crate::data::format::TensorPack;
+use crate::data::format::{Tensor, TensorPack};
 use crate::data::loader::TrainedBundle;
+use crate::data::mapped::{CowSlice, MappedPack};
 use crate::quantizer::icq::Icq;
 use crate::quantizer::{Codebooks, Codes, Quantizer};
 
@@ -74,8 +75,10 @@ pub struct EncodedIndex {
     pub fast_k: usize,
     /// crude margin sigma (eq. 11); 0 for non-ICQ methods.
     pub sigma: f32,
-    /// labels of the encoded vectors (for MAP evaluation).
-    pub labels: Vec<i32>,
+    /// labels of the encoded vectors (for MAP evaluation). Owned on the
+    /// construction paths; a zero-copy view of the file on the
+    /// mapped-snapshot open path.
+    pub labels: CowSlice<i32>,
 }
 
 impl EncodedIndex {
@@ -93,7 +96,14 @@ impl EncodedIndex {
     ) -> Self {
         let codebooks = Arc::new(codebooks);
         let lut_ctx = Arc::new(LutContext::new(&codebooks));
-        Self::assemble_shared(codebooks, lut_ctx, codes, fast_k, sigma, labels)
+        Self::assemble_shared(
+            codebooks,
+            lut_ctx,
+            codes,
+            fast_k,
+            sigma,
+            labels.into(),
+        )
     }
 
     /// [`Self::assemble`] with already-shared codebook state — the slice
@@ -106,10 +116,46 @@ impl EncodedIndex {
         codes: Codes,
         fast_k: usize,
         sigma: f32,
-        labels: Vec<i32>,
+        labels: CowSlice<i32>,
     ) -> Self {
         let blocked = BlockedStore::from_codes(&codes, codebooks.m());
         EncodedIndex { codebooks, codes, blocked, lut_ctx, fast_k, sigma, labels }
+    }
+
+    /// [`Self::assemble_shared`] with the blocked store supplied by the
+    /// caller instead of rebuilt from the row-major codes — the
+    /// mapped-snapshot open path, where the file already holds the
+    /// block-major transpose and rebuilding it would copy (and fault
+    /// in) every code page the zero-copy open exists to avoid.
+    pub(crate) fn assemble_from_parts(
+        codebooks: Arc<Codebooks>,
+        lut_ctx: Arc<LutContext>,
+        codes: Codes,
+        blocked: BlockedStore,
+        fast_k: usize,
+        sigma: f32,
+        labels: CowSlice<i32>,
+    ) -> Result<Self> {
+        ensure!(
+            blocked.n() == codes.n() && blocked.k() == codes.k(),
+            "blocked store shape [{}, {}] != codes shape [{}, {}]",
+            blocked.n(),
+            blocked.k(),
+            codes.n(),
+            codes.k()
+        );
+        ensure!(
+            fast_k >= 1 && fast_k <= codebooks.k(),
+            "fast_k={fast_k} outside [1, K={}]",
+            codebooks.k()
+        );
+        ensure!(
+            labels.len() == codes.n(),
+            "labels length {} != n={}",
+            labels.len(),
+            codes.n()
+        );
+        Ok(EncodedIndex { codebooks, codes, blocked, lut_ctx, fast_k, sigma, labels })
     }
 
     /// Encode `x` with any trained quantizer. For ICQ models the fast
@@ -200,7 +246,7 @@ impl EncodedIndex {
             codes,
             self.fast_k,
             self.sigma,
-            self.labels[start..end].to_vec(),
+            self.labels.slice(start..end),
         )
     }
 
@@ -238,7 +284,7 @@ impl EncodedIndex {
             codes,
             self.fast_k,
             self.sigma,
-            labels,
+            labels.into(),
         )
     }
 
@@ -312,7 +358,11 @@ impl EncodedIndex {
         );
         pack.insert_i32("fast_k", vec![1], vec![self.fast_k as i32]);
         pack.insert_f32("sigma", vec![1], vec![self.sigma]);
-        pack.insert_i32("labels", vec![self.labels.len()], self.labels.clone());
+        pack.insert_i32(
+            "labels",
+            vec![self.labels.len()],
+            self.labels.to_vec(),
+        );
         pack
     }
 
@@ -353,6 +403,199 @@ impl EncodedIndex {
             sigma,
             labels.to_vec(),
         ))
+    }
+
+    /// Serialize to the tensor set the icqfmt2 mapped container stores
+    /// for a flat index. Unlike [`Self::to_pack`] (v1: i32 row-major
+    /// codes only, blocked transpose rebuilt at load), this writes the
+    /// codes at their native u16 width *plus* the block-major transpose
+    /// at its selected width, so a mapped open adopts both in place
+    /// without copying or re-deriving anything O(n).
+    pub fn to_mapped_tensors(&self) -> TensorPack {
+        let mut pack = TensorPack::new();
+        self.codebooks.to_pack(&mut pack, "");
+        pack.tensors.insert(
+            "codes".into(),
+            Tensor::U16 {
+                dims: vec![self.codes.n(), self.codes.k()],
+                data: self.codes.as_slice().to_vec(),
+            },
+        );
+        pack.insert_i32("fast_k", vec![1], vec![self.fast_k as i32]);
+        pack.insert_f32("sigma", vec![1], vec![self.sigma]);
+        pack.insert_i32(
+            "labels",
+            vec![self.labels.len()],
+            self.labels.to_vec(),
+        );
+        pack.insert_i32(
+            "blocked_width",
+            vec![1],
+            vec![self.blocked.code_width_bits() as i32],
+        );
+        pack.insert_i32(
+            "blocked_block",
+            vec![1],
+            vec![self.blocked.block_size() as i32],
+        );
+        blocked_to_tensors(&self.blocked, &mut pack, "");
+        pack
+    }
+
+    /// Parse + validate the codebook tensor of a mapped snapshot and
+    /// build the derived LUT context — the only O(K m d) copy a mapped
+    /// open performs (n-independent; the LUT context depends on the
+    /// codebooks alone).
+    pub(crate) fn codebooks_from_mapped(
+        mp: &MappedPack,
+    ) -> Result<(Arc<Codebooks>, Arc<LutContext>)> {
+        let (dims, cb) = mp.segment::<f32>("codebooks")?;
+        ensure!(dims.len() == 3, "codebooks must be [K, m, d]");
+        ensure!(
+            dims.iter().all(|&v| v >= 1),
+            "codebooks dims {dims:?} contain a zero axis"
+        );
+        ensure!(
+            dims[1] <= <u16 as CodeUnit>::MAX_M,
+            "codebook size m={} exceeds the u16 code width",
+            dims[1]
+        );
+        let codebooks = Arc::new(Codebooks::from_vec(
+            dims[0],
+            dims[1],
+            dims[2],
+            cb.to_vec(),
+        ));
+        let lut_ctx = Arc::new(LutContext::new(&codebooks));
+        Ok((codebooks, lut_ctx))
+    }
+
+    /// Open a flat index from a mapped icqfmt2 snapshot (written by
+    /// [`Self::to_mapped_tensors`]): codebooks and the derived LUT
+    /// context are copied (small, n-free), while the row-major codes,
+    /// labels, and blocked transpose become zero-copy views of the
+    /// file. Structural shape checks run here once; code *values* are
+    /// not scanned — scanning would fault in every payload page and
+    /// defeat the zero-copy open (see the trust model in
+    /// [`crate::data::mapped`]; the scan kernels index LUT rows with
+    /// bounds-checked or masked lookups, so lying code values can
+    /// mis-score or panic a search, never corrupt memory).
+    pub fn from_mapped(mp: &MappedPack) -> Result<Self> {
+        let (codebooks, lut_ctx) = Self::codebooks_from_mapped(mp)?;
+        let (k, m) = (codebooks.k(), codebooks.m());
+        let (cdims, codes_seg) = mp.segment::<u16>("codes")?;
+        ensure!(cdims.len() == 2, "codes must be [n, K]");
+        ensure!(
+            cdims[1] == k,
+            "codes have {} books but the codebooks have {k}",
+            cdims[1]
+        );
+        let n = cdims[0];
+        let codes = Codes::from_cow(n, k, CowSlice::Mapped(codes_seg))?;
+        let (ldims, labels_seg) = mp.segment::<i32>("labels")?;
+        ensure!(
+            ldims == [n].as_slice(),
+            "labels must be [n={n}], got {ldims:?}"
+        );
+        let fast_k = mp.scalar_i32("fast_k")?;
+        let sigma = mp.scalar_f32("sigma")?;
+        let width = mp.scalar_i32("blocked_width")?;
+        let block = mp.scalar_i32("blocked_block")?;
+        let blocked = blocked_from_mapped(mp, "", n, k, m, width, block)?;
+        ensure!(
+            fast_k >= 1 && fast_k as usize <= k,
+            "fast_k={fast_k} outside [1, K={k}]"
+        );
+        Self::assemble_from_parts(
+            codebooks,
+            lut_ctx,
+            codes,
+            blocked,
+            fast_k as usize,
+            sigma,
+            CowSlice::Mapped(labels_seg),
+        )
+    }
+}
+
+/// Insert the block-major transpose of `store` into `pack` under
+/// `{prefix}blocked_u8` / `{prefix}blocked_u16` (name picked by its
+/// width), dims `[nb, K, B]` — tail padding lanes included, exactly the
+/// array a mapped open adopts in place.
+pub(crate) fn blocked_to_tensors(
+    store: &BlockedStore,
+    pack: &mut TensorPack,
+    prefix: &str,
+) {
+    let dims = vec![store.num_blocks(), store.k(), store.block_size()];
+    match store {
+        BlockedStore::U8(b) => {
+            pack.tensors.insert(
+                format!("{prefix}blocked_u8"),
+                Tensor::U8 { dims, data: b.raw().to_vec() },
+            );
+        }
+        BlockedStore::U16(b) => {
+            pack.tensors.insert(
+                format!("{prefix}blocked_u16"),
+                Tensor::U16 { dims, data: b.raw().to_vec() },
+            );
+        }
+    }
+}
+
+/// Adopt a `{prefix}blocked_*` segment of a mapped snapshot as a
+/// zero-copy [`BlockedStore`] for an `n x K` code table over codebook
+/// size `m`. `width` and `block` come from the snapshot's scalars; the
+/// width must match the owned loaders' selection rule (u8 iff
+/// `m <= 256`) so a mapped open yields the same store variant — and
+/// thus the same kernels and bitwise-identical scans — as an owned
+/// load of the same index.
+pub(crate) fn blocked_from_mapped(
+    mp: &MappedPack,
+    prefix: &str,
+    n: usize,
+    k: usize,
+    m: usize,
+    width: i32,
+    block: i32,
+) -> Result<BlockedStore> {
+    let expect_width =
+        if m <= <u8 as CodeUnit>::MAX_M { 8i32 } else { 16i32 };
+    ensure!(
+        width == expect_width,
+        "blocked_width={width} but m={m} selects {expect_width}-bit codes"
+    );
+    ensure!(block >= 1, "blocked_block={block} must be >= 1");
+    let block = block as usize;
+    let nb = n.div_ceil(block);
+    let want = [nb, k, block];
+    if width == 8 {
+        let name = format!("{prefix}blocked_u8");
+        let (dims, seg) = mp.segment::<u8>(&name)?;
+        ensure!(
+            dims == want.as_slice(),
+            "{name} dims {dims:?} != [nb={nb}, K={k}, B={block}]"
+        );
+        Ok(BlockedStore::U8(BlockedCodes::from_parts(
+            n,
+            k,
+            block,
+            CowSlice::Mapped(seg),
+        )?))
+    } else {
+        let name = format!("{prefix}blocked_u16");
+        let (dims, seg) = mp.segment::<u16>(&name)?;
+        ensure!(
+            dims == want.as_slice(),
+            "{name} dims {dims:?} != [nb={nb}, K={k}, B={block}]"
+        );
+        Ok(BlockedStore::U16(BlockedCodes::from_parts(
+            n,
+            k,
+            block,
+            CowSlice::Mapped(seg),
+        )?))
     }
 }
 
@@ -585,6 +828,65 @@ mod tests {
         let pq = Pq::train(&x, PqOpts { k: 2, m: 4, iters: 3, seed: 0 });
         let idx = EncodedIndex::build(&pq, &x, vec![0; 20]);
         let _ = idx.slice(10, 5);
+    }
+
+    #[test]
+    fn mapped_tensors_roundtrip_adopts_views() {
+        let x = hetero(130, 6, 3); // 130 % 64 != 0: tail block exercised
+        let icq = Icq::train(
+            &x,
+            IcqOpts { k: 2, m: 4, fast_k: 1, kmeans_iters: 4, prior_steps: 50, seed: 0 },
+        );
+        let labels: Vec<i32> = (0..130).map(|i| i as i32 % 4).collect();
+        let idx = EncodedIndex::build_icq(&icq, &x, labels);
+        let bytes =
+            crate::data::mapped::write_mapped(&idx.to_mapped_tensors());
+        let mp = MappedPack::from_bytes(&bytes).unwrap();
+        let back = EncodedIndex::from_mapped(&mp).unwrap();
+        assert_eq!(back.codes(), idx.codes());
+        assert_eq!(back.blocked(), idx.blocked());
+        assert_eq!(back.labels, idx.labels);
+        assert_eq!(back.fast_k, idx.fast_k);
+        assert_eq!(back.sigma, idx.sigma);
+        // codes/labels/blocked are views of the image, not copies
+        assert!(back.blocked().is_mapped());
+        assert!(back.labels.is_mapped());
+        assert!(!idx.blocked().is_mapped());
+    }
+
+    #[test]
+    fn from_mapped_rejects_structural_corruption() {
+        fn reopen(pack: &TensorPack) -> Result<EncodedIndex> {
+            let bytes = crate::data::mapped::write_mapped(pack);
+            EncodedIndex::from_mapped(&MappedPack::from_bytes(&bytes)?)
+        }
+        let x = hetero(20, 6, 5);
+        let pq = Pq::train(&x, PqOpts { k: 2, m: 4, iters: 3, seed: 0 });
+        let idx = EncodedIndex::build(&pq, &x, vec![0; 20]);
+        let good = idx.to_mapped_tensors();
+        assert!(reopen(&good).is_ok());
+
+        // wrong blocked width for m (m=4 selects u8)
+        let mut bad = good.clone();
+        bad.insert_i32("blocked_width", vec![1], vec![16]);
+        assert!(reopen(&bad).is_err());
+
+        // fast_k out of [1, K]
+        for bad_fast_k in [0i32, 3] {
+            let mut bad = good.clone();
+            bad.insert_i32("fast_k", vec![1], vec![bad_fast_k]);
+            assert!(reopen(&bad).is_err(), "fast_k={bad_fast_k} accepted");
+        }
+
+        // labels shorter than n
+        let mut bad = good.clone();
+        bad.insert_i32("labels", vec![19], vec![0; 19]);
+        assert!(reopen(&bad).is_err());
+
+        // blocked transpose missing entirely
+        let mut bad = good.clone();
+        bad.tensors.remove("blocked_u8");
+        assert!(reopen(&bad).is_err());
     }
 
     #[test]

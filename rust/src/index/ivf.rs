@@ -44,15 +44,16 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
-use super::encoded::EncodedIndex;
+use super::encoded::{blocked_from_mapped, blocked_to_tensors, EncodedIndex};
 use super::lut::Lut;
 use super::opcount::OpCounter;
 use super::search_icq::{self, IcqSearchOpts};
 use crate::core::parallel::par_map_indexed;
 use crate::core::{distance, merge_topk, Hit, Matrix, TopK};
-use crate::data::format::TensorPack;
+use crate::data::format::{Tensor, TensorPack};
+use crate::data::mapped::{CowSlice, MappedPack};
 use crate::quantizer::kmeans::{self, KMeansOpts};
-use crate::quantizer::Quantizer;
+use crate::quantizer::{Codes, Quantizer};
 
 /// Snapshot format version written by [`IvfIndex::to_pack`]; bumped on
 /// incompatible layout changes so old binaries fail loudly instead of
@@ -240,7 +241,7 @@ impl IvfIndex {
                     codes,
                     fast_k,
                     sigma,
-                    cell_labels,
+                    cell_labels.into(),
                 );
                 Some(IvfCell {
                     index: Arc::new(cell),
@@ -496,6 +497,78 @@ impl IvfIndex {
         pack
     }
 
+    /// Serialize to the tensor set the icqfmt2 mapped container stores
+    /// for an IVF index: the flat base tensors in cell-major order
+    /// (u16 codes + labels, sliced per cell zero-copy at open), the
+    /// `ivf_*` partition tensors of [`Self::to_pack`], and one
+    /// block-major transpose per non-empty cell under
+    /// `ivf_cell{c:05}.blocked_*` — cell boundaries are not
+    /// block-aligned, so cells cannot share one transpose the way they
+    /// share the row-major code table.
+    pub fn to_mapped_tensors(&self) -> TensorPack {
+        assert!(
+            self.cells.iter().all(Option::is_some),
+            "ivf: only a whole IVF index snapshots; shard views do not"
+        );
+        let first = self.cells[0].as_ref().expect("checked above");
+        let codebooks = first.index.codebooks();
+        let (k, d) = (codebooks.k(), codebooks.d());
+        let (fast_k, sigma) = (first.index.fast_k, first.index.sigma);
+        let ncells = self.ncells();
+
+        let mut pack = TensorPack::new();
+        let mut codes = Vec::with_capacity(self.n_total * k);
+        let mut labels = Vec::with_capacity(self.n_total);
+        let mut globals = Vec::with_capacity(self.n_total);
+        let mut sizes = Vec::with_capacity(ncells);
+        for (c, cell) in self.cells.iter().flatten().enumerate() {
+            codes.extend_from_slice(cell.index.codes().as_slice());
+            labels.extend_from_slice(&cell.index.labels);
+            globals.extend(cell.ids.iter().map(|&g| g as i32));
+            sizes.push(cell.index.len() as i32);
+            if !cell.index.is_empty() {
+                blocked_to_tensors(
+                    cell.index.blocked(),
+                    &mut pack,
+                    &format!("ivf_cell{c:05}."),
+                );
+            }
+        }
+
+        codebooks.to_pack(&mut pack, "");
+        pack.tensors.insert(
+            "codes".into(),
+            Tensor::U16 { dims: vec![self.n_total, k], data: codes },
+        );
+        pack.insert_i32("fast_k", vec![1], vec![fast_k as i32]);
+        pack.insert_f32("sigma", vec![1], vec![sigma]);
+        pack.insert_i32("labels", vec![self.n_total], labels);
+        pack.insert_i32(
+            "blocked_width",
+            vec![1],
+            vec![first.index.blocked().code_width_bits() as i32],
+        );
+        pack.insert_i32(
+            "blocked_block",
+            vec![1],
+            vec![first.index.blocked().block_size() as i32],
+        );
+        pack.insert_i32("ivf_version", vec![1], vec![IVF_VERSION]);
+        pack.insert_f32(
+            "ivf_centroids",
+            vec![ncells, d],
+            self.centroids.as_slice().to_vec(),
+        );
+        pack.insert_i32(
+            "ivf_residual",
+            vec![1],
+            vec![i32::from(self.residual)],
+        );
+        pack.insert_i32("ivf_cell_sizes", vec![ncells], sizes);
+        pack.insert_i32("ivf_row_global", vec![self.n_total], globals);
+        pack
+    }
+
     /// Load a snapshot written by [`Self::to_pack`]. The base index is
     /// validated by [`EncodedIndex::from_pack`]; the partition tensors
     /// are then checked for internal consistency (sizes sum to `n`,
@@ -585,11 +658,164 @@ impl IvfIndex {
             n_owned: n,
         })
     }
+
+    /// Open an IVF snapshot written by [`Self::to_mapped_tensors`].
+    /// The partition tensors get the same internal-consistency checks
+    /// as [`Self::from_pack`] (sizes sum to `n`, global ids a
+    /// permutation of `0..n`, ascending within each cell — the parity
+    /// invariant); the small metadata (centroids, per-cell id maps) is
+    /// copied, while each cell's row-major codes and labels become
+    /// zero-copy sub-slices of the file's cell-major tensors and its
+    /// block-major transpose is adopted in place from the cell's own
+    /// `ivf_cell*.blocked_*` segment.
+    pub fn from_mapped(mp: &MappedPack) -> Result<Self> {
+        let version = mp.scalar_i32("ivf_version")?;
+        ensure!(
+            version == IVF_VERSION,
+            "unsupported ivf_version {version} (this build reads {IVF_VERSION})"
+        );
+        let (codebooks, lut_ctx) = EncodedIndex::codebooks_from_mapped(mp)?;
+        let (k, m) = (codebooks.k(), codebooks.m());
+        let (cdims, codes_seg) = mp.segment::<u16>("codes")?;
+        ensure!(
+            cdims.len() == 2 && cdims[1] == k,
+            "codes must be [n, K={k}], got {cdims:?}"
+        );
+        let n = cdims[0];
+        let (ldims, labels_seg) = mp.segment::<i32>("labels")?;
+        ensure!(
+            ldims == [n].as_slice(),
+            "labels must be [n={n}], got {ldims:?}"
+        );
+        let fast_k = mp.scalar_i32("fast_k")?;
+        ensure!(
+            fast_k >= 1 && fast_k as usize <= k,
+            "fast_k={fast_k} outside [1, K={k}]"
+        );
+        let sigma = mp.scalar_f32("sigma")?;
+        let width = mp.scalar_i32("blocked_width")?;
+        let block = mp.scalar_i32("blocked_block")?;
+
+        let (cendims, cents) = mp.segment::<f32>("ivf_centroids")?;
+        ensure!(
+            cendims.len() == 2 && cendims[0] >= 1,
+            "ivf_centroids must be [ncells >= 1, d]"
+        );
+        let (ncells, d) = (cendims[0], cendims[1]);
+        ensure!(
+            d == codebooks.d(),
+            "ivf_centroids dim {d} != codebook dim {}",
+            codebooks.d()
+        );
+        let residual = match mp.scalar_i32("ivf_residual")? {
+            0 => false,
+            1 => true,
+            other => bail!("ivf_residual must be 0 or 1, got {other}"),
+        };
+
+        let (sdims, sizes_seg) = mp.segment::<i32>("ivf_cell_sizes")?;
+        ensure!(
+            sdims == [ncells].as_slice(),
+            "ivf_cell_sizes must be [ncells]"
+        );
+        let sizes: Vec<i32> = sizes_seg.to_vec();
+        let mut total = 0usize;
+        for &s in &sizes {
+            ensure!(s >= 0, "ivf_cell_sizes holds a negative size {s}");
+            total += s as usize;
+        }
+        ensure!(
+            total == n,
+            "ivf_cell_sizes sum to {total} but the index holds {n} rows"
+        );
+
+        let (gdims, globals_seg) = mp.segment::<i32>("ivf_row_global")?;
+        ensure!(
+            gdims == [n].as_slice(),
+            "ivf_row_global must be [n]"
+        );
+        let globals: Vec<i32> = globals_seg.to_vec();
+        let mut seen = vec![false; n];
+        for &g in &globals {
+            ensure!(
+                g >= 0 && (g as usize) < n,
+                "ivf_row_global id {g} out of [0, {n})"
+            );
+            ensure!(!seen[g as usize], "duplicate global row id {g}");
+            seen[g as usize] = true;
+        }
+
+        let mut cells = Vec::with_capacity(ncells);
+        let mut off = 0usize;
+        for (c, &sz) in sizes.iter().enumerate() {
+            let sz = sz as usize;
+            let ids: Vec<u32> =
+                globals[off..off + sz].iter().map(|&g| g as u32).collect();
+            ensure!(
+                ids.windows(2).all(|w| w[0] < w[1]),
+                "cell row ids must be strictly ascending (parity invariant)"
+            );
+            let cell = if sz == 0 {
+                // empty cells write no blocked segment; assembling
+                // them owned is O(1)
+                EncodedIndex::assemble_shared(
+                    codebooks.clone(),
+                    lut_ctx.clone(),
+                    Codes::zeros(0, k),
+                    fast_k as usize,
+                    sigma,
+                    CowSlice::default(),
+                )
+            } else {
+                let codes = Codes::from_cow(
+                    sz,
+                    k,
+                    CowSlice::Mapped(
+                        codes_seg.slice(off * k..(off + sz) * k),
+                    ),
+                )?;
+                let blocked = blocked_from_mapped(
+                    mp,
+                    &format!("ivf_cell{c:05}."),
+                    sz,
+                    k,
+                    m,
+                    width,
+                    block,
+                )?;
+                EncodedIndex::assemble_from_parts(
+                    codebooks.clone(),
+                    lut_ctx.clone(),
+                    codes,
+                    blocked,
+                    fast_k as usize,
+                    sigma,
+                    CowSlice::Mapped(labels_seg.slice(off..off + sz)),
+                )?
+            };
+            cells.push(Some(IvfCell {
+                index: Arc::new(cell),
+                ids: Arc::new(ids),
+            }));
+            off += sz;
+        }
+        let centroids = Matrix::from_vec(ncells, d, cents.to_vec());
+        Ok(IvfIndex {
+            centroids: Arc::new(centroids),
+            cells,
+            residual,
+            n_total: n,
+            n_owned: n,
+        })
+    }
 }
 
 /// Whether `pack` carries an IVF coarse partition (vs a flat index).
 pub fn is_ivf_pack(pack: &TensorPack) -> bool {
-    pack.i32("ivf_version").is_ok()
+    matches!(
+        super::snapshot::SnapshotKind::of_pack(pack),
+        super::snapshot::SnapshotKind::Ivf
+    )
 }
 
 /// A loaded index snapshot: flat or IVF-partitioned.
@@ -603,12 +829,36 @@ pub enum AnyIndex {
 
 /// Load either snapshot flavor: packs without the `ivf_*` tensors are
 /// flat indexes (old snapshots keep loading unchanged); packs with
-/// them are validated and cut into cells.
+/// them are validated and cut into cells. Dispatch is the exhaustive
+/// [`SnapshotKind`] probe shared with the wire-shard loader, so the
+/// two loaders can never disagree about what a snapshot is.
+///
+/// [`SnapshotKind`]: super::snapshot::SnapshotKind
 pub fn load_index(pack: &TensorPack) -> Result<AnyIndex> {
-    if is_ivf_pack(pack) {
-        Ok(AnyIndex::Ivf(Box::new(IvfIndex::from_pack(pack)?)))
-    } else {
-        Ok(AnyIndex::Flat(EncodedIndex::from_pack(pack)?))
+    use super::snapshot::SnapshotKind;
+    match SnapshotKind::of_pack(pack) {
+        SnapshotKind::Ivf => {
+            Ok(AnyIndex::Ivf(Box::new(IvfIndex::from_pack(pack)?)))
+        }
+        // a wire shard's base tensors are a plain flat index; its
+        // placement scalars are ignored on the in-process path
+        SnapshotKind::Flat | SnapshotKind::Shard => {
+            Ok(AnyIndex::Flat(EncodedIndex::from_pack(pack)?))
+        }
+    }
+}
+
+/// [`load_index`] for a mapped icqfmt2 snapshot: same dispatch, but
+/// the loaded index adopts the file's payload segments zero-copy.
+pub fn load_index_mapped(mp: &MappedPack) -> Result<AnyIndex> {
+    use super::snapshot::SnapshotKind;
+    match SnapshotKind::of_mapped(mp) {
+        SnapshotKind::Ivf => {
+            Ok(AnyIndex::Ivf(Box::new(IvfIndex::from_mapped(mp)?)))
+        }
+        SnapshotKind::Flat | SnapshotKind::Shard => {
+            Ok(AnyIndex::Flat(EncodedIndex::from_mapped(mp)?))
+        }
     }
 }
 
@@ -796,6 +1046,104 @@ mod tests {
             AnyIndex::Ivf(i) => assert_eq!(i.n_total(), 100),
             AnyIndex::Flat(_) => panic!("ivf pack loaded as flat"),
         }
+    }
+
+    #[test]
+    fn mapped_roundtrip_preserves_search_bitwise() {
+        let (idx, x) = icq_index(130, 12, 7);
+        let ivf = IvfIndex::partition(
+            &idx,
+            &x,
+            IvfBuildOpts { ncells: 5, iters: 6, seed: 0 },
+        )
+        .unwrap();
+        let bytes =
+            crate::data::mapped::write_mapped(&ivf.to_mapped_tensors());
+        let mp = MappedPack::from_bytes(&bytes).unwrap();
+        let back = IvfIndex::from_mapped(&mp).unwrap();
+        assert_eq!(back.ncells(), ivf.ncells());
+        assert_eq!(back.n_total(), ivf.n_total());
+        assert!(!back.residual());
+        for c in 0..ivf.ncells() {
+            let (a, b) = (ivf.cell(c).unwrap(), back.cell(c).unwrap());
+            assert_eq!(a.ids, b.ids);
+            assert_eq!(a.index.codes(), b.index.codes());
+            assert_eq!(a.index.labels, b.index.labels);
+            if !a.index.is_empty() {
+                // the payload is adopted from the file, not copied
+                assert!(b.index.labels.is_mapped());
+                assert!(b.index.blocked().is_mapped());
+            }
+        }
+        let ops = OpCounter::new();
+        let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+        for qi in 0..5 {
+            let q = x.row(qi * 13);
+            for nprobe in [1, 2, ivf.ncells()] {
+                assert_eq!(
+                    back.search(q, nprobe, opts, &ops),
+                    ivf.search(q, nprobe, opts, &ops)
+                );
+            }
+        }
+        // the mapped dispatcher agrees with the pack dispatcher
+        match load_index_mapped(&mp).unwrap() {
+            AnyIndex::Ivf(i) => assert_eq!(i.n_total(), 130),
+            AnyIndex::Flat(_) => panic!("ivf snapshot opened as flat"),
+        }
+        let fb = crate::data::mapped::write_mapped(&idx.to_mapped_tensors());
+        match load_index_mapped(&MappedPack::from_bytes(&fb).unwrap()).unwrap()
+        {
+            AnyIndex::Flat(f) => assert_eq!(f.len(), idx.len()),
+            AnyIndex::Ivf(_) => panic!("flat snapshot opened as IVF"),
+        }
+    }
+
+    #[test]
+    fn from_mapped_rejects_corrupt_partitions() {
+        fn reopen(pack: &TensorPack) -> Result<IvfIndex> {
+            let bytes = crate::data::mapped::write_mapped(pack);
+            IvfIndex::from_mapped(&MappedPack::from_bytes(&bytes)?)
+        }
+        let (idx, x) = icq_index(60, 12, 8);
+        let ivf = IvfIndex::partition(
+            &idx,
+            &x,
+            IvfBuildOpts { ncells: 4, iters: 6, seed: 0 },
+        )
+        .unwrap();
+        let good = ivf.to_mapped_tensors();
+        assert!(reopen(&good).is_ok());
+
+        // future version
+        let mut bad = good.clone();
+        bad.insert_i32("ivf_version", vec![1], vec![99]);
+        assert!(reopen(&bad).is_err());
+
+        // sizes that do not sum to n
+        let mut bad = good.clone();
+        let mut wrong = good.i32("ivf_cell_sizes").unwrap().1.to_vec();
+        wrong[0] += 1;
+        bad.insert_i32("ivf_cell_sizes", vec![wrong.len()], wrong);
+        assert!(reopen(&bad).is_err());
+
+        // duplicate global id
+        let mut bad = good.clone();
+        let mut globals = good.i32("ivf_row_global").unwrap().1.to_vec();
+        globals[1] = globals[0];
+        bad.insert_i32("ivf_row_global", vec![globals.len()], globals);
+        assert!(reopen(&bad).is_err());
+
+        // a non-empty cell's blocked transpose segment missing
+        let mut bad = good.clone();
+        let name = bad
+            .tensors
+            .keys()
+            .find(|t| t.starts_with("ivf_cell") && t.contains("blocked"))
+            .expect("partition has a non-empty cell")
+            .clone();
+        bad.tensors.remove(&name);
+        assert!(reopen(&bad).is_err());
     }
 
     #[test]

@@ -53,6 +53,7 @@ pub mod search_adc;
 pub mod search_exact;
 pub mod search_icq;
 pub mod shard;
+pub mod snapshot;
 pub mod two_step;
 
 pub use blocked::{BlockedCodes, BlockedStore, CodeUnit};
@@ -62,3 +63,4 @@ pub use lut::Lut;
 pub use opcount::OpCounter;
 pub use qlut::QLut;
 pub use shard::{ShardPolicy, ShardSpec, ShardedIndex};
+pub use snapshot::{SnapshotFile, SnapshotKind};

@@ -27,10 +27,12 @@
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::encoded::EncodedIndex;
+use super::snapshot::SnapshotKind;
 use crate::data::format::TensorPack;
+use crate::data::mapped::MappedPack;
 
 /// One shard's contiguous global row range `[start, end)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -225,6 +227,47 @@ impl ShardedIndex {
         pack.insert_i32("shard_total", vec![1], vec![self.len() as i32]);
         pack
     }
+
+    /// [`Self::shard_pack`] for the icqfmt2 mapped container: the
+    /// shard's [`EncodedIndex::to_mapped_tensors`] set plus the same
+    /// placement manifest. Written via
+    /// [`crate::data::mapped::save_mapped`], a `shard-server` opens it
+    /// zero-copy with [`load_shard_mapped`].
+    pub fn shard_mapped_tensors(&self, s: usize) -> TensorPack {
+        let mut pack = self.shards[s].to_mapped_tensors();
+        pack.insert_i32(
+            "shard_start",
+            vec![1],
+            vec![self.specs[s].start as i32],
+        );
+        pack.insert_i32("shard_total", vec![1], vec![self.len() as i32]);
+        pack
+    }
+}
+
+/// Validate a shard's placement manifest against its row count:
+/// `start` defaults to 0 when absent (plain whole-index snapshots),
+/// and `shard_total`, when present, must bound `[start, start + n)`.
+fn check_placement(
+    start: Option<i32>,
+    total: Option<i32>,
+    n: usize,
+) -> Result<usize> {
+    let start = match start {
+        Some(v) => {
+            ensure!(v >= 0, "negative shard_start {v}");
+            v as usize
+        }
+        None => 0,
+    };
+    if let Some(total) = total {
+        ensure!(
+            total >= 0 && start + n <= total as usize,
+            "shard rows [{start}, {}) exceed shard_total {total}",
+            start + n
+        );
+    }
+    Ok(start)
 }
 
 /// Load a shard snapshot written by [`ShardedIndex::shard_pack`]:
@@ -233,30 +276,43 @@ impl ShardedIndex {
 /// `shard_start` tensor, e.g. from `icq train`) load with start 0, so
 /// one loader serves both the single-host and multi-host paths.
 pub fn load_shard_pack(pack: &TensorPack) -> Result<(EncodedIndex, usize)> {
-    // An IVF snapshot's base tensors are cell-major, so loading it as
-    // a flat range shard would silently misnumber every row id. IVF
-    // serving is cell-granular and in-process (`serve` with
-    // ivf.ncells > 0), not wire-sharded.
-    ensure!(
-        !super::ivf::is_ivf_pack(pack),
-        "snapshot carries an IVF coarse partition; serve it with \
-         `serve` (ivf.ncells > 0), not as a wire shard"
-    );
-    let index = EncodedIndex::from_pack(pack)?;
-    let start = match pack.scalar_i32("shard_start") {
-        Ok(v) => {
-            ensure!(v >= 0, "negative shard_start {v}");
-            v as usize
-        }
-        Err(_) => 0,
-    };
-    if let Ok(total) = pack.scalar_i32("shard_total") {
-        ensure!(
-            total >= 0 && start + index.len() <= total as usize,
-            "shard rows [{start}, {}) exceed shard_total {total}",
-            start + index.len()
-        );
+    match SnapshotKind::of_pack(pack) {
+        // An IVF snapshot's base tensors are cell-major, so loading it
+        // as a flat range shard would silently misnumber every row id.
+        // IVF serving is cell-granular and in-process (`serve` with
+        // ivf.ncells > 0), not wire-sharded.
+        SnapshotKind::Ivf => bail!(
+            "snapshot carries an IVF coarse partition; serve it with \
+             `serve` (ivf.ncells > 0), not as a wire shard"
+        ),
+        SnapshotKind::Flat | SnapshotKind::Shard => {}
     }
+    let index = EncodedIndex::from_pack(pack)?;
+    let start = check_placement(
+        pack.scalar_i32("shard_start").ok(),
+        pack.scalar_i32("shard_total").ok(),
+        index.len(),
+    )?;
+    Ok((index, start))
+}
+
+/// [`load_shard_pack`] for a mapped icqfmt2 snapshot: same dispatch
+/// and placement validation, but the shard's payload segments are
+/// adopted zero-copy instead of deserialized.
+pub fn load_shard_mapped(mp: &MappedPack) -> Result<(EncodedIndex, usize)> {
+    match SnapshotKind::of_mapped(mp) {
+        SnapshotKind::Ivf => bail!(
+            "snapshot carries an IVF coarse partition; serve it with \
+             `serve` (ivf.ncells > 0), not as a wire shard"
+        ),
+        SnapshotKind::Flat | SnapshotKind::Shard => {}
+    }
+    let index = EncodedIndex::from_mapped(mp)?;
+    let start = check_placement(
+        mp.scalar_i32("shard_start").ok(),
+        mp.scalar_i32("shard_total").ok(),
+        index.len(),
+    )?;
     Ok((index, start))
 }
 
@@ -383,6 +439,68 @@ mod tests {
         let mut bad = sh.shard_pack(2);
         bad.insert_i32("shard_total", vec![1], vec![10]);
         assert!(load_shard_pack(&bad).is_err());
+    }
+
+    /// The mapped shard snapshot carries the same placement manifest
+    /// and payload as the v1 pack, adopts the code pages zero-copy,
+    /// and refuses IVF snapshots exactly like the pack loader.
+    #[test]
+    fn mapped_shard_roundtrips_with_placement() {
+        let idx = index(330, 8);
+        let sh = ShardedIndex::build(&idx, ShardPolicy::Count(3)).unwrap();
+        for s in 0..sh.num_shards() {
+            let bytes =
+                crate::data::mapped::write_mapped(&sh.shard_mapped_tensors(s));
+            let mp = MappedPack::from_bytes(&bytes).unwrap();
+            let (back, start) = load_shard_mapped(&mp).unwrap();
+            assert_eq!(start, sh.spec(s).start);
+            assert_eq!(back.codes(), sh.shard(s).codes());
+            assert_eq!(back.labels, sh.shard(s).labels);
+            assert!(back.labels.is_mapped());
+            assert!(back.blocked().is_mapped());
+        }
+        // a plain mapped whole-index snapshot loads with start 0
+        let bytes = crate::data::mapped::write_mapped(&idx.to_mapped_tensors());
+        let (whole, start) =
+            load_shard_mapped(&MappedPack::from_bytes(&bytes).unwrap())
+                .unwrap();
+        assert_eq!(start, 0);
+        assert_eq!(whole.len(), idx.len());
+        // corrupt placement is rejected
+        let mut bad = sh.shard_mapped_tensors(1);
+        bad.insert_i32("shard_start", vec![1], vec![-3]);
+        let bytes = crate::data::mapped::write_mapped(&bad);
+        assert!(
+            load_shard_mapped(&MappedPack::from_bytes(&bytes).unwrap())
+                .is_err()
+        );
+        let mut bad = sh.shard_mapped_tensors(2);
+        bad.insert_i32("shard_total", vec![1], vec![10]);
+        let bytes = crate::data::mapped::write_mapped(&bad);
+        assert!(
+            load_shard_mapped(&MappedPack::from_bytes(&bytes).unwrap())
+                .is_err()
+        );
+        // IVF snapshots are not wire shards, mapped or not
+        let x = crate::core::Matrix::from_fn(60, 8, |i, j| {
+            (i * 8 + j) as f32 * 0.01
+        });
+        let pq = crate::quantizer::pq::Pq::train(
+            &x,
+            crate::quantizer::pq::PqOpts { k: 4, m: 8, iters: 3, seed: 0 },
+        );
+        let flat = EncodedIndex::build(&pq, &x, vec![0; 60]);
+        let ivf = crate::index::ivf::IvfIndex::partition(
+            &flat,
+            &x,
+            crate::index::ivf::IvfBuildOpts { ncells: 3, iters: 4, seed: 0 },
+        )
+        .unwrap();
+        let bytes = crate::data::mapped::write_mapped(&ivf.to_mapped_tensors());
+        assert!(
+            load_shard_mapped(&MappedPack::from_bytes(&bytes).unwrap())
+                .is_err()
+        );
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Snapshot dispatch: one typed probe classifying any index snapshot.
+//!
+//! An on-disk snapshot varies along two independent axes:
+//!
+//! * **container** — the icqfmt v1 pack (`TensorPack`, streamed and
+//!   deserialized) or the icqfmt2 mapped container
+//!   ([`crate::data::mapped`], validated once and adopted zero-copy);
+//! * **kind** — a plain flat index, a wire shard (flat index + the
+//!   `shard_start`/`shard_total` placement manifest), or an IVF index
+//!   (`ivf_*` partition tensors over a cell-major base).
+//!
+//! Before this module each loader re-derived "what is this file?" from
+//! the presence of individual tensors, and the answers could drift:
+//! [`load_index`] and [`load_shard_pack`] must agree on what an IVF
+//! snapshot is, or a shard server handed one would silently misnumber
+//! every row id. [`SnapshotKind`] makes that decision once — the same
+//! probe for both containers — and every loader matches it
+//! exhaustively, so adding a snapshot kind is a compile error at each
+//! dispatch site instead of a silent fall-through.
+//!
+//! [`load_index`]: super::ivf::load_index
+//! [`load_shard_pack`]: super::shard::load_shard_pack
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::encoded::EncodedIndex;
+use super::ivf::AnyIndex;
+use crate::data::format::TensorPack;
+use crate::data::mapped::{
+    sniff_container, ContainerFormat, MappedPack,
+};
+
+/// What an index snapshot holds, independent of container format.
+///
+/// Classification looks only at marker-tensor *presence* (cheap on
+/// both containers — a mapped probe touches only the validated
+/// directory, never a payload page). `Ivf` wins over `Shard` because
+/// an IVF snapshot's base tensors are cell-major: treating one as a
+/// flat range shard would misnumber row ids, so the IVF marker must
+/// dominate no matter what else a (corrupt or hand-built) file
+/// carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SnapshotKind {
+    /// A plain flat index (e.g. from `icq train`): loads anywhere.
+    Flat,
+    /// A wire shard: a flat index plus its placement manifest.
+    Shard,
+    /// An index carrying an IVF coarse partition.
+    Ivf,
+}
+
+impl SnapshotKind {
+    fn classify(has_ivf: bool, has_shard: bool) -> Self {
+        if has_ivf {
+            SnapshotKind::Ivf
+        } else if has_shard {
+            SnapshotKind::Shard
+        } else {
+            SnapshotKind::Flat
+        }
+    }
+
+    /// Classify a v1 tensor pack.
+    pub fn of_pack(pack: &TensorPack) -> Self {
+        Self::classify(
+            pack.tensors.contains_key("ivf_version"),
+            pack.tensors.contains_key("shard_start"),
+        )
+    }
+
+    /// Classify a mapped icqfmt2 snapshot.
+    pub fn of_mapped(mp: &MappedPack) -> Self {
+        Self::classify(mp.contains("ivf_version"), mp.contains("shard_start"))
+    }
+}
+
+/// An opened snapshot container, either format, not yet interpreted.
+#[derive(Clone, Debug)]
+pub enum SnapshotFile {
+    /// An icqfmt v1 pack, fully deserialized into owned tensors.
+    Pack(TensorPack),
+    /// An icqfmt2 container (a zero-copy mapping or an owned image).
+    Mapped(MappedPack),
+}
+
+impl SnapshotFile {
+    /// What the snapshot holds (same probe for both containers).
+    pub fn kind(&self) -> SnapshotKind {
+        match self {
+            SnapshotFile::Pack(pack) => SnapshotKind::of_pack(pack),
+            SnapshotFile::Mapped(mp) => SnapshotKind::of_mapped(mp),
+        }
+    }
+}
+
+/// Open a snapshot file in either container format, sniffed by magic.
+///
+/// `mmap` selects the zero-copy open for icqfmt2 files (on platforms
+/// without the mapping primitive it degrades to reading the file into
+/// an owned image — same validation, same layout); v1 packs ignore it
+/// and always deserialize. Metadata is fully validated here; for
+/// mapped files no payload page is touched.
+pub fn open_snapshot(
+    path: impl AsRef<Path>,
+    mmap: bool,
+) -> Result<SnapshotFile> {
+    let path = path.as_ref();
+    match sniff_container(path)? {
+        ContainerFormat::MappedV2 => Ok(SnapshotFile::Mapped(if mmap {
+            MappedPack::open(path)?
+        } else {
+            MappedPack::open_owned(path)?
+        })),
+        ContainerFormat::PackV1 => {
+            Ok(SnapshotFile::Pack(TensorPack::load(path)?))
+        }
+    }
+}
+
+/// Load any index snapshot ([`super::ivf::load_index`] across both
+/// containers): flat packs stay flat, IVF packs are cut into cells,
+/// wire shards load as flat indexes (placement ignored in-process).
+pub fn load_any(file: &SnapshotFile) -> Result<AnyIndex> {
+    match file {
+        SnapshotFile::Pack(pack) => super::ivf::load_index(pack),
+        SnapshotFile::Mapped(mp) => super::ivf::load_index_mapped(mp),
+    }
+}
+
+/// Load a snapshot as a wire shard ([`super::shard::load_shard_pack`]
+/// across both containers): returns the shard index and its global
+/// start row; IVF snapshots are rejected.
+pub fn load_shard_snapshot(
+    file: &SnapshotFile,
+) -> Result<(EncodedIndex, usize)> {
+    match file {
+        SnapshotFile::Pack(pack) => super::shard::load_shard_pack(pack),
+        SnapshotFile::Mapped(mp) => super::shard::load_shard_mapped(mp),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Matrix, Rng};
+    use crate::data::mapped::{save_mapped, write_mapped};
+    use crate::index::ivf::{IvfBuildOpts, IvfIndex};
+    use crate::index::shard::{ShardPolicy, ShardedIndex};
+    use crate::quantizer::pq::{Pq, PqOpts};
+
+    fn flat_index(n: usize, seed: u64) -> (EncodedIndex, Matrix) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(n, 8, |_, _| rng.normal_f32());
+        let pq = Pq::train(&x, PqOpts { k: 4, m: 8, iters: 3, seed: 0 });
+        let labels = (0..n).map(|i| i as i32).collect();
+        (EncodedIndex::build(&pq, &x, labels), x)
+    }
+
+    /// Every (kind, container) pair classifies the same way — the
+    /// exhaustive dispatch this module exists to guarantee.
+    #[test]
+    fn kind_probe_agrees_across_containers() {
+        let (idx, x) = flat_index(130, 1);
+        let sharded =
+            ShardedIndex::build(&idx, ShardPolicy::Count(2)).unwrap();
+        let ivf = IvfIndex::partition(
+            &idx,
+            &x,
+            IvfBuildOpts { ncells: 4, iters: 4, seed: 0 },
+        )
+        .unwrap();
+        let cases = [
+            (idx.to_pack(), idx.to_mapped_tensors(), SnapshotKind::Flat),
+            (
+                sharded.shard_pack(1),
+                sharded.shard_mapped_tensors(1),
+                SnapshotKind::Shard,
+            ),
+            (ivf.to_pack(), ivf.to_mapped_tensors(), SnapshotKind::Ivf),
+        ];
+        for (pack, mapped, want) in cases {
+            assert_eq!(SnapshotKind::of_pack(&pack), want);
+            let mp = MappedPack::from_bytes(&write_mapped(&mapped)).unwrap();
+            assert_eq!(SnapshotKind::of_mapped(&mp), want);
+            assert_eq!(SnapshotFile::Mapped(mp).kind(), want);
+            assert_eq!(SnapshotFile::Pack(pack).kind(), want);
+        }
+    }
+
+    #[test]
+    fn open_snapshot_dispatches_on_magic_and_mmap_flag() {
+        let dir = std::env::temp_dir().join(format!(
+            "icq-snapshot-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (idx, _) = flat_index(64, 2);
+
+        let v1 = dir.join("flat.icqf");
+        idx.to_pack().save(&v1).unwrap();
+        let v2 = dir.join("flat.icq2");
+        save_mapped(&idx.to_mapped_tensors(), &v2).unwrap();
+
+        for mmap in [false, true] {
+            let f1 = open_snapshot(&v1, mmap).unwrap();
+            assert!(matches!(f1, SnapshotFile::Pack(_)));
+            let f2 = open_snapshot(&v2, mmap).unwrap();
+            assert!(matches!(f2, SnapshotFile::Mapped(_)));
+            // both containers load to the same index
+            for f in [&f1, &f2] {
+                match load_any(f).unwrap() {
+                    AnyIndex::Flat(back) => {
+                        assert_eq!(back.codes(), idx.codes());
+                        assert_eq!(back.labels, idx.labels);
+                    }
+                    AnyIndex::Ivf(_) => panic!("flat opened as IVF"),
+                }
+                let (shard, start) = load_shard_snapshot(f).unwrap();
+                assert_eq!(start, 0);
+                assert_eq!(shard.len(), idx.len());
+            }
+        }
+        // junk magic is rejected before any loader runs
+        let junk = dir.join("junk.icqf");
+        std::fs::write(&junk, b"not a snapshot").unwrap();
+        assert!(open_snapshot(&junk, false).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// IVF snapshots refuse the shard path through the shared probe in
+    /// both containers.
+    #[test]
+    fn ivf_snapshots_rejected_as_wire_shards() {
+        let (idx, x) = flat_index(90, 3);
+        let ivf = IvfIndex::partition(
+            &idx,
+            &x,
+            IvfBuildOpts { ncells: 3, iters: 4, seed: 0 },
+        )
+        .unwrap();
+        let pack_file = SnapshotFile::Pack(ivf.to_pack());
+        assert!(load_shard_snapshot(&pack_file).is_err());
+        let mp =
+            MappedPack::from_bytes(&write_mapped(&ivf.to_mapped_tensors()))
+                .unwrap();
+        assert!(load_shard_snapshot(&SnapshotFile::Mapped(mp)).is_err());
+        // but both load fine as ordinary indexes
+        assert!(matches!(
+            load_any(&pack_file).unwrap(),
+            AnyIndex::Ivf(_)
+        ));
+    }
+}

@@ -33,9 +33,12 @@ use icq::coordinator::{
 use icq::core::Matrix;
 use icq::data::format::TensorPack;
 use icq::data::loader;
+use icq::data::mapped::save_mapped;
 use icq::data::Dataset;
-use icq::index::shard::{load_shard_pack, ShardPolicy, ShardedIndex};
-use icq::index::{EncodedIndex, IvfBuildOpts, IvfIndex, OpCounter};
+use icq::index::shard::{ShardPolicy, ShardedIndex};
+use icq::index::{
+    snapshot, AnyIndex, EncodedIndex, IvfBuildOpts, IvfIndex, OpCounter,
+};
 use icq::quantizer::icq::{Icq, IcqOpts};
 use icq::quantizer::Quantizer;
 
@@ -44,28 +47,38 @@ usage: icq [--config FILE] [--set KEY=VALUE]... <command>
 
 commands:
   gen-synthetic            print Table 1 + dataset summaries
-  train [--out PATH]       train ICQ, write an index snapshot (icqfmt)
+  train [--out PATH] [--format pack|mapped]
+                           train ICQ, write an index snapshot (icqfmt
+                           v1 pack, or the page-aligned icqfmt2 mapped
+                           container that servers open zero-copy)
   eval                     run one configuration, print metrics
-  serve [--addr HOST:PORT] start the TCP serving coordinator; with
+  serve [--addr HOST:PORT] [--index PATH] [--mmap]
+                           start the TCP serving coordinator; with
                            serve.shards=N / serve.remote_shards=... it
                            gathers over local and/or remote shards
                            ('|' inside one remote entry lists replicas
                            of that shard range, e.g. a:7979|b:7979);
                            ivf.ncells=N + ivf.nprobe=P switch to
-                           non-exhaustive IVF search (local only)
-  shard-server [--addr HOST:PORT] [--index PATH] [--shard I/N]
+                           non-exhaustive IVF search (local only);
+                           --index serves an on-disk snapshot instead
+                           of training (either container; --mmap opens
+                           icqfmt2 files zero-copy, local topologies
+                           only)
+  shard-server [--addr HOST:PORT] [--index PATH] [--mmap] [--shard I/N]
                [--idle-timeout SECS] [--max-conns N]
                            serve one shard over the binary wire protocol
-                           (loads a snapshot, or trains and cuts shard
-                           I of N from the configured dataset);
-                           --idle-timeout reaps idle/slowloris
-                           connections, --max-conns caps concurrent
-                           connections
+                           (loads a snapshot in either container format
+                           — --mmap opens icqfmt2 files zero-copy — or
+                           trains and cuts shard I of N from the
+                           configured dataset); --idle-timeout reaps
+                           idle/slowloris connections, --max-conns caps
+                           concurrent connections
   export-shards --shards N [--out PREFIX]
                            train, cut N shards, write PREFIX<i>.icqf
-                           snapshots for shard-server processes
+                           snapshots (icqfmt2 mapped container) for
+                           shard-server processes
   bench-figure <ID> [--fast]  regenerate table1|fig1..fig6|all
-  gauntlet [--profile fast|full|smoke] [--out DIR]
+  gauntlet [--profile fast|full|smoke] [--out DIR] [--mmap]
            [--base F.fvecs --queries F.fvecs [--gt F.ivecs]]
                            sweep quantizers (PQ/OPQ/CQ/SQ/ICQ) x
                            operating points (fast_k, IVF nprobe) x
@@ -74,8 +87,11 @@ commands:
                            bitwise parity with the flat scan, then
                            writes BENCH_recall.json / BENCH_serving.json
                            / BENCH_kernels.json to DIR (default '.');
-                           `cargo xtask bench-check` gates fresh runs
-                           against the committed copies
+                           --mmap serves the local topologies from a
+                           zero-copy mapped snapshot instead of the
+                           in-memory index (same rows, same parity
+                           gate); `cargo xtask bench-check` gates
+                           fresh runs against the committed copies
   runtime-check            verify PJRT artifacts vs native math
 ";
 
@@ -141,13 +157,20 @@ fn main() -> Result<()> {
         "gen-synthetic" => gen_synthetic(),
         "train" => {
             let out = flag_value(tail, "--out").unwrap_or_else(|| "index.icqf".into());
-            train(&cfg, &out)
+            let format =
+                flag_value(tail, "--format").unwrap_or_else(|| "pack".into());
+            train(&cfg, &out, &format)
         }
         "eval" => eval(&cfg),
         "serve" => {
             let addr =
                 flag_value(tail, "--addr").unwrap_or_else(|| "127.0.0.1:7878".into());
-            serve(&cfg, &addr)
+            serve(
+                &cfg,
+                &addr,
+                flag_value(tail, "--index"),
+                tail.iter().any(|a| a == "--mmap"),
+            )
         }
         "shard-server" => {
             let addr =
@@ -156,6 +179,7 @@ fn main() -> Result<()> {
                 &cfg,
                 &addr,
                 flag_value(tail, "--index"),
+                tail.iter().any(|a| a == "--mmap"),
                 flag_value(tail, "--shard"),
                 flag_value(tail, "--idle-timeout"),
                 flag_value(tail, "--max-conns"),
@@ -183,6 +207,7 @@ fn main() -> Result<()> {
             gauntlet(
                 &profile,
                 &out,
+                tail.iter().any(|a| a == "--mmap"),
                 flag_value(tail, "--base"),
                 flag_value(tail, "--queries"),
                 flag_value(tail, "--gt"),
@@ -208,7 +233,24 @@ fn gen_synthetic() -> Result<()> {
     Ok(())
 }
 
-fn train(cfg: &EngineConfig, out: &str) -> Result<()> {
+/// Write an index snapshot in the requested container format: `pack`
+/// is the icqfmt v1 stream, `mapped` the page-aligned icqfmt2
+/// container servers open zero-copy. The tensor sets are built lazily
+/// so only the requested one is materialized.
+fn write_snapshot(
+    format: &str,
+    pack: impl FnOnce() -> TensorPack,
+    mapped: impl FnOnce() -> TensorPack,
+    out: &str,
+) -> Result<()> {
+    match format {
+        "pack" => pack().save(out),
+        "mapped" => save_mapped(&mapped(), out),
+        other => anyhow::bail!("--format expects pack|mapped, got '{other}'"),
+    }
+}
+
+fn train(cfg: &EngineConfig, out: &str, format: &str) -> Result<()> {
     anyhow::ensure!(
         cfg.method == MethodKind::Icq,
         "train currently snapshots ICQ indexes; use eval for baselines"
@@ -261,7 +303,12 @@ fn train(cfg: &EngineConfig, out: &str) -> Result<()> {
         } else {
             IvfIndex::partition(&index, &data.x, opts)?
         };
-        ivf.to_pack().save(out)?;
+        write_snapshot(
+            format,
+            || ivf.to_pack(),
+            || ivf.to_mapped_tensors(),
+            out,
+        )?;
         println!(
             "[train] wrote {out} (IVF: {} cells{})",
             ivf.ncells(),
@@ -269,7 +316,12 @@ fn train(cfg: &EngineConfig, out: &str) -> Result<()> {
         );
         return Ok(());
     }
-    index.to_pack().save(out)?;
+    write_snapshot(
+        format,
+        || index.to_pack(),
+        || index.to_mapped_tensors(),
+        out,
+    )?;
     println!("[train] wrote {out}");
     Ok(())
 }
@@ -618,8 +670,113 @@ fn build_searcher(
     Ok((searcher, metrics))
 }
 
-fn serve(cfg: &EngineConfig, addr: &str) -> Result<()> {
-    let (searcher, remote_metrics) = build_searcher(cfg)?;
+/// Build the serving searcher from an on-disk snapshot instead of
+/// training in-process. Both container formats load; `--mmap` opens
+/// icqfmt2 files zero-copy (a v1 pack ignores it and deserializes).
+/// The snapshot's own kind picks the search path: IVF snapshots serve
+/// the coarse partition (`ivf.nprobe` applies, `serve.shards > 1`
+/// deals cells round-robin), flat snapshots serve the exhaustive scan
+/// (`serve.shards > 1` cuts block-range shards). Remote shard groups
+/// need the placement handshake of the training path and cannot
+/// combine with a snapshot.
+fn build_searcher_from_snapshot(
+    cfg: &EngineConfig,
+    path: &str,
+    mmap: bool,
+) -> Result<Arc<dyn BatchSearcher>> {
+    anyhow::ensure!(
+        cfg.serve.replica_groups().is_empty(),
+        "serve --index serves a local snapshot; serve.remote_shards \
+         needs the in-process build path (drop one of the two)"
+    );
+    let file = snapshot::open_snapshot(path, mmap)?;
+    match snapshot::load_any(&file)? {
+        AnyIndex::Ivf(ivf) => {
+            let ivf = Arc::new(*ivf);
+            let nprobe = cfg.ivf.nprobe.max(1);
+            println!(
+                "[serve] IVF snapshot {path}: {} cells, nprobe={}, {} rows{}",
+                ivf.ncells(),
+                nprobe,
+                ivf.n_total(),
+                if ivf.residual() { ", residual" } else { "" }
+            );
+            if cfg.serve.shards <= 1 {
+                return Ok(Arc::new(IvfSearcher::new(ivf, nprobe, cfg.search)));
+            }
+            let ops = Arc::new(OpCounter::new());
+            let dim = ivf.dim();
+            let mut backends: Vec<Box<dyn ShardBackend>> = Vec::new();
+            for shard in ivf.split_cells(cfg.serve.shards)? {
+                println!(
+                    "[serve] ivf shard: {} cell(s), {} rows",
+                    shard.num_owned_cells(),
+                    shard.len()
+                );
+                backends.push(Box::new(LocalIvfShardBackend::new(
+                    Arc::new(shard),
+                    nprobe,
+                    cfg.search,
+                    ops.clone(),
+                )));
+            }
+            Ok(Arc::new(ShardedSearcher::from_backends(
+                backends, None, dim, ops,
+            )?))
+        }
+        AnyIndex::Flat(index) => {
+            let index = Arc::new(index);
+            println!(
+                "[serve] snapshot {path}: {} rows, dim={}",
+                index.len(),
+                index.dim()
+            );
+            if cfg.serve.shards <= 1 {
+                return Ok(Arc::new(NativeSearcher::new(index, cfg.search)));
+            }
+            let ops = Arc::new(OpCounter::new());
+            let dim = index.dim();
+            let sharded = ShardedIndex::build(
+                &index,
+                ShardPolicy::Count(cfg.serve.shards),
+            )?;
+            println!(
+                "[serve] snapshot cut into {} local shard(s)",
+                sharded.num_shards()
+            );
+            let mut lut_source = None;
+            let mut backends: Vec<Box<dyn ShardBackend>> = Vec::new();
+            for (spec, shard) in sharded.specs().iter().zip(sharded.shards())
+            {
+                if lut_source.is_none() {
+                    lut_source = Some(shard.clone());
+                }
+                backends.push(Box::new(LocalShardBackend::new(
+                    spec.start,
+                    shard.clone(),
+                    cfg.search,
+                    ops.clone(),
+                )));
+            }
+            Ok(Arc::new(ShardedSearcher::from_backends(
+                backends, lut_source, dim, ops,
+            )?))
+        }
+    }
+}
+
+fn serve(
+    cfg: &EngineConfig,
+    addr: &str,
+    index_path: Option<String>,
+    mmap: bool,
+) -> Result<()> {
+    let (searcher, remote_metrics) = match index_path {
+        Some(path) => {
+            (build_searcher_from_snapshot(cfg, &path, mmap)?, None)
+        }
+        None => build_searcher(cfg)?,
+    };
     // the resilience counters must be observable in production: log the
     // remote summary periodically while serving remote shards
     if let Some(metrics) = remote_metrics {
@@ -649,6 +806,7 @@ fn shard_server(
     cfg: &EngineConfig,
     addr: &str,
     index_path: Option<String>,
+    mmap: bool,
     shard_sel: Option<String>,
     idle_timeout: Option<String>,
     max_conns: Option<String>,
@@ -675,10 +833,15 @@ fn shard_server(
     };
     let (index, start) = match index_path {
         Some(path) => {
-            let pack = TensorPack::load(&path)?;
-            let (index, start) = load_shard_pack(&pack)?;
+            let file = snapshot::open_snapshot(&path, mmap)?;
+            let how = match &file {
+                snapshot::SnapshotFile::Mapped(_) if mmap => " (mapped)",
+                snapshot::SnapshotFile::Mapped(_) => " (owned image)",
+                snapshot::SnapshotFile::Pack(_) => "",
+            };
+            let (index, start) = snapshot::load_shard_snapshot(&file)?;
             println!(
-                "[shard-server] loaded {path}: rows [{start}, {})",
+                "[shard-server] loaded {path}{how}: rows [{start}, {})",
                 start + index.len()
             );
             (index, start)
@@ -721,8 +884,10 @@ fn shard_server(
 }
 
 /// Train once, cut `shards` block-aligned shards, and write each as a
-/// standalone snapshot (`PREFIX<i>.icqf`) carrying its global placement
-/// — the artifacts `shard-server --index` processes load.
+/// standalone snapshot (`PREFIX<i>.icqf`, icqfmt2 mapped container)
+/// carrying its global placement — the artifacts `shard-server
+/// --index` processes load (zero-copy with `--mmap`). Old v1 shard
+/// packs keep loading; only the writer moved to the new format.
 fn export_shards(cfg: &EngineConfig, shards: usize, prefix: &str) -> Result<()> {
     anyhow::ensure!(
         cfg.ivf.ncells == 0,
@@ -734,7 +899,7 @@ fn export_shards(cfg: &EngineConfig, shards: usize, prefix: &str) -> Result<()> 
     let sharded = ShardedIndex::build(&index, ShardPolicy::Count(shards))?;
     for s in 0..sharded.num_shards() {
         let path = format!("{prefix}{s}.icqf");
-        sharded.shard_pack(s).save(&path)?;
+        save_mapped(&sharded.shard_mapped_tensors(s), &path)?;
         let spec = sharded.spec(s);
         println!(
             "[export-shards] wrote {path}: rows [{}, {})",
@@ -766,6 +931,7 @@ fn bench_figure(id: &str, fast: bool) -> Result<()> {
 fn gauntlet(
     profile: &str,
     out: &str,
+    mmap: bool,
     base: Option<String>,
     queries: Option<String>,
     gt: Option<String>,
@@ -776,14 +942,15 @@ fn gauntlet(
     let data =
         g::load_data(&p, base.as_deref(), queries.as_deref(), gt.as_deref())?;
     println!(
-        "[gauntlet] profile={} source={} n={} nq={} d={}",
+        "[gauntlet] profile={} source={} n={} nq={} d={}{}",
         p.name,
         data.source,
         data.base.rows(),
         data.queries.rows(),
-        data.base.cols()
+        data.base.cols(),
+        if mmap { " (mmap serving)" } else { "" }
     );
-    let report = g::run(&p, &data)?;
+    let report = g::run_with(&p, &data, mmap)?;
     g::write_report(&report, std::path::Path::new(out))
 }
 

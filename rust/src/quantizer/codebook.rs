@@ -7,6 +7,7 @@
 
 use crate::core::{distance, Matrix};
 use crate::data::format::TensorPack;
+use crate::data::mapped::CowSlice;
 
 /// K codebooks of m codewords in R^d.
 #[derive(Clone, Debug, PartialEq)]
@@ -155,22 +156,36 @@ impl Codebooks {
     }
 }
 
-/// Encoded dataset: n rows of K u16 codes (m <= 65536).
+/// Encoded dataset: n rows of K u16 codes (m <= 65536). Storage is
+/// copy-on-write: encoders build owned rows, while the mapped-snapshot
+/// open path views the file's code segment in place ([`Codes::from_cow`];
+/// the rare [`Codes::set`] after that copies out first).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Codes {
     n: usize,
     k: usize,
-    data: Vec<u16>,
+    data: CowSlice<u16>,
 }
 
 impl Codes {
     pub fn zeros(n: usize, k: usize) -> Self {
-        Codes { n, k, data: vec![0; n * k] }
+        Codes { n, k, data: vec![0; n * k].into() }
     }
 
     pub fn from_vec(n: usize, k: usize, data: Vec<u16>) -> Self {
         assert_eq!(data.len(), n * k);
-        Codes { n, k, data }
+        Codes { n, k, data: data.into() }
+    }
+
+    /// Adopt row-major code storage, owned or a zero-copy mapped view.
+    pub fn from_cow(n: usize, k: usize, data: CowSlice<u16>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            Some(data.len()) == n.checked_mul(k),
+            "codes hold {} entries, shape [{n}, {k}] needs {:?}",
+            data.len(),
+            n.checked_mul(k)
+        );
+        Ok(Codes { n, k, data })
     }
 
     #[inline]
@@ -195,7 +210,8 @@ impl Codes {
 
     #[inline]
     pub fn set(&mut self, i: usize, k: usize, v: u16) {
-        self.data[i * self.k + k] = v;
+        let at = i * self.k + k;
+        self.data.to_mut()[at] = v;
     }
 
     pub fn as_slice(&self) -> &[u16] {

@@ -119,6 +119,50 @@ fn generated_artifacts_carry_required_keys() {
     );
 }
 
+/// The serving artifact's cold-start columns: every row carries
+/// numeric, non-negative `load_ms` / `peak_rss_bytes`, and the
+/// `serving/flat_mapped` row (the zero-copy icqfmt2 open) exists with
+/// a real measured load time next to `serving/flat`'s owned
+/// deserialization — the pair that documents what the mapped format
+/// buys at startup.
+#[test]
+fn serving_rows_carry_cold_start_metrics() {
+    let r = report();
+    let rows = r.serving.get("rows").and_then(Json::as_arr).unwrap();
+    let mut ids = Vec::new();
+    for row in rows {
+        let id = row.get("id").and_then(Json::as_str).unwrap();
+        ids.push(id.to_string());
+        for field in ["load_ms", "peak_rss_bytes"] {
+            let v = row
+                .get(field)
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("row '{id}': {field} not numeric"));
+            assert!(
+                v >= 0.0 && v.is_finite(),
+                "row '{id}': {field} = {v} is not a sane measurement"
+            );
+        }
+    }
+    for id in ["serving/flat", "serving/flat_mapped"] {
+        assert!(ids.iter().any(|i| i == id), "missing row '{id}'");
+    }
+    let load_of = |id: &str| {
+        rows.iter()
+            .find(|r| r.get("id").and_then(Json::as_str) == Some(id))
+            .and_then(|r| r.get("load_ms"))
+            .and_then(Json::as_f64)
+            .unwrap()
+    };
+    // both load paths were actually measured (min-of-5 of a real file
+    // open can be fast, but never exactly zero)
+    assert!(load_of("serving/flat") > 0.0, "owned load was not measured");
+    assert!(
+        load_of("serving/flat_mapped") > 0.0,
+        "mapped open was not measured"
+    );
+}
+
 /// Distinct row ids: duplicated ids would let bench-check silently
 /// compare the wrong rows.
 #[test]

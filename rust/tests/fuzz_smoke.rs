@@ -108,3 +108,8 @@ fn vecs_parsers_survive_seed_mutations() {
 fn snapshot_loaders_survive_seed_mutations() {
     sweep("snapshot_pack", 0xF00D, icq::fuzzing::fuzz_snapshot_pack);
 }
+
+#[test]
+fn mapped_open_survives_seed_mutations() {
+    sweep("mapped_open", 0xACED, icq::fuzzing::fuzz_mapped_open);
+}

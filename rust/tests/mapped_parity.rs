@@ -1,0 +1,264 @@
+//! Mapped-snapshot parity suite: the icqfmt2 zero-copy open must be
+//! invisible to search.
+//!
+//! An index reopened through `MappedPack::open` (a real file, a real
+//! mapping) holds the same codes, labels, and block-major transpose as
+//! the owned build — as file-backed views instead of heap copies — and
+//! one LUT context derived from the same codebook floats. Every
+//! distance is therefore the same f32 arithmetic in the same scan
+//! order, so top-k results must be **bitwise** equal, not just close.
+//! This suite pins that across all five quantizer families (flat), the
+//! IVF coarse partition at partial and full probes, the sharded
+//! scatter-gather over mapped-loaded shards, tail blocks (n not a
+//! multiple of the 64-row code block), and the u8 -> u16 code-width
+//! boundary (m > 256).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use icq::config::SearchConfig;
+use icq::coordinator::{
+    BatchSearcher, LocalShardBackend, NativeSearcher, ShardBackend,
+    ShardedSearcher,
+};
+use icq::core::{Hit, Matrix, Rng};
+use icq::data::mapped::{save_mapped, MappedPack};
+use icq::data::Dataset;
+use icq::index::ivf::load_index_mapped;
+use icq::index::search_icq::{self, IcqSearchOpts};
+use icq::index::shard::load_shard_mapped;
+use icq::index::{
+    AnyIndex, EncodedIndex, IvfBuildOpts, IvfIndex, OpCounter, ShardPolicy,
+    ShardedIndex,
+};
+use icq::quantizer::cq::{Cq, CqOpts};
+use icq::quantizer::icq::{Icq, IcqOpts};
+use icq::quantizer::opq::{Opq, OpqOpts};
+use icq::quantizer::pq::{Pq, PqOpts};
+use icq::quantizer::sq::{Sq, SqOpts};
+
+fn hetero(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(n, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 3.0 } else { 0.4 }
+    })
+}
+
+fn queries(nq: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(nq, d, |_, j| {
+        rng.normal_f32() * if j % 4 == 0 { 2.0 } else { 0.5 }
+    })
+}
+
+/// One index per quantizer family (same construction as the IVF parity
+/// suite); `vectors` live in the index's own coordinate space.
+fn method_indexes(
+    n: usize,
+    seed: u64,
+) -> Vec<(&'static str, EncodedIndex, Matrix)> {
+    let x = hetero(n, 16, seed);
+    let labels: Vec<i32> = (0..n).map(|i| i as i32).collect();
+    let mut out = Vec::new();
+
+    let icq = Icq::train(
+        &x,
+        IcqOpts { k: 8, m: 16, fast_k: 2, kmeans_iters: 5, prior_steps: 80, seed },
+    );
+    out.push(("icq", EncodedIndex::build_icq(&icq, &x, labels.clone()), x.clone()));
+
+    let pq = Pq::train(&x, PqOpts { k: 4, m: 16, iters: 4, seed });
+    out.push(("pq", EncodedIndex::build(&pq, &x, labels.clone()), x.clone()));
+
+    let opq = Opq::train(
+        &x,
+        OpqOpts { pq: PqOpts { k: 4, m: 16, iters: 4, seed }, outer_iters: 2 },
+    );
+    let mut opq_idx = EncodedIndex::build(&opq, &x, labels.clone());
+    opq_idx.sigma = 0.0;
+    out.push(("opq", opq_idx, x.clone()));
+
+    let cq = Cq::train(
+        &x,
+        CqOpts { k: 4, m: 16, iters: 3, icm_sweeps: 2, seed },
+    );
+    out.push(("cq", EncodedIndex::build(&cq, &x, labels.clone()), x.clone()));
+
+    let y: Vec<i32> = (0..n).map(|i| (i % 4) as i32).collect();
+    let sq = Sq::train(
+        &Dataset::new(x.clone(), y),
+        SqOpts {
+            d_out: 8,
+            cq: CqOpts { k: 4, m: 16, iters: 3, icm_sweeps: 2, seed },
+            ridge: 1e-3,
+        },
+    );
+    let emb = sq.embed(&x);
+    out.push(("sq", EncodedIndex::build(&sq, &x, labels), emb));
+    out
+}
+
+/// Per-query two-step top-k (the serial heap path both sides share).
+fn flat_topk(index: &EncodedIndex, qs: &Matrix, k: usize) -> Vec<Vec<Hit>> {
+    let ops = OpCounter::new();
+    let mut scratch = Vec::new();
+    (0..qs.rows())
+        .map(|qi| {
+            search_icq::search_scanfirst_query_qlut(
+                index,
+                qs.row(qi),
+                IcqSearchOpts { k, margin_scale: 1.0 },
+                &ops,
+                &mut scratch,
+            )
+        })
+        .collect()
+}
+
+/// Write `index` as an icqfmt2 file and reopen it through a real
+/// mapping (the `--mmap` serving path, not the in-memory shortcut).
+fn reopen_mapped(index: &EncodedIndex, tag: &str) -> EncodedIndex {
+    let path = temp_path(tag);
+    save_mapped(&index.to_mapped_tensors(), &path).unwrap();
+    let mp = MappedPack::open(&path).unwrap();
+    let back = EncodedIndex::from_mapped(&mp).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    back
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("icq-mapped-parity-{}-{tag}.icq2", std::process::id()))
+}
+
+/// Every family, tail blocks included (330 is not a multiple of the
+/// 64-row code block): the mapped reopen holds identical codes, labels,
+/// and blocked transpose — as views — and searches bitwise-identically.
+#[test]
+fn mapped_flat_is_bitwise_for_every_method() {
+    for (name, index, x) in method_indexes(330, 21) {
+        let back = reopen_mapped(&index, name);
+        assert_eq!(back.codes(), index.codes(), "{name}: codes changed");
+        assert_eq!(back.labels, index.labels, "{name}: labels changed");
+        assert!(back.labels.is_mapped(), "{name}: labels were copied");
+        assert!(back.blocked().is_mapped(), "{name}: blocked was copied");
+
+        let qs = queries(5, x.cols(), 22);
+        assert_eq!(
+            flat_topk(&back, &qs, 10),
+            flat_topk(&index, &qs, 10),
+            "{name}: mapped top-k != owned top-k"
+        );
+    }
+}
+
+/// The IVF coarse partition survives the mapped round trip at partial
+/// and full probes — per-cell code lists and id maps are file views,
+/// the probe order and merged `(distance, id)` heap are unchanged.
+#[test]
+fn mapped_ivf_is_bitwise_at_every_nprobe() {
+    let (_, index, x) = method_indexes(330, 23).swap_remove(0);
+    let qs = queries(5, 16, 24);
+    let ivf = IvfIndex::partition(
+        &index,
+        &x,
+        IvfBuildOpts { ncells: 7, iters: 6, seed: 0 },
+    )
+    .unwrap();
+
+    let path = temp_path("ivf");
+    save_mapped(&ivf.to_mapped_tensors(), &path).unwrap();
+    let mp = MappedPack::open(&path).unwrap();
+    let AnyIndex::Ivf(back) = load_index_mapped(&mp).unwrap() else {
+        panic!("IVF snapshot dispatched as flat");
+    };
+    std::fs::remove_file(&path).unwrap();
+
+    let ops = OpCounter::new();
+    for nprobe in [1usize, 3, 7] {
+        for qi in 0..qs.rows() {
+            let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+            assert_eq!(
+                back.search(qs.row(qi), nprobe, opts, &ops),
+                ivf.search(qs.row(qi), nprobe, opts, &ops),
+                "nprobe {nprobe} query {qi} diverged under mmap"
+            );
+        }
+    }
+}
+
+/// Scatter-gather over shards that were each exported, mapped, and
+/// reloaded (`export-shards` -> `shard-server --mmap`, in-process) must
+/// equal the flat searcher over the owned whole index.
+#[test]
+fn mapped_shard_gather_is_bitwise() {
+    let (_, index, _) = method_indexes(330, 25).swap_remove(1);
+    let qs = queries(6, 16, 26);
+    let cfg = SearchConfig { top_k: 10, margin_scale: 1.0 };
+
+    let cut = ShardedIndex::build(&index, ShardPolicy::Count(3)).unwrap();
+    let ops = Arc::new(OpCounter::new());
+    let mut backends: Vec<Box<dyn ShardBackend>> = Vec::new();
+    let mut lut_source = None;
+    for s in 0..cut.num_shards() {
+        let path = temp_path(&format!("shard{s}"));
+        save_mapped(&cut.shard_mapped_tensors(s), &path).unwrap();
+        let mp = MappedPack::open(&path).unwrap();
+        let (shard, start) = load_shard_mapped(&mp).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(start, cut.spec(s).start, "shard {s} placement changed");
+        assert!(shard.blocked().is_mapped(), "shard {s} was copied");
+        let shard = Arc::new(shard);
+        if lut_source.is_none() {
+            lut_source = Some(shard.clone());
+        }
+        backends.push(Box::new(LocalShardBackend::new(
+            start,
+            shard,
+            cfg,
+            ops.clone(),
+        )));
+    }
+    let gather = ShardedSearcher::from_backends(
+        backends,
+        lut_source,
+        index.dim(),
+        ops,
+    )
+    .unwrap();
+    let flat = NativeSearcher::new(Arc::new(index), cfg);
+    assert_eq!(
+        gather.search_batch(&qs, 10).unwrap(),
+        flat.search_batch(&qs, 10).unwrap(),
+        "mapped shard gather != owned flat searcher"
+    );
+}
+
+/// m > 256 forces the u16 blocked transpose; the mapped container
+/// stores and reopens it at that width (the `blocked_u16` tensor), and
+/// search stays bitwise across the width boundary.
+#[test]
+fn mapped_u16_width_boundary_is_bitwise() {
+    let n = 330;
+    let x = hetero(n, 8, 27);
+    let pq = Pq::train(&x, PqOpts { k: 2, m: 300, iters: 2, seed: 27 });
+    let index =
+        EncodedIndex::build(&pq, &x, (0..n).map(|i| i as i32).collect());
+    assert!(
+        index.codes().as_slice().iter().any(|&c| c > u8::MAX as u16),
+        "corpus too tame: no code crossed the u8 boundary"
+    );
+    let pack = index.to_mapped_tensors();
+    assert!(pack.tensors.contains_key("blocked_u16"));
+    assert!(!pack.tensors.contains_key("blocked_u8"));
+
+    let back = reopen_mapped(&index, "wide");
+    assert_eq!(back.codes(), index.codes());
+    assert!(back.blocked().is_mapped());
+    let qs = queries(4, 8, 28);
+    assert_eq!(
+        flat_topk(&back, &qs, 10),
+        flat_topk(&index, &qs, 10),
+        "u16-width mapped top-k != owned top-k"
+    );
+}

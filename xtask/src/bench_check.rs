@@ -369,9 +369,10 @@ mod tests {
     #[test]
     fn serving_parity_false_fails() {
         let text = r#"{
-            "bench": "gauntlet_serving", "schema_version": 1,
+            "bench": "gauntlet_serving", "schema_version": 1.1,
             "profile": "fast",
-            "rows": [{"id": "serving/flat", "qps": 10.0, "parity": true}]
+            "rows": [{"id": "serving/flat", "qps": 10.0, "parity": true,
+                      "load_ms": 1.5, "peak_rss_bytes": 4096}]
         }"#;
         let b = Json::parse(text).unwrap();
         let mut f = b.clone();
