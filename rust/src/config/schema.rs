@@ -5,6 +5,8 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::core::Metric;
+
 /// Which quantization method to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MethodKind {
@@ -48,11 +50,15 @@ pub struct SearchConfig {
     pub top_k: usize,
     /// sigma margin scale (1.0 = paper eq. 11).
     pub margin_scale: f32,
+    /// similarity regime served (l2 | ip | cosine). Must match the
+    /// metric the index was built/tagged with — drift is rejected at
+    /// startup and at the shard-server hello, never silently served.
+    pub metric: Metric,
 }
 
 impl Default for SearchConfig {
     fn default() -> Self {
-        SearchConfig { top_k: 10, margin_scale: 1.0 }
+        SearchConfig { top_k: 10, margin_scale: 1.0, metric: Metric::L2 }
     }
 }
 
@@ -251,6 +257,9 @@ impl EngineConfig {
             "seed" => self.seed = value.parse()?,
             "search.top_k" => self.search.top_k = parse_usize(value)?,
             "search.margin_scale" => self.search.margin_scale = value.parse()?,
+            "metric" | "search.metric" => {
+                self.search.metric = Metric::parse(value)?
+            }
             "ivf.ncells" => self.ivf.ncells = parse_usize(value)?,
             "ivf.nprobe" => self.ivf.nprobe = parse_usize(value)?,
             "ivf.residual" => {
@@ -405,6 +414,27 @@ mod tests {
         assert_eq!(d.remote_hedge_ms, 50);
         assert_eq!(d.remote_circuit_failures, 3);
         assert!(d.replica_groups().is_empty());
+    }
+
+    #[test]
+    fn parses_metric_key_with_aliases() {
+        for (s, m) in [
+            ("l2", Metric::L2),
+            ("ip", Metric::InnerProduct),
+            ("mips", Metric::InnerProduct),
+            ("cosine", Metric::Cosine),
+        ] {
+            let c =
+                EngineConfig::from_str_pairs(&format!("metric = {s}\n"))
+                    .unwrap();
+            assert_eq!(c.search.metric, m, "metric = {s}");
+        }
+        // default is L2, and 'search.metric' is an accepted alias
+        assert_eq!(EngineConfig::default().search.metric, Metric::L2);
+        let c = EngineConfig::from_str_pairs("search.metric = cosine\n")
+            .unwrap();
+        assert_eq!(c.search.metric, Metric::Cosine);
+        assert!(EngineConfig::from_str_pairs("metric = hamming\n").is_err());
     }
 
     #[test]

@@ -26,10 +26,10 @@ use anyhow::Result;
 use super::sync::Arc;
 
 use crate::config::SearchConfig;
-use crate::core::{Hit, Matrix};
+use crate::core::{Hit, Matrix, Metric};
 use crate::index::lut::Lut;
 use crate::index::search_icq::{self, IcqSearchOpts};
-use crate::index::{EncodedIndex, IvfIndex, OpCounter};
+use crate::index::{EncodedIndex, IvfIndex, OpCounter, RowFilter};
 
 /// One scattered unit of work: the batch's query vectors plus (when the
 /// gather has a local LUT source) the prebuilt per-query LUTs. Local
@@ -46,6 +46,11 @@ pub struct ShardJob {
     pub luts: Arc<Vec<Lut>>,
     /// Neighbors requested per query.
     pub top_k: usize,
+    /// Optional allow-list over **global** rows, shared by every query
+    /// of the batch. Each backend cuts out its own shard's slice
+    /// ([`RowFilter::slice`]) — locally before the masked sweep,
+    /// remotely before serializing the filter words onto the wire.
+    pub filter: Option<Arc<RowFilter>>,
 }
 
 /// A shard executor the gather can scatter to. Implementations own
@@ -68,6 +73,21 @@ pub trait ShardBackend: Send + 'static {
 
     /// Execute the batched two-step over this backend's shard.
     fn search(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>>;
+
+    /// The metric this backend's shard ranks by. The gather rejects a
+    /// backend set with mixed metrics at construction (config drift
+    /// would merge ascending-distance and descending-score lists into
+    /// nonsense).
+    fn metric(&self) -> Metric {
+        Metric::L2
+    }
+
+    /// One past the highest global row id this backend can return
+    /// (`0` = unknown). The gather's filtered path sizes its global
+    /// [`RowFilter`] from the max across backends.
+    fn span(&self) -> usize {
+        0
+    }
 }
 
 /// In-process shard executor: the batched LUT-major two-step engine over
@@ -123,23 +143,31 @@ impl ShardBackend for LocalShardBackend {
 
     fn search(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
         let opts = IcqSearchOpts { k: job.top_k, ..self.opts };
+        // cut this shard's local-row slice out of the batch's global
+        // allow-list; shard cuts are block-aligned, so this hits the
+        // word-copy fast path
+        let filter = job.filter.as_ref().map(|f| {
+            f.slice(self.start, self.start + self.shard.len())
+        });
         let mut hits = if job.luts.len() == job.queries.rows() {
-            search_icq::search_scanfirst_batch_with_luts(
+            search_icq::search_scanfirst_batch_with_luts_filtered(
                 &self.shard,
                 &job.luts,
                 opts,
                 &self.ops,
                 &mut self.crude,
+                filter.as_ref(),
             )
         } else {
             // no shared LUTs (all-remote gather running a lone local
             // backend): build our own, charging the LUT-build flops here
-            search_icq::search_scanfirst_batch(
+            search_icq::search_scanfirst_batch_filtered(
                 &self.shard,
                 &job.queries,
                 opts,
                 &self.ops,
                 &mut self.crude,
+                filter.as_ref(),
             )
         };
         for per_query in &mut hits {
@@ -148,6 +176,14 @@ impl ShardBackend for LocalShardBackend {
             }
         }
         Ok(hits)
+    }
+
+    fn metric(&self) -> Metric {
+        self.shard.metric
+    }
+
+    fn span(&self) -> usize {
+        self.start + self.shard.len()
     }
 }
 
@@ -203,6 +239,12 @@ impl ShardBackend for LocalIvfShardBackend {
     }
 
     fn search(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
+        anyhow::ensure!(
+            job.filter.is_none(),
+            "ivf shard backends do not support filtered search \
+             (cells scatter rows, so a bitmap cannot be cut per cell \
+             cheaply); serve filtered queries from a flat index"
+        );
         let opts = IcqSearchOpts { k: job.top_k, ..self.opts };
         let mut out = Vec::with_capacity(job.queries.rows());
         let mut crude = Vec::new();
@@ -216,6 +258,16 @@ impl ShardBackend for LocalIvfShardBackend {
             ));
         }
         Ok(out)
+    }
+
+    fn metric(&self) -> Metric {
+        self.shard.metric()
+    }
+
+    fn span(&self) -> usize {
+        // cells hold global ids already; the shard view spans the whole
+        // database row space
+        self.shard.len()
     }
 }
 
@@ -255,6 +307,7 @@ mod tests {
                 queries: queries.clone(),
                 luts: Arc::new(luts),
                 top_k: 5,
+                filter: None,
             })
             .unwrap();
         let without_luts = backend
@@ -262,6 +315,7 @@ mod tests {
                 queries: queries.clone(),
                 luts: Arc::new(Vec::new()),
                 top_k: 5,
+                filter: None,
             })
             .unwrap();
         assert_eq!(with_luts, without_luts, "LUT sharing changed results");
@@ -275,6 +329,75 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// A global filter handed to a shard backend must be sliced to the
+    /// shard's row range: hits are exactly the allowed subset of the
+    /// unfiltered shard answer, and an IVF backend rejects filters with
+    /// a typed error instead of quietly ignoring them.
+    #[test]
+    fn backend_slices_global_filters_and_ivf_rejects_them() {
+        let idx = index(200);
+        let shard = Arc::new(idx.slice(64, 200));
+        let mut backend = LocalShardBackend::new(
+            64,
+            shard.clone(),
+            SearchConfig::default(),
+            Arc::new(OpCounter::new()),
+        );
+        assert_eq!(backend.span(), 200);
+        assert_eq!(backend.metric(), Metric::L2);
+        let queries = Arc::new(Matrix::from_fn(2, 8, |i, _| i as f32 * 0.3));
+        // allow only even global rows
+        let allowed: Vec<u32> = (0..200).filter(|i| i % 2 == 0).collect();
+        let filter = Arc::new(RowFilter::from_indices(200, &allowed));
+        let unfiltered = backend
+            .search(&ShardJob {
+                queries: queries.clone(),
+                luts: Arc::new(Vec::new()),
+                top_k: 200,
+                filter: None,
+            })
+            .unwrap();
+        let filtered = backend
+            .search(&ShardJob {
+                queries: queries.clone(),
+                luts: Arc::new(Vec::new()),
+                top_k: 10,
+                filter: Some(filter.clone()),
+            })
+            .unwrap();
+        for (qi, hits) in filtered.iter().enumerate() {
+            let mut expect: Vec<Hit> = unfiltered[qi]
+                .iter()
+                .copied()
+                .filter(|h| h.id % 2 == 0)
+                .collect();
+            expect.truncate(10);
+            assert_eq!(hits, &expect, "query {qi}");
+        }
+        // ivf: filters are a typed error, not a silent no-op
+        let ivf = IvfIndex::partition(
+            &idx,
+            &Matrix::from_fn(200, 8, |i, j| (i + j) as f32 * 0.01),
+            crate::index::ivf::IvfBuildOpts { ncells: 4, iters: 3, seed: 0 },
+        )
+        .unwrap();
+        let mut ivf_backend = LocalIvfShardBackend::new(
+            Arc::new(ivf),
+            2,
+            SearchConfig::default(),
+            Arc::new(OpCounter::new()),
+        );
+        let err = ivf_backend
+            .search(&ShardJob {
+                queries,
+                luts: Arc::new(Vec::new()),
+                top_k: 5,
+                filter: Some(filter),
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("filtered"), "got: {err}");
     }
 
     #[test]
@@ -299,6 +422,7 @@ mod tests {
             queries: queries.clone(),
             luts: Arc::new(Vec::new()),
             top_k: 7,
+            filter: None,
         };
         let ops = Arc::new(OpCounter::new());
         let opts = IcqSearchOpts { k: 7, margin_scale: 1.0 };
@@ -308,7 +432,7 @@ mod tests {
                 let mut backend = LocalIvfShardBackend::new(
                     Arc::new(shard),
                     nprobe,
-                    SearchConfig { top_k: 7, margin_scale: 1.0 },
+                    SearchConfig { top_k: 7, ..SearchConfig::default() },
                     ops.clone(),
                 );
                 lists.push(backend.search(&job).unwrap());

@@ -62,6 +62,7 @@ mod tests {
         PendingQuery {
             vector: vec![0.0; 4],
             top_k,
+            filter: None,
             enqueued: Instant::now(),
             respond,
         }

@@ -57,10 +57,10 @@ use super::sync::mpsc::{self, Receiver, SyncSender};
 use super::sync::{spawn_named, Arc};
 use super::worker::BatchSearcher;
 use crate::config::SearchConfig;
-use crate::core::{Hit, Matrix};
+use crate::core::{merge_topk_metric, Hit, Matrix, Metric};
 use crate::index::lut::Lut;
 use crate::index::shard::{ShardPolicy, ShardedIndex};
-use crate::index::{EncodedIndex, OpCounter};
+use crate::index::{EncodedIndex, OpCounter, RowFilter};
 
 pub use crate::core::topk::merge_topk;
 
@@ -91,6 +91,12 @@ pub struct ShardedSearcher {
     /// the shard servers build their own (identical) LUTs.
     lut_source: Option<Arc<EncodedIndex>>,
     dim: usize,
+    /// The metric every backend agreed on at construction — drives the
+    /// per-query LUT build and the canonical merge order.
+    metric: Metric,
+    /// One past the highest global row id across backends (0 when no
+    /// backend reports a span) — the row space filtered requests index.
+    num_rows: usize,
     /// Shared op counters, aggregated across every local shard worker.
     /// `table_adds`/`candidates`/`refined` sum local-shard totals and
     /// LUT-build `flops` are charged once per batch; remote shards do
@@ -116,6 +122,21 @@ impl ShardedSearcher {
         );
         let names: Vec<String> =
             backends.iter().map(|b| b.describe()).collect();
+        // every backend must rank by the same metric: merging an
+        // ascending-distance list with a descending-score list would be
+        // silent nonsense, so drift is a typed startup error
+        let metric = backends[0].metric();
+        for (b, name) in backends.iter().zip(&names) {
+            anyhow::ensure!(
+                b.metric() == metric,
+                "shard backend '{name}' serves metric {} but '{}' \
+                 serves {metric} (config drift across the shard set)",
+                b.metric(),
+                names[0]
+            );
+        }
+        let num_rows =
+            backends.iter().map(|b| b.span()).max().unwrap_or(0);
         let mut jobs = Vec::with_capacity(backends.len());
         for (bid, mut backend) in backends.into_iter().enumerate() {
             let (tx, rx) = mpsc::sync_channel::<BackendJob>(4);
@@ -124,7 +145,15 @@ impl ShardedSearcher {
                 run_backend_worker(bid, &mut *backend, rx)
             });
         }
-        Ok(ShardedSearcher { jobs, names, lut_source, dim, ops })
+        Ok(ShardedSearcher {
+            jobs,
+            names,
+            lut_source,
+            dim,
+            metric,
+            num_rows,
+            ops,
+        })
     }
 
     /// Spawn one local worker per shard of `index` — the single-host
@@ -194,9 +223,26 @@ impl BatchSearcher for ShardedSearcher {
         queries: &Matrix,
         top_k: usize,
     ) -> Result<Vec<Vec<Hit>>> {
+        self.search_batch_filtered(queries, top_k, None)
+    }
+
+    fn search_batch_filtered(
+        &self,
+        queries: &Matrix,
+        top_k: usize,
+        filter: Option<&RowFilter>,
+    ) -> Result<Vec<Vec<Hit>>> {
         let nq = queries.rows();
         if nq == 0 {
             return Ok(Vec::new());
+        }
+        if let Some(f) = filter {
+            anyhow::ensure!(
+                f.len() == self.num_rows,
+                "row filter covers {} rows but the shard set spans {}",
+                f.len(),
+                self.num_rows
+            );
         }
         // build each query's LUT exactly once when a local shard can
         // host the build — identical across local shards (Arc-shared
@@ -205,10 +251,11 @@ impl BatchSearcher for ShardedSearcher {
             Some(src) => {
                 let luts = (0..nq)
                     .map(|qi| {
-                        Lut::build(
+                        Lut::build_metric(
                             src.lut_ctx(),
                             src.codebooks(),
                             queries.row(qi),
+                            src.metric,
                         )
                     })
                     .collect();
@@ -222,6 +269,7 @@ impl BatchSearcher for ShardedSearcher {
             queries: Arc::new(queries.clone()),
             luts: Arc::new(luts),
             top_k,
+            filter: filter.cloned().map(Arc::new),
         });
         // scatter: every backend gets the same shared job
         let (reply_tx, reply_rx) = mpsc::sync_channel(self.jobs.len());
@@ -262,12 +310,16 @@ impl BatchSearcher for ShardedSearcher {
         }
         Ok(per_query
             .into_iter()
-            .map(|lists| merge_topk(&lists, top_k))
+            .map(|lists| merge_topk_metric(&lists, top_k, self.metric))
             .collect())
     }
 
     fn dim(&self) -> usize {
         self.dim
+    }
+
+    fn num_rows(&self) -> usize {
+        self.num_rows
     }
 }
 
@@ -418,6 +470,60 @@ mod tests {
             assert!(
                 !msg.contains("worker exited"),
                 "round {round}: worker thread died instead of surviving"
+            );
+        }
+    }
+
+    /// Mixed-metric backend sets are a typed construction error, and a
+    /// homogeneous similarity set merges by descending score.
+    #[test]
+    fn mixed_metric_backends_are_rejected_at_construction() {
+        use crate::core::Metric;
+        let idx = index(128, 11);
+        let ip = Arc::new(idx.clone().with_metric(Metric::InnerProduct));
+        let l2 = Arc::new(idx);
+        let ops = Arc::new(OpCounter::new());
+        let backends: Vec<Box<dyn ShardBackend>> = vec![
+            Box::new(LocalShardBackend::new(
+                0,
+                ip.clone(),
+                SearchConfig::default(),
+                ops.clone(),
+            )),
+            Box::new(LocalShardBackend::new(
+                128,
+                l2,
+                SearchConfig::default(),
+                ops.clone(),
+            )),
+        ];
+        let err = ShardedSearcher::from_backends(backends, None, 8, ops)
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("config drift"),
+            "got: {err}"
+        );
+        // a homogeneous ip set constructs and ranks descending
+        let ops = Arc::new(OpCounter::new());
+        let backends: Vec<Box<dyn ShardBackend>> =
+            vec![Box::new(LocalShardBackend::new(
+                0,
+                ip.clone(),
+                SearchConfig::default(),
+                ops.clone(),
+            ))];
+        let s =
+            ShardedSearcher::from_backends(backends, Some(ip), 8, ops)
+                .unwrap();
+        assert_eq!(s.num_rows(), 128);
+        let res = s
+            .search_batch(&Matrix::from_fn(1, 8, |_, j| j as f32 * 0.1), 6)
+            .unwrap();
+        for w in res[0].windows(2) {
+            assert!(
+                w[0].dist > w[1].dist
+                    || (w[0].dist == w[1].dist && w[0].id < w[1].id),
+                "similarity merge must rank descending"
             );
         }
     }

@@ -254,6 +254,13 @@ impl RemoteEndpoint {
     ) -> Result<Arc<Self>> {
         let opts = PoolOpts { size: opts.size.max(1), ..opts };
         let (conn, hello) = dial_raw(addr, &opts, &metrics, None)?;
+        anyhow::ensure!(
+            hello.metric == cfg.metric,
+            "shard server {addr} serves metric {} but the gateway is \
+             configured for {} (config drift)",
+            hello.metric,
+            cfg.metric
+        );
         Ok(Arc::new(RemoteEndpoint {
             addr: addr.to_string(),
             cfg,
@@ -392,12 +399,20 @@ impl RemoteEndpoint {
         job: &ShardJob,
         deadline: Option<Instant>,
     ) -> Result<Vec<Vec<Hit>>> {
+        // a global filter is cut down to this shard's local row range
+        // before it crosses the wire — the server only knows its own
+        // rows, so the words it receives must already be local
+        let filter = job.filter.as_ref().map(|f| {
+            f.slice(self.hello.start, self.hello.start + self.hello.shard_len)
+        });
         write_query_frame(
             &mut conn.writer,
             job.top_k,
             self.hello.fast_k,
             self.cfg.margin_scale,
+            self.cfg.metric,
             &job.queries,
+            filter.as_ref().map(|f| f.words()),
         )?;
         conn.writer.flush().context("flushing query frame")?;
         let reply_budget = step_budget(self.opts.io_timeout, deadline)

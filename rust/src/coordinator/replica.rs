@@ -531,6 +531,14 @@ impl ShardBackend for ReplicaSetBackend {
     fn search(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
         self.search_replicated(job)
     }
+
+    fn metric(&self) -> crate::core::Metric {
+        self.hello.metric
+    }
+
+    fn span(&self) -> usize {
+        self.hello.start + self.hello.shard_len
+    }
 }
 
 #[cfg(test)]

@@ -119,6 +119,7 @@ mod tests {
         PendingQuery {
             vector: vec![0.0],
             top_k: 1,
+            filter: None,
             enqueued: Instant::now(),
             respond,
         }

@@ -18,6 +18,7 @@ use super::worker::{run_worker, BatchSearcher};
 use crate::config::ServeConfig;
 use crate::core::json::Json;
 use crate::core::Hit;
+use crate::index::RowFilter;
 
 /// A query in flight inside the coordinator.
 pub struct PendingQuery {
@@ -25,6 +26,10 @@ pub struct PendingQuery {
     pub vector: Vec<f32>,
     /// Neighbors requested.
     pub top_k: usize,
+    /// Optional allow-list over global row ids (validated against the
+    /// searcher's row count at ingress). `Arc` so the batcher/router
+    /// can move the query without copying the bitmap.
+    pub filter: Option<Arc<RowFilter>>,
     /// When the query entered the pipeline (for latency metrics).
     pub enqueued: Instant,
     /// one-shot response channel (bounded(1) std mpsc). Carries the
@@ -35,12 +40,17 @@ pub struct PendingQuery {
 }
 
 /// Client-side request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct QueryRequest {
     /// The query vector; must match the index dimensionality.
     pub vector: Vec<f32>,
     /// Neighbors requested (>= 1).
     pub top_k: usize,
+    /// Optional allow-list of global row ids: when present, only these
+    /// rows may appear in the results (an empty list matches nothing).
+    /// Ids at or past the index's row count are rejected up front, as
+    /// are filters against a searcher that cannot honor them (IVF).
+    pub filter_ids: Option<Vec<usize>>,
 }
 
 /// Search response.
@@ -62,6 +72,7 @@ pub struct Coordinator {
     /// Serving metrics, shared with every pipeline stage.
     pub metrics: Arc<Metrics>,
     dim: usize,
+    num_rows: usize,
 }
 
 impl Coordinator {
@@ -69,6 +80,7 @@ impl Coordinator {
     pub fn start(searcher: Arc<dyn BatchSearcher>, cfg: ServeConfig) -> Self {
         let metrics = Arc::new(Metrics::new());
         let dim = searcher.dim();
+        let num_rows = searcher.num_rows();
 
         let (ingress_tx, ingress_rx) =
             mpsc::sync_channel::<PendingQuery>(cfg.max_inflight.max(1));
@@ -101,6 +113,7 @@ impl Coordinator {
             admission: Admission::new(cfg.max_inflight.max(1)),
             metrics,
             dim,
+            num_rows,
         }
     }
 
@@ -128,6 +141,19 @@ impl Coordinator {
             "non-finite query vector entry"
         );
         anyhow::ensure!(req.top_k >= 1, "top_k must be >= 1");
+        if let Some(ids) = &req.filter_ids {
+            anyhow::ensure!(
+                self.num_rows > 0,
+                "this searcher does not support filtered search"
+            );
+            for &id in ids {
+                anyhow::ensure!(
+                    id < self.num_rows,
+                    "filter id {id} out of range (index has {} rows)",
+                    self.num_rows
+                );
+            }
+        }
         Ok(())
     }
 
@@ -153,12 +179,12 @@ impl Coordinator {
     /// let coord = Coordinator::start(searcher, ServeConfig::default());
     ///
     /// let resp = coord
-    ///     .query(QueryRequest { vector: vec![0.0; 8], top_k: 3 })
+    ///     .query(QueryRequest { vector: vec![0.0; 8], top_k: 3, filter_ids: None })
     ///     .unwrap();
     /// assert_eq!(resp.hits.len(), 3);
     /// // malformed requests fail fast, before admission or batching
     /// assert!(coord
-    ///     .query(QueryRequest { vector: vec![0.0; 5], top_k: 3 })
+    ///     .query(QueryRequest { vector: vec![0.0; 5], top_k: 3, filter_ids: None })
     ///     .is_err());
     /// ```
     pub fn query(&self, req: QueryRequest) -> Result<QueryResponse> {
@@ -171,9 +197,13 @@ impl Coordinator {
         };
         self.metrics.queries_in.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::sync_channel(1);
+        let filter = req
+            .filter_ids
+            .map(|ids| Arc::new(RowFilter::from_indices(self.num_rows, &ids)));
         let pending = PendingQuery {
             vector: req.vector,
             top_k: req.top_k,
+            filter,
             enqueued: Instant::now(),
             respond: tx,
         };
@@ -185,7 +215,8 @@ impl Coordinator {
 
     /// Serve a line-delimited JSON protocol on `addr`
     /// (thread-per-connection):
-    ///   request : {"vector": [f32...], "top_k": 10}
+    ///   request : {"vector": [f32...], "top_k": 10,
+    ///              "filter_ids": [row ids...]}   // filter optional
     ///   response: {"ids": [...], "dists": [...], "latency_us": ...}
     pub fn serve_tcp(self: Arc<Self>, addr: &str) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
@@ -241,7 +272,22 @@ impl Coordinator {
             "non-numeric vector entry"
         );
         let top_k = req.get("top_k").and_then(|v| v.as_usize()).unwrap_or(10);
-        let resp = self.query(QueryRequest { vector, top_k })?;
+        let filter_ids = match req.get("filter_ids") {
+            None => None,
+            Some(v) => {
+                let arr = v.as_arr().ok_or_else(|| {
+                    anyhow::anyhow!("'filter_ids' must be an array of row ids")
+                })?;
+                let mut ids = Vec::with_capacity(arr.len());
+                for e in arr {
+                    ids.push(e.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("non-integer 'filter_ids' entry")
+                    })?);
+                }
+                Some(ids)
+            }
+        };
+        let resp = self.query(QueryRequest { vector, top_k, filter_ids })?;
         let mut obj = std::collections::BTreeMap::new();
         obj.insert(
             "ids".to_string(),
@@ -281,7 +327,9 @@ pub fn closed_loop_load(
             scope.spawn(move || {
                 for i in 0..queries_per_thread {
                     let vector = make_query(t * queries_per_thread + i);
-                    if coord.query(QueryRequest { vector, top_k }).is_ok() {
+                    let req =
+                        QueryRequest { vector, top_k, filter_ids: None };
+                    if coord.query(req).is_ok() {
                         ok.fetch_add(1, Ordering::Relaxed);
                     }
                 }
@@ -331,8 +379,13 @@ mod tests {
     #[test]
     fn answers_queries() {
         let c = coordinator(2, 64);
-        let resp =
-            c.query(QueryRequest { vector: vec![0.1; 8], top_k: 5 }).unwrap();
+        let resp = c
+            .query(QueryRequest {
+                vector: vec![0.1; 8],
+                top_k: 5,
+                filter_ids: None,
+            })
+            .unwrap();
         assert_eq!(resp.hits.len(), 5);
         for w in resp.hits.windows(2) {
             assert!(w[0].dist <= w[1].dist);
@@ -343,7 +396,11 @@ mod tests {
     fn rejects_wrong_dim() {
         let c = coordinator(1, 8);
         assert!(c
-            .query(QueryRequest { vector: vec![0.0; 3], top_k: 5 })
+            .query(QueryRequest {
+                vector: vec![0.0; 3],
+                top_k: 5,
+                filter_ids: None,
+            })
             .is_err());
     }
 
@@ -418,11 +475,84 @@ mod tests {
         );
     }
 
+    /// End-to-end filtered serving: a `filter_ids` request returns only
+    /// allowed rows (both through `query` and the JSON front-end), an
+    /// empty allow-list matches nothing, and out-of-range ids are
+    /// rejected up front without consuming serving state.
+    #[test]
+    fn filtered_queries_respect_the_allow_list() {
+        let c = coordinator(1, 8);
+        let allowed: Vec<usize> = (0..300).step_by(7).collect();
+        let resp = c
+            .query(QueryRequest {
+                vector: vec![0.1; 8],
+                top_k: 5,
+                filter_ids: Some(allowed.clone()),
+            })
+            .unwrap();
+        assert_eq!(resp.hits.len(), 5);
+        for h in &resp.hits {
+            assert!(
+                allowed.contains(&(h.id as usize)),
+                "hit {} escaped the filter",
+                h.id
+            );
+        }
+
+        // empty allow-list: valid request, matches nothing
+        let resp = c
+            .query(QueryRequest {
+                vector: vec![0.1; 8],
+                top_k: 5,
+                filter_ids: Some(vec![]),
+            })
+            .unwrap();
+        assert!(resp.hits.is_empty());
+
+        // out-of-range id: rejected before admission
+        let err = c
+            .query(QueryRequest {
+                vector: vec![0.1; 8],
+                top_k: 5,
+                filter_ids: Some(vec![300]),
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
+
+        // and through the JSON front-end
+        let reply = c
+            .handle_json(
+                r#"{"vector":[0,0,0,0,0,0,0,0],"top_k":2,"filter_ids":[3,4,5]}"#,
+            )
+            .unwrap();
+        let v = Json::parse(&reply).unwrap();
+        let ids: Vec<usize> = v
+            .get("ids")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as usize)
+            .collect();
+        assert_eq!(ids.len(), 2);
+        for id in ids {
+            assert!([3usize, 4, 5].contains(&id));
+        }
+        assert!(c
+            .handle_json(r#"{"vector":[0,0,0,0,0,0,0,0],"filter_ids":"x"}"#)
+            .unwrap_err()
+            .to_string()
+            .contains("filter_ids"));
+    }
+
     #[test]
     fn query_rejects_non_finite_vectors() {
         let c = coordinator(1, 8);
         let mut v = vec![0.0f32; 8];
         v[3] = f32::NAN;
-        assert!(c.query(QueryRequest { vector: v, top_k: 2 }).is_err());
+        assert!(c
+            .query(QueryRequest { vector: v, top_k: 2, filter_ids: None })
+            .is_err());
     }
 }

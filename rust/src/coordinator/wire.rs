@@ -8,28 +8,39 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic  "ICQW"
-//! 4       2     version (u16 LE, currently 1)
+//! 4       2     version (u16 LE, currently 2)
 //! 6       1     kind    (0 hello | 1 query | 2 results | 3 error)
 //! 7       4     payload length (u32 LE, capped at 64 MiB)
 //! 11      len   payload (little-endian scalars, see below)
 //! 11+len  4     CRC32 (IEEE) of kind byte + payload
 //! ```
 //!
-//! Payloads:
+//! Payloads (v2; v1 lacked the `metric` and filter fields and is
+//! rejected with a [`WireError::VersionMismatch`]):
 //!
 //! ```text
 //! hello   : dim u32 | shard_len u64 | start u64 | fast_k u32
+//!           | metric u32
 //! query   : top_k u32 | fast_k u32 | margin_scale f32
 //!           | nq u32 | dim u32 | nq*dim f32
+//!           | metric u32 | filt_words u32 | filt_words x u64
 //! results : nq u32 | per query: cnt u32 | cnt x (dist f32, id u64)
 //! error   : utf-8 message bytes
 //! ```
 //!
 //! The server speaks first: one `hello` frame per connection announcing
 //! the shard's geometry (query dim, row count, global start row, fast
-//! group size). Each `query` frame is answered by exactly one `results`
-//! or `error` frame. Hit ids in `results` are **global** rows (the
-//! server adds its `start`), widened to u64 on the wire.
+//! group size, distance metric). Each `query` frame is answered by
+//! exactly one `results` or `error` frame. Hit ids in `results` are
+//! **global** rows (the server adds its `start`), widened to u64 on the
+//! wire. A query's `metric` is the *coordinator's* configured metric —
+//! the server rejects drift against its shard's tag just like a
+//! `fast_k` mismatch, so a misconfigured gateway gets a typed error
+//! instead of nonsense rankings. `filt_words` carries an optional
+//! per-vector allow-list bitmap (`0` = unfiltered) already sliced to
+//! the shard's *local* row range `[0, shard_len)`; the server rebuilds
+//! a validated [`RowFilter`] from it, so a word-count/tail-bit mismatch
+//! is a typed error too.
 //!
 //! ## Failure semantics
 //!
@@ -76,15 +87,18 @@ use super::pool::{PoolOpts, RemoteEndpoint};
 use super::sync::atomic::{AtomicUsize, Ordering};
 use super::sync::{thread, Arc};
 use crate::config::SearchConfig;
-use crate::core::{Hit, Matrix};
+use crate::core::{Hit, Matrix, Metric};
 use crate::index::search_icq::{self, IcqSearchOpts};
-use crate::index::{EncodedIndex, OpCounter};
+use crate::index::{EncodedIndex, OpCounter, RowFilter};
 
 /// Frame magic: the first four bytes of every frame.
 pub const WIRE_MAGIC: [u8; 4] = *b"ICQW";
 
 /// Protocol version stamped into (and required of) every frame header.
-pub const WIRE_VERSION: u16 = 1;
+/// v2 added the hello `metric` tag and the query frame's metric +
+/// row-filter fields; v1 peers are rejected with a typed version
+/// mismatch rather than misparsed.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Hard cap on a frame's payload length (64 MiB): a corrupt length
 /// prefix must not allocate unbounded memory.
@@ -210,6 +224,13 @@ pub struct HelloInfo {
     pub start: usize,
     /// The shard index's fast-group size (crude-pass books).
     pub fast_k: usize,
+    /// The metric the shard index is tagged with. Part of the geometry
+    /// on purpose: [`HelloInfo`]'s `PartialEq` is what the pool's
+    /// reconnect check and the replica layer's consistency check
+    /// compare, so metric drift across a replica group (or across a
+    /// server restart) surfaces as the same typed geometry error as a
+    /// dim or row-count change.
+    pub metric: Metric,
 }
 
 /// One decoded protocol frame.
@@ -227,8 +248,17 @@ pub enum Frame {
         fast_k: usize,
         /// Margin scale on the shard's sigma (eq. 11).
         margin_scale: f32,
+        /// The coordinator's configured metric; the server rejects a
+        /// mismatch against its shard tag (drift would silently flip
+        /// the bound direction and the top-k order).
+        metric: Metric,
         /// Query vectors, one row per query.
         queries: Matrix,
+        /// Optional allow-list bitmap words over the shard's *local*
+        /// rows (`None` = unfiltered). Raw `u64` words rather than a
+        /// [`RowFilter`] because only the serving end knows the row
+        /// count to validate against.
+        filter: Option<Vec<u64>>,
     },
     /// Per-query `(distance, global id)` top-k lists.
     Results {
@@ -316,15 +346,23 @@ impl Frame {
     fn encode_payload(&self) -> Vec<u8> {
         match self {
             Frame::Hello(h) => {
-                let mut buf = Vec::with_capacity(24);
+                let mut buf = Vec::with_capacity(28);
                 put_u32(&mut buf, h.dim as u32);
                 put_u64(&mut buf, h.shard_len as u64);
                 put_u64(&mut buf, h.start as u64);
                 put_u32(&mut buf, h.fast_k as u32);
+                put_u32(&mut buf, h.metric.as_i32() as u32);
                 buf
             }
-            Frame::Query { top_k, fast_k, margin_scale, queries } => {
-                encode_query_payload(*top_k, *fast_k, *margin_scale, queries)
+            Frame::Query { top_k, fast_k, margin_scale, metric, queries, filter } => {
+                encode_query_payload(
+                    *top_k,
+                    *fast_k,
+                    *margin_scale,
+                    *metric,
+                    queries,
+                    filter.as_deref(),
+                )
             }
             Frame::Results { hits } => {
                 let total: usize = hits.iter().map(|h| h.len()).sum();
@@ -351,8 +389,15 @@ impl Frame {
                 let shard_len = c.u64()? as usize;
                 let start = c.u64()? as usize;
                 let fast_k = c.u32()? as usize;
+                let metric = decode_metric(c.u32()?)?;
                 c.done()?;
-                Ok(Frame::Hello(HelloInfo { dim, shard_len, start, fast_k }))
+                Ok(Frame::Hello(HelloInfo {
+                    dim,
+                    shard_len,
+                    start,
+                    fast_k,
+                    metric,
+                }))
             }
             KIND_QUERY => {
                 let top_k = c.u32()? as usize;
@@ -366,10 +411,13 @@ impl Frame {
                 let bytes = want.checked_mul(4).ok_or_else(|| {
                     WireError::BadPayload("query shape overflow".into())
                 })?;
-                if bytes != payload.len().saturating_sub(c.pos) {
+                // the trailer (metric + filter word count) costs 8 bytes
+                // at minimum, so a lying shape header still cannot force
+                // an allocation past the actual payload size
+                if bytes + 8 > payload.len().saturating_sub(c.pos) {
                     return Err(WireError::BadPayload(format!(
                         "query data holds {} bytes, shape {nq}x{dim} \
-                         needs {bytes}",
+                         needs {bytes} plus an 8-byte trailer",
                         payload.len().saturating_sub(c.pos),
                     )));
                 }
@@ -377,12 +425,38 @@ impl Frame {
                 for _ in 0..want {
                     data.push(c.f32()?);
                 }
+                let metric = decode_metric(c.u32()?)?;
+                let filt_words = c.u32()? as usize;
+                let filter = if filt_words == 0 {
+                    None
+                } else {
+                    let filt_bytes =
+                        filt_words.checked_mul(8).ok_or_else(|| {
+                            WireError::BadPayload(
+                                "filter length overflow".into(),
+                            )
+                        })?;
+                    if filt_bytes != payload.len().saturating_sub(c.pos) {
+                        return Err(WireError::BadPayload(format!(
+                            "filter claims {filt_words} words but {} \
+                             payload bytes remain",
+                            payload.len().saturating_sub(c.pos),
+                        )));
+                    }
+                    let mut words = Vec::with_capacity(filt_words);
+                    for _ in 0..filt_words {
+                        words.push(c.u64()?);
+                    }
+                    Some(words)
+                };
                 c.done()?;
                 Ok(Frame::Query {
                     top_k,
                     fast_k,
                     margin_scale,
+                    metric,
                     queries: Matrix::from_vec(nq, dim, data),
+                    filter,
                 })
             }
             KIND_RESULTS => {
@@ -430,13 +504,25 @@ impl Frame {
     }
 }
 
+/// A wire metric tag back to the enum, or a typed payload error.
+fn decode_metric(tag: u32) -> Result<Metric, WireError> {
+    Metric::from_i32(tag as i32).ok_or_else(|| {
+        WireError::BadPayload(format!("unknown metric tag {tag}"))
+    })
+}
+
 fn encode_query_payload(
     top_k: usize,
     fast_k: usize,
     margin_scale: f32,
+    metric: Metric,
     queries: &Matrix,
+    filter: Option<&[u64]>,
 ) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(20 + 4 * queries.as_slice().len());
+    let filt_words = filter.map_or(0, <[u64]>::len);
+    let mut buf = Vec::with_capacity(
+        28 + 4 * queries.as_slice().len() + 8 * filt_words,
+    );
     put_u32(&mut buf, top_k as u32);
     put_u32(&mut buf, fast_k as u32);
     put_f32(&mut buf, margin_scale);
@@ -444,6 +530,11 @@ fn encode_query_payload(
     put_u32(&mut buf, queries.cols() as u32);
     for &v in queries.as_slice() {
         put_f32(&mut buf, v);
+    }
+    put_u32(&mut buf, metric.as_i32() as u32);
+    put_u32(&mut buf, filt_words as u32);
+    for &w in filter.unwrap_or(&[]) {
+        put_u64(&mut buf, w);
     }
     buf
 }
@@ -485,12 +576,21 @@ pub fn write_query_frame(
     top_k: usize,
     fast_k: usize,
     margin_scale: f32,
+    metric: Metric,
     queries: &Matrix,
+    filter: Option<&[u64]>,
 ) -> Result<()> {
     write_raw_frame(
         w,
         KIND_QUERY,
-        &encode_query_payload(top_k, fast_k, margin_scale, queries),
+        &encode_query_payload(
+            top_k,
+            fast_k,
+            margin_scale,
+            metric,
+            queries,
+            filter,
+        ),
     )
 }
 
@@ -652,6 +752,15 @@ impl ShardBackend for RemoteShardBackend {
     fn search(&mut self, job: &ShardJob) -> Result<Vec<Vec<Hit>>> {
         self.endpoint.search_job(job)
     }
+
+    fn metric(&self) -> Metric {
+        self.endpoint.hello().metric
+    }
+
+    fn span(&self) -> usize {
+        let h = self.endpoint.hello();
+        h.start + h.shard_len
+    }
 }
 
 /// Validate one query frame against the served shard before any search
@@ -662,6 +771,7 @@ fn validate_query(
     top_k: usize,
     fast_k: usize,
     margin_scale: f32,
+    metric: Metric,
     queries: &Matrix,
 ) -> Result<()> {
     anyhow::ensure!(top_k >= 1, "top_k must be >= 1");
@@ -677,6 +787,11 @@ fn validate_query(
         index.fast_k
     );
     anyhow::ensure!(
+        metric == index.metric,
+        "request metric {metric} != shard metric {} (config drift)",
+        index.metric
+    );
+    anyhow::ensure!(
         margin_scale.is_finite() && margin_scale >= 0.0,
         "margin_scale {margin_scale} must be finite and >= 0"
     );
@@ -685,6 +800,26 @@ fn validate_query(
         "non-finite query vector entry"
     );
     Ok(())
+}
+
+/// Rebuild a validated [`RowFilter`] over `shard_len` local rows from a
+/// query frame's raw words. A word count that does not cover exactly
+/// `shard_len` rows, or a set bit past the last row, is a typed error —
+/// the coordinator slicing its global filter wrong must not silently
+/// change which rows a shard may return.
+fn decode_filter(
+    shard_len: usize,
+    words: Option<Vec<u64>>,
+) -> Result<Option<RowFilter>> {
+    let Some(words) = words else { return Ok(None) };
+    let got = words.len();
+    match RowFilter::from_words(shard_len, words) {
+        Some(f) => Ok(Some(f)),
+        None => anyhow::bail!(
+            "row filter of {got} words does not cover a {shard_len}-row \
+             shard (or sets bits past the last row)"
+        ),
+    }
 }
 
 /// Server-side hardening knobs for [`serve_shard_with`].
@@ -768,6 +903,7 @@ pub fn serve_shard_conn_with(
         shard_len: index.len(),
         start,
         fast_k: index.fast_k,
+        metric: index.metric,
     });
     if write_frame(&mut writer, &hello).is_err() || writer.flush().is_err() {
         return;
@@ -779,19 +915,35 @@ pub fn serve_shard_conn_with(
             deadline: idle_timeout.map(|t| Instant::now() + t),
         });
         let reply = match frame {
-            Ok(Frame::Query { top_k, fast_k, margin_scale, queries }) => {
+            Ok(Frame::Query {
+                top_k,
+                fast_k,
+                margin_scale,
+                metric,
+                queries,
+                filter,
+            }) => {
                 match validate_query(
                     index,
                     top_k,
                     fast_k,
                     margin_scale,
+                    metric,
                     &queries,
-                ) {
-                    Ok(()) => {
+                )
+                .and_then(|()| decode_filter(index.len(), filter))
+                {
+                    Ok(filter) => {
                         let opts = IcqSearchOpts { k: top_k, margin_scale };
-                        let mut hits = search_icq::search_scanfirst_batch(
-                            index, &queries, opts, ops, &mut crude,
-                        );
+                        let mut hits =
+                            search_icq::search_scanfirst_batch_filtered(
+                                index,
+                                &queries,
+                                opts,
+                                ops,
+                                &mut crude,
+                                filter.as_ref(),
+                            );
                         for per_query in &mut hits {
                             for h in per_query {
                                 h.id += start as u32;
@@ -946,6 +1098,7 @@ mod tests {
             shard_len: 1000,
             start: 512,
             fast_k: 2,
+            metric: Metric::InnerProduct,
         });
         assert_eq!(roundtrip(&hello), hello);
 
@@ -953,9 +1106,21 @@ mod tests {
             top_k: 7,
             fast_k: 2,
             margin_scale: 1.5,
+            metric: Metric::L2,
             queries: Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32 * 0.25),
+            filter: None,
         };
         assert_eq!(roundtrip(&query), query);
+
+        let filtered = Frame::Query {
+            top_k: 3,
+            fast_k: 1,
+            margin_scale: 0.5,
+            metric: Metric::Cosine,
+            queries: Matrix::from_fn(2, 4, |i, j| (i + j) as f32),
+            filter: Some(vec![0xDEAD_BEEF, 0x1, u64::MAX]),
+        };
+        assert_eq!(roundtrip(&filtered), filtered);
 
         let results = Frame::Results {
             hits: vec![
@@ -975,6 +1140,7 @@ mod tests {
     #[test]
     fn query_frame_writers_are_byte_identical() {
         let queries = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let words = vec![0b1011u64];
         let mut owned = Vec::new();
         write_frame(
             &mut owned,
@@ -982,12 +1148,23 @@ mod tests {
                 top_k: 5,
                 fast_k: 2,
                 margin_scale: 0.5,
+                metric: Metric::InnerProduct,
                 queries: queries.clone(),
+                filter: Some(words.clone()),
             },
         )
         .unwrap();
         let mut borrowed = Vec::new();
-        write_query_frame(&mut borrowed, 5, 2, 0.5, &queries).unwrap();
+        write_query_frame(
+            &mut borrowed,
+            5,
+            2,
+            0.5,
+            Metric::InnerProduct,
+            &queries,
+            Some(&words),
+        )
+        .unwrap();
         assert_eq!(owned, borrowed);
     }
 
@@ -997,11 +1174,54 @@ mod tests {
             top_k: 1,
             fast_k: 1,
             margin_scale: 0.0,
+            metric: Metric::L2,
             queries: Matrix::zeros(0, 8),
+            filter: None,
         };
         assert_eq!(roundtrip(&query), query);
         let results = Frame::Results { hits: vec![] };
         assert_eq!(roundtrip(&results), results);
+    }
+
+    /// v2 trailer corruption must be typed BadPayload: an unknown
+    /// metric tag, and a filter word count that lies about the payload.
+    #[test]
+    fn bad_metric_tag_and_lying_filter_count_are_rejected() {
+        let mut buf = Vec::new();
+        write_query_frame(
+            &mut buf,
+            3,
+            1,
+            1.0,
+            Metric::L2,
+            &Matrix::zeros(1, 2),
+            Some(&[0u64]),
+        )
+        .unwrap();
+        // payload layout: 20-byte header, 8 bytes of floats, metric at
+        // offset 28, filt_words at 32 (frame header adds 11)
+        let metric_at = 11 + 28;
+        let corrupt = |at: usize, val: u32| {
+            let mut b = buf.clone();
+            b[at..at + 4].copy_from_slice(&val.to_le_bytes());
+            // re-checksum so the corruption reaches the payload parser
+            let len = b.len();
+            let sum = crc32(&b[6..len - 4]);
+            b[len - 4..].copy_from_slice(&sum.to_le_bytes());
+            b
+        };
+        let bad_metric = corrupt(metric_at, 9);
+        match read_frame(&mut &bad_metric[..]).unwrap_err() {
+            WireError::BadPayload(m) => {
+                assert!(m.contains("metric tag"), "got: {m}")
+            }
+            e => panic!("expected BadPayload, got {e}"),
+        }
+        let bad_count = corrupt(metric_at + 4, 7);
+        assert!(matches!(
+            read_frame(&mut &bad_count[..]).unwrap_err(),
+            WireError::BadPayload(_)
+        ));
     }
 
     #[test]

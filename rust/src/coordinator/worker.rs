@@ -12,7 +12,7 @@ use crate::core::parallel::num_threads;
 use crate::core::{Hit, Matrix};
 use crate::index::lut::Lut;
 use crate::index::search_icq::{self, IcqSearchOpts};
-use crate::index::{EncodedIndex, IvfIndex, OpCounter};
+use crate::index::{EncodedIndex, IvfIndex, OpCounter, RowFilter};
 
 /// A batch search backend. Implementations must be cheap to share
 /// (`Arc`) and safe to call from multiple worker threads.
@@ -38,6 +38,32 @@ pub trait BatchSearcher: Send + Sync + 'static {
         let queries = Matrix::from_vec(1, q.len(), q.to_vec());
         let mut hits = self.search_batch(&queries, top_k)?;
         Ok(hits.pop().unwrap_or_default())
+    }
+
+    /// Like [`Self::search_batch`] but with an optional allow-list over
+    /// global row ids shared by every query of the batch. `None` must
+    /// be bitwise-identical to [`Self::search_batch`]; a backend that
+    /// cannot honor a filter rejects `Some` with a typed error rather
+    /// than silently serving unfiltered results.
+    fn search_batch_filtered(
+        &self,
+        queries: &Matrix,
+        top_k: usize,
+        filter: Option<&RowFilter>,
+    ) -> Result<Vec<Vec<Hit>>> {
+        match filter {
+            None => self.search_batch(queries, top_k),
+            Some(_) => {
+                anyhow::bail!("this searcher does not support filtered search")
+            }
+        }
+    }
+
+    /// One past the highest row id the searcher can return — the length
+    /// a request filter must cover. `0` means unknown; the coordinator
+    /// rejects filtered requests against such a searcher up front.
+    fn num_rows(&self) -> usize {
+        0
     }
 
     /// Dimensionality the searcher expects.
@@ -98,6 +124,15 @@ impl BatchSearcher for NativeSearcher {
         queries: &Matrix,
         top_k: usize,
     ) -> Result<Vec<Vec<Hit>>> {
+        self.search_batch_filtered(queries, top_k, None)
+    }
+
+    fn search_batch_filtered(
+        &self,
+        queries: &Matrix,
+        top_k: usize,
+        filter: Option<&RowFilter>,
+    ) -> Result<Vec<Vec<Hit>>> {
         let opts = IcqSearchOpts { k: top_k, ..self.opts };
         // workers are already parallel across batches; keep the per-batch
         // scan serial to avoid nested-thread oversubscription. The
@@ -105,13 +140,18 @@ impl BatchSearcher for NativeSearcher {
         // the whole batch of LUTs over it (and reuses one crude scratch
         // across the batch's tiles).
         let mut crude = Vec::new();
-        Ok(search_icq::search_scanfirst_batch(
+        Ok(search_icq::search_scanfirst_batch_filtered(
             &self.index,
             queries,
             opts,
             &self.ops,
             &mut crude,
+            filter,
         ))
+    }
+
+    fn num_rows(&self) -> usize {
+        self.index.len()
     }
 
     fn search_one(&self, q: &[f32], top_k: usize) -> Result<Vec<Hit>> {
@@ -119,8 +159,12 @@ impl BatchSearcher for NativeSearcher {
         if self.index.len() >= SINGLE_QUERY_PARALLEL_MIN_ROWS && threads > 1 {
             // big shard: spread the crude pass across block ranges
             let opts = IcqSearchOpts { k: top_k, ..self.opts };
-            let lut =
-                Lut::build(self.index.lut_ctx(), self.index.codebooks(), q);
+            let lut = Lut::build_metric(
+                self.index.lut_ctx(),
+                self.index.codebooks(),
+                q,
+                self.index.metric,
+            );
             self.ops.add_flops(self.index.lut_ctx().build_macs() as u64);
             return Ok(search_icq::search_scanfirst_parallel(
                 &self.index,
@@ -179,6 +223,14 @@ impl BatchSearcher for IvfSearcher {
         Ok(self.index.search_batch(queries, self.nprobe, opts, &self.ops))
     }
 
+    // `search_batch_filtered` stays the default-rejecting one: IVF
+    // cells scatter rows, so a global bitmap cannot be cut per cell
+    // cheaply — filtered queries are served from a flat index.
+
+    fn num_rows(&self) -> usize {
+        self.index.len()
+    }
+
     fn search_one(&self, q: &[f32], top_k: usize) -> Result<Vec<Hit>> {
         let opts = IcqSearchOpts { k: top_k, ..self.opts };
         Ok(self.index.search(q, self.nprobe, opts, &self.ops))
@@ -205,7 +257,23 @@ pub fn run_worker(
         if batch.is_empty() {
             continue;
         }
-        let results = if batch.len() == 1 {
+        let results = if batch.iter().any(|q| q.filter.is_some()) {
+            // filters are per-query but the batched engine shares one
+            // allow-list across the whole batch — run filtered queries
+            // one at a time (filtered serving trades batching for
+            // exactness; see `BatchSearcher::search_batch_filtered`).
+            let d = searcher.dim();
+            let run = |q: &PendingQuery| -> Result<Vec<Hit>> {
+                let queries = Matrix::from_vec(1, d, q.vector.clone());
+                let mut hits = searcher.search_batch_filtered(
+                    &queries,
+                    q.top_k,
+                    q.filter.as_deref(),
+                )?;
+                Ok(hits.pop().unwrap_or_default())
+            };
+            batch.iter().map(run).collect::<Result<Vec<_>>>()
+        } else if batch.len() == 1 {
             // timeout-closed singleton: take the low-latency path
             searcher
                 .search_one(&batch[0].vector, batch[0].top_k)
@@ -316,6 +384,63 @@ mod tests {
         );
     }
 
+    /// The filtered entry point must return only allowed rows, and
+    /// those rows must be exactly the allowed prefix of the unfiltered
+    /// ranking (same engine, rows masked — not re-ranked).
+    #[test]
+    fn filtered_native_search_is_the_unfiltered_ranking_restricted() {
+        let s = native();
+        assert_eq!(s.num_rows(), 200);
+        let allowed: Vec<usize> = (0..200).step_by(3).collect();
+        let f = RowFilter::from_indices(200, &allowed);
+        let q = Matrix::from_vec(1, 8, vec![0.1; 8]);
+        let filtered =
+            s.search_batch_filtered(&q, 10, Some(&f)).unwrap().remove(0);
+        let oracle: Vec<Hit> = s
+            .search_batch(&q, 200)
+            .unwrap()
+            .remove(0)
+            .into_iter()
+            .filter(|h| f.allows(h.id as usize))
+            .take(10)
+            .collect();
+        assert_eq!(filtered, oracle);
+    }
+
+    #[test]
+    fn default_filtered_search_rejects_and_none_delegates() {
+        let s = native();
+        let f = RowFilter::all(200);
+        struct DimOnly;
+        impl BatchSearcher for DimOnly {
+            fn search_batch(
+                &self,
+                _queries: &Matrix,
+                _top_k: usize,
+            ) -> Result<Vec<Vec<Hit>>> {
+                Ok(Vec::new())
+            }
+            fn dim(&self) -> usize {
+                4
+            }
+        }
+        // default impl: filters rejected, num_rows unknown
+        let d = DimOnly;
+        assert_eq!(d.num_rows(), 0);
+        let q = Matrix::from_vec(1, 4, vec![0.0; 4]);
+        let err = d
+            .search_batch_filtered(&q, 2, Some(&f))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not support filtered search"), "{err}");
+        // and None delegates to the unfiltered engine
+        let q8 = Matrix::from_vec(1, 8, vec![0.1; 8]);
+        assert_eq!(
+            s.search_batch_filtered(&q8, 5, None).unwrap(),
+            s.search_batch(&q8, 5).unwrap()
+        );
+    }
+
     #[test]
     fn worker_resolves_queries_and_decrements_load() {
         use std::sync::mpsc;
@@ -333,12 +458,14 @@ mod tests {
             PendingQuery {
                 vector: vec![0.1; 8],
                 top_k: 3,
+                filter: None,
                 enqueued: std::time::Instant::now(),
                 respond: rtx1,
             },
             PendingQuery {
                 vector: vec![-0.2; 8],
                 top_k: 2,
+                filter: None,
                 enqueued: std::time::Instant::now(),
                 respond: rtx2,
             },
@@ -386,6 +513,7 @@ mod tests {
         let mk = |respond| PendingQuery {
             vector: vec![0.0; 4],
             top_k: 2,
+            filter: None,
             enqueued: std::time::Instant::now(),
             respond,
         };

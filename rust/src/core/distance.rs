@@ -5,6 +5,111 @@
 //! `l2_sq_masked` is the support-restricted distance ICQ's grouped
 //! codebooks need.
 
+/// The scoring function an index is built for and searched with.
+///
+/// `L2` ranks by ascending squared distance (the paper's setting);
+/// `InnerProduct` and `Cosine` rank by *descending* score, which flips
+/// every comparison downstream: [`crate::core::topk::TopK`] keeps the k
+/// *largest* keys, the crude-pass bound chain becomes an upper-bound
+/// chain (`qlut >= crude >= full`), and the quantized LUT rounds *up*
+/// instead of down. Cosine is inner product over vectors normalized
+/// once — base rows at encode time, queries at LUT-build time — so its
+/// search path is bitwise the IP path on pre-normalized data.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Ascending squared euclidean distance.
+    #[default]
+    L2,
+    /// Descending dot-product score (MIPS).
+    InnerProduct,
+    /// Descending cosine similarity (IP over unit-normalized vectors).
+    Cosine,
+}
+
+impl Metric {
+    /// True for the similarity metrics (larger score = better), false
+    /// for distances (smaller = better).
+    #[inline]
+    pub fn is_similarity(self) -> bool {
+        !matches!(self, Metric::L2)
+    }
+
+    /// The score no real candidate can be worse than: `+inf` for
+    /// distances, `-inf` for similarities. Used as the masked-out /
+    /// sentinel value in filtered scans and empty top-k thresholds.
+    #[inline]
+    pub fn worst(self) -> f32 {
+        if self.is_similarity() {
+            f32::NEG_INFINITY
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    /// Stable integer tag for snapshots and the wire protocol.
+    pub fn as_i32(self) -> i32 {
+        match self {
+            Metric::L2 => 0,
+            Metric::InnerProduct => 1,
+            Metric::Cosine => 2,
+        }
+    }
+
+    /// Inverse of [`Self::as_i32`]; `None` for unknown tags (a snapshot
+    /// or frame from a newer build).
+    pub fn from_i32(tag: i32) -> Option<Metric> {
+        match tag {
+            0 => Some(Metric::L2),
+            1 => Some(Metric::InnerProduct),
+            2 => Some(Metric::Cosine),
+            _ => None,
+        }
+    }
+
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "l2" | "euclidean" => Some(Metric::L2),
+            "ip" | "inner_product" | "innerproduct" | "dot" | "mips" => {
+                Some(Metric::InnerProduct)
+            }
+            "cosine" | "cos" | "angular" => Some(Metric::Cosine),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Metric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Metric::L2 => "l2",
+            Metric::InnerProduct => "ip",
+            Metric::Cosine => "cosine",
+        })
+    }
+}
+
+/// Scale `v` to unit L2 norm in place; zero (or non-finite-norm)
+/// vectors are left untouched. Returns the original norm.
+#[inline]
+pub fn normalize(v: &mut [f32]) -> f32 {
+    let n = norm_sq(v).sqrt();
+    if n > 0.0 && n.is_finite() {
+        let inv = 1.0 / n;
+        for x in v.iter_mut() {
+            *x *= inv;
+        }
+    }
+    n
+}
+
+/// Normalize every row of `x` to unit L2 norm (cosine preprocessing).
+pub fn normalize_rows(x: &mut crate::core::matrix::Matrix) {
+    for i in 0..x.rows() {
+        normalize(x.row_mut(i));
+    }
+}
+
 /// Squared euclidean distance.
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
@@ -141,6 +246,30 @@ mod tests {
         let (j, d) = nearest_row(&[1.2, 1.2], &rows, 2);
         assert_eq!(j, 2);
         assert!((d - 0.08).abs() < 1e-5);
+    }
+
+    #[test]
+    fn metric_tags_round_trip() {
+        for m in [Metric::L2, Metric::InnerProduct, Metric::Cosine] {
+            assert_eq!(Metric::from_i32(m.as_i32()), Some(m));
+            assert_eq!(Metric::parse(&m.to_string()), Some(m));
+        }
+        assert_eq!(Metric::from_i32(7), None);
+        assert_eq!(Metric::parse("manhattan"), None);
+        assert_eq!(Metric::parse("Cosine"), Some(Metric::Cosine));
+        assert!(Metric::L2.worst().is_infinite());
+        assert!(Metric::InnerProduct.worst() < 0.0);
+    }
+
+    #[test]
+    fn normalize_unit_and_zero() {
+        let mut v = vec![3.0f32, 4.0];
+        let n = normalize(&mut v);
+        assert_eq!(n, 5.0);
+        assert!((norm_sq(&v) - 1.0).abs() < 1e-6);
+        let mut z = vec![0.0f32; 4];
+        normalize(&mut z);
+        assert_eq!(z, vec![0.0; 4]);
     }
 
     #[test]

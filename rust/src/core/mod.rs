@@ -12,7 +12,7 @@ pub mod parallel;
 pub mod rng;
 pub mod topk;
 
-pub use distance::{dot, l2_sq};
+pub use distance::{dot, l2_sq, Metric};
 pub use matrix::Matrix;
 pub use rng::Rng;
-pub use topk::{merge_topk, Hit, TopK};
+pub use topk::{merge_topk, merge_topk_metric, Hit, TopK};

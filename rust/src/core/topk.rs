@@ -37,18 +37,64 @@ fn farther(a: &Hit, b: &Hit) -> bool {
     }
 }
 
+/// The similarity-metric mirror of [`farther`]: `a` is worse when its
+/// *score* is smaller, ties still break toward the smaller id (so the
+/// canonical key becomes `(-score, id)` lexicographic).
+#[inline]
+fn lower_scored(a: &Hit, b: &Hit) -> bool {
+    match a.dist.total_cmp(&b.dist) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a.id > b.id,
+    }
+}
+
 /// Bounded max-heap of the k nearest candidates seen so far, ordered by
-/// the canonical `(distance, id)` key (see the module docs).
+/// the canonical `(distance, id)` key (see the module docs). Under a
+/// similarity metric ([`Self::new_metric`]) the direction flips: the
+/// heap keeps the k *largest* scores and the canonical key becomes
+/// `(-score, id)`.
 #[derive(Clone, Debug)]
 pub struct TopK {
     k: usize,
-    heap: Vec<Hit>, // max-heap on (dist, id)
+    heap: Vec<Hit>, // heap rooted at the worst kept hit
+    /// Keep the k largest keys (similarity) instead of the k smallest
+    /// (distance).
+    largest: bool,
 }
 
 impl TopK {
     pub fn new(k: usize) -> Self {
         assert!(k > 0, "top-k requires k >= 1");
-        TopK { k, heap: Vec::with_capacity(k) }
+        TopK { k, heap: Vec::with_capacity(k), largest: false }
+    }
+
+    /// A top-k selector with the comparison direction of `metric`:
+    /// distances keep the smallest keys, similarities the largest.
+    pub fn new_metric(k: usize, metric: crate::core::distance::Metric) -> Self {
+        if metric.is_similarity() {
+            TopK::new_largest(k)
+        } else {
+            TopK::new(k)
+        }
+    }
+
+    /// A selector keeping the k *largest* keys — the similarity-metric
+    /// direction, independent of which similarity it is.
+    pub fn new_largest(k: usize) -> Self {
+        assert!(k > 0, "top-k requires k >= 1");
+        TopK { k, heap: Vec::with_capacity(k), largest: true }
+    }
+
+    /// Whether `a` is strictly worse than `b` under this selector's
+    /// direction.
+    #[inline]
+    fn worse(&self, a: &Hit, b: &Hit) -> bool {
+        if self.largest {
+            lower_scored(a, b)
+        } else {
+            farther(a, b)
+        }
     }
 
     #[inline]
@@ -66,12 +112,15 @@ impl TopK {
         self.heap.len() == self.k
     }
 
-    /// Current pruning radius: the furthest kept distance, or +inf while
-    /// the list is not yet full (everything is accepted).
+    /// Current pruning radius: the worst kept key, or the metric's
+    /// accept-everything sentinel while the list is not yet full (+inf
+    /// for distances, -inf for similarities).
     #[inline]
     pub fn threshold(&self) -> f32 {
         if self.is_full() {
             self.heap[0].dist
+        } else if self.largest {
+            f32::NEG_INFINITY
         } else {
             f32::INFINITY
         }
@@ -88,7 +137,7 @@ impl TopK {
             self.heap.push(cand);
             self.sift_up(self.heap.len() - 1);
             true
-        } else if farther(&self.heap[0], &cand) {
+        } else if self.worse(&self.heap[0], &cand) {
             self.heap[0] = cand;
             self.sift_down(0);
             true
@@ -100,7 +149,7 @@ impl TopK {
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
             let parent = (i - 1) / 2;
-            if farther(&self.heap[i], &self.heap[parent]) {
+            if self.worse(&self.heap[i], &self.heap[parent]) {
                 self.heap.swap(i, parent);
                 i = parent;
             } else {
@@ -113,24 +162,31 @@ impl TopK {
         let n = self.heap.len();
         loop {
             let (l, r) = (2 * i + 1, 2 * i + 2);
-            let mut largest = i;
-            if l < n && farther(&self.heap[l], &self.heap[largest]) {
-                largest = l;
+            let mut worst = i;
+            if l < n && self.worse(&self.heap[l], &self.heap[worst]) {
+                worst = l;
             }
-            if r < n && farther(&self.heap[r], &self.heap[largest]) {
-                largest = r;
+            if r < n && self.worse(&self.heap[r], &self.heap[worst]) {
+                worst = r;
             }
-            if largest == i {
+            if worst == i {
                 break;
             }
-            self.heap.swap(i, largest);
-            i = largest;
+            self.heap.swap(i, worst);
+            i = worst;
         }
     }
 
-    /// Drain into ascending-distance order.
+    /// Drain into best-first order: ascending distance, or descending
+    /// score under a similarity metric (ids ascending within ties).
     pub fn into_sorted(mut self) -> Vec<Hit> {
-        self.heap.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id)));
+        if self.largest {
+            self.heap
+                .sort_by(|a, b| b.dist.total_cmp(&a.dist).then(a.id.cmp(&b.id)));
+        } else {
+            self.heap
+                .sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id)));
+        }
         self.heap
     }
 
@@ -168,6 +224,25 @@ pub fn merge_topk(lists: &[Vec<Hit>], top_k: usize) -> Vec<Hit> {
     let mut all: Vec<Hit> =
         lists.iter().flat_map(|l| l.iter().copied()).collect();
     all.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id)));
+    all.truncate(top_k);
+    all
+}
+
+/// [`merge_topk`] with the comparison direction of `metric`: the L2
+/// order for distances, `(-score, id)` for similarities — exactly the
+/// order each shard's [`TopK::new_metric`] selected by, so the merge
+/// stays bitwise-identical to the flat scan under every metric.
+pub fn merge_topk_metric(
+    lists: &[Vec<Hit>],
+    top_k: usize,
+    metric: crate::core::distance::Metric,
+) -> Vec<Hit> {
+    if !metric.is_similarity() {
+        return merge_topk(lists, top_k);
+    }
+    let mut all: Vec<Hit> =
+        lists.iter().flat_map(|l| l.iter().copied()).collect();
+    all.sort_by(|a, b| b.dist.total_cmp(&a.dist).then(a.id.cmp(&b.id)));
     all.truncate(top_k);
     all
 }
@@ -246,6 +321,69 @@ mod tests {
         );
         assert!(merge_topk(&[], 5).is_empty());
         assert_eq!(merge_topk(&[vec![Hit { id: 1, dist: 0.0 }]], 5).len(), 1);
+    }
+
+    #[test]
+    fn similarity_direction_keeps_largest() {
+        use crate::core::distance::Metric;
+        let mut t = TopK::new_metric(3, Metric::InnerProduct);
+        assert_eq!(t.threshold(), f32::NEG_INFINITY);
+        for (i, s) in [1.0, 5.0, 3.0, 4.0, 2.0].iter().enumerate() {
+            t.push(i as u32, *s);
+        }
+        assert_eq!(t.threshold(), 3.0); // worst kept score
+        let hits = t.into_sorted();
+        assert_eq!(
+            hits.iter().map(|h| (h.id, h.dist)).collect::<Vec<_>>(),
+            vec![(1, 5.0), (3, 4.0), (2, 3.0)]
+        );
+    }
+
+    /// Similarity ties at the boundary still resolve to the smaller id
+    /// regardless of push order — the flipped canonical key.
+    #[test]
+    fn similarity_ties_keep_smaller_ids() {
+        use crate::core::distance::Metric;
+        let orders: [&[(u32, f32)]; 2] = [
+            &[(0, 5.0), (1, 5.0), (2, 5.0), (3, 9.0)],
+            &[(2, 5.0), (3, 9.0), (1, 5.0), (0, 5.0)],
+        ];
+        for order in orders {
+            let mut t = TopK::new_metric(2, Metric::Cosine);
+            for &(id, s) in order {
+                t.push(id, s);
+            }
+            assert_eq!(
+                t.into_sorted().iter().map(|h| h.id).collect::<Vec<_>>(),
+                vec![3, 0],
+                "order {order:?} broke flipped tie-breaking"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_metric_matches_flat_selector() {
+        use crate::core::distance::Metric;
+        use crate::core::rng::Rng;
+        let mut rng = Rng::new(17);
+        for metric in [Metric::L2, Metric::InnerProduct] {
+            let scores: Vec<f32> =
+                (0..200).map(|_| rng.normal_f32()).collect();
+            let mut flat = TopK::new_metric(7, metric);
+            let mut shards: Vec<TopK> =
+                (0..4).map(|_| TopK::new_metric(7, metric)).collect();
+            for (i, &s) in scores.iter().enumerate() {
+                flat.push(i as u32, s);
+                shards[i % 4].push(i as u32, s);
+            }
+            let lists: Vec<Vec<Hit>> =
+                shards.into_iter().map(TopK::into_sorted).collect();
+            assert_eq!(
+                merge_topk_metric(&lists, 7, metric),
+                flat.into_sorted(),
+                "{metric}: sharded merge diverged from flat selection"
+            );
+        }
     }
 
     #[test]

@@ -29,7 +29,13 @@ pub fn load_named(name: &str, n_samples: usize, seed: u64) -> Result<Dataset> {
     if let Some(ext) = lower_ext.as_deref() {
         if name.contains('.') && (ext == "fvecs" || ext == "bvecs") {
             let x = if ext == "fvecs" {
-                realworld::read_fvecs(name)?
+                let x = realworld::read_fvecs(name)?;
+                // an on-disk corpus is the one source that can smuggle
+                // NaN/inf rows into a build (bvecs are u8, synthetic is
+                // generated) — reject here, at load, naming the row
+                crate::index::encoded::check_finite_rows(&x)
+                    .with_context(|| format!("loading '{name}'"))?;
+                x
             } else {
                 realworld::read_bvecs(name)?
             };
@@ -144,6 +150,15 @@ impl TrainedBundle {
     /// checks are local.
     pub fn validate(&self) -> Result<()> {
         ensure!(self.codes.len() == self.n * self.k, "codes shape != n*K");
+        ensure!(
+            self.codebooks.iter().all(|v| v.is_finite()),
+            "non-finite codebook component in the trained bundle"
+        );
+        ensure!(
+            self.sigma.is_finite() && self.sigma >= 0.0,
+            "bundle sigma {} is not a finite non-negative scalar",
+            self.sigma
+        );
         crate::index::encoded::validate_snapshot(
             &self.codes,
             self.n,
@@ -210,6 +225,30 @@ mod tests {
         let trimmed = load_named(&path, 2, 0).unwrap();
         assert_eq!(trimmed.len(), 2);
         assert_eq!(trimmed.x.row(1), d.x.row(1));
+    }
+
+    /// A corpus file smuggling a NaN row must fail at load — before any
+    /// training or encoding can bake the poison into an index.
+    #[test]
+    fn load_named_rejects_non_finite_fvecs_rows() {
+        let dir = std::env::temp_dir().join("icq_nan_fvecs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("nan.fvecs");
+        let mut bytes = Vec::new();
+        for row in [[0.5f32, 1.0, -2.0], [3.0, f32::NAN, 0.25]] {
+            bytes.extend_from_slice(&3u32.to_le_bytes());
+            for v in row {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let err =
+            format!("{:#}", load_named(path.to_str().unwrap(), 0, 0).unwrap_err());
+        std::fs::remove_file(&path).unwrap();
+        assert!(
+            err.contains("non-finite"),
+            "NaN row survived the load: {err}"
+        );
     }
 
     #[test]

@@ -220,10 +220,27 @@ mod mm {
             offset: i64,
         ) -> *mut u8;
         fn munmap(addr: *mut u8, len: usize) -> i32;
+        fn madvise(addr: *mut u8, len: usize, advice: i32) -> i32;
     }
 
     const PROT_READ: i32 = 1;
     const MAP_SHARED: i32 = 1;
+    // madvise advice numbering is kernel-specific; only Linux's values
+    // are declared, and `advise` no-ops elsewhere rather than guessing.
+    #[cfg(target_os = "linux")]
+    const MADV_RANDOM: i32 = 1;
+    #[cfg(target_os = "linux")]
+    const MADV_WILLNEED: i32 = 3;
+
+    /// Access-pattern hints forwarded to `madvise(2)` on Linux.
+    #[derive(Clone, Copy, Debug)]
+    pub(super) enum Advice {
+        /// Page-sparse access expected (the serving scan touches
+        /// whichever code blocks the queries reach): curb readahead.
+        Random,
+        /// The range is needed imminently (header/directory): prefetch.
+        WillNeed,
+    }
 
     /// RAII read-only mapping of `len` bytes of a file.
     pub(super) struct Mmap {
@@ -264,6 +281,40 @@ mod mm {
             // and any bit pattern is valid; the borrow is tied to
             // &self, which outlives no Drop.
             unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+
+        /// Advisory access-pattern hint over `[offset, offset + len)`
+        /// of the mapping. The start is page-aligned downward as
+        /// `madvise` demands; failures are ignored — the hint is a
+        /// paging optimization, never a correctness dependency — and
+        /// non-Linux targets no-op (see the advice constants above).
+        pub(super) fn advise(&self, offset: usize, len: usize, advice: Advice) {
+            #[cfg(target_os = "linux")]
+            {
+                if len == 0 || offset >= self.len {
+                    return;
+                }
+                // rounding to 4 KiB covers the common page size; on a
+                // larger-page kernel the call fails EINVAL and is
+                // ignored, per the advisory contract above
+                const PAGE: usize = 4096;
+                let start = offset & !(PAGE - 1);
+                let end = (offset + len).min(self.len);
+                let adv = match advice {
+                    Advice::Random => MADV_RANDOM,
+                    Advice::WillNeed => MADV_WILLNEED,
+                };
+                // SAFETY: `start <= offset < self.len`, so
+                // `ptr + start` and the `end - start` bytes after it
+                // lie inside the live mapping; madvise only tags pages
+                // (no dereference), and on failure the mapping is
+                // untouched.
+                unsafe {
+                    let _ = madvise(self.ptr.add(start), end - start, adv);
+                }
+            }
+            #[cfg(not(target_os = "linux"))]
+            let _ = (offset, len, advice);
         }
     }
 
@@ -716,6 +767,18 @@ impl MappedPack {
             f.read_exact(&mut dir).context("reading icqfmt2 directory")?;
             let entries = parse_dir(&dir, &hdr, file_len)?;
             let map = mm::Mmap::map(&f, file_len as usize)?;
+            // paging hints: the header + directory are tiny and re-read
+            // by every segment lookup — prefetch them; the payload is
+            // touched block-sparse by the serving scan, so curb kernel
+            // readahead there to keep a cold-snapshot sweep from
+            // dragging in whole readahead windows per touched block.
+            let meta_end = HEADER_LEN + hdr.dir_len;
+            map.advise(0, meta_end, mm::Advice::WillNeed);
+            map.advise(
+                meta_end,
+                (file_len as usize).saturating_sub(meta_end),
+                mm::Advice::Random,
+            );
             Ok(Self { backing: Arc::new(Backing::Map(map)), entries })
         }
         #[cfg(not(all(unix, target_pointer_width = "64")))]

@@ -64,7 +64,7 @@ use crate::coordinator::{
     ReplicaSetBackend, ShardBackend, ShardedSearcher,
 };
 use crate::core::json::Json;
-use crate::core::{Hit, Matrix, Rng};
+use crate::core::{distance, Hit, Matrix, Metric, Rng};
 use crate::data::realworld::{read_ivecs, read_vecs_auto};
 use crate::data::Dataset;
 use crate::eval::{self, GroundTruth};
@@ -653,7 +653,7 @@ pub fn run_with(
             ivf.search_batch(&fam.queries, ivf.ncells(), opts, &ops);
         let native = NativeSearcher::new(
             Arc::new(fam.index.clone()),
-            SearchConfig { top_k: p.top_k, margin_scale: 1.0 },
+            SearchConfig { top_k: p.top_k, ..SearchConfig::default() },
         );
         let native_res = native
             .search_batch(&fam.queries, p.top_k)
@@ -686,6 +686,9 @@ pub fn run_with(
             )));
         }
     }
+
+    // --- metric rows: ICQ under inner product and cosine ---
+    rows.extend(metric_sweep(p, data, &families[0], &ops)?);
 
     let mut recall_obj = common_header(p, data);
     recall_obj.insert("bench".into(), Json::Str("gauntlet_recall".into()));
@@ -750,6 +753,98 @@ pub fn run_with(
         serving: Json::Obj(serving_obj),
         kernels: Json::Obj(kernels_obj),
     })
+}
+
+/// ICQ recall rows under the similarity metrics. The inner-product
+/// index reuses the L2 family's trained quantizer re-tagged (training
+/// is reconstruction-based and metric-agnostic); cosine is inner
+/// product over unit vectors, so its index is retrained and re-encoded
+/// over a once-normalized copy of the base — the codes must
+/// approximate the normalized rows the metric ranks. Each metric gets
+/// the L2 sweep's flat parity anchor: the full-`fast_k` two-step must
+/// equal the flat ADC scan bitwise (the eq. 11 mirror — for similarity
+/// the crude score is an upper bound and the top-k keeps the largest).
+fn metric_sweep(
+    p: &GauntletProfile,
+    data: &GauntletData,
+    icq_fam: &Family,
+    ops: &Arc<OpCounter>,
+) -> Result<Vec<Json>> {
+    let mut rows = Vec::new();
+    let opts = IcqSearchOpts { k: p.top_k, margin_scale: 1.0 };
+
+    let ip_index = icq_fam.index.clone().with_metric(Metric::InnerProduct);
+
+    let mut cos_base = data.base.clone();
+    distance::normalize_rows(&mut cos_base);
+    let cos_icq = Icq::train(
+        &cos_base,
+        IcqOpts {
+            k: p.k,
+            m: p.m,
+            fast_k: 0,
+            kmeans_iters: p.kmeans_iters,
+            prior_steps: p.prior_steps,
+            seed: p.seed,
+        },
+    );
+    let cos_index =
+        EncodedIndex::build_icq(&cos_icq, &cos_base, data.labels.clone())
+            .with_metric(Metric::Cosine);
+
+    for (method, index, base) in [
+        ("icq-ip", ip_index, &data.base),
+        ("icq-cosine", cos_index, &cos_base),
+    ] {
+        let truth = GroundTruth::compute_metric(
+            base,
+            &data.queries,
+            p.top_k,
+            index.metric,
+        );
+        let full = full_scan_clone(&index);
+        // per-metric parity anchor, mirroring the L2 loop: the
+        // full-fast_k two-step == the flat exhaustive ADC scan
+        let adc =
+            search_adc::search_batch(&full, &data.queries, p.top_k, ops);
+        let flat = search_icq::search_batch(&full, &data.queries, opts, ops);
+        anyhow::ensure!(
+            flat == adc,
+            "{method}: full-fast_k two-step != flat ADC scan (bitwise)"
+        );
+        let flat_ids = ids_of(&flat);
+
+        eprintln!("[gauntlet] {method}: flat parity ok, sweeping...");
+        rows.push(recall_row_json(&measure_point(
+            p,
+            format!("{method}/flat/full"),
+            method,
+            "full",
+            p.k as f64,
+            flat,
+            &flat_ids,
+            &truth,
+            || search_icq::search_batch(&full, &data.queries, opts, ops),
+        )));
+
+        for &fk in &p.fast_ks {
+            let idx = fast_k_clone(&index, fk);
+            let res =
+                search_icq::search_batch(&idx, &data.queries, opts, ops);
+            rows.push(recall_row_json(&measure_point(
+                p,
+                format!("{method}/flat/fastk={fk}"),
+                method,
+                "fastk",
+                fk as f64,
+                res,
+                &flat_ids,
+                &truth,
+                || search_icq::search_batch(&idx, &data.queries, opts, ops),
+            )));
+        }
+    }
+    Ok(rows)
 }
 
 /// Serving rows use a production-shaped top-k.
@@ -856,7 +951,7 @@ fn serving_sweep(
     fam: &Family,
     mmap: bool,
 ) -> Result<Vec<ServingRow>> {
-    let cfg = SearchConfig { top_k: SERVING_TOP_K, margin_scale: 1.0 };
+    let cfg = SearchConfig { top_k: SERVING_TOP_K, ..SearchConfig::default() };
     let owned = Arc::new(fam.index.clone());
     let batch = truncate_rows(&fam.queries, fam.queries.rows().min(32));
     let nq = batch.rows();

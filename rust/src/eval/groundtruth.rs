@@ -1,7 +1,7 @@
 //! Exact nearest-neighbor ground truth (brute force, rayon-parallel).
 
 use crate::core::parallel::par_map_indexed;
-use crate::core::{distance, Matrix, TopK};
+use crate::core::{distance, Matrix, Metric, TopK};
 
 /// Precomputed exact top-R ids per query.
 #[derive(Clone, Debug)]
@@ -23,6 +23,31 @@ impl GroundTruth {
         });
         GroundTruth { ids, r }
     }
+
+    /// Metric-aware [`GroundTruth::compute`], routed through the same
+    /// exact oracle the searchers are parity-checked against
+    /// ([`crate::index::search_exact`]). For cosine this assumes the
+    /// rows of `db` are already unit-normalized — the pipeline
+    /// invariant (cosine indexes are built over normalized rows, so
+    /// the truth must rank the same space the index serves).
+    pub fn compute_metric(
+        db: &Matrix,
+        queries: &Matrix,
+        r: usize,
+        metric: Metric,
+    ) -> GroundTruth {
+        if metric == Metric::L2 {
+            return GroundTruth::compute(db, queries, r);
+        }
+        let ops = crate::index::OpCounter::new();
+        let ids = crate::index::search_exact::search_batch_metric(
+            db, queries, r, metric, &ops,
+        )
+        .into_iter()
+        .map(|hits| hits.into_iter().map(|h| h.id).collect())
+        .collect();
+        GroundTruth { ids, r }
+    }
 }
 
 #[cfg(test)]
@@ -35,6 +60,16 @@ mod tests {
         let q = Matrix::from_vec(1, 1, vec![1.2]);
         let gt = GroundTruth::compute(&db, &q, 3);
         assert_eq!(gt.ids[0], vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn compute_metric_ranks_similarity_descending() {
+        let db = Matrix::from_vec(3, 2, vec![1., 0., 0., 1., 0.7, 0.7]);
+        let q = Matrix::from_vec(1, 2, vec![1.0, 0.2]);
+        let ip = GroundTruth::compute_metric(&db, &q, 2, Metric::InnerProduct);
+        assert_eq!(ip.ids[0], vec![0, 2]); // dots 1.0 > 0.84 > 0.2
+        let l2 = GroundTruth::compute_metric(&db, &q, 2, Metric::L2);
+        assert_eq!(l2.ids, GroundTruth::compute(&db, &q, 2).ids);
     }
 
     #[test]

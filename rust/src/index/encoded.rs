@@ -11,7 +11,7 @@ use anyhow::{ensure, Result};
 
 use super::blocked::{BlockedCodes, BlockedStore, CodeUnit};
 use super::lut::LutContext;
-use crate::core::Matrix;
+use crate::core::{Matrix, Metric};
 use crate::data::format::{Tensor, TensorPack};
 use crate::data::loader::TrainedBundle;
 use crate::data::mapped::{CowSlice, MappedPack};
@@ -75,6 +75,12 @@ pub struct EncodedIndex {
     pub fast_k: usize,
     /// crude margin sigma (eq. 11); 0 for non-ICQ methods.
     pub sigma: f32,
+    /// Distance/similarity regime the index serves. Drives the bound
+    /// direction of every search path (L2 lower-bound chain vs the
+    /// similarity upper-bound mirror), the top-k ordering, and the
+    /// sentinel filtered rows are masked to. Stamped into both snapshot
+    /// containers; tagless (pre-metric) snapshots load as [`Metric::L2`].
+    pub metric: Metric,
     /// labels of the encoded vectors (for MAP evaluation). Owned on the
     /// construction paths; a zero-copy view of the file on the
     /// mapped-snapshot open path.
@@ -92,6 +98,7 @@ impl EncodedIndex {
         codes: Codes,
         fast_k: usize,
         sigma: f32,
+        metric: Metric,
         labels: Vec<i32>,
     ) -> Self {
         let codebooks = Arc::new(codebooks);
@@ -102,6 +109,7 @@ impl EncodedIndex {
             codes,
             fast_k,
             sigma,
+            metric,
             labels.into(),
         )
     }
@@ -116,10 +124,20 @@ impl EncodedIndex {
         codes: Codes,
         fast_k: usize,
         sigma: f32,
+        metric: Metric,
         labels: CowSlice<i32>,
     ) -> Self {
         let blocked = BlockedStore::from_codes(&codes, codebooks.m());
-        EncodedIndex { codebooks, codes, blocked, lut_ctx, fast_k, sigma, labels }
+        EncodedIndex {
+            codebooks,
+            codes,
+            blocked,
+            lut_ctx,
+            fast_k,
+            sigma,
+            metric,
+            labels,
+        }
     }
 
     /// [`Self::assemble_shared`] with the blocked store supplied by the
@@ -134,6 +152,7 @@ impl EncodedIndex {
         blocked: BlockedStore,
         fast_k: usize,
         sigma: f32,
+        metric: Metric,
         labels: CowSlice<i32>,
     ) -> Result<Self> {
         ensure!(
@@ -155,7 +174,16 @@ impl EncodedIndex {
             labels.len(),
             codes.n()
         );
-        Ok(EncodedIndex { codebooks, codes, blocked, lut_ctx, fast_k, sigma, labels })
+        Ok(EncodedIndex {
+            codebooks,
+            codes,
+            blocked,
+            lut_ctx,
+            fast_k,
+            sigma,
+            metric,
+            labels,
+        })
     }
 
     /// Encode `x` with any trained quantizer. For ICQ models the fast
@@ -185,10 +213,22 @@ impl EncodedIndex {
     /// ```
     pub fn build<Q: Quantizer>(q: &Q, x: &Matrix, labels: Vec<i32>) -> Self {
         assert_eq!(x.rows(), labels.len());
+        if let Err(e) = check_finite_rows(x) {
+            panic!("{e}");
+        }
         let codes = q.encode(x);
         let codebooks = q.codebooks().clone();
         let fast_k = codebooks.k();
-        Self::assemble(codebooks, codes, fast_k, 0.0, labels)
+        Self::assemble(codebooks, codes, fast_k, 0.0, Metric::L2, labels)
+    }
+
+    /// The same index re-tagged to serve `metric`. This flips the
+    /// search regime (bound direction, top-k order, filter sentinel);
+    /// it does not re-encode — cosine indexes must be built over rows
+    /// the caller normalized before training/encoding.
+    pub fn with_metric(mut self, metric: Metric) -> Self {
+        self.metric = metric;
+        self
     }
 
     /// Build from an ICQ model, wiring the two-step search parameters.
@@ -215,6 +255,7 @@ impl EncodedIndex {
             codes,
             b.fast_k,
             b.sigma,
+            Metric::L2,
             b.labels.clone(),
         ))
     }
@@ -246,6 +287,7 @@ impl EncodedIndex {
             codes,
             self.fast_k,
             self.sigma,
+            self.metric,
             self.labels.slice(start..end),
         )
     }
@@ -284,6 +326,7 @@ impl EncodedIndex {
             codes,
             self.fast_k,
             self.sigma,
+            self.metric,
             labels.into(),
         )
     }
@@ -358,6 +401,7 @@ impl EncodedIndex {
         );
         pack.insert_i32("fast_k", vec![1], vec![self.fast_k as i32]);
         pack.insert_f32("sigma", vec![1], vec![self.sigma]);
+        pack.insert_i32("metric", vec![1], vec![self.metric.as_i32()]);
         pack.insert_i32(
             "labels",
             vec![self.labels.len()],
@@ -382,6 +426,7 @@ impl EncodedIndex {
         );
         let fast_k = pack.scalar_i32("fast_k")?;
         let sigma = pack.scalar_f32("sigma")?;
+        let metric = metric_from_pack(pack)?;
         let (_, labels) = pack.i32("labels")?;
         validate_snapshot(
             codes_i32,
@@ -401,6 +446,7 @@ impl EncodedIndex {
             codes,
             fast_k as usize,
             sigma,
+            metric,
             labels.to_vec(),
         ))
     }
@@ -423,6 +469,7 @@ impl EncodedIndex {
         );
         pack.insert_i32("fast_k", vec![1], vec![self.fast_k as i32]);
         pack.insert_f32("sigma", vec![1], vec![self.sigma]);
+        pack.insert_i32("metric", vec![1], vec![self.metric.as_i32()]);
         pack.insert_i32(
             "labels",
             vec![self.labels.len()],
@@ -499,6 +546,7 @@ impl EncodedIndex {
         );
         let fast_k = mp.scalar_i32("fast_k")?;
         let sigma = mp.scalar_f32("sigma")?;
+        let metric = metric_from_mapped(mp)?;
         let width = mp.scalar_i32("blocked_width")?;
         let block = mp.scalar_i32("blocked_block")?;
         let blocked = blocked_from_mapped(mp, "", n, k, m, width, block)?;
@@ -513,9 +561,50 @@ impl EncodedIndex {
             blocked,
             fast_k as usize,
             sigma,
+            metric,
             CowSlice::Mapped(labels_seg),
         )
     }
+}
+
+/// Reject base matrices holding non-finite components. A NaN row would
+/// poison every LUT partial sum it touches and — worse — break the
+/// `total_cmp` top-k ordering every search path assumes, returning
+/// silently wrong neighbors long after the build. Failing the build
+/// loudly mirrors the query-side check at the serving boundary.
+pub(crate) fn check_finite_rows(x: &Matrix) -> Result<()> {
+    for i in 0..x.rows() {
+        let row = x.row(i);
+        if let Some(j) = row.iter().position(|v| !v.is_finite()) {
+            anyhow::bail!(
+                "base vector {i} component {j} is non-finite ({})",
+                row[j]
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Decode the optional `metric` scalar of a v1 snapshot. Tagless
+/// snapshots predate metrics and load as L2; a present-but-unknown tag
+/// is corruption and errors.
+fn metric_from_pack(pack: &TensorPack) -> Result<Metric> {
+    if !pack.tensors.contains_key("metric") {
+        return Ok(Metric::L2);
+    }
+    let tag = pack.scalar_i32("metric")?;
+    Metric::from_i32(tag)
+        .ok_or_else(|| anyhow::anyhow!("unknown metric tag {tag} in snapshot"))
+}
+
+/// [`metric_from_pack`] for the icqfmt2 mapped container.
+pub(crate) fn metric_from_mapped(mp: &MappedPack) -> Result<Metric> {
+    if !mp.contains("metric") {
+        return Ok(Metric::L2);
+    }
+    let tag = mp.scalar_i32("metric")?;
+    Metric::from_i32(tag)
+        .ok_or_else(|| anyhow::anyhow!("unknown metric tag {tag} in snapshot"))
 }
 
 /// Insert the block-major transpose of `store` into `pack` under
@@ -887,6 +976,56 @@ mod tests {
         let mut bad = good.clone();
         bad.tensors.remove("blocked_u8");
         assert!(reopen(&bad).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn build_rejects_nan_base_rows() {
+        let mut x = hetero(30, 6, 21);
+        let pq = Pq::train(&x, PqOpts { k: 2, m: 4, iters: 3, seed: 0 });
+        x.set(17, 3, f32::NAN);
+        let _ = EncodedIndex::build(&pq, &x, vec![0; 30]);
+    }
+
+    #[test]
+    fn metric_tag_round_trips_and_tagless_loads_as_l2() {
+        use crate::core::Metric;
+        let x = hetero(50, 6, 14);
+        let pq = Pq::train(&x, PqOpts { k: 2, m: 4, iters: 3, seed: 0 });
+        let idx = EncodedIndex::build(&pq, &x, vec![0; 50])
+            .with_metric(Metric::InnerProduct);
+        assert_eq!(idx.slice(5, 20).metric, Metric::InnerProduct);
+        assert_eq!(idx.select(&[1, 7]).metric, Metric::InnerProduct);
+
+        // v1 pack container
+        let back = EncodedIndex::from_pack(&idx.to_pack()).unwrap();
+        assert_eq!(back.metric, Metric::InnerProduct);
+        // icqfmt2 mapped container
+        let bytes =
+            crate::data::mapped::write_mapped(&idx.to_mapped_tensors());
+        let mp = MappedPack::from_bytes(&bytes).unwrap();
+        assert_eq!(
+            EncodedIndex::from_mapped(&mp).unwrap().metric,
+            Metric::InnerProduct
+        );
+
+        // tagless snapshots (both containers) load as L2
+        let mut v1 = idx.to_pack();
+        v1.tensors.remove("metric");
+        assert_eq!(EncodedIndex::from_pack(&v1).unwrap().metric, Metric::L2);
+        let mut v2 = idx.to_mapped_tensors();
+        v2.tensors.remove("metric");
+        let bytes = crate::data::mapped::write_mapped(&v2);
+        let mp = MappedPack::from_bytes(&bytes).unwrap();
+        assert_eq!(
+            EncodedIndex::from_mapped(&mp).unwrap().metric,
+            Metric::L2
+        );
+
+        // unknown tags are corruption, not a silent L2 fallback
+        let mut bad = idx.to_pack();
+        bad.insert_i32("metric", vec![1], vec![9]);
+        assert!(EncodedIndex::from_pack(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Per-vector metadata predicates for filtered search.
+//!
+//! A [`RowFilter`] is a bitmap over database rows — bit `i` set means
+//! row `i` may be returned. Filters are evaluated between the blocked
+//! crude sweep and the refine: every disallowed row's crude entry is
+//! masked to the metric's worst value ([`RowFilter::mask_crude`]), so
+//! masked rows never seed the pruning radius, never survive the dense
+//! cut, and never enter a [`crate::core::TopK`] — the filtered top-k is
+//! exactly the unfiltered ranking restricted to allowed rows.
+//!
+//! The word layout is deliberately block-aligned: one `u64` word covers
+//! one default-sized code block (`blocked::DEFAULT_BLOCK` = 64 lanes),
+//! so the mask loop can skip fully-allowed words with a single compare
+//! and the sharded path can cut filters at block boundaries without
+//! bit-shifting ([`RowFilter::slice`] keeps a shift-free fast path for
+//! word-aligned cuts).
+
+/// An allow-list bitmap over `n` database rows (bit set = allowed).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowFilter {
+    n: usize,
+    /// `ceil(n / 64)` little-endian words; bit `i % 64` of word
+    /// `i / 64` is row `i`. Bits at positions `>= n` are always zero.
+    words: Vec<u64>,
+}
+
+impl RowFilter {
+    /// Number of words covering `n` rows.
+    #[inline]
+    pub fn words_for(n: usize) -> usize {
+        n.div_ceil(64)
+    }
+
+    /// Build from raw words. Fails (returns `None`) when the word count
+    /// is wrong or a bit past `n` is set — the strictness matters
+    /// because filters cross the wire, where a sloppy tail bit would
+    /// make two honest ends disagree on [`Self::count`].
+    pub fn from_words(n: usize, words: Vec<u64>) -> Option<RowFilter> {
+        if words.len() != Self::words_for(n) {
+            return None;
+        }
+        if n % 64 != 0 {
+            if let Some(&last) = words.last() {
+                if last >> (n % 64) != 0 {
+                    return None;
+                }
+            }
+        }
+        Some(RowFilter { n, words })
+    }
+
+    /// An all-zero (nothing allowed) filter over `n` rows.
+    pub fn none(n: usize) -> RowFilter {
+        RowFilter { n, words: vec![0; Self::words_for(n)] }
+    }
+
+    /// An all-ones (everything allowed) filter over `n` rows.
+    pub fn all(n: usize) -> RowFilter {
+        let mut f = RowFilter { n, words: vec![u64::MAX; Self::words_for(n)] };
+        f.clear_tail();
+        f
+    }
+
+    /// Build from an explicit id list; ids `>= n` are ignored.
+    pub fn from_indices(n: usize, ids: &[u32]) -> RowFilter {
+        let mut f = RowFilter::none(n);
+        for &id in ids {
+            let i = id as usize;
+            if i < n {
+                f.words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        f
+    }
+
+    fn clear_tail(&mut self) {
+        if self.n % 64 != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << (self.n % 64)) - 1;
+            }
+        }
+    }
+
+    /// Rows covered.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when the filter covers zero rows.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Whether row `i` may be returned.
+    #[inline]
+    pub fn allows(&self, i: usize) -> bool {
+        debug_assert!(i < self.n);
+        self.words[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    /// Number of allowed rows.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// The raw words (for wire serialization).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// The filter restricted to global rows `[start, end)`, re-indexed
+    /// from zero — how the gather hands each shard its slice of a
+    /// global filter. Word-aligned starts (every block-aligned shard
+    /// cut) copy words; others shift.
+    pub fn slice(&self, start: usize, end: usize) -> RowFilter {
+        assert!(start <= end && end <= self.n, "bad filter slice");
+        let n = end - start;
+        let out_words = Self::words_for(n);
+        let mut words = Vec::with_capacity(out_words);
+        if start % 64 == 0 {
+            let w0 = start / 64;
+            words.extend_from_slice(&self.words[w0..w0 + out_words]);
+        } else {
+            let (w0, sh) = (start / 64, start % 64);
+            for wi in 0..out_words {
+                let lo = self.words[w0 + wi] >> sh;
+                let hi = match self.words.get(w0 + wi + 1) {
+                    Some(&w) => w << (64 - sh),
+                    None => 0,
+                };
+                words.push(lo | hi);
+            }
+        }
+        let mut f = RowFilter { n, words };
+        f.clear_tail();
+        f
+    }
+
+    /// Overwrite `crude[i]` with `worst` for every disallowed row
+    /// `row0 + i` — the masking step between the crude sweep and the
+    /// refine. `worst` is the metric's sentinel
+    /// ([`crate::core::Metric::worst`]): `+inf` for L2, `-inf` for
+    /// similarities. Fully-allowed words are skipped with one compare.
+    pub fn mask_crude(&self, crude: &mut [f32], row0: usize, worst: f32) {
+        debug_assert!(row0 + crude.len() <= self.n);
+        let mut i = 0usize;
+        while i < crude.len() {
+            let row = row0 + i;
+            let w = self.words[row / 64];
+            let bit = row % 64;
+            // word-aligned whole-word fast paths: all-allowed words are
+            // skipped, all-denied words fill in one memset
+            if bit == 0 && crude.len() - i >= 64 {
+                if w == u64::MAX {
+                    i += 64;
+                    continue;
+                }
+                if w == 0 {
+                    crude[i..i + 64].fill(worst);
+                    i += 64;
+                    continue;
+                }
+            }
+            if w & (1u64 << bit) == 0 {
+                crude[i] = worst;
+            }
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_words_validates_shape_and_tail() {
+        assert!(RowFilter::from_words(100, vec![0; 2]).is_some());
+        assert!(RowFilter::from_words(100, vec![0; 1]).is_none());
+        assert!(RowFilter::from_words(100, vec![0; 3]).is_none());
+        // bit 100 set in a 100-row filter: rejected
+        let mut w = vec![0u64; 2];
+        w[1] = 1u64 << 36;
+        assert!(RowFilter::from_words(100, w).is_none());
+        // bit 99: fine
+        let mut w = vec![0u64; 2];
+        w[1] = 1u64 << 35;
+        assert!(RowFilter::from_words(100, w).is_some());
+        assert!(RowFilter::from_words(0, vec![]).is_some());
+    }
+
+    #[test]
+    fn indices_round_trip_through_allows_and_count() {
+        let ids = [0u32, 3, 63, 64, 99];
+        let f = RowFilter::from_indices(100, &ids);
+        assert_eq!(f.count(), ids.len());
+        for i in 0..100 {
+            assert_eq!(f.allows(i), ids.contains(&(i as u32)));
+        }
+        // out-of-range ids are dropped
+        let g = RowFilter::from_indices(10, &[5, 10, 200]);
+        assert_eq!(g.count(), 1);
+        assert_eq!(RowFilter::all(70).count(), 70);
+        assert_eq!(RowFilter::none(70).count(), 0);
+    }
+
+    #[test]
+    fn slices_match_bitwise_reference() {
+        let ids: Vec<u32> = (0..300).filter(|i| i % 7 == 0).collect();
+        let f = RowFilter::from_indices(300, &ids);
+        for (start, end) in
+            [(0usize, 300usize), (64, 192), (3, 300), (65, 131), (100, 100)]
+        {
+            let s = f.slice(start, end);
+            assert_eq!(s.len(), end - start);
+            for i in 0..s.len() {
+                assert_eq!(
+                    s.allows(i),
+                    f.allows(start + i),
+                    "slice [{start},{end}) bit {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mask_crude_replaces_disallowed_entries_only() {
+        let f = RowFilter::from_indices(130, &[0, 1, 64, 129]);
+        let mut crude: Vec<f32> = (0..130).map(|i| i as f32).collect();
+        f.mask_crude(&mut crude, 0, f32::INFINITY);
+        for i in 0..130 {
+            if f.allows(i) {
+                assert_eq!(crude[i], i as f32);
+            } else {
+                assert_eq!(crude[i], f32::INFINITY);
+            }
+        }
+        // range variant with offset and the all-ones fast path
+        let all = RowFilter::all(130);
+        let mut c2: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        all.mask_crude(&mut c2, 64, f32::NEG_INFINITY);
+        assert!(c2.iter().enumerate().all(|(i, &v)| v == i as f32));
+        let mut c3: Vec<f32> = (0..66).map(|i| i as f32).collect();
+        f.mask_crude(&mut c3, 64, f32::NEG_INFINITY);
+        assert_eq!(c3[0], 0.0); // row 64 allowed
+        assert_eq!(c3[1], f32::NEG_INFINITY); // row 65 disallowed
+    }
+}

@@ -7,7 +7,7 @@
 //! map. A query ranks all centroids, probes the `nprobe` nearest cells
 //! with the existing QLut crude sweep + two-step refine, remaps hits to
 //! global ids and merges per-cell top-k lists through the canonical
-//! [`merge_topk`]. The `qlut <= crude <= full` lower-bound chain holds
+//! [`merge_topk_metric`]. The `qlut <= crude <= full` lower-bound chain holds
 //! unchanged *within* each probed cell — IVF only restricts *which*
 //! rows are scanned, never how a scanned row is compared.
 //!
@@ -16,7 +16,7 @@
 //! * **partition** ([`IvfIndex::partition`]) — regroups the rows of an
 //!   already-encoded flat index into cells without re-encoding. Every
 //!   row keeps the exact codes the flat scan uses, per-cell id lists
-//!   are ascending, and [`merge_topk`] applies the same canonical
+//!   are ascending, and [`merge_topk_metric`] applies the same canonical
 //!   `(distance, id)` order as the flat executors — so `nprobe =
 //!   ncells` is **bitwise identical** to the exhaustive flat path
 //!   (asserted in `tests/ivf_parity.rs`).
@@ -49,7 +49,9 @@ use super::lut::Lut;
 use super::opcount::OpCounter;
 use super::search_icq::{self, IcqSearchOpts};
 use crate::core::parallel::par_map_indexed;
-use crate::core::{distance, merge_topk, Hit, Matrix, TopK};
+use crate::core::{
+    distance, merge_topk_metric, Hit, Matrix, Metric, TopK,
+};
 use crate::data::format::{Tensor, TensorPack};
 use crate::data::mapped::{CowSlice, MappedPack};
 use crate::quantizer::kmeans::{self, KMeansOpts};
@@ -235,12 +237,15 @@ impl IvfIndex {
                     cell_labels.push(labels[g as usize]);
                 }
                 let codes = quantizer.encode(&resid);
+                // residual decomposition is an L2 identity
+                // (see the metric() doc); cells are always L2
                 let cell = EncodedIndex::assemble_shared(
                     codebooks.clone(),
                     lut_ctx.clone(),
                     codes,
                     fast_k,
                     sigma,
+                    Metric::L2,
                     cell_labels.into(),
                 );
                 Some(IvfCell {
@@ -293,6 +298,19 @@ impl IvfIndex {
         self.residual
     }
 
+    /// The metric every owned cell serves (cells inherit it from the
+    /// partitioned flat index; a cell-less shard view reports L2).
+    /// Residual mode is L2-only — `‖q - x‖² = ‖(q - c) - r‖²` is an L2
+    /// identity with no inner-product analogue — enforced at snapshot
+    /// load and at build wiring, so cells never disagree.
+    pub fn metric(&self) -> Metric {
+        self.cells
+            .iter()
+            .flatten()
+            .next()
+            .map_or(Metric::L2, |cell| cell.index.metric)
+    }
+
     /// The `[ncells, d]` coarse centroid table.
     pub fn centroids(&self) -> &Matrix {
         &self.centroids
@@ -305,7 +323,12 @@ impl IvfIndex {
 
     /// Rank all centroids by L2 distance to `q` and return the
     /// `min(nprobe, ncells)` nearest cell ids, nearest first (ties by
-    /// cell id, via the canonical [`TopK`] order).
+    /// cell id, via the canonical [`TopK`] order). Centroid ranking is
+    /// L2 for every metric: at `nprobe = ncells` the order is
+    /// irrelevant (all cells scanned — the parity anchor), and for
+    /// partial probes nearest-centroid is the standard recall
+    /// heuristic (exact for cosine over normalized data, approximate
+    /// for raw inner product).
     pub fn probe_order(&self, q: &[f32], nprobe: usize) -> Vec<u32> {
         let ncells = self.ncells();
         let mut top = TopK::new(nprobe.clamp(1, ncells.max(1)));
@@ -376,10 +399,11 @@ impl IvfIndex {
                 // partition mode: one LUT serves every cell (same
                 // codebooks, codes unchanged from the flat index)
                 if shared.is_none() {
-                    shared = Some(Lut::build(
+                    shared = Some(Lut::build_metric(
                         cell.index.lut_ctx(),
                         cell.index.codebooks(),
                         q,
+                        cell.index.metric,
                     ));
                     ops.add_flops(cell.index.lut_ctx().build_macs() as u64);
                 }
@@ -400,7 +424,7 @@ impl IvfIndex {
                     .collect(),
             );
         }
-        merge_topk(&lists, opts.k)
+        merge_topk_metric(&lists, opts.k, self.metric())
     }
 
     /// Batched [`Self::search`], rayon-parallel over queries.
@@ -480,6 +504,7 @@ impl IvfIndex {
         pack.insert_i32("codes", vec![self.n_total, k], codes);
         pack.insert_i32("fast_k", vec![1], vec![fast_k as i32]);
         pack.insert_f32("sigma", vec![1], vec![sigma]);
+        pack.insert_i32("metric", vec![1], vec![self.metric().as_i32()]);
         pack.insert_i32("labels", vec![self.n_total], labels);
         pack.insert_i32("ivf_version", vec![1], vec![IVF_VERSION]);
         pack.insert_f32(
@@ -542,6 +567,7 @@ impl IvfIndex {
         );
         pack.insert_i32("fast_k", vec![1], vec![fast_k as i32]);
         pack.insert_f32("sigma", vec![1], vec![sigma]);
+        pack.insert_i32("metric", vec![1], vec![self.metric().as_i32()]);
         pack.insert_i32("labels", vec![self.n_total], labels);
         pack.insert_i32(
             "blocked_width",
@@ -601,6 +627,11 @@ impl IvfIndex {
             1 => true,
             other => bail!("ivf_residual must be 0 or 1, got {other}"),
         };
+        ensure!(
+            !residual || flat.metric == Metric::L2,
+            "ivf residual snapshots are L2-only; this one is tagged {}",
+            flat.metric
+        );
 
         let (sdims, sizes) = pack.i32("ivf_cell_sizes")?;
         ensure!(
@@ -693,6 +724,7 @@ impl IvfIndex {
             "fast_k={fast_k} outside [1, K={k}]"
         );
         let sigma = mp.scalar_f32("sigma")?;
+        let metric = super::encoded::metric_from_mapped(mp)?;
         let width = mp.scalar_i32("blocked_width")?;
         let block = mp.scalar_i32("blocked_block")?;
 
@@ -712,6 +744,10 @@ impl IvfIndex {
             1 => true,
             other => bail!("ivf_residual must be 0 or 1, got {other}"),
         };
+        ensure!(
+            !residual || metric == Metric::L2,
+            "ivf residual snapshots are L2-only; this one is tagged {metric}"
+        );
 
         let (sdims, sizes_seg) = mp.segment::<i32>("ivf_cell_sizes")?;
         ensure!(
@@ -764,6 +800,7 @@ impl IvfIndex {
                     Codes::zeros(0, k),
                     fast_k as usize,
                     sigma,
+                    metric,
                     CowSlice::default(),
                 )
             } else {
@@ -790,6 +827,7 @@ impl IvfIndex {
                     blocked,
                     fast_k as usize,
                     sigma,
+                    metric,
                     CowSlice::Mapped(labels_seg.slice(off..off + sz)),
                 )?
             };

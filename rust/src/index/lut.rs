@@ -6,7 +6,7 @@
 //! parity with the Pallas kernel is covered by the runtime integration
 //! test (HLO-executed LUT vs this implementation).
 
-use crate::core::distance;
+use crate::core::distance::{self, Metric};
 use crate::quantizer::Codebooks;
 
 /// Precomputed, query-independent LUT state (built once per index).
@@ -119,10 +119,87 @@ impl Lut {
         Lut { k, m, data }
     }
 
+    /// Build for one query under `metric`.
+    ///
+    /// * `L2` — identical to [`Self::build`]: entries are the
+    ///   support-restricted squared distances, ADC sums approximate
+    ///   `||q - x̂||²` and rank ascending.
+    /// * `InnerProduct` — entries are the per-book score contributions
+    ///   `⟨q, c_{k,j}⟩` (the `‖x‖²` term of the L2 expansion is
+    ///   dropped); ADC sums approximate `⟨q, x̂⟩` and rank *descending*.
+    /// * `Cosine` — inner product with the query normalized to unit
+    ///   norm first; base rows are normalized once at encode time, so
+    ///   the resulting scan is bitwise the IP scan on pre-normalized
+    ///   data.
+    pub fn build_metric(
+        ctx: &LutContext,
+        codebooks: &Codebooks,
+        q: &[f32],
+        metric: Metric,
+    ) -> Lut {
+        match metric {
+            Metric::L2 => Lut::build(ctx, codebooks, q),
+            Metric::InnerProduct => Lut::build_ip(ctx, q),
+            Metric::Cosine => {
+                let mut qn = q.to_vec();
+                distance::normalize(&mut qn);
+                Lut::build_ip(ctx, &qn)
+            }
+        }
+    }
+
+    /// The inner-product table: T[k, j] = ⟨q, c_{k,j}⟩ over book k's
+    /// support (codewords are zero off-support, so the restricted dot
+    /// is the full one).
+    fn build_ip(ctx: &LutContext, q: &[f32]) -> Lut {
+        assert_eq!(q.len(), ctx.d);
+        let (k, m) = (ctx.k, ctx.m);
+        let mut data = vec![0.0f32; k * m];
+        let mut q_sub = Vec::with_capacity(ctx.d);
+        for kk in 0..k {
+            let dims = &ctx.dims[kk];
+            let s_len = dims.len();
+            q_sub.clear();
+            for &dim in dims {
+                q_sub.push(q[dim as usize]);
+            }
+            let book = &ctx.compact[kk];
+            let out = &mut data[kk * m..(kk + 1) * m];
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = distance::dot(&q_sub, &book[j * s_len..(j + 1) * s_len]);
+            }
+        }
+        Lut { k, m, data }
+    }
+
     /// Build from a runtime-produced flat [K, m] table (the PJRT path).
     pub fn from_flat(k: usize, m: usize, data: Vec<f32>) -> Lut {
         assert_eq!(data.len(), k * m);
         Lut { k, m, data }
+    }
+
+    /// Upper bound on any code row's partial sum over books `[k0, k1)`:
+    /// the sum of per-book row maxima. Under a similarity metric the
+    /// crude pass only sums the fast group `[0, fast_k)`, and — unlike
+    /// L2, whose dropped terms are non-negative — the dropped tail
+    /// `[fast_k, K)` can be any sign, so this per-query constant is the
+    /// slack that restores `crude + tail >= full` (the upper-bound
+    /// mirror of eq. 11's pruning argument).
+    pub fn tail_upper_bound(&self, k0: usize, k1: usize) -> f32 {
+        let mut s = 0.0f32;
+        for kk in k0..k1 {
+            let row = self.row(kk);
+            let mut best = f32::NEG_INFINITY;
+            for &v in row {
+                if v > best {
+                    best = v;
+                }
+            }
+            if best.is_finite() {
+                s += best;
+            }
+        }
+        s
     }
 
     /// Entry for codeword `j` of book `k`.
@@ -215,6 +292,48 @@ mod tests {
         assert_eq!(lut.partial_sum(&codes, 0, 2), 3.0 + 20.0);
         assert_eq!(lut.partial_sum(&codes, 0, 1), 3.0);
         assert_eq!(lut.partial_sum(&codes, 1, 2), 20.0);
+    }
+
+    #[test]
+    fn ip_entries_are_codeword_dots_and_cosine_normalizes() {
+        let mut rng = Rng::new(5);
+        let x = Matrix::from_fn(100, 6, |_, _| rng.normal_f32());
+        let pq = Pq::train(&x, PqOpts { k: 3, m: 4, iters: 5, seed: 0 });
+        let cb = pq.codebooks();
+        let ctx = LutContext::new(cb);
+        let q: Vec<f32> = (0..6).map(|_| rng.normal_f32()).collect();
+        let lut = Lut::build_metric(&ctx, cb, &q, Metric::InnerProduct);
+        for kk in 0..3 {
+            for j in 0..4 {
+                let expect = distance::dot(&q, cb.codeword(kk, j));
+                assert!(
+                    (lut.get(kk, j) - expect).abs() < 1e-4,
+                    "ip lut({kk},{j}) {} expect {expect}",
+                    lut.get(kk, j)
+                );
+            }
+        }
+        // cosine == IP on the normalized query, bitwise
+        let mut qn = q.clone();
+        distance::normalize(&mut qn);
+        let cos = Lut::build_metric(&ctx, cb, &q, Metric::Cosine);
+        let ipn = Lut::build_metric(&ctx, cb, &qn, Metric::InnerProduct);
+        for kk in 0..3 {
+            assert_eq!(cos.row(kk), ipn.row(kk));
+        }
+    }
+
+    #[test]
+    fn tail_upper_bound_dominates_every_partial_sum() {
+        let lut = Lut::from_flat(3, 2, vec![1., -2., -3., 0.5, 2., -1.]);
+        let ub = lut.tail_upper_bound(1, 3);
+        for c1 in 0..2u16 {
+            for c2 in 0..2u16 {
+                let codes = [0u16, c1, c2];
+                assert!(lut.partial_sum(&codes, 1, 3) <= ub);
+            }
+        }
+        assert_eq!(lut.tail_upper_bound(3, 3), 0.0);
     }
 
     #[test]

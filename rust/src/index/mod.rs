@@ -45,6 +45,7 @@
 
 pub mod blocked;
 pub mod encoded;
+pub mod filter;
 pub mod ivf;
 pub mod lut;
 pub mod opcount;
@@ -58,6 +59,7 @@ pub mod two_step;
 
 pub use blocked::{BlockedCodes, BlockedStore, CodeUnit};
 pub use encoded::EncodedIndex;
+pub use filter::RowFilter;
 pub use ivf::{AnyIndex, IvfBuildOpts, IvfCell, IvfIndex};
 pub use lut::Lut;
 pub use opcount::OpCounter;

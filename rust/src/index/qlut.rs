@@ -111,6 +111,61 @@ impl QLut {
         QLut { k0, books, m, scale, bias_sum: bias.iter().sum(), data }
     }
 
+    /// The upper-bound mirror of [`Self::from_lut`], for similarity
+    /// metrics where the crude sum must *dominate* the f32 partial sum
+    /// (`ub >= crude >= pruning threshold` — the flipped eq. 11 chain).
+    ///
+    /// Per-book bias becomes the row **maximum** and the stored `scale`
+    /// is **negative** (`-span/255`), so the unchanged dequantize
+    /// affine `e * scale + bias` walks *down* from the row max: the
+    /// integer kernels, accumulators, and dequantize loops are reused
+    /// byte for byte, only the affine flips. Entries are rounded toward
+    /// zero (a *larger* dequantized value), then nudged further down in
+    /// `e` if f32 round-off broke the bound, so
+    /// `e * scale + b_k >= lut[k][j]` always holds entry-wise.
+    pub fn from_lut_ub(lut: &Lut, k0: usize, k1: usize) -> QLut {
+        assert!(k0 < k1 && k1 <= lut.k(), "bad book range [{k0}, {k1})");
+        let books = k1 - k0;
+        assert!(
+            Self::fits(books),
+            "{books} books overflow the u16 accumulator"
+        );
+        let m = lut.m();
+        let mut bias = Vec::with_capacity(books);
+        let mut span = 0.0f32;
+        for kk in k0..k1 {
+            let row = lut.row(kk);
+            let lo = row.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            bias.push(hi);
+            span = span.max(hi - lo);
+        }
+        let step = if span > 0.0 { span / 255.0 } else { 1.0 };
+        let mut data = vec![0u8; books * m];
+        for (t, kk) in (k0..k1).enumerate() {
+            let row = lut.row(kk);
+            let b = bias[t];
+            for (q, &v) in data[t * m..(t + 1) * m].iter_mut().zip(row) {
+                let mut e = (((b - v) / step).floor() as i64).clamp(0, 255);
+                // floor() in f32 can land one step high after round-off;
+                // walk e down (raising the dequantized value) until the
+                // entry is a true upper bound of the f32 entry.
+                while e > 0 && b - (e as f32) * step < v {
+                    e -= 1;
+                }
+                *q = e as u8;
+            }
+        }
+        QLut {
+            k0,
+            books,
+            m,
+            scale: -step,
+            bias_sum: bias.iter().sum(),
+            data,
+        }
+    }
+
     /// First book covered.
     #[inline]
     pub fn k0(&self) -> usize {
@@ -147,11 +202,13 @@ impl QLut {
         &self.data[t * self.m..(t + 1) * self.m]
     }
 
-    /// Upper bound on `crude_f32 - crude_quantized` for any code row:
-    /// each of the `books` entries loses at most one `scale` step to the
-    /// floor (ignoring f32 ulp noise in the dequantize multiply-add).
+    /// Upper bound on `|crude_f32 - crude_quantized|` for any code row:
+    /// each of the `books` entries loses at most one quantization step
+    /// to the floor (ignoring f32 ulp noise in the dequantize
+    /// multiply-add). `scale` is negative for the round-up tables
+    /// ([`Self::from_lut_ub`]), hence the abs.
     pub fn max_err(&self) -> f32 {
-        self.books as f32 * self.scale
+        self.books as f32 * self.scale.abs()
     }
 
     /// Rows zero-padded to 16 entries for the `vpshufb` kernel.
@@ -534,6 +591,52 @@ mod tests {
                     exact - lb[i] <= q.max_err() + 1e-4,
                     "n={n} m={m} i={i}: error {} above bound {}",
                     exact - lb[i],
+                    q.max_err()
+                );
+            }
+        }
+    }
+
+    /// The round-up mirror: dequantized entries dominate the f32 table
+    /// entry-wise and the sweep is an upper bound within max_err.
+    #[test]
+    fn ub_entries_and_sweep_are_upper_bounds() {
+        for (n, k, m, block, fast_k) in [
+            (130usize, 8usize, 16usize, 64usize, 3usize),
+            (100, 4, 256, 64, 4),
+            (37, 4, 16, 10, 2),
+        ] {
+            let lut = random_lut(k, m, (n + m + 1) as u64);
+            let q = QLut::from_lut_ub(&lut, 0, fast_k);
+            assert!(q.scale() < 0.0, "ub table must store a negative step");
+            for t in 0..fast_k {
+                let hi =
+                    lut.row(t).iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                for j in 0..m {
+                    let deq = q.row(t)[j] as f32 * q.scale() + hi;
+                    let v = lut.get(t, j);
+                    assert!(
+                        deq >= v,
+                        "entry ({t},{j}): dequantized {deq} < f32 {v}"
+                    );
+                    assert!(v - deq >= -q.scale().abs() * (1.0 + 1e-3));
+                }
+            }
+            let codes = random_codes(n, k, m, (n + k + 1) as u64);
+            let blocked = BlockedCodes::<u8>::with_block(&codes, block);
+            let mut ub = vec![f32::NAN; n];
+            crude_sums_into(&blocked, &q, &mut ub);
+            for i in 0..n {
+                let exact = lut.partial_sum(codes.row(i), 0, fast_k);
+                assert!(
+                    ub[i] >= exact - 1e-4,
+                    "n={n} m={m} i={i}: ub {} below exact {exact}",
+                    ub[i]
+                );
+                assert!(
+                    ub[i] - exact <= q.max_err() + 1e-4,
+                    "n={n} m={m} i={i}: error {} above bound {}",
+                    ub[i] - exact,
                     q.max_err()
                 );
             }

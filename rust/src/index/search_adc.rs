@@ -18,13 +18,19 @@ use super::opcount::OpCounter;
 use crate::core::{Hit, Matrix, TopK};
 
 /// ADC k-NN for one query (pre-embedded, same space as the index).
+/// Metric-aware: similarity indexes sweep the same blocked kernels
+/// over `<q, c>` LUT entries into a keep-largest top-k — a full K-term
+/// sum is the exact quantized score for every metric, so no bound
+/// logic is needed here (this is the parity oracle the two-step paths
+/// are checked against).
 pub fn search(
     index: &EncodedIndex,
     q: &[f32],
     k: usize,
     ops: &OpCounter,
 ) -> Vec<Hit> {
-    let lut = Lut::build(index.lut_ctx(), index.codebooks(), q);
+    let lut =
+        Lut::build_metric(index.lut_ctx(), index.codebooks(), q, index.metric);
     // compact-support LUT build: m * sum|support_k| MACs (see index/lut.rs)
     ops.add_flops(index.lut_ctx().build_macs() as u64);
     search_with_lut(index, &lut, k, ops)
@@ -66,7 +72,7 @@ pub fn search_with_lut(
     k: usize,
     ops: &OpCounter,
 ) -> Vec<Hit> {
-    let mut top = TopK::new(k);
+    let mut top = TopK::new_metric(k, index.metric);
     scan_blocked(index, lut, &mut top);
     ops.add_queries(1);
     ops.add_candidates(index.len() as u64);
@@ -84,7 +90,7 @@ pub fn search_with_lut_rowmajor(
 ) -> Vec<Hit> {
     let kb = index.k();
     let codes = index.codes();
-    let mut top = TopK::new(k);
+    let mut top = TopK::new_metric(k, index.metric);
     for i in 0..index.len() {
         let d = lut.partial_sum(codes.row(i), 0, kb);
         top.push(i as u32, d);
@@ -103,8 +109,13 @@ pub fn search_batch(
     ops: &OpCounter,
 ) -> Vec<Vec<Hit>> {
     let res: Vec<Vec<Hit>> = par_map_indexed(queries.rows(), |qi| {
-        let lut = Lut::build(index.lut_ctx(), index.codebooks(), queries.row(qi));
-        let mut top = TopK::new(k);
+        let lut = Lut::build_metric(
+            index.lut_ctx(),
+            index.codebooks(),
+            queries.row(qi),
+            index.metric,
+        );
+        let mut top = TopK::new_metric(k, index.metric);
         scan_blocked(index, &lut, &mut top);
         top.into_sorted()
     });

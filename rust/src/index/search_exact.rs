@@ -3,15 +3,45 @@
 use crate::core::parallel::par_map_indexed;
 
 use super::opcount::OpCounter;
-use crate::core::{distance, Hit, Matrix, TopK};
+use crate::core::{distance, Hit, Matrix, Metric, TopK};
 
 pub use crate::core::topk::Hit as ExactHit;
 
 /// Exact k-NN of `q` over the rows of `x`.
 pub fn search(x: &Matrix, q: &[f32], k: usize, ops: &OpCounter) -> Vec<Hit> {
-    let mut top = TopK::new(k);
+    search_metric(x, q, k, Metric::L2, ops)
+}
+
+/// Metric-aware exact scan. L2 keeps the smallest squared distances;
+/// inner product keeps the largest raw dots; cosine normalizes the
+/// query once and keeps the largest dots — exact cosine *when the rows
+/// of `x` are unit vectors*, which is the pipeline invariant (cosine
+/// indexes are built over caller-normalized rows, so the ground truth
+/// must rank the same space the index serves).
+pub fn search_metric(
+    x: &Matrix,
+    q: &[f32],
+    k: usize,
+    metric: Metric,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    let qn: Vec<f32>;
+    let q = match metric {
+        Metric::Cosine => {
+            let mut v = q.to_vec();
+            distance::normalize(&mut v);
+            qn = v;
+            &qn[..]
+        }
+        _ => q,
+    };
+    let mut top = TopK::new_metric(k, metric);
     for i in 0..x.rows() {
-        let d = distance::l2_sq(x.row(i), q);
+        let d = if metric.is_similarity() {
+            distance::dot(x.row(i), q)
+        } else {
+            distance::l2_sq(x.row(i), q)
+        };
         top.push(i as u32, d);
     }
     ops.add_queries(1);
@@ -27,12 +57,20 @@ pub fn search_batch(
     k: usize,
     ops: &OpCounter,
 ) -> Vec<Vec<Hit>> {
+    search_batch_metric(x, queries, k, Metric::L2, ops)
+}
+
+/// Metric-aware [`search_batch`] (see [`search_metric`]).
+pub fn search_batch_metric(
+    x: &Matrix,
+    queries: &Matrix,
+    k: usize,
+    metric: Metric,
+    ops: &OpCounter,
+) -> Vec<Vec<Hit>> {
     let res: Vec<Vec<Hit>> = par_map_indexed(queries.rows(), |qi| {
-        let mut top = TopK::new(k);
-        for i in 0..x.rows() {
-            top.push(i as u32, distance::l2_sq(x.row(i), queries.row(qi)));
-        }
-        top.into_sorted()
+        let inner = OpCounter::new();
+        search_metric(x, queries.row(qi), k, metric, &inner)
     });
     ops.add_queries(queries.rows() as u64);
     ops.add_candidates((queries.rows() * x.rows()) as u64);
@@ -52,6 +90,30 @@ mod tests {
         assert_eq!(hits[0].id, 1);
         assert_eq!(hits[1].id, 2);
         assert_eq!(ops.snapshot().queries, 1);
+    }
+
+    #[test]
+    fn metric_variants_rank_correctly() {
+        let x = Matrix::from_vec(3, 2, vec![1., 0., 0., 1., 0.7, 0.7]);
+        let ops = OpCounter::new();
+        let ip = search_metric(&x, &[1.0, 0.2], 2, Metric::InnerProduct, &ops);
+        assert_eq!(ip[0].id, 0); // dot 1.0
+        assert_eq!(ip[1].id, 2); // dot 0.84
+        assert!(ip[0].dist >= ip[1].dist);
+        // cosine normalizes the query, so magnitude cannot change it
+        let a = search_metric(&x, &[2.0, 0.4], 2, Metric::Cosine, &ops);
+        let b = search_metric(&x, &[1.0, 0.2], 2, Metric::Cosine, &ops);
+        assert_eq!(a, b);
+        // batch variant agrees per query
+        let q = Matrix::from_vec(2, 2, vec![1.0, 0.2, -1.0, 0.0]);
+        let batch =
+            search_batch_metric(&x, &q, 2, Metric::InnerProduct, &ops);
+        for i in 0..2 {
+            assert_eq!(
+                batch[i],
+                search_metric(&x, q.row(i), 2, Metric::InnerProduct, &ops)
+            );
+        }
     }
 
     #[test]

@@ -29,15 +29,29 @@
 //! the f32 paths (see `two_step::refine_from_crude_lb` for the bound
 //! argument). Wide indexes and oversized fast groups fall back to the
 //! f32 sweep transparently.
+//!
+//! Every path branches on [`EncodedIndex::metric`]. L2 indexes run the
+//! code above verbatim. Similarity indexes (inner product / cosine)
+//! run the mirrored upper-bound chain: LUT entries are `<q, c>`
+//! contributions ([`Lut::build_metric`]), the top-k keeps the LARGEST
+//! scores, the quantized sweep rounds UP ([`QLut::from_lut_ub`]), and —
+//! because a fast-group partial sum does not bound a signed full sum —
+//! every prune cut folds in the per-query tail slack
+//! ([`Lut::tail_upper_bound`]; see `two_step::refine_from_crude_ub`).
+//! Filtered variants mask disallowed rows' crude entries to the
+//! metric's worst sentinel between the sweep and the refine
+//! ([`RowFilter::mask_crude`]), so they can neither seed the pruning
+//! radius nor survive the cut.
 
 use crate::core::parallel::par_map_indexed;
 
 use super::encoded::EncodedIndex;
+use super::filter::RowFilter;
 use super::lut::Lut;
 use super::opcount::OpCounter;
 use super::qlut::{self, QLut};
 use super::two_step;
-use crate::core::{Hit, Matrix, TopK};
+use crate::core::{merge_topk_metric, Hit, Matrix, TopK};
 
 /// Tuning for the two-step search.
 #[derive(Clone, Copy, Debug)]
@@ -62,7 +76,8 @@ pub fn search(
     opts: IcqSearchOpts,
     ops: &OpCounter,
 ) -> Vec<Hit> {
-    let lut = Lut::build(index.lut_ctx(), index.codebooks(), q);
+    let lut =
+        Lut::build_metric(index.lut_ctx(), index.codebooks(), q, index.metric);
     // compact-support LUT build: m * sum|support_k| MACs (see index/lut.rs)
     ops.add_flops(index.lut_ctx().build_macs() as u64);
     search_with_lut(index, &lut, opts, ops)
@@ -79,21 +94,44 @@ pub fn search_with_lut(
     let fk = index.fast_k.min(kb); // clamp a corrupt fast group
     let margin = index.sigma * opts.margin_scale;
     let codes = index.codes();
-    let mut top = TopK::new(opts.k);
+    let mut top = TopK::new_metric(opts.k, index.metric);
     let mut refined = 0u64;
-    // hot loop (section Perf): iterate code rows via chunks_exact (no
-    // per-row index math), cache the pruning bound locally and refresh it
-    // only when the heap actually changes.
-    let mut bound = f32::INFINITY; // top.threshold() + margin
-    for (i, row) in codes.as_slice().chunks_exact(kb).enumerate() {
-        // crude pass: |K| adds (eq. 2)
-        let crude = lut.partial_sum(row, 0, fk);
-        if crude < bound {
-            let full = crude + lut.partial_sum(row, fk, kb);
-            refined += 1;
-            if top.push(i as u32, full) {
-                let t = top.threshold();
-                bound = if t.is_finite() { t + margin } else { t };
+    if index.metric.is_similarity() {
+        // similarity mirror: keep the LARGEST scores, and prune with
+        // the tail slack folded in — signed LUT entries mean the
+        // fast-group sum alone bounds nothing, but
+        // crude + tail_ub >= full always (see Lut::tail_upper_bound),
+        // so rows with crude <= threshold - margin - tail are safe to
+        // skip.
+        let tail = lut.tail_upper_bound(fk, kb);
+        let mut bound = f32::NEG_INFINITY; // threshold - margin - tail
+        for (i, row) in codes.as_slice().chunks_exact(kb).enumerate() {
+            let crude = lut.partial_sum(row, 0, fk);
+            if crude > bound {
+                let full = crude + lut.partial_sum(row, fk, kb);
+                refined += 1;
+                if top.push(i as u32, full) {
+                    let t = top.threshold();
+                    bound =
+                        if t.is_finite() { t - margin - tail } else { t };
+                }
+            }
+        }
+    } else {
+        // hot loop (section Perf): iterate code rows via chunks_exact (no
+        // per-row index math), cache the pruning bound locally and refresh
+        // it only when the heap actually changes.
+        let mut bound = f32::INFINITY; // top.threshold() + margin
+        for (i, row) in codes.as_slice().chunks_exact(kb).enumerate() {
+            // crude pass: |K| adds (eq. 2)
+            let crude = lut.partial_sum(row, 0, fk);
+            if crude < bound {
+                let full = crude + lut.partial_sum(row, fk, kb);
+                refined += 1;
+                if top.push(i as u32, full) {
+                    let t = top.threshold();
+                    bound = if t.is_finite() { t + margin } else { t };
+                }
             }
         }
     }
@@ -158,16 +196,29 @@ pub fn search_scanfirst_scratch(
     ops.add_candidates(n as u64);
     ops.add_queries(1);
 
-    two_step::refine_from_crude(
-        index.codes(),
-        lut,
-        crude,
-        fk,
-        kb,
-        margin,
-        opts.k,
-        ops,
-    )
+    if index.metric.is_similarity() {
+        two_step::refine_from_crude_ub(
+            index.codes(),
+            lut,
+            crude,
+            fk,
+            kb,
+            margin,
+            opts.k,
+            ops,
+        )
+    } else {
+        two_step::refine_from_crude(
+            index.codes(),
+            lut,
+            crude,
+            fk,
+            kb,
+            margin,
+            opts.k,
+            ops,
+        )
+    }
 }
 
 /// Scanfirst two-step for one raw query: builds the LUT (charging the
@@ -182,7 +233,8 @@ pub fn search_scanfirst_query(
     ops: &OpCounter,
     crude: &mut Vec<f32>,
 ) -> Vec<Hit> {
-    let lut = Lut::build(index.lut_ctx(), index.codebooks(), q);
+    let lut =
+        Lut::build_metric(index.lut_ctx(), index.codebooks(), q, index.metric);
     ops.add_flops(index.lut_ctx().build_macs() as u64);
     search_scanfirst_scratch(index, &lut, opts, ops, crude)
 }
@@ -215,7 +267,12 @@ pub fn search_scanfirst_qlut(
     let margin = index.sigma * opts.margin_scale;
     let n = index.len();
 
-    let qlut = QLut::from_lut(lut, 0, fk);
+    let sim = index.metric.is_similarity();
+    let qlut = if sim {
+        QLut::from_lut_ub(lut, 0, fk) // round UP: quantized >= exact
+    } else {
+        QLut::from_lut(lut, 0, fk)
+    };
     crude.clear();
     crude.resize(n, 0.0);
     qlut::crude_sums_into(blocked8, &qlut, crude);
@@ -223,15 +280,28 @@ pub fn search_scanfirst_qlut(
     ops.add_candidates(n as u64);
     ops.add_queries(1);
 
-    two_step::refine_from_crude_lb(
-        index.codes(),
-        lut,
-        crude,
-        kb,
-        margin,
-        opts.k,
-        ops,
-    )
+    if sim {
+        two_step::refine_from_crude_qub(
+            index.codes(),
+            lut,
+            crude,
+            fk,
+            kb,
+            margin,
+            opts.k,
+            ops,
+        )
+    } else {
+        two_step::refine_from_crude_lb(
+            index.codes(),
+            lut,
+            crude,
+            kb,
+            margin,
+            opts.k,
+            ops,
+        )
+    }
 }
 
 /// [`search_scanfirst_query`] with the quantized crude pass: the entry
@@ -245,7 +315,8 @@ pub fn search_scanfirst_query_qlut(
     ops: &OpCounter,
     crude: &mut Vec<f32>,
 ) -> Vec<Hit> {
-    let lut = Lut::build(index.lut_ctx(), index.codebooks(), q);
+    let lut =
+        Lut::build_metric(index.lut_ctx(), index.codebooks(), q, index.metric);
     ops.add_flops(index.lut_ctx().build_macs() as u64);
     search_scanfirst_qlut(index, &lut, opts, ops, crude)
 }
@@ -294,8 +365,13 @@ pub fn search_scanfirst_parallel(
         .map(|i| (i * chunk, ((i + 1) * chunk).min(nb)))
         .filter(|&(b0, b1)| b0 < b1)
         .collect();
+    let sim = index.metric.is_similarity();
     let qlut = match index.blocked().as_u8() {
-        Some(_) if QLut::fits(fk) => Some(QLut::from_lut(lut, 0, fk)),
+        Some(_) if QLut::fits(fk) => Some(if sim {
+            QLut::from_lut_ub(lut, 0, fk)
+        } else {
+            QLut::from_lut(lut, 0, fk)
+        }),
         _ => None,
     };
     let lists = par_map_indexed(ranges.len(), |ri| {
@@ -305,39 +381,67 @@ pub fn search_scanfirst_parallel(
         match (&qlut, index.blocked().as_u8()) {
             (Some(q), Some(blocked8)) => {
                 qlut::crude_sums_range_into(blocked8, q, b0, b1, &mut crude);
-                two_step::refine_range_from_crude_lb(
-                    index.codes(),
-                    lut,
-                    &mut crude,
-                    row0,
-                    kb,
-                    margin,
-                    opts.k,
-                    ops,
-                )
+                if sim {
+                    two_step::refine_range_from_crude_qub(
+                        index.codes(),
+                        lut,
+                        &mut crude,
+                        row0,
+                        fk,
+                        kb,
+                        margin,
+                        opts.k,
+                        ops,
+                    )
+                } else {
+                    two_step::refine_range_from_crude_lb(
+                        index.codes(),
+                        lut,
+                        &mut crude,
+                        row0,
+                        kb,
+                        margin,
+                        opts.k,
+                        ops,
+                    )
+                }
             }
             _ => {
                 index
                     .blocked()
                     .partial_sums_range_into(lut, 0, fk, b0, b1, &mut crude);
-                two_step::refine_range_from_crude(
-                    index.codes(),
-                    lut,
-                    &mut crude,
-                    row0,
-                    fk,
-                    kb,
-                    margin,
-                    opts.k,
-                    ops,
-                )
+                if sim {
+                    two_step::refine_range_from_crude_ub(
+                        index.codes(),
+                        lut,
+                        &mut crude,
+                        row0,
+                        fk,
+                        kb,
+                        margin,
+                        opts.k,
+                        ops,
+                    )
+                } else {
+                    two_step::refine_range_from_crude(
+                        index.codes(),
+                        lut,
+                        &mut crude,
+                        row0,
+                        fk,
+                        kb,
+                        margin,
+                        opts.k,
+                        ops,
+                    )
+                }
             }
         }
     });
     ops.add_table_adds((n * fk) as u64);
     ops.add_candidates(n as u64);
     ops.add_queries(1);
-    crate::core::merge_topk(&lists, opts.k)
+    merge_topk_metric(&lists, opts.k, index.metric)
 }
 
 /// Queries swept per block-resident pass of the batched engine: bounds
@@ -370,41 +474,107 @@ pub fn search_scanfirst_batch_with_luts(
     ops: &OpCounter,
     crude: &mut Vec<f32>,
 ) -> Vec<Vec<Hit>> {
+    search_scanfirst_batch_with_luts_filtered(index, luts, opts, ops, crude, None)
+}
+
+/// [`search_scanfirst_batch_with_luts`] with an optional per-vector
+/// allow-list shared by every query in the batch. Between the crude
+/// sweep and the refine, each query's crude slice has every disallowed
+/// row masked to the metric's worst sentinel
+/// ([`RowFilter::mask_crude`]): masked rows never seed the pruning
+/// radius, never pass the dense cut (`+inf < threshold` and
+/// `-inf > cut` are both false, including against non-finite cuts),
+/// and never enter a top-k — so the filtered result is exactly the
+/// unfiltered ranking restricted to allowed rows. `None` is the
+/// unfiltered engine, bit for bit.
+pub fn search_scanfirst_batch_with_luts_filtered(
+    index: &EncodedIndex,
+    luts: &[Lut],
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+    crude: &mut Vec<f32>,
+    filter: Option<&RowFilter>,
+) -> Vec<Vec<Hit>> {
     let kb = index.k();
     let fk = index.fast_k.min(kb); // clamp a corrupt fast group
     let margin = index.sigma * opts.margin_scale;
     let n = index.len();
+    let sim = index.metric.is_similarity();
+    if let Some(f) = filter {
+        assert_eq!(
+            f.len(),
+            n,
+            "filter covers {} rows but the index holds {n}",
+            f.len()
+        );
+    }
     let mut out = Vec::with_capacity(luts.len());
     for tile in luts.chunks(SWEEP_TILE) {
         crude.clear();
         crude.resize(tile.len() * n, 0.0);
         let hits = match index.blocked().as_u8() {
             Some(blocked8) if QLut::fits(fk) => {
-                let qluts: Vec<QLut> =
-                    tile.iter().map(|l| QLut::from_lut(l, 0, fk)).collect();
+                let qluts: Vec<QLut> = tile
+                    .iter()
+                    .map(|l| {
+                        if sim {
+                            QLut::from_lut_ub(l, 0, fk)
+                        } else {
+                            QLut::from_lut(l, 0, fk)
+                        }
+                    })
+                    .collect();
                 qlut::crude_sums_batch_into(blocked8, &qluts, crude);
-                two_step::refine_batch_from_crude_lb(
-                    index.codes(),
-                    tile,
-                    crude,
-                    kb,
-                    margin,
-                    opts.k,
-                    ops,
-                )
+                mask_batch(crude, n, filter, index.metric.worst());
+                if sim {
+                    two_step::refine_batch_from_crude_qub(
+                        index.codes(),
+                        tile,
+                        crude,
+                        fk,
+                        kb,
+                        margin,
+                        opts.k,
+                        ops,
+                    )
+                } else {
+                    two_step::refine_batch_from_crude_lb(
+                        index.codes(),
+                        tile,
+                        crude,
+                        kb,
+                        margin,
+                        opts.k,
+                        ops,
+                    )
+                }
             }
             _ => {
                 index.blocked().partial_sums_batch_into(tile, 0, fk, crude);
-                two_step::refine_batch_from_crude(
-                    index.codes(),
-                    tile,
-                    crude,
-                    fk,
-                    kb,
-                    margin,
-                    opts.k,
-                    ops,
-                )
+                mask_batch(crude, n, filter, index.metric.worst());
+                if sim {
+                    two_step::refine_batch_from_crude_ub(
+                        index.codes(),
+                        tile,
+                        crude,
+                        fk,
+                        kb,
+                        margin,
+                        opts.k,
+                        ops,
+                    )
+                } else {
+                    two_step::refine_batch_from_crude(
+                        index.codes(),
+                        tile,
+                        crude,
+                        fk,
+                        kb,
+                        margin,
+                        opts.k,
+                        ops,
+                    )
+                }
             }
         };
         ops.add_table_adds((tile.len() * n * fk) as u64);
@@ -413,6 +583,17 @@ pub fn search_scanfirst_batch_with_luts(
         out.extend(hits);
     }
     out
+}
+
+/// Mask every query's crude slice of a `tile_len * n` batch scratch.
+fn mask_batch(crude: &mut [f32], n: usize, filter: Option<&RowFilter>, worst: f32) {
+    if let Some(f) = filter {
+        if n > 0 {
+            for slice in crude.chunks_exact_mut(n) {
+                f.mask_crude(slice, 0, worst);
+            }
+        }
+    }
 }
 
 /// Batched scanfirst for raw queries: builds one LUT per query row
@@ -428,11 +609,36 @@ pub fn search_scanfirst_batch(
     ops: &OpCounter,
     crude: &mut Vec<f32>,
 ) -> Vec<Vec<Hit>> {
+    search_scanfirst_batch_filtered(index, queries, opts, ops, crude, None)
+}
+
+/// [`search_scanfirst_batch`] with an optional per-vector allow-list
+/// shared by every query in the batch (see
+/// [`search_scanfirst_batch_with_luts_filtered`] for the masking
+/// semantics). This is the raw-query entry the shard server and the
+/// coordinator's filtered path use.
+pub fn search_scanfirst_batch_filtered(
+    index: &EncodedIndex,
+    queries: &Matrix,
+    opts: IcqSearchOpts,
+    ops: &OpCounter,
+    crude: &mut Vec<f32>,
+    filter: Option<&RowFilter>,
+) -> Vec<Vec<Hit>> {
     let luts: Vec<Lut> = (0..queries.rows())
-        .map(|qi| Lut::build(index.lut_ctx(), index.codebooks(), queries.row(qi)))
+        .map(|qi| {
+            Lut::build_metric(
+                index.lut_ctx(),
+                index.codebooks(),
+                queries.row(qi),
+                index.metric,
+            )
+        })
         .collect();
     ops.add_flops((queries.rows() * index.lut_ctx().build_macs()) as u64);
-    search_scanfirst_batch_with_luts(index, &luts, opts, ops, crude)
+    search_scanfirst_batch_with_luts_filtered(
+        index, &luts, opts, ops, crude, filter,
+    )
 }
 
 #[cfg(test)]
@@ -714,6 +920,199 @@ mod tests {
             4,
         );
         assert!(hits.is_empty());
+    }
+
+    /// Every inner-product path must reproduce the exhaustive
+    /// descending full-sum ranking (the similarity mirror of the L2
+    /// parity suite), and the quantized/parallel engines must be
+    /// bitwise identical to each other.
+    #[test]
+    fn ip_paths_agree_and_match_exhaustive_ranking() {
+        use crate::core::Metric;
+        let (_, idx) = setup(500, 13);
+        let idx = idx.with_metric(Metric::InnerProduct);
+        let kb = idx.k();
+        let mut rng = Rng::new(77);
+        let mut crude = Vec::new();
+        let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+        for trial in 0..6 {
+            let q: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+            let lut = Lut::build_metric(
+                idx.lut_ctx(),
+                idx.codebooks(),
+                &q,
+                idx.metric,
+            );
+            let ops = OpCounter::new();
+            // exhaustive oracle: every row's full signed sum, descending
+            let mut full: Vec<Hit> = idx
+                .codes()
+                .as_slice()
+                .chunks_exact(kb)
+                .enumerate()
+                .map(|(i, row)| Hit {
+                    id: i as u32,
+                    dist: lut.partial_sum(row, 0, kb),
+                })
+                .collect();
+            full.sort_by(|a, b| {
+                b.dist.total_cmp(&a.dist).then(a.id.cmp(&b.id))
+            });
+            full.truncate(opts.k);
+
+            let serial = search_with_lut(&idx, &lut, opts, &ops);
+            let scan = search_scanfirst(&idx, &lut, opts, &ops);
+            let ql =
+                search_scanfirst_qlut(&idx, &lut, opts, &ops, &mut crude);
+            for (name, hits) in
+                [("serial", &serial), ("scanfirst", &scan), ("qlut", &ql)]
+            {
+                assert_eq!(hits.len(), full.len(), "{name} trial {trial}");
+                assert!(
+                    hits.windows(2).all(|w| w[0].dist >= w[1].dist),
+                    "{name} trial {trial}: not descending"
+                );
+                for (a, b) in hits.iter().zip(&full) {
+                    assert!(
+                        (a.dist - b.dist).abs() < 1e-3,
+                        "{name} trial {trial}: got {} want {}",
+                        a.dist,
+                        b.dist
+                    );
+                }
+            }
+            for threads in [2usize, 5] {
+                assert_eq!(
+                    search_scanfirst_parallel(&idx, &lut, opts, &ops, threads),
+                    ql,
+                    "trial {trial} threads {threads}"
+                );
+            }
+        }
+    }
+
+    /// Cosine is defined as inner product over unit vectors: with the
+    /// base rows pre-normalized, a cosine search with a raw query must
+    /// equal an inner-product search with the pre-normalized query,
+    /// bitwise (the cosine LUT build normalizes the query and then is
+    /// the IP build).
+    #[test]
+    fn cosine_is_ip_over_normalized_vectors_bitwise() {
+        use crate::core::{distance, Metric};
+        let mut rng = Rng::new(19);
+        let (n, d) = (300usize, 16usize);
+        let mut x = Matrix::from_fn(n, d, |_, j| {
+            rng.normal_f32() * if j % 4 == 0 { 4.0 } else { 0.4 }
+        });
+        distance::normalize_rows(&mut x);
+        let icq = Icq::train(
+            &x,
+            IcqOpts {
+                k: 8,
+                m: 16,
+                fast_k: 2,
+                kmeans_iters: 8,
+                prior_steps: 100,
+                seed: 19,
+            },
+        );
+        let cos = EncodedIndex::build_icq(&icq, &x, vec![0; n])
+            .with_metric(Metric::Cosine);
+        let ip = cos.clone().with_metric(Metric::InnerProduct);
+        let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+        let (mut c1, mut c2) = (Vec::new(), Vec::new());
+        for trial in 0..5 {
+            let q: Vec<f32> =
+                (0..d).map(|_| rng.normal_f32() * 2.0).collect();
+            let mut qn = q.clone();
+            distance::normalize(&mut qn);
+            let ops = OpCounter::new();
+            let a = search_scanfirst_query_qlut(&cos, &q, opts, &ops, &mut c1);
+            let b = search_scanfirst_query_qlut(&ip, &qn, opts, &ops, &mut c2);
+            assert_eq!(a, b, "trial {trial}");
+        }
+    }
+
+    /// Filtered search must equal post-filtering an unfiltered scan,
+    /// bitwise, for both bound directions — plus the nothing-allowed
+    /// and everything-allowed edge cases.
+    #[test]
+    fn filtered_batch_is_post_filtered_unfiltered_bitwise() {
+        use crate::core::Metric;
+        use crate::index::RowFilter;
+        let (x, idx) = setup(300, 17);
+        let n = idx.len();
+        let mut rng = Rng::new(91);
+        let queries = Matrix::from_fn(5, 16, |i, j| {
+            x.get(i * 7, j) + rng.normal_f32() * 0.1
+        });
+        let ids: Vec<u32> = (0..n as u32).filter(|i| i % 3 != 0).collect();
+        let f = RowFilter::from_indices(n, &ids);
+        for metric in [Metric::L2, Metric::InnerProduct] {
+            let idx = idx.clone().with_metric(metric);
+            let luts: Vec<Lut> = (0..queries.rows())
+                .map(|qi| {
+                    Lut::build_metric(
+                        idx.lut_ctx(),
+                        idx.codebooks(),
+                        queries.row(qi),
+                        metric,
+                    )
+                })
+                .collect();
+            let ops = OpCounter::new();
+            let mut crude = Vec::new();
+            let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+            // oracle: exhaustive unfiltered ranking (top_k = n refines
+            // every row exactly), post-filtered and truncated
+            let all = search_scanfirst_batch_with_luts(
+                &idx,
+                &luts,
+                IcqSearchOpts { k: n, margin_scale: 1.0 },
+                &ops,
+                &mut crude,
+            );
+            let got = search_scanfirst_batch_with_luts_filtered(
+                &idx,
+                &luts,
+                opts,
+                &ops,
+                &mut crude,
+                Some(&f),
+            );
+            for (qi, hits) in got.iter().enumerate() {
+                let mut expect: Vec<Hit> = all[qi]
+                    .iter()
+                    .copied()
+                    .filter(|h| f.allows(h.id as usize))
+                    .collect();
+                expect.truncate(opts.k);
+                assert_eq!(hits, &expect, "{metric} query {qi}");
+            }
+            // nothing allowed: no hits, no panic
+            let none = search_scanfirst_batch_with_luts_filtered(
+                &idx,
+                &luts,
+                opts,
+                &ops,
+                &mut crude,
+                Some(&RowFilter::none(n)),
+            );
+            assert!(none.iter().all(|h| h.is_empty()), "{metric}");
+            // everything allowed: bitwise the unfiltered engine
+            let allpass = search_scanfirst_batch_with_luts_filtered(
+                &idx,
+                &luts,
+                opts,
+                &ops,
+                &mut crude,
+                Some(&RowFilter::all(n)),
+            );
+            let plain = search_scanfirst_batch_with_luts(
+                &idx, &luts, opts, &ops, &mut crude,
+            );
+            assert_eq!(allpass, plain, "{metric}");
+        }
     }
 
     #[test]

@@ -27,6 +27,65 @@ use super::opcount::OpCounter;
 use crate::core::{Hit, TopK};
 use crate::quantizer::Codes;
 
+/// The similarity-direction mirror of [`refine_impl`], for metrics
+/// where the crude sums are *upper bounds* and the top-k keeps the
+/// largest scores: seeds from the highest crude entries, masks refined
+/// rows to `-inf`, and prunes on `crude > threshold - margin - slack`.
+///
+/// `slack` is the per-query tail bound that restores soundness: under
+/// L2 the dropped tail books contribute non-negative terms, so the
+/// fast-group sum alone bounds the full distance; under a similarity
+/// metric the tail entries can be any sign, so the caller passes
+/// `sum_{k in [fast_k, K)} max_j lut[k][j]`
+/// ([`Lut::tail_upper_bound`]) and the prune keeps every row whose
+/// crude sum could still reach the threshold once the best possible
+/// tail is added.
+#[allow(clippy::too_many_arguments)]
+fn refine_impl_ub(
+    codes: &Codes,
+    crude: &mut [f32],
+    row0: usize,
+    margin: f32,
+    slack: f32,
+    top_k: usize,
+    adds_per_refine: usize,
+    ops: &OpCounter,
+    mut full_score: impl FnMut(&[u16], f32) -> f32,
+) -> Vec<Hit> {
+    debug_assert!(row0 + crude.len() <= codes.n());
+    let mut seed = TopK::new_largest(top_k);
+    for (i, &c) in crude.iter().enumerate() {
+        // non-finite = filter-masked to -inf: never refined
+        if c.is_finite() {
+            seed.push((row0 + i) as u32, c);
+        }
+    }
+    let mut top = TopK::new_largest(top_k);
+    let mut refined = 0u64;
+    for hit in seed.into_sorted() {
+        let i = hit.id as usize;
+        let full = full_score(codes.row(i), crude[i - row0]);
+        refined += 1;
+        top.push(hit.id, full);
+        crude[i - row0] = f32::NEG_INFINITY; // mask: never refined twice
+    }
+
+    // dense refine over everything whose upper bound still clears the
+    // radius (threshold() is -inf while the list is not full, so every
+    // unmasked row is refined — the accept-everything direction).
+    let cut = top.threshold() - margin - slack;
+    for (i, &c) in crude.iter().enumerate() {
+        if c > cut {
+            let full = full_score(codes.row(row0 + i), c);
+            refined += 1;
+            top.push((row0 + i) as u32, full);
+        }
+    }
+    ops.add_table_adds(refined * adds_per_refine as u64);
+    ops.add_refined(refined);
+    top.into_sorted()
+}
+
 /// Refine a dense crude pass into the final top-k.
 ///
 /// `crude[i]` must hold the |K|-book partial sum for vector `i` (books
@@ -106,10 +165,15 @@ fn refine_impl(
     // seed the threshold by refining the crude top-k first: their FULL
     // distances give a valid pruning radius. Ids are global rows
     // (row0 + local index) throughout, so tie-breaking and the returned
-    // hits match the whole-database refine's id space.
+    // hits match the whole-database refine's id space. Non-finite crude
+    // entries are rows a caller-supplied filter masked to +inf — they
+    // must never be refined (and on finite data the guard never fires,
+    // so the unfiltered scan is unchanged).
     let mut seed = TopK::new(top_k);
     for (i, &c) in crude.iter().enumerate() {
-        seed.push((row0 + i) as u32, c);
+        if c.is_finite() {
+            seed.push((row0 + i) as u32, c);
+        }
     }
     let mut top = TopK::new(top_k);
     let mut refined = 0u64;
@@ -190,6 +254,121 @@ pub fn refine_range_from_crude_lb(
     })
 }
 
+/// The similarity-metric mirror of [`refine_from_crude`]: `crude[i]`
+/// holds the exact f32 fast-group partial *score* and the final list
+/// keeps the k largest full scores. The per-query tail slack
+/// (`lut.tail_upper_bound(fast_k, k_books)`) is computed here — see
+/// [`refine_impl_ub`] for why similarity needs it and L2 does not.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_from_crude_ub(
+    codes: &Codes,
+    lut: &Lut,
+    crude: &mut [f32],
+    fast_k: usize,
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    refine_range_from_crude_ub(
+        codes, lut, crude, 0, fast_k, k_books, margin, top_k, ops,
+    )
+}
+
+/// [`refine_from_crude_ub`] over the contiguous row range
+/// `[row0, row0 + crude.len())` with global hit ids — the similarity
+/// flavor of [`refine_range_from_crude`], for the block-parallel scan.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_range_from_crude_ub(
+    codes: &Codes,
+    lut: &Lut,
+    crude: &mut [f32],
+    row0: usize,
+    fast_k: usize,
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    let fast_k = fast_k.min(k_books);
+    let slack = lut.tail_upper_bound(fast_k, k_books);
+    refine_impl_ub(
+        codes,
+        crude,
+        row0,
+        margin,
+        slack,
+        top_k,
+        k_books - fast_k,
+        ops,
+        |row, c| c + lut.partial_sum(row, fast_k, k_books),
+    )
+}
+
+/// The similarity mirror of [`refine_from_crude_lb`], for the quantized
+/// round-up crude pass (`QLut::from_lut_ub` +
+/// `qlut::crude_sums_into`): `crude[i]` is an *upper bound* of row
+/// `i`'s fast-group score, so every refined candidate rebuilds the
+/// exact f32 score over all `k_books` books. Needs `fast_k` (unlike
+/// `_lb`) to size the tail slack.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_from_crude_qub(
+    codes: &Codes,
+    lut: &Lut,
+    crude: &mut [f32],
+    fast_k: usize,
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    refine_range_from_crude_qub(
+        codes, lut, crude, 0, fast_k, k_books, margin, top_k, ops,
+    )
+}
+
+/// [`refine_from_crude_qub`] over the contiguous row range
+/// `[row0, row0 + crude.len())` — the block-parallel quantized
+/// similarity refine.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_range_from_crude_qub(
+    codes: &Codes,
+    lut: &Lut,
+    crude: &mut [f32],
+    row0: usize,
+    fast_k: usize,
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Hit> {
+    let fast_k = fast_k.min(k_books);
+    let slack = lut.tail_upper_bound(fast_k, k_books);
+    refine_impl_ub(
+        codes,
+        crude,
+        row0,
+        margin,
+        slack,
+        top_k,
+        k_books,
+        ops,
+        |row, ub| {
+            let full = lut.partial_sum(row, 0, k_books);
+            // the flipped chain: quantized crude + tail slack must
+            // dominate the full ADC score (the upper-bound mirror of
+            // the `_lb` assertion) — a violation means the round-up
+            // quantizer regressed and true neighbors could be pruned.
+            debug_assert!(
+                ub + slack >= full - 1e-4 * full.abs().max(1.0),
+                "upper-bound chain violated: quantized crude {ub} + tail \
+                 {slack} < full ADC score {full}"
+            );
+            full
+        },
+    )
+}
+
 /// Batched [`refine_from_crude`]: one refine per query over a shared
 /// query-major crude matrix (`crude[q * n + i]`, as produced by the
 /// LUT-major sweeps `BlockedCodes::partial_sums_batch_into` /
@@ -256,6 +435,77 @@ pub fn refine_batch_from_crude_lb(
         .zip(crude.chunks_mut(n))
         .map(|(lut, cr)| {
             refine_from_crude_lb(codes, lut, cr, k_books, margin, top_k, ops)
+        })
+        .collect()
+}
+
+/// Batched [`refine_from_crude_ub`] — the similarity flavor of
+/// [`refine_batch_from_crude`]; the per-query tail slack is derived
+/// from each query's own LUT.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_batch_from_crude_ub(
+    codes: &Codes,
+    luts: &[Lut],
+    crude: &mut [f32],
+    fast_k: usize,
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Vec<Hit>> {
+    let n = codes.n();
+    assert_eq!(crude.len(), luts.len() * n);
+    if n == 0 {
+        return luts
+            .iter()
+            .map(|lut| {
+                refine_from_crude_ub(
+                    codes, lut, &mut [], fast_k, k_books, margin, top_k, ops,
+                )
+            })
+            .collect();
+    }
+    luts.iter()
+        .zip(crude.chunks_mut(n))
+        .map(|(lut, cr)| {
+            refine_from_crude_ub(
+                codes, lut, cr, fast_k, k_books, margin, top_k, ops,
+            )
+        })
+        .collect()
+}
+
+/// Batched [`refine_from_crude_qub`] — the similarity flavor of
+/// [`refine_batch_from_crude_lb`], for the quantized round-up sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_batch_from_crude_qub(
+    codes: &Codes,
+    luts: &[Lut],
+    crude: &mut [f32],
+    fast_k: usize,
+    k_books: usize,
+    margin: f32,
+    top_k: usize,
+    ops: &OpCounter,
+) -> Vec<Vec<Hit>> {
+    let n = codes.n();
+    assert_eq!(crude.len(), luts.len() * n);
+    if n == 0 {
+        return luts
+            .iter()
+            .map(|lut| {
+                refine_from_crude_qub(
+                    codes, lut, &mut [], fast_k, k_books, margin, top_k, ops,
+                )
+            })
+            .collect();
+    }
+    luts.iter()
+        .zip(crude.chunks_mut(n))
+        .map(|(lut, cr)| {
+            refine_from_crude_qub(
+                codes, lut, cr, fast_k, k_books, margin, top_k, ops,
+            )
         })
         .collect()
 }
@@ -496,6 +746,111 @@ mod tests {
                 "cuts {cuts:?}: merged range refines diverged"
             );
         }
+    }
+
+    /// The similarity mirrors must return the exact top-k by
+    /// *descending* full score: the exact-crude flavor for every
+    /// fast_k, and the quantized flavor fed genuine upper bounds.
+    #[test]
+    fn ub_refines_match_exhaustive_descending_ranking() {
+        let (n, k, m) = (200usize, 4usize, 8usize);
+        let mut rng = Rng::new(19);
+        // signed entries: the regime where the tail slack matters
+        let lut_data: Vec<f32> =
+            (0..k * m).map(|_| rng.normal_f32()).collect();
+        let lut = Lut::from_flat(k, m, lut_data);
+        let code_data: Vec<u16> =
+            (0..n * k).map(|_| rng.below(m) as u16).collect();
+        let codes = Codes::from_vec(n, k, code_data);
+        let mut expect: Vec<f32> =
+            (0..n).map(|i| lut.partial_sum(codes.row(i), 0, k)).collect();
+        expect.sort_by(|a, b| b.total_cmp(a)); // descending
+        expect.truncate(10);
+        for fast_k in [1usize, 2, 4] {
+            let mut crude: Vec<f32> = (0..n)
+                .map(|i| lut.partial_sum(codes.row(i), 0, fast_k))
+                .collect();
+            let ops = OpCounter::new();
+            let hits = refine_from_crude_ub(
+                &codes, &lut, &mut crude, fast_k, k, 0.0, 10, &ops,
+            );
+            assert_eq!(hits.len(), 10);
+            for (h, e) in hits.iter().zip(&expect) {
+                assert!(
+                    (h.dist - e).abs() < 1e-5,
+                    "fast_k={fast_k}: ub refine {} != exhaustive {e}",
+                    h.dist
+                );
+            }
+            // quantized flavor: feed crude sums padded up by a shave
+            let mut ub: Vec<f32> = (0..n)
+                .map(|i| {
+                    lut.partial_sum(codes.row(i), 0, fast_k)
+                        + rng.uniform_f32() * 0.1
+                })
+                .collect();
+            let q_hits = refine_from_crude_qub(
+                &codes, &lut, &mut ub, fast_k, k, 0.0, 10, &ops,
+            );
+            for (h, e) in q_hits.iter().zip(&expect) {
+                assert!(
+                    (h.dist - e).abs() < 1e-5,
+                    "fast_k={fast_k}: qub refine {} != exhaustive {e}",
+                    h.dist
+                );
+            }
+        }
+    }
+
+    /// Filter-masked crude entries (+/-inf) must never be refined or
+    /// returned, in either direction.
+    #[test]
+    fn masked_rows_never_refine() {
+        let (n, k, m) = (60usize, 3usize, 4usize);
+        let mut rng = Rng::new(21);
+        let lut_data: Vec<f32> =
+            (0..k * m).map(|_| rng.uniform_f32()).collect();
+        let lut = Lut::from_flat(k, m, lut_data);
+        let code_data: Vec<u16> =
+            (0..n * k).map(|_| rng.below(m) as u16).collect();
+        let codes = Codes::from_vec(n, k, code_data);
+        let allowed = |i: usize| i % 3 == 0;
+        let ops = OpCounter::new();
+
+        let mut crude: Vec<f32> = (0..n)
+            .map(|i| {
+                if allowed(i) {
+                    lut.partial_sum(codes.row(i), 0, 1)
+                } else {
+                    f32::INFINITY
+                }
+            })
+            .collect();
+        let hits =
+            refine_from_crude(&codes, &lut, &mut crude, 1, k, 0.5, 10, &ops);
+        assert!(!hits.is_empty());
+        assert!(hits.iter().all(|h| allowed(h.id as usize)));
+
+        let mut crude_ub: Vec<f32> = (0..n)
+            .map(|i| {
+                if allowed(i) {
+                    lut.partial_sum(codes.row(i), 0, 1)
+                } else {
+                    f32::NEG_INFINITY
+                }
+            })
+            .collect();
+        let ub_hits = refine_from_crude_ub(
+            &codes, &lut, &mut crude_ub, 1, k, 0.5, 10, &ops,
+        );
+        assert!(!ub_hits.is_empty());
+        assert!(ub_hits.iter().all(|h| allowed(h.id as usize)));
+
+        // all-masked: no hits, nothing refined
+        let mut dead = vec![f32::INFINITY; n];
+        let none =
+            refine_from_crude(&codes, &lut, &mut dead, 1, k, 0.5, 10, &ops);
+        assert!(none.is_empty());
     }
 
     #[test]

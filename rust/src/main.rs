@@ -30,7 +30,7 @@ use icq::coordinator::{
     LocalShardBackend, NativeSearcher, PoolOpts, RemoteMetrics, ReplicaOpts,
     ReplicaSetBackend, ShardBackend, ShardedSearcher,
 };
-use icq::core::Matrix;
+use icq::core::{distance, Matrix, Metric};
 use icq::data::format::TensorPack;
 use icq::data::loader;
 use icq::data::mapped::save_mapped;
@@ -250,17 +250,42 @@ fn write_snapshot(
     }
 }
 
+/// Prepare the loaded database for the configured metric: cosine
+/// similarity is inner product over unit vectors, so base rows are
+/// normalized once here, before training and encoding (queries are
+/// normalized per request when their LUT is built). L2 and IP serve
+/// the vectors as loaded.
+fn prepare_metric(cfg: &EngineConfig, data: &mut Dataset) {
+    if cfg.search.metric == Metric::Cosine {
+        distance::normalize_rows(&mut data.x);
+    }
+}
+
+/// Residual IVF re-encodes per-cell L2 residuals; its bound chain has
+/// no similarity mirror, so any non-L2 metric is a config error there.
+fn ensure_l2_for_residual(cfg: &EngineConfig) -> Result<()> {
+    anyhow::ensure!(
+        cfg.search.metric == Metric::L2,
+        "residual IVF (ivf.residual = true) serves l2 only; use a flat \
+         index or partition mode for metric {}",
+        cfg.search.metric
+    );
+    Ok(())
+}
+
 fn train(cfg: &EngineConfig, out: &str, format: &str) -> Result<()> {
     anyhow::ensure!(
         cfg.method == MethodKind::Icq,
         "train currently snapshots ICQ indexes; use eval for baselines"
     );
-    let data = loader::load_named(&cfg.dataset, cfg.n_database, cfg.seed)?;
+    let mut data = loader::load_named(&cfg.dataset, cfg.n_database, cfg.seed)?;
+    prepare_metric(cfg, &mut data);
     println!(
-        "[train] dataset={} n={} d={} -> ICQ K={} m={}",
+        "[train] dataset={} n={} d={} metric={} -> ICQ K={} m={}",
         cfg.dataset,
         data.len(),
         data.dim(),
+        cfg.search.metric,
         cfg.k,
         cfg.m
     );
@@ -282,7 +307,8 @@ fn train(cfg: &EngineConfig, out: &str, format: &str) -> Result<()> {
         icq.sigma,
         icq.quantization_error(&data.x),
     );
-    let index = EncodedIndex::build_icq(&icq, &data.x, data.y.clone());
+    let index = EncodedIndex::build_icq(&icq, &data.x, data.y.clone())
+        .with_metric(cfg.search.metric);
     if cfg.ivf.ncells > 0 {
         // snapshot carries the coarse partition; loaders detect the
         // ivf_* tensors and dispatch to the IVF search path
@@ -292,6 +318,7 @@ fn train(cfg: &EngineConfig, out: &str, format: &str) -> Result<()> {
             seed: cfg.seed,
         };
         let ivf = if cfg.ivf.residual {
+            ensure_l2_for_residual(cfg)?;
             IvfIndex::build_residual(
                 &icq,
                 &data.x,
@@ -358,18 +385,27 @@ fn eval(cfg: &EngineConfig) -> Result<()> {
     Ok(())
 }
 
-/// Load the configured dataset at the serve-time default size.
+/// Load the configured dataset at the serve-time default size (rows
+/// pre-normalized when the metric asks for it).
 fn load_db(cfg: &EngineConfig) -> Result<Dataset> {
-    loader::load_named(
+    let mut data = loader::load_named(
         &cfg.dataset,
         if cfg.n_database == 0 { 4000 } else { cfg.n_database },
         cfg.seed,
-    )
+    )?;
+    prepare_metric(cfg, &mut data);
+    Ok(data)
 }
 
-/// Train the configured ICQ model over `data` and encode it.
+/// Train the configured ICQ model over `data` and encode it, tagging
+/// the index with the configured metric (`data` must already be
+/// normalized for cosine — see [`prepare_metric`]).
 fn train_encoded(cfg: &EngineConfig, data: &Dataset) -> EncodedIndex {
-    println!("[serve] building ICQ index over {} vectors...", data.len());
+    println!(
+        "[serve] building ICQ index over {} vectors (metric={})...",
+        data.len(),
+        cfg.search.metric
+    );
     let icq = Icq::train(
         &data.x,
         IcqOpts {
@@ -382,6 +418,7 @@ fn train_encoded(cfg: &EngineConfig, data: &Dataset) -> EncodedIndex {
         },
     );
     EncodedIndex::build_icq(&icq, &data.x, data.y.clone())
+        .with_metric(cfg.search.metric)
 }
 
 /// Train the configured ICQ index over the configured dataset (the
@@ -403,6 +440,7 @@ fn build_ivf(cfg: &EngineConfig) -> Result<IvfIndex> {
         seed: cfg.seed,
     };
     if cfg.ivf.residual {
+        ensure_l2_for_residual(cfg)?;
         println!(
             "[serve] building residual IVF ({} cells) over {} vectors...",
             cfg.ivf.ncells,
@@ -538,12 +576,13 @@ fn build_searcher(
         let hello = set.hello();
         println!(
             "[serve] remote shard group {}: rows [{}, {}) dim={} fast_k={} \
-             replicas={}",
+             metric={} replicas={}",
             set.names(),
             hello.start,
             hello.start + hello.shard_len,
             hello.dim,
             hello.fast_k,
+            hello.metric,
             set.num_replicas()
         );
         remotes.push(set);
@@ -605,6 +644,14 @@ fn build_searcher(
                 r.names(),
                 h.fast_k,
                 index.fast_k
+            );
+            anyhow::ensure!(
+                h.metric == index.metric,
+                "remote shard {} metric {} != local index metric {} \
+                 (config drift would silently mix similarity regimes)",
+                r.names(),
+                h.metric,
+                index.metric
             );
             anyhow::ensure!(
                 h.start + h.shard_len <= index.len(),
@@ -693,6 +740,13 @@ fn build_searcher_from_snapshot(
     match snapshot::load_any(&file)? {
         AnyIndex::Ivf(ivf) => {
             let ivf = Arc::new(*ivf);
+            anyhow::ensure!(
+                ivf.metric() == cfg.search.metric,
+                "snapshot {path} is tagged metric {} but search.metric is \
+                 {} (config drift)",
+                ivf.metric(),
+                cfg.search.metric
+            );
             let nprobe = cfg.ivf.nprobe.max(1);
             println!(
                 "[serve] IVF snapshot {path}: {} cells, nprobe={}, {} rows{}",
@@ -726,10 +780,18 @@ fn build_searcher_from_snapshot(
         }
         AnyIndex::Flat(index) => {
             let index = Arc::new(index);
+            anyhow::ensure!(
+                index.metric == cfg.search.metric,
+                "snapshot {path} is tagged metric {} but search.metric is \
+                 {} (config drift)",
+                index.metric,
+                cfg.search.metric
+            );
             println!(
-                "[serve] snapshot {path}: {} rows, dim={}",
+                "[serve] snapshot {path}: {} rows, dim={} metric={}",
                 index.len(),
-                index.dim()
+                index.dim(),
+                index.metric
             );
             if cfg.serve.shards <= 1 {
                 return Ok(Arc::new(NativeSearcher::new(index, cfg.search)));

@@ -82,6 +82,7 @@ fn job(qs: &Matrix, top_k: usize) -> ShardJob {
         queries: Arc::new(qs.clone()),
         luts: Arc::new(Vec::new()),
         top_k,
+        filter: None,
     }
 }
 

@@ -93,7 +93,11 @@ fn sheds_load_when_admission_exhausted() {
             .map(|_| {
                 let c = coord.clone();
                 s.spawn(move || {
-                    c.query(QueryRequest { vector: vec![0.1; 12], top_k: 2 })
+                    c.query(QueryRequest {
+                        vector: vec![0.1; 12],
+                        top_k: 2,
+                        filter_ids: None,
+                    })
                 })
             })
             .collect();
@@ -124,7 +128,9 @@ fn metrics_track_completed_queries() {
     });
     for i in 0..20 {
         let v = vec![(i % 5) as f32 * 0.2; 12];
-        coord.query(QueryRequest { vector: v, top_k: 4 }).unwrap();
+        coord
+            .query(QueryRequest { vector: v, top_k: 4, filter_ids: None })
+            .unwrap();
     }
     let done = coord
         .metrics

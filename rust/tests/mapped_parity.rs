@@ -194,7 +194,7 @@ fn mapped_ivf_is_bitwise_at_every_nprobe() {
 fn mapped_shard_gather_is_bitwise() {
     let (_, index, _) = method_indexes(330, 25).swap_remove(1);
     let qs = queries(6, 16, 26);
-    let cfg = SearchConfig { top_k: 10, margin_scale: 1.0 };
+    let cfg = SearchConfig { top_k: 10, ..SearchConfig::default() };
 
     let cut = ShardedIndex::build(&index, ShardPolicy::Count(3)).unwrap();
     let ops = Arc::new(OpCounter::new());

@@ -7,7 +7,7 @@ use icq::coordinator::wire::{
     self, Frame, HelloInfo, WireError, WIRE_VERSION,
 };
 use icq::core::json::Json;
-use icq::core::{Hit, Matrix, Rng, TopK};
+use icq::core::{Hit, Matrix, Metric, Rng, TopK};
 use icq::data::format::TensorPack;
 use icq::index::ivf::{load_index, AnyIndex, IvfBuildOpts, IvfIndex};
 use icq::index::lut::{Lut, LutContext};
@@ -214,12 +214,18 @@ fn prop_json_roundtrip() {
 /// One random wire frame of any kind, with random payload shapes
 /// (empty queries, empty hit lists, and empty error strings included).
 fn random_frame(rng: &mut Rng) -> Frame {
+    let metric = |rng: &mut Rng| match rng.below(3) {
+        0 => Metric::L2,
+        1 => Metric::InnerProduct,
+        _ => Metric::Cosine,
+    };
     match rng.below(4) {
         0 => Frame::Hello(HelloInfo {
             dim: rng.below(512),
             shard_len: rng.below(1 << 20),
             start: rng.below(1 << 20),
             fast_k: rng.below(16),
+            metric: metric(rng),
         }),
         1 => {
             let nq = rng.below(4);
@@ -228,7 +234,20 @@ fn random_frame(rng: &mut Rng) -> Frame {
                 top_k: 1 + rng.below(100),
                 fast_k: rng.below(8),
                 margin_scale: rng.uniform_f32(),
+                metric: metric(rng),
                 queries: Matrix::from_fn(nq, d, |_, _| rng.normal_f32()),
+                // empty filters (None) and 1-4 word bitmaps both covered
+                filter: match rng.below(3) {
+                    0 => None,
+                    _ => Some(
+                        (0..1 + rng.below(4))
+                            .map(|_| {
+                                (rng.below(1 << 30) as u64) << 32
+                                    | rng.below(1 << 30) as u64
+                            })
+                            .collect(),
+                    ),
+                },
             }
         }
         2 => Frame::Results {
@@ -510,5 +529,187 @@ fn prop_quantizer_encode_quality() {
             err < total_var,
             "seed {seed}: quantization error {err} >= data energy {total_var}"
         );
+    }
+}
+
+/// Property: under a similarity metric, the crude fast-group score plus
+/// the per-query tail slack (`Lut::tail_upper_bound`) upper-bounds the
+/// full quantized score for EVERY database row — the upper-bound mirror
+/// of eq. 11 that makes similarity pruning safe. Checked for inner
+/// product and cosine across random geometries and fast-group splits.
+#[test]
+fn prop_similarity_crude_plus_tail_upper_bounds_full() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed * 13 + 5);
+        let n = 150 + rng.below(250);
+        let d = 8 + rng.below(3) * 4;
+        let k = [4usize, 8][rng.below(2)];
+        let x = Matrix::from_fn(n, d, |_, j| {
+            rng.normal_f32() * if j % 4 == 0 { 3.0 } else { 0.4 }
+        });
+        let icq = Icq::train(
+            &x,
+            IcqOpts {
+                k,
+                m: 8,
+                fast_k: 1 + rng.below(k - 1),
+                kmeans_iters: 3,
+                prior_steps: 40,
+                seed,
+            },
+        );
+        let base = EncodedIndex::build_icq(&icq, &x, vec![0; n]);
+        for metric in [Metric::InnerProduct, Metric::Cosine] {
+            let index = base.clone().with_metric(metric);
+            let fast_k = index.fast_k;
+            for trial in 0..3 {
+                let q: Vec<f32> =
+                    (0..d).map(|_| rng.normal_f32()).collect();
+                let lut = Lut::build_metric(
+                    index.lut_ctx(),
+                    index.codebooks(),
+                    &q,
+                    metric,
+                );
+                let slack = lut.tail_upper_bound(fast_k, k);
+                for i in 0..n {
+                    let row = index.codes().row(i);
+                    let crude = lut.partial_sum(row, 0, fast_k);
+                    let full = lut.partial_sum(row, 0, k);
+                    assert!(
+                        crude + slack >= full - 1e-4,
+                        "seed {seed} {metric} trial {trial} row {i}: \
+                         crude {crude} + slack {slack} < full {full}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Property: cosine search with a raw query is bitwise the inner-
+/// product search with the unit-normalized query over the same
+/// pre-normalized index, whatever the query's magnitude (cosine is IP
+/// over unit vectors — the LUT build normalizes, nothing else differs).
+#[test]
+fn prop_cosine_topk_is_ip_on_normalized_bitwise() {
+    use icq::core::distance;
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed + 401);
+        let n = 200 + rng.below(200);
+        let d = 8 + rng.below(3) * 4;
+        let mut x = Matrix::from_fn(n, d, |_, j| {
+            rng.normal_f32() * if j % 4 == 0 { 3.0 } else { 0.4 }
+        });
+        distance::normalize_rows(&mut x);
+        let icq = Icq::train(
+            &x,
+            IcqOpts {
+                k: 4,
+                m: 8,
+                fast_k: 2,
+                kmeans_iters: 3,
+                prior_steps: 40,
+                seed,
+            },
+        );
+        let cos = EncodedIndex::build_icq(&icq, &x, vec![0; n])
+            .with_metric(Metric::Cosine);
+        let ip = cos.clone().with_metric(Metric::InnerProduct);
+        let ops = OpCounter::new();
+        let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+        for scale in [0.25f32, 1.0, 7.0] {
+            let q: Vec<f32> =
+                (0..d).map(|_| rng.normal_f32() * scale).collect();
+            let mut qn = q.clone();
+            distance::normalize(&mut qn);
+            let a = search_icq::search(&cos, &q, opts, &ops);
+            let b = search_icq::search(&ip, &qn, opts, &ops);
+            assert_eq!(a, b, "seed {seed} scale {scale}");
+        }
+    }
+}
+
+/// Property: filtered search equals post-filtering the unfiltered
+/// exhaustive ranking, bitwise, under every metric — plus the two
+/// edges: a nothing-allowed filter returns empty lists and an
+/// everything-allowed filter is bitwise the unfiltered scan.
+#[test]
+fn prop_filtered_is_post_filtered_unfiltered_bitwise() {
+    use icq::index::RowFilter;
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed + 733);
+        let n = 150 + rng.below(200);
+        let d = 12;
+        let x = Matrix::from_fn(n, d, |_, j| {
+            rng.normal_f32() * if j % 3 == 0 { 3.0 } else { 0.4 }
+        });
+        let icq = Icq::train(
+            &x,
+            IcqOpts {
+                k: 4,
+                m: 8,
+                fast_k: 2,
+                kmeans_iters: 3,
+                prior_steps: 40,
+                seed,
+            },
+        );
+        let base = EncodedIndex::build_icq(&icq, &x, vec![0; n]);
+        let queries = Matrix::from_fn(3, d, |i, j| {
+            x.get((i * 11) % n, j) + rng.normal_f32() * 0.1
+        });
+        let step = (2 + rng.below(4)) as u32;
+        let ids: Vec<u32> =
+            (0..n as u32).filter(|i| i % step != 0).collect();
+        let filter = RowFilter::from_indices(n, &ids);
+        for metric in [Metric::L2, Metric::InnerProduct, Metric::Cosine] {
+            let idx = base.clone().with_metric(metric);
+            let ops = OpCounter::new();
+            let mut crude = Vec::new();
+            let opts = IcqSearchOpts { k: 10, margin_scale: 1.0 };
+            // oracle: exhaustive unfiltered ranking (top_k = n refines
+            // every row exactly), post-filtered and truncated
+            let full = search_icq::search_scanfirst_batch_filtered(
+                &idx,
+                &queries,
+                IcqSearchOpts { k: n, margin_scale: 1.0 },
+                &ops,
+                &mut crude,
+                None,
+            );
+            let got = search_icq::search_scanfirst_batch_filtered(
+                &idx, &queries, opts, &ops, &mut crude,
+                Some(&filter),
+            );
+            for (qi, hits) in got.iter().enumerate() {
+                let want: Vec<Hit> = full[qi]
+                    .iter()
+                    .copied()
+                    .filter(|h| filter.allows(h.id as usize))
+                    .take(opts.k)
+                    .collect();
+                assert_eq!(hits, &want, "seed {seed} {metric} query {qi}");
+            }
+            let none = search_icq::search_scanfirst_batch_filtered(
+                &idx, &queries, opts, &ops, &mut crude,
+                Some(&RowFilter::none(n)),
+            );
+            assert!(
+                none.iter().all(Vec::is_empty),
+                "seed {seed} {metric}: nothing-allowed filter returned hits"
+            );
+            let open = search_icq::search_scanfirst_batch_filtered(
+                &idx, &queries, opts, &ops, &mut crude,
+                Some(&RowFilter::all(n)),
+            );
+            let unfiltered = search_icq::search_scanfirst_batch_filtered(
+                &idx, &queries, opts, &ops, &mut crude, None,
+            );
+            assert_eq!(
+                open, unfiltered,
+                "seed {seed} {metric}: all-pass filter != unfiltered"
+            );
+        }
     }
 }

@@ -24,7 +24,7 @@ use icq::coordinator::{
     BatchSearcher, LocalShardBackend, NativeSearcher, RemoteShardBackend,
     ShardBackend, ShardedSearcher,
 };
-use icq::core::{Matrix, Rng};
+use icq::core::{Matrix, Metric, Rng};
 use icq::data::Dataset;
 use icq::index::shard::{ShardPolicy, ShardedIndex};
 use icq::index::{EncodedIndex, OpCounter};
@@ -227,6 +227,7 @@ fn mid_stream_disconnect_fails_the_batch() {
                 shard_len: 100,
                 start: 0,
                 fast_k: 2,
+                metric: Metric::L2,
             }),
         )
         .unwrap();
@@ -282,6 +283,7 @@ fn evil_reply_server(truncate: bool) -> String {
                     shard_len: 10,
                     start: 0,
                     fast_k: 1,
+                    metric: Metric::L2,
                 }),
             )
             .unwrap();
@@ -330,6 +332,7 @@ fn corrupt_and_truncated_frames_are_structured_errors() {
                 queries: job_queries.clone(),
                 luts: Arc::new(Vec::new()),
                 top_k: 3,
+                filter: None,
             })
             .unwrap_err();
         let msg = format!("{err:#}");
@@ -417,7 +420,9 @@ fn server_rejects_bad_requests_but_connection_survives() {
             top_k: 3,
             fast_k,
             margin_scale: 1.0,
+            metric: Metric::L2,
             queries: Matrix::zeros(1, 5),
+            filter: None,
         },
     )
     .unwrap();
@@ -436,7 +441,9 @@ fn server_rejects_bad_requests_but_connection_survives() {
             top_k: 3,
             fast_k: fast_k + 1,
             margin_scale: 1.0,
+            metric: Metric::L2,
             queries: Matrix::zeros(1, 16),
+            filter: None,
         },
     )
     .unwrap();
@@ -455,7 +462,9 @@ fn server_rejects_bad_requests_but_connection_survives() {
             top_k: 4,
             fast_k,
             margin_scale: 1.0,
+            metric: Metric::L2,
             queries: queries(2, 16, 14),
+            filter: None,
         },
     )
     .unwrap();
@@ -498,6 +507,7 @@ fn poisoned_connection_redials_and_reports_refusal() {
                 shard_len: 10,
                 start: 0,
                 fast_k: 1,
+                metric: Metric::L2,
             }),
         )
         .unwrap();
@@ -515,6 +525,7 @@ fn poisoned_connection_redials_and_reports_refusal() {
         queries: Arc::new(Matrix::zeros(1, 4)),
         luts: Arc::new(Vec::new()),
         top_k: 2,
+        filter: None,
     };
     let first = remote.search(&job).unwrap_err();
     assert!(
@@ -547,6 +558,7 @@ fn remote_hits_arrive_in_global_id_space() {
             queries: Arc::new(queries(3, 16, 16)),
             luts: Arc::new(Vec::new()),
             top_k: 6,
+            filter: None,
         })
         .unwrap();
     assert_eq!(res.len(), 3);
@@ -559,5 +571,121 @@ fn remote_hits_arrive_in_global_id_space() {
                 h.id
             );
         }
+    }
+}
+
+/// Metric drift must never be silently served: a gateway configured
+/// for a different similarity regime than the shard announces is
+/// rejected at connect with a typed error, and a drifted per-query
+/// metric tag gets an error frame naming the drift (the connection
+/// survives for a corrected request, mirroring the fast_k checks).
+#[test]
+fn metric_drift_is_rejected_at_connect_and_per_query() {
+    let index = small_icq_index(130, 21);
+    let fast_k = index.fast_k;
+    let addr = spawn_server(index, 0);
+
+    // gateway thinks inner-product, shard serves l2: typed connect error
+    let cfg = SearchConfig {
+        metric: Metric::InnerProduct,
+        ..SearchConfig::default()
+    };
+    let err = RemoteShardBackend::connect_with_timeout(&addr, cfg, timeout())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("config drift") && msg.contains("metric"),
+        "connect did not surface the metric drift: {msg}"
+    );
+
+    // raw drifted query frame: error frame, and the connection survives
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = std::io::BufReader::new(stream);
+    match wire::read_frame(&mut r).unwrap() {
+        Frame::Hello(h) => assert_eq!(h.metric, Metric::L2),
+        f => panic!("expected a hello, got {f:?}"),
+    }
+    wire::write_frame(
+        &mut w,
+        &Frame::Query {
+            top_k: 3,
+            fast_k,
+            margin_scale: 1.0,
+            metric: Metric::Cosine,
+            queries: Matrix::zeros(1, 16),
+            filter: None,
+        },
+    )
+    .unwrap();
+    w.flush().unwrap();
+    match wire::read_frame(&mut r).unwrap() {
+        Frame::Error { message } => assert!(
+            message.contains("metric") && message.contains("config drift"),
+            "got: {message}"
+        ),
+        f => panic!("expected an error frame, got {f:?}"),
+    }
+    wire::write_frame(
+        &mut w,
+        &Frame::Query {
+            top_k: 3,
+            fast_k,
+            margin_scale: 1.0,
+            metric: Metric::L2,
+            queries: queries(1, 16, 22),
+            filter: None,
+        },
+    )
+    .unwrap();
+    w.flush().unwrap();
+    match wire::read_frame(&mut r).unwrap() {
+        Frame::Results { hits } => assert_eq!(hits[0].len(), 3),
+        f => panic!("expected results after the rejected frame, got {f:?}"),
+    }
+}
+
+/// A job-level *global* filter is cut to the shard's row range before
+/// it crosses the wire, and the remote filtered results are exactly the
+/// unfiltered remote ranking restricted to allowed rows.
+#[test]
+fn remote_filtered_search_matches_post_filtered_scan() {
+    use icq::index::RowFilter;
+    let index = small_icq_index(200, 23);
+    let shard = index.slice(64, 200);
+    let addr = spawn_server(shard, 64);
+    let mut remote = RemoteShardBackend::connect_with_timeout(
+        &addr,
+        SearchConfig::default(),
+        timeout(),
+    )
+    .unwrap();
+    let qs = Arc::new(queries(3, 16, 24));
+    let unfiltered = remote
+        .search(&icq::coordinator::ShardJob {
+            queries: qs.clone(),
+            luts: Arc::new(Vec::new()),
+            top_k: 200,
+            filter: None,
+        })
+        .unwrap();
+    let allowed: Vec<usize> = (0..200).filter(|i| i % 3 == 0).collect();
+    let filter = RowFilter::from_indices(200, &allowed);
+    let got = remote
+        .search(&icq::coordinator::ShardJob {
+            queries: qs,
+            luts: Arc::new(Vec::new()),
+            top_k: 6,
+            filter: Some(Arc::new(filter.clone())),
+        })
+        .unwrap();
+    for (qi, (g, u)) in got.iter().zip(&unfiltered).enumerate() {
+        let want: Vec<_> = u
+            .iter()
+            .filter(|h| filter.allows(h.id as usize))
+            .take(6)
+            .cloned()
+            .collect();
+        assert_eq!(g, &want, "query {qi}: remote filtered != post-filtered");
     }
 }
